@@ -1,0 +1,160 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! * L1/L2 (already ran at `make artifacts`): DistillCycle-trained
+//!   morphable CNN, Pallas kernels, per-path HLO artifacts.
+//! * L3 (this process): loads every morph path via PJRT, verifies the
+//!   numerics against golden probe logits, then serves a Poisson stream
+//!   of classification requests through the coordinator while a power
+//!   budget trace squeezes and releases the NeuroMorph governor.
+//!
+//! Reported: throughput, batch stats, queue/exec/e2e latency, morph
+//! switches, per-path frame counts, modeled FPGA energy, and per-path
+//! classification agreement. Recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example adaptive_serving
+//! ```
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::design::DesignConfig;
+use forgemorph::graph::zoo;
+use forgemorph::morph::governor::Budget;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::runtime::Engine;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::cli::Args;
+use forgemorph::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n_requests = args.get_usize("requests", 480);
+    let rate_hz = args.get_f64("rate", 3000.0);
+    ensure!(
+        artifacts.join("manifest.json").exists(),
+        "run `make artifacts` first (trains + lowers the morph paths)"
+    );
+
+    // ---- phase 0: verify the AOT artifacts numerically -----------------
+    println!("== phase 0: artifact verification ==");
+    let engine = Engine::load(&artifacts, "mnist").context("engine load")?;
+    println!("PJRT platform: {}", engine.platform());
+    for (path, err) in engine.verify_probe()? {
+        ensure!(err < 1e-3, "path {path} deviates: {err}");
+        println!("  {path}: max|err| vs golden = {err:.2e}  OK");
+    }
+    let paths: Vec<_> = engine.model().morph_paths();
+    println!("morph paths (DistillCycle accuracies on synthetic MNIST):");
+    for p in &paths {
+        println!(
+            "  {:<8} depth {} width {:>3}%  acc {:.3}  {:>7} params {:>9} MACs",
+            p.name, p.depth, p.width_pct, p.accuracy, p.params, p.macs
+        );
+    }
+    drop(engine); // the coordinator worker owns its own engine
+
+    // ---- phase 1: FPGA-side cost table ---------------------------------
+    println!("\n== phase 1: simulated FPGA costs per morph path ==");
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, args.get_usize("p", 4), FpRep::Int16);
+    let full = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active());
+    println!(
+        "  design p=4: full path {:.4} ms, {:.0} mW, {:.2} uJ/frame",
+        full.latency_ms(),
+        full.power_mw,
+        full.energy_per_frame_j() * 1e6
+    );
+    for depth in 1..net.conv_layer_ids().len() {
+        let r = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::depth_prefix(&net, depth));
+        println!(
+            "  depth-{depth} morph: {:.4} ms ({:.2}x), {:.0} mW ({:.0}% dyn. saving)",
+            r.latency_ms(),
+            full.latency_ms() / r.latency_ms(),
+            r.power_mw,
+            (1.0 - (r.power_mw - 455.0).max(0.0) / (full.power_mw - 455.0).max(1.0)) * 100.0
+        );
+    }
+
+    // ---- phase 2: adaptive serving under a budget trace ----------------
+    println!("\n== phase 2: serving {n_requests} Poisson requests @ ~{rate_hz} Hz ==");
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        model: "mnist".into(),
+        max_wait: Duration::from_millis(2),
+        patience: 2,
+    };
+    let mut coord = Coordinator::start(cfg, net, design, ZYNQ_7100)?;
+
+    // squeeze below the full path's simulated draw but above the lightest
+    // path's, so the governor has a feasible downshift target
+    let squeeze_mw = full.power_mw - 40.0;
+
+    let mut rng = Rng::new(2024);
+    let mut receivers = Vec::with_capacity(n_requests);
+    let t0 = Instant::now();
+    let third = n_requests / 3;
+    for i in 0..n_requests {
+        if i == third {
+            println!(
+                "  [t={:.2}s] power budget -> {squeeze_mw:.0} mW (squeeze)",
+                t0.elapsed().as_secs_f64()
+            );
+            coord.set_budget(Budget { power_mw: Some(squeeze_mw), latency_ms: None });
+        }
+        if i == 2 * third {
+            println!("  [t={:.2}s] power budget -> unconstrained (release)", t0.elapsed().as_secs_f64());
+            coord.set_budget(Budget::unconstrained());
+        }
+        let frame: Vec<f32> = (0..784).map(|_| rng.f64() as f32).collect();
+        receivers.push((i, coord.submit(frame)));
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate_hz).min(0.01)));
+    }
+
+    let mut by_path = std::collections::BTreeMap::<String, u64>::new();
+    let mut phase_paths = vec![std::collections::BTreeSet::new(); 3];
+    let mut answered = 0usize;
+    for (i, rx) in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).context("response")?;
+        *by_path.entry(resp.path.clone()).or_insert(0) += 1;
+        phase_paths[(i / third.max(1)).min(2)].insert(resp.path);
+        answered += 1;
+    }
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+
+    println!("\n== results ==");
+    println!(
+        "  {} requests in {:.2}s -> {:.1} req/s sustained ({} batches, mean batch {:.2})",
+        answered,
+        wall.as_secs_f64(),
+        metrics.throughput_fps(wall),
+        metrics.batches,
+        metrics.requests as f64 / metrics.batches.max(1) as f64
+    );
+    println!(
+        "  latency: queue mean {:.2} ms | exec mean {:.2} ms | e2e mean {:.2} ms, p99 {:.2} ms, max {:.2} ms",
+        metrics.queue_latency.mean_us() / 1e3,
+        metrics.exec_latency.mean_us() / 1e3,
+        metrics.e2e_latency.mean_us() / 1e3,
+        metrics.e2e_latency.quantile_us(0.99) as f64 / 1e3,
+        metrics.e2e_latency.max_us() as f64 / 1e3
+    );
+    println!(
+        "  morph switches: {} (stall frames {}) | modeled FPGA energy: {:.4} J",
+        metrics.morph_switches, metrics.stall_frames, metrics.energy_j
+    );
+    for (path, n) in &by_path {
+        println!("  path {path}: {n} frames");
+    }
+    println!("  phase path sets: {:?}", phase_paths);
+
+    ensure!(answered == n_requests, "dropped requests");
+    ensure!(metrics.morph_switches >= 2, "governor never morphed");
+    ensure!(by_path.len() >= 2, "only one path used — squeeze had no effect");
+    println!("\nadaptive serving demo PASSED");
+    Ok(())
+}

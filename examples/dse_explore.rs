@@ -1,0 +1,144 @@
+//! NeuroForge DSE deep-dive (the Fig. 2 experiment, interactively).
+//!
+//! Runs the MOGA on the CIFAR-10 benchmark under several constraint
+//! regimes, prints the Pareto fronts, convergence telemetry and an ASCII
+//! rendering of the latency-vs-DSP trade-off, and cross-checks three
+//! front points against the cycle simulator (the Fig. 10 validation).
+//!
+//! ```bash
+//! cargo run --release --example dse_explore [-- --pop 96 --gens 40]
+//! ```
+
+use anyhow::Result;
+use forgemorph::dse;
+use forgemorph::graph::zoo;
+use forgemorph::pe::ZYNQ_7100;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::cli::Args;
+
+fn ascii_scatter(points: &[(f64, usize)], front: &[(f64, usize)]) -> String {
+    const W: usize = 64;
+    const H: usize = 18;
+    let (mut lo_x, mut hi_x) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut lo_y, mut hi_y) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(lat, dsp) in points {
+        lo_x = lo_x.min(lat.log10());
+        hi_x = hi_x.max(lat.log10());
+        lo_y = lo_y.min((dsp.max(1) as f64).log10());
+        hi_y = hi_y.max((dsp.max(1) as f64).log10());
+    }
+    let mut grid = vec![vec![b' '; W]; H];
+    let place = |grid: &mut Vec<Vec<u8>>, lat: f64, dsp: usize, ch: u8| {
+        let x = ((lat.log10() - lo_x) / (hi_x - lo_x + 1e-12) * (W - 1) as f64) as usize;
+        let y = (((dsp.max(1) as f64).log10() - lo_y) / (hi_y - lo_y + 1e-12)
+            * (H - 1) as f64) as usize;
+        grid[H - 1 - y][x] = ch;
+    };
+    for &(lat, dsp) in points {
+        place(&mut grid, lat, dsp, b'.');
+    }
+    for &(lat, dsp) in front {
+        place(&mut grid, lat, dsp, b'#');
+    }
+    let mut s = String::new();
+    s.push_str("  DSP (log)\n");
+    for row in grid {
+        s.push_str("  |");
+        s.push_str(std::str::from_utf8(&row).unwrap());
+        s.push('\n');
+    }
+    s.push_str("  +");
+    s.push_str(&"-".repeat(W));
+    s.push_str("> latency (log)\n  ('.' evaluated, '#' Pareto front)\n");
+    s
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let net = zoo::by_name(args.get_or("model", "cifar10")).expect("zoo model");
+    let pop = args.get_usize("pop", 96);
+    let gens = args.get_usize("gens", 40);
+
+    println!("== NeuroForge DSE on {} ==", net.name);
+    for (label, constraints) in [
+        ("unconstrained", dse::Constraints::none()),
+        ("device budget (Zynq-7100)", dse::Constraints::device(&ZYNQ_7100)),
+        (
+            "tight: <=600 DSP, <=1 ms",
+            dse::Constraints {
+                latency_ms: Some(1.0),
+                dsp: Some(600),
+                lut: None,
+                bram: None,
+            },
+        ),
+    ] {
+        let cfg = dse::DseConfig {
+            population: pop,
+            generations: gens,
+            seed: 3,
+            constraints,
+            ..dse::DseConfig::default()
+        };
+        let t0 = std::time::Instant::now();
+        let res = dse::run(&net, &ZYNQ_7100, &cfg);
+        println!(
+            "\n-- {label}: {} evals in {:.2}s, front {} points --",
+            res.evaluations,
+            t0.elapsed().as_secs_f64(),
+            res.pareto.len()
+        );
+        for c in res.pareto.iter().take(12) {
+            println!(
+                "  p={:<22} {:>6} DSP {:>10.4} ms {:>9} LUT",
+                format!("{:?}", c.config.parallelism),
+                c.objectives.dsp,
+                c.objectives.latency_ms,
+                c.objectives.lut
+            );
+        }
+        if label == "device budget (Zynq-7100)" {
+            let front: Vec<(f64, usize)> = res
+                .pareto
+                .iter()
+                .map(|c| (c.objectives.latency_ms, c.objectives.dsp))
+                .collect();
+            println!("{}", ascii_scatter(&res.evaluated, &front));
+
+            // estimator-vs-simulator cross-check on three front points
+            println!("  est-vs-sim cross-check (Fig. 10 shape):");
+            let picks = [0, res.pareto.len() / 2, res.pareto.len() - 1];
+            for &i in &picks {
+                let c = &res.pareto[i];
+                let r = sim::simulate(&net, &c.config, &ZYNQ_7100, &GateMask::all_active());
+                println!(
+                    "    p={:<22} est {:>9.4} ms | sim {:>9.4} ms ({:+.1}%)",
+                    format!("{:?}", c.config.parallelism),
+                    c.objectives.latency_ms,
+                    r.latency_ms(),
+                    (r.latency_ms() / c.objectives.latency_ms - 1.0) * 100.0
+                );
+            }
+        }
+    }
+
+    // MOGA convergence: larger populations explore better (Sec. III-C)
+    println!("\n-- population ablation (best latency after {gens} gens) --");
+    for p in [16, 32, 64, 128] {
+        let cfg = dse::DseConfig {
+            population: p,
+            generations: gens,
+            seed: 11,
+            constraints: dse::Constraints::device(&ZYNQ_7100),
+            ..dse::DseConfig::default()
+        };
+        let res = dse::run(&net, &ZYNQ_7100, &cfg);
+        println!(
+            "  pop {:>4}: best latency {:.4} ms, front {} points",
+            p,
+            res.best_latency_per_gen.last().unwrap(),
+            res.pareto.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,247 @@
+"""AOT compile path: DistillCycle-train, then lower every morph path to HLO.
+
+This is the *only* place Python touches the pipeline — ``make artifacts``
+runs it once; the Rust coordinator then loads ``artifacts/*.hlo.txt`` via
+PJRT and never imports Python again (DESIGN.md §3).
+
+Per model we emit one HLO **text** program per (morph path, batch size):
+the morph path's gated weights are baked out of the artifact entirely —
+the software analogue of clock-gated PEs. Interchange is HLO text, not
+serialized protos: jax>=0.5 emits 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+``manifest.json`` records everything the Rust side needs: shapes, paths,
+artifact files, DistillCycle accuracies, per-path parameter/MAC counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO
+    printer elides big literals as ``constant({...})``, and the trained
+    weights baked into each morph path ARE big literals — without it the
+    Rust side would compile a model full of zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# Parameter cache (training is minutes; lowering is seconds — cache the
+# former keyed on the training configuration).
+# ---------------------------------------------------------------------------
+
+
+def _flatten_params(params: dict) -> dict:
+    flat = {}
+    for i, blk in enumerate(params["blocks"]):
+        flat[f"block{i}/w"] = np.asarray(blk["w"])
+        flat[f"block{i}/b"] = np.asarray(blk["b"])
+    for name, head in params["heads"].items():
+        flat[f"head/{name}/w"] = np.asarray(head["w"])
+        flat[f"head/{name}/b"] = np.asarray(head["b"])
+    return flat
+
+
+def _unflatten_params(flat: dict) -> dict:
+    params: dict = {"blocks": [], "heads": {}}
+    n_blocks = len({k for k in flat if k.startswith("block") and k.endswith("/w")})
+    for i in range(n_blocks):
+        params["blocks"].append(
+            {"w": jnp.asarray(flat[f"block{i}/w"]), "b": jnp.asarray(flat[f"block{i}/b"])}
+        )
+    heads = sorted({k.split("/")[1] for k in flat if k.startswith("head/")})
+    for name in heads:
+        params["heads"][name] = {
+            "w": jnp.asarray(flat[f"head/{name}/w"]),
+            "b": jnp.asarray(flat[f"head/{name}/b"]),
+        }
+    return params
+
+
+def _train_key(model_name: str, cfg: train_mod.TrainConfig, n_train: int) -> str:
+    blob = json.dumps([model_name, list(cfg), n_train], sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def train_or_load(
+    model_name: str,
+    out_dir: str,
+    cfg: train_mod.TrainConfig,
+    n_train: int,
+    verbose: bool = True,
+) -> tuple[dict, dict]:
+    """Return (params, accuracies), training only on cache miss."""
+    spec = model_mod.SPECS[model_name]
+    key = _train_key(model_name, cfg, n_train)
+    cache = os.path.join(out_dir, f"params_{model_name}_{key}.npz")
+    meta = os.path.join(out_dir, f"params_{model_name}_{key}.json")
+    if os.path.exists(cache) and os.path.exists(meta):
+        with open(meta) as f:
+            accs = json.load(f)["accuracies"]
+        params = _unflatten_params(dict(np.load(cache)))
+        if verbose:
+            print(f"[aot] {model_name}: loaded cached params ({key})")
+        return params, accs
+
+    if verbose:
+        print(f"[aot] {model_name}: DistillCycle training ({n_train} samples)...")
+    t0 = time.time()
+    dataset = data_mod.make_dataset(model_name, n_train=n_train, n_test=512, seed=cfg.seed)
+    result = train_mod.distillcycle_train(spec, dataset, cfg)
+    if verbose:
+        accs_s = {k: round(v, 4) for k, v in result.accuracies.items()}
+        print(f"[aot] {model_name}: trained in {time.time() - t0:.1f}s, acc {accs_s}")
+    np.savez(cache, **_flatten_params(result.params))
+    with open(meta, "w") as f:
+        json.dump({"accuracies": result.accuracies, "config": list(cfg)}, f)
+    return result.params, result.accuracies
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_path(
+    spec: model_mod.ModelSpec,
+    params: dict,
+    path: model_mod.MorphPath,
+    batch: int,
+    qbits: int | None = None,
+) -> str:
+    """Lower one morph path's Pallas inference fn to HLO text."""
+    fn = model_mod.predict_fn(spec, params, path, qbits=qbits)
+    h, w, c = spec.input_shape
+    x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    return to_hlo_text(lowered)
+
+
+def build_model(
+    model_name: str,
+    out_dir: str,
+    batches: list[int],
+    cfg: train_mod.TrainConfig,
+    n_train: int,
+    emit_quant_full: bool = True,
+    verbose: bool = True,
+) -> dict:
+    """Train (or load) one model and emit all its path artifacts."""
+    spec = model_mod.SPECS[model_name]
+    params, accs = train_or_load(model_name, out_dir, cfg, n_train, verbose)
+
+    paths_meta = []
+    for path in spec.paths:
+        artifacts = {}
+        for b in batches:
+            fname = f"{model_name}_{path.name}_b{b}.hlo.txt"
+            text = lower_path(spec, params, path, b)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            artifacts[str(b)] = fname
+            if verbose:
+                print(f"[aot]   wrote {fname} ({len(text)} chars)")
+        paths_meta.append(
+            {
+                "name": path.name,
+                "depth": path.depth,
+                "width_pct": path.width_pct,
+                "accuracy": accs[path.name],
+                "params": model_mod.count_params(spec, path),
+                "macs": model_mod.count_macs(spec, path),
+                "artifacts": artifacts,
+            }
+        )
+
+    quant_artifacts = {}
+    if emit_quant_full:
+        # One int8-datapath artifact of the full path: proves the quantized
+        # deploy path (NeuroForge-8) composes end-to-end through PJRT.
+        fname = f"{model_name}_{spec.full_path.name}_q8_b1.hlo.txt"
+        text = lower_path(spec, params, spec.full_path, 1, qbits=8)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        quant_artifacts["8"] = fname
+        if verbose:
+            print(f"[aot]   wrote {fname} ({len(text)} chars)")
+
+    # Reference logits on a fixed probe batch so the Rust integration test
+    # can verify numerics end-to-end without Python at runtime.
+    probe_ds = data_mod.make_dataset(model_name, n_train=8, n_test=8, seed=123)
+    probe_x = probe_ds.x_test[: max(batches)]
+    probe = {
+        "x": np.asarray(probe_x, np.float32).ravel().tolist(),
+        "shape": list(probe_x.shape),
+        "logits": {},
+    }
+    for path in spec.paths:
+        logits = model_mod.forward(
+            params, jnp.asarray(probe_x), spec, path, use_pallas=True
+        )
+        probe["logits"][path.name] = np.asarray(logits, np.float32).ravel().tolist()
+
+    return {
+        "input_shape": list(spec.input_shape),
+        "num_classes": spec.num_classes,
+        "filters": list(spec.filters),
+        "kernel": spec.kernel,
+        "batches": batches,
+        "paths": paths_meta,
+        "quant_full": quant_artifacts,
+        "probe": probe,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mnist", help="comma list: mnist,svhn,cifar10")
+    ap.add_argument("--batches", default="1,8", help="comma list of batch sizes")
+    ap.add_argument("--train-size", type=int, default=2048)
+    ap.add_argument("--epochs-per-stage", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    cfg = train_mod.TrainConfig(
+        epochs_per_stage=args.epochs_per_stage, seed=args.seed
+    )
+
+    manifest = {"version": 1, "generated_unix": int(time.time()), "models": {}}
+    for name in args.models.split(","):
+        manifest["models"][name] = build_model(
+            name, args.out_dir, batches, cfg, args.train_size, verbose=not args.quiet
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

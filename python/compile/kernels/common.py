@@ -1,0 +1,57 @@
+"""Shared helpers for the L1 Pallas kernels.
+
+Hardware-adaptation note (DESIGN.md §4): the paper's C_PE keeps K-1 input
+rows resident in BRAM line buffers so each pixel is read from DRAM exactly
+once. On TPU the analogous resource is VMEM: for the streaming CNN frames
+the paper targets (28x28..32x32, <=64ch) the *whole* padded frame fits in
+VMEM with room to spare, so each kernel stages the frame once and walks it
+with a grid over output-row tiles — the grid is the TPU realization of the
+paper's one-row-per-beat streaming schedule, and the im2col x matmul inner
+step maps the K^2 DSP-MAC array onto the MXU systolic array.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path (see
+/opt/xla-example/README.md). Real-TPU performance is estimated analytically
+in EXPERIMENTS.md §Perf from the VMEM footprint + MXU shapes chosen here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Fixed-point ranges for the intN datapath (FP_rep of Eq. 11).
+QINFO = {8: (-128.0, 127.0), 16: (-32768.0, 32767.0)}
+
+#: Default output-row tile height for the conv/pool grids. 8 rows x 32 px x
+#: 64 ch of f32 is 64 KiB — small against the ~16 MiB of VMEM, leaving the
+#: grid pipeline room to double-buffer the next tile.
+DEFAULT_TILE_H = 8
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int]:
+    """(lo, hi) zero padding for SAME semantics on one spatial dim."""
+    out = ceil_div(size, stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return pad // 2, pad - pad // 2
+
+
+def out_size(size: int, k: int, stride: int, padding: str) -> int:
+    if padding == "SAME":
+        return ceil_div(size, stride)
+    return (size - k) // stride + 1
+
+
+def fake_quant_static(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize with a precomputed scale (kernel epilogue).
+
+    Emulates the intN DSP datapath inside the MAC core: values are rounded
+    to the fixed-point grid and clipped to the representable range before
+    entering the multiplier array.
+    """
+    qmin, qmax = QINFO[bits]
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: streaming 2-D convolution (the paper's C_PE).
+
+The FPGA C_PE is a two-stage pipeline — a Line Buffer Controller that
+assembles K x K windows from streamed rows, and a MAC core with K^2
+multipliers + an adder tree (Eqs. 1-3). The TPU mapping (DESIGN.md §4):
+
+* line buffer  -> the padded frame staged once into VMEM;
+* row streaming -> a grid over output-row tiles (one program per tile);
+* K^2 DSP MACs + adder tree -> an im2col gather per tile feeding one
+  (tile_h * W_out, K^2 * C_in) x (K^2 * C_in, C_out) MXU matmul;
+* intN datapath -> optional fake-quant of activations/weights in-kernel.
+
+``interpret=True`` always: the CPU PJRT backend cannot run Mosaic
+custom-calls; numerics are validated against ``ref.conv2d`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _conv_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    s_ref,
+    o_ref,
+    *,
+    k: int,
+    stride: int,
+    tile_h: int,
+    w_out: int,
+    relu: bool,
+    qbits: int | None,
+):
+    """One grid step: produce ``tile_h`` output rows for one batch element."""
+    i = pl.program_id(1)
+    x = x_ref[0]  # [Hp, Wp, Cin] — the VMEM-resident "line buffer"
+    w = w_ref[...]  # [K, K, Cin, Cout]
+    if qbits is not None:
+        # intN MAC datapath: operands snap to the fixed-point grid before
+        # entering the multiplier array (DSP slices in the paper). The
+        # per-tensor scales ride in as a tiny SMEM-style operand.
+        x = common.fake_quant_static(x, s_ref[0], qbits)
+        w = common.fake_quant_static(w, s_ref[1], qbits)
+
+    in_tile_h = (tile_h - 1) * stride + k
+    slab = jax.lax.dynamic_slice(
+        x, (i * tile_h * stride, 0, 0), (in_tile_h, x.shape[1], x.shape[2])
+    )
+
+    # Window assembly (the Line Buffer Controller tap stage): K^2 strided
+    # views of the slab, stacked to an im2col tile.
+    row_span = (tile_h - 1) * stride + 1
+    col_span = (w_out - 1) * stride + 1
+    taps = []
+    for di in range(k):
+        for dj in range(k):
+            taps.append(slab[di : di + row_span : stride, dj : dj + col_span : stride, :])
+    patches = jnp.stack(taps, axis=2)  # [tile_h, w_out, K*K, Cin]
+    cin = x.shape[2]
+    lhs = patches.reshape(tile_h * w_out, k * k * cin)
+    rhs = w.reshape(k * k * cin, -1)
+
+    # The MXU matmul standing in for the K^2-DSP MAC array + adder tree.
+    acc = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    acc = acc.reshape(tile_h, w_out, -1) + b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)  # comparator ReLU stage (T_ReLU)
+    o_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "relu", "tile_h", "qbits"),
+)
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    tile_h: int = common.DEFAULT_TILE_H,
+    qbits: int | None = None,
+) -> jnp.ndarray:
+    """Pallas streaming convolution. x: [N,H,W,Cin], w: [K,K,Cin,Cout]."""
+    n, h, width, cin = x.shape
+    k = w.shape[0]
+    if w.shape[1] != k or w.shape[2] != cin:
+        raise ValueError(f"weight shape {w.shape} incompatible with input {x.shape}")
+    cout = w.shape[3]
+    if b is None:
+        b = jnp.zeros((cout,), jnp.float32)
+
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    if padding == "SAME":
+        ph = common.same_pads(h, k, stride)
+        pw = common.same_pads(width, k, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(f"unsupported padding {padding!r}")
+
+    h_out = common.out_size(h, k, stride, padding)
+    w_out = common.out_size(width, k, stride, padding)
+    tile_h = min(tile_h, h_out)
+    grid_h = common.ceil_div(h_out, tile_h)
+
+    # Over-pad rows so the last tile's dynamic_slice stays in bounds; the
+    # surplus output rows are cropped after the pallas_call.
+    need_rows = (grid_h * tile_h - 1) * stride + k
+    if need_rows > x.shape[1]:
+        x = jnp.pad(x, ((0, 0), (0, need_rows - x.shape[1]), (0, 0), (0, 0)))
+
+    # Per-tensor scales for the intN datapath (ignored when qbits is None).
+    if qbits is not None:
+        qmax = common.QINFO[qbits][1]
+        scales = jnp.stack(
+            [
+                jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax,
+                jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax,
+            ]
+        )
+    else:
+        scales = jnp.ones((2,), jnp.float32)
+
+    kernel = functools.partial(
+        _conv_kernel,
+        k=k,
+        stride=stride,
+        tile_h=tile_h,
+        w_out=w_out,
+        relu=relu,
+        qbits=qbits,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, grid_h),
+        in_specs=[
+            pl.BlockSpec(
+                (1, x.shape[1], x.shape[2], cin), lambda bn, bi: (bn, 0, 0, 0)
+            ),
+            pl.BlockSpec((k, k, cin, cout), lambda bn, bi: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda bn, bi: (0,)),
+            pl.BlockSpec((2,), lambda bn, bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, tile_h, w_out, cout), lambda bn, bi: (bn, bi, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, grid_h * tile_h, w_out, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b, scales)
+    return out[:, :h_out]

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: channel-parallel fully connected layer (FC_PE).
+
+The paper's FC_PE streams inputs through one MAC per output head (Eq. 5)
+and breaks the serialization bottleneck by processing input channels with
+parallel FC-Accumulation blocks (Eq. 6). On TPU the per-head MAC array
+becomes a matmul tile on the MXU; the parallelism coefficient
+``P = Ch^D / FC_PE`` becomes the output-column grid: each program computes
+one ``tile_o``-wide slice of heads, so ``grid = ceil(O / tile_o)`` plays
+the role of the FC_PE allocation count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, *, relu: bool, qbits: int | None):
+    x = x_ref[...]  # [N, F]
+    w = w_ref[...]  # [F, tile_o]
+    if qbits is not None:
+        x = common.fake_quant_static(x, s_ref[0], qbits)
+        w = common.fake_quant_static(w, s_ref[1], qbits)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "tile_o", "qbits"))
+def fc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    relu: bool = False,
+    tile_o: int = 128,
+    qbits: int | None = None,
+) -> jnp.ndarray:
+    """Pallas fully connected layer. x: [N,F], w: [F,O] -> [N,O]."""
+    n, f = x.shape
+    if w.shape[0] != f:
+        raise ValueError(f"weight shape {w.shape} incompatible with input {x.shape}")
+    o = w.shape[1]
+    if b is None:
+        b = jnp.zeros((o,), jnp.float32)
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+
+    tile_o = min(tile_o, o)
+    grid_o = common.ceil_div(o, tile_o)
+    o_pad = grid_o * tile_o
+    if o_pad != o:
+        w = jnp.pad(w, ((0, 0), (0, o_pad - o)))
+        b = jnp.pad(b, (0, o_pad - o))
+
+    if qbits is not None:
+        qmax = common.QINFO[qbits][1]
+        scales = jnp.stack(
+            [
+                jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax,
+                jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax,
+            ]
+        )
+    else:
+        scales = jnp.ones((2,), jnp.float32)
+
+    kernel = functools.partial(_fc_kernel, relu=relu, qbits=qbits)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid_o,),
+        in_specs=[
+            pl.BlockSpec((n, f), lambda bo: (0, 0)),
+            pl.BlockSpec((f, tile_o), lambda bo: (0, bo)),
+            pl.BlockSpec((tile_o,), lambda bo: (bo,)),
+            pl.BlockSpec((2,), lambda bo: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, tile_o), lambda bo: (0, bo)),
+        out_shape=jax.ShapeDtypeStruct((n, o_pad), jnp.float32),
+        interpret=True,
+    )(x, w, b, scales)
+    return out[:, :o]

@@ -1,0 +1,126 @@
+"""L1 Pallas kernels: max / average pooling (the paper's PU_PE).
+
+The PU_PE reuses the C_PE line-buffer controller and swaps the MAC core
+for a K^2-comparator tree (max) or fixed 1/K^2 coefficients (avg),
+Sec. III-A.2. The TPU mapping mirrors ``conv2d.py``: the frame is staged
+in VMEM, a grid walks output-row tiles, and the comparator tree becomes a
+max/mean reduction over the K^2 tap axis. Pooling uses VALID padding and
+``stride == k`` by default, matching the streaming pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _pool_kernel(
+    x_ref,
+    o_ref,
+    *,
+    k: int,
+    stride: int,
+    tile_h: int,
+    w_out: int,
+    mode: str,
+):
+    i = pl.program_id(1)
+    x = x_ref[0]  # [Hp, Wp, C]
+    in_tile_h = (tile_h - 1) * stride + k
+    slab = jax.lax.dynamic_slice(
+        x, (i * tile_h * stride, 0, 0), (in_tile_h, x.shape[1], x.shape[2])
+    )
+    row_span = (tile_h - 1) * stride + 1
+    col_span = (w_out - 1) * stride + 1
+    taps = []
+    for di in range(k):
+        for dj in range(k):
+            taps.append(slab[di : di + row_span : stride, dj : dj + col_span : stride, :])
+    patches = jnp.stack(taps, axis=2)  # [tile_h, w_out, K*K, C]
+    if mode == "max":
+        o_ref[0] = jnp.max(patches, axis=2)
+    else:
+        o_ref[0] = jnp.mean(patches, axis=2)
+
+
+def _pool(
+    x: jnp.ndarray, k: int, stride: int, tile_h: int, mode: str
+) -> jnp.ndarray:
+    n, h, width, c = x.shape
+    if h < k or width < k:
+        raise ValueError(f"frame {h}x{width} smaller than pool window {k}")
+    h_out = (h - k) // stride + 1
+    w_out = (width - k) // stride + 1
+    tile_h = min(tile_h, h_out)
+    grid_h = common.ceil_div(h_out, tile_h)
+    x = x.astype(jnp.float32)
+
+    need_rows = (grid_h * tile_h - 1) * stride + k
+    if need_rows > h:
+        # min-identity padding keeps max-pool semantics on the crop region
+        pad_val = -jnp.inf if mode == "max" else 0.0
+        x = jnp.pad(
+            x,
+            ((0, 0), (0, need_rows - h), (0, 0), (0, 0)),
+            constant_values=pad_val,
+        )
+
+    kernel = functools.partial(
+        _pool_kernel, k=k, stride=stride, tile_h=tile_h, w_out=w_out, mode=mode
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, grid_h),
+        in_specs=[
+            pl.BlockSpec((1, x.shape[1], x.shape[2], c), lambda bn, bi: (bn, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_h, w_out, c), lambda bn, bi: (bn, bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, grid_h * tile_h, w_out, c), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:, :h_out]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "tile_h"))
+def maxpool2d(
+    x: jnp.ndarray,
+    k: int = 2,
+    stride: int | None = None,
+    tile_h: int = common.DEFAULT_TILE_H,
+) -> jnp.ndarray:
+    """Pallas max pooling, VALID padding. x: [N,H,W,C]."""
+    return _pool(x, k, stride or k, tile_h, "max")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "tile_h"))
+def avgpool2d(
+    x: jnp.ndarray,
+    k: int = 2,
+    stride: int | None = None,
+    tile_h: int = common.DEFAULT_TILE_H,
+) -> jnp.ndarray:
+    """Pallas average pooling, VALID padding. x: [N,H,W,C]."""
+    return _pool(x, k, stride or k, tile_h, "avg")
+
+
+@jax.jit
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """[N,H,W,C] -> [N,C]; the head input reduction, one program per batch."""
+
+    def kernel(x_ref, o_ref):
+        o_ref[0] = jnp.mean(x_ref[0], axis=(0, 1))
+
+    n, h, w, c = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda bn: (bn, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda bn: (bn, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

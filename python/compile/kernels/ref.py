@@ -1,0 +1,149 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+These are the ground-truth semantics the Pallas kernels in this package are
+tested against (pytest + hypothesis in ``python/tests``). They mirror the
+FPGA Processing Elements of the paper:
+
+* ``conv2d``      — the ``C_PE`` (line buffer + K^2-MAC core, Sec. III-A.1)
+* ``maxpool2d`` / ``avgpool2d`` — the ``PU_PE`` (Sec. III-A.2)
+* ``fc``          — the ``FC_PE`` (Eq. 5/6)
+* ``quantize`` / ``dequantize`` — the int8/int16 fixed-point datapath
+  (``FP_rep`` of Eq. 11)
+
+Layout convention: NHWC for activations, HWIO for conv weights — the same
+layout the streaming pipeline uses (one pixel per clock, channel-parallel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_same(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """SAME-pad the spatial dims of an NHWC tensor for kernel size ``k``.
+
+    Matches the hardware padding stage (T_pad in Eq. 4): zeros are injected
+    around the frame before the line buffer assembles windows.
+    """
+    h, w = x.shape[1], x.shape[2]
+    out_h = -(-h // stride)
+    out_w = -(-w // stride)
+    pad_h = max((out_h - 1) * stride + k - h, 0)
+    pad_w = max((out_w - 1) * stride + k - w, 0)
+    return jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad_h // 2, pad_h - pad_h // 2),
+            (pad_w // 2, pad_w - pad_w // 2),
+            (0, 0),
+        ),
+    )
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Reference 2-D convolution. x: [N,H,W,Cin], w: [K,K,Cin,Cout]."""
+    if padding not in ("SAME", "VALID"):
+        raise ValueError(f"unsupported padding {padding!r}")
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def _pool_patches(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """Extract [N, Ho, Wo, k*k, C] pooling windows (VALID padding)."""
+    n, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    rows = []
+    for di in range(k):
+        for dj in range(k):
+            rows.append(
+                jax.lax.slice(
+                    x,
+                    (0, di, dj, 0),
+                    (n, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.stack(rows, axis=3)
+
+
+def maxpool2d(x: jnp.ndarray, k: int = 2, stride: int | None = None) -> jnp.ndarray:
+    """Reference max pooling (VALID), the comparator-tree PU_PE."""
+    stride = stride or k
+    return jnp.max(_pool_patches(x, k, stride), axis=3)
+
+
+def avgpool2d(x: jnp.ndarray, k: int = 2, stride: int | None = None) -> jnp.ndarray:
+    """Reference average pooling (VALID): C_PE with fixed 1/k^2 coefficients."""
+    stride = stride or k
+    return jnp.mean(_pool_patches(x, k, stride).astype(jnp.float32), axis=3)
+
+
+def fc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Reference fully connected layer. x: [N,F], w: [F,O] (Eq. 5)."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """[N,H,W,C] -> [N,C] global average pooling (head input)."""
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point datapath (FP_rep in Eq. 11): symmetric affine quantization.
+# ---------------------------------------------------------------------------
+
+_QINFO = {8: (-128, 127), 16: (-32768, 32767)}
+
+
+def quant_scale(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Per-tensor symmetric scale so that max|x| maps to the int max."""
+    _, qmax = _QINFO[bits]
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8)
+    return amax / qmax
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Round-to-nearest fixed-point quantization, clipped to the int range."""
+    qmin, qmax = _QINFO[bits]
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), qmin, qmax)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Quantize-dequantize round trip used to emulate the intN datapath."""
+    s = quant_scale(x, bits)
+    return dequantize(quantize(x, s, bits), s)

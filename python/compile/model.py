@@ -1,0 +1,219 @@
+"""L2 JAX model: the morphable CNN NeuroMorph deploys.
+
+The paper's modular networks are ``a-2a-3a(-4a...)`` convolutional
+pipelines (Sec. V): each **Layer-Block** is conv3x3(SAME)+ReLU+maxpool2,
+and every morph path — a (depth, width) pair — owns a dedicated output
+head (GAP + FC), mirroring Fig. 9.
+
+* **Depth-wise morphing** truncates the block chain after ``depth`` blocks
+  (clock-gating the rest).
+* **Width-wise morphing** keeps the depth but activates only the first
+  ``width%`` filters of every conv (and the matching input-channel slice
+  of the next conv) — the software twin of gating half the PE array.
+
+``forward`` is pure and path-static, so ``aot.py`` lowers *one HLO program
+per morph path*: the gated weights are physically absent from the
+artifact, exactly like gated PEs never toggling. Training (DistillCycle)
+uses the pure-jnp reference ops; AOT inference uses the Pallas kernels —
+both are pytest-proven equivalent.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d as conv_pallas
+from .kernels import fc as fc_pallas
+from .kernels import pool as pool_pallas
+from .kernels import ref
+
+
+class MorphPath(NamedTuple):
+    """One morphable execution path: first ``depth`` blocks at ``width_pct``."""
+
+    depth: int
+    width_pct: int  # 100 or 50
+
+    @property
+    def name(self) -> str:
+        return f"d{self.depth}_w{self.width_pct}"
+
+
+class ModelSpec(NamedTuple):
+    """Architecture descriptor (the a-2a-3a... modular pipeline)."""
+
+    name: str
+    input_shape: tuple[int, int, int]  # H, W, C
+    num_classes: int
+    filters: tuple[int, ...]  # per Layer-Block conv filter counts
+    kernel: int = 3
+
+    @property
+    def paths(self) -> list[MorphPath]:
+        """All morph paths: every depth at full width + full-depth half width."""
+        out = [MorphPath(d, 100) for d in range(1, len(self.filters) + 1)]
+        out.append(MorphPath(len(self.filters), 50))
+        return out
+
+    @property
+    def full_path(self) -> MorphPath:
+        return MorphPath(len(self.filters), 100)
+
+
+#: The paper's Table II small benchmarks (synthetic-data stand-ins).
+SPECS = {
+    "mnist": ModelSpec("mnist", (28, 28, 1), 10, (8, 16, 32)),
+    "svhn": ModelSpec("svhn", (32, 32, 3), 10, (8, 16, 32, 64)),
+    "cifar10": ModelSpec("cifar10", (32, 32, 3), 10, (8, 16, 32, 64, 64)),
+}
+
+
+def feature_shape(spec: ModelSpec, depth: int) -> tuple[int, int]:
+    """(H, W) of the feature map after ``depth`` Layer-Blocks."""
+    h, w = spec.input_shape[:2]
+    for _ in range(depth):
+        if min(h, w) >= 2:
+            h, w = h // 2, w // 2
+    return h, w
+
+
+def _head_dim(spec: ModelSpec, path: MorphPath) -> int:
+    """FC head input size: the flattened streamed feature map (Eq. 5) —
+    the paper's FC_PE consumes the conv output element-wise, so the head
+    sees H*W*C features, not a pooled vector."""
+    h, w = feature_shape(spec, path.depth)
+    return h * w * _width(spec.filters[path.depth - 1], path.width_pct)
+
+
+def _width(f: int, pct: int) -> int:
+    return max(1, (f * pct) // 100)
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict:
+    """He-init conv blocks + one FC head per morph path."""
+    rng = np.random.default_rng(seed)
+    k = spec.kernel
+    params: dict = {"blocks": [], "heads": {}}
+    cin = spec.input_shape[2]
+    for f in spec.filters:
+        fan_in = k * k * cin
+        params["blocks"].append(
+            {
+                "w": jnp.asarray(
+                    rng.standard_normal((k, k, cin, f)) * np.sqrt(2.0 / fan_in),
+                    jnp.float32,
+                ),
+                "b": jnp.zeros((f,), jnp.float32),
+            }
+        )
+        cin = f
+    for path in spec.paths:
+        dim = _head_dim(spec, path)
+        params["heads"][path.name] = {
+            "w": jnp.asarray(
+                rng.standard_normal((dim, spec.num_classes)) * np.sqrt(1.0 / dim),
+                jnp.float32,
+            ),
+            "b": jnp.zeros((spec.num_classes,), jnp.float32),
+        }
+    return params
+
+
+def slice_block(block: dict, cin_w: int, cout_w: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Width-morph a conv block: keep the first cin_w/cout_w channels."""
+    return block["w"][:, :, :cin_w, :cout_w], block["b"][:cout_w]
+
+
+def forward(
+    params: dict,
+    x: jnp.ndarray,
+    spec: ModelSpec,
+    path: MorphPath,
+    use_pallas: bool = False,
+    qbits: int | None = None,
+) -> jnp.ndarray:
+    """Logits for one morph path. x: [N,H,W,C] -> [N,classes].
+
+    ``use_pallas`` selects the L1 kernels (AOT/deploy path); the default
+    pure-jnp ops are the training path. ``qbits`` emulates the intN
+    datapath on the deploy path (NeuroForge-8 / NeuroForge-16 variants).
+    """
+    if path.name not in params["heads"]:
+        raise KeyError(f"path {path.name} has no trained head")
+    conv = conv_pallas.conv2d if use_pallas else ref.conv2d
+    dense = fc_pallas.fc if use_pallas else ref.fc
+    mpool = pool_pallas.maxpool2d if use_pallas else ref.maxpool2d
+
+    cin_w = x.shape[3]
+    h = x
+    for i in range(path.depth):
+        cout_w = _width(spec.filters[i], path.width_pct)
+        w, b = slice_block(params["blocks"][i], cin_w, cout_w)
+        if use_pallas:
+            h = conv(h, w, b, stride=1, padding="SAME", relu=True, qbits=qbits)
+        else:
+            h = conv(h, w, b, stride=1, padding="SAME", relu=True)
+        if min(h.shape[1], h.shape[2]) >= 2:
+            h = mpool(h, 2)
+        cin_w = cout_w
+
+    feats = h.reshape(h.shape[0], -1)  # stream the feature map into FC_PE
+    head = params["heads"][path.name]
+    return dense(feats, head["w"], head["b"])
+
+
+def predict_fn(spec: ModelSpec, params: dict, path: MorphPath, qbits: int | None = None):
+    """Closure over trained params for AOT lowering (Pallas deploy path)."""
+
+    def fn(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+        return (forward(params, x, spec, path, use_pallas=True, qbits=qbits),)
+
+    return fn
+
+
+def accuracy(
+    params: dict,
+    spec: ModelSpec,
+    path: MorphPath,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    batch: int = 256,
+) -> float:
+    """Top-1 accuracy of one morph path (training-path ops)."""
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(params, x[i : i + batch], spec, path)
+        hits += int(jnp.sum(jnp.argmax(logits, axis=1) == y[i : i + batch]))
+    return hits / x.shape[0]
+
+
+def count_params(spec: ModelSpec, path: MorphPath) -> int:
+    """Parameter count of one path (active weights only)."""
+    k = spec.kernel
+    cin = spec.input_shape[2]
+    total = 0
+    for i in range(path.depth):
+        cout = _width(spec.filters[i], path.width_pct)
+        total += k * k * cin * cout + cout
+        cin = cout
+    total += _head_dim(spec, path) * spec.num_classes + spec.num_classes
+    return total
+
+
+def count_macs(spec: ModelSpec, path: MorphPath) -> int:
+    """MAC count of one path on its input resolution (conv + head)."""
+    k = spec.kernel
+    h, w, cin = spec.input_shape
+    total = 0
+    for i in range(path.depth):
+        cout = _width(spec.filters[i], path.width_pct)
+        total += h * w * k * k * cin * cout  # SAME conv
+        if min(h, w) >= 2:
+            h, w = h // 2, w // 2
+        cin = cout
+    total += h * w * cin * spec.num_classes
+    return total

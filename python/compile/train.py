@@ -1,0 +1,275 @@
+"""DistillCycle training (Sec. IV-B, Algorithm 2).
+
+Jointly optimizes the full network and every morphable subnetwork so that
+each (depth, width) path is an accurate standalone execution path:
+
+1. **Grow progressively** — stage ``i`` appends Layer-Block ``B_i``
+   (Eq. 19) and trains the depth-``i`` network as the current *teacher*
+   with plain cross-entropy (Eq. 16).
+2. **Train in cycles** — within each stage, alternate teacher epochs with
+   *student* phases over the morph paths revealed so far.
+3. **Knowledge distillation** — students minimize
+   ``λ·CE + (1−λ)·τ²·KL(σ(t/τ) ‖ σ(s/τ))`` (Eqs. 17–18).
+4. **LR decay for stability** — blocks ``j < i`` get exponentially decayed
+   learning rates ``α·γ^(i−j)`` (Eq. 20) against catastrophic forgetting.
+
+Manual SGD with momentum (no optax in this environment). Training uses
+the pure-jnp reference ops — Python is build-time only; the trained
+parameters are frozen into per-path Pallas HLO artifacts by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .model import ModelSpec, MorphPath
+
+
+class TrainConfig(NamedTuple):
+    """DistillCycle hyperparameters (Algorithm 2's ``params`` input)."""
+
+    lr: float = 0.02  # α0
+    momentum: float = 0.9
+    lam: float = 0.5  # λ — CE vs KD mix (Eq. 18)
+    tau: float = 3.0  # τ — distillation temperature (Eq. 17)
+    gamma: float = 0.5  # γ — per-block LR decay (Eq. 20)
+    epochs_per_stage: int = 3
+    batch: int = 64
+    lr_stage_decay: float = 0.6  # α shrink between growth stages (the
+    # α ← α/10 of Alg. 2, softened for short synthetic runs); heads are
+    # exempt — fresh capacity always trains at the base rate
+    seed: int = 0
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over the batch (Eq. 16)."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def kd_loss(student_logits: jnp.ndarray, teacher_logits: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """τ²-scaled KL between softened teacher/student outputs (Eq. 17)."""
+    t = jax.nn.softmax(teacher_logits / tau)
+    s = jax.nn.log_softmax(student_logits / tau)
+    kl = jnp.sum(t * (jnp.log(jnp.clip(t, 1e-9)) - s), axis=1)
+    return tau * tau * jnp.mean(kl)
+
+
+def _tree_sgd(params, grads, vel, lr_tree, momentum):
+    """One SGD+momentum step with a per-leaf learning-rate tree."""
+    new_vel = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+    new_params = jax.tree.map(lambda p, v, lr: p - lr * v, params, new_vel, lr_tree)
+    return new_params, new_vel
+
+
+def _lr_tree(
+    params: dict,
+    spec: ModelSpec,
+    stage: int,
+    base_lr: float,
+    gamma: float,
+    head_lr: float | None = None,
+):
+    """Eq. 20: block j < stage trains at base_lr * gamma^(stage-1-j).
+
+    Heads are fresh capacity (never "earlier layers"), so they train at
+    ``head_lr`` (default: the undecayed base rate)."""
+    head_lr = base_lr if head_lr is None else head_lr
+
+    def block_lr(j: int) -> float:
+        return base_lr * (gamma ** max(0, stage - 1 - j))
+
+    tree = {
+        "blocks": [
+            jax.tree.map(lambda _: block_lr(j), blk)
+            for j, blk in enumerate(params["blocks"])
+        ],
+        "heads": {
+            name: jax.tree.map(lambda _: head_lr, head)
+            for name, head in params["heads"].items()
+        },
+    }
+    return tree
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "path", "tau", "lam", "momentum", "distill"))
+def _train_step(
+    params,
+    vel,
+    lr_tree,
+    x,
+    y,
+    teacher_logits,
+    spec: ModelSpec,
+    path: MorphPath,
+    tau: float,
+    lam: float,
+    momentum: float,
+    distill: bool,
+):
+    """One SGD step on one morph path; optionally distilling (Eq. 18)."""
+
+    def loss_fn(p):
+        logits = model_mod.forward(p, x, spec, path)
+        ce = cross_entropy(logits, y)
+        if distill:
+            return lam * ce + (1.0 - lam) * kd_loss(logits, teacher_logits, tau)
+        return ce
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    # global-norm clipping: keeps the alternating teacher/student updates
+    # stable across growth stages (momentum + fresh heads can spike early)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-12
+    )
+    clip = jnp.minimum(1.0, 5.0 / gnorm)
+    grads = jax.tree.map(lambda g: g * clip, grads)
+    params, vel = _tree_sgd(params, grads, vel, lr_tree, momentum)
+    return params, vel, loss
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "path"))
+def _infer(params, x, spec: ModelSpec, path: MorphPath):
+    return model_mod.forward(params, x, spec, path)
+
+
+class TrainResult(NamedTuple):
+    params: dict
+    accuracies: dict  # path name -> float
+    loss_history: list  # (stage, phase, path, epoch, mean loss)
+
+
+def _epoch_batches(rng: np.random.Generator, n: int, batch: int):
+    order = rng.permutation(n)
+    for i in range(0, n - batch + 1, batch):
+        yield order[i : i + batch]
+
+
+def distillcycle_train(
+    spec: ModelSpec,
+    dataset: data_mod.Dataset,
+    cfg: TrainConfig = TrainConfig(),
+    progress: bool = False,
+) -> TrainResult:
+    """Algorithm 2: progressive growth with teacher/student cycles."""
+    rng = np.random.default_rng(cfg.seed)
+    params = model_mod.init_params(spec, cfg.seed)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    x_tr = jnp.asarray(dataset.x_train)
+    y_tr = jnp.asarray(dataset.y_train)
+    history: list = []
+
+    n_stages = len(spec.filters)
+    alpha = cfg.lr
+    for stage in range(1, n_stages + 1):
+        teacher_path = MorphPath(stage, 100)
+        # students: the previous depth (early-exit branch) and, at the final
+        # stage, the half-width variant — the morphing_schedule of Alg. 2.
+        students = []
+        if stage > 1:
+            students.append(MorphPath(stage - 1, 100))
+        if stage == n_stages:
+            students.append(MorphPath(stage, 50))
+
+        lr_teacher = _lr_tree(params, spec, stage, alpha, cfg.gamma, head_lr=cfg.lr)
+        for epoch in range(cfg.epochs_per_stage):
+            # Phase 1 — teacher: grow and train N_full^(i) with CE.
+            # Velocity is reset at every phase switch: the teacher and the
+            # students optimize different losses over shared blocks, and
+            # carrying momentum across the switch destabilizes the cycle.
+            vel = jax.tree.map(jnp.zeros_like, params)
+            losses = []
+            for idx in _epoch_batches(rng, x_tr.shape[0], cfg.batch):
+                bx, by = x_tr[idx], y_tr[idx]
+                params, vel, loss = _train_step(
+                    params, vel, lr_teacher, bx, by,
+                    jnp.zeros((bx.shape[0], spec.num_classes), jnp.float32),
+                    spec, teacher_path, cfg.tau, cfg.lam, cfg.momentum, False,
+                )
+                losses.append(float(loss))
+            history.append((stage, "teacher", teacher_path.name, epoch, float(np.mean(losses))))
+            if progress:
+                print(f"[stage {stage}] teacher {teacher_path.name} "
+                      f"epoch {epoch}: loss {np.mean(losses):.4f}")
+
+            # Phase 2 — students: CE + KD against the fresh teacher
+            for spath in students:
+                lr_student = _lr_tree(
+                    params, spec, stage, alpha, cfg.gamma, head_lr=cfg.lr
+                )
+                vel = jax.tree.map(jnp.zeros_like, params)
+                losses = []
+                for idx in _epoch_batches(rng, x_tr.shape[0], cfg.batch):
+                    bx, by = x_tr[idx], y_tr[idx]
+                    t_logits = _infer(params, bx, spec, teacher_path)
+                    params, vel, loss = _train_step(
+                        params, vel, lr_student, bx, by, t_logits,
+                        spec, spath, cfg.tau, cfg.lam, cfg.momentum, True,
+                    )
+                    losses.append(float(loss))
+                history.append((stage, "student", spath.name, epoch, float(np.mean(losses))))
+                if progress:
+                    print(f"[stage {stage}] student {spath.name} "
+                          f"epoch {epoch}: loss {np.mean(losses):.4f}")
+        alpha *= cfg.lr_stage_decay  # α ← α/10 in Alg. 2; softened for short runs
+
+    # Final polish: the last-added block+head saw the fewest updates, so the
+    # full path gets one extra teacher-only cycle (keeps full >= subnets,
+    # the ordering the paper reports).
+    full = MorphPath(n_stages, 100)
+    lr_full = _lr_tree(params, spec, n_stages, alpha, cfg.gamma, head_lr=cfg.lr)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    for epoch in range(cfg.epochs_per_stage):
+        losses = []
+        for idx in _epoch_batches(rng, x_tr.shape[0], cfg.batch):
+            bx, by = x_tr[idx], y_tr[idx]
+            params, vel, loss = _train_step(
+                params, vel, lr_full, bx, by,
+                jnp.zeros((bx.shape[0], spec.num_classes), jnp.float32),
+                spec, full, cfg.tau, cfg.lam, cfg.momentum, False,
+            )
+            losses.append(float(loss))
+        history.append((n_stages + 1, "polish", full.name, epoch, float(np.mean(losses))))
+        if progress:
+            print(f"[polish] {full.name} epoch {epoch}: loss {np.mean(losses):.4f}")
+
+    accs = {
+        p.name: model_mod.accuracy(params, spec, p, jnp.asarray(dataset.x_test), dataset.y_test)
+        for p in spec.paths
+    }
+    return TrainResult(params, accs, history)
+
+
+def label_only_train(
+    spec: ModelSpec,
+    dataset: data_mod.Dataset,
+    path: MorphPath,
+    cfg: TrainConfig = TrainConfig(),
+) -> float:
+    """Ablation baseline: train one subnet with labels only (no KD, no
+    cycles). Used by tests/benches to show DistillCycle's KD advantage."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    params = model_mod.init_params(spec, cfg.seed + 1)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    x_tr = jnp.asarray(dataset.x_train)
+    y_tr = jnp.asarray(dataset.y_train)
+    lr = _lr_tree(params, spec, 1, cfg.lr, cfg.gamma)
+    total_epochs = cfg.epochs_per_stage * len(spec.filters)
+    for _ in range(total_epochs):
+        for idx in _epoch_batches(rng, x_tr.shape[0], cfg.batch):
+            bx, by = x_tr[idx], y_tr[idx]
+            params, vel, _ = _train_step(
+                params, vel, lr, bx, by,
+                jnp.zeros((bx.shape[0], spec.num_classes), jnp.float32),
+                spec, path, cfg.tau, cfg.lam, cfg.momentum, False,
+            )
+    return model_mod.accuracy(
+        params, spec, path, jnp.asarray(dataset.x_test), dataset.y_test
+    )

@@ -1,0 +1,96 @@
+"""DistillCycle training dynamics (Algorithm 2).
+
+Small budgets keep this suite in tens of seconds; the assertions are about
+*dynamics* (losses fall, KD helps, ordering holds), not absolute accuracy.
+"""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, train
+
+
+@functools.lru_cache(maxsize=1)
+def _trained():
+    ds = data.make_dataset("mnist", n_train=1024, n_test=256)
+    spec = model.SPECS["mnist"]
+    cfg = train.TrainConfig(epochs_per_stage=3)
+    return spec, ds, cfg, train.distillcycle_train(spec, ds, cfg)
+
+
+def test_losses_decrease_within_teacher_phase():
+    _, _, _, res = _trained()
+    teacher_stage1 = [h[4] for h in res.loss_history if h[:3] == (1, "teacher", "d1_w100")]
+    assert teacher_stage1[-1] < teacher_stage1[0]
+
+
+def test_all_paths_beat_chance():
+    spec, _, _, res = _trained()
+    for path in spec.paths:
+        assert res.accuracies[path.name] > 0.25, res.accuracies
+
+
+def test_every_path_has_history():
+    _, _, _, res = _trained()
+    trained_names = {h[2] for h in res.loss_history}
+    assert {"d1_w100", "d2_w100", "d3_w100", "d3_w50"} <= trained_names
+
+
+def test_polish_phase_runs_last():
+    _, _, _, res = _trained()
+    assert res.loss_history[-1][1] == "polish"
+    assert res.loss_history[-1][2] == "d3_w100"
+
+
+def test_kd_loss_zero_when_matching():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((4, 10)), jnp.float32)
+    assert float(train.kd_loss(logits, logits, tau=3.0)) < 1e-5
+
+
+def test_kd_loss_positive_when_differing():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((4, 10)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 10)), jnp.float32)
+    assert float(train.kd_loss(a, b, tau=3.0)) > 0.0
+
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    y = jnp.asarray([0, 1])
+    assert float(train.cross_entropy(logits, y)) < 1e-3
+
+
+def test_lr_tree_decays_early_blocks():
+    spec = model.SPECS["mnist"]
+    params = model.init_params(spec)
+    tree = train._lr_tree(params, spec, stage=3, base_lr=0.1, gamma=0.5)
+    lrs = [tree["blocks"][j]["w"] for j in range(3)]
+    assert lrs == [0.025, 0.05, 0.1]  # γ^2, γ^1, γ^0
+    assert tree["heads"]["d1_w100"]["w"] == 0.1
+
+
+def test_lr_tree_head_override():
+    spec = model.SPECS["mnist"]
+    params = model.init_params(spec)
+    tree = train._lr_tree(params, spec, 2, 0.01, 0.5, head_lr=0.3)
+    assert tree["heads"]["d3_w100"]["b"] == 0.3
+
+
+@pytest.mark.slow
+def test_distillcycle_vs_specialist():
+    """DistillCycle's d1 path shares its trunk with three other paths, so
+    a d1-only specialist (same step budget, labels only) is the upper
+    bound. The claim: DistillCycle stays within ~12 pts of the specialist
+    while ALSO delivering the deeper paths the specialist doesn't have."""
+    spec, ds, cfg, res = _trained()
+    specialist = train.label_only_train(spec, ds, model.MorphPath(1, 100), cfg)
+    assert res.accuracies["d1_w100"] >= specialist - 0.12, (
+        res.accuracies["d1_w100"],
+        specialist,
+    )
+    # the multi-path dividend: total deployable accuracy across paths
+    total = sum(res.accuracies.values())
+    assert total > specialist + 1.0, (total, specialist)

@@ -1,0 +1,250 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal of the compile path — every kernel
+that ends up in an AOT artifact is validated here, including hypothesis
+sweeps over shapes, strides, kernel sizes and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, conv2d as conv_k, fc as fc_k, pool as pool_k, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_conv_matches_ref(stride, padding, k):
+    x = rand(2, 12, 11, 3)
+    w = rand(k, k, 3, 7)
+    b = rand(7)
+    got = conv_k.conv2d(x, w, b, stride=stride, padding=padding, relu=False)
+    want = ref.conv2d(x, w, b, stride=stride, padding=padding, relu=False)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_conv_relu():
+    x = rand(1, 8, 8, 2)
+    w = rand(3, 3, 2, 4)
+    got = conv_k.conv2d(x, w, relu=True)
+    want = ref.conv2d(x, w, relu=True)
+    assert float(jnp.min(got)) >= 0.0
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_conv_no_bias_defaults_zero():
+    x = rand(1, 6, 6, 1)
+    w = rand(3, 3, 1, 2)
+    np.testing.assert_allclose(
+        conv_k.conv2d(x, w), ref.conv2d(x, w), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_conv_rejects_bad_weight_shape():
+    with pytest.raises(ValueError):
+        conv_k.conv2d(rand(1, 6, 6, 2), rand(3, 3, 3, 4))
+
+
+def test_conv_rejects_bad_padding():
+    with pytest.raises(ValueError):
+        conv_k.conv2d(rand(1, 6, 6, 1), rand(3, 3, 1, 1), padding="FULL")
+
+
+@pytest.mark.parametrize("tile_h", [1, 2, 3, 8, 64])
+def test_conv_tile_h_invariance(tile_h):
+    """The grid tiling is a schedule, not semantics — results identical."""
+    x = rand(1, 13, 9, 2)
+    w = rand(3, 3, 2, 3)
+    got = conv_k.conv2d(x, w, tile_h=tile_h)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("qbits,tol", [(8, 0.6), (16, 0.01)])
+def test_conv_quantized_close(qbits, tol):
+    """intN datapath: close to f32, with error shrinking 8 -> 16 bits."""
+    x = rand(1, 10, 10, 3)
+    w = rand(3, 3, 3, 5) * 0.2
+    got = conv_k.conv2d(x, w, qbits=qbits)
+    want = ref.conv2d(x, w)
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+def test_conv_int16_tighter_than_int8():
+    x = rand(1, 10, 10, 3)
+    w = rand(3, 3, 3, 5) * 0.2
+    want = ref.conv2d(x, w)
+    e8 = float(jnp.max(jnp.abs(conv_k.conv2d(x, w, qbits=8) - want)))
+    e16 = float(jnp.max(jnp.abs(conv_k.conv2d(x, w, qbits=16) - want)))
+    assert e16 < e8
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    k=st.integers(2, 4),
+    stride=st.integers(1, 2),
+    padding=st.sampled_from(["SAME", "VALID"]),
+)
+def test_conv_hypothesis(n, h, w, cin, cout, k, stride, padding):
+    if padding == "VALID" and (h < k or w < k):
+        return
+    x = rand(n, h, w, cin)
+    wt = rand(k, k, cin, cout)
+    b = rand(cout)
+    got = conv_k.conv2d(x, wt, b, stride=stride, padding=padding)
+    want = ref.conv2d(x, wt, b, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# fc
+# ---------------------------------------------------------------------------
+
+
+def test_fc_matches_ref():
+    x = rand(4, 33)
+    w = rand(33, 17)
+    b = rand(17)
+    np.testing.assert_allclose(
+        fc_k.fc(x, w, b), ref.fc(x, w, b), rtol=3e-5, atol=3e-5
+    )
+
+
+@pytest.mark.parametrize("tile_o", [1, 4, 16, 128])
+def test_fc_tile_o_invariance(tile_o):
+    """tile_o is the FC_PE allocation count — a schedule knob only."""
+    x = rand(2, 19)
+    w = rand(19, 11)
+    got = fc_k.fc(x, w, tile_o=tile_o)
+    np.testing.assert_allclose(got, ref.fc(x, w), rtol=3e-5, atol=3e-5)
+
+
+def test_fc_relu_and_quant():
+    x = rand(3, 21)
+    w = rand(21, 9) * 0.3
+    got = fc_k.fc(x, w, relu=True)
+    want = ref.fc(x, w, relu=True)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    gq = fc_k.fc(x, w, qbits=8)
+    assert float(jnp.max(jnp.abs(gq - ref.fc(x, w)))) < 0.6
+
+
+def test_fc_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fc_k.fc(rand(2, 5), rand(6, 3))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    f=st.integers(1, 40),
+    o=st.integers(1, 20),
+    tile_o=st.sampled_from([1, 3, 8, 128]),
+)
+def test_fc_hypothesis(n, f, o, tile_o):
+    x = rand(n, f)
+    w = rand(f, o)
+    b = rand(o)
+    got = fc_k.fc(x, w, b, tile_o=tile_o)
+    np.testing.assert_allclose(got, ref.fc(x, w, b), rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,stride", [(2, 2), (2, 1), (3, 3), (3, 2)])
+def test_maxpool_matches_ref(k, stride):
+    x = rand(2, 11, 13, 4)
+    np.testing.assert_allclose(
+        pool_k.maxpool2d(x, k, stride), ref.maxpool2d(x, k, stride), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("k,stride", [(2, 2), (3, 1)])
+def test_avgpool_matches_ref(k, stride):
+    x = rand(2, 9, 10, 3)
+    np.testing.assert_allclose(
+        pool_k.avgpool2d(x, k, stride), ref.avgpool2d(x, k, stride),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_pool_rejects_small_frame():
+    with pytest.raises(ValueError):
+        pool_k.maxpool2d(rand(1, 1, 1, 1), 2)
+
+
+def test_global_avg_pool():
+    x = rand(3, 7, 5, 6)
+    np.testing.assert_allclose(
+        pool_k.global_avg_pool(x), ref.global_avg_pool(x), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    c=st.integers(1, 5),
+    k=st.integers(2, 3),
+    stride=st.integers(1, 3),
+)
+def test_pool_hypothesis(h, w, c, k, stride):
+    if h < k or w < k:
+        return
+    x = rand(1, h, w, c)
+    np.testing.assert_allclose(
+        pool_k.maxpool2d(x, k, stride), ref.maxpool2d(x, k, stride), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# shape helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "size,k,stride,want",
+    [(28, 3, 1, 28), (28, 3, 2, 14), (7, 2, 2, 4), (5, 5, 1, 5)],
+)
+def test_out_size_same(size, k, stride, want):
+    assert common.out_size(size, k, stride, "SAME") == want
+
+
+@pytest.mark.parametrize(
+    "size,k,stride,want",
+    [(28, 3, 1, 26), (28, 3, 2, 13), (7, 2, 2, 3), (5, 5, 1, 1)],
+)
+def test_out_size_valid(size, k, stride, want):
+    assert common.out_size(size, k, stride, "VALID") == want
+
+
+def test_same_pads_cover():
+    for size in range(3, 20):
+        for k in (2, 3, 5):
+            for s in (1, 2):
+                lo, hi = common.same_pads(size, k, s)
+                out = common.out_size(size, k, s, "SAME")
+                assert (size + lo + hi - k) // s + 1 == out

@@ -1,0 +1,111 @@
+"""L2 model tests: morph-path semantics, shapes, counts, pallas/ref parity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import MorphPath, ModelSpec
+
+SPEC = model.SPECS["mnist"]
+
+
+def test_specs_registered():
+    assert set(model.SPECS) == {"mnist", "svhn", "cifar10"}
+    assert model.SPECS["cifar10"].filters == (8, 16, 32, 64, 64)
+
+
+def test_paths_enumeration():
+    names = [p.name for p in SPEC.paths]
+    assert names == ["d1_w100", "d2_w100", "d3_w100", "d3_w50"]
+    assert SPEC.full_path == MorphPath(3, 100)
+
+
+def test_init_params_shapes():
+    params = model.init_params(SPEC)
+    assert len(params["blocks"]) == 3
+    assert params["blocks"][0]["w"].shape == (3, 3, 1, 8)
+    assert params["blocks"][2]["w"].shape == (3, 3, 16, 32)
+    # head dims: flattened feature map after depth-d pooling chain
+    assert params["heads"]["d1_w100"]["w"].shape == (14 * 14 * 8, 10)
+    assert params["heads"]["d3_w100"]["w"].shape == (3 * 3 * 32, 10)
+    assert params["heads"]["d3_w50"]["w"].shape == (3 * 3 * 16, 10)
+
+
+@pytest.mark.parametrize("path", SPEC.paths, ids=lambda p: p.name)
+def test_forward_shapes(path):
+    params = model.init_params(SPEC)
+    x = jnp.zeros((2, 28, 28, 1), jnp.float32)
+    logits = model.forward(params, x, SPEC, path)
+    assert logits.shape == (2, 10)
+
+
+def test_forward_unknown_head_raises():
+    params = model.init_params(SPEC)
+    x = jnp.zeros((1, 28, 28, 1), jnp.float32)
+    with pytest.raises(KeyError):
+        model.forward(params, x, SPEC, MorphPath(2, 50))
+
+
+def test_width_slicing_is_prefix():
+    """Width morphing must use the FIRST cout/2 filters (gating a fixed
+    half of the PE array), so the w50 path shares weights with the full
+    path's prefix channels."""
+    params = model.init_params(SPEC)
+    w, b = model.slice_block(params["blocks"][1], 4, 8)
+    np.testing.assert_array_equal(w, params["blocks"][1]["w"][:, :, :4, :8])
+    np.testing.assert_array_equal(b, params["blocks"][1]["b"][:8])
+
+
+def test_pallas_matches_ref_forward():
+    """Deploy path (Pallas) == training path (ref) — the parity the AOT
+    artifacts rely on."""
+    rng = np.random.default_rng(3)
+    params = model.init_params(SPEC, seed=1)
+    x = jnp.asarray(rng.random((2, 28, 28, 1)), jnp.float32)
+    for path in SPEC.paths:
+        a = model.forward(params, x, SPEC, path, use_pallas=False)
+        b = model.forward(params, x, SPEC, path, use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_count_params_full_matches_manual():
+    # conv: 3*3*1*8+8, 3*3*8*16+16, 3*3*16*32+32 ; head: 3*3*32*10+10
+    want = (72 + 8) + (1152 + 16) + (4608 + 32) + (288 * 10 + 10)
+    assert model.count_params(SPEC, SPEC.full_path) == want
+
+
+def test_count_params_shapes():
+    # NOTE: params are NOT monotone in depth — shallow paths flatten a
+    # larger feature map into their FC head (14x14x8 vs 3x3x32), so d1
+    # carries the biggest head. MACs (test below) are the monotone cost.
+    p1 = model.count_params(SPEC, MorphPath(1, 100))
+    w50 = model.count_params(SPEC, MorphPath(3, 50))
+    p3 = model.count_params(SPEC, MorphPath(3, 100))
+    # d1: conv 72+8, head 1568*10+10
+    assert p1 == 80 + 15_690
+    assert w50 < p3
+
+
+def test_count_macs_dominated_by_conv():
+    full = model.count_macs(SPEC, SPEC.full_path)
+    d1 = model.count_macs(SPEC, MorphPath(1, 100))
+    assert full > d1 > 0
+    # conv1: 28*28*3*3*1*8 = 56448
+    assert d1 == 28 * 28 * 9 * 8 + 14 * 14 * 8 * 10
+
+
+def test_feature_shape_chain():
+    assert model.feature_shape(SPEC, 0) == (28, 28)
+    assert model.feature_shape(SPEC, 1) == (14, 14)
+    assert model.feature_shape(SPEC, 3) == (3, 3)
+    svhn = model.SPECS["svhn"]
+    assert model.feature_shape(svhn, 4) == (2, 2)
+
+
+def test_width_is_never_zero():
+    spec = ModelSpec("tiny", (8, 8, 1), 2, (1, 2))
+    params = model.init_params(spec)
+    x = jnp.zeros((1, 8, 8, 1), jnp.float32)
+    logits = model.forward(params, x, spec, MorphPath(2, 50))
+    assert logits.shape == (1, 2)

@@ -1,0 +1,256 @@
+//! `cargo bench` harness #3: ablations over the design choices DESIGN.md
+//! calls out.
+//!
+//! * MOGA population / generation scaling (Sec. III-C: "deeper networks
+//!   are evaluated with larger populations")
+//! * MOGA vs the roofline-allocation heuristic (the conventional DSE)
+//! * governor hysteresis (patience) vs switch thrash on a noisy budget
+//! * batching deadline vs throughput/latency trade
+//! * morph schedule extraction (max_paths sweep)
+//! * device portability sweep (same model, four parts)
+
+use std::time::Duration;
+
+use forgemorph::coordinator::trace;
+use forgemorph::coordinator::BatchPolicy;
+use forgemorph::design::{self, DesignConfig};
+use forgemorph::dse::{self, roofline};
+use forgemorph::graph::zoo;
+use forgemorph::morph::governor::{Budget, Decision, Governor, PathCosts};
+use forgemorph::morph::{schedule, MorphPath, PathRegistry};
+use forgemorph::pe::{FpRep, DEVICES, ZYNQ_7100};
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::rng::Rng;
+
+fn main() {
+    println!("=== bench_ablations ===");
+    moga_scaling();
+    moga_vs_roofline();
+    governor_hysteresis();
+    batching_deadline();
+    schedule_extraction();
+    device_portability();
+}
+
+fn moga_scaling() {
+    println!("\n-- MOGA population/generation scaling (CIFAR-10) --");
+    println!("{:<22} {:>10} {:>12} {:>12} {:>9}", "config", "evals", "best ms", "front", "seconds");
+    let net = zoo::cifar10();
+    for (pop, gens) in [(16, 10), (32, 20), (64, 40), (128, 60)] {
+        let t0 = std::time::Instant::now();
+        let res = dse::run(
+            &net,
+            &ZYNQ_7100,
+            &dse::DseConfig {
+                population: pop,
+                generations: gens,
+                seed: 3,
+                constraints: dse::Constraints::device(&ZYNQ_7100),
+                ..dse::DseConfig::default()
+            },
+        );
+        println!(
+            "{:<22} {:>10} {:>12.4} {:>12} {:>9.2}",
+            format!("pop={pop} gens={gens}"),
+            res.evaluations,
+            res.best_latency_per_gen.last().unwrap(),
+            res.pareto.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}
+
+fn moga_vs_roofline() {
+    println!("\n-- MOGA front vs roofline heuristic --");
+    println!("{:<12} {:>14} {:>10} | {:>14} {:>10}", "model", "RLM ms", "RLM DSP", "MOGA ms", "MOGA DSP");
+    for name in ["mnist", "svhn", "cifar10"] {
+        let net = zoo::by_name(name).unwrap();
+        let rl_cfg = roofline::roofline_allocate(&net, &ZYNQ_7100, FpRep::Int16);
+        let rl = design::evaluate(&net, &rl_cfg, &ZYNQ_7100).unwrap();
+        let res = dse::run(
+            &net,
+            &ZYNQ_7100,
+            &dse::DseConfig {
+                population: 64,
+                generations: 30,
+                seed: 4,
+                constraints: dse::Constraints {
+                    dsp: Some(rl.resources.dsp), // same area budget
+                    ..dse::Constraints::none()
+                },
+                ..dse::DseConfig::default()
+            },
+        );
+        let best = res
+            .pareto
+            .iter()
+            .map(|c| c.objectives.latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{:<12} {:>14.4} {:>10} | {:>14.4} {:>10}",
+            name,
+            rl.latency_ms(),
+            rl.resources.dsp,
+            best,
+            res.pareto
+                .iter()
+                .min_by(|a, b| a.objectives.latency_ms.partial_cmp(&b.objectives.latency_ms).unwrap())
+                .map(|c| c.objectives.dsp)
+                .unwrap_or(0)
+        );
+    }
+}
+
+fn sample_registry() -> (PathRegistry, PathCosts) {
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let paths: Vec<MorphPath> = (1..=3)
+        .map(|d| MorphPath {
+            name: format!("d{d}_w100"),
+            depth: d,
+            width_pct: 100,
+            accuracy: 0.9 + d as f64 * 0.03,
+            params: d * 1000,
+            macs: d * 100_000,
+        })
+        .collect();
+    let registry = PathRegistry::new(paths);
+    let costs = forgemorph::coordinator::sim_path_costs(&net, &design, &ZYNQ_7100, &registry);
+    (registry, costs)
+}
+
+fn governor_hysteresis() {
+    println!("\n-- governor patience vs switch thrash (noisy budget, 500 steps) --");
+    println!("{:<12} {:>10} {:>14}", "patience", "switches", "time-on-target");
+    let (_, costs) = sample_registry();
+    let full_power = costs.rows.iter().map(|r| r.1).fold(0.0, f64::max);
+    for patience in [1usize, 2, 4, 8] {
+        let (registry, costs) = sample_registry();
+        let mut gov = Governor::new(registry, costs, patience);
+        let mut rng = Rng::new(5);
+        let mut switches = 0u64;
+        let mut on_target = 0u64;
+        for step in 0..500 {
+            // noisy budget around the squeeze threshold
+            let base = if (step / 100) % 2 == 0 { full_power + 50.0 } else { full_power - 45.0 };
+            let noisy = base + rng.gauss() * 25.0;
+            match gov.observe(&Budget { power_mw: Some(noisy), latency_ms: None }) {
+                Decision::Switch { .. } => switches += 1,
+                Decision::Hold => {}
+            }
+            let want_full = base > full_power;
+            if (gov.current() == "d3_w100") == want_full {
+                on_target += 1;
+            }
+        }
+        println!("{:<12} {:>10} {:>13.1}%", patience, switches, on_target as f64 / 5.0);
+    }
+}
+
+fn batching_deadline() {
+    println!("\n-- batching deadline: offered load 2000 Hz, sizes {{1,8}} --");
+    println!("{:<14} {:>10} {:>14} {:>14}", "max_wait", "batches", "mean batch", "mean queue ms");
+    let arrivals = trace::arrivals(trace::ArrivalPattern::Poisson { rate_hz: 2000.0 }, 2000, 6);
+    for wait_ms in [0.5f64, 1.0, 2.0, 5.0, 10.0] {
+        let policy = BatchPolicy::new(vec![1, 8], Duration::from_secs_f64(wait_ms / 1e3));
+        // discrete-event replay: service is instantaneous, so the queue
+        // dynamics isolate the batching policy itself
+        let mut pending: Vec<f64> = Vec::new();
+        let mut batches = 0u64;
+        let mut frames = 0u64;
+        let mut queue_time = 0.0f64;
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        let dt = 1e-4;
+        while i < arrivals.len() || !pending.is_empty() {
+            while i < arrivals.len() && arrivals[i] <= t {
+                pending.push(arrivals[i]);
+                i += 1;
+            }
+            let oldest_wait = pending.first().map(|&a| t - a).unwrap_or(0.0);
+            let fire = pending.len() >= policy.max_size()
+                || (!pending.is_empty() && oldest_wait >= wait_ms / 1e3);
+            if fire {
+                let n = policy.fit(pending.len()).min(pending.len());
+                for &a in &pending[..n] {
+                    queue_time += t - a;
+                }
+                pending.drain(..n);
+                batches += 1;
+                frames += n as u64;
+            }
+            t += dt;
+        }
+        println!(
+            "{:<14} {:>10} {:>14.2} {:>14.3}",
+            format!("{wait_ms} ms"),
+            batches,
+            frames as f64 / batches.max(1) as f64,
+            queue_time / frames.max(1) as f64 * 1e3
+        );
+    }
+}
+
+fn schedule_extraction() {
+    println!("\n-- morph schedule extraction: candidate lattice -> deployed set --");
+    let net = zoo::cifar10();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    // full (depth x width) lattice as candidates
+    let mut cands = Vec::new();
+    let n = net.conv_layer_ids().len();
+    for depth in 1..=n {
+        for width in [100usize, 50] {
+            let mask = if width < 100 {
+                GateMask::width(0.5)
+            } else if depth < n {
+                GateMask::depth_prefix(&net, depth)
+            } else {
+                GateMask::all_active()
+            };
+            let r = sim::simulate(&net, &design, &ZYNQ_7100, &mask);
+            cands.push(schedule::Candidate {
+                path: MorphPath {
+                    name: format!("d{depth}_w{width}"),
+                    depth,
+                    width_pct: width,
+                    accuracy: 0.55 + 0.08 * depth as f64 - if width < 100 { 0.05 } else { 0.0 },
+                    params: 0,
+                    macs: depth * width,
+                },
+                latency_ms: r.latency_ms(),
+                power_mw: r.power_mw,
+            });
+        }
+    }
+    println!("lattice: {} candidates", cands.len());
+    for max_paths in [2usize, 3, 4] {
+        let sel = schedule::extract(
+            cands.clone(),
+            &schedule::ScheduleSpec { min_accuracy: 0.6, max_paths },
+        );
+        let names: Vec<String> = sel
+            .iter()
+            .map(|c| format!("{}({:.2}ms)", c.path.name, c.latency_ms))
+            .collect();
+        println!("  max_paths={max_paths}: {}", names.join(" "));
+    }
+}
+
+fn device_portability() {
+    println!("\n-- portability: MNIST balanced mapping across parts --");
+    println!("{:<12} {:>8} {:>10} {:>12} {:>10}", "device", "DSP", "FPS", "latency ms", "power mW");
+    let net = zoo::mnist();
+    for dev in DEVICES {
+        let cfg = DesignConfig::balanced(&net, FpRep::Int16, dev);
+        let r = sim::simulate(&net, &cfg, dev, &GateMask::all_active());
+        let eval = design::evaluate(&net, &cfg, dev).unwrap();
+        println!(
+            "{:<12} {:>8} {:>10.0} {:>12.4} {:>10.0}",
+            dev.name,
+            eval.resources.dsp,
+            r.fps(),
+            r.latency_ms(),
+            r.power_mw
+        );
+    }
+}

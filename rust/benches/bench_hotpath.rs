@@ -1,0 +1,208 @@
+//! `cargo bench` harness #2: hot-path microbenchmarks (the §Perf data).
+//!
+//! Times the inner loops that dominate each L3 pipeline stage:
+//! * `design::evaluate`        — the DSE fitness function (called 10^4-10^5x per search)
+//! * `dse generation step`     — full MOGA generation incl. NSGA-II sort
+//! * `nsga2::sort_fronts`      — dominance sorting alone
+//! * `sim::simulate`           — cycle simulation of small & big models
+//! * `rtl::emit`               — Verilog generation
+//! * `json parse`              — manifest parsing
+//! * `engine.execute`          — PJRT inference per path/batch (needs artifacts)
+//! * `coordinator end-to-end`  — serve 64 requests through the full stack
+//!
+//! Plain timing harness (no criterion offline): warmup + fixed-duration
+//! sampling, reports mean / p50 / min per iteration.
+
+use std::time::{Duration, Instant};
+
+use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::design::{self, DesignConfig};
+use forgemorph::dse;
+use forgemorph::graph::zoo;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::rtl;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::rng::Rng;
+
+/// Run `f` repeatedly for ~`budget` (after warmup), report stats.
+fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) {
+    // warmup
+    let warm_until = Instant::now() + budget / 5;
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples = Vec::new();
+    let until = Instant::now() + budget;
+    while Instant::now() < until && samples.len() < 100_000 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let min = samples[0];
+    println!(
+        "{name:<44} {:>8} iters  mean {:>12}  p50 {:>12}  min {:>12}",
+        samples.len(),
+        fmt_t(mean),
+        fmt_t(p50),
+        fmt_t(min)
+    );
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
+    );
+    println!("=== bench_hotpath (budget {budget:?} per case) ===");
+
+    // --- DSE fitness function --------------------------------------------
+    let mnist = zoo::mnist();
+    let cifar = zoo::cifar10();
+    let mobilenet = zoo::mobilenet_v2();
+    let cfg_m = DesignConfig::uniform(&mnist, 4, FpRep::Int16);
+    let cfg_c = DesignConfig::uniform(&cifar, 4, FpRep::Int16);
+    let cfg_mb = DesignConfig::uniform(&mobilenet, 4, FpRep::Int8);
+    bench("design::evaluate mnist", budget, || {
+        std::hint::black_box(design::evaluate(&mnist, &cfg_m, &ZYNQ_7100).unwrap());
+    });
+    bench("design::evaluate cifar10", budget, || {
+        std::hint::black_box(design::evaluate(&cifar, &cfg_c, &ZYNQ_7100).unwrap());
+    });
+    bench("design::evaluate mobilenetv2 (52 conv)", budget, || {
+        std::hint::black_box(design::evaluate(&mobilenet, &cfg_mb, &ZYNQ_7100).unwrap());
+    });
+
+    // --- MOGA generation --------------------------------------------------
+    bench("dse::run cifar10 pop=32 gens=1", budget, || {
+        let cfg = dse::DseConfig {
+            population: 32,
+            generations: 1,
+            seed: 1,
+            ..dse::DseConfig::default()
+        };
+        std::hint::black_box(dse::run(&cifar, &ZYNQ_7100, &cfg));
+    });
+    bench("dse::run cifar10 pop=96 gens=10", Duration::from_secs(4), || {
+        let cfg = dse::DseConfig {
+            population: 96,
+            generations: 10,
+            seed: 1,
+            ..dse::DseConfig::default()
+        };
+        std::hint::black_box(dse::run(&cifar, &ZYNQ_7100, &cfg));
+    });
+
+    // --- NSGA-II sorting ---------------------------------------------------
+    {
+        let mut rng = Rng::new(9);
+        let pop: Vec<dse::Candidate> = (0..256)
+            .map(|_| {
+                dse::evaluate_candidate(
+                    &mnist,
+                    mnist
+                        .conv_filter_bounds()
+                        .iter()
+                        .map(|&ub| rng.range(1, ub as i64) as usize)
+                        .collect(),
+                    FpRep::Int16,
+                    &ZYNQ_7100,
+                    &dse::Constraints::none(),
+                )
+            })
+            .collect();
+        bench("nsga2::sort_fronts n=256", budget, || {
+            std::hint::black_box(dse::nsga2::sort_fronts(&pop));
+        });
+    }
+
+    // --- cycle simulation ---------------------------------------------------
+    bench("sim::simulate mnist", budget, || {
+        std::hint::black_box(sim::simulate(&mnist, &cfg_m, &ZYNQ_7100, &GateMask::all_active()));
+    });
+    bench("sim::simulate mobilenetv2", budget, || {
+        std::hint::black_box(sim::simulate(&mobilenet, &cfg_mb, &ZYNQ_7100, &GateMask::all_active()));
+    });
+
+    // --- RTL emission --------------------------------------------------------
+    {
+        let eval = design::evaluate(&mnist, &cfg_m, &ZYNQ_7100).unwrap();
+        bench("rtl::emit mnist", budget, || {
+            std::hint::black_box(rtl::emit(&mnist, &cfg_m, &eval));
+        });
+    }
+
+    // --- manifest JSON parse ---------------------------------------------------
+    let manifest_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        bench("json parse manifest", budget, || {
+            std::hint::black_box(forgemorph::util::json::Json::parse(&text).unwrap());
+        });
+    }
+
+    // --- PJRT execution (artifacts required) --------------------------------
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let engine = forgemorph::runtime::Engine::load(&artifacts, "mnist").unwrap();
+        let frame = engine.frame_len();
+        let mut rng = Rng::new(1);
+        let x1: Vec<f32> = (0..frame).map(|_| rng.f64() as f32).collect();
+        let x8: Vec<f32> = (0..8 * frame).map(|_| rng.f64() as f32).collect();
+        for path in ["d1_w100", "d3_w50", "d3_w100"] {
+            bench(&format!("engine.execute {path} b=1"), budget, || {
+                std::hint::black_box(engine.execute(path, 1, &x1).unwrap());
+            });
+        }
+        bench("engine.execute d3_w100 b=8", budget, || {
+            std::hint::black_box(engine.execute("d3_w100", 8, &x8).unwrap());
+        });
+
+        // --- coordinator end-to-end -----------------------------------------
+        let t0 = Instant::now();
+        let mut coord = Coordinator::start(
+            ServeConfig {
+                artifacts_dir: artifacts.clone(),
+                model: "mnist".into(),
+                max_wait: Duration::from_millis(1),
+                patience: 2,
+            },
+            zoo::mnist(),
+            DesignConfig::uniform(&zoo::mnist(), 4, FpRep::Int16),
+            ZYNQ_7100,
+        )
+        .unwrap();
+        let startup = t0.elapsed();
+        let n = 64usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| coord.submit((0..frame).map(|_| rng.f64() as f32).collect()))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let serve = t0.elapsed();
+        let metrics = coord.shutdown();
+        println!(
+            "coordinator end-to-end: startup {} | {} reqs in {} ({:.0} req/s, {} batches)",
+            fmt_t(startup.as_secs_f64()),
+            n,
+            fmt_t(serve.as_secs_f64()),
+            n as f64 / serve.as_secs_f64(),
+            metrics.batches
+        );
+    } else {
+        println!("(engine/coordinator benches skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,31 @@
+//! `cargo bench` harness #1: regenerate EVERY paper table and figure.
+//!
+//! No criterion in the offline vendor set — this is a plain
+//! `harness = false` binary that times each experiment, prints the full
+//! regenerated block, and finishes with a timing summary. The printed
+//! blocks are the reproduction deliverable (EXPERIMENTS.md quotes them).
+
+use std::time::Instant;
+
+fn main() {
+    let experiments: &[&str] = &[
+        "table1", "table2", "fig2", "fig8", "fig10", "table3", "table4",
+        "table5", "table6", "fig11", "fig12",
+    ];
+    let mut timings: Vec<(&str, f64)> = Vec::new();
+    for id in experiments {
+        let t0 = Instant::now();
+        let block = forgemorph::report::by_name(id).expect("known experiment id");
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{block}");
+        timings.push((id, dt));
+    }
+
+    println!("\n=== bench_tables timing summary ===");
+    println!("{:<10} {:>10}", "experiment", "seconds");
+    for (id, dt) in &timings {
+        println!("{id:<10} {dt:>10.3}");
+    }
+    let total: f64 = timings.iter().map(|(_, t)| t).sum();
+    println!("{:<10} {total:>10.3}", "TOTAL");
+}

@@ -1,0 +1,136 @@
+//! Published comparison baselines (documented reference dataset).
+//!
+//! Tables IV and VI compare ForgeMorph against other FPGA compilers
+//! (Vitis AI, hls4ml, TVM, OpenVINO) and edge devices (Jetsons, NCS,
+//! Coral, ...). Those rows are *published measurements from the cited
+//! systems* — not something this reproduction can regenerate without the
+//! respective toolchains/hardware. Following DESIGN.md §2, we ship them
+//! as a clearly-marked constant dataset: the report harness recomputes
+//! every ForgeMorph row from our models/simulator and prints these
+//! reference rows alongside, exactly like the paper's tables.
+
+/// A compiler-comparison row of Table IV.
+#[derive(Debug, Clone, Copy)]
+pub struct CompilerRow {
+    pub framework: &'static str,
+    pub precision: &'static str,
+    pub fps: Option<f64>,
+    pub top1: Option<f64>,
+    pub energy_j_frame: Option<f64>,
+    pub freq_mhz: Option<f64>,
+    pub fpga: &'static str,
+}
+
+/// Table IV reference rows, grouped by model.
+pub const TABLE4_BASELINES: &[(&str, &[CompilerRow])] = &[
+    (
+        "MobileNetV2 (ImageNet)",
+        &[
+            CompilerRow { framework: "Vitis AI", precision: "int8", fps: Some(765.0), top1: Some(73.5), energy_j_frame: Some(0.20), freq_mhz: Some(300.0), fpga: "ZCU102" },
+            CompilerRow { framework: "hls4ml", precision: "int8", fps: Some(815.7), top1: Some(73.1), energy_j_frame: Some(0.19), freq_mhz: Some(200.0), fpga: "Kintex-7" },
+            CompilerRow { framework: "TVM", precision: "int8", fps: None, top1: None, energy_j_frame: None, freq_mhz: None, fpga: "NA" },
+            CompilerRow { framework: "OpenVINO", precision: "int8", fps: Some(300.0), top1: Some(71.8), energy_j_frame: None, freq_mhz: Some(300.0), fpga: "Arria 10 GX 660" },
+        ],
+    ),
+    (
+        "ResNet-50 (ImageNet)",
+        &[
+            CompilerRow { framework: "Vitis AI", precision: "int8", fps: Some(214.0), top1: Some(76.5), energy_j_frame: Some(0.89), freq_mhz: Some(300.0), fpga: "ZCU102" },
+            CompilerRow { framework: "hls4ml", precision: "int8", fps: Some(267.9), top1: Some(76.2), energy_j_frame: Some(0.40), freq_mhz: Some(200.0), fpga: "Kintex-7" },
+            CompilerRow { framework: "TVM", precision: "int8", fps: Some(102.5), top1: Some(74.4), energy_j_frame: None, freq_mhz: Some(200.0), fpga: "ZCU102" },
+            CompilerRow { framework: "OpenVINO", precision: "int8", fps: Some(132.3), top1: Some(75.5), energy_j_frame: None, freq_mhz: Some(300.0), fpga: "Arria 10 GX 660" },
+        ],
+    ),
+    (
+        "SqueezeNet (ImageNet)",
+        &[
+            CompilerRow { framework: "Vitis AI", precision: "int8", fps: Some(1527.0), top1: Some(59.3), energy_j_frame: Some(0.16), freq_mhz: Some(300.0), fpga: "ZCU102" },
+            CompilerRow { framework: "hls4ml", precision: "int8", fps: Some(1610.0), top1: Some(59.0), energy_j_frame: Some(0.13), freq_mhz: Some(200.0), fpga: "Kintex-7" },
+            CompilerRow { framework: "TVM", precision: "int8", fps: Some(497.5), top1: Some(59.2), energy_j_frame: None, freq_mhz: None, fpga: "NA" },
+            CompilerRow { framework: "OpenVINO", precision: "int8", fps: None, top1: None, energy_j_frame: None, freq_mhz: None, fpga: "NA" },
+        ],
+    ),
+    (
+        "YOLOv5-Large (COCO 2017)",
+        &[
+            CompilerRow { framework: "Vitis AI", precision: "int8", fps: Some(202.0), top1: Some(60.8), energy_j_frame: Some(0.75), freq_mhz: Some(300.0), fpga: "ZCU102" },
+            CompilerRow { framework: "hls4ml", precision: "int8", fps: None, top1: None, energy_j_frame: None, freq_mhz: None, fpga: "NA" },
+            CompilerRow { framework: "TVM", precision: "int8", fps: Some(123.4), top1: Some(60.5), energy_j_frame: None, freq_mhz: None, fpga: "NA" },
+            CompilerRow { framework: "OpenVINO", precision: "int8", fps: Some(140.0), top1: Some(61.0), energy_j_frame: None, freq_mhz: Some(300.0), fpga: "Arria 10 GX 660" },
+        ],
+    ),
+];
+
+/// Paper-reported ForgeMorph accuracies for Table IV (from DistillCycle
+/// training on the real datasets, which we cannot rerun offline; our
+/// synthetic-data accuracies live in the manifest instead).
+pub const TABLE4_FORGEMORPH_TOP1: &[(&str, f64, f64, f64, f64)] = &[
+    // (model, int16, int8, morph-full, morph-split)
+    ("mobilenetv2", 75.1, 73.0, 70.5, 68.0),
+    ("resnet50", 77.2, 76.3, 74.0, 71.8),
+    ("squeezenet", 60.1, 58.9, 56.7, 55.0),
+    ("yolov5l", 62.4, 60.3, f64::NAN, f64::NAN),
+];
+
+/// An edge-device row of Table VI (MLPerf-derived, MobileNetV1).
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeRow {
+    pub device: &'static str,
+    pub latency_ms: f64,
+    pub power_w: f64,
+}
+
+impl EdgeRow {
+    /// Inferences per Watt = (1000 / latency_ms) / power_w.
+    pub fn inf_per_watt(&self) -> f64 {
+        (1000.0 / self.latency_ms) / self.power_w
+    }
+}
+
+/// Table VI reference rows (all but the FPGA row, which we simulate).
+pub const TABLE6_BASELINES: &[EdgeRow] = &[
+    EdgeRow { device: "RasPi4", latency_ms: 480.3, power_w: 1.3 },
+    EdgeRow { device: "NCS", latency_ms: 115.7, power_w: 2.5 },
+    EdgeRow { device: "NCS2", latency_ms: 87.2, power_w: 1.5 },
+    EdgeRow { device: "Jetson Nano", latency_ms: 72.3, power_w: 10.0 },
+    EdgeRow { device: "Jetson TX2", latency_ms: 9.17, power_w: 15.0 },
+    EdgeRow { device: "Xavier NX", latency_ms: 0.95, power_w: 20.0 },
+    EdgeRow { device: "AGX Xavier", latency_ms: 0.53, power_w: 30.0 },
+    EdgeRow { device: "Tinker Edge R", latency_ms: 14.6, power_w: 7.8 },
+    EdgeRow { device: "Coral", latency_ms: 15.7, power_w: 5.0 },
+    EdgeRow { device: "Snapdragon 888", latency_ms: 11.6, power_w: 5.0 },
+];
+
+/// Paper's FPGA (ours) row of Table VI for reference.
+pub const TABLE6_PAPER_FPGA: EdgeRow =
+    EdgeRow { device: "FPGA (paper)", latency_ms: 3.72, power_w: 1.53 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_has_all_models() {
+        assert_eq!(TABLE4_BASELINES.len(), 4);
+        for (model, rows) in TABLE4_BASELINES {
+            assert!(!rows.is_empty(), "{model}");
+        }
+    }
+
+    #[test]
+    fn inf_per_watt_matches_paper() {
+        // paper: AGX = 62.9 inf/W
+        let agx = TABLE6_BASELINES.iter().find(|r| r.device == "AGX Xavier").unwrap();
+        assert!((agx.inf_per_watt() - 62.9).abs() < 0.5, "{}", agx.inf_per_watt());
+        // paper: FPGA = 178 inf/W
+        assert!((TABLE6_PAPER_FPGA.inf_per_watt() - 175.7).abs() < 3.0);
+    }
+
+    #[test]
+    fn vitis_resnet_reference() {
+        let (_, rows) = TABLE4_BASELINES[1];
+        let vitis = rows.iter().find(|r| r.framework == "Vitis AI").unwrap();
+        assert_eq!(vitis.fps, Some(214.0));
+        assert_eq!(vitis.energy_j_frame, Some(0.89));
+    }
+}

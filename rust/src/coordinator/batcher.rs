@@ -1,0 +1,104 @@
+//! Dynamic batcher.
+//!
+//! The AOT artifact set carries a small menu of batch sizes per path
+//! (typically {1, 8}). The batcher groups pending requests into the
+//! largest supported batch, flushing early when the oldest request's
+//! queueing deadline expires — the standard latency/throughput dial.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// supported batch sizes, ascending (from the manifest)
+    pub sizes: Vec<usize>,
+    /// flush when the oldest pending request has waited this long
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        BatchPolicy { sizes, max_wait }
+    }
+
+    pub fn max_size(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Largest supported size `<= n` (always at least the smallest size).
+    pub fn fit(&self, n: usize) -> usize {
+        self.sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= n)
+            .copied()
+            .unwrap_or(self.sizes[0])
+    }
+
+    /// Decide whether to emit a batch given `pending` queued requests and
+    /// the enqueue time of the oldest. Returns the batch size to run now,
+    /// or None to keep waiting.
+    pub fn decide(&self, pending: usize, oldest: Option<Instant>, now: Instant) -> Option<usize> {
+        if pending == 0 {
+            return None;
+        }
+        if pending >= self.max_size() {
+            return Some(self.max_size());
+        }
+        match oldest {
+            Some(t) if now.duration_since(t) >= self.max_wait => Some(self.fit(pending)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![8, 1], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn sizes_sorted_and_deduped() {
+        let p = BatchPolicy::new(vec![8, 1, 8], Duration::from_millis(1));
+        assert_eq!(p.sizes, vec![1, 8]);
+        assert_eq!(p.max_size(), 8);
+    }
+
+    #[test]
+    fn fit_picks_largest_le() {
+        let p = policy();
+        assert_eq!(p.fit(8), 8);
+        assert_eq!(p.fit(12), 8);
+        assert_eq!(p.fit(5), 1);
+        assert_eq!(p.fit(0), 1);
+    }
+
+    #[test]
+    fn full_batch_fires_immediately() {
+        let p = policy();
+        let now = Instant::now();
+        assert_eq!(p.decide(8, Some(now), now), Some(8));
+        assert_eq!(p.decide(20, Some(now), now), Some(8));
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let p = policy();
+        let now = Instant::now();
+        assert_eq!(p.decide(3, Some(now), now), None);
+        let later = now + Duration::from_millis(3);
+        assert_eq!(p.decide(3, Some(now), later), Some(1));
+    }
+
+    #[test]
+    fn empty_queue_never_fires() {
+        let p = policy();
+        assert_eq!(p.decide(0, None, Instant::now()), None);
+    }
+}

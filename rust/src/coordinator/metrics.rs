@@ -1,0 +1,136 @@
+//! Serving metrics: latency histogram, counters, per-path accounting.
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (microsecond resolution, ~7 decades).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; 40], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregated serving-run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub frames_by_path: std::collections::BTreeMap<String, u64>,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub e2e_latency: Histogram,
+    pub morph_switches: u64,
+    pub stall_frames: u64,
+    /// modeled FPGA energy integral (J) over the run
+    pub energy_j: f64,
+}
+
+impl ServingMetrics {
+    pub fn record_batch(
+        &mut self,
+        path: &str,
+        batch: usize,
+        queue: Duration,
+        exec: Duration,
+    ) {
+        self.batches += 1;
+        self.requests += batch as u64;
+        *self.frames_by_path.entry(path.to_string()).or_insert(0) += batch as u64;
+        self.queue_latency.record(queue);
+        self.exec_latency.record(exec);
+        self.e2e_latency.record(queue + exec);
+    }
+
+    pub fn throughput_fps(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let mut h = Histogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.mean_us() > 1000.0);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut m = ServingMetrics::default();
+        m.record_batch("d3_w100", 8, Duration::from_micros(50), Duration::from_micros(200));
+        m.record_batch("d1_w100", 1, Duration::from_micros(10), Duration::from_micros(20));
+        assert_eq!(m.requests, 9);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.frames_by_path["d3_w100"], 8);
+        let fps = m.throughput_fps(Duration::from_secs(1));
+        assert!((fps - 9.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,293 @@
+//! The ForgeMorph serving coordinator (L3 leader).
+//!
+//! Owns the request loop: a worker thread holds the PJRT [`Engine`]
+//! (executables are thread-local by construction — the engine is created
+//! *inside* the worker), requests arrive over an mpsc channel, the
+//! [`BatchPolicy`] groups them, and the NeuroMorph [`Governor`] is
+//! consulted between batches to pick the morph path under the current
+//! power/latency budget. FPGA-side power/latency for the active path
+//! comes from the cycle simulator (`sim/`), PJRT provides the numerics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod trace;
+
+pub use batcher::BatchPolicy;
+pub use metrics::{Histogram, ServingMetrics};
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::design::DesignConfig;
+use crate::graph::Network;
+use crate::morph::governor::{Budget, Decision, Governor, PathCosts};
+use crate::morph::{gate_mask_for, PathRegistry};
+use crate::pe::Device;
+use crate::runtime::Engine;
+use crate::sim;
+
+/// An inference request: one flat NHWC frame.
+pub struct Request {
+    pub id: u64,
+    pub data: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The reply: logits + serving telemetry.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub class: usize,
+    pub path: String,
+    pub queue: Duration,
+    pub exec: Duration,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub max_wait: Duration,
+    /// governor hysteresis (observations)
+    pub patience: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "mnist".into(),
+            max_wait: Duration::from_millis(2),
+            patience: 2,
+        }
+    }
+}
+
+/// Build the per-path cost table from the cycle simulator — the data the
+/// governor trades on (power mW, latency ms per morph path).
+pub fn sim_path_costs(
+    net: &Network,
+    design: &DesignConfig,
+    device: &Device,
+    registry: &PathRegistry,
+) -> PathCosts {
+    let rows = registry
+        .paths()
+        .iter()
+        .map(|p| {
+            let mask = gate_mask_for(net, p);
+            let rep = sim::simulate(net, design, device, &mask);
+            (p.name.clone(), rep.power_mw, rep.latency_ms())
+        })
+        .collect();
+    PathCosts { rows }
+}
+
+/// Commands understood by the serving worker.
+enum Command {
+    Infer(Request),
+    SetBudget(Budget),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Command>,
+    worker: Option<std::thread::JoinHandle<ServingMetrics>>,
+    next_id: u64,
+}
+
+impl Coordinator {
+    /// Start the serving worker. `net`/`design` parameterize the FPGA
+    /// cost model; the engine loads inside the worker thread.
+    pub fn start(
+        cfg: ServeConfig,
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+    ) -> anyhow::Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::spawn(move || {
+            worker_loop(cfg, net, design, device, rx, ready_tx)
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
+        Ok(Coordinator { tx, worker: Some(worker), next_id: 0 })
+    }
+
+    /// Submit one frame; returns the reply receiver.
+    pub fn submit(&mut self, data: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.next_id += 1;
+        let _ = self.tx.send(Command::Infer(Request {
+            id: self.next_id,
+            data,
+            enqueued: Instant::now(),
+            reply,
+        }));
+        rx
+    }
+
+    /// Update the operating budget the governor sees.
+    pub fn set_budget(&self, budget: Budget) {
+        let _ = self.tx.send(Command::SetBudget(budget));
+    }
+
+    /// Stop and collect the run's metrics.
+    pub fn shutdown(mut self) -> ServingMetrics {
+        let _ = self.tx.send(Command::Shutdown);
+        self.worker
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("worker panicked")
+    }
+}
+
+fn worker_loop(
+    cfg: ServeConfig,
+    net: Network,
+    design: DesignConfig,
+    device: Device,
+    rx: mpsc::Receiver<Command>,
+    ready: mpsc::Sender<Result<(), String>>,
+) -> ServingMetrics {
+    let engine = match Engine::load(&cfg.artifacts_dir, &cfg.model) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return ServingMetrics::default();
+        }
+    };
+    let registry = PathRegistry::new(engine.model().morph_paths());
+    let costs = sim_path_costs(&net, &design, &device, &registry);
+    let cost_rows = costs.rows.clone();
+    let mut governor = Governor::new(registry, costs, cfg.patience);
+    let policy = BatchPolicy::new(engine.model().batches.clone(), cfg.max_wait);
+
+    let mut metrics = ServingMetrics::default();
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut budget = Budget::unconstrained();
+    let mut open = true;
+
+    while open || !queue.is_empty() {
+        // drain incoming commands (briefly blocking when idle)
+        let timeout = if queue.is_empty() {
+            Duration::from_millis(5)
+        } else {
+            cfg.max_wait / 2
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Command::Infer(r)) => queue.push_back(r),
+            Ok(Command::SetBudget(b)) => budget = b,
+            Ok(Command::Shutdown) => open = false,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+        while let Ok(cmd) = rx.try_recv() {
+            match cmd {
+                Command::Infer(r) => queue.push_back(r),
+                Command::SetBudget(b) => budget = b,
+                Command::Shutdown => open = false,
+            }
+        }
+
+        // morph decision between batches (never mid-batch)
+        match governor.observe(&budget) {
+            Decision::Switch { stall_frames, .. } => {
+                metrics.morph_switches += 1;
+                metrics.stall_frames += stall_frames as u64;
+            }
+            Decision::Hold => {}
+        }
+
+        let now = Instant::now();
+        let oldest = queue.front().map(|r| r.enqueued);
+        let Some(size) = policy.decide(queue.len(), oldest, now) else {
+            continue;
+        };
+        let take: Vec<Request> = (0..size.min(queue.len()))
+            .filter_map(|_| queue.pop_front())
+            .collect();
+        if take.is_empty() {
+            continue;
+        }
+        let path = governor.current().to_string();
+        let frame = engine.frame_len();
+        let mut input = Vec::with_capacity(size * frame);
+        for r in &take {
+            input.extend_from_slice(&r.data);
+        }
+        // pad the tail of a short batch by repeating the last frame
+        while input.len() < size * frame {
+            let start = input.len() - frame;
+            input.extend_from_within(start..);
+        }
+
+        let t0 = Instant::now();
+        let result = engine.execute(&path, size, &input);
+        let exec = t0.elapsed();
+        match result {
+            Ok(logits) => {
+                let classes = engine.argmax(&logits);
+                let nc = engine.model().num_classes;
+                for (i, r) in take.iter().enumerate() {
+                    let queue_d = t0.duration_since(r.enqueued);
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        logits: logits[i * nc..(i + 1) * nc].to_vec(),
+                        class: classes[i],
+                        path: path.clone(),
+                        queue: queue_d,
+                        exec,
+                    });
+                }
+                let queue_d = t0.duration_since(take[0].enqueued);
+                metrics.record_batch(&path, take.len(), queue_d, exec);
+                // modeled FPGA energy for these frames on the active path:
+                // E = frames x P_path x T_frame (from the cycle simulator)
+                if let Some((_, pw, lat)) = cost_rows.iter().find(|(n, _, _)| *n == path) {
+                    metrics.energy_j += take.len() as f64 * (pw / 1000.0) * (lat / 1000.0);
+                }
+            }
+            Err(e) => {
+                // failure injection path: report and drop (callers see a
+                // closed channel); the loop keeps serving
+                eprintln!("[coordinator] execute failed on {path}: {e}");
+            }
+        }
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::pe::{FpRep, ZYNQ_7100};
+
+    #[test]
+    fn sim_costs_ordered_by_path_weight() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let reg = PathRegistry::new(crate::morph::tests::sample_paths());
+        let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &reg);
+        assert_eq!(costs.rows.len(), 4);
+        let get = |n: &str| costs.rows.iter().find(|(m, _, _)| m == n).unwrap().clone();
+        let (_, p_full, l_full) = get("d3_w100");
+        let (_, p_d1, l_d1) = get("d1_w100");
+        assert!(p_d1 < p_full, "gated power {p_d1} < full {p_full}");
+        assert!(l_d1 < l_full, "gated latency {l_d1} < full {l_full}");
+    }
+}

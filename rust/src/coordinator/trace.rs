@@ -1,0 +1,182 @@
+//! Workload and budget trace generators for serving experiments.
+//!
+//! The paper's deployment scenarios (Sec. I): power-saving mode entries,
+//! thermal throttling, bursty sensor streams. These generators produce
+//! the deterministic traces the serving bench and the adaptive_serving
+//! example replay: request arrival times plus a time-varying power/
+//! latency budget the NeuroMorph governor must track.
+
+use crate::morph::governor::Budget;
+use crate::util::rng::Rng;
+
+/// Arrival pattern of inference requests.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalPattern {
+    /// Poisson arrivals at a fixed rate (steady sensor stream).
+    Poisson { rate_hz: f64 },
+    /// Alternating calm/burst phases (event-triggered cameras).
+    Bursty {
+        calm_hz: f64,
+        burst_hz: f64,
+        phase_s: f64,
+    },
+    /// Deterministic fixed-interval arrivals (control-loop ticks).
+    Periodic { rate_hz: f64 },
+}
+
+/// Generate `n` arrival offsets (seconds from start), deterministic.
+pub fn arrivals(pattern: ArrivalPattern, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let dt = match pattern {
+            ArrivalPattern::Poisson { rate_hz } => rng.exp(rate_hz),
+            ArrivalPattern::Periodic { rate_hz } => 1.0 / rate_hz,
+            ArrivalPattern::Bursty { calm_hz, burst_hz, phase_s } => {
+                let in_burst = (t / phase_s) as u64 % 2 == 1;
+                rng.exp(if in_burst { burst_hz } else { calm_hz })
+            }
+        };
+        t += dt;
+        out.push(t);
+    }
+    out
+}
+
+/// A budget change at a point in time.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetEvent {
+    pub at_s: f64,
+    pub budget: Budget,
+}
+
+/// The paper's power-saving scenario: run free, squeeze to a power cap
+/// mid-run, release near the end.
+pub fn squeeze_release(duration_s: f64, cap_mw: f64) -> Vec<BudgetEvent> {
+    vec![
+        BudgetEvent { at_s: 0.0, budget: Budget::unconstrained() },
+        BudgetEvent {
+            at_s: duration_s / 3.0,
+            budget: Budget { power_mw: Some(cap_mw), latency_ms: None },
+        },
+        BudgetEvent { at_s: 2.0 * duration_s / 3.0, budget: Budget::unconstrained() },
+    ]
+}
+
+/// A diurnal-style staircase: progressively tighter power caps, then
+/// recovery — exercises multi-level morphing.
+pub fn staircase(duration_s: f64, caps_mw: &[f64]) -> Vec<BudgetEvent> {
+    let steps = caps_mw.len() as f64;
+    let mut out = vec![BudgetEvent { at_s: 0.0, budget: Budget::unconstrained() }];
+    for (i, &cap) in caps_mw.iter().enumerate() {
+        out.push(BudgetEvent {
+            at_s: duration_s * (i as f64 + 1.0) / (steps + 2.0),
+            budget: Budget { power_mw: Some(cap), latency_ms: None },
+        });
+    }
+    out.push(BudgetEvent {
+        at_s: duration_s * (steps + 1.0) / (steps + 2.0),
+        budget: Budget::unconstrained(),
+    });
+    out
+}
+
+/// Latency-SLA trace: a deadline tightens when the system enters a
+/// "reactive" mode (the autonomous-vehicle scenario of Sec. I).
+pub fn sla_tightening(duration_s: f64, relaxed_ms: f64, tight_ms: f64) -> Vec<BudgetEvent> {
+    vec![
+        BudgetEvent {
+            at_s: 0.0,
+            budget: Budget { power_mw: None, latency_ms: Some(relaxed_ms) },
+        },
+        BudgetEvent {
+            at_s: duration_s / 2.0,
+            budget: Budget { power_mw: None, latency_ms: Some(tight_ms) },
+        },
+    ]
+}
+
+/// Budget in force at time `t` (events must be at_s-sorted).
+pub fn budget_at(events: &[BudgetEvent], t: f64) -> Budget {
+    events
+        .iter()
+        .rev()
+        .find(|e| e.at_s <= t)
+        .map(|e| e.budget)
+        .unwrap_or_else(Budget::unconstrained)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_monotone_and_rate_correct() {
+        let a = arrivals(ArrivalPattern::Poisson { rate_hz: 1000.0 }, 2000, 1);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        let measured = a.len() as f64 / a.last().unwrap();
+        assert!((measured - 1000.0).abs() / 1000.0 < 0.1, "rate {measured}");
+    }
+
+    #[test]
+    fn periodic_is_exact() {
+        let a = arrivals(ArrivalPattern::Periodic { rate_hz: 100.0 }, 10, 1);
+        assert!((a[9] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_has_two_speeds() {
+        let a = arrivals(
+            ArrivalPattern::Bursty { calm_hz: 100.0, burst_hz: 5000.0, phase_s: 0.5 },
+            4000,
+            2,
+        );
+        // count arrivals in calm [0,0.5) vs burst [0.5,1.0)
+        let calm = a.iter().filter(|&&t| t < 0.5).count();
+        let burst = a.iter().filter(|&&t| (0.5..1.0).contains(&t)).count();
+        assert!(burst > 5 * calm, "calm {calm} burst {burst}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = arrivals(ArrivalPattern::Poisson { rate_hz: 50.0 }, 100, 7);
+        let b = arrivals(ArrivalPattern::Poisson { rate_hz: 50.0 }, 100, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn squeeze_release_structure() {
+        let ev = squeeze_release(3.0, 500.0);
+        assert_eq!(ev.len(), 3);
+        assert!(budget_at(&ev, 0.5).power_mw.is_none());
+        assert_eq!(budget_at(&ev, 1.5).power_mw, Some(500.0));
+        assert!(budget_at(&ev, 2.5).power_mw.is_none());
+    }
+
+    #[test]
+    fn staircase_tightens_then_recovers() {
+        // events at t = 8*(1/5, 2/5, 3/5) caps and 8*(4/5) release
+        let ev = staircase(8.0, &[700.0, 600.0, 500.0]);
+        assert_eq!(ev.len(), 5);
+        let mid = budget_at(&ev, 8.0 * 2.4 / 5.0);
+        assert_eq!(mid.power_mw, Some(600.0));
+        assert!(budget_at(&ev, 7.9).power_mw.is_none());
+    }
+
+    #[test]
+    fn sla_tightens() {
+        let ev = sla_tightening(2.0, 10.0, 1.0);
+        assert_eq!(budget_at(&ev, 0.1).latency_ms, Some(10.0));
+        assert_eq!(budget_at(&ev, 1.9).latency_ms, Some(1.0));
+    }
+
+    #[test]
+    fn budget_before_first_event_unconstrained() {
+        let ev = vec![BudgetEvent {
+            at_s: 5.0,
+            budget: Budget { power_mw: Some(1.0), latency_ms: None },
+        }];
+        assert!(budget_at(&ev, 1.0).power_mw.is_none());
+    }
+}

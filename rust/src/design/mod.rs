@@ -1,0 +1,827 @@
+//! Hardware design model: a network + per-layer parallelism -> latency,
+//! resources, power (Sec. III-B/C, Eqs. 12-15).
+//!
+//! A **design point** assigns each conv layer i a parallelism degree
+//! `p(i)` with `1 <= p(i) <= ub(i)` (ub = filter count). Following
+//! Eq. 14, layer i instantiates `L(i) = p(i) * p(i-1)` C_PEs: `p(i)`
+//! filter lanes, each replicated across `p(i-1)` input-channel streams.
+//! Filters/channels beyond the allocated lanes are processed in
+//! sequential passes — the serialization that trades latency for area.
+//!
+//! Pipeline timing follows Eq. 12-13: `T = m*P + (n-1)*I` with `m` the
+//! fill delay (line buffers + MAC overheads), `n` the streamed elements
+//! of the input frame, and `I` the initiation interval set by the most
+//! serialized stage.
+
+use crate::graph::{shapes, LayerKind, Network};
+use crate::pe::conv::ConvPe;
+use crate::pe::fc::FcPe;
+use crate::pe::pool::{PoolKind, PoolPe};
+use crate::pe::{Blanking, Device, FpRep, Resources};
+use crate::power::{Activity, PowerModel};
+
+/// A candidate hardware configuration (the MOGA chromosome, Sec. III-C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignConfig {
+    /// parallelism p(i) per conv-like layer, in network order
+    pub parallelism: Vec<usize>,
+    /// fixed-point width of the datapath
+    pub rep: FpRep,
+}
+
+impl DesignConfig {
+    pub fn uniform(net: &Network, p: usize, rep: FpRep) -> DesignConfig {
+        DesignConfig {
+            parallelism: net
+                .conv_filter_bounds()
+                .iter()
+                .map(|&ub| p.min(ub).max(1))
+                .collect(),
+            rep,
+        }
+    }
+
+    /// Fully parallel mapping (one PE lane per filter).
+    pub fn full(net: &Network, rep: FpRep) -> DesignConfig {
+        DesignConfig { parallelism: net.conv_filter_bounds(), rep }
+    }
+
+    /// Bottleneck-balancing greedy allocation under a device budget:
+    /// start at p(i)=1 everywhere, repeatedly double the parallelism of
+    /// the worst-occupancy stage until the next step would blow the
+    /// budget or nothing improves. Deterministic fast-path for the big
+    /// Table IV/V models (the MOGA finds the same knee; this gets there
+    /// in O(layers x steps)).
+    pub fn balanced(net: &Network, rep: FpRep, device: &Device) -> DesignConfig {
+        let bounds = net.conv_filter_bounds();
+        let conv_ids: Vec<usize> = net.conv_layer_ids();
+        let mut cfg = DesignConfig { parallelism: vec![1; bounds.len()], rep };
+        loop {
+            let Ok(eval) = evaluate(net, &cfg, device) else { break };
+            // order chromosome slots by stage occupancy, worst first
+            let mut order: Vec<usize> = (0..conv_ids.len()).collect();
+            order.sort_by_key(|&slot| {
+                std::cmp::Reverse(eval.mappings[conv_ids[slot]].occupancy_cycles)
+            });
+            let mut improved = false;
+            for slot in order {
+                if cfg.parallelism[slot] >= bounds[slot] {
+                    continue;
+                }
+                for next in [
+                    (cfg.parallelism[slot] * 2).min(bounds[slot]),
+                    (cfg.parallelism[slot] + 1).min(bounds[slot]),
+                ] {
+                    if next == cfg.parallelism[slot] {
+                        continue;
+                    }
+                    let mut trial = cfg.clone();
+                    trial.parallelism[slot] = next;
+                    if let Ok(e) = evaluate(net, &trial, device) {
+                        if e.fits(device) {
+                            cfg = trial;
+                            improved = true;
+                            break;
+                        }
+                    }
+                }
+                if improved {
+                    break;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        cfg
+    }
+}
+
+/// Per-layer mapping outcome.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub layer_id: usize,
+    pub name: String,
+    /// C_PE (or pool/FC unit) count for this layer
+    pub pe_count: usize,
+    /// sequential passes needed to cover all (filter, channel) pairs
+    pub serial_factor: usize,
+    /// cycles this stage occupies per frame (pass cycles x serial)
+    pub occupancy_cycles: usize,
+    /// pipeline fill contribution (line buffer + MAC overheads)
+    pub fill_cycles: usize,
+    pub resources: Resources,
+}
+
+/// Full evaluation of one design point.
+#[derive(Debug, Clone)]
+pub struct DesignEval {
+    pub mappings: Vec<LayerMapping>,
+    pub resources: Resources,
+    /// total C_PE-equivalents (the "Design PEs" column of Table III)
+    pub total_pes: usize,
+    /// first-frame latency (Eq. 12-13)
+    pub latency_cycles: usize,
+    /// steady-state frame period (1/throughput)
+    pub period_cycles: usize,
+    pub clock_mhz: f64,
+}
+
+impl DesignEval {
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_cycles as f64 / (self.clock_mhz * 1e3)
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.clock_mhz * 1e6 / self.period_cycles as f64
+    }
+
+    pub fn power_mw(&self, model: &PowerModel, act: Activity) -> f64 {
+        model.total_mw(&self.resources, self.clock_mhz, act)
+    }
+
+    pub fn energy_per_frame_j(&self, model: &PowerModel, act: Activity) -> f64 {
+        // energy of one frame at steady state
+        let period_ms = self.period_cycles as f64 / (self.clock_mhz * 1e3);
+        model.energy_per_frame_mj(&self.resources, self.clock_mhz, act, period_ms) / 1000.0
+    }
+
+    pub fn fits(&self, device: &Device) -> bool {
+        self.resources.fits(&device.budget)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DesignError {
+    #[error("shape inference: {0}")]
+    Shape(#[from] shapes::ShapeError),
+    #[error("parallelism vector has {got} entries, network has {want} conv layers")]
+    ArityMismatch { got: usize, want: usize },
+    #[error("layer {layer}: parallelism {p} outside [1, {ub}]")]
+    OutOfBounds { layer: usize, p: usize, ub: usize },
+}
+
+/// Evaluate a design point on a device (the analytical fast path of the
+/// DSE loop — no synthesis, microseconds per call).
+pub fn evaluate(
+    net: &Network,
+    cfg: &DesignConfig,
+    device: &Device,
+) -> Result<DesignEval, DesignError> {
+    let shp = shapes::infer(net)?;
+    let bounds = net.conv_filter_bounds();
+    if cfg.parallelism.len() != bounds.len() {
+        return Err(DesignError::ArityMismatch {
+            got: cfg.parallelism.len(),
+            want: bounds.len(),
+        });
+    }
+    for (i, (&p, &ub)) in cfg.parallelism.iter().zip(&bounds).enumerate() {
+        if p == 0 || p > ub {
+            return Err(DesignError::OutOfBounds { layer: i, p, ub });
+        }
+    }
+
+    let blank = Blanking::default();
+    // Pipeline pacing: each serialized stage re-reads its LOCAL input
+    // feature map from the stage's BRAM buffers once per pass (filter
+    // group x channel group), so a stage's occupancy per frame is
+    // `local_frame_elements x serial_factor`. The steady-state frame
+    // period is set by the most-occupied stage (Eq. 13's initiation
+    // interval) — the "each stage constitutes a bottleneck" behaviour of
+    // low-PE designs (Sec. V-B).
+    let mut mappings = Vec::with_capacity(net.layers.len());
+    let mut total = Resources::default();
+    let mut conv_idx = 0usize;
+    let mut prev_p = 1usize; // input streams ahead of the first conv
+    let mut first_conv_seen = false;
+
+    for layer in &net.layers {
+        let inp = shp.input(layer.id);
+        let mapping = match &layer.kind {
+            LayerKind::Conv { filters, k, relu, .. } => {
+                let p = cfg.parallelism[conv_idx];
+                conv_idx += 1;
+                let lanes_in = prev_p.min(inp.c).max(1);
+                let pe_count = p * lanes_in; // Eq. 14: L(i) = p(i) * p(i-1)
+                let pe = ConvPe {
+                    k: *k,
+                    fm_w: inp.w,
+                    fm_h: inp.h,
+                    rep: cfg.rep,
+                    relu: *relu,
+                    first_layer: !first_conv_seen,
+                };
+                first_conv_seen = true;
+                // sequential passes: filter groups x input-channel groups.
+                // int8 packs two MACs per DSP48 (dual-lane SIMD), so each
+                // PE lane covers two filters per pass — the 2x throughput
+                // the paper's NeuroForge-8 rows show over NeuroForge-16.
+                let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
+                let serial = filters.div_ceil(p * simd) * inp.c.div_ceil(lanes_in);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                let m = LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles(),
+                    resources: pe.resources().scale(pe_count),
+                };
+                prev_p = p;
+                m
+            }
+            LayerKind::DwConv { k, relu, .. } => {
+                // depthwise: one lane per channel group, p carries over
+                let p = cfg.parallelism[conv_idx];
+                conv_idx += 1;
+                let pe = ConvPe {
+                    k: *k,
+                    fm_w: inp.w,
+                    fm_h: inp.h,
+                    rep: cfg.rep,
+                    relu: *relu,
+                    first_layer: !first_conv_seen,
+                };
+                first_conv_seen = true;
+                let lanes = p.min(inp.c).max(1);
+                let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
+                let serial = inp.c.div_ceil(lanes * simd);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                let m = LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: lanes,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles(),
+                    resources: pe.resources().scale(lanes),
+                };
+                prev_p = lanes;
+                m
+            }
+            LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
+                let kind = if matches!(layer.kind, LayerKind::MaxPool { .. }) {
+                    PoolKind::Max
+                } else {
+                    PoolKind::Avg
+                };
+                let pe = PoolPe { k: *k, stride: *stride, fm_w: inp.w, fm_h: inp.h, kind };
+                // one PU_PE per active channel lane, streams inline
+                let lanes = prev_p.min(inp.c).max(1);
+                let serial = inp.c.div_ceil(lanes);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: lanes,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch) + 6,
+                    resources: pe.resources().scale(lanes),
+                }
+            }
+            LayerKind::Fc { out, .. } => {
+                let n_pe = prev_p.min(inp.c).max(1);
+                let pe = FcPe {
+                    fc_out: *out,
+                    n_pe,
+                    channels: inp.c,
+                    fm_w: inp.w,
+                    fm_h: inp.h.max(1),
+                };
+                LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: *out * n_pe,
+                    serial_factor: pe.parallelism(),
+                    occupancy_cycles: pe.latency_cycles(blank),
+                    fill_cycles: 4,
+                    resources: pe.resources(),
+                }
+            }
+            LayerKind::ResidualAdd { .. } => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: prev_p,
+                serial_factor: 1,
+                occupancy_cycles: 0,
+                fill_cycles: 1,
+                // one adder lane per active channel: LUT adders, no DSP
+                resources: Resources { dsp: 0, lut: 24 * prev_p, ff: 16 * prev_p, bram: 0 },
+            },
+            LayerKind::GlobalAvgPool => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: prev_p,
+                serial_factor: 1,
+                occupancy_cycles: (inp.w + 4) * inp.h,
+                fill_cycles: 4,
+                resources: Resources { dsp: 0, lut: 60 * prev_p, ff: 32 * prev_p, bram: 0 },
+            },
+            LayerKind::Softmax => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: 1,
+                serial_factor: 1,
+                occupancy_cycles: inp.c * 4,
+                fill_cycles: 8,
+                // exp LUT table + normalizer
+                resources: Resources { dsp: 2, lut: 900, ff: 600, bram: 1 },
+            },
+            LayerKind::Input { .. } => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: 0,
+                serial_factor: 1,
+                occupancy_cycles: 0,
+                fill_cycles: 0,
+                resources: Resources::default(),
+            },
+        };
+        total = total.add(&mapping.resources);
+        mappings.push(mapping);
+    }
+
+    // Eq. 12-13. Throughput: the steady-state frame period is the most
+    // occupied stage (initiation interval I). Latency: streaming stages
+    // (serial == 1) overlap wavefront-style and add only their fill;
+    // a serialized stage must buffer its whole input fmap before pass 2,
+    // so it adds its full occupancy to the critical path — this is why
+    // low-PE designs are orders of magnitude slower end-to-end and why
+    // depth-gating them (NeuroMorph) wins big.
+    let (in_h, in_w, _) = net.input_dims();
+    let source = (in_w + blank.back_porch + blank.front_porch) * in_h;
+    let fill: usize = mappings.iter().map(|m| m.fill_cycles).sum();
+    let serialized: usize = mappings
+        .iter()
+        .filter(|m| m.serial_factor > 1)
+        .map(|m| m.occupancy_cycles)
+        .sum();
+    let period = mappings
+        .iter()
+        .map(|m| m.occupancy_cycles)
+        .max()
+        .unwrap_or(1)
+        .max(source);
+    let latency = source + fill + serialized;
+    let total_pes = mappings
+        .iter()
+        .filter(|m| {
+            matches!(
+                net.layers[m.layer_id].kind,
+                LayerKind::Conv { .. } | LayerKind::DwConv { .. }
+            )
+        })
+        .map(|m| m.pe_count)
+        .sum();
+
+    Ok(DesignEval {
+        mappings,
+        resources: total,
+        total_pes,
+        latency_cycles: latency,
+        period_cycles: period,
+        clock_mhz: device.clock_mhz,
+    })
+}
+
+
+// ---------------------------------------------------------------------------
+// Fast path for the DSE inner loop
+// ---------------------------------------------------------------------------
+
+/// Pre-digested per-stage facts, computed once per (network, device).
+#[derive(Debug, Clone, Copy)]
+enum StagePre {
+    Conv {
+        filters: usize,
+        cin: usize,
+        pass: usize,
+        fill: usize,
+        /// per-PE resources at Int16 / Int8 (BRAM differs with FP_rep)
+        res16: Resources,
+        res8: Resources,
+    },
+    DwConv {
+        cin: usize,
+        pass: usize,
+        fill: usize,
+        res16: Resources,
+        res8: Resources,
+    },
+    Pool { cin: usize, pass: usize, fill: usize, res: Resources },
+    Fc { out: usize, cin: usize, fm_w: usize, fm_h: usize, fill: usize },
+    Fixed { occupancy: usize, fill: usize, res_per_lane: Resources, lanes_from_prev: bool, extra: Resources },
+}
+
+/// Lightweight evaluation result (what the MOGA fitness needs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FastEval {
+    pub resources: Resources,
+    pub total_pes: usize,
+    pub latency_cycles: usize,
+    pub period_cycles: usize,
+}
+
+/// Reusable evaluator: hoists shape inference, bound checks and per-PE
+/// resource lookups out of the 10^4-10^5-call DSE loop. `objectives()`
+/// performs zero heap allocation.
+pub struct Evaluator {
+    stages: Vec<StagePre>,
+    bounds: Vec<usize>,
+    source: usize,
+    clock_mhz: f64,
+    budget: Resources,
+}
+
+impl Evaluator {
+    pub fn new(net: &Network, device: &Device) -> Result<Evaluator, DesignError> {
+        let shp = shapes::infer(net)?;
+        let blank = Blanking::default();
+        let mut stages = Vec::with_capacity(net.layers.len());
+        let mut first_conv_seen = false;
+        for layer in &net.layers {
+            let inp = shp.input(layer.id);
+            let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+            let stage = match &layer.kind {
+                LayerKind::Conv { filters, k, relu, .. } => {
+                    let first = !first_conv_seen;
+                    first_conv_seen = true;
+                    let mk = |rep| ConvPe {
+                        k: *k,
+                        fm_w: inp.w,
+                        fm_h: inp.h,
+                        rep,
+                        relu: *relu,
+                        first_layer: first,
+                    };
+                    let pe = mk(FpRep::Int16);
+                    let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles();
+                    StagePre::Conv {
+                        filters: *filters,
+                        cin: inp.c,
+                        pass,
+                        fill,
+                        res16: pe.resources(),
+                        res8: mk(FpRep::Int8).resources(),
+                    }
+                }
+                LayerKind::DwConv { k, relu, .. } => {
+                    let first = !first_conv_seen;
+                    first_conv_seen = true;
+                    let mk = |rep| ConvPe {
+                        k: *k,
+                        fm_w: inp.w,
+                        fm_h: inp.h,
+                        rep,
+                        relu: *relu,
+                        first_layer: first,
+                    };
+                    let pe = mk(FpRep::Int16);
+                    let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles();
+                    StagePre::DwConv {
+                        cin: inp.c,
+                        pass,
+                        fill,
+                        res16: pe.resources(),
+                        res8: mk(FpRep::Int8).resources(),
+                    }
+                }
+                LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
+                    let kind = if matches!(layer.kind, LayerKind::MaxPool { .. }) {
+                        PoolKind::Max
+                    } else {
+                        PoolKind::Avg
+                    };
+                    let pe = PoolPe { k: *k, stride: *stride, fm_w: inp.w, fm_h: inp.h, kind };
+                    StagePre::Pool {
+                        cin: inp.c,
+                        pass,
+                        fill: (*k - 1) * (inp.w + blank.back_porch + blank.front_porch) + 6,
+                        res: pe.resources(),
+                    }
+                }
+                LayerKind::Fc { out, .. } => StagePre::Fc {
+                    out: *out,
+                    cin: inp.c,
+                    fm_w: inp.w,
+                    fm_h: inp.h.max(1),
+                    fill: 4,
+                },
+                LayerKind::ResidualAdd { .. } => StagePre::Fixed {
+                    occupancy: 0,
+                    fill: 1,
+                    res_per_lane: Resources { dsp: 0, lut: 24, ff: 16, bram: 0 },
+                    lanes_from_prev: true,
+                    extra: Resources::default(),
+                },
+                LayerKind::GlobalAvgPool => StagePre::Fixed {
+                    occupancy: (inp.w + 4) * inp.h,
+                    fill: 4,
+                    res_per_lane: Resources { dsp: 0, lut: 60, ff: 32, bram: 0 },
+                    lanes_from_prev: true,
+                    extra: Resources::default(),
+                },
+                LayerKind::Softmax => StagePre::Fixed {
+                    occupancy: inp.c * 4,
+                    fill: 8,
+                    res_per_lane: Resources::default(),
+                    lanes_from_prev: false,
+                    extra: Resources { dsp: 2, lut: 900, ff: 600, bram: 1 },
+                },
+                LayerKind::Input { .. } => StagePre::Fixed {
+                    occupancy: 0,
+                    fill: 0,
+                    res_per_lane: Resources::default(),
+                    lanes_from_prev: false,
+                    extra: Resources::default(),
+                },
+            };
+            stages.push(stage);
+        }
+        let (in_h, in_w, _) = net.input_dims();
+        Ok(Evaluator {
+            stages,
+            bounds: net.conv_filter_bounds(),
+            source: (in_w + blank.back_porch + blank.front_porch) * in_h,
+            clock_mhz: device.clock_mhz,
+            budget: device.budget,
+        })
+    }
+
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Allocation-free evaluation; semantics identical to [`evaluate`]
+    /// (cross-checked by `fast_eval_matches_full` below).
+    pub fn objectives(&self, parallelism: &[usize], rep: FpRep) -> Result<FastEval, DesignError> {
+        if parallelism.len() != self.bounds.len() {
+            return Err(DesignError::ArityMismatch {
+                got: parallelism.len(),
+                want: self.bounds.len(),
+            });
+        }
+        for (i, (&p, &ub)) in parallelism.iter().zip(&self.bounds).enumerate() {
+            if p == 0 || p > ub {
+                return Err(DesignError::OutOfBounds { layer: i, p, ub });
+            }
+        }
+        let simd = if rep == FpRep::Int8 { 2 } else { 1 };
+        let mut total = Resources::default();
+        let mut total_pes = 0usize;
+        let mut conv_idx = 0usize;
+        let mut prev_p = 1usize;
+        let mut fill_sum = 0usize;
+        let mut serialized = 0usize;
+        let mut period = self.source;
+        let blank = Blanking::default();
+        let _ = blank;
+
+        for stage in &self.stages {
+            match *stage {
+                StagePre::Conv { filters, cin, pass, fill, res16, res8 } => {
+                    let p = parallelism[conv_idx];
+                    conv_idx += 1;
+                    let lanes_in = prev_p.min(cin).max(1);
+                    let pe_count = p * lanes_in;
+                    let serial = filters.div_ceil(p * simd) * cin.div_ceil(lanes_in);
+                    let occ = pass * serial;
+                    let res = if rep == FpRep::Int8 { res8 } else { res16 };
+                    total = total.add(&res.scale(pe_count));
+                    total_pes += pe_count;
+                    fill_sum += fill;
+                    if serial > 1 {
+                        serialized += occ;
+                    }
+                    period = period.max(occ);
+                    prev_p = p;
+                }
+                StagePre::DwConv { cin, pass, fill, res16, res8 } => {
+                    let p = parallelism[conv_idx];
+                    conv_idx += 1;
+                    let lanes = p.min(cin).max(1);
+                    let serial = cin.div_ceil(lanes * simd);
+                    let occ = pass * serial;
+                    let res = if rep == FpRep::Int8 { res8 } else { res16 };
+                    total = total.add(&res.scale(lanes));
+                    total_pes += lanes;
+                    fill_sum += fill;
+                    if serial > 1 {
+                        serialized += occ;
+                    }
+                    period = period.max(occ);
+                    prev_p = lanes;
+                }
+                StagePre::Pool { cin, pass, fill, res } => {
+                    let lanes = prev_p.min(cin).max(1);
+                    let serial = cin.div_ceil(lanes);
+                    let occ = pass * serial;
+                    total = total.add(&res.scale(lanes));
+                    fill_sum += fill;
+                    if serial > 1 {
+                        serialized += occ;
+                    }
+                    period = period.max(occ);
+                }
+                StagePre::Fc { out, cin, fm_w, fm_h, fill } => {
+                    let n_pe = prev_p.min(cin).max(1);
+                    let pe = FcPe { fc_out: out, n_pe, channels: cin, fm_w, fm_h };
+                    let occ = pe.latency_cycles(Blanking::default());
+                    total = total.add(&pe.resources());
+                    fill_sum += fill;
+                    if pe.parallelism() > 1 {
+                        serialized += occ;
+                    }
+                    period = period.max(occ);
+                }
+                StagePre::Fixed { occupancy, fill, res_per_lane, lanes_from_prev, extra } => {
+                    let lanes = if lanes_from_prev { prev_p } else { 1 };
+                    total = total.add(&res_per_lane.scale(lanes)).add(&extra);
+                    fill_sum += fill;
+                    period = period.max(occupancy);
+                }
+            }
+        }
+        Ok(FastEval {
+            resources: total,
+            total_pes,
+            latency_cycles: self.source + fill_sum + serialized,
+            period_cycles: period.max(1),
+        })
+    }
+
+    pub fn latency_ms(&self, eval: &FastEval) -> f64 {
+        eval.latency_cycles as f64 / (self.clock_mhz * 1e3)
+    }
+
+    pub fn fits(&self, eval: &FastEval) -> bool {
+        eval.resources.fits(&self.budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::pe::ZYNQ_7100;
+
+    #[test]
+    fn full_parallel_mnist_is_fast_and_big() {
+        let net = zoo::mnist();
+        let full = evaluate(&net, &DesignConfig::full(&net, FpRep::Int16), &ZYNQ_7100).unwrap();
+        let tiny = evaluate(&net, &DesignConfig::uniform(&net, 1, FpRep::Int16), &ZYNQ_7100).unwrap();
+        assert!(full.latency_ms() < 0.05, "full {}", full.latency_ms());
+        assert!(tiny.latency_ms() > 0.1, "tiny {}", tiny.latency_ms());
+        // paper reports orders-of-magnitude trade-off span; with local
+        // fmap buffering our span is >25x (see EXPERIMENTS.md discussion)
+        let span = tiny.latency_ms() / full.latency_ms();
+        assert!(span > 25.0, "span {span}");
+        assert!(full.resources.dsp > 20 * tiny.resources.dsp);
+    }
+
+    #[test]
+    fn balanced_allocation_fits_and_beats_uniform() {
+        let net = zoo::mobilenet_v2();
+        let bal = DesignConfig::balanced(&net, FpRep::Int8, &ZYNQ_7100);
+        let eval = evaluate(&net, &bal, &ZYNQ_7100).unwrap();
+        assert!(eval.fits(&ZYNQ_7100), "balanced must fit the device");
+        let uni =
+            evaluate(&net, &DesignConfig::uniform(&net, 1, FpRep::Int8), &ZYNQ_7100).unwrap();
+        assert!(
+            eval.period_cycles < uni.period_cycles,
+            "balanced {} !< uniform {}",
+            eval.period_cycles,
+            uni.period_cycles
+        );
+    }
+
+    #[test]
+    fn eq14_pe_counts() {
+        let net = zoo::mnist();
+        let cfg = DesignConfig { parallelism: vec![2, 4, 8], rep: FpRep::Int16 };
+        let eval = evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        let conv_pes: Vec<usize> = eval
+            .mappings
+            .iter()
+            .filter(|m| m.name.starts_with("conv"))
+            .map(|m| m.pe_count)
+            .collect();
+        // L(1)=2*1 (1 input channel), L(2)=4*2, L(3)=8*4
+        assert_eq!(conv_pes, vec![2, 8, 32]);
+        assert_eq!(eval.total_pes, 42);
+    }
+
+    #[test]
+    fn serialization_factors() {
+        let net = zoo::mnist();
+        let cfg = DesignConfig { parallelism: vec![1, 1, 1], rep: FpRep::Int16 };
+        let eval = evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        let serials: Vec<usize> = eval
+            .mappings
+            .iter()
+            .filter(|m| m.name.starts_with("conv"))
+            .map(|m| m.serial_factor)
+            .collect();
+        // conv1: 8 filters x 1 ch, conv2: 16 x 8, conv3: 32 x 16
+        assert_eq!(serials, vec![8, 128, 512]);
+    }
+
+    #[test]
+    fn arity_checked() {
+        let net = zoo::mnist();
+        let bad = DesignConfig { parallelism: vec![1, 1], rep: FpRep::Int8 };
+        assert!(matches!(
+            evaluate(&net, &bad, &ZYNQ_7100),
+            Err(DesignError::ArityMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let net = zoo::mnist();
+        let bad = DesignConfig { parallelism: vec![9, 1, 1], rep: FpRep::Int8 };
+        assert!(matches!(
+            evaluate(&net, &bad, &ZYNQ_7100),
+            Err(DesignError::OutOfBounds { .. })
+        ));
+        let zero = DesignConfig { parallelism: vec![0, 1, 1], rep: FpRep::Int8 };
+        assert!(evaluate(&net, &zero, &ZYNQ_7100).is_err());
+    }
+
+    #[test]
+    fn int8_uses_less_bram_on_wide_frames() {
+        let net = zoo::yolov5l();
+        let cfg8 = DesignConfig::uniform(&net, 2, FpRep::Int8);
+        let cfg16 = DesignConfig::uniform(&net, 2, FpRep::Int16);
+        let r8 = evaluate(&net, &cfg8, &ZYNQ_7100).unwrap().resources.bram;
+        let r16 = evaluate(&net, &cfg16, &ZYNQ_7100).unwrap().resources.bram;
+        assert!(r8 < r16, "{r8} vs {r16}");
+    }
+
+    #[test]
+    fn monotone_latency_in_parallelism() {
+        let net = zoo::cifar10();
+        let mut prev = f64::INFINITY;
+        for p in [1, 2, 4, 8, 16] {
+            let eval =
+                evaluate(&net, &DesignConfig::uniform(&net, p, FpRep::Int16), &ZYNQ_7100).unwrap();
+            assert!(eval.latency_ms() <= prev + 1e-9, "p={p}");
+            prev = eval.latency_ms();
+        }
+    }
+
+    #[test]
+    fn fps_consistent_with_period() {
+        let net = zoo::mnist();
+        let eval = evaluate(&net, &DesignConfig::full(&net, FpRep::Int8), &ZYNQ_7100).unwrap();
+        let fps = eval.fps();
+        assert!((fps - 250e6 / eval.period_cycles as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residual_nets_evaluate() {
+        let net = zoo::resnet50();
+        let cfg = DesignConfig::uniform(&net, 4, FpRep::Int8);
+        let eval = evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        assert!(eval.resources.dsp > 0);
+        assert!(eval.latency_ms() > 0.0);
+    }
+
+    #[test]
+    fn fast_eval_matches_full() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        for net in [zoo::mnist(), zoo::svhn(), zoo::cifar10(), zoo::mobilenet_v2()] {
+            let ev = Evaluator::new(&net, &ZYNQ_7100).unwrap();
+            let bounds = net.conv_filter_bounds();
+            for _ in 0..25 {
+                let parallelism: Vec<usize> =
+                    bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect();
+                let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };
+                let cfg = DesignConfig { parallelism: parallelism.clone(), rep };
+                let full = evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+                let fast = ev.objectives(&parallelism, rep).unwrap();
+                assert_eq!(fast.resources, full.resources, "{} {:?}", net.name, cfg);
+                assert_eq!(fast.total_pes, full.total_pes);
+                assert_eq!(fast.latency_cycles, full.latency_cycles);
+                assert_eq!(fast.period_cycles, full.period_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_eval_checks_bounds() {
+        let net = zoo::mnist();
+        let ev = Evaluator::new(&net, &ZYNQ_7100).unwrap();
+        assert!(ev.objectives(&[1, 1], FpRep::Int8).is_err());
+        assert!(ev.objectives(&[0, 1, 1], FpRep::Int8).is_err());
+        assert!(ev.objectives(&[99, 1, 1], FpRep::Int8).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! NeuroForge design space exploration — Sec. III-C, Algorithm 1.
+//!
+//! DSE is posed as multi-objective optimization: minimize inference
+//! latency and resource utilization simultaneously, under user-defined
+//! constraints `[t, DSP, LUT, BRAM]`. The decision vector is the
+//! per-conv-layer parallelism `p(i)` with `1 <= p(i) <= ub(i)`; Eq. 14
+//! expands it to PE allocations `L(i) = p(i) * p(i-1)`.
+//!
+//! The optimizer is an NSGA-II-style MOGA: fast non-dominated sorting,
+//! crowding distance, binary tournament selection, uniform crossover and
+//! Algorithm 1's bounded power-distribution mutation. Evaluation uses the
+//! analytical models only (microseconds per candidate — no synthesis in
+//! the loop), which is the paper's core speed claim over DNNBuilder-style
+//! flows.
+
+pub mod nsga2;
+pub mod roofline;
+
+use crate::design::{self, DesignConfig};
+use crate::graph::Network;
+use crate::pe::{Device, FpRep};
+use crate::util::rng::Rng;
+
+/// User constraints (Algorithm 1's `constraints [t, DSP, LUT, BRAM]`).
+#[derive(Debug, Clone, Copy)]
+pub struct Constraints {
+    /// max latency, ms (None = unconstrained)
+    pub latency_ms: Option<f64>,
+    pub dsp: Option<usize>,
+    pub lut: Option<usize>,
+    pub bram: Option<usize>,
+}
+
+impl Constraints {
+    pub fn none() -> Constraints {
+        Constraints { latency_ms: None, dsp: None, lut: None, bram: None }
+    }
+
+    /// Constrain to a device's full budget.
+    pub fn device(dev: &Device) -> Constraints {
+        Constraints {
+            latency_ms: None,
+            dsp: Some(dev.budget.dsp),
+            lut: Some(dev.budget.lut),
+            bram: Some(dev.budget.bram),
+        }
+    }
+
+    /// Total constraint violation (0 = feasible); used for
+    /// feasibility-first dominance.
+    pub fn violation(&self, obj: &Objectives) -> f64 {
+        let mut v = 0.0;
+        if let Some(t) = self.latency_ms {
+            v += ((obj.latency_ms - t) / t).max(0.0);
+        }
+        if let Some(d) = self.dsp {
+            v += ((obj.dsp as f64 - d as f64) / d as f64).max(0.0);
+        }
+        if let Some(l) = self.lut {
+            v += ((obj.lut as f64 - l as f64) / l as f64).max(0.0);
+        }
+        if let Some(b) = self.bram {
+            v += ((obj.bram as f64 - b as f64) / b as f64).max(0.0);
+        }
+        v
+    }
+}
+
+/// Objective vector `Y = {Y_t, Y_DSP, Y_LUT, Y_BRAM}` (Alg. 1 output).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    pub latency_ms: f64,
+    pub dsp: usize,
+    pub lut: usize,
+    pub bram: usize,
+    /// "Design PEs" (Table III indicator column)
+    pub total_pes: usize,
+}
+
+impl Objectives {
+    /// Pareto dominance on the optimized pair (latency, DSP) — the paper
+    /// optimizes DSP against latency and constraint-checks the rest.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let no_worse = self.latency_ms <= other.latency_ms && self.dsp <= other.dsp;
+        let better = self.latency_ms < other.latency_ms || self.dsp < other.dsp;
+        no_worse && better
+    }
+}
+
+/// One evaluated individual.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub config: DesignConfig,
+    pub objectives: Objectives,
+    pub violation: f64,
+}
+
+/// DSE hyperparameters.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    /// power-distribution exponent for mutation step sizes (Alg. 1)
+    pub mutation_power: f64,
+    pub rep: FpRep,
+    pub constraints: Constraints,
+    pub seed: u64,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            population: 96,
+            generations: 60,
+            crossover_rate: 0.9,
+            mutation_rate: 0.25,
+            mutation_power: 3.0,
+            rep: FpRep::Int16,
+            constraints: Constraints::none(),
+            seed: 0,
+        }
+    }
+}
+
+/// DSE outcome: the non-dominated feasible set plus search telemetry.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    /// Pareto-optimal feasible candidates, sorted by latency ascending
+    pub pareto: Vec<Candidate>,
+    /// every evaluated (latency, dsp) pair — the Fig. 2 scatter
+    pub evaluated: Vec<(f64, usize)>,
+    /// per-generation best latency (convergence telemetry)
+    pub best_latency_per_gen: Vec<f64>,
+    pub evaluations: usize,
+}
+
+/// Evaluate one chromosome into a Candidate (one-shot convenience; the
+/// MOGA loop uses the allocation-free [`design::Evaluator`] fast path).
+pub fn evaluate_candidate(
+    net: &Network,
+    parallelism: Vec<usize>,
+    rep: FpRep,
+    device: &Device,
+    constraints: &Constraints,
+) -> Candidate {
+    let evaluator = design::Evaluator::new(net, device).expect("valid network");
+    evaluate_with(&evaluator, parallelism, rep, constraints)
+}
+
+/// Fitness via a prebuilt evaluator — the DSE inner-loop fast path
+/// (§Perf: ~5x over rebuilding shape inference per candidate).
+pub fn evaluate_with(
+    evaluator: &design::Evaluator,
+    parallelism: Vec<usize>,
+    rep: FpRep,
+    constraints: &Constraints,
+) -> Candidate {
+    let fast = evaluator
+        .objectives(&parallelism, rep)
+        .expect("chromosome respects bounds by construction");
+    let objectives = Objectives {
+        latency_ms: evaluator.latency_ms(&fast),
+        dsp: fast.resources.dsp,
+        lut: fast.resources.lut,
+        bram: fast.resources.bram,
+        total_pes: fast.total_pes,
+    };
+    let violation = constraints.violation(&objectives);
+    Candidate { config: DesignConfig { parallelism, rep }, objectives, violation }
+}
+
+/// Run the MOGA (Algorithm 1).
+pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
+    let bounds = net.conv_filter_bounds();
+    assert!(!bounds.is_empty(), "network has no conv layers to map");
+    let evaluator = design::Evaluator::new(net, device).expect("valid network");
+    let mut rng = Rng::new(cfg.seed);
+
+    // ODE_config <- Initialize(l): seed the population with a spread of
+    // uniform parallelism levels plus random vectors, so both extremes of
+    // the front are reachable from generation 0.
+    let mut pop: Vec<Candidate> = Vec::with_capacity(cfg.population);
+    for i in 0..cfg.population {
+        let genes: Vec<usize> = if i < 8 {
+            // ladder of uniform levels 1, 2, 4, 8, ...
+            let level = 1usize << i.min(7);
+            bounds.iter().map(|&ub| level.min(ub)).collect()
+        } else {
+            bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect()
+        };
+        pop.push(evaluate_with(&evaluator, genes, cfg.rep, &cfg.constraints));
+    }
+
+    let mut evaluated: Vec<(f64, usize)> =
+        pop.iter().map(|c| (c.objectives.latency_ms, c.objectives.dsp)).collect();
+    let mut best_latency_per_gen = Vec::with_capacity(cfg.generations);
+    let mut evaluations = pop.len();
+
+    for _gen in 0..cfg.generations {
+        // offspring via tournament + crossover + Alg.1 mutation
+        let mut offspring = Vec::with_capacity(cfg.population);
+        while offspring.len() < cfg.population {
+            let a = nsga2::tournament(&pop, &mut rng);
+            let b = nsga2::tournament(&pop, &mut rng);
+            let (mut g1, mut g2) = crossover(
+                &pop[a].config.parallelism,
+                &pop[b].config.parallelism,
+                cfg.crossover_rate,
+                &mut rng,
+            );
+            mutate(&mut g1, &bounds, cfg, &mut rng);
+            mutate(&mut g2, &bounds, cfg, &mut rng);
+            offspring.push(evaluate_with(&evaluator, g1, cfg.rep, &cfg.constraints));
+            if offspring.len() < cfg.population {
+                offspring.push(evaluate_with(&evaluator, g2, cfg.rep, &cfg.constraints));
+            }
+        }
+        evaluations += offspring.len();
+        evaluated
+            .extend(offspring.iter().map(|c| (c.objectives.latency_ms, c.objectives.dsp)));
+
+        // elitist (mu + lambda) environmental selection
+        pop.extend(offspring);
+        pop = nsga2::select(pop, cfg.population);
+
+        let best = pop
+            .iter()
+            .filter(|c| c.violation == 0.0)
+            .map(|c| c.objectives.latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        best_latency_per_gen.push(best);
+    }
+
+    // final front: feasible, non-dominated, deduped by chromosome
+    let feasible: Vec<Candidate> =
+        pop.iter().filter(|c| c.violation == 0.0).cloned().collect();
+    let mut pareto = nsga2::non_dominated(&feasible);
+    pareto.sort_by(|a, b| {
+        a.objectives
+            .latency_ms
+            .partial_cmp(&b.objectives.latency_ms)
+            .unwrap()
+            .then(a.objectives.dsp.cmp(&b.objectives.dsp))
+    });
+    pareto.dedup_by(|a, b| a.config.parallelism == b.config.parallelism);
+
+    DseResult { pareto, evaluated, best_latency_per_gen, evaluations }
+}
+
+/// Uniform crossover on the parallelism vector.
+fn crossover(
+    a: &[usize],
+    b: &[usize],
+    rate: f64,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<usize>) {
+    if !rng.chance(rate) {
+        return (a.to_vec(), b.to_vec());
+    }
+    let mut g1 = Vec::with_capacity(a.len());
+    let mut g2 = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        if rng.chance(0.5) {
+            g1.push(a[i]);
+            g2.push(b[i]);
+        } else {
+            g1.push(b[i]);
+            g2.push(a[i]);
+        }
+    }
+    (g1, g2)
+}
+
+/// Algorithm 1 mutation: step toward a bound scaled by a power-distributed
+/// random `s`:
+/// `x <- x - s*(x - lb)` if `t < r` else `x <- x + s*(ub - x)`.
+fn mutate(genes: &mut [usize], bounds: &[usize], cfg: &DseConfig, rng: &mut Rng) {
+    for (i, g) in genes.iter_mut().enumerate() {
+        if !rng.chance(cfg.mutation_rate) {
+            continue;
+        }
+        let lb = 1.0;
+        let ub = bounds[i] as f64;
+        let x = *g as f64;
+        let s = rng.power(cfg.mutation_power);
+        // t: scaled distance from the lower bound; r ~ U(0,1)
+        let t = if ub > lb { (x - lb) / (ub - lb) } else { 0.0 };
+        let r = rng.f64();
+        let nx = if t < r { x - s * (x - lb) } else { x + s * (ub - x) };
+        *g = (nx.round() as i64).clamp(1, bounds[i] as i64) as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::pe::ZYNQ_7100;
+
+    fn quick_cfg() -> DseConfig {
+        DseConfig { population: 32, generations: 12, seed: 42, ..DseConfig::default() }
+    }
+
+    #[test]
+    fn finds_nontrivial_front_on_mnist() {
+        let net = zoo::mnist();
+        let res = run(&net, &ZYNQ_7100, &quick_cfg());
+        assert!(res.pareto.len() >= 4, "front size {}", res.pareto.len());
+        // front must span a real latency range (paper: orders of magnitude)
+        let lo = res.pareto.first().unwrap().objectives.latency_ms;
+        let hi = res.pareto.last().unwrap().objectives.latency_ms;
+        assert!(hi / lo > 10.0, "span {}", hi / lo);
+    }
+
+    #[test]
+    fn front_is_mutually_non_dominated() {
+        let net = zoo::mnist();
+        let res = run(&net, &ZYNQ_7100, &quick_cfg());
+        for a in &res.pareto {
+            for b in &res.pareto {
+                assert!(
+                    !a.objectives.dominates(&b.objectives)
+                        || a.config.parallelism == b.config.parallelism,
+                    "{:?} dominates {:?}",
+                    a.objectives,
+                    b.objectives
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constraints_respected() {
+        let net = zoo::mnist();
+        let mut cfg = quick_cfg();
+        cfg.constraints = Constraints {
+            latency_ms: Some(1.0),
+            dsp: Some(600),
+            lut: None,
+            bram: None,
+        };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert!(!res.pareto.is_empty());
+        for c in &res.pareto {
+            assert!(c.objectives.latency_ms <= 1.0, "{:?}", c.objectives);
+            assert!(c.objectives.dsp <= 600, "{:?}", c.objectives);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let net = zoo::mnist();
+        let a = run(&net, &ZYNQ_7100, &quick_cfg());
+        let b = run(&net, &ZYNQ_7100, &quick_cfg());
+        assert_eq!(a.pareto.len(), b.pareto.len());
+        for (x, y) in a.pareto.iter().zip(&b.pareto) {
+            assert_eq!(x.config.parallelism, y.config.parallelism);
+        }
+    }
+
+    #[test]
+    fn convergence_monotone_enough() {
+        let net = zoo::cifar10();
+        let res = run(&net, &ZYNQ_7100, &quick_cfg());
+        let first = res.best_latency_per_gen.first().copied().unwrap();
+        let last = res.best_latency_per_gen.last().copied().unwrap();
+        assert!(last <= first, "search regressed: {first} -> {last}");
+    }
+
+    #[test]
+    fn dominance_definition() {
+        let a = Objectives { latency_ms: 1.0, dsp: 100, lut: 0, bram: 0, total_pes: 0 };
+        let b = Objectives { latency_ms: 2.0, dsp: 200, lut: 0, bram: 0, total_pes: 0 };
+        let c = Objectives { latency_ms: 0.5, dsp: 300, lut: 0, bram: 0, total_pes: 0 };
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&c) && !c.dominates(&a));
+        assert!(!a.dominates(&a));
+    }
+
+    #[test]
+    fn violation_math() {
+        let cons = Constraints { latency_ms: Some(1.0), dsp: Some(100), lut: None, bram: None };
+        let ok = Objectives { latency_ms: 0.9, dsp: 100, lut: 0, bram: 0, total_pes: 0 };
+        let bad = Objectives { latency_ms: 2.0, dsp: 150, lut: 0, bram: 0, total_pes: 0 };
+        assert_eq!(cons.violation(&ok), 0.0);
+        assert!((cons.violation(&bad) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mutation_respects_bounds() {
+        let bounds = vec![8, 16, 32];
+        let cfg = DseConfig { mutation_rate: 1.0, ..DseConfig::default() };
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let mut genes = vec![4, 9, 20];
+            mutate(&mut genes, &bounds, &cfg, &mut rng);
+            for (g, ub) in genes.iter().zip(&bounds) {
+                assert!(*g >= 1 && g <= ub, "gene {g} bound {ub}");
+            }
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! NSGA-II machinery: fast non-dominated sort, crowding distance,
+//! feasibility-first tournament, and elitist environmental selection.
+//!
+//! Reference: Deb et al., "A Fast and Elitist Multiobjective Genetic
+//! Algorithm: NSGA-II" — the standard realization of the multi-objective
+//! GA Algorithm 1 sketches.
+
+use super::Candidate;
+use crate::util::rng::Rng;
+
+/// Feasibility-first comparison: a feasible candidate beats an infeasible
+/// one; two infeasible compare by violation; two feasible by dominance.
+fn beats(a: &Candidate, b: &Candidate) -> bool {
+    if a.violation == 0.0 && b.violation > 0.0 {
+        return true;
+    }
+    if a.violation > 0.0 && b.violation > 0.0 {
+        return a.violation < b.violation;
+    }
+    if a.violation > 0.0 {
+        return false;
+    }
+    a.objectives.dominates(&b.objectives)
+}
+
+/// Fast non-dominated sort: returns fronts as index vectors, best first.
+///
+/// §Perf: the O(n^2) comparison loop runs on a flat `(violation,
+/// latency, dsp)` scratch array instead of chasing `Candidate` structs —
+/// the comparisons are the DSE generation step's hottest code.
+pub fn sort_fronts(pop: &[Candidate]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    // flat objective scratch: cache-friendly for the n^2 sweep
+    let key: Vec<(f64, f64, f64)> = pop
+        .iter()
+        .map(|c| (c.violation, c.objectives.latency_ms, c.objectives.dsp as f64))
+        .collect();
+    #[inline(always)]
+    fn beats_flat(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
+        if a.0 == 0.0 && b.0 > 0.0 {
+            return true;
+        }
+        if a.0 > 0.0 {
+            return a.0 < b.0 && b.0 > 0.0;
+        }
+        a.1 <= b.1 && a.2 <= b.2 && (a.1 < b.1 || a.2 < b.2)
+    }
+
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n]; // how many dominate i
+    for i in 0..n {
+        let ki = key[i];
+        for j in (i + 1)..n {
+            let kj = key[j];
+            if beats_flat(ki, kj) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if beats_flat(kj, ki) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of one front (on latency and DSP).
+pub fn crowding(pop: &[Candidate], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    // latency axis
+    for axis in 0..2 {
+        let key = |i: usize| -> f64 {
+            let o = &pop[front[i]].objectives;
+            if axis == 0 {
+                o.latency_ms
+            } else {
+                o.dsp as f64
+            }
+        };
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+        let lo = key(order[0]);
+        let hi = key(order[m - 1]);
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        if hi > lo {
+            for w in 1..m - 1 {
+                dist[order[w]] += (key(order[w + 1]) - key(order[w - 1])) / (hi - lo);
+            }
+        }
+    }
+    dist
+}
+
+/// Binary tournament: rank (front index) first, then crowding distance.
+/// Returns the index of the winner within `pop`.
+pub fn tournament(pop: &[Candidate], rng: &mut Rng) -> usize {
+    let a = rng.below(pop.len());
+    let b = rng.below(pop.len());
+    if beats(&pop[a], &pop[b]) {
+        a
+    } else if beats(&pop[b], &pop[a]) {
+        b
+    } else if rng.chance(0.5) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Elitist (mu+lambda) environmental selection down to `target` members.
+pub fn select(pop: Vec<Candidate>, target: usize) -> Vec<Candidate> {
+    if pop.len() <= target {
+        return pop;
+    }
+    let fronts = sort_fronts(&pop);
+    let mut keep: Vec<usize> = Vec::with_capacity(target);
+    for front in fronts {
+        if keep.len() + front.len() <= target {
+            keep.extend(front);
+            if keep.len() == target {
+                break;
+            }
+        } else {
+            // partial front: take the most crowded-distant members
+            let d = crowding(&pop, &front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            for &w in order.iter().take(target - keep.len()) {
+                keep.push(front[w]);
+            }
+            break;
+        }
+    }
+    let mut out = Vec::with_capacity(target);
+    let mut taken = vec![false; pop.len()];
+    for i in keep {
+        taken[i] = true;
+    }
+    for (i, c) in pop.into_iter().enumerate() {
+        if taken[i] {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// The non-dominated subset of a candidate list (first front only).
+pub fn non_dominated(pop: &[Candidate]) -> Vec<Candidate> {
+    if pop.is_empty() {
+        return Vec::new();
+    }
+    sort_fronts(pop)
+        .into_iter()
+        .next()
+        .unwrap()
+        .into_iter()
+        .map(|i| pop[i].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::DesignConfig;
+    use crate::dse::Objectives;
+    use crate::pe::FpRep;
+
+    fn cand(lat: f64, dsp: usize, viol: f64) -> Candidate {
+        Candidate {
+            config: DesignConfig { parallelism: vec![1], rep: FpRep::Int16 },
+            objectives: Objectives { latency_ms: lat, dsp, lut: 0, bram: 0, total_pes: 0 },
+            violation: viol,
+        }
+    }
+
+    #[test]
+    fn fronts_ordered_by_dominance() {
+        let pop = vec![
+            cand(1.0, 100, 0.0), // front 0
+            cand(2.0, 50, 0.0),  // front 0 (trade-off)
+            cand(2.0, 100, 0.0), // dominated by both
+            cand(3.0, 200, 0.0), // dominated deeper
+        ];
+        let fronts = sort_fronts(&pop);
+        assert_eq!(fronts[0], vec![0, 1]);
+        assert!(fronts[1].contains(&2));
+    }
+
+    #[test]
+    fn infeasible_always_loses() {
+        let pop = vec![cand(0.1, 1, 1.0), cand(9.0, 900, 0.0)];
+        let fronts = sort_fronts(&pop);
+        assert_eq!(fronts[0], vec![1]);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let pop = vec![
+            cand(1.0, 300, 0.0),
+            cand(2.0, 200, 0.0),
+            cand(3.0, 100, 0.0),
+        ];
+        let d = crowding(&pop, &[0, 1, 2]);
+        assert!(d[0].is_infinite());
+        assert!(d[2].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn select_keeps_first_front() {
+        let pop = vec![
+            cand(1.0, 100, 0.0),
+            cand(2.0, 50, 0.0),
+            cand(5.0, 500, 0.0),
+            cand(6.0, 600, 0.0),
+        ];
+        let kept = select(pop, 2);
+        assert_eq!(kept.len(), 2);
+        let lats: Vec<f64> = kept.iter().map(|c| c.objectives.latency_ms).collect();
+        assert!(lats.contains(&1.0) && lats.contains(&2.0));
+    }
+
+    #[test]
+    fn non_dominated_extraction() {
+        let pop = vec![cand(1.0, 100, 0.0), cand(0.5, 200, 0.0), cand(1.5, 150, 0.0)];
+        let front = non_dominated(&pop);
+        assert_eq!(front.len(), 2);
+    }
+
+    #[test]
+    fn select_noop_when_small() {
+        let pop = vec![cand(1.0, 1, 0.0)];
+        assert_eq!(select(pop, 5).len(), 1);
+    }
+}

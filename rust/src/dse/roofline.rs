@@ -1,0 +1,202 @@
+//! Roofline-model baseline (the "conventional approach" of Sec. III-C).
+//!
+//! The paper contrasts NeuroForge's MOGA with Roofline Models (RLM,
+//! [Siracusa et al.]): RLM gives a high-level bound on achievable
+//! throughput from compute vs bandwidth ceilings but "does not generate
+//! concrete configurations". We implement it as the comparison baseline:
+//!
+//! * [`roofline_bound`] — the device's performance ceiling for a network
+//!   (MACs/s limited by DSP compute or line-buffer bandwidth);
+//! * [`roofline_allocate`] — the standard RLM-guided heuristic: assign
+//!   parallelism proportional to each layer's MAC share (compute-balance
+//!   heuristic), then clip to the budget.
+//!
+//! The ablation bench shows the MOGA dominates this allocation on the
+//! latency/DSP plane — the paper's motivation for searching.
+
+use crate::design::{self, DesignConfig};
+use crate::graph::{shapes, LayerKind, Network};
+use crate::pe::{Device, FpRep};
+
+/// Performance ceilings for one network on one device.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// peak MAC/s from the DSP array (compute roof)
+    pub compute_macs_per_s: f64,
+    /// peak element/s the streaming interface sustains (bandwidth roof)
+    pub stream_elems_per_s: f64,
+    /// frame MACs of the workload
+    pub frame_macs: f64,
+    /// frame elements streamed in
+    pub frame_elems: f64,
+}
+
+impl Roofline {
+    /// Upper bound on achievable FPS: min of compute- and stream-bound.
+    pub fn fps_bound(&self) -> f64 {
+        let compute = self.compute_macs_per_s / self.frame_macs;
+        let stream = self.stream_elems_per_s / self.frame_elems;
+        compute.min(stream)
+    }
+
+    /// Arithmetic intensity (MACs per streamed element).
+    pub fn intensity(&self) -> f64 {
+        self.frame_macs / self.frame_elems
+    }
+
+    /// True if the workload is compute-bound on this device.
+    pub fn compute_bound(&self) -> bool {
+        self.compute_macs_per_s / self.frame_macs
+            <= self.stream_elems_per_s / self.frame_elems
+    }
+}
+
+/// Compute the roofline for a network/device/precision.
+pub fn roofline_bound(net: &Network, device: &Device, rep: FpRep) -> Roofline {
+    let macs = net.count_macs().expect("valid net") as f64;
+    let (h, w, c) = net.input_dims();
+    // each DSP does one MAC/cycle (two when int8-packed)
+    let simd = if rep == FpRep::Int8 { 2.0 } else { 1.0 };
+    Roofline {
+        compute_macs_per_s: device.budget.dsp as f64 * simd * device.clock_mhz * 1e6,
+        stream_elems_per_s: device.clock_mhz * 1e6, // one pixel/clock interface
+        frame_macs: macs,
+        frame_elems: (h * w * c) as f64,
+    }
+}
+
+/// RLM-guided allocation: parallelism proportional to per-layer MAC share
+/// under the DSP budget. This is the deterministic heuristic NeuroForge's
+/// MOGA is benchmarked against.
+pub fn roofline_allocate(net: &Network, device: &Device, rep: FpRep) -> DesignConfig {
+    let shp = shapes::infer(net).expect("valid net");
+    let bounds = net.conv_filter_bounds();
+    // per-conv-layer MAC counts
+    let mut layer_macs: Vec<f64> = Vec::with_capacity(bounds.len());
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Conv { k, .. } => {
+                let out = shp.output(layer.id);
+                let cin = shp.input_channels(layer.id);
+                layer_macs.push((out.h * out.w * out.c * k * k * cin) as f64);
+            }
+            LayerKind::DwConv { k, .. } => {
+                let out = shp.output(layer.id);
+                layer_macs.push((out.h * out.w * out.c * k * k) as f64);
+            }
+            _ => {}
+        }
+    }
+    let total: f64 = layer_macs.iter().sum();
+
+    // start from the proportional share, then shrink uniformly until the
+    // full design fits the device
+    let mut scale = 1.0f64;
+    loop {
+        let parallelism: Vec<usize> = layer_macs
+            .iter()
+            .zip(&bounds)
+            .map(|(&m, &ub)| {
+                let share = m / total;
+                let p = (share * device.budget.dsp as f64 * scale / 9.0).round() as usize;
+                p.clamp(1, ub)
+            })
+            .collect();
+        let cfg = DesignConfig { parallelism, rep };
+        if let Ok(eval) = design::evaluate(net, &cfg, device) {
+            if eval.fits(device) {
+                return cfg;
+            }
+        }
+        scale *= 0.8;
+        if scale < 1e-3 {
+            return DesignConfig::uniform(net, 1, rep);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::pe::ZYNQ_7100;
+
+    #[test]
+    fn fps_bound_is_min_of_roofs() {
+        let net = zoo::mnist();
+        let r = roofline_bound(&net, &ZYNQ_7100, FpRep::Int16);
+        assert!(r.fps_bound() > 0.0);
+        let by_compute = r.compute_macs_per_s / r.frame_macs;
+        let by_stream = r.stream_elems_per_s / r.frame_elems;
+        assert!((r.fps_bound() - by_compute.min(by_stream)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_doubles_compute_roof() {
+        let net = zoo::mnist();
+        let r16 = roofline_bound(&net, &ZYNQ_7100, FpRep::Int16);
+        let r8 = roofline_bound(&net, &ZYNQ_7100, FpRep::Int8);
+        assert!((r8.compute_macs_per_s / r16.compute_macs_per_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mnist_is_stream_bound() {
+        // tiny model, huge DSP array: the pixel interface is the roof
+        let net = zoo::mnist();
+        let r = roofline_bound(&net, &ZYNQ_7100, FpRep::Int16);
+        assert!(!r.compute_bound());
+    }
+
+    #[test]
+    fn resnet_is_compute_bound() {
+        let net = zoo::resnet50();
+        let r = roofline_bound(&net, &ZYNQ_7100, FpRep::Int16);
+        assert!(r.compute_bound());
+        assert!(r.intensity() > 20.0);
+    }
+
+    #[test]
+    fn allocation_fits_device() {
+        for name in ["mnist", "cifar10", "mobilenetv2"] {
+            let net = zoo::by_name(name).unwrap();
+            let cfg = roofline_allocate(&net, &ZYNQ_7100, FpRep::Int8);
+            let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+            assert!(eval.fits(&ZYNQ_7100), "{name}");
+        }
+    }
+
+    #[test]
+    fn simulated_fps_below_roofline() {
+        // no mapping may beat the roofline bound — a model-consistency check
+        let net = zoo::mnist();
+        let r = roofline_bound(&net, &ZYNQ_7100, FpRep::Int16);
+        let cfg = DesignConfig::full(&net, FpRep::Int16);
+        let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        assert!(eval.fps() <= r.fps_bound() * 1.05, "{} > {}", eval.fps(), r.fps_bound());
+    }
+
+    #[test]
+    fn moga_dominates_roofline_heuristic() {
+        // the paper's argument for searching: the RLM heuristic is a
+        // single point; the MOGA front contains a point at least as good
+        let net = zoo::mnist();
+        let rl_cfg = roofline_allocate(&net, &ZYNQ_7100, FpRep::Int16);
+        let rl = design::evaluate(&net, &rl_cfg, &ZYNQ_7100).unwrap();
+        let res = crate::dse::run(
+            &net,
+            &ZYNQ_7100,
+            &crate::dse::DseConfig {
+                population: 48,
+                generations: 20,
+                seed: 2,
+                constraints: crate::dse::Constraints::device(&ZYNQ_7100),
+                ..crate::dse::DseConfig::default()
+            },
+        );
+        let dominated = res.pareto.iter().any(|c| {
+            c.objectives.latency_ms <= rl.latency_ms() * 1.0001
+                && c.objectives.dsp <= rl.resources.dsp
+        });
+        assert!(dominated, "no front point matches the roofline allocation");
+    }
+}

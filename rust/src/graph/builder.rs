@@ -1,0 +1,142 @@
+//! Programmatic network construction (the "from high-level specification"
+//! entry point; the JSON descriptor parser builds on the same API).
+
+use super::{Layer, LayerKind, Network, Padding};
+
+/// Fluent builder producing a validated [`Network`].
+pub struct NetworkBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    connections: Vec<(usize, usize)>,
+    /// id of the most recently appended layer (chain tail)
+    tail: usize,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        NetworkBuilder {
+            name: name.to_string(),
+            layers: vec![Layer {
+                id: 0,
+                name: "input".into(),
+                kind: LayerKind::Input { h, w, c },
+            }],
+            connections: Vec::new(),
+            tail: 0,
+        }
+    }
+
+    fn push(&mut self, name: String, kind: LayerKind) -> usize {
+        let id = self.layers.len();
+        self.layers.push(Layer { id, name, kind });
+        self.connections.push((self.tail, id));
+        self.tail = id;
+        id
+    }
+
+    pub fn conv(mut self, filters: usize, k: usize, stride: usize, padding: Padding, relu: bool) -> Self {
+        let n = format!("conv{}", self.layers.len());
+        self.push(n, LayerKind::Conv { filters, k, stride, padding, relu });
+        self
+    }
+
+    pub fn dwconv(mut self, k: usize, stride: usize, padding: Padding, relu: bool) -> Self {
+        let n = format!("dwconv{}", self.layers.len());
+        self.push(n, LayerKind::DwConv { k, stride, padding, relu });
+        self
+    }
+
+    pub fn maxpool(mut self, k: usize, stride: usize) -> Self {
+        let n = format!("maxpool{}", self.layers.len());
+        self.push(n, LayerKind::MaxPool { k, stride });
+        self
+    }
+
+    pub fn avgpool(mut self, k: usize, stride: usize) -> Self {
+        let n = format!("avgpool{}", self.layers.len());
+        self.push(n, LayerKind::AvgPool { k, stride });
+        self
+    }
+
+    pub fn global_avg_pool(mut self) -> Self {
+        let n = format!("gap{}", self.layers.len());
+        self.push(n, LayerKind::GlobalAvgPool);
+        self
+    }
+
+    pub fn fc(mut self, out: usize, relu: bool) -> Self {
+        let n = format!("fc{}", self.layers.len());
+        self.push(n, LayerKind::Fc { out, relu });
+        self
+    }
+
+    pub fn softmax(mut self) -> Self {
+        let n = format!("softmax{}", self.layers.len());
+        self.push(n, LayerKind::Softmax);
+        self
+    }
+
+    /// Mark the current tail as the start of a residual block; returns a
+    /// token to merge later with [`Self::residual_add`].
+    pub fn fork(&self) -> usize {
+        self.tail
+    }
+
+    /// Merge the current chain with the skip edge from `fork` (the paper's
+    /// convergence point, synthesized as a ResidualAdd arithmetic unit).
+    pub fn residual_add(mut self, fork: usize) -> Self {
+        let n = format!("resadd{}", self.layers.len());
+        let id = self.push(n, LayerKind::ResidualAdd { from: fork });
+        self.connections.push((fork, id));
+        self
+    }
+
+    pub fn build(self) -> Network {
+        let net = self.build_unchecked();
+        debug_assert!(net.validate().is_ok(), "builder produced invalid net");
+        net
+    }
+
+    /// Build without validation — for tests that construct intentionally
+    /// malformed graphs to exercise error paths.
+    pub fn build_unchecked(self) -> Network {
+        Network {
+            name: self.name,
+            layers: self.layers,
+            connections: self.connections,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_block_wiring() {
+        let mut b = NetworkBuilder::new("res", 16, 16, 8);
+        b = b.conv(8, 3, 1, Padding::Same, true);
+        let fork = b.fork();
+        b = b
+            .conv(8, 3, 1, Padding::Same, true)
+            .conv(8, 3, 1, Padding::Same, false)
+            .residual_add(fork);
+        let net = b.build();
+        assert!(net.is_residual());
+        assert!(net.validate().is_ok());
+        // skip edge present
+        let merge = net.layers.last().unwrap().id;
+        assert!(net.connections.contains(&(fork, merge)));
+    }
+
+    #[test]
+    fn names_unique() {
+        let net = NetworkBuilder::new("x", 8, 8, 1)
+            .conv(2, 3, 1, Padding::Same, true)
+            .conv(2, 3, 1, Padding::Same, true)
+            .build();
+        let names: std::collections::BTreeSet<_> =
+            net.layers.iter().map(|l| l.name.clone()).collect();
+        assert_eq!(names.len(), net.layers.len());
+    }
+}

@@ -1,0 +1,237 @@
+//! CNN graph IR — the input language of NeuroForge (Sec. III-A).
+//!
+//! The parser/builder produce a [`Network`]: an ordered layer list plus a
+//! connection table. Sequential CNNs are strict chains; residual
+//! architectures add skip edges that converge in [`LayerKind::ResidualAdd`]
+//! layers (the paper fuses main/shortcut paths into modular blocks based
+//! on graph connectivity).
+
+pub mod builder;
+pub mod parser;
+pub mod shapes;
+pub mod zoo;
+
+pub use builder::NetworkBuilder;
+pub use shapes::{FeatureShape, ShapeError};
+
+/// Spatial padding mode of a conv layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// One node of the network graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Source of the streaming pipeline: frame dimensions.
+    Input { h: usize, w: usize, c: usize },
+    /// Standard convolution (maps to a C_PE array).
+    Conv {
+        filters: usize,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        relu: bool,
+    },
+    /// Depthwise convolution (MobileNet-style; one filter per channel).
+    DwConv { k: usize, stride: usize, padding: Padding, relu: bool },
+    /// Max pooling (PU_PE with comparator tree).
+    MaxPool { k: usize, stride: usize },
+    /// Average pooling (PU_PE with fixed coefficients).
+    AvgPool { k: usize, stride: usize },
+    /// Global average pooling to a vector.
+    GlobalAvgPool,
+    /// Fully connected layer (FC_PE bank).
+    Fc { out: usize, relu: bool },
+    /// Element-wise addition merging a skip edge from `from` (layer id).
+    ResidualAdd { from: usize },
+    /// Final classifier non-linearity (optional, streamed inline).
+    Softmax,
+}
+
+/// A layer instance with identity and kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// A parsed network: layers in topological (stream) order plus the
+/// connection table (src -> dst layer ids). For sequential models the
+/// table is the chain `(i, i+1)`; residual models add skip edges.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub connections: Vec<(usize, usize)>,
+}
+
+impl Network {
+    /// The input layer dimensions. Panics if the network is malformed
+    /// (builder/parser guarantee layer 0 is `Input`).
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        match self.layers[0].kind {
+            LayerKind::Input { h, w, c } => (h, w, c),
+            _ => unreachable!("layer 0 is always Input"),
+        }
+    }
+
+    /// Ids of conv-like layers (the DSE decision variables map onto these).
+    pub fn conv_layer_ids(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. } | LayerKind::DwConv { .. }))
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Per-conv-layer filter counts — the DSE upper bounds ub(i) (Alg. 1).
+    pub fn conv_filter_bounds(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l.kind {
+                LayerKind::Conv { filters, .. } => Some(filters),
+                LayerKind::DwConv { .. } => Some(1), // one PE lane per channel group
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// True if the network contains skip connections.
+    pub fn is_residual(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| matches!(l.kind, LayerKind::ResidualAdd { .. }))
+    }
+
+    /// Total trainable parameters (weights + biases), following shapes.
+    pub fn count_params(&self) -> Result<usize, ShapeError> {
+        let shapes = shapes::infer(self)?;
+        let mut total = 0usize;
+        for layer in &self.layers {
+            let cin = shapes.input_channels(layer.id);
+            total += match layer.kind {
+                LayerKind::Conv { filters, k, .. } => k * k * cin * filters + filters,
+                LayerKind::DwConv { k, .. } => k * k * cin + cin,
+                LayerKind::Fc { out, .. } => shapes.input_features(layer.id) * out + out,
+                _ => 0,
+            };
+        }
+        Ok(total)
+    }
+
+    /// Total MAC operations for one frame.
+    pub fn count_macs(&self) -> Result<usize, ShapeError> {
+        let shapes = shapes::infer(self)?;
+        let mut total = 0usize;
+        for layer in &self.layers {
+            let out = shapes.output(layer.id);
+            let cin = shapes.input_channels(layer.id);
+            total += match layer.kind {
+                LayerKind::Conv { k, .. } => out.h * out.w * out.c * k * k * cin,
+                LayerKind::DwConv { k, .. } => out.h * out.w * out.c * k * k,
+                LayerKind::Fc { out: o, .. } => shapes.input_features(layer.id) * o,
+                _ => 0,
+            };
+        }
+        Ok(total)
+    }
+
+    /// Validate graph structure: ids contiguous, connections reference
+    /// existing layers, ResidualAdd sources precede their merge point.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("empty network".into());
+        }
+        if !matches!(self.layers[0].kind, LayerKind::Input { .. }) {
+            return Err("first layer must be Input".into());
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.id != i {
+                return Err(format!("layer {i} has id {}", l.id));
+            }
+            if i > 0 && matches!(l.kind, LayerKind::Input { .. }) {
+                return Err(format!("layer {i}: Input must be unique/first"));
+            }
+            if let LayerKind::ResidualAdd { from } = l.kind {
+                if from >= i {
+                    return Err(format!(
+                        "layer {i}: residual source {from} must precede the merge"
+                    ));
+                }
+            }
+        }
+        for &(s, d) in &self.connections {
+            if s >= self.layers.len() || d >= self.layers.len() {
+                return Err(format!("connection ({s},{d}) references missing layer"));
+            }
+            if s >= d {
+                return Err(format!("connection ({s},{d}) must be forward"));
+            }
+        }
+        shapes::infer(self).map_err(|e| e.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        NetworkBuilder::new("tiny", 8, 8, 1)
+            .conv(4, 3, 1, Padding::Same, true)
+            .maxpool(2, 2)
+            .fc(10, false)
+            .build()
+    }
+
+    #[test]
+    fn chain_connections() {
+        let n = tiny();
+        assert_eq!(n.connections, vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(n.validate().is_ok());
+        assert!(!n.is_residual());
+    }
+
+    #[test]
+    fn conv_bounds() {
+        let n = tiny();
+        assert_eq!(n.conv_layer_ids(), vec![1]);
+        assert_eq!(n.conv_filter_bounds(), vec![4]);
+    }
+
+    #[test]
+    fn param_count_manual() {
+        let n = tiny();
+        // conv 3*3*1*4+4 = 40 ; fc: 4*4*4=64 feats -> 64*10+10 = 650
+        assert_eq!(n.count_params().unwrap(), 40 + 650);
+    }
+
+    #[test]
+    fn mac_count_manual() {
+        let n = tiny();
+        // conv: 8*8*4*9*1 = 2304 ; fc 64*10 = 640
+        assert_eq!(n.count_macs().unwrap(), 2304 + 640);
+    }
+
+    #[test]
+    fn validation_rejects_bad_residual() {
+        let mut n = tiny();
+        n.layers.push(Layer {
+            id: 4,
+            name: "res".into(),
+            kind: LayerKind::ResidualAdd { from: 9 },
+        });
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_backward_edge() {
+        let mut n = tiny();
+        n.connections.push((3, 1));
+        assert!(n.validate().is_err());
+    }
+}

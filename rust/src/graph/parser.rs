@@ -1,0 +1,216 @@
+//! JSON network-descriptor parser.
+//!
+//! NeuroForge "parses pre-trained network graphs from formats such as
+//! MATLAB, TensorFlow, PyTorch, and ONNX" (Sec. III-A). Offline we accept
+//! a neutral JSON descriptor — the common denominator those exporters
+//! produce — with the same information content: layer list + parameters +
+//! optional explicit connection table for residual topologies.
+//!
+//! ```json
+//! {
+//!   "name": "mnist-8-16-32",
+//!   "input": [28, 28, 1],
+//!   "layers": [
+//!     {"type": "conv", "filters": 8, "k": 3, "stride": 1,
+//!      "padding": "same", "relu": true},
+//!     {"type": "maxpool", "k": 2, "stride": 2},
+//!     {"type": "fc", "out": 10},
+//!     {"type": "residual_add", "from": 1}
+//!   ]
+//! }
+//! ```
+
+use super::{Layer, LayerKind, Network, Padding};
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("descriptor json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("descriptor: {0}")]
+    Schema(String),
+}
+
+fn schema(msg: impl Into<String>) -> ParseError {
+    ParseError::Schema(msg.into())
+}
+
+fn req_usize(obj: &Json, key: &str, ctx: &str) -> Result<usize, ParseError> {
+    obj.get(key)
+        .and_then(Json::as_u64)
+        .map(|u| u as usize)
+        .ok_or_else(|| schema(format!("{ctx}: missing/invalid '{key}'")))
+}
+
+fn opt_usize(obj: &Json, key: &str, default: usize) -> usize {
+    obj.get(key).and_then(Json::as_u64).map(|u| u as usize).unwrap_or(default)
+}
+
+fn opt_bool(obj: &Json, key: &str, default: bool) -> bool {
+    obj.get(key).and_then(Json::as_bool).unwrap_or(default)
+}
+
+fn padding_of(obj: &Json) -> Result<Padding, ParseError> {
+    match obj.get("padding").and_then(Json::as_str).unwrap_or("same") {
+        "same" | "SAME" => Ok(Padding::Same),
+        "valid" | "VALID" => Ok(Padding::Valid),
+        other => Err(schema(format!("unknown padding '{other}'"))),
+    }
+}
+
+/// Parse a network descriptor from JSON text.
+pub fn parse(text: &str) -> Result<Network, ParseError> {
+    let root = Json::parse(text)?;
+    let name = root
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("unnamed")
+        .to_string();
+    let input = root
+        .get("input")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| schema("missing 'input' [h,w,c]"))?;
+    if input.len() != 3 {
+        return Err(schema("'input' must be [h, w, c]"));
+    }
+
+    let mut layers = vec![Layer {
+        id: 0,
+        name: "input".into(),
+        kind: LayerKind::Input { h: input[0], w: input[1], c: input[2] },
+    }];
+    let mut connections = Vec::new();
+
+    let layer_descs = root
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| schema("missing 'layers' array"))?;
+
+    for (idx, desc) in layer_descs.iter().enumerate() {
+        let id = layers.len();
+        let ctx = format!("layers[{idx}]");
+        let ty = desc
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema(format!("{ctx}: missing 'type'")))?;
+        let kind = match ty {
+            "conv" => LayerKind::Conv {
+                filters: req_usize(desc, "filters", &ctx)?,
+                k: req_usize(desc, "k", &ctx)?,
+                stride: opt_usize(desc, "stride", 1),
+                padding: padding_of(desc)?,
+                relu: opt_bool(desc, "relu", true),
+            },
+            "dwconv" => LayerKind::DwConv {
+                k: req_usize(desc, "k", &ctx)?,
+                stride: opt_usize(desc, "stride", 1),
+                padding: padding_of(desc)?,
+                relu: opt_bool(desc, "relu", true),
+            },
+            "maxpool" => LayerKind::MaxPool {
+                k: req_usize(desc, "k", &ctx)?,
+                stride: opt_usize(desc, "stride", req_usize(desc, "k", &ctx)?),
+            },
+            "avgpool" => LayerKind::AvgPool {
+                k: req_usize(desc, "k", &ctx)?,
+                stride: opt_usize(desc, "stride", req_usize(desc, "k", &ctx)?),
+            },
+            "gap" | "global_avg_pool" => LayerKind::GlobalAvgPool,
+            "fc" => LayerKind::Fc {
+                out: req_usize(desc, "out", &ctx)?,
+                relu: opt_bool(desc, "relu", false),
+            },
+            "residual_add" => LayerKind::ResidualAdd {
+                from: req_usize(desc, "from", &ctx)?,
+            },
+            "softmax" => LayerKind::Softmax,
+            other => return Err(schema(format!("{ctx}: unknown type '{other}'"))),
+        };
+        let lname = desc
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{ty}{id}"));
+        connections.push((id - 1, id));
+        if let LayerKind::ResidualAdd { from } = kind {
+            connections.push((from, id));
+        }
+        layers.push(Layer { id, name: lname, kind });
+    }
+
+    let net = Network { name, layers, connections };
+    net.validate().map_err(ParseError::Schema)?;
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MNIST: &str = r#"{
+      "name": "mnist-8-16-32",
+      "input": [28, 28, 1],
+      "layers": [
+        {"type": "conv", "filters": 8, "k": 3},
+        {"type": "maxpool", "k": 2},
+        {"type": "conv", "filters": 16, "k": 3},
+        {"type": "maxpool", "k": 2},
+        {"type": "conv", "filters": 32, "k": 3},
+        {"type": "maxpool", "k": 2},
+        {"type": "fc", "out": 10}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mnist_descriptor() {
+        let net = parse(MNIST).unwrap();
+        assert_eq!(net.name, "mnist-8-16-32");
+        assert_eq!(net.conv_filter_bounds(), vec![8, 16, 32]);
+        assert_eq!(net.layers.len(), 8);
+    }
+
+    #[test]
+    fn parses_residual() {
+        let net = parse(
+            r#"{"name":"r","input":[8,8,4],"layers":[
+                {"type":"conv","filters":4,"k":3},
+                {"type":"conv","filters":4,"k":3},
+                {"type":"residual_add","from":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(net.is_residual());
+        assert!(net.connections.contains(&(1, 3)));
+    }
+
+    #[test]
+    fn missing_field_is_schema_error() {
+        let e = parse(r#"{"name":"x","input":[8,8,1],"layers":[{"type":"conv","k":3}]}"#);
+        assert!(matches!(e, Err(ParseError::Schema(_))));
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let e = parse(r#"{"input":[8,8,1],"layers":[{"type":"lstm"}]}"#);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn invalid_shape_rejected_at_parse() {
+        // 3x3 input cannot take a 4-wide pool
+        let e = parse(r#"{"input":[3,3,1],"layers":[{"type":"maxpool","k":4}]}"#);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn pool_stride_defaults_to_k() {
+        let net = parse(
+            r#"{"input":[8,8,1],"layers":[{"type":"maxpool","k":2}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            net.layers[1].kind,
+            LayerKind::MaxPool { k: 2, stride: 2 }
+        ));
+    }
+}

@@ -1,0 +1,200 @@
+//! Shape inference over the network graph.
+//!
+//! Walks the stream order, tracking the feature-map dimensions each layer
+//! consumes and produces — the parameters (FM_H, FM_W, Ch_D) that feed
+//! the PE latency/resource models (Eqs. 1-11).
+
+use super::{LayerKind, Network, Padding};
+
+/// Feature-map dimensions at one point of the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl FeatureShape {
+    pub fn features(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ShapeError {
+    #[error("layer {id} ({name}): {msg}")]
+    Invalid { id: usize, name: String, msg: String },
+}
+
+/// Result of inference: per-layer input and output shapes.
+#[derive(Debug, Clone)]
+pub struct Shapes {
+    inputs: Vec<FeatureShape>,
+    outputs: Vec<FeatureShape>,
+}
+
+impl Shapes {
+    pub fn input(&self, layer_id: usize) -> FeatureShape {
+        self.inputs[layer_id]
+    }
+
+    pub fn output(&self, layer_id: usize) -> FeatureShape {
+        self.outputs[layer_id]
+    }
+
+    pub fn input_channels(&self, layer_id: usize) -> usize {
+        self.inputs[layer_id].c
+    }
+
+    pub fn input_features(&self, layer_id: usize) -> usize {
+        self.inputs[layer_id].features()
+    }
+
+    /// Final output shape of the network.
+    pub fn final_output(&self) -> FeatureShape {
+        *self.outputs.last().unwrap()
+    }
+}
+
+fn conv_out(size: usize, k: usize, stride: usize, padding: Padding) -> usize {
+    match padding {
+        Padding::Same => size.div_ceil(stride),
+        Padding::Valid => (size.saturating_sub(k)) / stride + 1,
+    }
+}
+
+/// Infer shapes for every layer, validating spatial feasibility.
+pub fn infer(net: &Network) -> Result<Shapes, ShapeError> {
+    let mut inputs = Vec::with_capacity(net.layers.len());
+    let mut outputs: Vec<FeatureShape> = Vec::with_capacity(net.layers.len());
+
+    for layer in &net.layers {
+        let err = |msg: String| ShapeError::Invalid {
+            id: layer.id,
+            name: layer.name.clone(),
+            msg,
+        };
+        let prev = if layer.id == 0 {
+            FeatureShape { h: 0, w: 0, c: 0 }
+        } else {
+            outputs[layer.id - 1]
+        };
+        inputs.push(prev);
+        let out = match layer.kind {
+            LayerKind::Input { h, w, c } => {
+                if h == 0 || w == 0 || c == 0 {
+                    return Err(err("zero input dimension".into()));
+                }
+                FeatureShape { h, w, c }
+            }
+            LayerKind::Conv { filters, k, stride, padding, .. } => {
+                if stride == 0 || k == 0 {
+                    return Err(err("zero kernel/stride".into()));
+                }
+                if padding == Padding::Valid && (prev.h < k || prev.w < k) {
+                    return Err(err(format!(
+                        "frame {}x{} smaller than kernel {k}", prev.h, prev.w
+                    )));
+                }
+                FeatureShape {
+                    h: conv_out(prev.h, k, stride, padding),
+                    w: conv_out(prev.w, k, stride, padding),
+                    c: filters,
+                }
+            }
+            LayerKind::DwConv { k, stride, padding, .. } => {
+                if padding == Padding::Valid && (prev.h < k || prev.w < k) {
+                    return Err(err("frame smaller than kernel".into()));
+                }
+                FeatureShape {
+                    h: conv_out(prev.h, k, stride, padding),
+                    w: conv_out(prev.w, k, stride, padding),
+                    c: prev.c,
+                }
+            }
+            LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
+                if prev.h < k || prev.w < k {
+                    return Err(err(format!(
+                        "frame {}x{} smaller than pool window {k}", prev.h, prev.w
+                    )));
+                }
+                FeatureShape {
+                    h: (prev.h - k) / stride + 1,
+                    w: (prev.w - k) / stride + 1,
+                    c: prev.c,
+                }
+            }
+            LayerKind::GlobalAvgPool => FeatureShape { h: 1, w: 1, c: prev.c },
+            LayerKind::Fc { out, .. } => FeatureShape { h: 1, w: 1, c: out },
+            LayerKind::ResidualAdd { from } => {
+                let skip = outputs[from];
+                if skip != prev {
+                    return Err(err(format!(
+                        "skip shape {skip:?} != main path shape {prev:?}"
+                    )));
+                }
+                prev
+            }
+            LayerKind::Softmax => prev,
+        };
+        outputs.push(out);
+    }
+    Ok(Shapes { inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NetworkBuilder;
+
+    #[test]
+    fn mnist_chain_shapes() {
+        let net = NetworkBuilder::new("m", 28, 28, 1)
+            .conv(8, 3, 1, Padding::Same, true)
+            .maxpool(2, 2)
+            .conv(16, 3, 1, Padding::Same, true)
+            .maxpool(2, 2)
+            .fc(10, false)
+            .build();
+        let s = infer(&net).unwrap();
+        assert_eq!(s.output(1), FeatureShape { h: 28, w: 28, c: 8 });
+        assert_eq!(s.output(2), FeatureShape { h: 14, w: 14, c: 8 });
+        assert_eq!(s.output(4), FeatureShape { h: 7, w: 7, c: 16 });
+        assert_eq!(s.final_output().c, 10);
+        assert_eq!(s.input_features(5), 7 * 7 * 16);
+    }
+
+    #[test]
+    fn valid_padding_and_stride() {
+        let net = NetworkBuilder::new("v", 11, 11, 3)
+            .conv(4, 3, 2, Padding::Valid, true)
+            .build();
+        let s = infer(&net).unwrap();
+        assert_eq!(s.output(1), FeatureShape { h: 5, w: 5, c: 4 });
+    }
+
+    #[test]
+    fn pool_too_large_rejected() {
+        let net = NetworkBuilder::new("p", 3, 3, 1).maxpool(4, 4).build_unchecked();
+        assert!(infer(&net).is_err());
+    }
+
+    #[test]
+    fn residual_shape_mismatch_rejected() {
+        // fork at 8ch, main path changes to 4ch -> merge must fail
+        let mut b = NetworkBuilder::new("r", 8, 8, 8);
+        let fork = b.fork();
+        b = b.conv(4, 3, 1, Padding::Same, true).residual_add(fork);
+        let net = b.build_unchecked();
+        assert!(infer(&net).is_err());
+    }
+
+    #[test]
+    fn dwconv_preserves_channels() {
+        let net = NetworkBuilder::new("d", 16, 16, 24)
+            .dwconv(3, 2, Padding::Same, true)
+            .build();
+        let s = infer(&net).unwrap();
+        assert_eq!(s.output(1), FeatureShape { h: 8, w: 8, c: 24 });
+    }
+}

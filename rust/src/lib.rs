@@ -1,0 +1,37 @@
+//! # ForgeMorph — adaptive CNN deployment compiler (reproduction)
+//!
+//! Rust + JAX + Pallas reproduction of *"ForgeMorph: An FPGA Compiler for
+//! On-the-Fly Adaptive CNN Reconfiguration"* (Mazouz, Le, Nguyen, 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + morphable JAX
+//!   model, DistillCycle-trained and AOT-lowered to per-morph-path HLO
+//!   text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — everything at and after deployment:
+//!   * [`graph`] — CNN IR, descriptor parser, model zoo (Table II)
+//!   * [`pe`] — analytical PE models (Eqs. 1-11, Table I)
+//!   * [`design`] — design-point evaluation (Eqs. 12-15)
+//!   * [`dse`] — NeuroForge's multi-objective genetic DSE (Alg. 1)
+//!   * [`rtl`] — Verilog emission for selected design points
+//!   * [`sim`] — cycle-level streaming simulator (the hardware stand-in)
+//!   * [`morph`] — NeuroMorph runtime reconfiguration + governor
+//!   * [`runtime`] — PJRT executor loading the AOT artifacts
+//!   * [`coordinator`] — serving loop: batcher, budget monitor, metrics
+//!   * [`baselines`] — published comparison rows (Tables IV, VI)
+//!   * [`report`] — regenerates every paper table and figure
+
+pub mod baselines;
+pub mod coordinator;
+pub mod design;
+pub mod dse;
+pub mod graph;
+pub mod morph;
+pub mod pe;
+pub mod power;
+pub mod quant;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod sim;
+pub mod util;

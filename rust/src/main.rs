@@ -1,0 +1,242 @@
+//! ForgeMorph CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! forgemorph report <table1|...|fig12|all>     regenerate paper tables/figures
+//! forgemorph dse --model cifar10 [--pop N --gens N --seed N --dsp N --latency MS]
+//! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
+//! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
+//! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR]
+//! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
+//! ```
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::design::{self, DesignConfig};
+use forgemorph::dse;
+use forgemorph::graph::zoo;
+use forgemorph::morph::governor::Budget;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::report;
+use forgemorph::runtime::Engine;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::cli::Args;
+use forgemorph::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("report") => cmd_report(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("rtl") => cmd_rtl(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("verify") => cmd_verify(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+forgemorph — adaptive CNN deployment compiler (paper reproduction)
+commands:
+  report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
+                fig10, fig11, fig12, all)
+  dse           NeuroForge design space exploration
+  rtl           emit Verilog for a design point
+  sim           cycle-simulate a design point (optionally morphed)
+  serve         run the NeuroMorph serving demo against AOT artifacts
+  verify        check AOT artifacts against golden probe logits";
+
+fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
+    let name = args.get_or("model", "mnist");
+    zoo::by_name(name).with_context(|| format!("unknown model '{name}'"))
+}
+
+fn rep_for(args: &Args) -> FpRep {
+    match args.get_or("rep", "int16") {
+        "int8" => FpRep::Int8,
+        _ => FpRep::Int16,
+    }
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    match report::by_name(id) {
+        Some(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        None => bail!("unknown report id '{id}'"),
+    }
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let cfg = dse::DseConfig {
+        population: args.get_usize("pop", 96),
+        generations: args.get_usize("gens", 40),
+        seed: args.get_usize("seed", 0) as u64,
+        rep: rep_for(args),
+        constraints: dse::Constraints {
+            latency_ms: args.get("latency").and_then(|s| s.parse().ok()),
+            dsp: args.get("dsp").and_then(|s| s.parse().ok()),
+            lut: args.get("lut").and_then(|s| s.parse().ok()),
+            bram: args.get("bram").and_then(|s| s.parse().ok()),
+        },
+        ..dse::DseConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let res = dse::run(&net, &ZYNQ_7100, &cfg);
+    println!(
+        "explored {} candidates in {:.2}s — Pareto front ({} points):",
+        res.evaluations,
+        t0.elapsed().as_secs_f64(),
+        res.pareto.len()
+    );
+    println!("{:<28} {:>8} {:>12} {:>9} {:>9}", "p(i)", "DSP", "latency ms", "LUT", "BRAM");
+    for c in &res.pareto {
+        println!(
+            "{:<28} {:>8} {:>12.4} {:>9} {:>9}",
+            format!("{:?}", c.config.parallelism),
+            c.objectives.dsp,
+            c.objectives.latency_ms,
+            c.objectives.lut,
+            c.objectives.bram
+        );
+    }
+    Ok(())
+}
+
+fn cmd_rtl(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let cfg = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
+    let eval = design::evaluate(&net, &cfg, &ZYNQ_7100)?;
+    let bundle = forgemorph::rtl::emit(&net, &cfg, &eval);
+    let out = PathBuf::from(args.get_or("out", "rtl_out"));
+    bundle.write_to(&out)?;
+    println!(
+        "emitted {} files ({} bytes) to {} — top module {}",
+        bundle.files.len(),
+        bundle.total_bytes(),
+        out.display(),
+        bundle.top_name
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let cfg = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
+    let mask = if let Some(d) = args.get("depth") {
+        GateMask::depth_prefix(&net, d.parse().context("--depth")?)
+    } else if let Some(wp) = args.get("width") {
+        GateMask::width(wp.parse::<f64>().context("--width")? / 100.0)
+    } else {
+        GateMask::all_active()
+    };
+    let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &mask);
+    println!(
+        "{}: latency {:.4} ms ({} cycles), {:.1} FPS, {:.0} mW, {:.4} J/frame",
+        net.name,
+        r.latency_ms(),
+        r.latency_cycles,
+        r.fps(),
+        r.power_mw,
+        r.energy_per_frame_j()
+    );
+    println!("{:<12} {:>8} {:>14} {:>8}", "stage", "passes", "busy cycles", "gated");
+    for st in &r.per_stage {
+        println!(
+            "{:<12} {:>8} {:>14} {:>8}",
+            st.name, st.passes, st.busy_cycles, st.gated
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "mnist").to_string();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let requests = args.get_usize("requests", 256);
+    let rate_hz = args.get_f64("rate", 2000.0);
+    let net = net_for(args)?;
+    let design = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
+
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        model: model.clone(),
+        max_wait: Duration::from_millis(2),
+        patience: 2,
+    };
+    let mut coord = Coordinator::start(cfg, net, design, ZYNQ_7100)?;
+    println!("serving {requests} requests at ~{rate_hz} Hz on '{model}'");
+
+    let mut rng = Rng::new(42);
+    let frame = 28 * 28; // mnist default; real shape read by worker
+    let mut receivers = Vec::with_capacity(requests);
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        // mid-run power squeeze: the governor must downshift
+        if i == requests / 3 {
+            coord.set_budget(Budget { power_mw: Some(520.0), latency_ms: None });
+            println!("[budget] power cap 520 mW");
+        }
+        if i == 2 * requests / 3 {
+            coord.set_budget(Budget::unconstrained());
+            println!("[budget] unconstrained");
+        }
+        let data: Vec<f32> = (0..frame).map(|_| rng.f64() as f32).collect();
+        receivers.push(coord.submit(data));
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate_hz)));
+    }
+    let mut by_path = std::collections::BTreeMap::<String, u64>::new();
+    for rx in receivers {
+        if let Ok(resp) = rx.recv() {
+            *by_path.entry(resp.path).or_insert(0) += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+    println!(
+        "done in {:.2}s: {} requests, {} batches, {:.1} req/s",
+        wall.as_secs_f64(),
+        metrics.requests,
+        metrics.batches,
+        metrics.throughput_fps(wall)
+    );
+    println!(
+        "e2e latency: mean {:.2} ms, p99 {:.2} ms | morph switches: {} | modeled energy {:.3} J",
+        metrics.e2e_latency.mean_us() / 1000.0,
+        metrics.e2e_latency.quantile_us(0.99) as f64 / 1000.0,
+        metrics.morph_switches,
+        metrics.energy_j
+    );
+    for (path, n) in by_path {
+        println!("  path {path}: {n} frames");
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = args.get_or("model", "mnist");
+    let engine = Engine::load(&artifacts, model)?;
+    println!("platform: {}", engine.platform());
+    let errs = engine.verify_probe()?;
+    let mut ok = true;
+    for (path, err) in &errs {
+        let pass = *err < 1e-3;
+        ok &= pass;
+        println!("  {path}: max|err| = {err:.2e} {}", if pass { "OK" } else { "FAIL" });
+    }
+    if !ok {
+        bail!("probe verification failed");
+    }
+    println!("all {} paths match golden logits", errs.len());
+    Ok(())
+}

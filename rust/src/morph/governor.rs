@@ -1,0 +1,247 @@
+//! The NeuroMorph governor: runtime mode-switch policy.
+//!
+//! Watches the operating budget (power and/or latency) and selects the
+//! most accurate morph path that satisfies it, with:
+//!
+//! * **hysteresis** — a path must be violating/slack for `patience`
+//!   consecutive observations before a switch fires (no thrash on noisy
+//!   budgets);
+//! * **full-frame reactivation delay** — re-enabling gated blocks stalls
+//!   one frame while line buffers re-prime (Sec. V: "resume execution
+//!   only after reactivation and a full-frame delay"). Switching *down*
+//!   (gating more) is free: gated blocks simply stop toggling.
+
+use super::{MorphPath, PathRegistry};
+
+/// Operating budget at a point in time.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    /// max tolerable power draw (mW); None = unconstrained
+    pub power_mw: Option<f64>,
+    /// max tolerable frame latency (ms); None = unconstrained
+    pub latency_ms: Option<f64>,
+}
+
+impl Budget {
+    pub fn unconstrained() -> Budget {
+        Budget { power_mw: None, latency_ms: None }
+    }
+}
+
+/// Per-path runtime cost table the governor consults (filled from the
+/// simulator or from live measurements).
+#[derive(Debug, Clone)]
+pub struct PathCosts {
+    /// (path name, power mW, latency ms) in registry order
+    pub rows: Vec<(String, f64, f64)>,
+}
+
+impl PathCosts {
+    fn for_path(&self, name: &str) -> Option<(f64, f64)> {
+        self.rows
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, p, l)| (*p, *l))
+    }
+}
+
+/// Switch decision returned by [`Governor::observe`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// keep the current path
+    Hold,
+    /// switch to path (index into registry), paying `stall_frames`
+    Switch { to: String, stall_frames: usize },
+}
+
+/// Governor state machine.
+#[derive(Debug)]
+pub struct Governor {
+    registry: PathRegistry,
+    costs: PathCosts,
+    current: String,
+    /// consecutive observations pointing at a different best path
+    pending: Option<(String, usize)>,
+    /// observations required before switching
+    patience: usize,
+    /// frames of stall when re-activating gated blocks
+    reactivation_frames: usize,
+    /// switches performed (telemetry)
+    pub switch_count: usize,
+}
+
+impl Governor {
+    pub fn new(registry: PathRegistry, costs: PathCosts, patience: usize) -> Governor {
+        let current = registry.full().name.clone();
+        Governor {
+            registry,
+            costs,
+            current,
+            pending: None,
+            patience: patience.max(1),
+            reactivation_frames: 1,
+            switch_count: 0,
+        }
+    }
+
+    pub fn current(&self) -> &str {
+        &self.current
+    }
+
+    pub fn registry(&self) -> &PathRegistry {
+        &self.registry
+    }
+
+    /// The most accurate path whose measured power & latency fit `budget`.
+    fn best_for(&self, budget: &Budget) -> &MorphPath {
+        let fits = |p: &&MorphPath| -> bool {
+            match self.costs.for_path(&p.name) {
+                Some((pw, lat)) => {
+                    budget.power_mw.map(|b| pw <= b).unwrap_or(true)
+                        && budget.latency_ms.map(|b| lat <= b).unwrap_or(true)
+                }
+                None => false,
+            }
+        };
+        self.registry
+            .paths()
+            .iter()
+            .filter(fits)
+            .max_by(|a, b| {
+                a.accuracy
+                    .partial_cmp(&b.accuracy)
+                    .unwrap()
+                    .then(b.macs.cmp(&a.macs)) // tie-break: cheaper
+            })
+            .unwrap_or_else(|| self.registry.lightest())
+    }
+
+    /// Feed one budget observation; returns the (possibly Hold) decision.
+    pub fn observe(&mut self, budget: &Budget) -> Decision {
+        let target = self.best_for(budget).name.clone();
+        if target == self.current {
+            self.pending = None;
+            return Decision::Hold;
+        }
+        let count = match &self.pending {
+            Some((name, n)) if *name == target => n + 1,
+            _ => 1,
+        };
+        if count < self.patience {
+            self.pending = Some((target, count));
+            return Decision::Hold;
+        }
+        // fire the switch
+        self.pending = None;
+        let from_idx = self.registry.index_of(&self.current).unwrap();
+        let to_idx = self.registry.index_of(&target).unwrap();
+        // growing the active region re-primes line buffers: 1 frame stall
+        let stall = if to_idx > from_idx { self.reactivation_frames } else { 0 };
+        self.current = target.clone();
+        self.switch_count += 1;
+        Decision::Switch { to: target, stall_frames: stall }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> PathRegistry {
+        PathRegistry::new(crate::morph::tests::sample_paths())
+    }
+
+    fn costs() -> PathCosts {
+        PathCosts {
+            rows: vec![
+                ("d1_w100".into(), 480.0, 0.10),
+                ("d3_w50".into(), 560.0, 0.25),
+                ("d2_w100".into(), 610.0, 0.60),
+                ("d3_w100".into(), 740.0, 1.20),
+            ],
+        }
+    }
+
+    #[test]
+    fn starts_on_full_path() {
+        let gov = Governor::new(registry(), costs(), 2);
+        assert_eq!(gov.current(), "d3_w100");
+    }
+
+    #[test]
+    fn unconstrained_holds_full() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        assert_eq!(gov.observe(&Budget::unconstrained()), Decision::Hold);
+        assert_eq!(gov.current(), "d3_w100");
+    }
+
+    #[test]
+    fn power_squeeze_downshifts_immediately_with_patience_1() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        match gov.observe(&tight) {
+            Decision::Switch { to, stall_frames } => {
+                assert_eq!(to, "d1_w100");
+                assert_eq!(stall_frames, 0, "downshift is free");
+            }
+            d => panic!("expected switch, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_requires_patience() {
+        let mut gov = Governor::new(registry(), costs(), 3);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        assert_eq!(gov.observe(&tight), Decision::Hold);
+        assert_eq!(gov.observe(&tight), Decision::Hold);
+        assert!(matches!(gov.observe(&tight), Decision::Switch { .. }));
+    }
+
+    #[test]
+    fn flapping_budget_resets_pending() {
+        let mut gov = Governor::new(registry(), costs(), 2);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        assert_eq!(gov.observe(&tight), Decision::Hold);
+        // budget relaxes: pending downshift must reset
+        assert_eq!(gov.observe(&Budget::unconstrained()), Decision::Hold);
+        assert_eq!(gov.observe(&tight), Decision::Hold);
+        assert_eq!(gov.current(), "d3_w100");
+    }
+
+    #[test]
+    fn upshift_pays_reactivation_stall() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        gov.observe(&tight); // down to d1
+        assert_eq!(gov.current(), "d1_w100");
+        match gov.observe(&Budget::unconstrained()) {
+            Decision::Switch { to, stall_frames } => {
+                assert_eq!(to, "d3_w100");
+                assert_eq!(stall_frames, 1, "upshift re-primes line buffers");
+            }
+            d => panic!("expected switch, got {d:?}"),
+        }
+        assert_eq!(gov.switch_count, 2);
+    }
+
+    #[test]
+    fn latency_budget_selects_mid_path() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let b = Budget { power_mw: None, latency_ms: Some(0.7) };
+        match gov.observe(&b) {
+            // d2 fits (0.6 <= 0.7) and beats d3_w50/d1 on accuracy
+            Decision::Switch { to, .. } => assert_eq!(to, "d2_w100"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn impossible_budget_falls_back_to_lightest() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let b = Budget { power_mw: Some(1.0), latency_ms: Some(0.0001) };
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d1_w100"),
+            d => panic!("{d:?}"),
+        }
+    }
+}

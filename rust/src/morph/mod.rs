@@ -1,0 +1,153 @@
+//! NeuroMorph — online design reconfiguration (Sec. IV).
+//!
+//! A deployed ForgeMorph design carries every morph path in one
+//! "bitstream": all subnetwork PEs are present, and lightweight toggles
+//! clock-gate the inactive ones. This module is the runtime half:
+//!
+//! * [`MorphPath`] / [`PathRegistry`] — the DistillCycle-trained
+//!   execution paths (depth prefixes + width fractions) with their
+//!   accuracy/cost metadata, loaded from the AOT manifest.
+//! * [`governor`] — the mode-switch policy: budget-driven selection with
+//!   hysteresis and the full-frame reactivation delay of Sec. V.
+//! * [`GateMask`](crate::sim::GateMask) translation — depth/width morphs
+//!   map onto simulator/RTL clock-gate masks via [`gate_mask_for`].
+
+pub mod governor;
+pub mod schedule;
+
+use crate::graph::Network;
+use crate::sim::GateMask;
+
+/// One morphable execution path (a (depth, width) pair with a dedicated
+/// output head — Fig. 9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MorphPath {
+    pub name: String,
+    pub depth: usize,
+    pub width_pct: usize,
+    /// DistillCycle test accuracy of this path
+    pub accuracy: f64,
+    /// active parameters on this path
+    pub params: usize,
+    /// MACs per frame on this path (the governor's cost signal)
+    pub macs: usize,
+}
+
+impl MorphPath {
+    /// Relative compute cost vs a reference path.
+    pub fn cost_ratio(&self, reference: &MorphPath) -> f64 {
+        self.macs as f64 / reference.macs as f64
+    }
+}
+
+/// The deployed path set, sorted by ascending compute cost.
+#[derive(Debug, Clone)]
+pub struct PathRegistry {
+    paths: Vec<MorphPath>,
+}
+
+impl PathRegistry {
+    pub fn new(mut paths: Vec<MorphPath>) -> PathRegistry {
+        assert!(!paths.is_empty(), "registry needs at least one path");
+        paths.sort_by_key(|p| p.macs);
+        PathRegistry { paths }
+    }
+
+    pub fn paths(&self) -> &[MorphPath] {
+        &self.paths
+    }
+
+    /// The full network (highest-cost path).
+    pub fn full(&self) -> &MorphPath {
+        self.paths.last().unwrap()
+    }
+
+    /// Cheapest path.
+    pub fn lightest(&self) -> &MorphPath {
+        self.paths.first().unwrap()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&MorphPath> {
+        self.paths.iter().find(|p| p.name == name)
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.paths.iter().position(|p| p.name == name)
+    }
+
+    /// Most accurate path whose MACs fit the budget; falls back to the
+    /// lightest path when nothing fits.
+    pub fn best_within_macs(&self, macs_budget: usize) -> &MorphPath {
+        self.paths
+            .iter()
+            .filter(|p| p.macs <= macs_budget)
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+            .unwrap_or_else(|| self.lightest())
+    }
+}
+
+/// Translate a morph path into the clock-gate mask the simulator/RTL use.
+pub fn gate_mask_for(net: &Network, path: &MorphPath) -> GateMask {
+    let n_blocks = net.conv_layer_ids().len();
+    if path.width_pct < 100 {
+        GateMask::width(path.width_pct as f64 / 100.0)
+    } else if path.depth < n_blocks {
+        GateMask::depth_prefix(net, path.depth)
+    } else {
+        GateMask::all_active()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    pub(crate) fn sample_paths() -> Vec<MorphPath> {
+        vec![
+            MorphPath { name: "d3_w100".into(), depth: 3, width_pct: 100, accuracy: 0.99, params: 8778, macs: 510_912 },
+            MorphPath { name: "d1_w100".into(), depth: 1, width_pct: 100, accuracy: 0.93, params: 15_762, macs: 72_128 },
+            MorphPath { name: "d2_w100".into(), depth: 2, width_pct: 100, accuracy: 0.96, params: 9114, macs: 293_216 },
+            MorphPath { name: "d3_w50".into(), depth: 3, width_pct: 50, accuracy: 0.95, params: 3562, macs: 140_048 },
+        ]
+    }
+
+    #[test]
+    fn registry_sorted_by_cost() {
+        let reg = PathRegistry::new(sample_paths());
+        let names: Vec<&str> = reg.paths().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["d1_w100", "d3_w50", "d2_w100", "d3_w100"]);
+        assert_eq!(reg.full().name, "d3_w100");
+        assert_eq!(reg.lightest().name, "d1_w100");
+    }
+
+    #[test]
+    fn budget_selection_prefers_accuracy() {
+        let reg = PathRegistry::new(sample_paths());
+        // budget fits d1 and d3_w50: d3_w50 has higher accuracy
+        assert_eq!(reg.best_within_macs(150_000).name, "d3_w50");
+        // everything fits: full path wins on accuracy
+        assert_eq!(reg.best_within_macs(usize::MAX).name, "d3_w100");
+        // nothing fits: fall back to lightest
+        assert_eq!(reg.best_within_macs(10).name, "d1_w100");
+    }
+
+    #[test]
+    fn gate_masks() {
+        let net = zoo::mnist();
+        let reg = PathRegistry::new(sample_paths());
+        let full = gate_mask_for(&net, reg.by_name("d3_w100").unwrap());
+        assert!(full.block_active.is_empty() && full.width_fraction == 1.0);
+        let d1 = gate_mask_for(&net, reg.by_name("d1_w100").unwrap());
+        assert_eq!(d1.block_active, vec![true, false, false]);
+        let w50 = gate_mask_for(&net, reg.by_name("d3_w50").unwrap());
+        assert!((w50.width_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_ratio() {
+        let reg = PathRegistry::new(sample_paths());
+        let r = reg.lightest().cost_ratio(reg.full());
+        assert!(r < 0.2, "{r}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Morph-configuration extraction (the paper's stated future work,
+//! Sec. VII: "automating NeuroMorph's configuration extraction via
+//! combinatorial analysis, enabling automatic selection of optimal
+//! runtime paths that meet application-specific accuracy constraints").
+//!
+//! Given the full (depth, width) candidate lattice with measured
+//! accuracy and simulated cost, select the small set of paths worth
+//! baking into the deployment:
+//!
+//! 1. prune paths below the accuracy floor;
+//! 2. keep only the accuracy/cost Pareto frontier (a slower path must be
+//!    more accurate to earn its gates);
+//! 3. cap the set size by maximizing coverage of the cost axis (the
+//!    governor wants well-spread operating points, not near-duplicates).
+
+use super::MorphPath;
+
+/// A morph candidate with its simulated runtime cost.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub path: MorphPath,
+    pub latency_ms: f64,
+    pub power_mw: f64,
+}
+
+/// Selection constraints.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleSpec {
+    /// drop candidates below this accuracy
+    pub min_accuracy: f64,
+    /// maximum number of deployed paths (gate-toggle ROM size)
+    pub max_paths: usize,
+}
+
+impl Default for ScheduleSpec {
+    fn default() -> Self {
+        ScheduleSpec { min_accuracy: 0.0, max_paths: 4 }
+    }
+}
+
+/// Accuracy/latency Pareto filter: keep candidates not dominated by a
+/// faster-and-at-least-as-accurate alternative.
+pub fn pareto_paths(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    cands.sort_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap());
+    let mut out: Vec<Candidate> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for c in cands {
+        if c.path.accuracy > best_acc + 1e-12 {
+            best_acc = c.path.accuracy;
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Full extraction pipeline: floor -> Pareto -> spread-capped subset.
+pub fn extract(cands: Vec<Candidate>, spec: &ScheduleSpec) -> Vec<Candidate> {
+    let eligible: Vec<Candidate> = cands
+        .into_iter()
+        .filter(|c| c.path.accuracy >= spec.min_accuracy)
+        .collect();
+    let front = pareto_paths(eligible);
+    if front.len() <= spec.max_paths {
+        return front;
+    }
+    // maximize spread over the (log) latency axis: always keep the two
+    // extremes, then greedily insert the candidate farthest from its
+    // nearest kept neighbour
+    let mut keep = vec![0usize, front.len() - 1];
+    while keep.len() < spec.max_paths {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, c) in front.iter().enumerate() {
+            if keep.contains(&i) {
+                continue;
+            }
+            let d = keep
+                .iter()
+                .map(|&j| (c.latency_ms.ln() - front[j].latency_ms.ln()).abs())
+                .fold(f64::INFINITY, f64::min);
+            if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+                best = Some((i, d));
+            }
+        }
+        keep.push(best.expect("front larger than keep set").0);
+    }
+    keep.sort_unstable();
+    keep.into_iter().map(|i| front[i].clone()).collect()
+}
+
+/// Accuracy-constrained operating point: the cheapest kept path meeting
+/// `min_accuracy` (what the paper's future-work selector would return).
+pub fn cheapest_meeting<'a>(
+    selected: &'a [Candidate],
+    min_accuracy: f64,
+) -> Option<&'a Candidate> {
+    selected
+        .iter()
+        .filter(|c| c.path.accuracy >= min_accuracy)
+        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(name: &str, acc: f64, lat: f64) -> Candidate {
+        Candidate {
+            path: MorphPath {
+                name: name.into(),
+                depth: 1,
+                width_pct: 100,
+                accuracy: acc,
+                params: 0,
+                macs: (lat * 1000.0) as usize,
+            },
+            latency_ms: lat,
+            power_mw: 500.0,
+        }
+    }
+
+    #[test]
+    fn pareto_drops_dominated() {
+        let front = pareto_paths(vec![
+            cand("a", 0.90, 1.0),
+            cand("b", 0.85, 2.0), // slower AND less accurate -> dropped
+            cand("c", 0.95, 3.0),
+        ]);
+        let names: Vec<&str> = front.iter().map(|c| c.path.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "c"]);
+    }
+
+    #[test]
+    fn accuracy_floor_applied() {
+        let sel = extract(
+            vec![cand("a", 0.5, 1.0), cand("b", 0.9, 2.0)],
+            &ScheduleSpec { min_accuracy: 0.8, max_paths: 4 },
+        );
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0].path.name, "b");
+    }
+
+    #[test]
+    fn capped_set_keeps_extremes() {
+        let cands: Vec<Candidate> = (0..8)
+            .map(|i| cand(&format!("p{i}"), 0.8 + i as f64 * 0.02, 2f64.powi(i)))
+            .collect();
+        let sel = extract(cands, &ScheduleSpec { min_accuracy: 0.0, max_paths: 3 });
+        assert_eq!(sel.len(), 3);
+        assert_eq!(sel.first().unwrap().path.name, "p0");
+        assert_eq!(sel.last().unwrap().path.name, "p7");
+    }
+
+    #[test]
+    fn spread_maximized() {
+        let cands: Vec<Candidate> = (0..5)
+            .map(|i| cand(&format!("p{i}"), 0.8 + i as f64 * 0.02, 10f64.powi(i)))
+            .collect();
+        let sel = extract(cands, &ScheduleSpec { min_accuracy: 0.0, max_paths: 3 });
+        // log-equidistant picks: ends + middle
+        let names: Vec<&str> = sel.iter().map(|c| c.path.name.as_str()).collect();
+        assert_eq!(names, vec!["p0", "p2", "p4"]);
+    }
+
+    #[test]
+    fn cheapest_meeting_constraint() {
+        let sel = vec![cand("fast", 0.82, 1.0), cand("slow", 0.95, 8.0)];
+        assert_eq!(cheapest_meeting(&sel, 0.9).unwrap().path.name, "slow");
+        assert_eq!(cheapest_meeting(&sel, 0.8).unwrap().path.name, "fast");
+        assert!(cheapest_meeting(&sel, 0.99).is_none());
+    }
+}

@@ -1,0 +1,162 @@
+//! Convolutional PE (`C_PE`) analytical model — Sec. III-A.1, Eqs. 1-4, 11.
+//!
+//! A C_PE is a two-stage pipeline: a Line Buffer Controller (K-1 row
+//! FIFOs + tap register bank) feeding a MAC core (K^2 multipliers + adder
+//! tree). One output per clock after pipeline fill.
+
+use super::{luts, Blanking, FpRep, Resources};
+
+/// Configuration of one conv PE instance, bound to its layer's geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvPe {
+    /// kernel size K
+    pub k: usize,
+    /// input feature-map width (FM_W) — line-buffer depth
+    pub fm_w: usize,
+    /// input feature-map height (FM_H)
+    pub fm_h: usize,
+    /// fixed-point representation
+    pub rep: FpRep,
+    /// whether a ReLU stage follows the adder tree
+    pub relu: bool,
+    /// first pipeline layer pays the input-interface delay D_in
+    pub first_layer: bool,
+}
+
+impl ConvPe {
+    /// Eq. 1: number of multipliers in the MAC core.
+    pub fn n_mult(&self) -> usize {
+        self.k * self.k
+    }
+
+    /// Eq. 2: adder-tree depth, `ceil(log2(K^2)) + 1` stages.
+    pub fn add_stages(&self) -> usize {
+        (self.k * self.k) .next_power_of_two().trailing_zeros() as usize + 1
+    }
+
+    /// Eq. 3 (closed form): a K^2-leaf binary reduction uses K^2 - 1 adders.
+    pub fn n_add(&self) -> usize {
+        self.k * self.k - 1
+    }
+
+    /// Eq. 4 core term: cycles to stream the frame through the window
+    /// generator, including blanking intervals.
+    pub fn core_cycles(&self, blank: Blanking) -> usize {
+        let d_in = if self.first_layer { 4 } else { 0 };
+        let pb = blank.back_porch;
+        let pf = blank.front_porch;
+        d_in + (pb + 1) / 2 + (self.fm_w + pb + pf) * self.fm_h
+    }
+
+    /// Eq. 4 overhead term: pad + tap + mul + adder-tree + D_out + ReLU.
+    pub fn overhead_cycles(&self) -> usize {
+        let t_pad = self.k;
+        let t_tap = self.k;
+        let t_mul = self.k;
+        let t_add = self.add_stages() + 2;
+        let d_out = 4;
+        let t_relu = usize::from(self.relu);
+        t_pad + t_tap + t_mul + t_add + d_out + t_relu
+    }
+
+    /// Eq. 4: total latency of one pass of one C_PE, in clock cycles.
+    pub fn latency_cycles(&self, blank: Blanking) -> usize {
+        self.core_cycles(blank) + self.overhead_cycles()
+    }
+
+    /// Eq. 11: line-buffer BRAM requirement (18 Kb blocks). A 1x1 kernel
+    /// needs no window assembly — no line buffer, zero BRAM.
+    pub fn line_buffer_bram(&self) -> usize {
+        if self.k < 2 {
+            return 0;
+        }
+        let bits = self.fm_w * self.k * self.rep.bits();
+        bits.div_ceil(18 * 1024).max(1)
+    }
+
+    /// Per-PE resource vector (DSP = K^2 per Sec. III-B; LUT/FF from
+    /// Table I; BRAM from Eq. 11).
+    pub fn resources(&self) -> Resources {
+        Resources {
+            dsp: self.n_mult(),
+            lut: luts::conv_luts(self.k),
+            ff: luts::conv_regs(self.k),
+            bram: self.line_buffer_bram(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe3() -> ConvPe {
+        ConvPe { k: 3, fm_w: 28, fm_h: 28, rep: FpRep::Int16, relu: true, first_layer: true }
+    }
+
+    #[test]
+    fn eq1_multipliers() {
+        assert_eq!(pe3().n_mult(), 9);
+        assert_eq!(ConvPe { k: 5, ..pe3() }.n_mult(), 25);
+    }
+
+    #[test]
+    fn eq2_adder_stages() {
+        // paper: 3x3 kernel -> 9 mult, 8 adders across 5 pipeline stages
+        assert_eq!(pe3().add_stages(), 5);
+        assert_eq!(ConvPe { k: 2, ..pe3() }.add_stages(), 3);
+    }
+
+    #[test]
+    fn eq3_adders() {
+        assert_eq!(pe3().n_add(), 8);
+        assert_eq!(ConvPe { k: 4, ..pe3() }.n_add(), 15);
+    }
+
+    #[test]
+    fn eq4_latency_structure() {
+        let pe = pe3();
+        let blank = Blanking::default();
+        // core dominated by (W + Pb + Pf) * H
+        let core = pe.core_cycles(blank);
+        assert!(core >= 28 * 28);
+        assert_eq!(core, 4 + 1 + (28 + 4) * 28);
+        // overhead small and constant
+        assert_eq!(pe.overhead_cycles(), 3 + 3 + 3 + 7 + 4 + 1);
+        assert_eq!(pe.latency_cycles(blank), core + pe.overhead_cycles());
+    }
+
+    #[test]
+    fn eq11_bram() {
+        // 28 px * 3 rows * 16 bits = 1344 bits -> 1 block
+        assert_eq!(pe3().line_buffer_bram(), 1);
+        let wide = ConvPe { fm_w: 640, k: 5, ..pe3() };
+        // 640*5*16 = 51200 bits -> 3 blocks
+        assert_eq!(wide.line_buffer_bram(), 3);
+    }
+
+    #[test]
+    fn int8_halves_buffer_bits() {
+        let w16 = ConvPe { fm_w: 1200, ..pe3() };
+        let w8 = ConvPe { rep: FpRep::Int8, ..w16 };
+        assert!(w8.line_buffer_bram() <= w16.line_buffer_bram());
+    }
+
+    #[test]
+    fn non_first_layer_skips_d_in() {
+        let a = pe3();
+        let b = ConvPe { first_layer: false, ..a };
+        assert_eq!(
+            a.core_cycles(Blanking::default()) - b.core_cycles(Blanking::default()),
+            4
+        );
+    }
+
+    #[test]
+    fn resources_match_table1() {
+        let r = pe3().resources();
+        assert_eq!(r.dsp, 9);
+        assert_eq!(r.lut, 850);
+        assert_eq!(r.ff, 2000);
+    }
+}

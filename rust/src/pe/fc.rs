@@ -1,0 +1,131 @@
+//! Fully connected PE (`FC_PE`) analytical model — Sec. III-A.3,
+//! Eqs. 5-10.
+//!
+//! Each output head owns a MAC that accumulates streamed input-weight
+//! products (Eq. 5). Channel-wise parallelism (Eq. 6) splits the input
+//! across `n_pe` FC-Accumulation blocks; the parallelism coefficient
+//! `P = Ch_D / FC_PE` serializes the stream when fewer PEs than channels
+//! are allocated (Eq. 10).
+
+use super::{luts, Blanking, Resources};
+
+/// Max physical output heads instantiated at once; wider FC layers
+/// time-multiplex head groups over the same MAC bank (a 1000-class
+/// ImageNet head would otherwise monopolize half the device's DSPs).
+pub const HEAD_BANK: usize = 64;
+
+/// An FC layer's PE bank configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FcPe {
+    /// number of output heads (FC_out)
+    pub fc_out: usize,
+    /// FC_PE units allocated per head (N in Eqs. 7-9)
+    pub n_pe: usize,
+    /// input channel depth Ch_D (the serialization driver of Eq. 10)
+    pub channels: usize,
+    /// incoming feature-map geometry (vectorized streaming, Eq. 10)
+    pub fm_w: usize,
+    pub fm_h: usize,
+}
+
+impl FcPe {
+    /// Physical heads instantiated (logical heads beyond the bank are
+    /// time-multiplexed).
+    pub fn phys_heads(&self) -> usize {
+        self.fc_out.min(HEAD_BANK)
+    }
+
+    /// Sequential head groups (1 when fc_out <= HEAD_BANK).
+    pub fn head_groups(&self) -> usize {
+        self.fc_out.div_ceil(HEAD_BANK).max(1)
+    }
+    /// Eq. 10's parallelism coefficient `P = Ch_D / FC_PE` (ceil for
+    /// non-dividing allocations; P=1 means fully channel-parallel).
+    pub fn parallelism(&self) -> usize {
+        self.channels.div_ceil(self.n_pe.max(1)).max(1)
+    }
+
+    /// Eq. 7: multipliers = FC_out * N.
+    pub fn n_mult(&self) -> usize {
+        self.fc_out * self.n_pe
+    }
+
+    /// Eq. 8: adders = FC_out*N + FC_out*L, with L the aggregation-tree
+    /// adder count over N partial sums (N-1 for a binary tree).
+    pub fn n_add(&self) -> usize {
+        let l = self.n_pe.saturating_sub(1);
+        self.fc_out * self.n_pe + self.fc_out * l
+    }
+
+    /// Eq. 9: accumulation registers = FC_out * N.
+    pub fn n_reg(&self) -> usize {
+        self.fc_out * self.n_pe
+    }
+
+    /// Eq. 10: latency = Clk * [(FM_W + BP + FP)(FM_H - 1) + FM_H] * P,
+    /// times the head-group multiplexing factor for very wide layers.
+    pub fn latency_cycles(&self, blank: Blanking) -> usize {
+        let bp = blank.back_porch;
+        let fp = blank.front_porch;
+        let stream = (self.fm_w + bp + fp) * self.fm_h.saturating_sub(1) + self.fm_h;
+        stream * self.parallelism() * self.head_groups()
+    }
+
+    /// Sec. III-B: 1 DSP + ~360 LUTs per FC_PE, no BRAM. Physical units
+    /// are capped at [`HEAD_BANK`] heads (time-multiplexed beyond that).
+    pub fn resources(&self) -> Resources {
+        let units = self.phys_heads() * self.n_pe;
+        Resources {
+            dsp: units,
+            lut: units * luts::AVG_FC_PE_LUTS,
+            ff: units * 16, // 16-bit accumulation registers
+            bram: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe() -> FcPe {
+        FcPe { fc_out: 10, n_pe: 4, channels: 32, fm_w: 3, fm_h: 3 }
+    }
+
+    #[test]
+    fn eq7_multipliers() {
+        assert_eq!(pe().n_mult(), 40);
+    }
+
+    #[test]
+    fn eq8_adders() {
+        // L = N-1 = 3 -> 10*4 + 10*3 = 70
+        assert_eq!(pe().n_add(), 70);
+    }
+
+    #[test]
+    fn eq9_registers() {
+        assert_eq!(pe().n_reg(), 40);
+    }
+
+    #[test]
+    fn eq10_parallelism() {
+        assert_eq!(pe().parallelism(), 8); // 32/4
+        assert_eq!(FcPe { n_pe: 32, ..pe() }.parallelism(), 1);
+        assert_eq!(FcPe { n_pe: 5, ..pe() }.parallelism(), 7); // ceil(32/5)
+    }
+
+    #[test]
+    fn eq10_latency_linear_in_p() {
+        let blank = Blanking::default();
+        let serial = FcPe { n_pe: 1, ..pe() }.latency_cycles(blank);
+        let parallel = FcPe { n_pe: 32, ..pe() }.latency_cycles(blank);
+        assert_eq!(serial, parallel * 32);
+    }
+
+    #[test]
+    fn one_dsp_per_unit() {
+        assert_eq!(pe().resources().dsp, 40);
+        assert_eq!(pe().resources().bram, 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Table I: empirical LUT / slice-register utilization per filter size.
+//!
+//! These constants come from the paper's block-level profiling of the
+//! Simulink-generated PE implementations; they back the `Y_LUT` lookup of
+//! Algorithm 1 (line 16).
+
+/// (filter size K, conv LUTs, pool LUTs, conv slice regs, pool slice regs)
+pub const TABLE1: &[(usize, usize, usize, usize, usize)] = &[
+    (2, 550, 300, 1250, 750),
+    (3, 850, 420, 2000, 1000),
+    (4, 1400, 700, 3500, 1400),
+    (5, 2000, 900, 5500, 2200),
+];
+
+/// Conv PE LUTs for kernel size `k` (nearest Table I row, extrapolating
+/// quadratically beyond K=5 — LUTs track K^2 multiplier fan-in).
+pub fn conv_luts(k: usize) -> usize {
+    lookup(k, 1)
+}
+
+/// Pooling PE LUTs for window size `k`.
+pub fn pool_luts(k: usize) -> usize {
+    lookup(k, 2)
+}
+
+/// Conv PE slice registers (FFs).
+pub fn conv_regs(k: usize) -> usize {
+    lookup(k, 3)
+}
+
+/// Pooling PE slice registers (FFs).
+pub fn pool_regs(k: usize) -> usize {
+    lookup(k, 4)
+}
+
+fn column(row: &(usize, usize, usize, usize, usize), col: usize) -> usize {
+    match col {
+        1 => row.1,
+        2 => row.2,
+        3 => row.3,
+        _ => row.4,
+    }
+}
+
+/// 1x1 "conv" PEs have no window assembly at all (a bare MAC + control):
+/// much leaner than any Table I row. (LUT conv, LUT pool, FF conv, FF pool)
+const K1_ROW: (usize, usize, usize, usize) = (110, 70, 140, 70);
+
+fn lookup(k: usize, col: usize) -> usize {
+    if k < 2 {
+        return match col {
+            1 => K1_ROW.0,
+            2 => K1_ROW.1,
+            3 => K1_ROW.2,
+            _ => K1_ROW.3,
+        };
+    }
+    if let Some(row) = TABLE1.iter().find(|r| r.0 == k) {
+        return column(row, col);
+    }
+    // beyond Table I: extrapolate from the K=5 row by K^2 ratio
+    let last = TABLE1.last().unwrap();
+    column(last, col) * (k * k) / (last.0 * last.0)
+}
+
+/// Average per-PE LUT constants quoted in Sec. III-B for quick estimates.
+pub const AVG_CONV_PE_LUTS: usize = 800;
+pub const AVG_POOL_PE_LUTS: usize = 420;
+pub const AVG_FC_PE_LUTS: usize = 360;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_rows() {
+        assert_eq!(conv_luts(3), 850);
+        assert_eq!(pool_luts(3), 420);
+        assert_eq!(conv_regs(5), 5500);
+        assert_eq!(pool_regs(2), 750);
+    }
+
+    #[test]
+    fn one_by_one_scaled_down() {
+        assert!(conv_luts(1) < conv_luts(2));
+        assert!(conv_regs(1) < conv_regs(2));
+        assert!(conv_luts(1) >= 100);
+    }
+
+    #[test]
+    fn extrapolation_monotone() {
+        assert!(conv_luts(7) > conv_luts(5));
+        assert_eq!(conv_luts(7), 2000 * 49 / 25);
+    }
+}

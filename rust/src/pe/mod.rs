@@ -1,0 +1,161 @@
+//! Processing-Element analytical models (Sec. III-A/B, Eqs. 1-11).
+//!
+//! These are NeuroForge's *estimators*: closed-form latency and resource
+//! models for the three PE families (conv `C_PE`, pooling `PU_PE`, fully
+//! connected `FC_PE`). The DSE evaluates thousands of candidate mappings
+//! against these models instead of synthesizing RTL — the paper validates
+//! them at 95%+ accuracy for DSP/BRAM and 10-15% for latency (Fig. 10 /
+//! Table III); our cycle simulator (`sim/`) plays the "Real" column.
+
+pub mod conv;
+pub mod fc;
+pub mod luts;
+pub mod pool;
+
+/// FPGA resource vector (the objective space of Alg. 1).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub dsp: usize,
+    pub lut: usize,
+    pub ff: usize,
+    /// 18 Kb block-RAM units
+    pub bram: usize,
+}
+
+impl Resources {
+    pub fn add(&self, other: &Resources) -> Resources {
+        Resources {
+            dsp: self.dsp + other.dsp,
+            lut: self.lut + other.lut,
+            ff: self.ff + other.ff,
+            bram: self.bram + other.bram,
+        }
+    }
+
+    pub fn scale(&self, n: usize) -> Resources {
+        Resources {
+            dsp: self.dsp * n,
+            lut: self.lut * n,
+            ff: self.ff * n,
+            bram: self.bram * n,
+        }
+    }
+
+    /// Component-wise `<=` against a device budget.
+    pub fn fits(&self, budget: &Resources) -> bool {
+        self.dsp <= budget.dsp
+            && self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.bram <= budget.bram
+    }
+}
+
+/// Fixed-point width of the datapath (FP_rep of Eq. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpRep {
+    Int8,
+    Int16,
+}
+
+impl FpRep {
+    pub fn bits(self) -> usize {
+        match self {
+            FpRep::Int8 => 8,
+            FpRep::Int16 => 16,
+        }
+    }
+}
+
+/// Target device resource budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub budget: Resources,
+    pub clock_mhz: f64,
+}
+
+/// Xilinx Zynq-7100 (Table V header: 444K LUTs, 26.5 Mb BRAM, 2020 DSPs),
+/// operated at 250 MHz throughout the paper.
+pub const ZYNQ_7100: Device = Device {
+    name: "Zynq-7100",
+    budget: Resources {
+        dsp: 2020,
+        lut: 444_000,
+        ff: 554_800,
+        bram: 1510, // 26.5 Mb / 18 Kb blocks
+    },
+    clock_mhz: 250.0,
+};
+
+/// Zynq-7020 (PYNQ-class part) — the small-edge portability target.
+pub const ZYNQ_7020: Device = Device {
+    name: "Zynq-7020",
+    budget: Resources { dsp: 220, lut: 53_200, ff: 106_400, bram: 280 },
+    clock_mhz: 200.0,
+};
+
+/// ZCU102 (Zynq UltraScale+ ZU9EG) — the board Vitis-AI rows use.
+pub const ZCU102: Device = Device {
+    name: "ZCU102",
+    budget: Resources { dsp: 2520, lut: 274_080, ff: 548_160, bram: 1824 },
+    clock_mhz: 300.0,
+};
+
+/// Kintex-7 410T — the hls4ml comparison part.
+pub const KINTEX_7: Device = Device {
+    name: "Kintex-7",
+    budget: Resources { dsp: 1540, lut: 254_200, ff: 508_400, bram: 1590 },
+    clock_mhz: 200.0,
+};
+
+/// Device catalog for portability sweeps.
+pub const DEVICES: &[&Device] = &[&ZYNQ_7020, &KINTEX_7, &ZYNQ_7100, &ZCU102];
+
+/// Streaming interface blanking intervals (the back/front porch of Eq. 4;
+/// the video-style control signalling of Fig. 4).
+#[derive(Debug, Clone, Copy)]
+pub struct Blanking {
+    pub back_porch: usize,
+    pub front_porch: usize,
+}
+
+impl Default for Blanking {
+    fn default() -> Self {
+        Blanking { back_porch: 2, front_porch: 2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resources_arithmetic() {
+        let a = Resources { dsp: 1, lut: 10, ff: 20, bram: 2 };
+        let b = a.scale(3);
+        assert_eq!(b, Resources { dsp: 3, lut: 30, ff: 60, bram: 6 });
+        assert_eq!(a.add(&b).dsp, 4);
+    }
+
+    #[test]
+    fn fits_budget() {
+        let need = Resources { dsp: 100, lut: 1000, ff: 0, bram: 5 };
+        assert!(need.fits(&ZYNQ_7100.budget));
+        let over = Resources { dsp: 3000, ..need };
+        assert!(!over.fits(&ZYNQ_7100.budget));
+    }
+
+    #[test]
+    fn zynq_constants_match_table5() {
+        assert_eq!(ZYNQ_7100.budget.dsp, 2020);
+        assert_eq!(ZYNQ_7100.budget.lut, 444_000);
+        assert_eq!(ZYNQ_7100.clock_mhz, 250.0);
+    }
+
+    #[test]
+    fn device_catalog_ordered_by_dsp_capacity_class() {
+        assert!(ZYNQ_7020.budget.dsp < KINTEX_7.budget.dsp);
+        assert!(ZYNQ_7100.budget.dsp < ZCU102.budget.dsp);
+        assert_eq!(DEVICES.len(), 4);
+    }
+}

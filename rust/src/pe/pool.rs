@@ -1,0 +1,90 @@
+//! Pooling PE (`PU_PE`) analytical model — Sec. III-A.2.
+//!
+//! Pooling reuses the C_PE line-buffer controller; max pooling swaps the
+//! MAC core for a K^2-comparator tree, average pooling keeps the MAC with
+//! fixed 1/K^2 coefficients. No DSP slices are consumed (comparisons /
+//! shifts only); one BRAM per PU_PE buffers the window rows.
+
+use super::{luts, Blanking, Resources};
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// One pooling PE bound to its layer geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolPe {
+    pub k: usize,
+    pub stride: usize,
+    pub fm_w: usize,
+    pub fm_h: usize,
+    pub kind: PoolKind,
+}
+
+impl PoolPe {
+    /// Comparator count of the max tree (or adders of the avg core).
+    pub fn n_compare(&self) -> usize {
+        self.k * self.k - 1
+    }
+
+    /// Streaming latency: the window walk over the frame plus the tree
+    /// depth; same blanking structure as the C_PE core (shared LBC).
+    pub fn latency_cycles(&self, blank: Blanking) -> usize {
+        let pb = blank.back_porch;
+        let pf = blank.front_porch;
+        let tree = (self.k * self.k).next_power_of_two().trailing_zeros() as usize + 1;
+        (self.fm_w + pb + pf) * self.fm_h + self.k + tree + 4
+    }
+
+    /// Sec. III-B: ~420 LUTs per PU_PE (Table I for sized windows), zero
+    /// DSP, one BRAM.
+    pub fn resources(&self) -> Resources {
+        Resources {
+            dsp: 0,
+            lut: luts::pool_luts(self.k),
+            ff: luts::pool_regs(self.k),
+            bram: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe() -> PoolPe {
+        PoolPe { k: 2, stride: 2, fm_w: 28, fm_h: 28, kind: PoolKind::Max }
+    }
+
+    #[test]
+    fn no_dsp_for_pooling() {
+        assert_eq!(pe().resources().dsp, 0);
+    }
+
+    #[test]
+    fn one_bram_per_pe() {
+        assert_eq!(pe().resources().bram, 1);
+    }
+
+    #[test]
+    fn table1_luts() {
+        assert_eq!(pe().resources().lut, 300);
+        assert_eq!(PoolPe { k: 3, ..pe() }.resources().lut, 420);
+    }
+
+    #[test]
+    fn comparator_tree_size() {
+        assert_eq!(pe().n_compare(), 3);
+        assert_eq!(PoolPe { k: 3, ..pe() }.n_compare(), 8);
+    }
+
+    #[test]
+    fn latency_scales_with_frame() {
+        let small = pe().latency_cycles(Blanking::default());
+        let big = PoolPe { fm_w: 56, fm_h: 56, ..pe() }.latency_cycles(Blanking::default());
+        assert!(big > 3 * small);
+    }
+}

@@ -1,0 +1,118 @@
+//! Fixed-point quantization (the intN datapath, `FP_rep` of Eq. 11).
+//!
+//! Mirrors `python/compile/kernels/ref.py`'s symmetric per-tensor scheme
+//! so Rust-side tooling (simulator stimulus, artifact verification) agrees
+//! bit-for-bit with the build-time kernels.
+
+/// Quantization parameters for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f64,
+    pub bits: u32,
+}
+
+impl QParams {
+    pub fn qmax(bits: u32) -> i64 {
+        (1i64 << (bits - 1)) - 1
+    }
+
+    pub fn qmin(bits: u32) -> i64 {
+        -(1i64 << (bits - 1))
+    }
+
+    /// Symmetric per-tensor scale: max|x| maps to the int max.
+    pub fn fit(data: &[f64], bits: u32) -> QParams {
+        let amax = data.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-8);
+        QParams { scale: amax / Self::qmax(bits) as f64, bits }
+    }
+
+    /// Round-to-nearest quantization with range clipping.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let q = (x / self.scale).round() as i64;
+        q.clamp(Self::qmin(self.bits), Self::qmax(self.bits))
+    }
+
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * self.scale
+    }
+
+    /// Quantize-dequantize round trip (the fake-quant the Pallas kernels
+    /// apply in their MAC epilogue).
+    pub fn fake_quant(&self, x: f64) -> f64 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Quantize a whole tensor, returning (values, params).
+pub fn quantize_tensor(data: &[f64], bits: u32) -> (Vec<i64>, QParams) {
+    let p = QParams::fit(data, bits);
+    (data.iter().map(|&x| p.quantize(x)).collect(), p)
+}
+
+/// Max absolute reconstruction error over a tensor.
+pub fn max_abs_error(data: &[f64], bits: u32) -> f64 {
+    let p = QParams::fit(data, bits);
+    data.iter()
+        .map(|&x| (x - p.fake_quant(x)).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(QParams::qmax(8), 127);
+        assert_eq!(QParams::qmin(8), -128);
+        assert_eq!(QParams::qmax(16), 32767);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let data: Vec<f64> = (-50..=50).map(|i| i as f64 * 0.013).collect();
+        let p = QParams::fit(&data, 8);
+        for &x in &data {
+            assert!((x - p.fake_quant(x)).abs() <= p.scale / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn int16_strictly_tighter_than_int8() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64 * 0.7).sin()).collect();
+        assert!(max_abs_error(&data, 16) < max_abs_error(&data, 8));
+    }
+
+    #[test]
+    fn clipping_at_extremes() {
+        let p = QParams { scale: 0.1, bits: 8 };
+        assert_eq!(p.quantize(1e9), 127);
+        assert_eq!(p.quantize(-1e9), -128);
+    }
+
+    #[test]
+    fn prop_roundtrip_error_half_ulp() {
+        check(
+            "quant-roundtrip",
+            200,
+            9,
+            |r: &mut Rng| {
+                let n = r.below(64) + 1;
+                let bits = if r.chance(0.5) { 8 } else { 16 };
+                let data: Vec<f64> = (0..n).map(|_| r.gauss() * 10.0).collect();
+                (data, bits)
+            },
+            |(data, bits)| {
+                let p = QParams::fit(data, *bits);
+                for &x in data {
+                    if (x - p.fake_quant(x)).abs() > p.scale / 2.0 + 1e-9 {
+                        return ensure(false, format!("error beyond scale/2 at {x}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

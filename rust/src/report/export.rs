@@ -1,0 +1,213 @@
+//! CSV export of the figure-backing data series.
+//!
+//! The `report` functions print paper-formatted blocks; plotting needs
+//! raw series. `forgemorph report <id> --csv <dir>` (and the tests here)
+//! write the underlying data: the Fig. 2 scatter + front, the Fig. 10/
+//! Table III est-vs-real rows, and the Fig. 11/12 morphing curves.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::design::DesignConfig;
+use crate::dse;
+use crate::graph::zoo;
+use crate::pe::{FpRep, ZYNQ_7100};
+use crate::sim::{self, GateMask};
+
+/// A generic CSV table.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join(","));
+        }
+        s
+    }
+
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.csv", self.name)), self.to_string())
+    }
+}
+
+/// Fig. 2 data: every evaluated (latency, dsp) point + front membership.
+pub fn fig2_csv(pop: usize, gens: usize, seed: u64) -> Csv {
+    let net = zoo::cifar10();
+    let cfg = dse::DseConfig {
+        population: pop,
+        generations: gens,
+        seed,
+        constraints: dse::Constraints::device(&ZYNQ_7100),
+        ..dse::DseConfig::default()
+    };
+    let res = dse::run(&net, &ZYNQ_7100, &cfg);
+    let front: std::collections::BTreeSet<(u64, usize)> = res
+        .pareto
+        .iter()
+        .map(|c| (c.objectives.latency_ms.to_bits(), c.objectives.dsp))
+        .collect();
+    Csv {
+        name: "fig2_pareto".into(),
+        header: vec!["latency_ms".into(), "dsp".into(), "on_front".into()],
+        rows: res
+            .evaluated
+            .iter()
+            .map(|&(lat, dsp)| {
+                vec![
+                    format!("{lat:.6}"),
+                    dsp.to_string(),
+                    u8::from(front.contains(&(lat.to_bits(), dsp))).to_string(),
+                ]
+            })
+            .collect(),
+    }
+}
+
+/// Fig. 10 / Table III data: est-vs-real per (model, p).
+pub fn fig10_csv() -> Csv {
+    let mut rows = Vec::new();
+    for name in ["mnist", "svhn", "cifar10"] {
+        let net = zoo::by_name(name).unwrap();
+        for p in [8usize, 4, 2, 1] {
+            let cfg = DesignConfig::uniform(&net, p, FpRep::Int16);
+            let est = crate::design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+            let real = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            rows.push(vec![
+                name.to_string(),
+                p.to_string(),
+                est.resources.dsp.to_string(),
+                real.resources.dsp.to_string(),
+                est.resources.lut.to_string(),
+                real.resources.lut.to_string(),
+                est.resources.bram.to_string(),
+                real.resources.bram.to_string(),
+                format!("{:.6}", est.latency_ms()),
+                format!("{:.6}", real.latency_ms()),
+                format!("{:.1}", real.power_mw),
+            ]);
+        }
+    }
+    Csv {
+        name: "fig10_est_vs_real".into(),
+        header: [
+            "model", "p", "dsp_est", "dsp_real", "lut_est", "lut_real",
+            "bram_est", "bram_real", "lat_est_ms", "lat_real_ms", "power_mw",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        rows,
+    }
+}
+
+/// Fig. 11/12 data: morphing curves across all small models.
+pub fn morphing_csv() -> Csv {
+    let manifest = super::try_manifest();
+    let mut rows = Vec::new();
+    for name in ["mnist", "svhn", "cifar10"] {
+        let net = zoo::by_name(name).unwrap();
+        let n = net.conv_layer_ids().len();
+        for p in [8usize, 4, 2] {
+            let cfg = DesignConfig::uniform(&net, p, FpRep::Int16);
+            let mut push = |mode: &str, mask: GateMask, path: String| {
+                let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &mask);
+                let acc = manifest
+                    .as_ref()
+                    .and_then(|m| m.model(name))
+                    .and_then(|mm| mm.paths.iter().find(|pa| pa.path.name == path))
+                    .map(|pa| format!("{:.4}", pa.path.accuracy))
+                    .unwrap_or_default();
+                rows.push(vec![
+                    name.to_string(),
+                    p.to_string(),
+                    mode.to_string(),
+                    path,
+                    format!("{:.6}", r.latency_ms()),
+                    format!("{:.1}", r.power_mw),
+                    acc,
+                ]);
+            };
+            for depth in 1..=n {
+                let mask = if depth == n {
+                    GateMask::all_active()
+                } else {
+                    GateMask::depth_prefix(&net, depth)
+                };
+                push("depth", mask, format!("d{depth}_w100"));
+            }
+            push("width", GateMask::width(0.5), format!("d{n}_w50"));
+        }
+    }
+    Csv {
+        name: "fig11_12_morphing".into(),
+        header: ["model", "p", "mode", "path", "latency_ms", "power_mw", "accuracy"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rows,
+    }
+}
+
+/// Write every exportable series into `dir`.
+pub fn export_all(dir: &Path) -> std::io::Result<Vec<String>> {
+    let tables = [fig2_csv(48, 20, 7), fig10_csv(), morphing_csv()];
+    let mut names = Vec::new();
+    for t in &tables {
+        t.write_to(dir)?;
+        names.push(format!("{}.csv", t.name));
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_csv_marks_front_subset() {
+        let csv = fig2_csv(16, 4, 1);
+        assert_eq!(csv.header.len(), 3);
+        let on_front = csv.rows.iter().filter(|r| r[2] == "1").count();
+        assert!(on_front > 0 && on_front < csv.rows.len());
+    }
+
+    #[test]
+    fn fig10_csv_rows_complete() {
+        let csv = fig10_csv();
+        assert_eq!(csv.rows.len(), 12); // 3 models x 4 configs
+        for row in &csv.rows {
+            assert_eq!(row.len(), csv.header.len());
+            // dsp est == real (the exact columns)
+            assert_eq!(row[2], row[3]);
+        }
+    }
+
+    #[test]
+    fn morphing_csv_covers_depth_and_width() {
+        let csv = morphing_csv();
+        assert!(csv.rows.iter().any(|r| r[2] == "depth"));
+        assert!(csv.rows.iter().any(|r| r[2] == "width"));
+        // mnist: 3 p-levels x (3 depth + 1 width) = 12 rows
+        assert_eq!(csv.rows.iter().filter(|r| r[0] == "mnist").count(), 12);
+    }
+
+    #[test]
+    fn export_writes_files() {
+        let dir = std::env::temp_dir().join("forgemorph_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let names = export_all(&dir).unwrap();
+        assert_eq!(names.len(), 3);
+        for n in names {
+            assert!(dir.join(n).exists());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,701 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. V) from this reproduction's own models and simulator.
+//!
+//! Each `table*`/`fig*` function returns the formatted block the CLI
+//! prints (`forgemorph report <id>`); `all()` concatenates everything.
+//! Baseline rows that are published measurements (other compilers, edge
+//! devices, ImageNet accuracies) come from [`crate::baselines`] and are
+//! marked `[ref]`; every ForgeMorph row is computed live.
+
+pub mod export;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::baselines;
+use crate::design::{self, DesignConfig};
+use crate::dse;
+use crate::graph::{zoo, Network};
+use crate::morph::{MorphPath, PathRegistry};
+use crate::pe::{luts, Device, FpRep, ZYNQ_7100};
+use crate::power::PowerModel;
+use crate::runtime::Manifest;
+use crate::sim::{self, GateMask};
+
+/// Small-benchmark list used across Table III / Figs. 10-12.
+const SMALL_MODELS: &[&str] = &["mnist", "svhn", "cifar10"];
+
+/// Uniform-parallelism ladder standing in for "NeuroForge configurations
+/// of varying sizes" where the paper does not pin exact mappings.
+const CONFIG_LADDER: &[usize] = &[8, 4, 2, 1];
+
+fn header(title: &str) -> String {
+    format!("\n=== {title} ===\n")
+}
+
+fn pct_err(est: f64, real: f64) -> f64 {
+    if real == 0.0 {
+        return 0.0;
+    }
+    ((est - real) / real * 100.0).abs()
+}
+
+fn opt_f(v: Option<f64>, unit: &str) -> String {
+    v.map(|x| format!("{x:.2}{unit}")).unwrap_or_else(|| "NA".into())
+}
+
+/// Load the artifacts manifest if `make artifacts` has run.
+pub fn try_manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).ok()
+}
+
+fn manifest_accuracy(manifest: &Option<Manifest>, model: &str, path: &str) -> Option<f64> {
+    manifest
+        .as_ref()?
+        .model(model)?
+        .paths
+        .iter()
+        .find(|p| p.path.name == path)
+        .map(|p| p.path.accuracy)
+}
+
+// ---------------------------------------------------------------------------
+// Table I / II
+// ---------------------------------------------------------------------------
+
+/// Table I: per-filter-size LUT/FF constants (estimator inputs).
+pub fn table1() -> String {
+    let mut s = header("Table I: Resource utilization for different filter sizes");
+    let _ = writeln!(s, "{:<12} {:>9} {:>9} {:>10} {:>10}", "Filter", "LUT conv", "LUT pool", "FF conv", "FF pool");
+    for k in [2, 3, 4, 5] {
+        let _ = writeln!(
+            s,
+            "{:<12} {:>9} {:>9} {:>10} {:>10}",
+            format!("{k}x{k}"),
+            luts::conv_luts(k),
+            luts::pool_luts(k),
+            luts::conv_regs(k),
+            luts::pool_regs(k)
+        );
+    }
+    s
+}
+
+/// Table II: benchmark architectures — paper counts vs our descriptors.
+pub fn table2() -> String {
+    let mut s = header("Table II: Architectures used for validation");
+    let _ = writeln!(
+        s,
+        "{:<12} {:<16} {:>14} {:>13} {:>14} {:>13}",
+        "Dataset", "Architecture", "paper params", "paper ops", "ours params", "ours MACs"
+    );
+    let nets: Vec<(&str, Network)> = vec![
+        ("mnist", zoo::mnist()),
+        ("svhn", zoo::svhn()),
+        ("cifar10", zoo::cifar10()),
+        ("resnet50", zoo::resnet50()),
+        ("mobilenetv2", zoo::mobilenet_v2()),
+        ("squeezenet", zoo::squeezenet()),
+        ("yolov5l", zoo::yolov5l()),
+    ];
+    for ((dataset, arch, p_params, p_ops), (_, net)) in
+        zoo::TABLE2_ROWS.iter().zip(nets.iter())
+    {
+        let _ = writeln!(
+            s,
+            "{:<12} {:<16} {:>14} {:>13} {:>14} {:>13}",
+            dataset,
+            arch,
+            fmt_count(*p_params),
+            fmt_count(*p_ops),
+            fmt_count(net.count_params().unwrap() as f64),
+            fmt_count(net.count_macs().unwrap() as f64)
+        );
+    }
+    let _ = writeln!(
+        s,
+        "note: paper op counts include its (unspecified) FC stacks; our\n\
+         descriptors use the deployed morphable heads — conv scale matches."
+    );
+    s
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else {
+        format!("{:.2}K", x / 1e3)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 / Fig. 8 — DSE behaviour
+// ---------------------------------------------------------------------------
+
+/// Fig. 2: Pareto front of DSP vs latency for the CIFAR-10 model.
+pub fn fig2(pop: usize, gens: usize, seed: u64) -> String {
+    let net = zoo::cifar10();
+    let cfg = dse::DseConfig {
+        population: pop,
+        generations: gens,
+        seed,
+        constraints: dse::Constraints::device(&ZYNQ_7100),
+        ..dse::DseConfig::default()
+    };
+    let res = dse::run(&net, &ZYNQ_7100, &cfg);
+    let mut s = header("Fig. 2: NeuroForge DSE Pareto front (CIFAR-10 8-16-32-64-64)");
+    let _ = writeln!(
+        s,
+        "evaluated {} candidates across {} generations (pop {})",
+        res.evaluations, gens, pop
+    );
+    let _ = writeln!(s, "{:<28} {:>8} {:>12} {:>10}", "parallelism p(i)", "DSP", "latency ms", "PEs");
+    for c in &res.pareto {
+        let _ = writeln!(
+            s,
+            "{:<28} {:>8} {:>12.4} {:>10}",
+            format!("{:?}", c.config.parallelism),
+            c.objectives.dsp,
+            c.objectives.latency_ms,
+            c.objectives.total_pes
+        );
+    }
+    let lo = res.pareto.first().map(|c| c.objectives.latency_ms).unwrap_or(0.0);
+    let hi = res.pareto.last().map(|c| c.objectives.latency_ms).unwrap_or(0.0);
+    let _ = writeln!(s, "front spans {:.1}x in latency ({:.4} .. {:.4} ms)", hi / lo.max(1e-12), lo, hi);
+    s
+}
+
+/// Fig. 8: PE allocation example — how a p-vector expands via Eq. 14.
+pub fn fig8() -> String {
+    let net = zoo::mnist();
+    let mut s = header("Fig. 8: Design-space generations (Eq. 14 PE expansion, MNIST)");
+    for p in [vec![1usize, 2, 4], vec![2, 4, 8], vec![8, 16, 32]] {
+        let cfg = DesignConfig { parallelism: p.clone(), rep: FpRep::Int16 };
+        let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        let lanes: Vec<String> = eval
+            .mappings
+            .iter()
+            .filter(|m| m.name.starts_with("conv"))
+            .map(|m| format!("{}x", m.pe_count))
+            .collect();
+        let _ = writeln!(
+            s,
+            "p = {:<12}  ->  L(i) = {:<18} total {} C_PEs, {} DSP, {:.3} ms",
+            format!("{p:?}"),
+            lanes.join(" + "),
+            eval.total_pes,
+            eval.resources.dsp,
+            eval.latency_ms()
+        );
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 / Table III — estimator validation against the simulator
+// ---------------------------------------------------------------------------
+
+/// One est-vs-real row for a (model, uniform-p) configuration.
+struct EstReal {
+    pes: usize,
+    dsp_est: usize,
+    dsp_real: usize,
+    lut_est: usize,
+    lut_real: usize,
+    bram_est: usize,
+    bram_real: usize,
+    lat_est_ms: f64,
+    lat_real_ms: f64,
+    power_mw: f64,
+}
+
+fn est_real(net: &Network, p: usize, device: &Device) -> EstReal {
+    let cfg = DesignConfig::uniform(net, p, FpRep::Int16);
+    let est = design::evaluate(net, &cfg, device).unwrap();
+    let real = sim::simulate(net, &cfg, device, &GateMask::all_active());
+    EstReal {
+        pes: est.total_pes,
+        dsp_est: est.resources.dsp,
+        dsp_real: real.resources.dsp,
+        lut_est: est.resources.lut,
+        lut_real: real.resources.lut,
+        bram_est: est.resources.bram,
+        bram_real: real.resources.bram,
+        lat_est_ms: est.latency_ms(),
+        lat_real_ms: real.latency_ms(),
+        power_mw: real.power_mw,
+    }
+}
+
+/// Fig. 10: estimated vs reported latency/resources across configs.
+pub fn fig10() -> String {
+    let mut s = header("Fig. 10: estimated vs simulated (\"reported\") resources & latency");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>4} | {:>8} {:>8} {:>6} | {:>9} {:>9} {:>6} | {:>9} {:>9} {:>6}",
+        "model", "p", "DSP est", "DSP real", "err%", "LUT est", "LUT real", "err%", "lat est", "lat real", "err%"
+    );
+    for name in SMALL_MODELS {
+        let net = zoo::by_name(name).unwrap();
+        for &p in &[8usize, 4, 2] {
+            let r = est_real(&net, p, &ZYNQ_7100);
+            let _ = writeln!(
+                s,
+                "{:<10} {:>4} | {:>8} {:>8} {:>5.1}% | {:>9} {:>9} {:>5.1}% | {:>8.3}ms {:>8.3}ms {:>5.1}%",
+                name,
+                p,
+                r.dsp_est,
+                r.dsp_real,
+                pct_err(r.dsp_est as f64, r.dsp_real as f64),
+                r.lut_est,
+                r.lut_real,
+                pct_err(r.lut_est as f64, r.lut_real as f64),
+                r.lat_est_ms,
+                r.lat_real_ms,
+                pct_err(r.lat_est_ms, r.lat_real_ms)
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "expected shape: DSP/BRAM exact, LUT a few %% (control/routing),\n\
+         latency estimate optimistic by pass-switch overheads."
+    );
+    s
+}
+
+/// Table III: estimated + reported usage for a ladder of configurations.
+pub fn table3() -> String {
+    let mut s = header("Table III: estimated and reported resource usage (NeuroForge configs)");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>6} | {:>7} {:>7} {:>5} | {:>8} {:>8} {:>5} | {:>6} {:>6} {:>5} | {:>9} {:>9} | {:>8}",
+        "dataset", "PEs", "DSPr", "DSPe", "err%", "LUTr", "LUTe", "err%", "BRAMr", "BRAMe", "err%", "lat est", "lat real", "power"
+    );
+    for name in SMALL_MODELS {
+        let net = zoo::by_name(name).unwrap();
+        for &p in CONFIG_LADDER {
+            let r = est_real(&net, p, &ZYNQ_7100);
+            let _ = writeln!(
+                s,
+                "{:<10} {:>6} | {:>7} {:>7} {:>4.1}% | {:>8} {:>8} {:>4.1}% | {:>6} {:>6} {:>4.1}% | {:>7.3}ms {:>7.3}ms | {:>6.0}mW",
+                name,
+                r.pes,
+                r.dsp_real,
+                r.dsp_est,
+                pct_err(r.dsp_est as f64, r.dsp_real as f64),
+                r.lut_real,
+                r.lut_est,
+                pct_err(r.lut_est as f64, r.lut_real as f64),
+                r.bram_real,
+                r.bram_est,
+                pct_err(r.bram_est as f64, r.bram_real as f64),
+                r.lat_est_ms,
+                r.lat_real_ms,
+                r.power_mw
+            );
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Table IV / V / VI — big-model mappings and comparisons
+// ---------------------------------------------------------------------------
+
+/// Best deterministic mapping within the device budget (bottleneck-
+/// balancing greedy; see [`DesignConfig::balanced`]).
+pub fn fit_design(net: &Network, rep: FpRep, device: &Device) -> DesignConfig {
+    DesignConfig::balanced(net, rep, device)
+}
+
+/// Table IV: compiler comparison on the big models.
+pub fn table4() -> String {
+    let mut s = header("Table IV: FPGA compiler comparison (FPS / Top-1 / J per frame)");
+    let pm = PowerModel::default();
+    let _ = (&pm,);
+    for (idx, (model_name, zoo_name)) in [
+        ("MobileNetV2 (ImageNet)", "mobilenetv2"),
+        ("ResNet-50 (ImageNet)", "resnet50"),
+        ("SqueezeNet (ImageNet)", "squeezenet"),
+        ("YOLOv5-Large (COCO 2017)", "yolov5l"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let net = zoo::by_name(zoo_name).unwrap();
+        let acc = baselines::TABLE4_FORGEMORPH_TOP1[idx];
+        let _ = writeln!(s, "\n-- {model_name} --");
+        let _ = writeln!(
+            s,
+            "{:<26} {:<6} {:>10} {:>8} {:>10} {:>6} {:<12}",
+            "framework", "prec", "FPS", "Top-1", "J/frame", "MHz", "FPGA"
+        );
+        for (rep, label, top1) in [
+            (FpRep::Int16, "NeuroForge-16", acc.1),
+            (FpRep::Int8, "NeuroForge-8", acc.2),
+        ] {
+            let cfg = fit_design(&net, rep, &ZYNQ_7100);
+            let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            let _ = writeln!(
+                s,
+                "{:<26} {:<6} {:>10.1} {:>7.1}* {:>10.3} {:>6.0} {:<12}",
+                label,
+                if rep == FpRep::Int8 { "int8" } else { "int16" },
+                r.fps(),
+                top1,
+                r.energy_per_frame_j(),
+                ZYNQ_7100.clock_mhz,
+                ZYNQ_7100.name
+            );
+        }
+        // NeuroMorph depth split (full / split) where the paper reports it
+        if !acc.3.is_nan() {
+            let cfg = fit_design(&net, FpRep::Int8, &ZYNQ_7100);
+            let full = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            let depth = net.conv_layer_ids().len().div_ceil(2);
+            let split = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::depth_prefix(&net, depth));
+            let _ = writeln!(
+                s,
+                "{:<26} {:<6} {:>4.1}/{:>5.1} {:>3.1}/{:>4.1}* {:>4.3}/{:>5.3} {:>6.0} {:<12}",
+                "NeuroMorph (full/split)",
+                "int8",
+                full.fps(),
+                split.fps(),
+                acc.3,
+                acc.4,
+                full.energy_per_frame_j(),
+                split.energy_per_frame_j(),
+                ZYNQ_7100.clock_mhz,
+                ZYNQ_7100.name,
+            );
+        }
+        for row in baselines::TABLE4_BASELINES[idx].1 {
+            let _ = writeln!(
+                s,
+                "{:<26} {:<6} {:>10} {:>8} {:>10} {:>6} {:<12} [ref]",
+                row.framework,
+                row.precision,
+                opt_f(row.fps, ""),
+                opt_f(row.top1, ""),
+                opt_f(row.energy_j_frame, ""),
+                opt_f(row.freq_mhz, ""),
+                row.fpga
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "\n* Top-1 for ForgeMorph rows is the paper's (ImageNet training is\n\
+         out of scope offline — DESIGN.md §2); FPS/energy are simulated live."
+    );
+    s
+}
+
+/// Table V: post-P&R-style utilization of the big-model mappings.
+pub fn table5() -> String {
+    let mut s = header("Table V: resource utilization on Zynq-7100 (444K LUT, 1510x18Kb BRAM, 2020 DSP)");
+    let _ = writeln!(
+        s,
+        "{:<14} {:<6} {:>14} {:>14} {:>12} {:>6}",
+        "model", "prec", "kLUT (%)", "BRAM (%)", "DSP (%)", "MHz"
+    );
+    let budget = ZYNQ_7100.budget;
+    for zoo_name in ["mobilenetv2", "resnet50", "squeezenet", "yolov5l"] {
+        let net = zoo::by_name(zoo_name).unwrap();
+        for rep in [FpRep::Int16, FpRep::Int8] {
+            let cfg = fit_design(&net, rep, &ZYNQ_7100);
+            let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            let _ = writeln!(
+                s,
+                "{:<14} {:<6} {:>8.1} ({:>3.0}%) {:>8} ({:>3.0}%) {:>6} ({:>3.0}%) {:>6.0}",
+                zoo_name,
+                if rep == FpRep::Int8 { "int8" } else { "int16" },
+                r.resources.lut as f64 / 1000.0,
+                r.resources.lut as f64 / budget.lut as f64 * 100.0,
+                r.resources.bram,
+                r.resources.bram as f64 / budget.bram as f64 * 100.0,
+                r.resources.dsp,
+                r.resources.dsp as f64 / budget.dsp as f64 * 100.0,
+                ZYNQ_7100.clock_mhz
+            );
+        }
+    }
+    s
+}
+
+/// Table VI: edge-platform efficiency (inferences per Watt).
+pub fn table6() -> String {
+    let mut s = header("Table VI: edge devices on latency / power / inferences-per-Watt");
+    let _ = writeln!(s, "{:<18} {:>12} {:>10} {:>12}", "device", "latency ms", "power W", "inf/W");
+    for row in baselines::TABLE6_BASELINES {
+        let _ = writeln!(
+            s,
+            "{:<18} {:>12.2} {:>10.2} {:>12.1} [ref]",
+            row.device,
+            row.latency_ms,
+            row.power_w,
+            row.inf_per_watt()
+        );
+    }
+    // our FPGA row: MobileNet-class model simulated on the Zynq mapping
+    // (paper used MobileNetV1; our zoo carries the V2 descriptor — same
+    // depthwise-separable family and op scale)
+    let net = zoo::mobilenet_v2();
+    let cfg = fit_design(&net, FpRep::Int8, &ZYNQ_7100);
+    let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+    // sustained per-frame time of the pipelined design (the throughput
+    // figure the other devices' MLPerf numbers correspond to)
+    let lat_ms = 1000.0 / r.fps();
+    let power_w = r.power_mw / 1000.0;
+    let ipw = (1000.0 / lat_ms) / power_w;
+    let _ = writeln!(
+        s,
+        "{:<18} {:>12.2} {:>10.2} {:>12.1} [ours, simulated]",
+        "FPGA (ours)", lat_ms, power_w, ipw
+    );
+    let p = baselines::TABLE6_PAPER_FPGA;
+    let _ = writeln!(
+        s,
+        "{:<18} {:>12.2} {:>10.2} {:>12.1} [paper]",
+        p.device, p.latency_ms, p.power_w, p.inf_per_watt()
+    );
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 11 / 12 — NeuroMorph runtime reconfiguration
+// ---------------------------------------------------------------------------
+
+/// Morph paths of the small a-2a-3a models (mirrors `model.py`).
+fn small_model_paths(net: &Network) -> Vec<MorphPath> {
+    let n = net.conv_layer_ids().len();
+    let mut out: Vec<MorphPath> = (1..=n)
+        .map(|d| MorphPath {
+            name: format!("d{d}_w100"),
+            depth: d,
+            width_pct: 100,
+            accuracy: 0.0,
+            params: 0,
+            macs: d, // placeholder orderings; real macs come from manifest
+        })
+        .collect();
+    out.push(MorphPath {
+        name: format!("d{n}_w50"),
+        depth: n,
+        width_pct: 50,
+        accuracy: 0.0,
+        params: 0,
+        macs: n,
+    });
+    out
+}
+
+/// Fig. 11: depth-wise morphing — latency/power/accuracy per subnet.
+pub fn fig11() -> String {
+    let manifest = try_manifest();
+    let mut s = header("Fig. 11: depth-wise reconfiguration (MNIST 8-16-32, NeuroMorph)");
+    let net = zoo::mnist();
+    let n_blocks = net.conv_layer_ids().len();
+    for &p in &[8usize, 4, 2] {
+        let cfg = DesignConfig::uniform(&net, p, FpRep::Int16);
+        let _ = writeln!(s, "\n-- NeuroForge config: uniform p={p} --");
+        let _ = writeln!(
+            s,
+            "{:<10} {:>12} {:>10} {:>10} {:>10} {:>9}",
+            "subnet", "latency ms", "power mW", "speedup", "power sav", "accuracy"
+        );
+        let full = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+        for depth in 1..=n_blocks {
+            let mask = if depth == n_blocks {
+                GateMask::all_active()
+            } else {
+                GateMask::depth_prefix(&net, depth)
+            };
+            let r = sim::simulate(&net, &cfg, &ZYNQ_7100, &mask);
+            let acc = manifest_accuracy(&manifest, "mnist", &format!("d{depth}_w100"));
+            let _ = writeln!(
+                s,
+                "{:<10} {:>12.4} {:>10.0} {:>9.2}x {:>9.1}% {:>9}",
+                format!("d{depth}"),
+                r.latency_ms(),
+                r.power_mw,
+                full.latency_ms() / r.latency_ms(),
+                (1.0 - (r.power_mw - 455.0).max(0.0) / (full.power_mw - 455.0).max(1.0)) * 100.0,
+                acc.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or_else(|| "run `make artifacts`".into())
+            );
+        }
+    }
+    s
+}
+
+/// Fig. 12: width-wise morphing across the three small models.
+pub fn fig12() -> String {
+    let manifest = try_manifest();
+    let mut s = header("Fig. 12: width-wise reconfiguration (NeuroMorph, 50% filters)");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>3} | {:>11} {:>11} {:>8} | {:>9} {:>9} | {:>9} {:>9}",
+        "model", "p", "lat full", "lat w50", "speedup", "pw full", "pw w50", "acc full", "acc w50"
+    );
+    for name in SMALL_MODELS {
+        let net = zoo::by_name(name).unwrap();
+        let n = net.conv_layer_ids().len();
+        for &p in &[8usize, 4] {
+            let cfg = DesignConfig::uniform(&net, p, FpRep::Int16);
+            let full = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            let half = sim::simulate(&net, &cfg, &ZYNQ_7100, &GateMask::width(0.5));
+            let acc_full = manifest_accuracy(&manifest, name, &format!("d{n}_w100"));
+            let acc_half = manifest_accuracy(&manifest, name, &format!("d{n}_w50"));
+            let fmt_acc = |a: Option<f64>| {
+                a.map(|x| format!("{:.1}%", x * 100.0)).unwrap_or_else(|| "--".into())
+            };
+            let _ = writeln!(
+                s,
+                "{:<10} {:>3} | {:>9.3}ms {:>9.3}ms {:>7.2}x | {:>7.0}mW {:>7.0}mW | {:>9} {:>9}",
+                name,
+                p,
+                full.latency_ms(),
+                half.latency_ms(),
+                full.latency_ms() / half.latency_ms(),
+                full.power_mw,
+                half.power_mw,
+                fmt_acc(acc_full),
+                fmt_acc(acc_half)
+            );
+        }
+    }
+    let _ = writeln!(s, "accuracies come from DistillCycle training (manifest); '--' = model not built");
+    s
+}
+
+/// Everything, in paper order.
+pub fn all() -> String {
+    let mut s = String::new();
+    s.push_str(&table1());
+    s.push_str(&table2());
+    s.push_str(&fig2(48, 20, 7));
+    s.push_str(&fig8());
+    s.push_str(&fig10());
+    s.push_str(&table3());
+    s.push_str(&table4());
+    s.push_str(&table5());
+    s.push_str(&table6());
+    s.push_str(&fig11());
+    s.push_str(&fig12());
+    s
+}
+
+/// Registry consumed by the CLI and by `bench_tables`.
+pub fn by_name(id: &str) -> Option<String> {
+    Some(match id {
+        "table1" => table1(),
+        "table2" => table2(),
+        "table3" => table3(),
+        "table4" => table4(),
+        "table5" => table5(),
+        "table6" => table6(),
+        "fig2" => fig2(48, 20, 7),
+        "fig8" => fig8(),
+        "fig10" => fig10(),
+        "fig11" => fig11(),
+        "fig12" => fig12(),
+        "all" => all(),
+        _ => return None,
+    })
+}
+
+/// Ensure the governor's registry can be built from the small models
+/// (used by examples; exposed for tests).
+pub fn small_registry(net: &Network) -> PathRegistry {
+    let mut paths = small_model_paths(net);
+    // order by depth/width cost proxy
+    for (i, p) in paths.iter_mut().enumerate() {
+        p.macs = (i + 1) * 1000;
+    }
+    PathRegistry::new(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_constants() {
+        let t = table1();
+        assert!(t.contains("850"));
+        assert!(t.contains("3x3"));
+    }
+
+    #[test]
+    fn table2_lists_all_models() {
+        let t = table2();
+        for m in ["MNIST", "ResNet-50", "YOLOv5-Large"] {
+            assert!(t.contains(m), "{m} missing");
+        }
+    }
+
+    #[test]
+    fn fig8_shows_eq14_expansion() {
+        let f = fig8();
+        // p = [2,4,8] -> L = 2 + 8 + 32
+        assert!(f.contains("2x + 8x + 32x"), "{f}");
+    }
+
+    #[test]
+    fn fig10_errors_bounded() {
+        let f = fig10();
+        // DSP error must be exactly zero everywhere
+        for line in f.lines().filter(|l| l.contains("ms")) {
+            let cols: Vec<&str> = line.split('|').collect();
+            if cols.len() == 4 {
+                assert!(cols[1].contains("0.0%"), "DSP err nonzero: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn table3_has_all_ladder_rows() {
+        let t = table3();
+        let rows = t.lines().filter(|l| l.contains("mW")).count();
+        assert_eq!(rows, SMALL_MODELS.len() * CONFIG_LADDER.len());
+    }
+
+    #[test]
+    fn table6_ours_beats_jetsons_on_efficiency() {
+        let t = table6();
+        assert!(t.contains("FPGA (ours)"));
+        // extract our inf/W and compare against AGX's 62.9
+        let line = t.lines().find(|l| l.contains("[ours")).unwrap();
+        let ipw: f64 = line
+            .split_whitespace()
+            .rev()
+            .nth(2)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(ipw > 62.9, "ours {ipw} should beat AGX (paper shape: 2.8x)");
+    }
+
+    #[test]
+    fn fig11_reports_speedups() {
+        let f = fig11();
+        assert!(f.contains("d1") && f.contains("d3"));
+        assert!(f.contains("x"), "speedup column missing");
+    }
+
+    #[test]
+    fn by_name_covers_everything() {
+        for id in [
+            "table1", "table2", "table3", "table4", "table5", "table6",
+            "fig8", "fig10", "fig11", "fig12",
+        ] {
+            assert!(by_name(id).is_some(), "{id}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,196 @@
+//! Verilog source construction primitives.
+//!
+//! A thin writer that tracks indentation and balances `module`/
+//! `endmodule`, `begin`/`end` pairs — the emitter building block shared
+//! by every generated module.
+
+use std::fmt::Write as _;
+
+/// Port direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Input,
+    Output,
+    OutputReg,
+}
+
+/// A module port declaration.
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub dir: Dir,
+    pub width: usize,
+    pub name: String,
+}
+
+impl Port {
+    pub fn input(name: &str, width: usize) -> Port {
+        Port { dir: Dir::Input, width, name: name.into() }
+    }
+
+    pub fn output(name: &str, width: usize) -> Port {
+        Port { dir: Dir::Output, width, name: name.into() }
+    }
+
+    pub fn output_reg(name: &str, width: usize) -> Port {
+        Port { dir: Dir::OutputReg, width, name: name.into() }
+    }
+}
+
+/// Indented Verilog writer.
+pub struct VerilogWriter {
+    buf: String,
+    indent: usize,
+    opened_modules: usize,
+    opened_blocks: usize,
+}
+
+impl VerilogWriter {
+    pub fn new(header_comment: &str) -> VerilogWriter {
+        let mut w = VerilogWriter {
+            buf: String::new(),
+            indent: 0,
+            opened_modules: 0,
+            opened_blocks: 0,
+        };
+        for line in header_comment.lines() {
+            let _ = writeln!(w.buf, "// {line}");
+        }
+        w.line("`timescale 1ns / 1ps");
+        w.blank();
+        w
+    }
+
+    pub fn line(&mut self, s: &str) {
+        for _ in 0..self.indent {
+            self.buf.push_str("    ");
+        }
+        self.buf.push_str(s);
+        self.buf.push('\n');
+    }
+
+    pub fn blank(&mut self) {
+        self.buf.push('\n');
+    }
+
+    /// Open `module name #(params) (ports);`
+    pub fn module(&mut self, name: &str, params: &[(&str, String)], ports: &[Port]) {
+        self.opened_modules += 1;
+        if params.is_empty() {
+            self.line(&format!("module {name} ("));
+        } else {
+            self.line(&format!("module {name} #("));
+            self.indent += 1;
+            for (i, (p, v)) in params.iter().enumerate() {
+                let comma = if i + 1 < params.len() { "," } else { "" };
+                self.line(&format!("parameter {p} = {v}{comma}"));
+            }
+            self.indent -= 1;
+            self.line(") (");
+        }
+        self.indent += 1;
+        for (i, p) in ports.iter().enumerate() {
+            let dir = match p.dir {
+                Dir::Input => "input  wire",
+                Dir::Output => "output wire",
+                Dir::OutputReg => "output reg ",
+            };
+            let width = if p.width > 1 {
+                format!("[{}:0] ", p.width - 1)
+            } else if p.width == 1 {
+                String::new()
+            } else {
+                // parameterized width expressed via WIDTH param
+                "[WIDTH-1:0] ".to_string()
+            };
+            let comma = if i + 1 < ports.len() { "," } else { "" };
+            self.line(&format!("{dir} {width}{}{comma}", p.name));
+        }
+        self.indent -= 1;
+        self.line(");");
+        self.indent += 1;
+    }
+
+    pub fn end_module(&mut self) {
+        assert!(self.opened_modules > 0, "end_module without module");
+        assert_eq!(self.opened_blocks, 0, "unclosed begin blocks in module");
+        self.opened_modules -= 1;
+        self.indent -= 1;
+        self.line("endmodule");
+        self.blank();
+    }
+
+    /// `always @(posedge clk) begin`
+    pub fn always_ff(&mut self, trigger: &str) {
+        self.line(&format!("always @({trigger}) begin"));
+        self.opened_blocks += 1;
+        self.indent += 1;
+    }
+
+    pub fn begin(&mut self, head: &str) {
+        self.line(&format!("{head} begin"));
+        self.opened_blocks += 1;
+        self.indent += 1;
+    }
+
+    pub fn end(&mut self) {
+        assert!(self.opened_blocks > 0, "end without begin");
+        self.opened_blocks -= 1;
+        self.indent -= 1;
+        self.line("end");
+    }
+
+    pub fn finish(self) -> String {
+        assert_eq!(self.opened_modules, 0, "unterminated module");
+        assert_eq!(self.opened_blocks, 0, "unterminated block");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_balanced_module() {
+        let mut w = VerilogWriter::new("test");
+        w.module(
+            "m",
+            &[("WIDTH", "16".into())],
+            &[Port::input("clk", 1), Port::output("q", 0)],
+        );
+        w.always_ff("posedge clk");
+        w.line("q <= 1'b0;");
+        w.end();
+        w.end_module();
+        let src = w.finish();
+        assert!(src.contains("module m #("));
+        assert!(src.contains("parameter WIDTH = 16"));
+        assert!(src.contains("output wire [WIDTH-1:0] q"));
+        assert!(src.contains("endmodule"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unterminated module")]
+    fn unbalanced_module_panics() {
+        let mut w = VerilogWriter::new("t");
+        w.module("m", &[], &[Port::input("clk", 1)]);
+        let _ = w.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "end without begin")]
+    fn unbalanced_block_panics() {
+        let mut w = VerilogWriter::new("t");
+        w.end();
+    }
+
+    #[test]
+    fn port_widths() {
+        let mut w = VerilogWriter::new("t");
+        w.module("m", &[], &[Port::input("bus", 5), Port::output_reg("r", 1)]);
+        w.end_module();
+        let src = w.finish();
+        assert!(src.contains("input  wire [4:0] bus"));
+        assert!(src.contains("output reg  r"));
+    }
+}

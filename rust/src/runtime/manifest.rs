@@ -1,0 +1,299 @@
+//! AOT manifest loader.
+//!
+//! `python/compile/aot.py` records everything the runtime needs in
+//! `artifacts/manifest.json`: per-model input geometry, the morph-path
+//! set with DistillCycle accuracies and cost counts, the HLO artifact
+//! file per (path, batch), and a probe batch with golden logits for
+//! end-to-end verification (no Python at runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::morph::MorphPath;
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest schema: {0}")]
+    Schema(String),
+}
+
+fn schema(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Schema(msg.into())
+}
+
+/// One morph path's artifact set.
+#[derive(Debug, Clone)]
+pub struct PathArtifacts {
+    pub path: MorphPath,
+    /// batch size -> HLO text file name
+    pub files: BTreeMap<usize, String>,
+}
+
+/// Probe batch with golden logits recorded at AOT time.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub shape: Vec<usize>,
+    pub x: Vec<f32>,
+    /// path name -> flattened logits
+    pub logits: BTreeMap<String, Vec<f32>>,
+}
+
+/// One model's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    pub filters: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub paths: Vec<PathArtifacts>,
+    /// intN full-path artifacts: bits -> file
+    pub quant_full: BTreeMap<u32, String>,
+    pub probe: Probe,
+}
+
+impl ModelManifest {
+    pub fn morph_paths(&self) -> Vec<MorphPath> {
+        self.paths.iter().map(|p| p.path.clone()).collect()
+    }
+
+    pub fn artifact_for(&self, path_name: &str, batch: usize) -> Option<&str> {
+        self.paths
+            .iter()
+            .find(|p| p.path.name == path_name)
+            .and_then(|p| p.files.get(&batch))
+            .map(String::as_str)
+    }
+}
+
+/// The full artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text)?;
+        if root.get("version").and_then(Json::as_u64) != Some(1) {
+            return Err(schema("unsupported manifest version"));
+        }
+        let mut models = BTreeMap::new();
+        let model_objs = root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| schema("missing 'models'"))?;
+        for (name, m) in model_objs {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelManifest> {
+        self.models.get(name)
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn file_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelManifest, ManifestError> {
+    let ctx = |f: &str| format!("model {name}: missing/invalid '{f}'");
+    let input = m
+        .get("input_shape")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| schema(ctx("input_shape")))?;
+    if input.len() != 3 {
+        return Err(schema(ctx("input_shape (want [h,w,c])")));
+    }
+    let num_classes = m
+        .get("num_classes")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| schema(ctx("num_classes")))? as usize;
+    let filters = m
+        .get("filters")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| schema(ctx("filters")))?;
+    let batches = m
+        .get("batches")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| schema(ctx("batches")))?;
+
+    let mut paths = Vec::new();
+    for p in m.get("paths").and_then(Json::as_arr).ok_or_else(|| schema(ctx("paths")))? {
+        let pname = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema(ctx("paths[].name")))?;
+        let mut files = BTreeMap::new();
+        let arts = p
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| schema(ctx("paths[].artifacts")))?;
+        for (b, f) in arts {
+            let batch: usize =
+                b.parse().map_err(|_| schema(ctx("paths[].artifacts key")))?;
+            files.insert(
+                batch,
+                f.as_str().ok_or_else(|| schema(ctx("artifact file")))?.to_string(),
+            );
+        }
+        paths.push(PathArtifacts {
+            path: MorphPath {
+                name: pname.to_string(),
+                depth: p.get("depth").and_then(Json::as_u64).unwrap_or(0) as usize,
+                width_pct: p.get("width_pct").and_then(Json::as_u64).unwrap_or(100) as usize,
+                accuracy: p.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+                params: p.get("params").and_then(Json::as_u64).unwrap_or(0) as usize,
+                macs: p.get("macs").and_then(Json::as_u64).unwrap_or(0) as usize,
+            },
+            files,
+        });
+    }
+    if paths.is_empty() {
+        return Err(schema(ctx("paths (empty)")));
+    }
+
+    let mut quant_full = BTreeMap::new();
+    if let Some(q) = m.get("quant_full").and_then(Json::as_obj) {
+        for (bits, f) in q {
+            let b: u32 = bits.parse().map_err(|_| schema(ctx("quant_full key")))?;
+            quant_full.insert(
+                b,
+                f.as_str().ok_or_else(|| schema(ctx("quant_full file")))?.to_string(),
+            );
+        }
+    }
+
+    let probe_j = m.get("probe").ok_or_else(|| schema(ctx("probe")))?;
+    let shape = probe_j
+        .get("shape")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| schema(ctx("probe.shape")))?;
+    let x: Vec<f32> = probe_j
+        .get("x")
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| schema(ctx("probe.x")))?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let mut logits = BTreeMap::new();
+    for (pname, arr) in probe_j
+        .get("logits")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| schema(ctx("probe.logits")))?
+    {
+        logits.insert(
+            pname.clone(),
+            arr.as_f64_vec()
+                .ok_or_else(|| schema(ctx("probe.logits values")))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+        );
+    }
+    let expect: usize = shape.iter().product();
+    if x.len() != expect {
+        return Err(schema(format!(
+            "model {name}: probe.x has {} values, shape implies {expect}",
+            x.len()
+        )));
+    }
+
+    Ok(ModelManifest {
+        name: name.to_string(),
+        input_shape: (input[0], input[1], input[2]),
+        num_classes,
+        filters,
+        batches,
+        paths,
+        quant_full,
+        probe: Probe { shape, x, logits },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "mnist": {
+          "input_shape": [2, 2, 1],
+          "num_classes": 2,
+          "filters": [4],
+          "batches": [1],
+          "paths": [
+            {"name": "d1_w100", "depth": 1, "width_pct": 100,
+             "accuracy": 0.9, "params": 10, "macs": 100,
+             "artifacts": {"1": "m_d1_b1.hlo.txt"}}
+          ],
+          "quant_full": {"8": "m_q8.hlo.txt"},
+          "probe": {
+            "shape": [1, 2, 2, 1],
+            "x": [0.0, 0.25, 0.5, 1.0],
+            "logits": {"d1_w100": [0.1, 0.9]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let model = m.model("mnist").unwrap();
+        assert_eq!(model.input_shape, (2, 2, 1));
+        assert_eq!(model.paths.len(), 1);
+        assert_eq!(model.artifact_for("d1_w100", 1), Some("m_d1_b1.hlo.txt"));
+        assert_eq!(model.artifact_for("d1_w100", 8), None);
+        assert_eq!(model.quant_full.get(&8).unwrap(), "m_q8.hlo.txt");
+        assert_eq!(model.probe.logits["d1_w100"].len(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_probe_shape_mismatch() {
+        let bad = SAMPLE.replace("[1, 2, 2, 1]", "[1, 3, 3, 1]");
+        assert!(matches!(
+            Manifest::parse(Path::new("/tmp"), &bad),
+            Err(ManifestError::Schema(_))
+        ));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration sanity against the actual artifacts when present
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let model = m.model("mnist").expect("mnist built");
+            assert_eq!(model.input_shape, (28, 28, 1));
+            assert!(model.paths.len() >= 4);
+            for p in &model.paths {
+                for f in p.files.values() {
+                    assert!(m.file_path(f).exists(), "missing {f}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT runtime — loads and executes the AOT morph-path artifacts.
+//!
+//! The deployment contract (DESIGN.md §3): `make artifacts` is the last
+//! time Python runs. This module loads each morph path's HLO **text**
+//! (the interchange format xla_extension 0.5.1 accepts — serialized
+//! jax>=0.5 protos carry 64-bit ids it rejects), compiles one PJRT
+//! executable per (path, batch), and serves `execute()` calls from the
+//! coordinator hot path.
+//!
+//! All executables come from ONE artifact set — the software analogue of
+//! NeuroMorph's single multi-path bitstream; "clock gating" a path is
+//! simply dispatching to a cheaper executable.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestError, ModelManifest};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest: {0}")]
+    Manifest(#[from] ManifestError),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("no artifact for path '{path}' at batch {batch}")]
+    NoArtifact { path: String, batch: usize },
+    #[error("input length {got} != batch {batch} x frame {frame}")]
+    BadInput { got: usize, batch: usize, frame: usize },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled morph-path executable.
+struct PathExe {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// The per-model PJRT engine: one executable per (morph path, batch).
+pub struct Engine {
+    client: xla::PjRtClient,
+    model: ModelManifest,
+    exes: BTreeMap<(String, usize), PathExe>,
+}
+
+impl Engine {
+    /// Load every (path, batch) artifact of `model_name` from `dir`.
+    pub fn load(dir: &Path, model_name: &str) -> Result<Engine, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let model = manifest
+            .model(model_name)
+            .ok_or_else(|| {
+                RuntimeError::Manifest(ManifestError::Schema(format!(
+                    "model '{model_name}' not in manifest"
+                )))
+            })?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for pa in &model.paths {
+            for (&batch, file) in &pa.files {
+                let proto =
+                    xla::HloModuleProto::from_text_file(manifest.file_path(file).to_str().unwrap())?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                exes.insert((pa.path.name.clone(), batch), PathExe { exe, batch });
+            }
+        }
+        Ok(Engine { client, model, exes })
+    }
+
+    pub fn model(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Frame element count (H*W*C).
+    pub fn frame_len(&self) -> usize {
+        let (h, w, c) = self.model.input_shape;
+        h * w * c
+    }
+
+    /// Batch sizes available for a path.
+    pub fn batches_for(&self, path: &str) -> Vec<usize> {
+        self.exes
+            .keys()
+            .filter(|(p, _)| p == path)
+            .map(|(_, b)| *b)
+            .collect()
+    }
+
+    /// Execute one morph path on a flat NHWC input of `batch` frames;
+    /// returns flattened logits `[batch * num_classes]`.
+    pub fn execute(
+        &self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        let frame = self.frame_len();
+        if input.len() != batch * frame {
+            return Err(RuntimeError::BadInput {
+                got: input.len(),
+                batch,
+                frame,
+            });
+        }
+        let pe = self
+            .exes
+            .get(&(path.to_string(), batch))
+            .ok_or_else(|| RuntimeError::NoArtifact { path: path.to_string(), batch })?;
+        let (h, w, c) = self.model.input_shape;
+        let x = xla::Literal::vec1(input)
+            .reshape(&[pe.batch as i64, h as i64, w as i64, c as i64])?;
+        let result = pe.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple of logits
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Argmax class ids for a batch of logits.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks(self.model.num_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Run the manifest's probe batch through every path and compare with
+    /// the golden logits recorded at AOT time. Returns max |err| per path.
+    pub fn verify_probe(&self) -> Result<BTreeMap<String, f32>, RuntimeError> {
+        let probe = &self.model.probe;
+        let batch = probe.shape[0];
+        let frame = self.frame_len();
+        let mut out = BTreeMap::new();
+        for pa in &self.model.paths {
+            let name = &pa.path.name;
+            // probe recorded at the largest batch; use matching exe if
+            // present, else slice the first frame for a batch-1 check
+            let (use_batch, x): (usize, Vec<f32>) =
+                if self.exes.contains_key(&(name.clone(), batch)) {
+                    (batch, probe.x.clone())
+                } else {
+                    (1, probe.x[..frame].to_vec())
+                };
+            let got = self.execute(name, use_batch, &x)?;
+            let want = &self.model.probe.logits[name];
+            let err = got
+                .iter()
+                .zip(want.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            out.insert(name.clone(), err);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests requiring built artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts` and a
+    // PJRT client, which unit tests avoid).
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        let e = RuntimeError::NoArtifact { path: "d1".into(), batch: 4 };
+        assert!(e.to_string().contains("d1"));
+        let e = RuntimeError::BadInput { got: 3, batch: 1, frame: 4 };
+        assert!(e.to_string().contains("3"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Functional line-buffer model — bit-true twin of `rtl/modules.rs`'s
+//! `line_buffer`.
+//!
+//! Streams a frame pixel-by-pixel through K-1 row FIFOs and a KxK tap
+//! bank, emitting the same window sequence the RTL produces. Tests
+//! validate it against naive im2col window extraction — the concrete
+//! microarchitecture-correctness check standing in for RTL simulation.
+
+/// Line buffer state for a `k`x`k` window over a `w`-wide frame.
+#[derive(Debug, Clone)]
+pub struct LineBuffer {
+    k: usize,
+    w: usize,
+    stride: usize,
+    rows: Vec<Vec<i32>>, // K-1 row FIFOs
+    taps: Vec<Vec<i32>>, // KxK register bank
+    col: usize,
+    row: usize,
+}
+
+/// A window emission: top-left output coordinate + KxK values
+/// (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Window {
+    pub out_row: usize,
+    pub out_col: usize,
+    pub values: Vec<i32>,
+}
+
+impl LineBuffer {
+    pub fn new(k: usize, w: usize, stride: usize) -> LineBuffer {
+        assert!(k >= 1 && w >= k && stride >= 1);
+        LineBuffer {
+            k,
+            w,
+            stride,
+            rows: vec![vec![0; w]; k.saturating_sub(1)],
+            taps: vec![vec![0; k]; k],
+            col: 0,
+            row: 0,
+        }
+    }
+
+    /// Push one pixel (stream order: row-major). Returns a window when
+    /// the tap bank holds a valid, stride-aligned KxK patch.
+    pub fn push(&mut self, px: i32) -> Option<Window> {
+        // shift tap bank left
+        for r in 0..self.k {
+            for c in 0..self.k - 1 {
+                self.taps[r][c] = self.taps[r][c + 1];
+            }
+        }
+        // new rightmost column: history rows then the live pixel
+        for r in 0..self.k - 1 {
+            self.taps[r][self.k - 1] = self.rows[r][self.col];
+        }
+        self.taps[self.k - 1][self.k - 1] = px;
+        // rotate row FIFOs at this column
+        for r in 0..self.k.saturating_sub(2) {
+            self.rows[r][self.col] = self.rows[r + 1][self.col];
+        }
+        if self.k > 1 {
+            self.rows[self.k - 2][self.col] = px;
+        }
+
+        let valid = self.row + 1 >= self.k
+            && self.col + 1 >= self.k
+            && (self.row + 1 - self.k) % self.stride == 0
+            && (self.col + 1 - self.k) % self.stride == 0;
+        let out = valid.then(|| Window {
+            out_row: (self.row + 1 - self.k) / self.stride,
+            out_col: (self.col + 1 - self.k) / self.stride,
+            values: self.taps.iter().flatten().copied().collect(),
+        });
+
+        // advance scan position
+        self.col += 1;
+        if self.col == self.w {
+            self.col = 0;
+            self.row += 1;
+        }
+        out
+    }
+
+    /// Stream a full frame, returning every emitted window in order.
+    pub fn stream_frame(&mut self, frame: &[Vec<i32>]) -> Vec<Window> {
+        let mut out = Vec::new();
+        for row in frame {
+            assert_eq!(row.len(), self.w, "row width mismatch");
+            for &px in row {
+                if let Some(w) = self.push(px) {
+                    out.push(w);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Naive reference: all stride-aligned KxK windows of a frame (VALID).
+pub fn naive_windows(frame: &[Vec<i32>], k: usize, stride: usize) -> Vec<Window> {
+    let h = frame.len();
+    let w = frame[0].len();
+    let mut out = Vec::new();
+    for r in (0..=(h - k)).step_by(stride) {
+        for c in (0..=(w - k)).step_by(stride) {
+            let mut values = Vec::with_capacity(k * k);
+            for dr in 0..k {
+                for dc in 0..k {
+                    values.push(frame[r + dr][c + dc]);
+                }
+            }
+            out.push(Window { out_row: r / stride, out_col: c / stride, values });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn frame(h: usize, w: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..h)
+            .map(|_| (0..w).map(|_| rng.range(-128, 127) as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_3x3_stride1() {
+        let f = frame(8, 10, 1);
+        let got = LineBuffer::new(3, 10, 1).stream_frame(&f);
+        let want = naive_windows(&f, 3, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matches_naive_2x2_stride2() {
+        let f = frame(6, 6, 2);
+        let got = LineBuffer::new(2, 6, 2).stream_frame(&f);
+        let want = naive_windows(&f, 2, 2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matches_naive_5x5_stride1() {
+        let f = frame(9, 7, 3);
+        let got = LineBuffer::new(5, 7, 1).stream_frame(&f);
+        let want = naive_windows(&f, 5, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn window_count_formula() {
+        let f = frame(12, 12, 4);
+        let got = LineBuffer::new(3, 12, 2).stream_frame(&f);
+        // floor((12-3)/2)+1 = 5 per axis
+        assert_eq!(got.len(), 25);
+    }
+
+    #[test]
+    fn property_random_geometries() {
+        let mut rng = Rng::new(99);
+        for _ in 0..30 {
+            let k = rng.range(1, 4) as usize;
+            let h = rng.range(k as i64, 12) as usize;
+            let w = rng.range(k as i64, 12) as usize;
+            let stride = rng.range(1, 3) as usize;
+            let f = frame(h, w, rng.next_u64());
+            let got = LineBuffer::new(k, w, stride).stream_frame(&f);
+            let want = naive_windows(&f, k, stride);
+            assert_eq!(got, want, "k={k} h={h} w={w} s={stride}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Cycle-level streaming simulator — the hardware measurement substitute.
+//!
+//! The paper's "Real" columns (Table III, Fig. 10) come from synthesized
+//! bitstreams measured on a Zynq-7100. Offline, this module plays that
+//! role: it executes the *same microarchitecture* the RTL emitter
+//! generates — row-by-row streaming through line buffers, serialized
+//! passes with drain/refill and weight-reload overheads, handshake
+//! bubbles, frame-boundary clock-gating — at row/event granularity with
+//! integer cycle accounting.
+//!
+//! Crucially it models second-order effects the analytical estimator
+//! (Eqs. 4-13) deliberately omits (pass-switch drain, per-row handshake,
+//! weight reload), so simulated latency is consistently a few percent to
+//! tens of percent *above* the MOGA estimate — the same error direction
+//! and magnitude the paper reports for estimate-vs-measurement.
+
+pub mod linebuffer;
+pub mod stream;
+
+pub use stream::{simulate, GateMask, SimReport, StageStats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::{self, DesignConfig};
+    use crate::graph::zoo;
+    use crate::pe::{FpRep, ZYNQ_7100};
+
+    #[test]
+    fn simulated_latency_at_least_estimate() {
+        // Fig. 10's validation shape: real >= estimated, within ~35%
+        let net = zoo::mnist();
+        for p in [1, 2, 4, 8] {
+            let cfg = DesignConfig::uniform(&net, p, FpRep::Int16);
+            let est = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+            let sim = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+            let ratio = sim.latency_cycles as f64 / est.latency_cycles as f64;
+            assert!(
+                (1.0..1.6).contains(&ratio),
+                "p={p}: sim/est ratio {ratio} (sim {} est {})",
+                sim.latency_cycles,
+                est.latency_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn gating_reduces_latency_and_power() {
+        let net = zoo::mnist();
+        let cfg = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let full = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+        let gated = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::depth_prefix(&net, 1));
+        assert!(gated.latency_cycles < full.latency_cycles);
+        assert!(gated.power_mw < full.power_mw);
+    }
+}

@@ -1,0 +1,32 @@
+//! Cross-cutting utilities: JSON, PRNG, CLI parsing, property testing.
+//!
+//! These exist because the offline vendor set carries only the `xla`
+//! crate's dependency closure — no serde / rand / clap / proptest.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a f64 with engineering-friendly precision (tables/reports).
+pub fn fmt_sig(x: f64, sig: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", decimals, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_basics() {
+        assert_eq!(fmt_sig(1234.5, 3), "1234"); // ties-to-even
+        assert_eq!(fmt_sig(0.012345, 3), "0.0123");
+        assert_eq!(fmt_sig(2.5, 2), "2.5");
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+}

@@ -1,0 +1,56 @@
+//! In-tree property-test harness (no `proptest` in the offline vendor set).
+//!
+//! A deliberately small shrink-free QuickCheck: generate `n` random cases
+//! from a seeded [`Rng`](super::rng::Rng), run the property, and on
+//! failure report the case index + seed so the exact case replays.
+
+use super::rng::Rng;
+
+/// Run `prop` against `n` generated cases. `gen` builds a case from the
+/// RNG; `prop` returns `Err(description)` on violation.
+pub fn check<T, G, P>(name: &str, n: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..n {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 50, 1, |r| (r.range(0, 9), r.range(0, 9)), |&(a, b)| {
+            count += 1;
+            ensure(a + b == b + a, "addition must commute")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, 2, |r| r.range(0, 9), |_| ensure(false, "nope"));
+    }
+}

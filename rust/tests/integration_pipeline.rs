@@ -1,0 +1,160 @@
+//! Integration: the full compile-side pipeline (no artifacts needed) and
+//! the serving coordinator (artifacts-gated).
+//!
+//! descriptor JSON -> graph -> NeuroForge DSE -> RTL emission -> cycle
+//! simulation -> NeuroMorph governor, plus an end-to-end coordinator run
+//! with a mid-flight budget squeeze.
+
+use std::time::Duration;
+
+use forgemorph::coordinator::{sim_path_costs, Coordinator, ServeConfig};
+use forgemorph::design::{self, DesignConfig};
+use forgemorph::dse;
+use forgemorph::graph::{parser, zoo};
+use forgemorph::morph::governor::{Budget, Decision, Governor};
+use forgemorph::morph::PathRegistry;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::rtl;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::rng::Rng;
+
+const DESCRIPTOR: &str = r#"{
+  "name": "custom-6-12",
+  "input": [16, 16, 1],
+  "layers": [
+    {"type": "conv", "filters": 6, "k": 3},
+    {"type": "maxpool", "k": 2},
+    {"type": "conv", "filters": 12, "k": 3},
+    {"type": "maxpool", "k": 2},
+    {"type": "fc", "out": 4}
+  ]
+}"#;
+
+#[test]
+fn descriptor_to_rtl_to_sim() {
+    // parse
+    let net = parser::parse(DESCRIPTOR).expect("parse");
+    assert_eq!(net.conv_filter_bounds(), vec![6, 12]);
+
+    // explore
+    let cfg = dse::DseConfig {
+        population: 24,
+        generations: 8,
+        seed: 5,
+        constraints: dse::Constraints::device(&ZYNQ_7100),
+        ..dse::DseConfig::default()
+    };
+    let res = dse::run(&net, &ZYNQ_7100, &cfg);
+    assert!(!res.pareto.is_empty());
+
+    // pick the fastest point, emit RTL, simulate it
+    let best = &res.pareto[0];
+    let eval = design::evaluate(&net, &best.config, &ZYNQ_7100).unwrap();
+    let bundle = rtl::emit(&net, &best.config, &eval);
+    assert!(bundle.file("custom_6_12_top.v").is_some());
+    let report = sim::simulate(&net, &best.config, &ZYNQ_7100, &GateMask::all_active());
+    assert!(report.latency_cycles >= eval.latency_cycles as u64);
+}
+
+#[test]
+fn governor_tracks_budget_trace() {
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    // registry with real sim-derived costs for the three depth paths
+    let paths: Vec<forgemorph::morph::MorphPath> = (1..=3)
+        .map(|d| forgemorph::morph::MorphPath {
+            name: format!("d{d}_w100"),
+            depth: d,
+            width_pct: 100,
+            accuracy: 0.9 + d as f64 * 0.03,
+            params: d * 1000,
+            macs: d * 100_000,
+        })
+        .collect();
+    let registry = PathRegistry::new(paths);
+    let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &registry);
+    let mut gov = Governor::new(registry, costs, 1);
+    assert_eq!(gov.current(), "d3_w100");
+
+    // squeeze power below the full path's draw -> governor must downshift
+    let full_power = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active()).power_mw;
+    let squeezed = Budget { power_mw: Some(full_power - 40.0), latency_ms: None };
+    match gov.observe(&squeezed) {
+        Decision::Switch { to, .. } => assert_ne!(to, "d3_w100"),
+        Decision::Hold => panic!("governor ignored the power squeeze"),
+    }
+    // relax -> back to full
+    match gov.observe(&Budget::unconstrained()) {
+        Decision::Switch { to, stall_frames } => {
+            assert_eq!(to, "d3_w100");
+            assert_eq!(stall_frames, 1);
+        }
+        Decision::Hold => panic!("governor failed to upshift"),
+    }
+}
+
+#[test]
+fn coordinator_serves_and_morphs() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        model: "mnist".into(),
+        max_wait: Duration::from_millis(1),
+        patience: 1,
+    };
+    let mut coord = Coordinator::start(cfg, net.clone(), design.clone(), ZYNQ_7100)
+        .expect("coordinator start");
+
+    let mut rng = Rng::new(7);
+    let mut paths_seen = std::collections::BTreeSet::new();
+    let mut answered = 0;
+    let mut run_phase = |coord: &mut Coordinator,
+                         paths_seen: &mut std::collections::BTreeSet<String>,
+                         answered: &mut usize| {
+        let mut rxs = Vec::new();
+        for _ in 0..24 {
+            let frame: Vec<f32> = (0..784).map(|_| rng.f64() as f32).collect();
+            rxs.push(coord.submit(frame));
+        }
+        // drain this phase's responses before changing the budget, so the
+        // governor decision is observable per phase
+        for rx in rxs {
+            if let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
+                assert_eq!(resp.logits.len(), 10);
+                assert!(resp.class < 10);
+                paths_seen.insert(resp.path);
+                *answered += 1;
+            }
+        }
+    };
+
+    // phase 1: unconstrained -> full path
+    run_phase(&mut coord, &mut paths_seen, &mut answered);
+    // phase 2: power squeeze -> cheaper path
+    let full_power = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active()).power_mw;
+    coord.set_budget(Budget { power_mw: Some(full_power - 40.0), latency_ms: None });
+    run_phase(&mut coord, &mut paths_seen, &mut answered);
+    let metrics = coord.shutdown();
+    assert_eq!(answered, 48, "all requests answered");
+    assert_eq!(metrics.requests, 48);
+    assert!(
+        paths_seen.len() >= 2,
+        "budget squeeze should trigger a morph (saw {paths_seen:?})"
+    );
+    assert!(metrics.morph_switches >= 1);
+    assert!(metrics.energy_j > 0.0);
+}
+
+#[test]
+fn report_harness_produces_all_blocks() {
+    for id in ["table1", "table2", "fig8"] {
+        let text = forgemorph::report::by_name(id).unwrap();
+        assert!(text.len() > 100, "{id} too small");
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration: AOT artifacts -> PJRT engine -> numerics.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise). This is the
+//! end-to-end proof that the three layers compose: DistillCycle-trained
+//! Pallas kernels, lowered to HLO text by `aot.py`, loaded and executed
+//! by the Rust runtime with NO Python anywhere in this process.
+
+use std::path::PathBuf;
+
+use forgemorph::runtime::{Engine, Manifest};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<Engine> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load(&artifacts_dir(), "mnist").expect("engine load"))
+}
+
+#[test]
+fn loads_all_morph_paths() {
+    let Some(engine) = engine() else { return };
+    let model = engine.model();
+    assert_eq!(model.input_shape, (28, 28, 1));
+    assert_eq!(model.num_classes, 10);
+    let names: Vec<&str> = model.paths.iter().map(|p| p.path.name.as_str()).collect();
+    assert_eq!(names, vec!["d1_w100", "d2_w100", "d3_w100", "d3_w50"]);
+    for p in &model.paths {
+        let mut batches = engine.batches_for(&p.path.name);
+        batches.sort_unstable();
+        assert_eq!(batches, model.batches, "path {}", p.path.name);
+    }
+}
+
+#[test]
+fn probe_logits_match_golden() {
+    // The core numerics check: Rust/PJRT executes the Pallas-lowered HLO
+    // and reproduces the logits Python recorded at AOT time.
+    let Some(engine) = engine() else { return };
+    let errs = engine.verify_probe().expect("probe execution");
+    for (path, err) in errs {
+        assert!(err < 1e-3, "path {path}: max|err| = {err}");
+    }
+}
+
+#[test]
+fn batch1_and_batch8_agree() {
+    let Some(engine) = engine() else { return };
+    let frame = engine.frame_len();
+    let probe = &engine.model().probe;
+    let batch = probe.shape[0].min(8);
+    let logits8 = engine.execute("d3_w100", batch, &probe.x[..batch * frame]).unwrap();
+    for i in 0..batch {
+        let logits1 = engine
+            .execute("d3_w100", 1, &probe.x[i * frame..(i + 1) * frame])
+            .unwrap();
+        for (a, b) in logits1.iter().zip(&logits8[i * 10..(i + 1) * 10]) {
+            assert!((a - b).abs() < 1e-4, "frame {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn paths_disagree_on_logits() {
+    // different morph paths are different functions — gating is real
+    let Some(engine) = engine() else { return };
+    let frame = engine.frame_len();
+    let probe = &engine.model().probe;
+    let a = engine.execute("d1_w100", 1, &probe.x[..frame]).unwrap();
+    let b = engine.execute("d3_w100", 1, &probe.x[..frame]).unwrap();
+    let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+    assert!(diff > 1e-3, "paths produced identical logits");
+}
+
+#[test]
+fn quantized_artifact_loads_and_runs() {
+    let Some(_engine) = engine() else { return };
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    let model = manifest.model("mnist").unwrap();
+    let Some(file) = model.quant_full.get(&8) else {
+        panic!("int8 artifact missing from manifest");
+    };
+    // compile + run the int8-emulated full path directly
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file(manifest.file_path(file).to_str().unwrap()).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let frame = 28 * 28;
+    let x = xla::Literal::vec1(&model.probe.x[..frame])
+        .reshape(&[1, 28, 28, 1])
+        .unwrap();
+    let out = exe.execute::<xla::Literal>(&[x]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap()
+        .to_vec::<f32>()
+        .unwrap();
+    assert_eq!(out.len(), 10);
+    // int8 datapath must stay close to the f32 golden logits
+    let want = &model.probe.logits["d3_w100"][..10];
+    let err = out
+        .iter()
+        .zip(want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1.0, "int8 deviation too large: {err}");
+}
+
+#[test]
+fn bad_requests_rejected() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.execute("d3_w100", 3, &vec![0.0; 3 * 784]).is_err());
+    assert!(engine.execute("nope", 1, &vec![0.0; 784]).is_err());
+    assert!(engine.execute("d3_w100", 1, &vec![0.0; 7]).is_err());
+}
+
+#[test]
+fn argmax_sane() {
+    let Some(engine) = engine() else { return };
+    let v = vec![0.0, 1.0, 0.5, 9.0, -2.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+    assert_eq!(engine.argmax(&v), vec![3]);
+}

@@ -1,0 +1,250 @@
+//! Property-based invariants over the coordinator-side algorithms
+//! (in-tree harness — no proptest in the offline vendor set).
+
+use forgemorph::coordinator::BatchPolicy;
+use forgemorph::design::{self, DesignConfig};
+use forgemorph::dse;
+use forgemorph::graph::zoo;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::quant::QParams;
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::json::Json;
+use forgemorph::util::prop::{check, ensure};
+use forgemorph::util::rng::Rng;
+
+/// Random valid design point for a random small model.
+fn random_design(rng: &mut Rng) -> (forgemorph::graph::Network, DesignConfig) {
+    let net = match rng.below(3) {
+        0 => zoo::mnist(),
+        1 => zoo::svhn(),
+        _ => zoo::cifar10(),
+    };
+    let bounds = net.conv_filter_bounds();
+    let parallelism = bounds
+        .iter()
+        .map(|&ub| rng.range(1, ub as i64) as usize)
+        .collect();
+    let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };
+    (net, DesignConfig { parallelism, rep })
+}
+
+#[test]
+fn prop_estimate_never_exceeds_simulation() {
+    // The analytical model is optimistic by construction: the simulator
+    // adds handshake/drain/reload overheads — Fig. 10's error direction.
+    check("est<=sim", 60, 11, random_design, |(net, cfg)| {
+        let est = design::evaluate(net, cfg, &ZYNQ_7100).map_err(|e| e.to_string())?;
+        let sim = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::all_active());
+        ensure(
+            sim.latency_cycles >= est.latency_cycles as u64,
+            format!("sim {} < est {}", sim.latency_cycles, est.latency_cycles),
+        )?;
+        ensure(
+            (sim.latency_cycles as f64) < est.latency_cycles as f64 * 1.6,
+            format!("sim {} too far above est {}", sim.latency_cycles, est.latency_cycles),
+        )
+    });
+}
+
+#[test]
+fn prop_dsp_bram_estimates_exact() {
+    // DSP and BRAM are explicitly instantiated: estimator == elaboration
+    // (the paper's 0%-error columns in Table III).
+    check("dsp-bram-exact", 40, 12, random_design, |(net, cfg)| {
+        let est = design::evaluate(net, cfg, &ZYNQ_7100).map_err(|e| e.to_string())?;
+        let sim = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::all_active());
+        ensure(est.resources.dsp == sim.resources.dsp, "DSP mismatch")?;
+        ensure(est.resources.bram == sim.resources.bram, "BRAM mismatch")
+    });
+}
+
+#[test]
+fn prop_gating_never_increases_cost() {
+    check("gating-monotone", 40, 13, random_design, |(net, cfg)| {
+        let full = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::all_active());
+        for depth in 1..net.conv_layer_ids().len() {
+            let g = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::depth_prefix(net, depth));
+            ensure(
+                g.latency_cycles <= full.latency_cycles,
+                format!("depth {depth} latency grew"),
+            )?;
+            ensure(g.power_mw <= full.power_mw + 1e-9, format!("depth {depth} power grew"))?;
+        }
+        let w = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::width(0.5));
+        ensure(w.power_mw <= full.power_mw + 1e-9, "width gating power grew")
+    });
+}
+
+#[test]
+fn prop_pareto_front_sound() {
+    // Every front is mutually non-dominated, within chromosome bounds,
+    // and constraint-satisfying — for random constraint draws.
+    check(
+        "pareto-sound",
+        8,
+        14,
+        |rng: &mut Rng| {
+            let dsp_cap = 200 + rng.below(3000);
+            let seed = rng.next_u64();
+            (dsp_cap, seed)
+        },
+        |&(dsp_cap, seed)| {
+            let net = zoo::mnist();
+            let cfg = dse::DseConfig {
+                population: 24,
+                generations: 6,
+                seed,
+                constraints: dse::Constraints {
+                    latency_ms: None,
+                    dsp: Some(dsp_cap),
+                    lut: None,
+                    bram: None,
+                },
+                ..dse::DseConfig::default()
+            };
+            let res = dse::run(&net, &ZYNQ_7100, &cfg);
+            let bounds = net.conv_filter_bounds();
+            for c in &res.pareto {
+                ensure(c.objectives.dsp <= dsp_cap, "constraint violated")?;
+                for (p, ub) in c.config.parallelism.iter().zip(&bounds) {
+                    ensure(*p >= 1 && p <= ub, "gene out of bounds")?;
+                }
+            }
+            for a in &res.pareto {
+                for b in &res.pareto {
+                    if a.config.parallelism != b.config.parallelism {
+                        ensure(
+                            !a.objectives.dominates(&b.objectives)
+                                || !b.objectives.dominates(&a.objectives),
+                            "mutual domination",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_roundtrip_bounded() {
+    check(
+        "quant-bound",
+        300,
+        15,
+        |rng: &mut Rng| {
+            let n = rng.below(100) + 1;
+            let bits = if rng.chance(0.5) { 8 } else { 16 };
+            let scale = 10f64.powf(rng.f64() * 6.0 - 3.0);
+            let data: Vec<f64> = (0..n).map(|_| rng.gauss() * scale).collect();
+            (data, bits)
+        },
+        |(data, bits)| {
+            let p = QParams::fit(data, *bits);
+            for &x in data {
+                ensure(
+                    (x - p.fake_quant(x)).abs() <= p.scale / 2.0 + 1e-9,
+                    format!("roundtrip error at {x}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_exceeds_supported_sizes() {
+    use std::time::{Duration, Instant};
+    check(
+        "batcher-sizes",
+        200,
+        16,
+        |rng: &mut Rng| {
+            let mut sizes = vec![1usize];
+            if rng.chance(0.8) {
+                sizes.push(1 << (1 + rng.below(4)));
+            }
+            let pending = rng.below(40);
+            let waited_us = rng.below(5000) as u64;
+            (sizes, pending, waited_us)
+        },
+        |(sizes, pending, waited_us)| {
+            let policy = BatchPolicy::new(sizes.clone(), Duration::from_micros(1000));
+            let now = Instant::now();
+            let oldest = if *pending > 0 {
+                Some(now - Duration::from_micros(*waited_us))
+            } else {
+                None
+            };
+            match policy.decide(*pending, oldest, now) {
+                None => {
+                    // must only wait if under max batch and under deadline
+                    ensure(
+                        *pending < policy.max_size() && (*pending == 0 || *waited_us < 1000),
+                        "policy waited when it should have fired",
+                    )
+                }
+                Some(size) => {
+                    ensure(sizes.contains(&size), format!("unsupported size {size}"))?;
+                    ensure(
+                        size <= (*pending).max(1),
+                        format!("batch {size} exceeds pending {pending}"),
+                    )
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.gauss() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from(32 + rng.below(94) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        "json-roundtrip",
+        300,
+        17,
+        |rng: &mut Rng| random_json(rng, 3),
+        |v| {
+            let text = v.to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            ensure(&back == v, format!("roundtrip mismatch: {text}"))
+        },
+    );
+}
+
+#[test]
+fn prop_balanced_designs_fit_device() {
+    check(
+        "balanced-fits",
+        12,
+        18,
+        |rng: &mut Rng| match rng.below(4) {
+            0 => zoo::mnist(),
+            1 => zoo::svhn(),
+            2 => zoo::cifar10(),
+            _ => zoo::squeezenet(),
+        },
+        |net| {
+            let cfg = DesignConfig::balanced(net, FpRep::Int8, &ZYNQ_7100);
+            let eval = design::evaluate(net, &cfg, &ZYNQ_7100).map_err(|e| e.to_string())?;
+            ensure(eval.fits(&ZYNQ_7100), "balanced design exceeds device budget")
+        },
+    );
+}
