@@ -2,16 +2,21 @@
 //!
 //! * L1/L2 (already ran at `make artifacts`): DistillCycle-trained
 //!   morphable CNN, Pallas kernels, per-path HLO artifacts.
-//! * L3 (this process): loads every morph path via PJRT, verifies the
-//!   numerics against golden probe logits, then serves a Poisson stream
-//!   of classification requests through the coordinator while a power
-//!   budget trace squeezes and releases the NeuroMorph governor.
+//! * L3 (this process): builds an `InferenceBackend` per worker shard —
+//!   PJRT over the AOT artifacts when they exist (after numeric
+//!   verification against golden probe logits), otherwise the
+//!   self-contained cycle-simulation backend — then serves a Poisson
+//!   stream of classification requests through the sharded coordinator
+//!   while a power budget trace squeezes and releases the NeuroMorph
+//!   governor.
 //!
 //! Reported: throughput, batch stats, queue/exec/e2e latency, morph
-//! switches, per-path frame counts, modeled FPGA energy, and per-path
-//! classification agreement. Recorded in EXPERIMENTS.md.
+//! switches, per-path frame counts, modeled FPGA energy. Recorded in
+//! EXPERIMENTS.md.
 //!
 //! ```bash
+//! cargo run --release --example adaptive_serving -- --workers 4
+//! # or, with trained artifacts and a real xla binding:
 //! make artifacts && cargo run --release --example adaptive_serving
 //! ```
 
@@ -19,9 +24,11 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
+use forgemorph::backend::BackendSpec;
 use forgemorph::coordinator::{Coordinator, ServeConfig};
 use forgemorph::design::DesignConfig;
 use forgemorph::graph::zoo;
+use forgemorph::morph;
 use forgemorph::morph::governor::Budget;
 use forgemorph::pe::{FpRep, ZYNQ_7100};
 use forgemorph::runtime::Engine;
@@ -34,33 +41,50 @@ fn main() -> Result<()> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let n_requests = args.get_usize("requests", 480);
     let rate_hz = args.get_f64("rate", 3000.0);
-    ensure!(
-        artifacts.join("manifest.json").exists(),
-        "run `make artifacts` first (trains + lowers the morph paths)"
-    );
+    let workers = args.get_usize("workers", 2);
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, args.get_usize("p", 4), FpRep::Int16);
+    let have_artifacts = artifacts.join("manifest.json").exists();
 
     // ---- phase 0: verify the AOT artifacts numerically -----------------
-    println!("== phase 0: artifact verification ==");
-    let engine = Engine::load(&artifacts, "mnist").context("engine load")?;
-    println!("PJRT platform: {}", engine.platform());
-    for (path, err) in engine.verify_probe()? {
-        ensure!(err < 1e-3, "path {path} deviates: {err}");
-        println!("  {path}: max|err| vs golden = {err:.2e}  OK");
-    }
-    let paths: Vec<_> = engine.model().morph_paths();
-    println!("morph paths (DistillCycle accuracies on synthetic MNIST):");
-    for p in &paths {
-        println!(
-            "  {:<8} depth {} width {:>3}%  acc {:.3}  {:>7} params {:>9} MACs",
-            p.name, p.depth, p.width_pct, p.accuracy, p.params, p.macs
-        );
-    }
-    drop(engine); // the coordinator worker owns its own engine
+    let spec = if have_artifacts {
+        println!("== phase 0: artifact verification ==");
+        let engine = Engine::load(&artifacts, "mnist").context("engine load")?;
+        println!("PJRT platform: {}", engine.platform());
+        for (path, err) in engine.verify_probe()? {
+            ensure!(err < 1e-3, "path {path} deviates: {err}");
+            println!("  {path}: max|err| vs golden = {err:.2e}  OK");
+        }
+        let paths = engine.model().morph_paths();
+        println!("morph paths (DistillCycle accuracies on synthetic MNIST):");
+        for p in &paths {
+            println!(
+                "  {:<8} depth {} width {:>3}%  acc {:.3}  {:>7} params {:>9} MACs",
+                p.name, p.depth, p.width_pct, p.accuracy, p.params, p.macs
+            );
+        }
+        drop(engine); // each coordinator shard owns its own engine
+        BackendSpec::Pjrt {
+            artifacts_dir: artifacts,
+            model: "mnist".into(),
+            net: net.clone(),
+            design: design.clone(),
+            device: ZYNQ_7100,
+        }
+    } else {
+        println!("== phase 0: no artifacts — using the cycle-simulation backend ==");
+        let paths = morph::depth_ladder(&net);
+        for p in &paths {
+            println!(
+                "  {:<8} depth {}  acc {:.3}  {:>7} params {:>9} MACs",
+                p.name, p.depth, p.accuracy, p.params, p.macs
+            );
+        }
+        BackendSpec::sim(net.clone(), design.clone(), ZYNQ_7100, paths)
+    };
 
     // ---- phase 1: FPGA-side cost table ---------------------------------
     println!("\n== phase 1: simulated FPGA costs per morph path ==");
-    let net = zoo::mnist();
-    let design = DesignConfig::uniform(&net, args.get_usize("p", 4), FpRep::Int16);
     let full = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active());
     println!(
         "  design p=4: full path {:.4} ms, {:.0} mW, {:.2} uJ/frame",
@@ -80,14 +104,16 @@ fn main() -> Result<()> {
     }
 
     // ---- phase 2: adaptive serving under a budget trace ----------------
-    println!("\n== phase 2: serving {n_requests} Poisson requests @ ~{rate_hz} Hz ==");
+    println!(
+        "\n== phase 2: serving {n_requests} Poisson requests @ ~{rate_hz} Hz \
+         on {workers} worker shard(s) =="
+    );
     let cfg = ServeConfig {
-        artifacts_dir: artifacts,
-        model: "mnist".into(),
         max_wait: Duration::from_millis(2),
         patience: 2,
+        workers,
     };
-    let mut coord = Coordinator::start(cfg, net, design, ZYNQ_7100)?;
+    let mut coord = Coordinator::start(cfg, spec)?;
 
     // squeeze below the full path's simulated draw but above the lightest
     // path's, so the governor has a feasible downshift target
@@ -103,23 +129,28 @@ fn main() -> Result<()> {
                 "  [t={:.2}s] power budget -> {squeeze_mw:.0} mW (squeeze)",
                 t0.elapsed().as_secs_f64()
             );
-            coord.set_budget(Budget { power_mw: Some(squeeze_mw), latency_ms: None });
+            coord.set_budget(Budget { power_mw: Some(squeeze_mw), latency_ms: None })?;
         }
         if i == 2 * third {
-            println!("  [t={:.2}s] power budget -> unconstrained (release)", t0.elapsed().as_secs_f64());
-            coord.set_budget(Budget::unconstrained());
+            println!(
+                "  [t={:.2}s] power budget -> unconstrained (release)",
+                t0.elapsed().as_secs_f64()
+            );
+            coord.set_budget(Budget::unconstrained())?;
         }
         let frame: Vec<f32> = (0..784).map(|_| rng.f64() as f32).collect();
-        receivers.push((i, coord.submit(frame)));
+        receivers.push((i, coord.submit(frame).context("submit")?));
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate_hz).min(0.01)));
     }
 
     let mut by_path = std::collections::BTreeMap::<String, u64>::new();
+    let mut by_shard = std::collections::BTreeMap::<usize, u64>::new();
     let mut phase_paths = vec![std::collections::BTreeSet::new(); 3];
     let mut answered = 0usize;
     for (i, rx) in receivers {
         let resp = rx.recv_timeout(Duration::from_secs(60)).context("response")?;
         *by_path.entry(resp.path.clone()).or_insert(0) += 1;
+        *by_shard.entry(resp.shard).or_insert(0) += 1;
         phase_paths[(i / third.max(1)).min(2)].insert(resp.path);
         answered += 1;
     }
@@ -149,6 +180,9 @@ fn main() -> Result<()> {
     );
     for (path, n) in &by_path {
         println!("  path {path}: {n} frames");
+    }
+    for (shard, n) in &by_shard {
+        println!("  shard {shard}: {n} frames");
     }
     println!("  phase path sets: {:?}", phase_paths);
 

@@ -1,0 +1,188 @@
+//! Analytical-model backend — the Eq. 12-15 fast path for serving.
+//!
+//! Uses [`crate::design::Evaluator`] (the allocation-free DSE fitness
+//! function) for the full-design baseline and scales per-path costs by
+//! each morph path's MAC fraction — the same first-order model NeuroForge
+//! trades on during search. Orders of magnitude cheaper per batch than
+//! the cycle simulator while preserving the cost *ordering* the governor
+//! needs, so morph decisions match the sim backend on the same budget
+//! trace. Numerics come from the shared [`SurrogateClassifier`], making
+//! logits bit-identical to the sim backend.
+
+use super::{BackendError, InferenceBackend, SurrogateClassifier};
+use crate::design::{DesignConfig, Evaluator};
+use crate::graph::Network;
+use crate::morph::governor::PathCosts;
+use crate::morph::{MorphPath, PathRegistry};
+use crate::pe::{Device, Resources};
+use crate::power::{Activity, PowerModel};
+
+/// The analytical serving backend.
+pub struct AnalyticalBackend {
+    registry: PathRegistry,
+    batches: Vec<usize>,
+    classifier: SurrogateClassifier,
+    frame_len: usize,
+    num_classes: usize,
+    costs: PathCosts,
+}
+
+impl AnalyticalBackend {
+    pub fn new(
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+        batches: Vec<usize>,
+    ) -> Result<AnalyticalBackend, BackendError> {
+        if paths.is_empty() {
+            return Err(BackendError::Init("no morph paths".into()));
+        }
+        if batches.is_empty() {
+            return Err(BackendError::Init("no batch sizes".into()));
+        }
+        let ev = Evaluator::new(&net, &device).map_err(|e| BackendError::Init(e.to_string()))?;
+        let full = ev
+            .objectives(&design.parallelism, design.rep)
+            .map_err(|e| BackendError::Init(e.to_string()))?;
+        let full_latency_ms = ev.latency_ms(&full);
+        let pm = PowerModel::default();
+        let full_power = pm.total_mw(&full.resources, device.clock_mhz, Activity::default());
+        // clock-gated blocks stop toggling: only the dynamic share scales
+        // with the active MAC fraction, the static + clock-tree floor stays
+        let floor = pm.total_mw(&Resources::default(), device.clock_mhz, Activity::default());
+
+        let registry = PathRegistry::new(paths);
+        let full_macs = registry.full().macs.max(1);
+        let rows = registry
+            .paths()
+            .iter()
+            .map(|p| {
+                let ratio = p.macs as f64 / full_macs as f64;
+                let power = floor + (full_power - floor) * ratio;
+                let latency = full_latency_ms * ratio;
+                (p.name.clone(), power, latency)
+            })
+            .collect();
+
+        let (h, w, c) = net.input_dims();
+        let frame_len = h * w * c;
+        let num_classes = super::net_num_classes(&net);
+        let classifier = SurrogateClassifier::new(frame_len, num_classes, registry.paths());
+        Ok(AnalyticalBackend {
+            registry,
+            batches,
+            classifier,
+            frame_len,
+            num_classes,
+            costs: PathCosts { rows },
+        })
+    }
+}
+
+impl InferenceBackend for AnalyticalBackend {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn morph_paths(&self) -> Vec<MorphPath> {
+        self.registry.paths().to_vec()
+    }
+
+    fn path_costs(&self) -> PathCosts {
+        self.costs.clone()
+    }
+
+    fn execute(
+        &mut self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, BackendError> {
+        if self.registry.by_name(path).is_none() {
+            return Err(BackendError::UnknownPath(path.to_string()));
+        }
+        self.classifier.batch_logits(path, batch, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::graph::zoo;
+    use crate::morph;
+    use crate::pe::{FpRep, ZYNQ_7100};
+
+    fn backend() -> AnalyticalBackend {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        AnalyticalBackend::new(net, design, ZYNQ_7100, paths, vec![1, 8]).unwrap()
+    }
+
+    #[test]
+    fn costs_monotone_in_depth() {
+        let b = backend();
+        let costs = b.path_costs();
+        let mut by_depth: Vec<(f64, f64)> = (1..=3)
+            .map(|d| {
+                let (_, p, l) = costs
+                    .rows
+                    .iter()
+                    .find(|(n, _, _)| n == &format!("d{d}_w100"))
+                    .unwrap()
+                    .clone();
+                (p, l)
+            })
+            .collect();
+        by_depth.dedup();
+        assert!(by_depth.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn logits_match_sim_backend_exactly() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        let mut ana = backend();
+        let mut sim =
+            SimBackend::new(net, design, ZYNQ_7100, paths, vec![1, 8], 1).unwrap();
+        let input: Vec<f32> = (0..784).map(|i| (i % 37) as f32 / 37.0).collect();
+        for path in ["d1_w100", "d2_w100", "d3_w100"] {
+            assert_eq!(
+                ana.execute(path, 1, &input).unwrap(),
+                sim.execute(path, 1, &input).unwrap(),
+                "backend numerics diverge on {path}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_ordering_agrees_with_sim() {
+        // the governor must make the same relative choices on both models
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        let ana = backend();
+        let sim = SimBackend::new(net, design, ZYNQ_7100, paths, vec![1], 1).unwrap();
+        let order = |c: &PathCosts| {
+            let mut rows = c.rows.clone();
+            rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            rows.into_iter().map(|(n, _, _)| n).collect::<Vec<_>>()
+        };
+        assert_eq!(order(&ana.path_costs()), order(&sim.path_costs()));
+    }
+}

@@ -1,0 +1,379 @@
+//! Unified inference backends for the serving engine.
+//!
+//! Before this module existed, the three ways of executing a morph path
+//! — the PJRT [`crate::runtime::Engine`], the cycle-level simulator
+//! (`crate::sim`) and the analytical model (`crate::design::Evaluator`)
+//! — were called through ad-hoc, incompatible paths in the coordinator,
+//! the CLI and the report harness. [`InferenceBackend`] gives all three
+//! one contract the sharded coordinator can drive:
+//!
+//! * [`PjrtBackend`] — hardware-backed numerics from AOT HLO artifacts
+//!   (requires a real `xla` binding; the offline stub fails cleanly).
+//! * [`SimBackend`] — the cycle-accurate stand-in: every frame streams
+//!   through the simulated pipeline, logits come from the deterministic
+//!   [`SurrogateClassifier`].
+//! * [`AnalyticalBackend`] — the Eq. 12-15 fast path: costs from
+//!   [`crate::design::Evaluator`], same surrogate numerics, microseconds
+//!   per batch. Used for capacity planning and as the DSE-facing twin.
+//!
+//! Backends are *per-worker-shard* objects (PJRT executables are
+//! thread-local by construction), so the coordinator receives a cloneable
+//! [`BackendSpec`] recipe and each shard builds its own instance.
+
+pub mod analytical;
+pub mod pjrt;
+pub mod sim;
+
+pub use analytical::AnalyticalBackend;
+pub use pjrt::PjrtBackend;
+pub use sim::{sim_path_costs, SimBackend};
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::design::DesignConfig;
+use crate::graph::{LayerKind, Network};
+use crate::morph::governor::PathCosts;
+use crate::morph::MorphPath;
+use crate::pe::Device;
+use crate::util::rng::Rng;
+
+/// Errors surfaced by backend construction and execution.
+#[derive(Debug)]
+pub enum BackendError {
+    /// backend could not be constructed (artifacts missing, bad design…)
+    Init(String),
+    /// the requested morph path is not deployed on this backend
+    UnknownPath(String),
+    /// flat input length does not match batch x frame
+    BadInput { got: usize, want: usize },
+    /// execution failed after successful init
+    Execute(String),
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::Init(msg) => write!(f, "backend init: {msg}"),
+            BackendError::UnknownPath(p) => write!(f, "unknown morph path '{p}'"),
+            BackendError::BadInput { got, want } => {
+                write!(f, "input length {got} != expected {want}")
+            }
+            BackendError::Execute(msg) => write!(f, "execute: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// The contract every execution engine offers the serving layer.
+///
+/// One instance serves one worker shard; `execute` takes `&mut self` so
+/// implementations may keep per-shard scratch state without locking.
+pub trait InferenceBackend: Send {
+    /// Stable backend identifier ("pjrt", "sim", "analytical").
+    fn name(&self) -> &'static str;
+
+    /// Flat input element count per frame (H*W*C).
+    fn frame_len(&self) -> usize;
+
+    /// Output logit count per frame.
+    fn num_classes(&self) -> usize;
+
+    /// Batch sizes this backend can execute, ascending.
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// The deployed morph-path set with accuracy/cost metadata.
+    fn morph_paths(&self) -> Vec<MorphPath>;
+
+    /// Per-path (power mW, latency ms) table the governor trades on.
+    fn path_costs(&self) -> PathCosts;
+
+    /// Execute `batch` frames on `path`; returns flattened logits
+    /// `[batch * num_classes]`.
+    fn execute(
+        &mut self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, BackendError>;
+
+    /// Argmax class ids for a flattened logits buffer.
+    fn argmax(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks(self.num_classes().max(1))
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Cloneable recipe the coordinator hands to each worker shard; every
+/// shard builds its own backend instance from it (PJRT executables must
+/// live on the thread that created them).
+#[derive(Clone)]
+pub enum BackendSpec {
+    /// AOT artifacts through the PJRT runtime; FPGA-side costs come from
+    /// the cycle simulator over `net`/`design`, as before the refactor.
+    Pjrt {
+        artifacts_dir: PathBuf,
+        model: String,
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+    },
+    /// Cycle-level simulation of `design` with surrogate numerics.
+    Sim {
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+        batches: Vec<usize>,
+        /// independent simulation replays averaged per frame (models
+        /// on-hardware measurement averaging; also the compute-density
+        /// dial of the serving benchmarks)
+        fidelity: usize,
+    },
+    /// Analytical Eq. 12-15 cost model with surrogate numerics.
+    Analytical {
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+        batches: Vec<usize>,
+    },
+}
+
+impl BackendSpec {
+    /// Sim spec with the default {1, 8} batch menu and fidelity 1.
+    pub fn sim(
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+    ) -> BackendSpec {
+        BackendSpec::Sim { net, design, device, paths, batches: vec![1, 8], fidelity: 1 }
+    }
+
+    /// Analytical spec with the default {1, 8} batch menu.
+    pub fn analytical(
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+    ) -> BackendSpec {
+        BackendSpec::Analytical { net, design, device, paths, batches: vec![1, 8] }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt { .. } => "pjrt",
+            BackendSpec::Sim { .. } => "sim",
+            BackendSpec::Analytical { .. } => "analytical",
+        }
+    }
+
+    /// Build one backend instance (called once per worker shard).
+    pub fn build(&self) -> Result<Box<dyn InferenceBackend>, BackendError> {
+        match self {
+            BackendSpec::Pjrt { artifacts_dir, model, net, design, device } => Ok(Box::new(
+                PjrtBackend::load(artifacts_dir, model, net.clone(), design.clone(), *device)?,
+            )),
+            BackendSpec::Sim { net, design, device, paths, batches, fidelity } => {
+                Ok(Box::new(SimBackend::new(
+                    net.clone(),
+                    design.clone(),
+                    *device,
+                    paths.clone(),
+                    batches.clone(),
+                    *fidelity,
+                )?))
+            }
+            BackendSpec::Analytical { net, design, device, paths, batches } => {
+                Ok(Box::new(AnalyticalBackend::new(
+                    net.clone(),
+                    design.clone(),
+                    *device,
+                    paths.clone(),
+                    batches.clone(),
+                )?))
+            }
+        }
+    }
+}
+
+/// Number of classes a network's head produces (last FC width).
+pub fn net_num_classes(net: &Network) -> usize {
+    net.layers
+        .iter()
+        .rev()
+        .find_map(|l| match l.kind {
+            LayerKind::Fc { out, .. } => Some(out),
+            _ => None,
+        })
+        .unwrap_or(10)
+}
+
+/// Deterministic per-path linear classifier shared by the sim and
+/// analytical backends.
+///
+/// Neither backend carries trained weights, but the serving layer still
+/// needs *reproducible* numerics: the same (path, frame) must yield the
+/// same logits on any backend, any worker shard, any worker count — the
+/// property the sharding determinism test pins. Weights are derived from
+/// a seeded [`Rng`] keyed on the path name only, so two independently
+/// constructed backends agree exactly.
+#[derive(Debug, Clone)]
+pub struct SurrogateClassifier {
+    frame_len: usize,
+    num_classes: usize,
+    /// path name -> row-major [num_classes * frame_len] weights
+    weights: BTreeMap<String, Vec<f32>>,
+}
+
+impl SurrogateClassifier {
+    pub fn new(frame_len: usize, num_classes: usize, paths: &[MorphPath]) -> SurrogateClassifier {
+        let mut weights = BTreeMap::new();
+        for p in paths {
+            let mut rng = Rng::new(fnv1a(&p.name));
+            let w: Vec<f32> = (0..num_classes * frame_len)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            weights.insert(p.name.clone(), w);
+        }
+        SurrogateClassifier { frame_len, num_classes, weights }
+    }
+
+    /// Logits for one frame on one path.
+    pub fn logits(&self, path: &str, frame: &[f32]) -> Result<Vec<f32>, BackendError> {
+        let w = self
+            .weights
+            .get(path)
+            .ok_or_else(|| BackendError::UnknownPath(path.to_string()))?;
+        if frame.len() != self.frame_len {
+            return Err(BackendError::BadInput { got: frame.len(), want: self.frame_len });
+        }
+        Ok((0..self.num_classes)
+            .map(|c| {
+                let row = &w[c * self.frame_len..(c + 1) * self.frame_len];
+                row.iter().zip(frame).map(|(a, b)| a * b).sum()
+            })
+            .collect())
+    }
+
+    /// Logits for a flat batch (caller guarantees `batch * frame_len`).
+    pub fn batch_logits(
+        &self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, BackendError> {
+        if input.len() != batch * self.frame_len {
+            return Err(BackendError::BadInput {
+                got: input.len(),
+                want: batch * self.frame_len,
+            });
+        }
+        let mut out = Vec::with_capacity(batch * self.num_classes);
+        for f in 0..batch {
+            out.extend(self.logits(path, &input[f * self.frame_len..(f + 1) * self.frame_len])?);
+        }
+        Ok(out)
+    }
+}
+
+/// FNV-1a over the path name: stable, dependency-free seed derivation.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::morph;
+    use crate::pe::{FpRep, ZYNQ_7100};
+
+    fn paths() -> Vec<MorphPath> {
+        morph::depth_ladder(&zoo::mnist())
+    }
+
+    #[test]
+    fn surrogate_is_deterministic_across_instances() {
+        let a = SurrogateClassifier::new(784, 10, &paths());
+        let b = SurrogateClassifier::new(784, 10, &paths());
+        let frame: Vec<f32> = (0..784).map(|i| (i as f32) / 784.0).collect();
+        assert_eq!(
+            a.logits("d3_w100", &frame).unwrap(),
+            b.logits("d3_w100", &frame).unwrap()
+        );
+        // different paths give different heads
+        assert_ne!(
+            a.logits("d1_w100", &frame).unwrap(),
+            a.logits("d3_w100", &frame).unwrap()
+        );
+    }
+
+    #[test]
+    fn surrogate_validates_inputs() {
+        let c = SurrogateClassifier::new(4, 2, &paths());
+        assert!(matches!(
+            c.logits("nope", &[0.0; 4]),
+            Err(BackendError::UnknownPath(_))
+        ));
+        assert!(matches!(
+            c.logits("d1_w100", &[0.0; 3]),
+            Err(BackendError::BadInput { .. })
+        ));
+        assert!(matches!(
+            c.batch_logits("d1_w100", 2, &[0.0; 7]),
+            Err(BackendError::BadInput { .. })
+        ));
+    }
+
+    #[test]
+    fn net_num_classes_reads_head() {
+        assert_eq!(net_num_classes(&zoo::mnist()), 10);
+        assert_eq!(net_num_classes(&zoo::cifar10()), 10);
+    }
+
+    #[test]
+    fn spec_builds_sim_and_analytical() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        for spec in [
+            BackendSpec::sim(net.clone(), design.clone(), ZYNQ_7100, paths()),
+            BackendSpec::analytical(net.clone(), design.clone(), ZYNQ_7100, paths()),
+        ] {
+            let b = spec.build().expect("build");
+            assert_eq!(b.frame_len(), 784);
+            assert_eq!(b.num_classes(), 10);
+            assert_eq!(b.batch_sizes(), vec![1, 8]);
+            assert_eq!(b.morph_paths().len(), 3);
+        }
+    }
+
+    #[test]
+    fn pjrt_spec_fails_cleanly_without_artifacts() {
+        let net = zoo::mnist();
+        let spec = BackendSpec::Pjrt {
+            artifacts_dir: PathBuf::from("/nonexistent/artifacts"),
+            model: "mnist".into(),
+            net: net.clone(),
+            design: DesignConfig::uniform(&net, 4, FpRep::Int16),
+            device: ZYNQ_7100,
+        };
+        assert!(matches!(spec.build(), Err(BackendError::Init(_))));
+    }
+}

@@ -1,0 +1,93 @@
+//! PJRT backend — the AOT-artifact execution engine behind the trait.
+//!
+//! Thin adapter over [`crate::runtime::Engine`] (which owns the PJRT
+//! client and per-(path, batch) executables). FPGA-side costs still come
+//! from the cycle simulator over the deployed design point, exactly as
+//! the pre-refactor coordinator computed them: PJRT provides numerics,
+//! the simulator provides the power/latency the governor trades on.
+//!
+//! Engines are thread-local by construction, so the coordinator builds
+//! one `PjrtBackend` per worker shard via [`super::BackendSpec::Pjrt`].
+
+use std::cell::OnceCell;
+use std::path::Path;
+
+use super::{sim_path_costs, BackendError, InferenceBackend};
+use crate::design::DesignConfig;
+use crate::graph::Network;
+use crate::morph::governor::PathCosts;
+use crate::morph::{MorphPath, PathRegistry};
+use crate::pe::Device;
+use crate::runtime::Engine;
+
+/// Hardware-backed (PJRT) inference behind [`InferenceBackend`].
+pub struct PjrtBackend {
+    engine: Engine,
+    net: Network,
+    design: DesignConfig,
+    device: Device,
+    /// governor cost table, simulated on first request — only shard 0's
+    /// table is consumed, so the other shards skip the per-path sims
+    costs: OnceCell<PathCosts>,
+}
+
+impl PjrtBackend {
+    /// Load every (path, batch) artifact of `model` from `dir`.
+    pub fn load(
+        dir: &Path,
+        model: &str,
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+    ) -> Result<PjrtBackend, BackendError> {
+        let engine =
+            Engine::load(dir, model).map_err(|e| BackendError::Init(e.to_string()))?;
+        Ok(PjrtBackend { engine, net, design, device, costs: OnceCell::new() })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn frame_len(&self) -> usize {
+        self.engine.frame_len()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.engine.model().num_classes
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.engine.model().batches.clone()
+    }
+
+    fn morph_paths(&self) -> Vec<MorphPath> {
+        self.engine.model().morph_paths()
+    }
+
+    fn path_costs(&self) -> PathCosts {
+        self.costs
+            .get_or_init(|| {
+                let registry = PathRegistry::new(self.engine.model().morph_paths());
+                sim_path_costs(&self.net, &self.design, &self.device, &registry)
+            })
+            .clone()
+    }
+
+    fn execute(
+        &mut self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, BackendError> {
+        self.engine
+            .execute(path, batch, input)
+            .map_err(|e| BackendError::Execute(e.to_string()))
+    }
+}

@@ -1,0 +1,245 @@
+//! Cycle-level simulation backend — the hardware stand-in for serving.
+//!
+//! Every executed frame streams through the simulated pipeline of the
+//! deployed design point under the morph path's clock-gate mask, at
+//! row/event granularity (`sim::simulate_with`). The design evaluation
+//! and shape inference are hoisted out of the frame loop — the serving
+//! hot path only pays the per-layer event walk. Logits come from the
+//! shared [`SurrogateClassifier`], so numerics are bit-identical to the
+//! analytical backend and independent of worker count.
+
+use std::cell::OnceCell;
+use std::collections::BTreeMap;
+
+use super::{BackendError, InferenceBackend, SurrogateClassifier};
+use crate::design::{self, DesignConfig, DesignEval};
+use crate::graph::{shapes, Network};
+use crate::morph::governor::PathCosts;
+use crate::morph::{gate_mask_for, MorphPath, PathRegistry};
+use crate::pe::Device;
+use crate::sim::{self, GateMask, SimReport};
+
+/// Build the per-path cost table from the cycle simulator — the data the
+/// governor trades on (power mW, latency ms per morph path).
+pub fn sim_path_costs(
+    net: &Network,
+    design: &DesignConfig,
+    device: &Device,
+    registry: &PathRegistry,
+) -> PathCosts {
+    let rows = registry
+        .paths()
+        .iter()
+        .map(|p| {
+            let mask = gate_mask_for(net, p);
+            let rep = sim::simulate(net, design, device, &mask);
+            (p.name.clone(), rep.power_mw, rep.latency_ms())
+        })
+        .collect();
+    PathCosts { rows }
+}
+
+/// The cycle-accurate serving backend.
+pub struct SimBackend {
+    net: Network,
+    device: Device,
+    registry: PathRegistry,
+    batches: Vec<usize>,
+    fidelity: usize,
+    classifier: SurrogateClassifier,
+    frame_len: usize,
+    num_classes: usize,
+    eval: DesignEval,
+    shapes: shapes::Shapes,
+    masks: BTreeMap<String, GateMask>,
+    /// governor cost table, computed on first request — only shard 0's
+    /// table feeds the shared governor, so the other shards never pay
+    /// the per-path frame simulations
+    costs: OnceCell<PathCosts>,
+    /// cycle report of the most recently executed path (telemetry)
+    last_report: Option<SimReport>,
+}
+
+impl SimBackend {
+    pub fn new(
+        net: Network,
+        design: DesignConfig,
+        device: Device,
+        paths: Vec<MorphPath>,
+        batches: Vec<usize>,
+        fidelity: usize,
+    ) -> Result<SimBackend, BackendError> {
+        if paths.is_empty() {
+            return Err(BackendError::Init("no morph paths".into()));
+        }
+        if batches.is_empty() {
+            return Err(BackendError::Init("no batch sizes".into()));
+        }
+        let eval = design::evaluate(&net, &design, &device)
+            .map_err(|e| BackendError::Init(e.to_string()))?;
+        let shp =
+            shapes::infer(&net).map_err(|e| BackendError::Init(e.to_string()))?;
+        let registry = PathRegistry::new(paths);
+        let masks: BTreeMap<String, GateMask> = registry
+            .paths()
+            .iter()
+            .map(|p| (p.name.clone(), gate_mask_for(&net, p)))
+            .collect();
+        let (h, w, c) = net.input_dims();
+        let frame_len = h * w * c;
+        let num_classes = super::net_num_classes(&net);
+        let classifier = SurrogateClassifier::new(frame_len, num_classes, registry.paths());
+        Ok(SimBackend {
+            net,
+            device,
+            registry,
+            batches,
+            fidelity: fidelity.max(1),
+            classifier,
+            frame_len,
+            num_classes,
+            eval,
+            shapes: shp,
+            masks,
+            costs: OnceCell::new(),
+            last_report: None,
+        })
+    }
+
+    /// Cycle report of the last executed batch's path, if any.
+    pub fn last_report(&self) -> Option<&SimReport> {
+        self.last_report.as_ref()
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn morph_paths(&self) -> Vec<MorphPath> {
+        self.registry.paths().to_vec()
+    }
+
+    fn path_costs(&self) -> PathCosts {
+        // one frame sim per path against the pre-evaluated design point
+        // (cheaper than the standalone sim_path_costs() convenience,
+        // which re-runs evaluate/infer per path)
+        self.costs
+            .get_or_init(|| PathCosts {
+                rows: self
+                    .registry
+                    .paths()
+                    .iter()
+                    .map(|p| {
+                        let rep = sim::simulate_with(
+                            &self.net,
+                            &self.device,
+                            &self.masks[&p.name],
+                            &self.eval,
+                            &self.shapes,
+                        );
+                        (p.name.clone(), rep.power_mw, rep.latency_ms())
+                    })
+                    .collect(),
+            })
+            .clone()
+    }
+
+    fn execute(
+        &mut self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>, BackendError> {
+        let mask = self
+            .masks
+            .get(path)
+            .ok_or_else(|| BackendError::UnknownPath(path.to_string()))?;
+        if input.len() != batch * self.frame_len {
+            return Err(BackendError::BadInput {
+                got: input.len(),
+                want: batch * self.frame_len,
+            });
+        }
+        // stream every frame through the cycle simulator (fidelity
+        // independent replays per frame, as a hardware run would average
+        // repeated measurements)
+        let mut report = None;
+        for _frame in 0..batch {
+            for _ in 0..self.fidelity {
+                report = Some(sim::simulate_with(
+                    &self.net,
+                    &self.device,
+                    mask,
+                    &self.eval,
+                    &self.shapes,
+                ));
+            }
+        }
+        self.last_report = report;
+        self.classifier.batch_logits(path, batch, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::morph;
+    use crate::pe::{FpRep, ZYNQ_7100};
+
+    fn backend() -> SimBackend {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        SimBackend::new(net, design, ZYNQ_7100, paths, vec![1, 8], 1).unwrap()
+    }
+
+    #[test]
+    fn executes_and_reports_cycles() {
+        let mut b = backend();
+        let input = vec![0.5f32; 784];
+        let logits = b.execute("d1_w100", 1, &input).unwrap();
+        assert_eq!(logits.len(), 10);
+        let light = b.last_report().unwrap().latency_cycles;
+        b.execute("d3_w100", 1, &input).unwrap();
+        let full = b.last_report().unwrap().latency_cycles;
+        assert!(light < full, "gated path must be faster ({light} vs {full})");
+    }
+
+    #[test]
+    fn validates_path_and_input() {
+        let mut b = backend();
+        assert!(matches!(
+            b.execute("bogus", 1, &[0.0; 784]),
+            Err(BackendError::UnknownPath(_))
+        ));
+        assert!(matches!(
+            b.execute("d1_w100", 2, &[0.0; 784]),
+            Err(BackendError::BadInput { .. })
+        ));
+    }
+
+    #[test]
+    fn costs_ordered_by_depth() {
+        let b = backend();
+        let costs = b.path_costs();
+        let get = |n: &str| costs.rows.iter().find(|(m, _, _)| m == n).unwrap().clone();
+        let (_, p1, l1) = get("d1_w100");
+        let (_, p3, l3) = get("d3_w100");
+        assert!(p1 < p3 && l1 < l3);
+    }
+}

@@ -97,6 +97,18 @@ mod tests {
     }
 
     #[test]
+    fn max_wait_boundary_is_inclusive() {
+        // the deadline comparison is `elapsed >= max_wait`: one tick
+        // before the boundary holds, the boundary itself fires
+        let p = policy();
+        let now = Instant::now();
+        let just_before = now + Duration::from_millis(2) - Duration::from_nanos(1);
+        assert_eq!(p.decide(3, Some(now), just_before), None);
+        let exactly = now + Duration::from_millis(2);
+        assert_eq!(p.decide(3, Some(now), exactly), Some(1));
+    }
+
+    #[test]
     fn empty_queue_never_fires() {
         let p = policy();
         assert_eq!(p.decide(0, None, Instant::now()), None);

@@ -43,6 +43,19 @@ impl Histogram {
         self.max_us
     }
 
+    /// Fold another histogram into this one. Buckets are fixed-width
+    /// power-of-two bins shared by construction, so the merge is exact:
+    /// counts, means and bucket-quantiles match a histogram that had
+    /// recorded both streams directly.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     /// Approximate quantile from bucket boundaries (upper bound).
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -91,6 +104,22 @@ impl ServingMetrics {
         self.e2e_latency.record(queue + exec);
     }
 
+    /// Fold another shard's metrics into this one (cross-shard
+    /// aggregation at coordinator shutdown).
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        for (path, n) in &other.frames_by_path {
+            *self.frames_by_path.entry(path.clone()).or_insert(0) += n;
+        }
+        self.queue_latency.merge(&other.queue_latency);
+        self.exec_latency.merge(&other.exec_latency);
+        self.e2e_latency.merge(&other.e2e_latency);
+        self.morph_switches += other.morph_switches;
+        self.stall_frames += other.stall_frames;
+        self.energy_j += other.energy_j;
+    }
+
     pub fn throughput_fps(&self, wall: Duration) -> f64 {
         if wall.is_zero() {
             return 0.0;
@@ -120,6 +149,55 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        // two shards recording disjoint streams must merge into exactly
+        // the histogram of the combined stream
+        let mut combined = Histogram::default();
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for (i, us) in [5u64, 17, 90, 400, 2_000, 9_000, 65_000, 900_000]
+            .iter()
+            .enumerate()
+        {
+            combined.record(Duration::from_micros(*us));
+            if i % 2 == 0 {
+                a.record(Duration::from_micros(*us));
+            } else {
+                b.record(Duration::from_micros(*us));
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.max_us(), combined.max_us());
+        assert!((a.mean_us() - combined.mean_us()).abs() < 1e-9);
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile_us(q), combined.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn metrics_merge_preserves_counts() {
+        let mut a = ServingMetrics::default();
+        a.record_batch("d3_w100", 8, Duration::from_micros(50), Duration::from_micros(200));
+        a.morph_switches = 1;
+        a.energy_j = 0.25;
+        let mut b = ServingMetrics::default();
+        b.record_batch("d3_w100", 4, Duration::from_micros(10), Duration::from_micros(90));
+        b.record_batch("d1_w100", 1, Duration::from_micros(20), Duration::from_micros(30));
+        b.stall_frames = 2;
+        b.energy_j = 0.5;
+        a.merge(&b);
+        assert_eq!(a.requests, 13);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.frames_by_path["d3_w100"], 12);
+        assert_eq!(a.frames_by_path["d1_w100"], 1);
+        assert_eq!(a.e2e_latency.count(), 3);
+        assert_eq!(a.morph_switches, 1);
+        assert_eq!(a.stall_frames, 2);
+        assert!((a.energy_j - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! The ForgeMorph serving coordinator (L3 leader).
+//! The ForgeMorph serving coordinator (L3 leader) — sharded edition.
 //!
-//! Owns the request loop: a worker thread holds the PJRT [`Engine`]
-//! (executables are thread-local by construction — the engine is created
-//! *inside* the worker), requests arrive over an mpsc channel, the
-//! [`BatchPolicy`] groups them, and the NeuroMorph [`Governor`] is
-//! consulted between batches to pick the morph path under the current
-//! power/latency budget. FPGA-side power/latency for the active path
-//! comes from the cycle simulator (`sim/`), PJRT provides the numerics.
+//! The engine owns N worker shards. Each shard runs its own
+//! [`crate::backend::InferenceBackend`] instance (PJRT executables are
+//! thread-local — each backend is created *inside* its worker thread)
+//! and its own [`BatchPolicy`]. Requests land in per-shard queues
+//! (round-robin) and idle workers steal ready batches from their
+//! neighbours, so one hot shard never caps throughput.
+//!
+//! The NeuroMorph [`Governor`] is **shared state** (`Arc<Mutex<_>>`),
+//! consulted by every shard between batches (never mid-batch): morph
+//! decisions stay globally consistent — all shards execute the same
+//! active path, and a budget squeeze downshifts the whole fleet at once.
+//! Per-shard [`ServingMetrics`] merge into one run report at shutdown.
 
 pub mod batcher;
 pub mod metrics;
@@ -15,18 +20,19 @@ pub mod trace;
 pub use batcher::BatchPolicy;
 pub use metrics::{Histogram, ServingMetrics};
 
+// re-exported for compatibility: the cost-table builder moved to the
+// backend layer with the rest of the sim-serving glue
+pub use crate::backend::sim_path_costs;
+
 use std::collections::VecDeque;
-use std::path::PathBuf;
-use std::sync::mpsc;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::design::DesignConfig;
-use crate::graph::Network;
-use crate::morph::governor::{Budget, Decision, Governor, PathCosts};
-use crate::morph::{gate_mask_for, PathRegistry};
-use crate::pe::Device;
-use crate::runtime::Engine;
-use crate::sim;
+use crate::backend::{BackendSpec, InferenceBackend as _};
+use crate::morph::governor::{Budget, Decision, Governor};
+use crate::morph::PathRegistry;
 
 /// An inference request: one flat NHWC frame.
 pub struct Request {
@@ -43,6 +49,8 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub class: usize,
     pub path: String,
+    /// worker shard that executed the batch
+    pub shard: usize,
     pub queue: Duration,
     pub exec: Duration,
 }
@@ -50,198 +58,366 @@ pub struct Response {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub artifacts_dir: PathBuf,
-    pub model: String,
+    /// batcher flush deadline
     pub max_wait: Duration,
     /// governor hysteresis (observations)
     pub patience: usize,
+    /// worker shards (each with its own backend instance)
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig {
-            artifacts_dir: PathBuf::from("artifacts"),
-            model: "mnist".into(),
-            max_wait: Duration::from_millis(2),
-            patience: 2,
+        ServeConfig { max_wait: Duration::from_millis(2), patience: 2, workers: 1 }
+    }
+}
+
+/// Why a coordinator call was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// the coordinator has shut down (or never finished starting)
+    Closed,
+    /// submitted frame length does not match the backend's frame
+    BadFrame { got: usize, want: usize },
+}
+
+impl fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoordinatorError::Closed => write!(f, "coordinator is closed"),
+            CoordinatorError::BadFrame { got, want } => {
+                write!(f, "frame has {got} elements, backend expects {want}")
+            }
         }
     }
 }
 
-/// Build the per-path cost table from the cycle simulator — the data the
-/// governor trades on (power mW, latency ms per morph path).
-pub fn sim_path_costs(
-    net: &Network,
-    design: &DesignConfig,
-    device: &Device,
-    registry: &PathRegistry,
-) -> PathCosts {
-    let rows = registry
-        .paths()
-        .iter()
-        .map(|p| {
-            let mask = gate_mask_for(net, p);
-            let rep = sim::simulate(net, design, device, &mask);
-            (p.name.clone(), rep.power_mw, rep.latency_ms())
-        })
-        .collect();
-    PathCosts { rows }
+impl std::error::Error for CoordinatorError {}
+
+/// State shared by the submit side and every worker shard.
+struct Shared {
+    /// per-shard request queues (work-stealing deques)
+    queues: Vec<Mutex<VecDeque<Request>>>,
+    /// accepting new work? cleared by shutdown / failed startup
+    open: AtomicBool,
+    /// requests enqueued but not yet taken (incremented *before* push)
+    pending: AtomicUsize,
+    /// operating budget the governor sees
+    budget: Mutex<Budget>,
+    /// the shared NeuroMorph governor (installed by shard 0 at startup)
+    governor: OnceLock<Mutex<Governor>>,
+    /// (path, power mW, latency ms) rows for energy accounting
+    cost_rows: OnceLock<Vec<(String, f64, f64)>>,
+    /// backend frame length, for validating submissions up front
+    frame_len: OnceLock<usize>,
+    /// sleep/wake for idle workers
+    wake: Mutex<()>,
+    wake_cv: Condvar,
 }
 
-/// Commands understood by the serving worker.
-enum Command {
-    Infer(Request),
-    SetBudget(Budget),
-    Shutdown,
+impl Shared {
+    fn new(shards: usize) -> Shared {
+        Shared {
+            queues: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            open: AtomicBool::new(true),
+            pending: AtomicUsize::new(0),
+            budget: Mutex::new(Budget::unconstrained()),
+            governor: OnceLock::new(),
+            cost_rows: OnceLock::new(),
+            frame_len: OnceLock::new(),
+            wake: Mutex::new(()),
+            wake_cv: Condvar::new(),
+        }
+    }
+
+    fn notify_one(&self) {
+        self.wake_cv.notify_one();
+    }
+
+    fn notify_all(&self) {
+        self.wake_cv.notify_all();
+    }
+
+    /// Park briefly until new work may be available.
+    fn wait_brief(&self, d: Duration) {
+        let guard = self.wake.lock().unwrap();
+        let _ = self
+            .wake_cv
+            .wait_timeout(guard, d.max(Duration::from_micros(200)))
+            .unwrap();
+    }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running sharded coordinator.
 pub struct Coordinator {
-    tx: mpsc::Sender<Command>,
-    worker: Option<std::thread::JoinHandle<ServingMetrics>>,
-    next_id: u64,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<ServingMetrics>>,
+    next_id: AtomicU64,
+    next_shard: AtomicUsize,
 }
 
 impl Coordinator {
-    /// Start the serving worker. `net`/`design` parameterize the FPGA
-    /// cost model; the engine loads inside the worker thread.
-    pub fn start(
-        cfg: ServeConfig,
-        net: Network,
-        design: DesignConfig,
-        device: Device,
-    ) -> anyhow::Result<Coordinator> {
-        let (tx, rx) = mpsc::channel::<Command>();
+    /// Start `cfg.workers` serving shards, each building its own backend
+    /// from `spec`. Fails if any shard's backend fails to initialize.
+    pub fn start(cfg: ServeConfig, spec: BackendSpec) -> anyhow::Result<Coordinator> {
+        let n = cfg.workers.max(1);
+        let shared = Arc::new(Shared::new(n));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let worker = std::thread::spawn(move || {
-            worker_loop(cfg, net, design, device, rx, ready_tx)
-        });
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
-            .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
-        Ok(Coordinator { tx, worker: Some(worker), next_id: 0 })
+        let mut workers = Vec::with_capacity(n);
+        for shard_id in 0..n {
+            let shared = Arc::clone(&shared);
+            let spec = spec.clone();
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(shard_id, cfg, spec, shared, ready)
+            }));
+        }
+        drop(ready_tx);
+
+        let mut failure: Option<String> = None;
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failure = Some(e),
+                Err(_) => failure = Some("worker died during startup".into()),
+            }
+        }
+        if let Some(e) = failure {
+            shared.open.store(false, Ordering::Release);
+            shared.notify_all();
+            for w in workers {
+                let _ = w.join();
+            }
+            anyhow::bail!("backend init failed: {e}");
+        }
+        Ok(Coordinator {
+            shared,
+            workers,
+            next_id: AtomicU64::new(0),
+            next_shard: AtomicUsize::new(0),
+        })
     }
 
-    /// Submit one frame; returns the reply receiver.
-    pub fn submit(&mut self, data: Vec<f32>) -> mpsc::Receiver<Response> {
+    /// Submit one frame; returns the reply receiver, or
+    /// [`CoordinatorError::Closed`] once the coordinator has shut down
+    /// (previously this silently dropped the request).
+    pub fn submit(&self, data: Vec<f32>) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
+        if !self.shared.open.load(Ordering::Acquire) {
+            return Err(CoordinatorError::Closed);
+        }
+        if let Some(&want) = self.shared.frame_len.get() {
+            if data.len() != want {
+                return Err(CoordinatorError::BadFrame { got: data.len(), want });
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard =
+            self.next_shard.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
         let (reply, rx) = mpsc::channel();
-        self.next_id += 1;
-        let _ = self.tx.send(Command::Infer(Request {
-            id: self.next_id,
+        // pending is bumped before the push so a racing worker can never
+        // drive the counter below zero
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.shared.queues[shard].lock().unwrap().push_back(Request {
+            id,
             data,
             enqueued: Instant::now(),
             reply,
-        }));
-        rx
+        });
+        self.shared.notify_one();
+        Ok(rx)
     }
 
-    /// Update the operating budget the governor sees.
-    pub fn set_budget(&self, budget: Budget) {
-        let _ = self.tx.send(Command::SetBudget(budget));
+    /// Update the operating budget the governor sees. Errors once the
+    /// coordinator is closed instead of silently doing nothing.
+    pub fn set_budget(&self, budget: Budget) -> Result<(), CoordinatorError> {
+        if !self.shared.open.load(Ordering::Acquire) {
+            return Err(CoordinatorError::Closed);
+        }
+        *self.shared.budget.lock().unwrap() = budget;
+        Ok(())
     }
 
-    /// Stop and collect the run's metrics.
-    pub fn shutdown(mut self) -> ServingMetrics {
-        let _ = self.tx.send(Command::Shutdown);
-        self.worker
-            .take()
-            .expect("shutdown called once")
-            .join()
-            .expect("worker panicked")
+    /// Worker shard count.
+    pub fn workers(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Stop accepting work, drain every in-flight request, and return
+    /// the metrics of all shards merged. Idempotent: a second call
+    /// returns empty metrics.
+    pub fn shutdown(&mut self) -> ServingMetrics {
+        self.shared.open.store(false, Ordering::Release);
+        self.shared.notify_all();
+        let mut merged = ServingMetrics::default();
+        let mut panicked = 0usize;
+        for w in self.workers.drain(..) {
+            match w.join() {
+                Ok(m) => merged.merge(&m),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".into());
+                    eprintln!("[coordinator] worker shard panicked: {msg}");
+                    panicked += 1;
+                }
+            }
+        }
+        // surface the failure loudly (matching the pre-refactor
+        // `.expect("worker panicked")`) unless we are already unwinding —
+        // a panic inside Drop during unwind would abort the process
+        if panicked > 0 && !std::thread::panicking() {
+            panic!("{panicked} worker shard(s) panicked; metrics incomplete");
+        }
+        merged
     }
 }
 
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.shutdown();
+        }
+    }
+}
+
+/// How often shard 0 tracks the budget while the fleet is idle — the
+/// pre-refactor single worker's poll cadence, so a squeeze applied in a
+/// traffic lull still downshifts within ~patience x 5ms.
+const IDLE_OBSERVE_PERIOD: Duration = Duration::from_millis(5);
+
+/// Feed one budget observation to the shared governor, record any
+/// switch in this shard's metrics, and return the now-active path.
+fn observe_governor(
+    governor: &Mutex<Governor>,
+    shared: &Shared,
+    metrics: &mut ServingMetrics,
+) -> String {
+    let budget = *shared.budget.lock().unwrap();
+    let mut gov = governor.lock().unwrap();
+    match gov.observe(&budget) {
+        Decision::Switch { stall_frames, .. } => {
+            metrics.morph_switches += 1;
+            metrics.stall_frames += stall_frames as u64;
+        }
+        Decision::Hold => {}
+    }
+    gov.current().to_string()
+}
+
+/// Pop a ready batch: own queue first, then steal from neighbours.
+fn take_batch(
+    shared: &Shared,
+    own: usize,
+    policy: &BatchPolicy,
+) -> Option<(usize, Vec<Request>)> {
+    let n = shared.queues.len();
+    let now = Instant::now();
+    for k in 0..n {
+        let qi = (own + k) % n;
+        let mut q = shared.queues[qi].lock().unwrap();
+        let oldest = q.front().map(|r| r.enqueued);
+        if let Some(size) = policy.decide(q.len(), oldest, now) {
+            let take: Vec<Request> =
+                (0..size.min(q.len())).filter_map(|_| q.pop_front()).collect();
+            drop(q);
+            if !take.is_empty() {
+                shared.pending.fetch_sub(take.len(), Ordering::AcqRel);
+                return Some((size, take));
+            }
+        }
+    }
+    None
+}
+
 fn worker_loop(
+    shard_id: usize,
     cfg: ServeConfig,
-    net: Network,
-    design: DesignConfig,
-    device: Device,
-    rx: mpsc::Receiver<Command>,
+    spec: BackendSpec,
+    shared: Arc<Shared>,
     ready: mpsc::Sender<Result<(), String>>,
 ) -> ServingMetrics {
-    let engine = match Engine::load(&cfg.artifacts_dir, &cfg.model) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
-        }
+    let mut backend = match spec.build() {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(e.to_string()));
             return ServingMetrics::default();
         }
     };
-    let registry = PathRegistry::new(engine.model().morph_paths());
-    let costs = sim_path_costs(&net, &design, &device, &registry);
-    let cost_rows = costs.rows.clone();
-    let mut governor = Governor::new(registry, costs, cfg.patience);
-    let policy = BatchPolicy::new(engine.model().batches.clone(), cfg.max_wait);
+    if shard_id == 0 {
+        let registry = PathRegistry::new(backend.morph_paths());
+        let costs = backend.path_costs();
+        let _ = shared.frame_len.set(backend.frame_len());
+        let _ = shared.cost_rows.set(costs.rows.clone());
+        let _ = shared
+            .governor
+            .set(Mutex::new(Governor::new(registry, costs, cfg.patience)));
+    }
+    let _ = ready.send(Ok(()));
+    // drop the handshake sender now: if another shard panics before its
+    // own send, start() sees the channel disconnect instead of hanging
+    drop(ready);
 
+    // wait for shard 0 to install the shared governor
+    let governor = loop {
+        if let Some(g) = shared.governor.get() {
+            break g;
+        }
+        if !shared.open.load(Ordering::Acquire) {
+            return ServingMetrics::default();
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    let cost_rows = shared.cost_rows.get().cloned().unwrap_or_default();
+    let policy = BatchPolicy::new(backend.batch_sizes(), cfg.max_wait);
+    let frame = backend.frame_len();
+    let nc = backend.num_classes();
     let mut metrics = ServingMetrics::default();
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    let mut budget = Budget::unconstrained();
-    let mut open = true;
+    let mut last_idle_observe = Instant::now();
 
-    while open || !queue.is_empty() {
-        // drain incoming commands (briefly blocking when idle)
-        let timeout = if queue.is_empty() {
-            Duration::from_millis(5)
-        } else {
-            cfg.max_wait / 2
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(Command::Infer(r)) => queue.push_back(r),
-            Ok(Command::SetBudget(b)) => budget = b,
-            Ok(Command::Shutdown) => open = false,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
-        }
-        while let Ok(cmd) = rx.try_recv() {
-            match cmd {
-                Command::Infer(r) => queue.push_back(r),
-                Command::SetBudget(b) => budget = b,
-                Command::Shutdown => open = false,
+    loop {
+        let open = shared.open.load(Ordering::Acquire);
+
+        let Some((size, take)) = take_batch(&shared, shard_id, &policy) else {
+            if !open && shared.pending.load(Ordering::Acquire) == 0 {
+                break;
             }
-        }
-
-        // morph decision between batches (never mid-batch)
-        match governor.observe(&budget) {
-            Decision::Switch { stall_frames, .. } => {
-                metrics.morph_switches += 1;
-                metrics.stall_frames += stall_frames as u64;
+            // budget changes must bite during traffic lulls too; shard 0
+            // alone polls at the single-worker cadence so idle spinning
+            // across N shards does not dilute the patience hysteresis
+            if shard_id == 0 && last_idle_observe.elapsed() >= IDLE_OBSERVE_PERIOD {
+                let _ = observe_governor(governor, &shared, &mut metrics);
+                last_idle_observe = Instant::now();
             }
-            Decision::Hold => {}
-        }
-
-        let now = Instant::now();
-        let oldest = queue.front().map(|r| r.enqueued);
-        let Some(size) = policy.decide(queue.len(), oldest, now) else {
+            shared.wait_brief(cfg.max_wait / 2);
             continue;
         };
-        let take: Vec<Request> = (0..size.min(queue.len()))
-            .filter_map(|_| queue.pop_front())
-            .collect();
-        if take.is_empty() {
-            continue;
-        }
-        let path = governor.current().to_string();
-        let frame = engine.frame_len();
+
+        // morph decision between batches (never mid-batch), paced by
+        // batch execution so `patience` keeps its meaning regardless of
+        // worker count. The governor is shared, so the whole fleet
+        // tracks one active path.
+        let path = observe_governor(governor, &shared, &mut metrics);
+
         let mut input = Vec::with_capacity(size * frame);
         for r in &take {
             input.extend_from_slice(&r.data);
         }
         // pad the tail of a short batch by repeating the last frame
+        // (submit() validated lengths, so input is a nonzero multiple
+        // of `frame` here)
         while input.len() < size * frame {
             let start = input.len() - frame;
             input.extend_from_within(start..);
         }
 
         let t0 = Instant::now();
-        let result = engine.execute(&path, size, &input);
-        let exec = t0.elapsed();
-        match result {
+        match backend.execute(&path, size, &input) {
             Ok(logits) => {
-                let classes = engine.argmax(&logits);
-                let nc = engine.model().num_classes;
+                let exec = t0.elapsed();
+                let classes = backend.argmax(&logits);
                 for (i, r) in take.iter().enumerate() {
                     let queue_d = t0.duration_since(r.enqueued);
                     let _ = r.reply.send(Response {
@@ -249,6 +425,7 @@ fn worker_loop(
                         logits: logits[i * nc..(i + 1) * nc].to_vec(),
                         class: classes[i],
                         path: path.clone(),
+                        shard: shard_id,
                         queue: queue_d,
                         exec,
                     });
@@ -256,15 +433,15 @@ fn worker_loop(
                 let queue_d = t0.duration_since(take[0].enqueued);
                 metrics.record_batch(&path, take.len(), queue_d, exec);
                 // modeled FPGA energy for these frames on the active path:
-                // E = frames x P_path x T_frame (from the cycle simulator)
+                // E = frames x P_path x T_frame (from the backend's table)
                 if let Some((_, pw, lat)) = cost_rows.iter().find(|(n, _, _)| *n == path) {
                     metrics.energy_j += take.len() as f64 * (pw / 1000.0) * (lat / 1000.0);
                 }
             }
             Err(e) => {
                 // failure injection path: report and drop (callers see a
-                // closed channel); the loop keeps serving
-                eprintln!("[coordinator] execute failed on {path}: {e}");
+                // closed channel); the shard keeps serving
+                eprintln!("[coordinator:{shard_id}] execute failed on {path}: {e}");
             }
         }
     }
@@ -274,6 +451,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::design::DesignConfig;
     use crate::graph::zoo;
     use crate::pe::{FpRep, ZYNQ_7100};
 
@@ -289,5 +467,69 @@ mod tests {
         let (_, p_d1, l_d1) = get("d1_w100");
         assert!(p_d1 < p_full, "gated power {p_d1} < full {p_full}");
         assert!(l_d1 < l_full, "gated latency {l_d1} < full {l_full}");
+    }
+
+    #[test]
+    fn submit_and_budget_fail_after_shutdown() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 2, FpRep::Int16);
+        let spec = BackendSpec::sim(
+            net.clone(),
+            design,
+            ZYNQ_7100,
+            crate::morph::depth_ladder(&net),
+        );
+        let mut coord =
+            Coordinator::start(ServeConfig { workers: 2, ..Default::default() }, spec).unwrap();
+        assert_eq!(coord.workers(), 2);
+        assert!(coord.submit(vec![0.0; 784]).is_ok());
+        coord.shutdown();
+        assert!(matches!(
+            coord.submit(vec![0.0; 784]),
+            Err(CoordinatorError::Closed)
+        ));
+        assert_eq!(
+            coord.set_budget(Budget::unconstrained()),
+            Err(CoordinatorError::Closed)
+        );
+    }
+
+    #[test]
+    fn submit_rejects_wrong_frame_length() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 2, FpRep::Int16);
+        let spec = BackendSpec::sim(
+            net.clone(),
+            design,
+            ZYNQ_7100,
+            crate::morph::depth_ladder(&net),
+        );
+        let mut coord = Coordinator::start(ServeConfig::default(), spec).unwrap();
+        assert!(matches!(
+            coord.submit(vec![0.0; 100]),
+            Err(CoordinatorError::BadFrame { got: 100, want: 784 })
+        ));
+        assert!(matches!(
+            coord.submit(vec![0.0; 785]),
+            Err(CoordinatorError::BadFrame { .. })
+        ));
+        assert!(coord.submit(vec![0.0; 784]).is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_backend_init_surfaces_error() {
+        let net = zoo::mnist();
+        let spec = BackendSpec::Pjrt {
+            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+            model: "mnist".into(),
+            net: net.clone(),
+            design: DesignConfig::uniform(&net, 2, FpRep::Int16),
+            device: ZYNQ_7100,
+        };
+        let err = Coordinator::start(ServeConfig::default(), spec)
+            .err()
+            .expect("must fail");
+        assert!(err.to_string().contains("backend init failed"));
     }
 }

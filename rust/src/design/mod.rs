@@ -151,14 +151,34 @@ impl DesignEval {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DesignError {
-    #[error("shape inference: {0}")]
-    Shape(#[from] shapes::ShapeError),
-    #[error("parallelism vector has {got} entries, network has {want} conv layers")]
+    Shape(shapes::ShapeError),
     ArityMismatch { got: usize, want: usize },
-    #[error("layer {layer}: parallelism {p} outside [1, {ub}]")]
     OutOfBounds { layer: usize, p: usize, ub: usize },
+}
+
+impl std::fmt::Display for DesignError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DesignError::Shape(e) => write!(f, "shape inference: {e}"),
+            DesignError::ArityMismatch { got, want } => write!(
+                f,
+                "parallelism vector has {got} entries, network has {want} conv layers"
+            ),
+            DesignError::OutOfBounds { layer, p, ub } => {
+                write!(f, "layer {layer}: parallelism {p} outside [1, {ub}]")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DesignError {}
+
+impl From<shapes::ShapeError> for DesignError {
+    fn from(e: shapes::ShapeError) -> Self {
+        DesignError::Shape(e)
+    }
 }
 
 /// Evaluate a design point on a device (the analytical fast path of the

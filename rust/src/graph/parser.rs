@@ -23,12 +23,27 @@
 use super::{Layer, LayerKind, Network, Padding};
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error("descriptor json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("descriptor: {0}")]
+    Json(crate::util::json::JsonError),
     Schema(String),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Json(e) => write!(f, "descriptor json: {e}"),
+            ParseError::Schema(msg) => write!(f, "descriptor: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl From<crate::util::json::JsonError> for ParseError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ParseError::Json(e)
+    }
 }
 
 fn schema(msg: impl Into<String>) -> ParseError {

@@ -20,11 +20,19 @@ impl FeatureShape {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ShapeError {
-    #[error("layer {id} ({name}): {msg}")]
     Invalid { id: usize, name: String, msg: String },
 }
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ShapeError::Invalid { id, name, msg } = self;
+        write!(f, "layer {id} ({name}): {msg}")
+    }
+}
+
+impl std::error::Error for ShapeError {}
 
 /// Result of inference: per-layer input and output shapes.
 #[derive(Debug, Clone)]

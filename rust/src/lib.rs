@@ -17,10 +17,15 @@
 //!   * [`sim`] — cycle-level streaming simulator (the hardware stand-in)
 //!   * [`morph`] — NeuroMorph runtime reconfiguration + governor
 //!   * [`runtime`] — PJRT executor loading the AOT artifacts
-//!   * [`coordinator`] — serving loop: batcher, budget monitor, metrics
+//!   * [`backend`] — the unified `InferenceBackend` trait: PJRT, cycle
+//!     simulator and analytical model behind one execution contract
+//!   * [`coordinator`] — sharded multi-worker serving engine: per-shard
+//!     queues with work stealing, dynamic batching, shared NeuroMorph
+//!     governor, mergeable metrics
 //!   * [`baselines`] — published comparison rows (Tables IV, VI)
 //!   * [`report`] — regenerates every paper table and figure
 
+pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod design;

@@ -5,7 +5,8 @@
 //! forgemorph dse --model cifar10 [--pop N --gens N --seed N --dsp N --latency MS]
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
 //! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
-//! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR]
+//! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
+//!                   --workers N --backend pjrt|sim|analytical]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
 //! ```
 
@@ -13,7 +14,9 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Context};
+use forgemorph::backend::BackendSpec;
 use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::morph;
 use forgemorph::design::{self, DesignConfig};
 use forgemorph::dse;
 use forgemorph::graph::zoo;
@@ -45,11 +48,13 @@ const HELP: &str = "\
 forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
-                fig10, fig11, fig12, all)
+                fig10, fig11, fig12, backends, all)
   dse           NeuroForge design space exploration
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
-  serve         run the NeuroMorph serving demo against AOT artifacts
+  serve         run the NeuroMorph serving demo (--workers N shards;
+                --backend pjrt needs AOT artifacts, sim/analytical run
+                self-contained)
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
@@ -164,34 +169,53 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let requests = args.get_usize("requests", 256);
     let rate_hz = args.get_f64("rate", 2000.0);
+    let workers = args.get_usize("workers", 1);
+    let backend = args.get_or("backend", "pjrt").to_string();
     let net = net_for(args)?;
     let design = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
 
+    let spec = match backend.as_str() {
+        "pjrt" => BackendSpec::Pjrt {
+            artifacts_dir: artifacts,
+            model: model.clone(),
+            net: net.clone(),
+            design,
+            device: ZYNQ_7100,
+        },
+        "sim" => BackendSpec::sim(net.clone(), design, ZYNQ_7100, morph::depth_ladder(&net)),
+        "analytical" => {
+            BackendSpec::analytical(net.clone(), design, ZYNQ_7100, morph::depth_ladder(&net))
+        }
+        other => bail!("unknown backend '{other}' (pjrt|sim|analytical)"),
+    };
     let cfg = ServeConfig {
-        artifacts_dir: artifacts,
-        model: model.clone(),
         max_wait: Duration::from_millis(2),
         patience: 2,
+        workers,
     };
-    let mut coord = Coordinator::start(cfg, net, design, ZYNQ_7100)?;
-    println!("serving {requests} requests at ~{rate_hz} Hz on '{model}'");
+    let mut coord = Coordinator::start(cfg, spec)?;
+    println!(
+        "serving {requests} requests at ~{rate_hz} Hz on '{model}' \
+         ({backend} backend, {workers} worker shard(s))"
+    );
 
     let mut rng = Rng::new(42);
-    let frame = 28 * 28; // mnist default; real shape read by worker
+    let (in_h, in_w, in_c) = net.input_dims();
+    let frame = in_h * in_w * in_c;
     let mut receivers = Vec::with_capacity(requests);
     let t0 = std::time::Instant::now();
     for i in 0..requests {
         // mid-run power squeeze: the governor must downshift
         if i == requests / 3 {
-            coord.set_budget(Budget { power_mw: Some(520.0), latency_ms: None });
+            coord.set_budget(Budget { power_mw: Some(520.0), latency_ms: None })?;
             println!("[budget] power cap 520 mW");
         }
         if i == 2 * requests / 3 {
-            coord.set_budget(Budget::unconstrained());
+            coord.set_budget(Budget::unconstrained())?;
             println!("[budget] unconstrained");
         }
         let data: Vec<f32> = (0..frame).map(|_| rng.f64() as f32).collect();
-        receivers.push(coord.submit(data));
+        receivers.push(coord.submit(data).context("submit")?);
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate_hz)));
     }
     let mut by_path = std::collections::BTreeMap::<String, u64>::new();

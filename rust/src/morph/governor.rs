@@ -198,6 +198,28 @@ mod tests {
     }
 
     #[test]
+    fn patience_delays_switch_by_exactly_k_observations() {
+        // the k-th consecutive observation fires, never earlier: the
+        // hysteresis that keeps a noisy budget from thrashing the fabric
+        for patience in 1..=5usize {
+            let mut gov = Governor::new(registry(), costs(), patience);
+            let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+            for i in 1..patience {
+                assert_eq!(
+                    gov.observe(&tight),
+                    Decision::Hold,
+                    "patience {patience}: observation {i} must hold"
+                );
+                assert_eq!(gov.current(), "d3_w100");
+            }
+            assert!(
+                matches!(gov.observe(&tight), Decision::Switch { .. }),
+                "patience {patience}: observation {patience} must switch"
+            );
+        }
+    }
+
+    #[test]
     fn flapping_budget_resets_pending() {
         let mut gov = Governor::new(registry(), costs(), 2);
         let tight = Budget { power_mw: Some(500.0), latency_ms: None };

@@ -15,7 +15,7 @@
 pub mod governor;
 pub mod schedule;
 
-use crate::graph::Network;
+use crate::graph::{shapes, LayerKind, Network};
 use crate::sim::GateMask;
 
 /// One morphable execution path (a (depth, width) pair with a dedicated
@@ -86,6 +86,54 @@ impl PathRegistry {
     }
 }
 
+/// Synthetic depth-path ladder for networks that carry no AOT manifest
+/// (the sim/analytical serving backends): one path per conv-block
+/// prefix, with MACs/params accumulated from the shape-inferred
+/// per-block work and a monotone accuracy ladder standing in for
+/// DistillCycle calibration. The full-depth path lands at 0.99.
+pub fn depth_ladder(net: &Network) -> Vec<MorphPath> {
+    let shp = shapes::infer(net).expect("validated network");
+    let mut block_work: Vec<(usize, usize)> = Vec::new(); // (macs, params)
+    for layer in &net.layers {
+        match &layer.kind {
+            LayerKind::Conv { filters, k, .. } => {
+                let inp = shp.input(layer.id);
+                let out = shp.output(layer.id);
+                block_work.push((
+                    k * k * inp.c * filters * out.h * out.w,
+                    k * k * inp.c * filters + filters,
+                ));
+            }
+            LayerKind::DwConv { k, .. } => {
+                let inp = shp.input(layer.id);
+                let out = shp.output(layer.id);
+                block_work.push((k * k * inp.c * out.h * out.w, k * k * inp.c + inp.c));
+            }
+            _ => {}
+        }
+    }
+    let d_max = block_work.len().max(1);
+    let mut macs_acc = 0usize;
+    let mut params_acc = 0usize;
+    block_work
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, p))| {
+            let depth = i + 1;
+            macs_acc += m;
+            params_acc += p;
+            MorphPath {
+                name: format!("d{depth}_w100"),
+                depth,
+                width_pct: 100,
+                accuracy: 0.90 + 0.09 * depth as f64 / d_max as f64,
+                params: params_acc,
+                macs: macs_acc,
+            }
+        })
+        .collect()
+}
+
 /// Translate a morph path into the clock-gate mask the simulator/RTL use.
 pub fn gate_mask_for(net: &Network, path: &MorphPath) -> GateMask {
     let n_blocks = net.conv_layer_ids().len();
@@ -142,6 +190,23 @@ pub(crate) mod tests {
         assert_eq!(d1.block_active, vec![true, false, false]);
         let w50 = gate_mask_for(&net, reg.by_name("d3_w50").unwrap());
         assert!((w50.width_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depth_ladder_monotone() {
+        let net = zoo::mnist();
+        let ladder = depth_ladder(&net);
+        assert_eq!(ladder.len(), 3);
+        assert!(ladder
+            .windows(2)
+            .all(|w| w[0].macs < w[1].macs && w[0].accuracy < w[1].accuracy));
+        let full = ladder.last().unwrap();
+        assert_eq!(full.name, "d3_w100");
+        assert!((full.accuracy - 0.99).abs() < 1e-9);
+        // registry order must equal depth order (macs are cumulative)
+        let reg = PathRegistry::new(ladder);
+        assert_eq!(reg.full().depth, 3);
+        assert_eq!(reg.lightest().depth, 1);
     }
 
     #[test]

@@ -573,6 +573,56 @@ pub fn fig12() -> String {
     s
 }
 
+/// Backend comparison: the governor's per-path cost table as seen by
+/// the cycle-level simulator vs the analytical Eq. 12-15 fast path —
+/// the two offline implementations of `InferenceBackend`. The ordering
+/// must agree (same morph decisions on any budget trace); magnitudes
+/// differ by the second-order effects only the simulator models.
+pub fn backends() -> String {
+    use crate::backend::{AnalyticalBackend, InferenceBackend, SimBackend};
+    let net = zoo::mnist();
+    let cfg = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let paths = crate::morph::depth_ladder(&net);
+    let mut s = String::from(
+        "\n== Serving backends: governor cost table, sim vs analytical (MNIST, p=4) ==\n",
+    );
+    let sim_b = SimBackend::new(
+        net.clone(),
+        cfg.clone(),
+        ZYNQ_7100,
+        paths.clone(),
+        vec![1, 8],
+        1,
+    )
+    .expect("sim backend");
+    let ana_b = AnalyticalBackend::new(net, cfg, ZYNQ_7100, paths, vec![1, 8])
+        .expect("analytical backend");
+    let sim_costs = sim_b.path_costs();
+    let ana_costs = ana_b.path_costs();
+    let _ = writeln!(
+        s,
+        "{:<10} {:>12} {:>12} {:>14} {:>14}",
+        "path", "sim mW", "ana mW", "sim lat ms", "ana lat ms"
+    );
+    for (name, sim_p, sim_l) in &sim_costs.rows {
+        let (_, ana_p, ana_l) = ana_costs
+            .rows
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .expect("path present in both tables");
+        let _ = writeln!(
+            s,
+            "{name:<10} {sim_p:>12.1} {ana_p:>12.1} {sim_l:>14.4} {ana_l:>14.4}"
+        );
+    }
+    let _ = writeln!(
+        s,
+        "both backends share the surrogate classifier: logits are bit-identical\n\
+         (pinned by tests/backend_serving.rs at 1 and 4 worker shards)"
+    );
+    s
+}
+
 /// Everything, in paper order.
 pub fn all() -> String {
     let mut s = String::new();
@@ -587,6 +637,7 @@ pub fn all() -> String {
     s.push_str(&table6());
     s.push_str(&fig11());
     s.push_str(&fig12());
+    s.push_str(&backends());
     s
 }
 
@@ -604,6 +655,7 @@ pub fn by_name(id: &str) -> Option<String> {
         "fig10" => fig10(),
         "fig11" => fig11(),
         "fig12" => fig12(),
+        "backends" => backends(),
         "all" => all(),
         _ => return None,
     })
@@ -689,10 +741,37 @@ mod tests {
     }
 
     #[test]
+    fn backends_table_orderings_agree() {
+        let b = backends();
+        // one row per depth path plus header/footer
+        for p in ["d1_w100", "d2_w100", "d3_w100"] {
+            assert!(b.contains(p), "{p} missing from backend table");
+        }
+        // power columns must both be monotone in depth: extract rows
+        let rows: Vec<Vec<f64>> = b
+            .lines()
+            .filter(|l| l.starts_with('d'))
+            .map(|l| {
+                l.split_whitespace()
+                    .skip(1)
+                    .map(|v| v.parse().unwrap())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(rows.len(), 3);
+        for col in 0..4 {
+            assert!(
+                rows.windows(2).all(|w| w[0][col] < w[1][col]),
+                "column {col} not monotone"
+            );
+        }
+    }
+
+    #[test]
     fn by_name_covers_everything() {
         for id in [
             "table1", "table2", "table3", "table4", "table5", "table6",
-            "fig8", "fig10", "fig11", "fig12",
+            "fig8", "fig10", "fig11", "fig12", "backends",
         ] {
             assert!(by_name(id).is_some(), "{id}");
         }

@@ -12,14 +12,35 @@ use std::path::{Path, PathBuf};
 use crate::morph::MorphPath;
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("manifest schema: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Schema(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Json(e) => write!(f, "json: {e}"),
+            ManifestError::Schema(msg) => write!(f, "manifest schema: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 fn schema(msg: impl Into<String>) -> ManifestError {

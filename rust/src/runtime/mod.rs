@@ -18,16 +18,35 @@ pub use manifest::{Manifest, ManifestError, ModelManifest};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("manifest: {0}")]
-    Manifest(#[from] ManifestError),
-    #[error("xla: {0}")]
+    Manifest(ManifestError),
     Xla(String),
-    #[error("no artifact for path '{path}' at batch {batch}")]
     NoArtifact { path: String, batch: usize },
-    #[error("input length {got} != batch {batch} x frame {frame}")]
     BadInput { got: usize, batch: usize, frame: usize },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(e) => write!(f, "manifest: {e}"),
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::NoArtifact { path, batch } => {
+                write!(f, "no artifact for path '{path}' at batch {batch}")
+            }
+            RuntimeError::BadInput { got, batch, frame } => {
+                write!(f, "input length {got} != batch {batch} x frame {frame}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

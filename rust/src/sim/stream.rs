@@ -11,7 +11,8 @@
 //!   full-frame delay (Sec. V: "resume ... after a full-frame delay").
 //! * Power integrates per-stage activity over busy cycles.
 
-use crate::design::{self, DesignConfig};
+use crate::design::{self, DesignConfig, DesignEval};
+use crate::graph::shapes::Shapes;
 use crate::graph::{LayerKind, Network};
 use crate::pe::{Blanking, Device};
 use crate::power::{Activity, PowerModel};
@@ -95,6 +96,11 @@ const ROW_BUBBLE: u64 = 2;
 const PASS_DRAIN: u64 = 6;
 
 /// Simulate one frame through the configured design under a gate mask.
+///
+/// Convenience wrapper that evaluates the design point and infers shapes
+/// on every call; hot paths that replay many frames on one fixed design
+/// (the serving backends) should pre-compute both once and call
+/// [`simulate_with`].
 pub fn simulate(
     net: &Network,
     cfg: &DesignConfig,
@@ -103,6 +109,20 @@ pub fn simulate(
 ) -> SimReport {
     let eval = design::evaluate(net, cfg, device).expect("valid design point");
     let shapes = crate::graph::shapes::infer(net).expect("validated net");
+    simulate_with(net, device, gate, &eval, &shapes)
+}
+
+/// Simulate one frame against a pre-evaluated design point. This is the
+/// per-frame hot path of the cycle-level serving backend: the analytical
+/// evaluation and shape inference (both allocation-heavy) are hoisted
+/// out of the frame loop by the caller.
+pub fn simulate_with(
+    net: &Network,
+    device: &Device,
+    gate: &GateMask,
+    eval: &DesignEval,
+    shapes: &Shapes,
+) -> SimReport {
     let blank = Blanking::default();
 
     let mut per_stage = Vec::new();

@@ -1,0 +1,191 @@
+//! Integration: the sharded serving engine over the unified backends.
+//!
+//! Pins the refactor's core guarantees:
+//! * determinism under sharding — the same request stream produces
+//!   identical logits and decisions on 1 worker and 4 workers, for both
+//!   the sim and the analytical backend (and the two backends agree with
+//!   each other, since they share the surrogate classifier);
+//! * globally consistent morphing — a budget squeeze downshifts every
+//!   shard exactly once;
+//! * lifecycle — shutdown drains all in-flight requests.
+
+use std::time::Duration;
+
+use forgemorph::backend::BackendSpec;
+use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::design::DesignConfig;
+use forgemorph::graph::zoo;
+use forgemorph::morph;
+use forgemorph::morph::governor::Budget;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::rng::Rng;
+
+fn request_stream(n: usize, frame_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(99);
+    (0..n)
+        .map(|_| (0..frame_len).map(|_| rng.f64() as f32).collect())
+        .collect()
+}
+
+fn spec_for(kind: &str) -> BackendSpec {
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let paths = morph::depth_ladder(&net);
+    match kind {
+        "sim" => BackendSpec::sim(net, design, ZYNQ_7100, paths),
+        "analytical" => BackendSpec::analytical(net, design, ZYNQ_7100, paths),
+        other => panic!("unknown backend kind {other}"),
+    }
+}
+
+/// Serve `stream` and return (logits, class, path) per request, in
+/// submission order.
+fn serve(
+    kind: &str,
+    workers: usize,
+    stream: &[Vec<f32>],
+) -> Vec<(Vec<f32>, usize, String)> {
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        patience: 1,
+        workers,
+    };
+    let mut coord = Coordinator::start(cfg, spec_for(kind)).expect("start");
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|f| coord.submit(f.clone()).expect("submit"))
+        .collect();
+    let out = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+            (r.logits, r.class, r.path)
+        })
+        .collect();
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn identical_results_across_backends_and_worker_counts() {
+    let stream = request_stream(48, 784);
+    let reference = serve("sim", 1, &stream);
+    assert_eq!(reference.len(), 48);
+    // unconstrained budget: every request rides the full path
+    assert!(reference.iter().all(|(_, _, p)| p == "d3_w100"));
+
+    for (kind, workers) in [("sim", 4), ("analytical", 1), ("analytical", 4)] {
+        let got = serve(kind, workers, &stream);
+        assert_eq!(got.len(), reference.len());
+        for (i, (r, g)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(
+                r.0, g.0,
+                "request {i}: logits diverge on {kind} backend at {workers} workers"
+            );
+            assert_eq!(r.1, g.1, "request {i}: class decision diverges");
+            assert_eq!(r.2, g.2, "request {i}: morph path diverges");
+        }
+    }
+}
+
+#[test]
+fn budget_squeeze_downshifts_all_shards_once() {
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let full_power =
+        sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active()).power_mw;
+    let stream = request_stream(32, 784);
+
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        patience: 1,
+        workers: 4,
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+
+    // phase 1: unconstrained -> full path everywhere
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|f| coord.submit(f.clone()).expect("submit"))
+        .collect();
+    for rx in rxs {
+        assert_eq!(rx.recv_timeout(Duration::from_secs(60)).unwrap().path, "d3_w100");
+    }
+
+    // phase 2: squeeze. Governor observation is batch-paced, so the
+    // first batch taken after this observes the violation (patience 1)
+    // and the shared governor moves every shard to the same cheaper path
+    coord
+        .set_budget(Budget { power_mw: Some(full_power - 40.0), latency_ms: None })
+        .expect("set_budget");
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|f| coord.submit(f.clone()).expect("submit"))
+        .collect();
+    let mut phase2_paths = std::collections::BTreeSet::new();
+    for rx in rxs {
+        phase2_paths.insert(rx.recv_timeout(Duration::from_secs(60)).unwrap().path);
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(
+        phase2_paths.len(),
+        1,
+        "shards disagree on the active path: {phase2_paths:?}"
+    );
+    assert_ne!(phase2_paths.iter().next().unwrap(), "d3_w100");
+    assert_eq!(metrics.morph_switches, 1, "exactly one global downshift");
+    assert_eq!(metrics.requests, 64);
+}
+
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let stream = request_stream(30, 784);
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(5),
+        patience: 2,
+        workers: 2,
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|f| coord.submit(f.clone()).expect("submit"))
+        .collect();
+    // shut down immediately: every queued request must still be answered
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 30, "in-flight requests dropped at shutdown");
+    let mut answered = 0;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(1)).is_ok() {
+            answered += 1;
+        }
+    }
+    assert_eq!(answered, 30);
+}
+
+#[test]
+fn work_stealing_spreads_load_across_shards() {
+    // flood 4 shards with batch-ripe queues; every shard should end up
+    // executing (no idle worker while neighbours are backlogged)
+    let stream = request_stream(256, 784);
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        patience: 2,
+        workers: 4,
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|f| coord.submit(f.clone()).expect("submit"))
+        .collect();
+    let mut shards = std::collections::BTreeSet::new();
+    for rx in rxs {
+        shards.insert(rx.recv_timeout(Duration::from_secs(60)).unwrap().shard);
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 256);
+    assert!(
+        shards.len() >= 2,
+        "expected multiple shards to serve the flood, saw {shards:?}"
+    );
+}

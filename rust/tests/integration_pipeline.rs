@@ -7,6 +7,7 @@
 
 use std::time::Duration;
 
+use forgemorph::backend::BackendSpec;
 use forgemorph::coordinator::{sim_path_costs, Coordinator, ServeConfig};
 use forgemorph::design::{self, DesignConfig};
 use forgemorph::dse;
@@ -95,21 +96,23 @@ fn governor_tracks_budget_trace() {
 
 #[test]
 fn coordinator_serves_and_morphs() {
-    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    // the sim backend needs no AOT artifacts: the full serving stack
+    // (sharded coordinator, batcher, shared governor, metrics merge)
+    // runs self-contained in tier-1
     let net = zoo::mnist();
     let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let spec = BackendSpec::sim(
+        net.clone(),
+        design.clone(),
+        ZYNQ_7100,
+        forgemorph::morph::depth_ladder(&net),
+    );
     let cfg = ServeConfig {
-        artifacts_dir: artifacts,
-        model: "mnist".into(),
         max_wait: Duration::from_millis(1),
         patience: 1,
+        workers: 2,
     };
-    let mut coord = Coordinator::start(cfg, net.clone(), design.clone(), ZYNQ_7100)
-        .expect("coordinator start");
+    let mut coord = Coordinator::start(cfg, spec).expect("coordinator start");
 
     let mut rng = Rng::new(7);
     let mut paths_seen = std::collections::BTreeSet::new();
@@ -120,7 +123,7 @@ fn coordinator_serves_and_morphs() {
         let mut rxs = Vec::new();
         for _ in 0..24 {
             let frame: Vec<f32> = (0..784).map(|_| rng.f64() as f32).collect();
-            rxs.push(coord.submit(frame));
+            rxs.push(coord.submit(frame).expect("submit"));
         }
         // drain this phase's responses before changing the budget, so the
         // governor decision is observable per phase
@@ -138,7 +141,9 @@ fn coordinator_serves_and_morphs() {
     run_phase(&mut coord, &mut paths_seen, &mut answered);
     // phase 2: power squeeze -> cheaper path
     let full_power = sim::simulate(&net, &design, &ZYNQ_7100, &GateMask::all_active()).power_mw;
-    coord.set_budget(Budget { power_mw: Some(full_power - 40.0), latency_ms: None });
+    coord
+        .set_budget(Budget { power_mw: Some(full_power - 40.0), latency_ms: None })
+        .expect("set_budget");
     run_phase(&mut coord, &mut paths_seen, &mut answered);
     let metrics = coord.shutdown();
     assert_eq!(answered, 48, "all requests answered");

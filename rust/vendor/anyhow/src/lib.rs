@@ -1,0 +1,148 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The offline build environment carries no registry crates, so this
+//! local path crate provides the exact subset the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros, and the [`Context`] extension trait for `Result`/`Option`.
+//!
+//! Semantics intentionally mirror the real crate where it matters:
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (blanket `From`);
+//! * [`Error`] itself does NOT implement `std::error::Error`, so the
+//!   blanket impl cannot overlap the reflexive `From<Error>`;
+//! * context is prepended to the underlying message.
+
+use std::fmt;
+
+/// A type-erased error: a display chain captured at conversion time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with a context line (used by [`Context`]).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to failing `Result`s and empty `Option`s.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<u8> {
+        let r: std::result::Result<u8, std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"));
+        let v = r?;
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e: Error = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable branch");
+        }
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(inner(true).unwrap_err().to_string(), "unreachable branch");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing report").unwrap_err();
+        assert!(e.to_string().starts_with("writing report: "));
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "model")).unwrap_err();
+        assert_eq!(e.to_string(), "missing model");
+    }
+}
