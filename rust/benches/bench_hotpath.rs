@@ -4,6 +4,10 @@
 //! * `design::evaluate`        — the DSE fitness function (called 10^4-10^5x per search)
 //! * `dse generation step`     — full MOGA generation incl. NSGA-II sort
 //! * `nsga2::sort_fronts`      — dominance sorting alone
+//! * `dse engine scaling`      — resnet50 search at 1/2/4/8 threads plus
+//!                               memo-cache effectiveness, vs the pre-PR
+//!                               serial no-cache shape; writes
+//!                               `BENCH_dse.json` at the repo root
 //! * `sim::simulate`           — cycle simulation of small & big models
 //! * `rtl::emit`               — Verilog generation
 //! * `json parse`              — manifest parsing
@@ -128,6 +132,128 @@ fn main() {
         bench("nsga2::sort_fronts n=256", budget, || {
             std::hint::black_box(dse::nsga2::sort_fronts(&pop));
         });
+    }
+
+    // --- DSE engine: thread scaling + memo-cache effectiveness --------------
+    // The §Perf acceptance numbers: the parallel, memoized engine on the
+    // resnet50 search vs the pre-PR shape (serial, no chromosome cache).
+    // Machine-readable results go to BENCH_dse.json at the repo root so
+    // the perf trajectory is tracked across PRs.
+    {
+        let resnet = zoo::resnet50();
+        let evaluator = design::Evaluator::new(&resnet, &ZYNQ_7100).unwrap();
+        let bounds = resnet.conv_filter_bounds();
+
+        // per-candidate analytical-eval cost on random chromosomes
+        let mut rng = Rng::new(17);
+        let genes: Vec<Vec<usize>> = (0..512)
+            .map(|_| bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect())
+            .collect();
+        for g in &genes {
+            std::hint::black_box(evaluator.objectives(g, FpRep::Int16).unwrap()); // warmup
+        }
+        let mut samples: Vec<f64> = Vec::with_capacity(genes.len());
+        for g in &genes {
+            let t0 = Instant::now();
+            std::hint::black_box(evaluator.objectives(g, FpRep::Int16).unwrap());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let eval_mean_us = samples.iter().sum::<f64>() / samples.len() as f64 * 1e6;
+        let eval_p50_us = samples[samples.len() / 2] * 1e6;
+        println!(
+            "evaluator.objectives resnet50 per-candidate: mean {eval_mean_us:.3} us, p50 {eval_p50_us:.3} us"
+        );
+
+        let pop = 128usize;
+        let gens = 16usize;
+        let mk = |threads: usize, memo: bool| dse::DseConfig {
+            population: pop,
+            generations: gens,
+            seed: 5,
+            threads,
+            memo,
+            constraints: dse::Constraints::device(&ZYNQ_7100),
+            ..dse::DseConfig::default()
+        };
+        // best-of-3 wall time; any run's result serves for telemetry
+        // (the engine is deterministic, so all repeats are identical)
+        let time_cfg = |cfg: &dse::DseConfig| -> (f64, dse::DseResult) {
+            let mut best = f64::INFINITY;
+            let mut res = None;
+            for _ in 0..3 {
+                let r = dse::run(&resnet, &ZYNQ_7100, cfg);
+                best = best.min(r.wall_ms);
+                res = Some(r);
+            }
+            (best, res.unwrap())
+        };
+
+        let (serial_ms, serial_res) = time_cfg(&mk(1, false));
+        let front_of = |res: &dse::DseResult| -> Vec<Vec<usize>> {
+            res.pareto.iter().map(|c| c.config.parallelism.clone()).collect()
+        };
+        let reference_front = front_of(&serial_res);
+        println!(
+            "dse::run resnet50 pop={pop} gens={gens} serial no-memo (pre-PR shape): {serial_ms:>9.2} ms"
+        );
+
+        let mut rows = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let (ms, res) = time_cfg(&mk(threads, true));
+            let identical = front_of(&res) == reference_front;
+            let speedup = serial_ms / ms;
+            println!(
+                "dse::run resnet50 threads={threads} memo:           {ms:>9.2} ms  \
+                 ({speedup:.2}x vs pre-PR, cache hit {:.1}%, front identical: {identical})",
+                res.cache_hit_rate() * 100.0
+            );
+            // gens + 1 evaluation batches per run: init population + one
+            // per generation (matches evaluations = pop * (gens + 1))
+            rows.push(format!(
+                "    {{\"threads\": {threads}, \"wall_ms\": {ms:.3}, \"gen_step_ms\": {:.4}, \
+                 \"speedup_vs_serial_nomemo\": {speedup:.3}, \"cache_hit_rate\": {:.4}, \
+                 \"front_identical\": {identical}}}",
+                ms / (gens + 1) as f64,
+                res.cache_hit_rate()
+            ));
+        }
+
+        // second big model from the acceptance list: yolov5l, serial
+        // no-memo vs 8 threads + memo
+        let yolo = zoo::yolov5l();
+        let time_yolo = |cfg: &dse::DseConfig| -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                best = best.min(dse::run(&yolo, &ZYNQ_7100, cfg).wall_ms);
+            }
+            best
+        };
+        let yolo_serial_ms = time_yolo(&mk(1, false));
+        let yolo_8t_ms = time_yolo(&mk(8, true));
+        let yolo_speedup = yolo_serial_ms / yolo_8t_ms;
+        println!(
+            "dse::run yolov5l serial no-memo {yolo_serial_ms:>9.2} ms | \
+             8 threads memo {yolo_8t_ms:>9.2} ms ({yolo_speedup:.2}x)"
+        );
+
+        let json = format!(
+            "{{\n  \"bench\": \"dse_engine\",\n  \"model\": \"resnet50\",\n  \
+             \"population\": {pop},\n  \"generations\": {gens},\n  \
+             \"eval_us\": {{\"mean\": {eval_mean_us:.4}, \"p50\": {eval_p50_us:.4}}},\n  \
+             \"serial_nomemo_wall_ms\": {serial_ms:.3},\n  \
+             \"serial_nomemo_gen_step_ms\": {:.4},\n  \"threads\": [\n{}\n  ],\n  \
+             \"yolov5l\": {{\"serial_nomemo_wall_ms\": {yolo_serial_ms:.3}, \
+             \"threads8_memo_wall_ms\": {yolo_8t_ms:.3}, \
+             \"speedup\": {yolo_speedup:.3}}}\n}}\n",
+            serial_ms / (gens + 1) as f64,
+            rows.join(",\n")
+        );
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_dse.json");
+        match std::fs::write(&out, &json) {
+            Ok(()) => println!("wrote {}", out.display()),
+            Err(e) => println!("(BENCH_dse.json not written: {e})"),
+        }
     }
 
     // --- cycle simulation ---------------------------------------------------

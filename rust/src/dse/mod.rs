@@ -12,13 +12,39 @@
 //! analytical models only (microseconds per candidate — no synthesis in
 //! the loop), which is the paper's core speed claim over DNNBuilder-style
 //! flows.
+//!
+//! §Perf — the search engine is parallel, memoized and allocation-free:
+//!
+//! * **Threading.** Fitness evaluation fans out over `threads - 1`
+//!   persistent worker threads plus the main thread (scoped; spawned once
+//!   per search, fed whole-generation batches over channels). Genetic
+//!   operators and every RNG draw stay on the main thread, and results
+//!   land in their batch slot by index, so `run` is bit-identical for any
+//!   `threads` value (test-enforced).
+//! * **Memoization.** GA populations are heavily duplicated (elitist
+//!   re-selection, no-op mutations, clone-producing crossover). A
+//!   chromosome cache keyed on `(parallelism, rep)` — `rep` is fixed per
+//!   search, so the map keys on the gene vector alone with the vendored
+//!   [`crate::util::hash::FxHasher`] — skips re-evaluating duplicates,
+//!   both across generations and within one batch. Hit telemetry lands in
+//!   [`DseResult`].
+//! * **Allocation discipline.** Gene buffers recycle through a scratch
+//!   pool ([`crossover_into`] fills caller buffers; discarded candidates
+//!   donate their vectors back), environmental selection is index-based
+//!   ([`nsga2::select_ranked`] on the flat [`nsga2::ObjSoa`] objective
+//!   view), and tournament ranks + crowding are computed once per
+//!   generation instead of per comparison.
 
 pub mod nsga2;
 pub mod roofline;
 
+use std::sync::mpsc;
+use std::time::Instant;
+
 use crate::design::{self, DesignConfig};
 use crate::graph::Network;
 use crate::pe::{Device, FpRep};
+use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
 /// User constraints (Algorithm 1's `constraints [t, DSP, LUT, BRAM]`).
@@ -107,6 +133,12 @@ pub struct DseConfig {
     pub rep: FpRep,
     pub constraints: Constraints,
     pub seed: u64,
+    /// fitness-evaluation threads (main thread included; 1 = serial).
+    /// The Pareto front is bit-identical for every value.
+    pub threads: usize,
+    /// chromosome memo cache on/off (off reproduces the pre-cache
+    /// baseline for benchmarking; results are identical either way)
+    pub memo: bool,
 }
 
 impl Default for DseConfig {
@@ -120,6 +152,8 @@ impl Default for DseConfig {
             rep: FpRep::Int16,
             constraints: Constraints::none(),
             seed: 0,
+            threads: 1,
+            memo: true,
         }
     }
 }
@@ -133,7 +167,25 @@ pub struct DseResult {
     pub evaluated: Vec<(f64, usize)>,
     /// per-generation best latency (convergence telemetry)
     pub best_latency_per_gen: Vec<f64>,
+    /// total fitness lookups (memo hits included)
     pub evaluations: usize,
+    /// analytical-model evaluations actually executed (memo misses)
+    pub unique_evaluations: usize,
+    /// chromosome-cache hits (cross-generation + within-batch)
+    pub cache_hits: usize,
+    /// wall-clock time of the whole search, milliseconds
+    pub wall_ms: f64,
+}
+
+impl DseResult {
+    /// Fraction of fitness lookups served from the chromosome cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.evaluations == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.evaluations as f64
+        }
+    }
 }
 
 /// Evaluate one chromosome into a Candidate (one-shot convenience; the
@@ -157,8 +209,20 @@ pub fn evaluate_with(
     rep: FpRep,
     constraints: &Constraints,
 ) -> Candidate {
+    let (objectives, violation) = eval_genes(evaluator, &parallelism, rep, constraints);
+    Candidate { config: DesignConfig { parallelism, rep }, objectives, violation }
+}
+
+/// The raw fitness kernel every evaluation path shares.
+#[inline]
+fn eval_genes(
+    evaluator: &design::Evaluator,
+    genes: &[usize],
+    rep: FpRep,
+    constraints: &Constraints,
+) -> (Objectives, f64) {
     let fast = evaluator
-        .objectives(&parallelism, rep)
+        .objectives(genes, rep)
         .expect("chromosome respects bounds by construction");
     let objectives = Objectives {
         latency_ms: evaluator.latency_ms(&fast),
@@ -168,7 +232,154 @@ pub fn evaluate_with(
         total_pes: fast.total_pes,
     };
     let violation = constraints.violation(&objectives);
-    Candidate { config: DesignConfig { parallelism, rep }, objectives, violation }
+    (objectives, violation)
+}
+
+/// A worker's share of one generation: (batch slot, chromosome).
+type Job = Vec<(usize, Vec<usize>)>;
+/// Evaluated share: (batch slot, chromosome back, objectives, violation).
+type Done = Vec<(usize, Vec<usize>, Objectives, f64)>;
+
+/// Chromosome memo cache. Keyed on `(parallelism, rep)`: `rep` is fixed
+/// for a whole search, so the map keys on the boxed gene slice alone
+/// (lookups borrow `&[usize]` — no allocation on the hit path). A `None`
+/// value is an in-flight sentinel: the chromosome's first occurrence in
+/// the current batch is being evaluated, so later duplicates wait on it
+/// instead of re-evaluating — one key boxing per unique chromosome,
+/// ever.
+struct Memo {
+    map: FxHashMap<Box<[usize]>, Option<(Objectives, f64)>>,
+    hits: usize,
+}
+
+/// The per-search evaluation engine: shared immutable evaluator,
+/// persistent scoped workers, memo cache, telemetry.
+struct Engine<'a> {
+    evaluator: &'a design::Evaluator,
+    rep: FpRep,
+    constraints: Constraints,
+    memo: Option<Memo>,
+    /// per-worker job channels (empty ⇒ serial)
+    job_txs: Vec<mpsc::Sender<Job>>,
+    done_rx: mpsc::Receiver<Done>,
+    evaluations: usize,
+    unique_evaluations: usize,
+}
+
+impl Engine<'_> {
+    /// Evaluate a whole generation of chromosomes. Memo hits and
+    /// within-batch duplicates are resolved on the main thread; misses
+    /// fan out across the workers in index-chunked shares and land back
+    /// in their slots, so the output order (and therefore the whole
+    /// search) is independent of the thread count.
+    fn eval_batch(&mut self, batch: Vec<Vec<usize>>) -> Vec<Candidate> {
+        let n = batch.len();
+        self.evaluations += n;
+        let mut slots: Vec<Option<Candidate>> = (0..n).map(|_| None).collect();
+        let mut misses: Job = Vec::new();
+        // slots of in-batch duplicates, resolved from the memo afterwards
+        let mut dups: Job = Vec::new();
+
+        for (i, genes) in batch.into_iter().enumerate() {
+            if let Some(memo) = &mut self.memo {
+                // owned copy of the cached state — keeps the map free for
+                // the pending-sentinel insert below
+                match memo.map.get(genes.as_slice()).copied() {
+                    Some(Some((objectives, violation))) => {
+                        memo.hits += 1;
+                        slots[i] = Some(Candidate {
+                            config: DesignConfig { parallelism: genes, rep: self.rep },
+                            objectives,
+                            violation,
+                        });
+                        continue;
+                    }
+                    Some(None) => {
+                        // first occurrence is being evaluated in this batch
+                        memo.hits += 1;
+                        dups.push((i, genes));
+                        continue;
+                    }
+                    None => {
+                        memo.map.insert(genes.clone().into_boxed_slice(), None);
+                    }
+                }
+            }
+            misses.push((i, genes));
+        }
+        self.unique_evaluations += misses.len();
+
+        // fan out only when the batch amortizes the channel round-trip
+        let workers = self.job_txs.len();
+        let done: Done = if workers == 0 || misses.len() < 2 * (workers + 1) {
+            misses
+                .into_iter()
+                .map(|(i, genes)| {
+                    let (o, v) = eval_genes(self.evaluator, &genes, self.rep, &self.constraints);
+                    (i, genes, o, v)
+                })
+                .collect()
+        } else {
+            let share = misses.len().div_ceil(workers + 1);
+            // main thread keeps the first share, workers take the rest
+            let mut rest = misses.split_off(share.min(misses.len()));
+            let mut sent = 0usize;
+            for tx in &self.job_txs {
+                if rest.is_empty() {
+                    break;
+                }
+                let tail = rest.split_off(share.min(rest.len()));
+                tx.send(rest).expect("dse worker alive");
+                rest = tail;
+                sent += 1;
+            }
+            debug_assert!(rest.is_empty());
+            let mut done: Done = misses
+                .into_iter()
+                .map(|(i, genes)| {
+                    let (o, v) = eval_genes(self.evaluator, &genes, self.rep, &self.constraints);
+                    (i, genes, o, v)
+                })
+                .collect();
+            for _ in 0..sent {
+                done.extend(self.done_rx.recv().expect("dse worker result"));
+            }
+            done
+        };
+
+        for (i, genes, objectives, violation) in done {
+            if let Some(memo) = &mut self.memo {
+                // fill the pending sentinel in place — the key was boxed
+                // exactly once, at first sight
+                *memo.map.get_mut(genes.as_slice()).expect("pending entry present") =
+                    Some((objectives, violation));
+            }
+            slots[i] = Some(Candidate {
+                config: DesignConfig { parallelism: genes, rep: self.rep },
+                objectives,
+                violation,
+            });
+        }
+        for (i, genes) in dups {
+            let memo = self.memo.as_ref().expect("dups only collected with memo on");
+            let (objectives, violation) = memo
+                .map
+                .get(genes.as_slice())
+                .copied()
+                .flatten()
+                .expect("first occurrence evaluated");
+            slots[i] = Some(Candidate {
+                config: DesignConfig { parallelism: genes, rep: self.rep },
+                objectives,
+                violation,
+            });
+        }
+        slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+    }
+
+    fn cache_hits(&self) -> usize {
+        self.memo.as_ref().map_or(0, |m| m.hits)
+    }
 }
 
 /// Run the MOGA (Algorithm 1).
@@ -176,12 +387,64 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
     let bounds = net.conv_filter_bounds();
     assert!(!bounds.is_empty(), "network has no conv layers to map");
     let evaluator = design::Evaluator::new(net, device).expect("valid network");
+    let threads = cfg.threads.max(1);
+    let t0 = Instant::now();
+
+    let mut res = std::thread::scope(|scope| {
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let mut job_txs: Vec<mpsc::Sender<Job>> = Vec::with_capacity(threads - 1);
+        for _ in 1..threads {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let done_tx = done_tx.clone();
+            let evaluator = &evaluator;
+            let rep = cfg.rep;
+            let constraints = cfg.constraints;
+            scope.spawn(move || {
+                // persistent worker: one wake-up per generation, exits
+                // when the engine (and with it the job sender) drops
+                while let Ok(job) = rx.recv() {
+                    let done: Done = job
+                        .into_iter()
+                        .map(|(i, genes)| {
+                            let (o, v) = eval_genes(evaluator, &genes, rep, &constraints);
+                            (i, genes, o, v)
+                        })
+                        .collect();
+                    if done_tx.send(done).is_err() {
+                        break;
+                    }
+                }
+            });
+            job_txs.push(tx);
+        }
+        drop(done_tx); // only worker clones remain
+
+        let mut engine = Engine {
+            evaluator: &evaluator,
+            rep: cfg.rep,
+            constraints: cfg.constraints,
+            memo: cfg.memo.then(|| Memo { map: FxHashMap::default(), hits: 0 }),
+            job_txs,
+            done_rx,
+            evaluations: 0,
+            unique_evaluations: 0,
+        };
+        ga_loop(&mut engine, &bounds, cfg)
+        // engine drops here → job senders close → workers exit → scope joins
+    });
+    res.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    res
+}
+
+/// The generational loop, single-threaded apart from `Engine::eval_batch`
+/// fan-out. All stochastic decisions happen here, in one fixed order.
+fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseResult {
     let mut rng = Rng::new(cfg.seed);
 
     // ODE_config <- Initialize(l): seed the population with a spread of
     // uniform parallelism levels plus random vectors, so both extremes of
     // the front are reachable from generation 0.
-    let mut pop: Vec<Candidate> = Vec::with_capacity(cfg.population);
+    let mut batch: Vec<Vec<usize>> = Vec::with_capacity(cfg.population);
     for i in 0..cfg.population {
         let genes: Vec<usize> = if i < 8 {
             // ladder of uniform levels 1, 2, 4, 8, ...
@@ -190,40 +453,62 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
         } else {
             bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect()
         };
-        pop.push(evaluate_with(&evaluator, genes, cfg.rep, &cfg.constraints));
+        batch.push(genes);
     }
+    let mut pop = engine.eval_batch(batch);
 
     let mut evaluated: Vec<(f64, usize)> =
         pop.iter().map(|c| (c.objectives.latency_ms, c.objectives.dsp)).collect();
     let mut best_latency_per_gen = Vec::with_capacity(cfg.generations);
-    let mut evaluations = pop.len();
+    // recycled gene buffers: crossover writes into these, discarded
+    // candidates donate theirs back — zero steady-state allocation
+    let mut spare: Vec<Vec<usize>> = Vec::new();
+    let mut soa = nsga2::ObjSoa::default();
+    // mating-selection key: front rank + crowding, computed once per
+    // generation (NSGA-II's crowded tournament), built explicitly for
+    // generation 0 and thereafter reused from environmental selection
+    soa.rebuild(&pop);
+    let mut ranking = nsga2::Ranking::build(&soa);
 
     for _gen in 0..cfg.generations {
-        // offspring via tournament + crossover + Alg.1 mutation
-        let mut offspring = Vec::with_capacity(cfg.population);
-        while offspring.len() < cfg.population {
-            let a = nsga2::tournament(&pop, &mut rng);
-            let b = nsga2::tournament(&pop, &mut rng);
-            let (mut g1, mut g2) = crossover(
+        // offspring genes via tournament + crossover + Alg.1 mutation —
+        // main thread only, so the RNG stream is thread-count-invariant
+        let mut batch: Vec<Vec<usize>> = Vec::with_capacity(cfg.population);
+        while batch.len() < cfg.population {
+            let a = nsga2::tournament(&ranking, &mut rng);
+            let b = nsga2::tournament(&ranking, &mut rng);
+            let mut g1 = spare.pop().unwrap_or_default();
+            let mut g2 = spare.pop().unwrap_or_default();
+            crossover_into(
                 &pop[a].config.parallelism,
                 &pop[b].config.parallelism,
                 cfg.crossover_rate,
                 &mut rng,
+                &mut g1,
+                &mut g2,
             );
-            mutate(&mut g1, &bounds, cfg, &mut rng);
-            mutate(&mut g2, &bounds, cfg, &mut rng);
-            offspring.push(evaluate_with(&evaluator, g1, cfg.rep, &cfg.constraints));
-            if offspring.len() < cfg.population {
-                offspring.push(evaluate_with(&evaluator, g2, cfg.rep, &cfg.constraints));
+            mutate(&mut g1, bounds, cfg, &mut rng);
+            mutate(&mut g2, bounds, cfg, &mut rng);
+            batch.push(g1);
+            if batch.len() < cfg.population {
+                batch.push(g2);
+            } else {
+                spare.push(g2);
             }
         }
-        evaluations += offspring.len();
+
+        let offspring = engine.eval_batch(batch);
         evaluated
             .extend(offspring.iter().map(|c| (c.objectives.latency_ms, c.objectives.dsp)));
 
-        // elitist (mu + lambda) environmental selection
+        // elitist (mu + lambda) environmental selection, index-based;
+        // the survivors' (rank, crowding) double as the next
+        // generation's tournament key
         pop.extend(offspring);
-        pop = nsga2::select(pop, cfg.population);
+        soa.rebuild(&pop);
+        let (keep, next_ranking) = nsga2::select_ranked(&soa, cfg.population);
+        pop = compact(pop, &keep, &mut spare);
+        ranking = next_ranking;
 
         let best = pop
             .iter()
@@ -235,8 +520,21 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
 
     // final front: feasible, non-dominated, deduped by chromosome
     let feasible: Vec<Candidate> =
-        pop.iter().filter(|c| c.violation == 0.0).cloned().collect();
-    let mut pareto = nsga2::non_dominated(&feasible);
+        pop.into_iter().filter(|c| c.violation == 0.0).collect();
+    soa.rebuild(&feasible);
+    let first: Vec<usize> =
+        nsga2::sort_fronts_soa(&soa).into_iter().next().unwrap_or_default();
+    let mut pareto = {
+        let mut taken = vec![false; feasible.len()];
+        for &i in &first {
+            taken[i] = true;
+        }
+        feasible
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, c)| taken[i].then_some(c))
+            .collect::<Vec<Candidate>>()
+    };
     pareto.sort_by(|a, b| {
         a.objectives
             .latency_ms
@@ -246,21 +544,51 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
     });
     pareto.dedup_by(|a, b| a.config.parallelism == b.config.parallelism);
 
-    DseResult { pareto, evaluated, best_latency_per_gen, evaluations }
+    DseResult {
+        pareto,
+        evaluated,
+        best_latency_per_gen,
+        evaluations: engine.evaluations,
+        unique_evaluations: engine.unique_evaluations,
+        cache_hits: engine.cache_hits(),
+        wall_ms: 0.0, // stamped by `run`
+    }
 }
 
-/// Uniform crossover on the parallelism vector.
-fn crossover(
+/// Keep exactly `keep`, in `keep` order (so positions stay aligned with
+/// the [`nsga2::Ranking`] that [`nsga2::select_ranked`] returned), and
+/// recycle the discarded candidates' gene buffers into `spare`.
+fn compact(pop: Vec<Candidate>, keep: &[usize], spare: &mut Vec<Vec<usize>>) -> Vec<Candidate> {
+    let mut slots: Vec<Option<Candidate>> = pop.into_iter().map(Some).collect();
+    let mut out = Vec::with_capacity(keep.len());
+    for &i in keep {
+        out.push(slots[i].take().expect("selection indices are unique"));
+    }
+    for dropped in slots.into_iter().flatten() {
+        let mut genes = dropped.config.parallelism;
+        genes.clear();
+        spare.push(genes);
+    }
+    out
+}
+
+/// Uniform crossover on the parallelism vector, written into caller
+/// scratch buffers (no per-offspring allocation).
+fn crossover_into(
     a: &[usize],
     b: &[usize],
     rate: f64,
     rng: &mut Rng,
-) -> (Vec<usize>, Vec<usize>) {
+    g1: &mut Vec<usize>,
+    g2: &mut Vec<usize>,
+) {
+    g1.clear();
+    g2.clear();
     if !rng.chance(rate) {
-        return (a.to_vec(), b.to_vec());
+        g1.extend_from_slice(a);
+        g2.extend_from_slice(b);
+        return;
     }
-    let mut g1 = Vec::with_capacity(a.len());
-    let mut g2 = Vec::with_capacity(a.len());
     for i in 0..a.len() {
         if rng.chance(0.5) {
             g1.push(a[i]);
@@ -270,7 +598,6 @@ fn crossover(
             g2.push(a[i]);
         }
     }
-    (g1, g2)
 }
 
 /// Algorithm 1 mutation: step toward a bound scaled by a power-distributed
@@ -301,6 +628,16 @@ mod tests {
 
     fn quick_cfg() -> DseConfig {
         DseConfig { population: 32, generations: 12, seed: 42, ..DseConfig::default() }
+    }
+
+    /// Bitwise identity key of a Pareto front.
+    fn fingerprint(res: &DseResult) -> Vec<(Vec<usize>, u64, usize)> {
+        res.pareto
+            .iter()
+            .map(|c| {
+                (c.config.parallelism.clone(), c.objectives.latency_ms.to_bits(), c.objectives.dsp)
+            })
+            .collect()
     }
 
     #[test]
@@ -354,10 +691,64 @@ mod tests {
         let net = zoo::mnist();
         let a = run(&net, &ZYNQ_7100, &quick_cfg());
         let b = run(&net, &ZYNQ_7100, &quick_cfg());
-        assert_eq!(a.pareto.len(), b.pareto.len());
-        for (x, y) in a.pareto.iter().zip(&b.pareto) {
-            assert_eq!(x.config.parallelism, y.config.parallelism);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // mnist (3 genes) and mobilenet_v2 (52 genes): 1-thread vs
+        // 4-thread runs must be bit-identical in every output field
+        for net in [zoo::mnist(), zoo::mobilenet_v2()] {
+            let mk = |threads: usize| DseConfig {
+                population: 24,
+                generations: 6,
+                seed: 9,
+                threads,
+                constraints: Constraints::device(&ZYNQ_7100),
+                ..DseConfig::default()
+            };
+            let serial = run(&net, &ZYNQ_7100, &mk(1));
+            let parallel = run(&net, &ZYNQ_7100, &mk(4));
+            assert_eq!(fingerprint(&serial), fingerprint(&parallel), "{}", net.name);
+            assert_eq!(serial.evaluated, parallel.evaluated, "{}", net.name);
+            assert_eq!(
+                serial.best_latency_per_gen, parallel.best_latency_per_gen,
+                "{}",
+                net.name
+            );
+            assert_eq!(serial.evaluations, parallel.evaluations);
+            assert_eq!(serial.unique_evaluations, parallel.unique_evaluations);
+            assert_eq!(serial.cache_hits, parallel.cache_hits);
         }
+    }
+
+    #[test]
+    fn memo_cache_is_transparent_and_hits() {
+        let net = zoo::mnist();
+        let on = run(&net, &ZYNQ_7100, &quick_cfg());
+        let off = run(&net, &ZYNQ_7100, &DseConfig { memo: false, ..quick_cfg() });
+        // bit-identical results with and without the cache
+        assert_eq!(fingerprint(&on), fingerprint(&off));
+        assert_eq!(on.evaluated, off.evaluated);
+        assert_eq!(on.evaluations, off.evaluations);
+        // the GA population really is duplicated: the cache must fire
+        assert!(on.cache_hits > 0, "expected cache hits on mnist");
+        assert_eq!(on.unique_evaluations + on.cache_hits, on.evaluations);
+        assert_eq!(off.cache_hits, 0);
+        assert_eq!(off.unique_evaluations, off.evaluations);
+        assert!(on.cache_hit_rate() > 0.0 && on.cache_hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn telemetry_counts_consistent() {
+        let net = zoo::cifar10();
+        let cfg = DseConfig { threads: 2, ..quick_cfg() };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        let expected = cfg.population * (cfg.generations + 1);
+        assert_eq!(res.evaluations, expected);
+        assert_eq!(res.evaluated.len(), expected);
+        assert_eq!(res.unique_evaluations + res.cache_hits, res.evaluations);
+        assert!(res.wall_ms > 0.0);
     }
 
     #[test]
@@ -401,5 +792,26 @@ mod tests {
                 assert!(*g >= 1 && g <= ub, "gene {g} bound {ub}");
             }
         }
+    }
+
+    #[test]
+    fn crossover_into_reuses_buffers() {
+        let mut rng = Rng::new(4);
+        let a = vec![1usize, 2, 3, 4];
+        let b = vec![4usize, 3, 2, 1];
+        let mut g1 = vec![99usize; 10]; // stale content must be cleared
+        let mut g2 = Vec::new();
+        crossover_into(&a, &b, 1.0, &mut rng, &mut g1, &mut g2);
+        assert_eq!(g1.len(), 4);
+        assert_eq!(g2.len(), 4);
+        for i in 0..4 {
+            // each position holds (a[i], b[i]) in some order
+            let pair = [g1[i], g2[i]];
+            assert!(pair.contains(&a[i]) && pair.contains(&b[i]), "pos {i}: {pair:?}");
+        }
+        // rate 0 ⇒ verbatim copies
+        crossover_into(&a, &b, 0.0, &mut rng, &mut g1, &mut g2);
+        assert_eq!(g1, a);
+        assert_eq!(g2, b);
     }
 }

@@ -1,99 +1,154 @@
 //! NSGA-II machinery: fast non-dominated sort, crowding distance,
-//! feasibility-first tournament, and elitist environmental selection.
+//! rank+crowding tournament, and elitist environmental selection.
 //!
 //! Reference: Deb et al., "A Fast and Elitist Multiobjective Genetic
 //! Algorithm: NSGA-II" — the standard realization of the multi-objective
 //! GA Algorithm 1 sketches.
+//!
+//! §Perf: every O(n^2) comparison loop runs on [`ObjSoa`], a flat
+//! structure-of-arrays view of `(violation, latency, dsp)` built once per
+//! generation, instead of chasing `Candidate` structs — these comparisons
+//! are the DSE generation step's hottest code. Selection is index-based
+//! ([`select_ranked`]) so the engine never clones a `Candidate`.
 
 use super::Candidate;
 use crate::util::rng::Rng;
 
-/// Feasibility-first comparison: a feasible candidate beats an infeasible
-/// one; two infeasible compare by violation; two feasible by dominance.
-fn beats(a: &Candidate, b: &Candidate) -> bool {
-    if a.violation == 0.0 && b.violation > 0.0 {
-        return true;
-    }
-    if a.violation > 0.0 && b.violation > 0.0 {
-        return a.violation < b.violation;
-    }
-    if a.violation > 0.0 {
-        return false;
-    }
-    a.objectives.dominates(&b.objectives)
+/// Flat structure-of-arrays objective view of a population: the single
+/// dominance key `(violation, latency_ms, dsp)` per member, kept in
+/// cache-friendly parallel arrays. Rebuilt (allocation-free at steady
+/// state) once per generation and threaded through the sort, crowding
+/// and selection kernels.
+#[derive(Debug, Default, Clone)]
+pub struct ObjSoa {
+    pub violation: Vec<f64>,
+    pub latency: Vec<f64>,
+    pub dsp: Vec<f64>,
 }
 
-/// Fast non-dominated sort: returns fronts as index vectors, best first.
-///
-/// §Perf: the O(n^2) comparison loop runs on a flat `(violation,
-/// latency, dsp)` scratch array instead of chasing `Candidate` structs —
-/// the comparisons are the DSE generation step's hottest code.
-pub fn sort_fronts(pop: &[Candidate]) -> Vec<Vec<usize>> {
-    let n = pop.len();
-    // flat objective scratch: cache-friendly for the n^2 sweep
-    let key: Vec<(f64, f64, f64)> = pop
-        .iter()
-        .map(|c| (c.violation, c.objectives.latency_ms, c.objectives.dsp as f64))
-        .collect();
-    #[inline(always)]
-    fn beats_flat(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
-        if a.0 == 0.0 && b.0 > 0.0 {
-            return true;
-        }
-        if a.0 > 0.0 {
-            return a.0 < b.0 && b.0 > 0.0;
-        }
-        a.1 <= b.1 && a.2 <= b.2 && (a.1 < b.1 || a.2 < b.2)
+impl ObjSoa {
+    pub fn from_candidates(pop: &[Candidate]) -> ObjSoa {
+        let mut soa = ObjSoa::default();
+        soa.rebuild(pop);
+        soa
     }
 
-    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
-    let mut dom_count = vec![0usize; n]; // how many dominate i
-    for i in 0..n {
-        let ki = key[i];
-        for j in (i + 1)..n {
-            let kj = key[j];
-            if beats_flat(ki, kj) {
-                dominated_by[i].push(j);
-                dom_count[j] += 1;
-            } else if beats_flat(kj, ki) {
-                dominated_by[j].push(i);
-                dom_count[i] += 1;
-            }
+    /// Refill from a population, reusing the existing buffers.
+    pub fn rebuild(&mut self, pop: &[Candidate]) {
+        self.violation.clear();
+        self.latency.clear();
+        self.dsp.clear();
+        for c in pop {
+            self.violation.push(c.violation);
+            self.latency.push(c.objectives.latency_ms);
+            self.dsp.push(c.objectives.dsp as f64);
         }
     }
-    let mut fronts: Vec<Vec<usize>> = Vec::new();
-    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
-    while !current.is_empty() {
-        let mut next = Vec::new();
-        for &i in &current {
-            for &j in &dominated_by[i] {
-                dom_count[j] -= 1;
-                if dom_count[j] == 0 {
-                    next.push(j);
-                }
+
+    pub fn len(&self) -> usize {
+        self.violation.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.violation.is_empty()
+    }
+
+    #[inline(always)]
+    fn key(&self, i: usize) -> (f64, f64, f64) {
+        (self.violation[i], self.latency[i], self.dsp[i])
+    }
+}
+
+/// Feasibility-first dominance kernel on a flat `(violation, latency,
+/// dsp)` key — the ONE implementation every comparison site shares
+/// (struct-level [`beats`], the SoA sort, and the engine's final-front
+/// extraction): a feasible candidate beats an infeasible one; two
+/// infeasible compare by violation; two feasible by Pareto dominance on
+/// (latency, DSP).
+#[inline(always)]
+pub fn beats_key(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
+    if a.0 == 0.0 && b.0 > 0.0 {
+        return true;
+    }
+    if a.0 > 0.0 {
+        return b.0 > 0.0 && a.0 < b.0;
+    }
+    a.1 <= b.1 && a.2 <= b.2 && (a.1 < b.1 || a.2 < b.2)
+}
+
+/// [`beats_key`] on `Candidate` structs (convenience / test surface).
+#[inline]
+pub fn beats(a: &Candidate, b: &Candidate) -> bool {
+    beats_key(
+        (a.violation, a.objectives.latency_ms, a.objectives.dsp as f64),
+        (b.violation, b.objectives.latency_ms, b.objectives.dsp as f64),
+    )
+}
+
+/// Fast non-dominated sort over a flat objective view: returns fronts as
+/// index vectors, best first (members of each front in ascending index
+/// order).
+///
+/// §Perf: instead of the textbook adjacency-list peel (two dominance
+/// tests per pair plus O(n) `Vec` allocations per call), this pre-sorts
+/// indices lexicographically by `(violation, latency, dsp)` — dominance
+/// can then only flow forward — and runs a longest-dominating-chain DP
+/// with ONE `beats_key` per surviving pair and three flat scratch
+/// vectors. Dominance is transitive, so the chain length equals the
+/// peeled front index.
+pub fn sort_fronts_soa(soa: &ObjSoa) -> Vec<Vec<usize>> {
+    let n = soa.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| soa.key(a).partial_cmp(&soa.key(b)).unwrap());
+    // contiguous sorted keys: the n^2 sweep reads them in order
+    let keys: Vec<(f64, f64, f64)> = idx.iter().map(|&i| soa.key(i)).collect();
+    let mut rank = vec![0usize; n]; // rank[sorted position]
+    let mut max_rank = 0usize;
+    for j in 1..n {
+        let kj = keys[j];
+        let mut f = 0usize;
+        for i in 0..j {
+            // `rank[i] >= f` first: skips the dominance test for every
+            // predecessor that cannot raise the chain any further
+            if rank[i] >= f && beats_key(keys[i], kj) {
+                f = rank[i] + 1;
             }
         }
-        fronts.push(std::mem::take(&mut current));
-        current = next;
+        rank[j] = f;
+        max_rank = max_rank.max(f);
+    }
+    let mut fronts: Vec<Vec<usize>> = vec![Vec::new(); max_rank + 1];
+    for (pos, &i) in idx.iter().enumerate() {
+        fronts[rank[pos]].push(i);
+    }
+    for front in &mut fronts {
+        front.sort_unstable();
     }
     fronts
 }
 
-/// Crowding distance of each member of one front (on latency and DSP).
-pub fn crowding(pop: &[Candidate], front: &[usize]) -> Vec<f64> {
+/// Fast non-dominated sort on a candidate slice (builds the SoA view).
+pub fn sort_fronts(pop: &[Candidate]) -> Vec<Vec<usize>> {
+    sort_fronts_soa(&ObjSoa::from_candidates(pop))
+}
+
+/// Crowding distance of each member of one front (on latency and DSP),
+/// computed on the flat objective view.
+pub fn crowding_soa(soa: &ObjSoa, front: &[usize]) -> Vec<f64> {
     let m = front.len();
     let mut dist = vec![0.0f64; m];
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
-    // latency axis
     for axis in 0..2 {
         let key = |i: usize| -> f64 {
-            let o = &pop[front[i]].objectives;
             if axis == 0 {
-                o.latency_ms
+                soa.latency[front[i]]
             } else {
-                o.dsp as f64
+                soa.dsp[front[i]]
             }
         };
         let mut order: Vec<usize> = (0..m).collect();
@@ -111,57 +166,129 @@ pub fn crowding(pop: &[Candidate], front: &[usize]) -> Vec<f64> {
     dist
 }
 
-/// Binary tournament: rank (front index) first, then crowding distance.
-/// Returns the index of the winner within `pop`.
-pub fn tournament(pop: &[Candidate], rng: &mut Rng) -> usize {
-    let a = rng.below(pop.len());
-    let b = rng.below(pop.len());
-    if beats(&pop[a], &pop[b]) {
-        a
-    } else if beats(&pop[b], &pop[a]) {
-        b
-    } else if rng.chance(0.5) {
-        a
-    } else {
-        b
+/// Crowding distance on a candidate slice (builds the SoA view).
+pub fn crowding(pop: &[Candidate], front: &[usize]) -> Vec<f64> {
+    crowding_soa(&ObjSoa::from_candidates(pop), front)
+}
+
+/// Per-member front rank + crowding distance, precomputed ONCE per
+/// generation and shared by every tournament of that generation —
+/// the textbook NSGA-II mating-selection key.
+#[derive(Debug, Clone)]
+pub struct Ranking {
+    /// front index of each member (0 = non-dominated)
+    pub rank: Vec<usize>,
+    /// crowding distance within the member's front
+    pub crowding: Vec<f64>,
+}
+
+impl Ranking {
+    pub fn build(soa: &ObjSoa) -> Ranking {
+        let fronts = sort_fronts_soa(soa);
+        let mut rank = vec![0usize; soa.len()];
+        let mut crowd = vec![0.0f64; soa.len()];
+        for (r, front) in fronts.iter().enumerate() {
+            let d = crowding_soa(soa, front);
+            for (k, &i) in front.iter().enumerate() {
+                rank[i] = r;
+                crowd[i] = d[k];
+            }
+        }
+        Ranking { rank, crowding: crowd }
+    }
+
+    /// Crowded-comparison operator: lower rank wins; equal ranks break
+    /// on larger crowding distance; `None` on a full tie.
+    #[inline]
+    pub fn prefer(&self, a: usize, b: usize) -> Option<usize> {
+        if self.rank[a] != self.rank[b] {
+            return Some(if self.rank[a] < self.rank[b] { a } else { b });
+        }
+        if self.crowding[a] > self.crowding[b] {
+            Some(a)
+        } else if self.crowding[b] > self.crowding[a] {
+            Some(b)
+        } else {
+            None
+        }
     }
 }
 
-/// Elitist (mu+lambda) environmental selection down to `target` members.
-pub fn select(pop: Vec<Candidate>, target: usize) -> Vec<Candidate> {
-    if pop.len() <= target {
-        return pop;
+/// Binary tournament on precomputed (rank, crowding): draw two members,
+/// keep the crowded-comparison winner, coin-flip full ties. Returns the
+/// index of the winner within the ranked population.
+pub fn tournament(ranking: &Ranking, rng: &mut Rng) -> usize {
+    let n = ranking.rank.len();
+    let a = rng.below(n);
+    let b = rng.below(n);
+    match ranking.prefer(a, b) {
+        Some(w) => w,
+        None => {
+            if rng.chance(0.5) {
+                a
+            } else {
+                b
+            }
+        }
     }
-    let fronts = sort_fronts(&pop);
-    let mut keep: Vec<usize> = Vec::with_capacity(target);
-    for front in fronts {
-        if keep.len() + front.len() <= target {
-            keep.extend(front);
-            if keep.len() == target {
+}
+
+/// Elitist (mu+lambda) environmental selection down to `target` members,
+/// returned as indices into the SoA view (ascending front order; the
+/// caller compacts its population without cloning a single `Candidate`)
+/// PLUS the survivors' [`Ranking`], aligned with the returned index
+/// order. Canonical NSGA-II reuses exactly these rank/crowding values as
+/// the next generation's tournament key — reusing them here removes a
+/// whole non-dominated sort from every generation of the DSE hot loop.
+pub fn select_ranked(soa: &ObjSoa, target: usize) -> (Vec<usize>, Ranking) {
+    let fronts = sort_fronts_soa(soa);
+    let want = target.min(soa.len());
+    let mut keep: Vec<usize> = Vec::with_capacity(want);
+    let mut rank: Vec<usize> = Vec::with_capacity(want);
+    let mut crowd: Vec<f64> = Vec::with_capacity(want);
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_soa(soa, front);
+        if keep.len() + front.len() <= want {
+            for (k, &i) in front.iter().enumerate() {
+                keep.push(i);
+                rank.push(r);
+                crowd.push(d[k]);
+            }
+            if keep.len() == want {
                 break;
             }
         } else {
             // partial front: take the most crowded-distant members
-            let d = crowding(&pop, &front);
             let mut order: Vec<usize> = (0..front.len()).collect();
             order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
-            for &w in order.iter().take(target - keep.len()) {
+            for &w in order.iter().take(want - keep.len()) {
                 keep.push(front[w]);
+                rank.push(r);
+                crowd.push(d[w]);
             }
             break;
         }
     }
-    let mut out = Vec::with_capacity(target);
+    (keep, Ranking { rank, crowding: crowd })
+}
+
+/// Elitist selection on an owned population: library-surface wrapper
+/// that delegates to [`select_ranked`] (single shared implementation —
+/// the DSE engine calls `select_ranked` directly and compacts by
+/// index).
+pub fn select(pop: Vec<Candidate>, target: usize) -> Vec<Candidate> {
+    if pop.len() <= target {
+        return pop;
+    }
+    let (keep, _) = select_ranked(&ObjSoa::from_candidates(&pop), target);
     let mut taken = vec![false; pop.len()];
-    for i in keep {
+    for &i in &keep {
         taken[i] = true;
     }
-    for (i, c) in pop.into_iter().enumerate() {
-        if taken[i] {
-            out.push(c);
-        }
-    }
-    out
+    pop.into_iter()
+        .enumerate()
+        .filter_map(|(i, c)| taken[i].then_some(c))
+        .collect()
 }
 
 /// The non-dominated subset of a candidate list (first front only).
@@ -184,6 +311,7 @@ mod tests {
     use crate::design::DesignConfig;
     use crate::dse::Objectives;
     use crate::pe::FpRep;
+    use crate::util::prop;
 
     fn cand(lat: f64, dsp: usize, viol: f64) -> Candidate {
         Candidate {
@@ -241,6 +369,31 @@ mod tests {
     }
 
     #[test]
+    fn select_ranked_agrees_with_select() {
+        let pop = vec![
+            cand(1.0, 100, 0.0),
+            cand(2.0, 50, 0.0),
+            cand(5.0, 500, 0.5),
+            cand(6.0, 600, 0.0),
+            cand(0.5, 400, 0.0),
+        ];
+        let (keep, ranking) = select_ranked(&ObjSoa::from_candidates(&pop), 3);
+        assert_eq!(ranking.rank.len(), keep.len());
+        assert_eq!(ranking.crowding.len(), keep.len());
+        assert!(ranking.rank.windows(2).all(|w| w[0] <= w[1]), "keep is front-ordered");
+        let kept = select(pop.clone(), 3);
+        assert_eq!(keep.len(), kept.len());
+        // the index-based path must pick the same members (order-insensitive)
+        let mut by_idx: Vec<u64> =
+            keep.iter().map(|&i| pop[i].objectives.latency_ms.to_bits()).collect();
+        let mut by_val: Vec<u64> =
+            kept.iter().map(|c| c.objectives.latency_ms.to_bits()).collect();
+        by_idx.sort_unstable();
+        by_val.sort_unstable();
+        assert_eq!(by_idx, by_val);
+    }
+
+    #[test]
     fn non_dominated_extraction() {
         let pop = vec![cand(1.0, 100, 0.0), cand(0.5, 200, 0.0), cand(1.5, 150, 0.0)];
         let front = non_dominated(&pop);
@@ -251,5 +404,107 @@ mod tests {
     fn select_noop_when_small() {
         let pop = vec![cand(1.0, 1, 0.0)];
         assert_eq!(select(pop, 5).len(), 1);
+    }
+
+    /// Straight-line reference spec of feasibility-first dominance (the
+    /// semantics `beats` and the old `beats_flat` each hand-implemented
+    /// before they were collapsed into `beats_key`).
+    fn beats_reference(a: &Candidate, b: &Candidate) -> bool {
+        if a.violation == 0.0 && b.violation > 0.0 {
+            return true;
+        }
+        if a.violation > 0.0 && b.violation > 0.0 {
+            return a.violation < b.violation;
+        }
+        if a.violation > 0.0 {
+            return false;
+        }
+        a.objectives.dominates(&b.objectives)
+    }
+
+    #[test]
+    fn beats_kernel_matches_reference_on_random_candidates() {
+        prop::check(
+            "beats == reference",
+            2000,
+            77,
+            |rng| {
+                let mut mk = |rng: &mut crate::util::rng::Rng| {
+                    cand(
+                        rng.f64() * 10.0,
+                        rng.below(500),
+                        if rng.chance(0.4) { rng.f64() * 2.0 } else { 0.0 },
+                    )
+                };
+                let (a, b) = (mk(rng), mk(rng));
+                // exercise the equal-key diagonal too
+                if rng.chance(0.1) {
+                    (a.clone(), a)
+                } else {
+                    (a, b)
+                }
+            },
+            |(a, b)| {
+                prop::ensure(
+                    beats(a, b) == beats_reference(a, b)
+                        && beats(b, a) == beats_reference(b, a),
+                    format!(
+                        "kernel {}/{} vs reference {}/{}",
+                        beats(a, b),
+                        beats(b, a),
+                        beats_reference(a, b),
+                        beats_reference(b, a)
+                    ),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn ranking_orders_fronts_and_crowding() {
+        let pop = vec![
+            cand(1.0, 100, 0.0), // front 0 extreme
+            cand(2.0, 50, 0.0),  // front 0 extreme
+            cand(2.0, 100, 0.0), // front 1
+            cand(0.1, 999, 3.0), // infeasible: last front
+        ];
+        let r = Ranking::build(&ObjSoa::from_candidates(&pop));
+        assert_eq!(r.rank[0], 0);
+        assert_eq!(r.rank[1], 0);
+        assert!(r.rank[2] > 0);
+        assert!(r.rank[3] > r.rank[2], "infeasible must rank below dominated-feasible");
+        assert!(r.crowding[0].is_infinite() && r.crowding[1].is_infinite());
+    }
+
+    #[test]
+    fn tournament_prefers_lower_rank() {
+        // two members: 0 dominates 1 → rank 0 vs rank 1. The winner is
+        // rank-0 unless BOTH draws land on index 1 (probability 1/4), so
+        // over 400 trials index 0 must win well over half.
+        let pop = vec![cand(1.0, 100, 0.0), cand(2.0, 200, 0.0)];
+        let ranking = Ranking::build(&ObjSoa::from_candidates(&pop));
+        let mut rng = Rng::new(31);
+        let wins0 = (0..400).filter(|_| tournament(&ranking, &mut rng) == 0).count();
+        assert!(wins0 > 240, "rank-0 won only {wins0}/400");
+    }
+
+    #[test]
+    fn tournament_prefers_crowding_within_front() {
+        // three mutually non-dominated members: extremes get infinite
+        // crowding, the middle is finite — a (extreme, middle) draw must
+        // always return the extreme.
+        let pop = vec![
+            cand(1.0, 300, 0.0),
+            cand(2.0, 200, 0.0),
+            cand(3.0, 100, 0.0),
+        ];
+        let ranking = Ranking::build(&ObjSoa::from_candidates(&pop));
+        assert_eq!(ranking.prefer(0, 1), Some(0));
+        assert_eq!(ranking.prefer(1, 2), Some(2));
+        assert_eq!(ranking.prefer(0, 2), None, "two extremes tie");
+        let mut rng = Rng::new(32);
+        let wins_mid = (0..600).filter(|_| tournament(&ranking, &mut rng) == 1).count();
+        // middle only wins (1,1) draws: p = 1/9 → ~67 of 600
+        assert!(wins_mid < 150, "finite-crowding middle won {wins_mid}/600");
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! forgemorph report <table1|...|fig12|all>     regenerate paper tables/figures
-//! forgemorph dse --model cifar10 [--pop N --gens N --seed N --dsp N --latency MS]
+//! forgemorph dse|explore --model cifar10 [--pop N --gens N --seed N --dsp N
+//!                   --latency MS --threads N --no-memo]
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
 //! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
 //! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(String::as_str) {
         Some("report") => cmd_report(&args),
-        Some("dse") => cmd_dse(&args),
+        Some("dse") | Some("explore") => cmd_dse(&args),
         Some("rtl") => cmd_rtl(&args),
         Some("sim") => cmd_sim(&args),
         Some("serve") => cmd_serve(&args),
@@ -49,7 +50,9 @@ forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
                 fig10, fig11, fig12, backends, all)
-  dse           NeuroForge design space exploration
+  dse|explore   NeuroForge design space exploration (--threads N fans the
+                fitness evaluation out; results are bit-identical for any
+                thread count. --no-memo disables the chromosome cache)
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
   serve         run the NeuroMorph serving demo (--workers N shards;
@@ -82,11 +85,15 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     let net = net_for(args)?;
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let cfg = dse::DseConfig {
         population: args.get_usize("pop", 96),
         generations: args.get_usize("gens", 40),
-        seed: args.get_usize("seed", 0) as u64,
+        seed: args.get_u64("seed", 0),
         rep: rep_for(args),
+        threads: args.get_usize("threads", default_threads),
+        memo: !args.flag("no-memo"),
         constraints: dse::Constraints {
             latency_ms: args.get("latency").and_then(|s| s.parse().ok()),
             dsp: args.get("dsp").and_then(|s| s.parse().ok()),
@@ -95,12 +102,15 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         },
         ..dse::DseConfig::default()
     };
-    let t0 = std::time::Instant::now();
     let res = dse::run(&net, &ZYNQ_7100, &cfg);
     println!(
-        "explored {} candidates in {:.2}s — Pareto front ({} points):",
+        "explored {} candidates in {:.2}s ({} threads, {} unique evals, \
+         cache hit rate {:.1}%) — Pareto front ({} points):",
         res.evaluations,
-        t0.elapsed().as_secs_f64(),
+        res.wall_ms / 1e3,
+        cfg.threads,
+        res.unique_evaluations,
+        res.cache_hit_rate() * 100.0,
         res.pareto.len()
     );
     println!("{:<28} {:>8} {:>12} {:>9} {:>9}", "p(i)", "DSP", "latency ms", "LUT", "BRAM");

@@ -152,6 +152,13 @@ pub fn fig2(pop: usize, gens: usize, seed: u64) -> String {
         "evaluated {} candidates across {} generations (pop {})",
         res.evaluations, gens, pop
     );
+    let _ = writeln!(
+        s,
+        "search telemetry: {} unique evaluations, cache hit rate {:.0}%, {:.1} ms wall",
+        res.unique_evaluations,
+        res.cache_hit_rate() * 100.0,
+        res.wall_ms
+    );
     let _ = writeln!(s, "{:<28} {:>8} {:>12} {:>10}", "parallelism p(i)", "DSP", "latency ms", "PEs");
     for c in &res.pareto {
         let _ = writeln!(
@@ -696,6 +703,14 @@ mod tests {
         let f = fig8();
         // p = [2,4,8] -> L = 2 + 8 + 32
         assert!(f.contains("2x + 8x + 32x"), "{f}");
+    }
+
+    #[test]
+    fn fig2_reports_search_telemetry() {
+        let f = fig2(16, 3, 1);
+        assert!(f.contains("search telemetry:"), "{f}");
+        assert!(f.contains("cache hit rate"), "{f}");
+        assert!(f.contains("unique evaluations"), "{f}");
     }
 
     #[test]

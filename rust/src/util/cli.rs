@@ -61,6 +61,10 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +96,13 @@ mod tests {
         assert_eq!(a.get_or("model", "mnist"), "mnist");
         assert_eq!(a.get_f64("budget", 1.5), 1.5);
         assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn u64_values() {
+        let a = parse("--seed 18446744073709551615");
+        assert_eq!(a.get_u64("seed", 0), u64::MAX);
+        assert_eq!(a.get_u64("missing", 7), 7);
     }
 
     #[test]

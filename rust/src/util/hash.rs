@@ -1,0 +1,130 @@
+//! Minimal FxHash-style hasher (no `rustc-hash`/`fnv` in the offline
+//! vendor set).
+//!
+//! The DSE memo cache keys on whole chromosomes (`[usize]` gene
+//! vectors); SipHash's per-lookup cost is visible at that call rate, so
+//! we vendor the tiny multiply-rotate word hasher rustc itself uses.
+//! Not DoS-resistant — fine for keys we generate ourselves.
+
+use std::hash::{BuildHasher, Hasher};
+
+/// The Firefox/rustc FxHash multiplier (a pi-derived odd constant).
+const K: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Word-at-a-time multiply-rotate hasher.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(K);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`] (zero-sized, `Default`-constructible,
+/// so `FxHashMap::default()` works everywhere `HashMap::new` would).
+#[derive(Debug, Default, Clone)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// A `HashMap` using [`FxHasher`].
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hash_of(genes: &[usize]) -> u64 {
+        use std::hash::Hash;
+        let mut h = FxHasher::default();
+        genes.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(hash_of(&[1, 2, 3]), hash_of(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn distinguishes_nearby_keys() {
+        let a = hash_of(&[1, 2, 3]);
+        assert_ne!(a, hash_of(&[1, 2, 4]));
+        assert_ne!(a, hash_of(&[3, 2, 1]));
+        assert_ne!(a, hash_of(&[1, 2]));
+        assert_ne!(a, hash_of(&[1, 2, 3, 0]));
+    }
+
+    #[test]
+    fn map_lookup_by_borrowed_slice() {
+        let mut m: FxHashMap<Box<[usize]>, u32> = FxHashMap::default();
+        m.insert(vec![4, 8, 16].into_boxed_slice(), 7);
+        // Box<[usize]>: Borrow<[usize]> — lookups need no allocation
+        let key: &[usize] = &[4, 8, 16];
+        assert_eq!(m.get(key), Some(&7));
+        let miss: &[usize] = &[4, 8, 17];
+        assert_eq!(m.get(miss), None);
+    }
+
+    #[test]
+    fn spread_over_buckets() {
+        // weak avalanche check: 256 sequential 3-gene keys should not
+        // collide at 64-bit width
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..4usize {
+            for b in 0..8usize {
+                for c in 0..8usize {
+                    seen.insert(hash_of(&[a, b, c]));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 4 * 8 * 8);
+    }
+}

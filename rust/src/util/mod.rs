@@ -4,6 +4,7 @@
 //! crate's dependency closure — no serde / rand / clap / proptest.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -78,6 +78,43 @@ impl Rng {
         self.f64().powf(exponent)
     }
 
+    /// Jump 2^128 draws ahead (the xoshiro256** jump polynomial).
+    ///
+    /// Partitions one seed's period into non-overlapping substreams:
+    /// callers that hand work to parallel evaluators can give each
+    /// worker its own jumped stream and stay reproducible for any
+    /// worker count.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180ec6d33cfd0aba,
+            0xd5a61266f0c9392c,
+            0xa9582618e03fc9aa,
+            0x39abdc4529b1661c,
+        ];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j >> b) & 1 == 1 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Split off an independent child stream. The child continues from
+    /// the current state; `self` jumps 2^128 draws ahead, so successive
+    /// children (and the parent) never overlap within 2^128 draws each.
+    pub fn split(&mut self) -> Rng {
+        let child = self.clone();
+        self.jump();
+        child
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -155,6 +192,37 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jump_is_deterministic_and_advances() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        a.jump();
+        b.jump();
+        let mut c = Rng::new(11); // un-jumped control
+        let ja: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let jb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let cc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(ja, jb, "jump must be deterministic");
+        assert_ne!(ja, cc, "jump must move to a different stream position");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::new(12);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let s1: Vec<u64> = (0..8).map(|_| c1.next_u64()).collect();
+        let s2: Vec<u64> = (0..8).map(|_| c2.next_u64()).collect();
+        let sp: Vec<u64> = (0..8).map(|_| parent.next_u64()).collect();
+        assert_ne!(s1, s2);
+        assert_ne!(s1, sp);
+        assert_ne!(s2, sp);
+        // same seed → same children
+        let mut parent_b = Rng::new(12);
+        let mut c1b = parent_b.split();
+        assert_eq!(s1, (0..8).map(|_| c1b.next_u64()).collect::<Vec<_>>());
     }
 
     #[test]

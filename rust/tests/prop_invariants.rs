@@ -127,6 +127,52 @@ fn prop_pareto_front_sound() {
 }
 
 #[test]
+fn prop_dse_invariant_under_threads_and_memo() {
+    // the engine contract: thread count and memo cache are observationally
+    // invisible — for random seeds/configurations the Pareto front is
+    // bit-identical across (threads=1, memo) / (threads=3, memo) /
+    // (threads=3, no-memo)
+    check(
+        "dse-threads-memo-invariant",
+        6,
+        27,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let net = zoo::svhn();
+            let base = dse::DseConfig {
+                population: 20,
+                generations: 5,
+                seed,
+                constraints: dse::Constraints::device(&ZYNQ_7100),
+                ..dse::DseConfig::default()
+            };
+            let runs = [
+                dse::run(&net, &ZYNQ_7100, &base),
+                dse::run(&net, &ZYNQ_7100, &dse::DseConfig { threads: 3, ..base.clone() }),
+                dse::run(
+                    &net,
+                    &ZYNQ_7100,
+                    &dse::DseConfig { threads: 3, memo: false, ..base.clone() },
+                ),
+            ];
+            let fp = |r: &dse::DseResult| -> Vec<(Vec<usize>, u64)> {
+                r.pareto
+                    .iter()
+                    .map(|c| (c.config.parallelism.clone(), c.objectives.latency_ms.to_bits()))
+                    .collect()
+            };
+            ensure(fp(&runs[0]) == fp(&runs[1]), "threads changed the front")?;
+            ensure(fp(&runs[0]) == fp(&runs[2]), "memo cache changed the front")?;
+            ensure(
+                runs.iter().all(|r| r.evaluations == runs[0].evaluations),
+                "evaluation count drifted",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_quant_roundtrip_bounded() {
     check(
         "quant-bound",
