@@ -115,7 +115,8 @@ fn sample_registry() -> (PathRegistry, PathCosts) {
         })
         .collect();
     let registry = PathRegistry::new(paths);
-    let costs = forgemorph::coordinator::sim_path_costs(&net, &design, &ZYNQ_7100, &registry);
+    let costs = forgemorph::coordinator::sim_path_costs(&net, &design, &ZYNQ_7100, &registry)
+        .expect("lowerable morph paths");
     (registry, costs)
 }
 

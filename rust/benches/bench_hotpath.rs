@@ -91,6 +91,31 @@ fn main() {
         std::hint::black_box(design::evaluate(&mobilenet, &cfg_mb, &ZYNQ_7100).unwrap());
     });
 
+    // --- pass pipeline + branchy dataflow graphs --------------------------
+    {
+        let yolo = zoo::yolov5l();
+        let unet = zoo::unet_tiny();
+        let plan_y = forgemorph::graph::passes::schedule(&yolo).unwrap();
+        let cfg_y = DesignConfig::uniform(&yolo, 2, FpRep::Int8);
+        let cfg_u = DesignConfig::uniform(&unet, 4, FpRep::Int16);
+        bench("passes::schedule yolov5l (141 stages)", budget, || {
+            std::hint::black_box(forgemorph::graph::passes::schedule(&yolo).unwrap());
+        });
+        bench("design::evaluate_plan yolov5l (104 conv)", budget, || {
+            std::hint::black_box(
+                design::evaluate_plan(&plan_y, &cfg_y, &ZYNQ_7100).unwrap(),
+            );
+        });
+        bench("sim::simulate unet_tiny (branchy)", budget, || {
+            std::hint::black_box(sim::simulate(
+                &unet,
+                &cfg_u,
+                &ZYNQ_7100,
+                &GateMask::all_active(),
+            ));
+        });
+    }
+
     // --- MOGA generation --------------------------------------------------
     bench("dse::run cifar10 pop=32 gens=1", budget, || {
         let cfg = dse::DseConfig {

@@ -53,6 +53,12 @@ impl AnalyticalBackend {
         let floor = pm.total_mw(&Resources::default(), device.clock_mhz, Activity::default());
 
         let registry = PathRegistry::new(paths);
+        // same init-time manifest validation as the sim/pjrt backends: an
+        // out-of-range morph width is a loud error, not a silent cost row
+        for p in registry.paths() {
+            crate::morph::gate_mask_for(&net, p)
+                .map_err(|e| BackendError::Init(e.to_string()))?;
+        }
         let full_macs = registry.full().macs.max(1);
         let rows = registry
             .paths()

@@ -42,6 +42,12 @@ impl PjrtBackend {
     ) -> Result<PjrtBackend, BackendError> {
         let engine =
             Engine::load(dir, model).map_err(|e| BackendError::Init(e.to_string()))?;
+        // validate every manifest morph path against the fabric up front:
+        // an out-of-range width is a load error, not a silent clamp
+        for p in engine.model().morph_paths() {
+            crate::morph::gate_mask_for(&net, &p)
+                .map_err(|e| BackendError::Init(e.to_string()))?;
+        }
         Ok(PjrtBackend { engine, net, design, device, costs: OnceCell::new() })
     }
 
@@ -76,6 +82,7 @@ impl InferenceBackend for PjrtBackend {
             .get_or_init(|| {
                 let registry = PathRegistry::new(self.engine.model().morph_paths());
                 sim_path_costs(&self.net, &self.design, &self.device, &registry)
+                    .expect("morph paths validated at load")
             })
             .clone()
     }

@@ -2,46 +2,46 @@
 //!
 //! Every executed frame streams through the simulated pipeline of the
 //! deployed design point under the morph path's clock-gate mask, at
-//! row/event granularity (`sim::simulate_with`). The design evaluation
-//! and shape inference are hoisted out of the frame loop — the serving
-//! hot path only pays the per-layer event walk. Logits come from the
-//! shared [`SurrogateClassifier`], so numerics are bit-identical to the
-//! analytical backend and independent of worker count.
+//! row/event granularity (`sim::simulate_with`). The pass-pipeline
+//! schedule and the design evaluation are hoisted out of the frame loop —
+//! the serving hot path only pays the per-stage event walk. Logits come
+//! from the shared [`SurrogateClassifier`], so numerics are bit-identical
+//! to the analytical backend and independent of worker count.
 
 use std::cell::OnceCell;
 use std::collections::BTreeMap;
 
 use super::{BackendError, InferenceBackend, SurrogateClassifier};
 use crate::design::{self, DesignConfig, DesignEval};
-use crate::graph::{shapes, Network};
+use crate::graph::passes::{self, StagePlan};
+use crate::graph::Network;
 use crate::morph::governor::PathCosts;
-use crate::morph::{gate_mask_for, MorphPath, PathRegistry};
+use crate::morph::{gate_mask_for, MorphError, MorphPath, PathRegistry};
 use crate::pe::Device;
 use crate::sim::{self, GateMask, SimReport};
 
 /// Build the per-path cost table from the cycle simulator — the data the
-/// governor trades on (power mW, latency ms per morph path).
+/// governor trades on (power mW, latency ms per morph path). Fails when a
+/// registry path cannot be lowered onto the fabric (e.g. a corrupt
+/// manifest width) instead of clamping it.
 pub fn sim_path_costs(
     net: &Network,
     design: &DesignConfig,
     device: &Device,
     registry: &PathRegistry,
-) -> PathCosts {
-    let rows = registry
-        .paths()
-        .iter()
-        .map(|p| {
-            let mask = gate_mask_for(net, p);
-            let rep = sim::simulate(net, design, device, &mask);
-            (p.name.clone(), rep.power_mw, rep.latency_ms())
-        })
-        .collect();
-    PathCosts { rows }
+) -> Result<PathCosts, MorphError> {
+    let mut rows = Vec::with_capacity(registry.paths().len());
+    for p in registry.paths() {
+        let mask = gate_mask_for(net, p)?;
+        let rep = sim::simulate(net, design, device, &mask);
+        rows.push((p.name.clone(), rep.power_mw, rep.latency_ms()));
+    }
+    Ok(PathCosts { rows })
 }
 
 /// The cycle-accurate serving backend.
 pub struct SimBackend {
-    net: Network,
+    plan: StagePlan,
     device: Device,
     registry: PathRegistry,
     batches: Vec<usize>,
@@ -50,7 +50,6 @@ pub struct SimBackend {
     frame_len: usize,
     num_classes: usize,
     eval: DesignEval,
-    shapes: shapes::Shapes,
     masks: BTreeMap<String, GateMask>,
     /// governor cost table, computed on first request — only shard 0's
     /// table feeds the shared governor, so the other shards never pay
@@ -75,22 +74,25 @@ impl SimBackend {
         if batches.is_empty() {
             return Err(BackendError::Init("no batch sizes".into()));
         }
-        let eval = design::evaluate(&net, &design, &device)
+        let plan = passes::schedule(&net)
             .map_err(|e| BackendError::Init(e.to_string()))?;
-        let shp =
-            shapes::infer(&net).map_err(|e| BackendError::Init(e.to_string()))?;
+        let eval = design::evaluate_plan(&plan, &design, &device)
+            .map_err(|e| BackendError::Init(e.to_string()))?;
         let registry = PathRegistry::new(paths);
-        let masks: BTreeMap<String, GateMask> = registry
-            .paths()
-            .iter()
-            .map(|p| (p.name.clone(), gate_mask_for(&net, p)))
-            .collect();
+        // validate every morph path at init — a bad manifest fails loudly
+        // here, not silently at the clamp floor mid-serve
+        let mut masks: BTreeMap<String, GateMask> = BTreeMap::new();
+        for p in registry.paths() {
+            let mask =
+                gate_mask_for(&net, p).map_err(|e| BackendError::Init(e.to_string()))?;
+            masks.insert(p.name.clone(), mask);
+        }
         let (h, w, c) = net.input_dims();
         let frame_len = h * w * c;
         let num_classes = super::net_num_classes(&net);
         let classifier = SurrogateClassifier::new(frame_len, num_classes, registry.paths());
         Ok(SimBackend {
-            net,
+            plan,
             device,
             registry,
             batches,
@@ -99,7 +101,6 @@ impl SimBackend {
             frame_len,
             num_classes,
             eval,
-            shapes: shp,
             masks,
             costs: OnceCell::new(),
             last_report: None,
@@ -134,9 +135,9 @@ impl InferenceBackend for SimBackend {
     }
 
     fn path_costs(&self) -> PathCosts {
-        // one frame sim per path against the pre-evaluated design point
-        // (cheaper than the standalone sim_path_costs() convenience,
-        // which re-runs evaluate/infer per path)
+        // one frame sim per path against the pre-scheduled plan and
+        // pre-evaluated design point (cheaper than the standalone
+        // sim_path_costs() convenience, which re-schedules per path)
         self.costs
             .get_or_init(|| PathCosts {
                 rows: self
@@ -145,11 +146,10 @@ impl InferenceBackend for SimBackend {
                     .iter()
                     .map(|p| {
                         let rep = sim::simulate_with(
-                            &self.net,
+                            &self.plan,
                             &self.device,
                             &self.masks[&p.name],
                             &self.eval,
-                            &self.shapes,
                         );
                         (p.name.clone(), rep.power_mw, rep.latency_ms())
                     })
@@ -181,11 +181,10 @@ impl InferenceBackend for SimBackend {
         for _frame in 0..batch {
             for _ in 0..self.fidelity {
                 report = Some(sim::simulate_with(
-                    &self.net,
+                    &self.plan,
                     &self.device,
                     mask,
                     &self.eval,
-                    &self.shapes,
                 ));
             }
         }
@@ -241,5 +240,24 @@ mod tests {
         let (_, p1, l1) = get("d1_w100");
         let (_, p3, l3) = get("d3_w100");
         assert!(p1 < p3 && l1 < l3);
+    }
+
+    #[test]
+    fn corrupt_manifest_width_fails_at_init() {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let mut paths = morph::depth_ladder(&net);
+        paths.push(MorphPath {
+            name: "d3_w5".into(),
+            depth: 3,
+            width_pct: 5,
+            accuracy: 0.5,
+            params: 1,
+            macs: 1,
+        });
+        let err = SimBackend::new(net, design, ZYNQ_7100, paths, vec![1], 1)
+            .err()
+            .expect("5% width must be rejected");
+        assert!(err.to_string().contains("width"), "{err}");
     }
 }

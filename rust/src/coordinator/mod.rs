@@ -460,7 +460,7 @@ mod tests {
         let net = zoo::mnist();
         let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
         let reg = PathRegistry::new(crate::morph::tests::sample_paths());
-        let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &reg);
+        let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &reg).unwrap();
         assert_eq!(costs.rows.len(), 4);
         let get = |n: &str| costs.rows.iter().find(|(m, _, _)| m == n).unwrap().clone();
         let (_, p_full, l_full) = get("d3_w100");

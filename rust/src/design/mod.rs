@@ -1,18 +1,27 @@
-//! Hardware design model: a network + per-layer parallelism -> latency,
-//! resources, power (Sec. III-B/C, Eqs. 12-15).
+//! Hardware design model: a scheduled network + per-layer parallelism ->
+//! latency, resources, power (Sec. III-B/C, Eqs. 12-15).
 //!
-//! A **design point** assigns each conv layer i a parallelism degree
+//! A **design point** assigns each conv-like stage of the
+//! [`StagePlan`](crate::graph::passes::StagePlan) a parallelism degree
 //! `p(i)` with `1 <= p(i) <= ub(i)` (ub = filter count). Following
-//! Eq. 14, layer i instantiates `L(i) = p(i) * p(i-1)` C_PEs: `p(i)`
-//! filter lanes, each replicated across `p(i-1)` input-channel streams.
-//! Filters/channels beyond the allocated lanes are processed in
-//! sequential passes — the serialization that trades latency for area.
+//! Eq. 14, stage i instantiates `L(i) = p(i) * p(i-1)` C_PEs: `p(i)`
+//! filter lanes, each replicated across `p(i-1)` input-channel streams —
+//! with `p(i-1)` now resolved along the *dataflow edges* of the plan, not
+//! the layer list, so forked branches inherit lanes from their true
+//! producer.
 //!
 //! Pipeline timing follows Eq. 12-13: `T = m*P + (n-1)*I` with `m` the
 //! fill delay (line buffers + MAC overheads), `n` the streamed elements
 //! of the input frame, and `I` the initiation interval set by the most
-//! serialized stage.
+//! serialized stage. Branchy topologies add merge costs the chain model
+//! never paid: `Concat` stages carry channel-select mux logic per input
+//! lane plus the BRAM of their branch re-sync FIFOs (the plan's
+//! `Branch`-edge `fifo_words` at the datapath width), `Upsample` stages
+//! pace at their *output* frame rate and buffer one input row, and
+//! `SpatialPyramidPool` stages pay three pool PEs per lane, the four-tap
+//! concat mux and the cascade's row-skew FIFO.
 
+use crate::graph::passes::{self, StagePlan};
 use crate::graph::{shapes, LayerKind, Network};
 use crate::pe::conv::ConvPe;
 use crate::pe::fc::FcPe;
@@ -23,7 +32,8 @@ use crate::power::{Activity, PowerModel};
 /// A candidate hardware configuration (the MOGA chromosome, Sec. III-C).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DesignConfig {
-    /// parallelism p(i) per conv-like layer, in network order
+    /// parallelism p(i) per conv-like stage, in StagePlan gene order
+    /// (identical to the legacy conv-layer order)
     pub parallelism: Vec<usize>,
     /// fixed-point width of the datapath
     pub rep: FpRep,
@@ -51,10 +61,10 @@ impl DesignConfig {
     /// the worst-occupancy stage until the next step would blow the
     /// budget or nothing improves. Deterministic fast-path for the big
     /// Table IV/V models (the MOGA finds the same knee; this gets there
-    /// in O(layers x steps)).
+    /// in O(stages x steps)).
     ///
     /// §Perf: every greedy step runs on the prebuilt [`Evaluator`]
-    /// (shape inference hoisted out, trial vectors mutated in place) —
+    /// (plan scheduling hoisted out, trial vectors mutated in place) —
     /// the old path cloned the whole config and re-ran full `evaluate`
     /// per probe. Same answer (`balanced_matches_full_evaluate_greedy`
     /// pins equivalence), ~an order of magnitude fewer cycles.
@@ -108,12 +118,13 @@ impl DesignConfig {
     }
 }
 
-/// Per-layer mapping outcome.
+/// Per-stage mapping outcome.
 #[derive(Debug, Clone)]
 pub struct LayerMapping {
+    /// stage id in the StagePlan (== canonical layer id)
     pub layer_id: usize,
     pub name: String,
-    /// C_PE (or pool/FC unit) count for this layer
+    /// C_PE (or pool/FC/merge unit) count for this stage
     pub pe_count: usize,
     /// sequential passes needed to cover all (filter, channel) pairs
     pub serial_factor: usize,
@@ -127,6 +138,7 @@ pub struct LayerMapping {
 /// Full evaluation of one design point.
 #[derive(Debug, Clone)]
 pub struct DesignEval {
+    /// one mapping per StagePlan stage, in stage order
     pub mappings: Vec<LayerMapping>,
     pub resources: Resources,
     /// total C_PE-equivalents (the "Design PEs" column of Table III)
@@ -165,6 +177,7 @@ impl DesignEval {
 #[derive(Debug)]
 pub enum DesignError {
     Shape(shapes::ShapeError),
+    Pass(passes::PassError),
     ArityMismatch { got: usize, want: usize },
     OutOfBounds { layer: usize, p: usize, ub: usize },
 }
@@ -173,12 +186,13 @@ impl std::fmt::Display for DesignError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             DesignError::Shape(e) => write!(f, "shape inference: {e}"),
+            DesignError::Pass(e) => write!(f, "{e}"),
             DesignError::ArityMismatch { got, want } => write!(
                 f,
-                "parallelism vector has {got} entries, network has {want} conv layers"
+                "parallelism vector has {got} entries, network has {want} conv stages"
             ),
             DesignError::OutOfBounds { layer, p, ub } => {
-                write!(f, "layer {layer}: parallelism {p} outside [1, {ub}]")
+                write!(f, "stage {layer}: parallelism {p} outside [1, {ub}]")
             }
         }
     }
@@ -192,15 +206,66 @@ impl From<shapes::ShapeError> for DesignError {
     }
 }
 
+impl From<passes::PassError> for DesignError {
+    fn from(e: passes::PassError) -> Self {
+        DesignError::Pass(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Branch / merge cost constants (the logic the chain model never needed)
+// ---------------------------------------------------------------------------
+
+/// Concat merge: channel-select mux LUT/FF per input, per active lane.
+const CONCAT_MUX_LUT: usize = 16;
+const CONCAT_MUX_FF: usize = 8;
+/// Upsample: row-repeat control per active lane.
+const UPSAMPLE_LUT: usize = 40;
+const UPSAMPLE_FF: usize = 24;
+/// Standalone rectifier lane (comparator + output register).
+const RELU_LUT: usize = 8;
+const RELU_FF: usize = 4;
+
+/// 18 Kb BRAM blocks needed to buffer `words` at the datapath width.
+fn fifo_bram(words: usize, rep: FpRep) -> usize {
+    if words == 0 {
+        0
+    } else {
+        (words * rep.bits()).div_ceil(18 * 1024)
+    }
+}
+
+/// BRAM of a merge stage's branch FIFOs, one independent FIFO per
+/// incoming `Branch` edge (ceil-division applies per branch, matching
+/// the per-branch FIFOs the RTL emits).
+fn branch_fifo_bram(plan: &StagePlan, stage: usize, rep: FpRep) -> usize {
+    plan.edges
+        .iter()
+        .filter(|e| e.dst == stage && e.kind == passes::EdgeKind::Branch)
+        .map(|e| fifo_bram(e.fifo_words, rep))
+        .sum()
+}
+
 /// Evaluate a design point on a device (the analytical fast path of the
-/// DSE loop — no synthesis, microseconds per call).
+/// DSE loop — no synthesis, microseconds per call). Schedules the pass
+/// pipeline internally; hot paths that hold a [`StagePlan`] should call
+/// [`evaluate_plan`] directly.
 pub fn evaluate(
     net: &Network,
     cfg: &DesignConfig,
     device: &Device,
 ) -> Result<DesignEval, DesignError> {
-    let shp = shapes::infer(net)?;
-    let bounds = net.conv_filter_bounds();
+    let plan = passes::schedule(net)?;
+    evaluate_plan(&plan, cfg, device)
+}
+
+/// Evaluate a design point against a pre-scheduled [`StagePlan`].
+pub fn evaluate_plan(
+    plan: &StagePlan,
+    cfg: &DesignConfig,
+    device: &Device,
+) -> Result<DesignEval, DesignError> {
+    let bounds = plan.conv_bounds();
     if cfg.parallelism.len() != bounds.len() {
         return Err(DesignError::ArityMismatch {
             got: cfg.parallelism.len(),
@@ -221,19 +286,21 @@ pub fn evaluate(
     // period is set by the most-occupied stage (Eq. 13's initiation
     // interval) — the "each stage constitutes a bottleneck" behaviour of
     // low-PE designs (Sec. V-B).
-    let mut mappings = Vec::with_capacity(net.layers.len());
+    let mut mappings = Vec::with_capacity(plan.stages.len());
     let mut total = Resources::default();
-    let mut conv_idx = 0usize;
-    let mut prev_p = 1usize; // input streams ahead of the first conv
+    // lanes flowing OUT of each already-scheduled stage, resolved along
+    // the dataflow edges (the plan's preds), not the layer list
+    let mut out_lanes: Vec<usize> = Vec::with_capacity(plan.stages.len());
     let mut first_conv_seen = false;
 
-    for layer in &net.layers {
-        let inp = shp.input(layer.id);
-        let mapping = match &layer.kind {
+    for stage in &plan.stages {
+        let inp = stage.input;
+        let in_lanes = stage.preds.first().map(|&p| out_lanes[p]).unwrap_or(1);
+        let mut lanes_out = in_lanes;
+        let mapping = match &stage.kind {
             LayerKind::Conv { filters, k, relu, .. } => {
-                let p = cfg.parallelism[conv_idx];
-                conv_idx += 1;
-                let lanes_in = prev_p.min(inp.c).max(1);
+                let p = cfg.parallelism[stage.conv_slot.expect("conv stage has a gene slot")];
+                let lanes_in = in_lanes.min(inp.c).max(1);
                 let pe_count = p * lanes_in; // Eq. 14: L(i) = p(i) * p(i-1)
                 let pe = ConvPe {
                     k: *k,
@@ -251,23 +318,21 @@ pub fn evaluate(
                 let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
                 let serial = filters.div_ceil(p * simd) * inp.c.div_ceil(lanes_in);
                 let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
-                let m = LayerMapping {
-                    layer_id: layer.id,
-                    name: layer.name.clone(),
+                lanes_out = p;
+                LayerMapping {
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
                     pe_count,
                     serial_factor: serial,
                     occupancy_cycles: pass * serial,
                     fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles(),
                     resources: pe.resources().scale(pe_count),
-                };
-                prev_p = p;
-                m
+                }
             }
             LayerKind::DwConv { k, relu, .. } => {
                 // depthwise: one lane per channel group, p carries over
-                let p = cfg.parallelism[conv_idx];
-                conv_idx += 1;
+                let p = cfg.parallelism[stage.conv_slot.expect("conv stage has a gene slot")];
                 let pe = ConvPe {
                     k: *k,
                     fm_w: inp.w,
@@ -281,33 +346,32 @@ pub fn evaluate(
                 let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
                 let serial = inp.c.div_ceil(lanes * simd);
                 let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
-                let m = LayerMapping {
-                    layer_id: layer.id,
-                    name: layer.name.clone(),
+                lanes_out = lanes;
+                LayerMapping {
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
                     pe_count: lanes,
                     serial_factor: serial,
                     occupancy_cycles: pass * serial,
                     fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles(),
                     resources: pe.resources().scale(lanes),
-                };
-                prev_p = lanes;
-                m
+                }
             }
             LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
-                let kind = if matches!(layer.kind, LayerKind::MaxPool { .. }) {
+                let kind = if matches!(stage.kind, LayerKind::MaxPool { .. }) {
                     PoolKind::Max
                 } else {
                     PoolKind::Avg
                 };
                 let pe = PoolPe { k: *k, stride: *stride, fm_w: inp.w, fm_h: inp.h, kind };
                 // one PU_PE per active channel lane, streams inline
-                let lanes = prev_p.min(inp.c).max(1);
+                let lanes = in_lanes.min(inp.c).max(1);
                 let serial = inp.c.div_ceil(lanes);
                 let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
                 LayerMapping {
-                    layer_id: layer.id,
-                    name: layer.name.clone(),
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
                     pe_count: lanes,
                     serial_factor: serial,
                     occupancy_cycles: pass * serial,
@@ -316,7 +380,7 @@ pub fn evaluate(
                 }
             }
             LayerKind::Fc { out, .. } => {
-                let n_pe = prev_p.min(inp.c).max(1);
+                let n_pe = in_lanes.min(inp.c).max(1);
                 let pe = FcPe {
                     fc_out: *out,
                     n_pe,
@@ -325,8 +389,8 @@ pub fn evaluate(
                     fm_h: inp.h.max(1),
                 };
                 LayerMapping {
-                    layer_id: layer.id,
-                    name: layer.name.clone(),
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
                     pe_count: *out * n_pe,
                     serial_factor: pe.parallelism(),
                     occupancy_cycles: pe.latency_cycles(blank),
@@ -335,27 +399,107 @@ pub fn evaluate(
                 }
             }
             LayerKind::ResidualAdd { .. } => LayerMapping {
-                layer_id: layer.id,
-                name: layer.name.clone(),
-                pe_count: prev_p,
+                layer_id: stage.id,
+                name: stage.name.clone(),
+                pe_count: in_lanes,
                 serial_factor: 1,
                 occupancy_cycles: 0,
                 fill_cycles: 1,
                 // one adder lane per active channel: LUT adders, no DSP
-                resources: Resources { dsp: 0, lut: 24 * prev_p, ff: 16 * prev_p, bram: 0 },
+                resources: Resources { dsp: 0, lut: 24 * in_lanes, ff: 16 * in_lanes, bram: 0 },
+            },
+            LayerKind::Concat { .. } => {
+                // channel-select mux over the input branches + the branch
+                // re-sync FIFOs the plan sized on the incoming edges.
+                // BRAM is summed PER EDGE — each branch instantiates its
+                // own FIFO, so the ceil-division happens per branch.
+                let n_in = stage.preds.len().max(1);
+                let lanes =
+                    stage.preds.iter().map(|&p| out_lanes[p]).max().unwrap_or(1);
+                let bram = branch_fifo_bram(plan, stage.id, cfg.rep);
+                lanes_out = lanes;
+                LayerMapping {
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
+                    pe_count: lanes,
+                    serial_factor: 1,
+                    occupancy_cycles: 0,
+                    fill_cycles: 2,
+                    resources: Resources {
+                        dsp: 0,
+                        lut: CONCAT_MUX_LUT * n_in * lanes,
+                        ff: CONCAT_MUX_FF * n_in * lanes,
+                        bram,
+                    },
+                }
+            }
+            LayerKind::Upsample { .. } => {
+                // row repeater: paces at the OUTPUT frame rate, buffers
+                // one full input row across all channels
+                let out = stage.output;
+                let occ = (out.w + blank.back_porch + blank.front_porch) * out.h;
+                LayerMapping {
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
+                    pe_count: in_lanes,
+                    serial_factor: 1,
+                    occupancy_cycles: occ,
+                    fill_cycles: inp.w + 4,
+                    resources: Resources {
+                        dsp: 0,
+                        lut: UPSAMPLE_LUT * in_lanes,
+                        ff: UPSAMPLE_FF * in_lanes,
+                        bram: fifo_bram(inp.w * inp.c, cfg.rep),
+                    },
+                }
+            }
+            LayerKind::SpatialPyramidPool { k } => {
+                // three cascaded stride-1 pools per lane + four-tap concat;
+                // the taps skew by (k-1) rows per cascade level, so the
+                // re-sync FIFO holds (3+2+1)*(k-1) rows of all channels
+                let lanes = in_lanes.min(inp.c).max(1);
+                let pool = PoolPe { k: *k, stride: 1, fm_w: inp.w, fm_h: inp.h, kind: PoolKind::Max };
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                let skew_words = 6 * (k - 1) * inp.w * inp.c;
+                let mux = Resources {
+                    dsp: 0,
+                    lut: CONCAT_MUX_LUT * 4 * lanes,
+                    ff: CONCAT_MUX_FF * 4 * lanes,
+                    bram: fifo_bram(skew_words, cfg.rep),
+                };
+                LayerMapping {
+                    layer_id: stage.id,
+                    name: stage.name.clone(),
+                    pe_count: 3 * lanes,
+                    // the four taps stream out sequentially per merge port
+                    serial_factor: 4,
+                    occupancy_cycles: pass * 4,
+                    fill_cycles: 3 * (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + 8,
+                    resources: pool.resources().scale(3 * lanes).add(&mux),
+                }
+            }
+            LayerKind::Relu => LayerMapping {
+                layer_id: stage.id,
+                name: stage.name.clone(),
+                pe_count: in_lanes,
+                serial_factor: 1,
+                occupancy_cycles: 0,
+                fill_cycles: 1,
+                resources: Resources { dsp: 0, lut: RELU_LUT * in_lanes, ff: RELU_FF * in_lanes, bram: 0 },
             },
             LayerKind::GlobalAvgPool => LayerMapping {
-                layer_id: layer.id,
-                name: layer.name.clone(),
-                pe_count: prev_p,
+                layer_id: stage.id,
+                name: stage.name.clone(),
+                pe_count: in_lanes,
                 serial_factor: 1,
                 occupancy_cycles: (inp.w + 4) * inp.h,
                 fill_cycles: 4,
-                resources: Resources { dsp: 0, lut: 60 * prev_p, ff: 32 * prev_p, bram: 0 },
+                resources: Resources { dsp: 0, lut: 60 * in_lanes, ff: 32 * in_lanes, bram: 0 },
             },
             LayerKind::Softmax => LayerMapping {
-                layer_id: layer.id,
-                name: layer.name.clone(),
+                layer_id: stage.id,
+                name: stage.name.clone(),
                 pe_count: 1,
                 serial_factor: 1,
                 occupancy_cycles: inp.c * 4,
@@ -364,8 +508,8 @@ pub fn evaluate(
                 resources: Resources { dsp: 2, lut: 900, ff: 600, bram: 1 },
             },
             LayerKind::Input { .. } => LayerMapping {
-                layer_id: layer.id,
-                name: layer.name.clone(),
+                layer_id: stage.id,
+                name: stage.name.clone(),
                 pe_count: 0,
                 serial_factor: 1,
                 occupancy_cycles: 0,
@@ -375,6 +519,7 @@ pub fn evaluate(
         };
         total = total.add(&mapping.resources);
         mappings.push(mapping);
+        out_lanes.push(lanes_out);
     }
 
     // Eq. 12-13. Throughput: the steady-state frame period is the most
@@ -384,7 +529,7 @@ pub fn evaluate(
     // so it adds its full occupancy to the critical path — this is why
     // low-PE designs are orders of magnitude slower end-to-end and why
     // depth-gating them (NeuroMorph) wins big.
-    let (in_h, in_w, _) = net.input_dims();
+    let (in_h, in_w, _) = plan.input_dims;
     let source = (in_w + blank.back_porch + blank.front_porch) * in_h;
     let fill: usize = mappings.iter().map(|m| m.fill_cycles).sum();
     let serialized: usize = mappings
@@ -399,15 +544,12 @@ pub fn evaluate(
         .unwrap_or(1)
         .max(source);
     let latency = source + fill + serialized;
-    let total_pes = mappings
+    let total_pes = plan
+        .stages
         .iter()
-        .filter(|m| {
-            matches!(
-                net.layers[m.layer_id].kind,
-                LayerKind::Conv { .. } | LayerKind::DwConv { .. }
-            )
-        })
-        .map(|m| m.pe_count)
+        .zip(&mappings)
+        .filter(|(s, _)| s.is_conv_like())
+        .map(|(_, m)| m.pe_count)
         .sum();
 
     Ok(DesignEval {
@@ -415,7 +557,7 @@ pub fn evaluate(
         resources: total,
         total_pes,
         latency_cycles: latency,
-        period_cycles: period,
+        period_cycles: period.max(1),
         clock_mhz: device.clock_mhz,
     })
 }
@@ -424,6 +566,43 @@ pub fn evaluate(
 // ---------------------------------------------------------------------------
 // Fast path for the DSE inner loop
 // ---------------------------------------------------------------------------
+
+/// Statically resolved lane provenance of a stage input: which chromosome
+/// slot (if any) decides how many parallel channel streams arrive. The
+/// resolution follows the plan's dataflow edges once, at `Evaluator`
+/// construction, so `objectives()` never touches the graph.
+#[derive(Debug, Clone, Copy)]
+enum LaneSrc {
+    /// no conv upstream (the source streams one lane)
+    One,
+    /// a standard conv: lanes = p(slot)
+    Conv { slot: usize },
+    /// a depthwise conv: lanes = min(p(slot), cin).max(1)
+    Dw { slot: usize, cin: usize },
+    /// a concat merge: lanes = max over `lane_pool[start..start+len]`
+    /// (entries are guaranteed non-Max)
+    Max { start: usize, len: usize },
+}
+
+fn lanes_flat(src: LaneSrc, genes: &[usize]) -> usize {
+    match src {
+        LaneSrc::One => 1,
+        LaneSrc::Conv { slot } => genes[slot],
+        LaneSrc::Dw { slot, cin } => genes[slot].min(cin).max(1),
+        LaneSrc::Max { .. } => unreachable!("lane pool entries are flat"),
+    }
+}
+
+fn lanes_of(src: LaneSrc, genes: &[usize], pool: &[LaneSrc]) -> usize {
+    match src {
+        LaneSrc::Max { start, len } => pool[start..start + len]
+            .iter()
+            .map(|&s| lanes_flat(s, genes))
+            .max()
+            .unwrap_or(1),
+        flat => lanes_flat(flat, genes),
+    }
+}
 
 /// Pre-digested per-stage facts, computed once per (network, device).
 #[derive(Debug, Clone, Copy)]
@@ -447,6 +626,23 @@ enum StagePre {
     Pool { cin: usize, pass: usize, fill: usize, res: Resources },
     Fc { out: usize, cin: usize, fm_w: usize, fm_h: usize, fill: usize },
     Fixed { occupancy: usize, fill: usize, res_per_lane: Resources, lanes_from_prev: bool, extra: Resources },
+    Concat {
+        n_in: usize,
+        /// branch re-sync FIFO BRAM at Int8 / Int16 (summed per branch:
+        /// every incoming Branch edge owns an independent FIFO)
+        bram8: usize,
+        bram16: usize,
+        /// the merge's own lane provenance (max over inputs)
+        src_max: LaneSrc,
+    },
+    Upsample { occupancy: usize, fill: usize, row_words: usize },
+    Spp {
+        cin: usize,
+        pass: usize,
+        fill: usize,
+        pool_res: Resources,
+        skew_words: usize,
+    },
 }
 
 /// Lightweight evaluation result (what the MOGA fitness needs).
@@ -458,11 +654,14 @@ pub struct FastEval {
     pub period_cycles: usize,
 }
 
-/// Reusable evaluator: hoists shape inference, bound checks and per-PE
-/// resource lookups out of the 10^4-10^5-call DSE loop. `objectives()`
-/// performs zero heap allocation.
+/// Reusable evaluator: hoists pass scheduling, shape inference, bound
+/// checks and per-PE resource lookups out of the 10^4-10^5-call DSE loop.
+/// `objectives()` performs zero heap allocation.
 pub struct Evaluator {
-    stages: Vec<StagePre>,
+    /// per stage: pre-digested facts + the lane provenance of its input
+    stages: Vec<(StagePre, LaneSrc)>,
+    /// flat pool backing `LaneSrc::Max` ranges
+    lane_pool: Vec<LaneSrc>,
     bounds: Vec<usize>,
     source: usize,
     clock_mhz: f64,
@@ -471,14 +670,25 @@ pub struct Evaluator {
 
 impl Evaluator {
     pub fn new(net: &Network, device: &Device) -> Result<Evaluator, DesignError> {
-        let shp = shapes::infer(net)?;
+        let plan = passes::schedule(net)?;
+        Evaluator::from_plan(&plan, device)
+    }
+
+    pub fn from_plan(plan: &StagePlan, device: &Device) -> Result<Evaluator, DesignError> {
         let blank = Blanking::default();
-        let mut stages = Vec::with_capacity(net.layers.len());
+        let mut stages: Vec<(StagePre, LaneSrc)> = Vec::with_capacity(plan.stages.len());
+        let mut lane_pool: Vec<LaneSrc> = Vec::new();
+        // lane provenance flowing OUT of each scheduled stage
+        let mut out_src: Vec<LaneSrc> = Vec::with_capacity(plan.stages.len());
         let mut first_conv_seen = false;
-        for layer in &net.layers {
-            let inp = shp.input(layer.id);
+
+        for stage in &plan.stages {
+            let inp = stage.input;
             let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
-            let stage = match &layer.kind {
+            let in_src =
+                stage.preds.first().map(|&p| out_src[p]).unwrap_or(LaneSrc::One);
+            let mut self_src = in_src;
+            let pre = match &stage.kind {
                 LayerKind::Conv { filters, k, relu, .. } => {
                     let first = !first_conv_seen;
                     first_conv_seen = true;
@@ -493,6 +703,7 @@ impl Evaluator {
                     let pe = mk(FpRep::Int16);
                     let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles();
+                    self_src = LaneSrc::Conv { slot: stage.conv_slot.expect("conv slot") };
                     StagePre::Conv {
                         filters: *filters,
                         cin: inp.c,
@@ -516,6 +727,10 @@ impl Evaluator {
                     let pe = mk(FpRep::Int16);
                     let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles();
+                    self_src = LaneSrc::Dw {
+                        slot: stage.conv_slot.expect("conv slot"),
+                        cin: inp.c,
+                    };
                     StagePre::DwConv {
                         cin: inp.c,
                         pass,
@@ -525,7 +740,7 @@ impl Evaluator {
                     }
                 }
                 LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
-                    let kind = if matches!(layer.kind, LayerKind::MaxPool { .. }) {
+                    let kind = if matches!(stage.kind, LayerKind::MaxPool { .. }) {
                         PoolKind::Max
                     } else {
                         PoolKind::Avg
@@ -552,6 +767,57 @@ impl Evaluator {
                     lanes_from_prev: true,
                     extra: Resources::default(),
                 },
+                LayerKind::Concat { .. } => {
+                    // flatten input provenances into the lane pool (max of
+                    // max collapses, so entries stay flat)
+                    let start = lane_pool.len();
+                    for &p in &stage.preds {
+                        match out_src[p] {
+                            LaneSrc::Max { start: s, len: l } => {
+                                lane_pool.extend_from_within(s..s + l);
+                            }
+                            flat => lane_pool.push(flat),
+                        }
+                    }
+                    let len = (lane_pool.len() - start).max(1);
+                    if lane_pool.len() == start {
+                        lane_pool.push(LaneSrc::One);
+                    }
+                    let src_max = LaneSrc::Max { start, len };
+                    self_src = src_max;
+                    StagePre::Concat {
+                        n_in: stage.preds.len().max(1),
+                        bram8: branch_fifo_bram(plan, stage.id, FpRep::Int8),
+                        bram16: branch_fifo_bram(plan, stage.id, FpRep::Int16),
+                        src_max,
+                    }
+                }
+                LayerKind::Upsample { .. } => {
+                    let out = stage.output;
+                    StagePre::Upsample {
+                        occupancy: (out.w + blank.back_porch + blank.front_porch) * out.h,
+                        fill: inp.w + 4,
+                        row_words: inp.w * inp.c,
+                    }
+                }
+                LayerKind::SpatialPyramidPool { k } => {
+                    let pool =
+                        PoolPe { k: *k, stride: 1, fm_w: inp.w, fm_h: inp.h, kind: PoolKind::Max };
+                    StagePre::Spp {
+                        cin: inp.c,
+                        pass,
+                        fill: 3 * (*k - 1) * (inp.w + blank.back_porch + blank.front_porch) + 8,
+                        pool_res: pool.resources(),
+                        skew_words: 6 * (*k - 1) * inp.w * inp.c,
+                    }
+                }
+                LayerKind::Relu => StagePre::Fixed {
+                    occupancy: 0,
+                    fill: 1,
+                    res_per_lane: Resources { dsp: 0, lut: RELU_LUT, ff: RELU_FF, bram: 0 },
+                    lanes_from_prev: true,
+                    extra: Resources::default(),
+                },
                 LayerKind::GlobalAvgPool => StagePre::Fixed {
                     occupancy: (inp.w + 4) * inp.h,
                     fill: 4,
@@ -574,12 +840,14 @@ impl Evaluator {
                     extra: Resources::default(),
                 },
             };
-            stages.push(stage);
+            stages.push((pre, in_src));
+            out_src.push(self_src);
         }
-        let (in_h, in_w, _) = net.input_dims();
+        let (in_h, in_w, _) = plan.input_dims;
         Ok(Evaluator {
             stages,
-            bounds: net.conv_filter_bounds(),
+            lane_pool,
+            bounds: plan.conv_bounds(),
             source: (in_w + blank.back_porch + blank.front_porch) * in_h,
             clock_mhz: device.clock_mhz,
             budget: device.budget,
@@ -590,9 +858,7 @@ impl Evaluator {
         &self.bounds
     }
 
-    /// Allocation-free evaluation; semantics identical to [`evaluate`]
-    /// (cross-checked by `fast_eval_matches_full` below).
-    pub fn objectives(&self, parallelism: &[usize], rep: FpRep) -> Result<FastEval, DesignError> {
+    fn check(&self, parallelism: &[usize]) -> Result<(), DesignError> {
         if parallelism.len() != self.bounds.len() {
             return Err(DesignError::ArityMismatch {
                 got: parallelism.len(),
@@ -604,23 +870,31 @@ impl Evaluator {
                 return Err(DesignError::OutOfBounds { layer: i, p, ub });
             }
         }
+        Ok(())
+    }
+
+    /// Allocation-free evaluation; semantics identical to [`evaluate`]
+    /// (cross-checked by `fast_eval_matches_full` below, chain and
+    /// branchy networks alike). Conv-like stages appear in gene order in
+    /// `stages`, so a running slot counter indexes `parallelism` exactly
+    /// as the plan's `conv_slot` would.
+    pub fn objectives(&self, parallelism: &[usize], rep: FpRep) -> Result<FastEval, DesignError> {
+        self.check(parallelism)?;
         let simd = if rep == FpRep::Int8 { 2 } else { 1 };
         let mut total = Resources::default();
         let mut total_pes = 0usize;
         let mut conv_idx = 0usize;
-        let mut prev_p = 1usize;
         let mut fill_sum = 0usize;
         let mut serialized = 0usize;
         let mut period = self.source;
-        let blank = Blanking::default();
-        let _ = blank;
 
-        for stage in &self.stages {
-            match *stage {
+        for &(pre, in_src) in &self.stages {
+            let in_lanes = lanes_of(in_src, parallelism, &self.lane_pool);
+            match pre {
                 StagePre::Conv { filters, cin, pass, fill, res16, res8 } => {
                     let p = parallelism[conv_idx];
                     conv_idx += 1;
-                    let lanes_in = prev_p.min(cin).max(1);
+                    let lanes_in = in_lanes.min(cin).max(1);
                     let pe_count = p * lanes_in;
                     let serial = filters.div_ceil(p * simd) * cin.div_ceil(lanes_in);
                     let occ = pass * serial;
@@ -632,7 +906,6 @@ impl Evaluator {
                         serialized += occ;
                     }
                     period = period.max(occ);
-                    prev_p = p;
                 }
                 StagePre::DwConv { cin, pass, fill, res16, res8 } => {
                     let p = parallelism[conv_idx];
@@ -648,10 +921,9 @@ impl Evaluator {
                         serialized += occ;
                     }
                     period = period.max(occ);
-                    prev_p = lanes;
                 }
                 StagePre::Pool { cin, pass, fill, res } => {
-                    let lanes = prev_p.min(cin).max(1);
+                    let lanes = in_lanes.min(cin).max(1);
                     let serial = cin.div_ceil(lanes);
                     let occ = pass * serial;
                     total = total.add(&res.scale(lanes));
@@ -662,7 +934,7 @@ impl Evaluator {
                     period = period.max(occ);
                 }
                 StagePre::Fc { out, cin, fm_w, fm_h, fill } => {
-                    let n_pe = prev_p.min(cin).max(1);
+                    let n_pe = in_lanes.min(cin).max(1);
                     let pe = FcPe { fc_out: out, n_pe, channels: cin, fm_w, fm_h };
                     let occ = pe.latency_cycles(Blanking::default());
                     total = total.add(&pe.resources());
@@ -673,10 +945,43 @@ impl Evaluator {
                     period = period.max(occ);
                 }
                 StagePre::Fixed { occupancy, fill, res_per_lane, lanes_from_prev, extra } => {
-                    let lanes = if lanes_from_prev { prev_p } else { 1 };
+                    let lanes = if lanes_from_prev { in_lanes } else { 1 };
                     total = total.add(&res_per_lane.scale(lanes)).add(&extra);
                     fill_sum += fill;
                     period = period.max(occupancy);
+                }
+                StagePre::Concat { n_in, bram8, bram16, src_max } => {
+                    let lanes = lanes_of(src_max, parallelism, &self.lane_pool);
+                    total = total.add(&Resources {
+                        dsp: 0,
+                        lut: CONCAT_MUX_LUT * n_in * lanes,
+                        ff: CONCAT_MUX_FF * n_in * lanes,
+                        bram: if rep == FpRep::Int8 { bram8 } else { bram16 },
+                    });
+                    fill_sum += 2;
+                }
+                StagePre::Upsample { occupancy, fill, row_words } => {
+                    total = total.add(&Resources {
+                        dsp: 0,
+                        lut: UPSAMPLE_LUT * in_lanes,
+                        ff: UPSAMPLE_FF * in_lanes,
+                        bram: fifo_bram(row_words, rep),
+                    });
+                    fill_sum += fill;
+                    period = period.max(occupancy);
+                }
+                StagePre::Spp { cin, pass, fill, pool_res, skew_words } => {
+                    let lanes = in_lanes.min(cin).max(1);
+                    total = total.add(&pool_res.scale(3 * lanes)).add(&Resources {
+                        dsp: 0,
+                        lut: CONCAT_MUX_LUT * 4 * lanes,
+                        ff: CONCAT_MUX_FF * 4 * lanes,
+                        bram: fifo_bram(skew_words, rep),
+                    });
+                    fill_sum += fill;
+                    let occ = pass * 4;
+                    serialized += occ;
+                    period = period.max(occ);
                 }
             }
         }
@@ -698,30 +1003,19 @@ impl Evaluator {
         rep: FpRep,
         out: &mut Vec<usize>,
     ) -> Result<(), DesignError> {
-        if parallelism.len() != self.bounds.len() {
-            return Err(DesignError::ArityMismatch {
-                got: parallelism.len(),
-                want: self.bounds.len(),
-            });
-        }
-        for (i, (&p, &ub)) in parallelism.iter().zip(&self.bounds).enumerate() {
-            if p == 0 || p > ub {
-                return Err(DesignError::OutOfBounds { layer: i, p, ub });
-            }
-        }
+        self.check(parallelism)?;
         out.clear();
         let simd = if rep == FpRep::Int8 { 2 } else { 1 };
         let mut conv_idx = 0usize;
-        let mut prev_p = 1usize;
-        for stage in &self.stages {
-            match *stage {
+        for &(pre, in_src) in &self.stages {
+            match pre {
                 StagePre::Conv { filters, cin, pass, .. } => {
                     let p = parallelism[conv_idx];
                     conv_idx += 1;
-                    let lanes_in = prev_p.min(cin).max(1);
+                    let in_lanes = lanes_of(in_src, parallelism, &self.lane_pool);
+                    let lanes_in = in_lanes.min(cin).max(1);
                     let serial = filters.div_ceil(p * simd) * cin.div_ceil(lanes_in);
                     out.push(pass * serial);
-                    prev_p = p;
                 }
                 StagePre::DwConv { cin, pass, .. } => {
                     let p = parallelism[conv_idx];
@@ -729,7 +1023,6 @@ impl Evaluator {
                     let lanes = p.min(cin).max(1);
                     let serial = cin.div_ceil(lanes * simd);
                     out.push(pass * serial);
-                    prev_p = lanes;
                 }
                 _ => {}
             }
@@ -845,7 +1138,7 @@ mod tests {
     fn conv_occupancies_match_full_mappings() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(33);
-        for net in [zoo::mnist(), zoo::cifar10(), zoo::mobilenet_v2()] {
+        for net in [zoo::mnist(), zoo::cifar10(), zoo::mobilenet_v2(), zoo::unet_tiny()] {
             let ev = Evaluator::new(&net, &ZYNQ_7100).unwrap();
             let bounds = net.conv_filter_bounds();
             let conv_ids = net.conv_layer_ids();
@@ -969,13 +1262,45 @@ mod tests {
     }
 
     #[test]
+    fn branchy_nets_pay_merge_costs() {
+        // the faithful yolov5l carries Concat/Upsample/SPPF stages whose
+        // branch FIFOs and mux logic must land in the resource model
+        let net = zoo::yolov5l();
+        let plan = passes::schedule(&net).unwrap();
+        let cfg = DesignConfig::uniform(&net, 2, FpRep::Int8);
+        let eval = evaluate_plan(&plan, &cfg, &ZYNQ_7100).unwrap();
+        let concat_stage = plan
+            .stages
+            .iter()
+            .find(|s| matches!(s.kind, LayerKind::Concat { .. }))
+            .expect("yolov5l has concats");
+        let m = &eval.mappings[concat_stage.id];
+        assert!(m.resources.bram > 0, "branch FIFO BRAM missing");
+        assert!(m.resources.lut > 0, "concat mux LUTs missing");
+        let spp = plan
+            .stages
+            .iter()
+            .find(|s| matches!(s.kind, LayerKind::SpatialPyramidPool { .. }))
+            .expect("yolov5l has an SPPF");
+        assert!(eval.mappings[spp.id].serial_factor > 1);
+    }
+
+    #[test]
     fn fast_eval_matches_full() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(21);
-        for net in [zoo::mnist(), zoo::svhn(), zoo::cifar10(), zoo::mobilenet_v2()] {
+        for net in [
+            zoo::mnist(),
+            zoo::svhn(),
+            zoo::cifar10(),
+            zoo::mobilenet_v2(),
+            zoo::unet_tiny(),
+            zoo::yolov5l(),
+        ] {
             let ev = Evaluator::new(&net, &ZYNQ_7100).unwrap();
             let bounds = net.conv_filter_bounds();
-            for _ in 0..25 {
+            let iters = if bounds.len() > 60 { 4 } else { 25 };
+            for _ in 0..iters {
                 let parallelism: Vec<usize> =
                     bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect();
                 let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };

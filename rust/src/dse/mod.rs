@@ -382,11 +382,15 @@ impl Engine<'_> {
     }
 }
 
-/// Run the MOGA (Algorithm 1).
+/// Run the MOGA (Algorithm 1). The chromosome is laid out in the
+/// StagePlan's gene order — one slot per conv-like *stage* — so branchy
+/// networks (concat/upsample/SPP merges between convs) explore exactly
+/// like chains; the bounds come from the scheduled plan via the
+/// [`design::Evaluator`].
 pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
-    let bounds = net.conv_filter_bounds();
-    assert!(!bounds.is_empty(), "network has no conv layers to map");
     let evaluator = design::Evaluator::new(net, device).expect("valid network");
+    let bounds = evaluator.bounds().to_vec();
+    assert!(!bounds.is_empty(), "network has no conv stages to map");
     let threads = cfg.threads.max(1);
     let t0 = Instant::now();
 

@@ -76,10 +76,44 @@ impl NetworkBuilder {
         self
     }
 
+    pub fn relu(mut self) -> Self {
+        let n = format!("relu{}", self.layers.len());
+        self.push(n, LayerKind::Relu);
+        self
+    }
+
+    pub fn upsample(mut self, factor: usize) -> Self {
+        let n = format!("up{}", self.layers.len());
+        self.push(n, LayerKind::Upsample { factor });
+        self
+    }
+
+    /// SPPF-style spatial pyramid pool (three cascaded stride-1 `k x k`
+    /// max pools, four-tap concat to 4x channels).
+    pub fn sppf(mut self, k: usize) -> Self {
+        let n = format!("sppf{}", self.layers.len());
+        self.push(n, LayerKind::SpatialPyramidPool { k });
+        self
+    }
+
     /// Mark the current tail as the start of a residual block; returns a
     /// token to merge later with [`Self::residual_add`].
     pub fn fork(&self) -> usize {
         self.tail
+    }
+
+    /// Id of the most recently appended layer — a token for later
+    /// [`Self::branch_from`] / [`Self::concat`] wiring.
+    pub fn mark(&self) -> usize {
+        self.tail
+    }
+
+    /// Rewind the chain tail to an earlier layer: the next appended layer
+    /// consumes `id`'s output, opening a parallel branch of the graph.
+    pub fn branch_from(mut self, id: usize) -> Self {
+        assert!(id < self.layers.len(), "branch_from({id}) out of range");
+        self.tail = id;
+        self
     }
 
     /// Merge the current chain with the skip edge from `fork` (the paper's
@@ -88,6 +122,24 @@ impl NetworkBuilder {
         let n = format!("resadd{}", self.layers.len());
         let id = self.push(n, LayerKind::ResidualAdd { from: fork });
         self.connections.push((fork, id));
+        self
+    }
+
+    /// Channel-wise concatenation of `from` (all spatially equal). The
+    /// merge is connected to exactly these sources, in order — the chain
+    /// tail is NOT an implicit input.
+    pub fn concat(mut self, from: &[usize]) -> Self {
+        let id = self.layers.len();
+        for &f in from {
+            assert!(f < id, "concat source {f} out of range");
+            self.connections.push((f, id));
+        }
+        self.layers.push(Layer {
+            id,
+            name: format!("concat{id}"),
+            kind: LayerKind::Concat { from: from.to_vec() },
+        });
+        self.tail = id;
         self
     }
 
@@ -127,6 +179,55 @@ mod tests {
         // skip edge present
         let merge = net.layers.last().unwrap().id;
         assert!(net.connections.contains(&(fork, merge)));
+    }
+
+    #[test]
+    fn branch_and_concat_wiring() {
+        // two parallel conv branches off one stem, merged channel-wise
+        let mut b = NetworkBuilder::new("fork", 16, 16, 8).conv(8, 3, 1, Padding::Same, true);
+        let stem = b.mark();
+        b = b.conv(4, 1, 1, Padding::Same, true);
+        let left = b.mark();
+        b = b.branch_from(stem).conv(12, 3, 1, Padding::Same, true);
+        let right = b.mark();
+        b = b.concat(&[left, right]);
+        let merge = b.mark();
+        let net = b.conv(6, 1, 1, Padding::Same, true).build();
+        assert!(net.has_branches());
+        assert!(net.connections.contains(&(left, merge)));
+        assert!(net.connections.contains(&(right, merge)));
+        // the merge is NOT chained to the branch tail implicitly
+        assert_eq!(
+            net.connections.iter().filter(|&&(_, d)| d == merge).count(),
+            2
+        );
+        let s = crate::graph::shapes::infer(&net).unwrap();
+        assert_eq!(s.output(merge).c, 16);
+        assert_eq!(s.final_output().c, 6);
+    }
+
+    #[test]
+    fn upsample_and_sppf_shapes() {
+        let net = NetworkBuilder::new("u", 8, 8, 4)
+            .conv(4, 3, 2, Padding::Same, true)
+            .upsample(2)
+            .sppf(5)
+            .build();
+        let s = crate::graph::shapes::infer(&net).unwrap();
+        assert_eq!(s.output(2), crate::graph::FeatureShape { h: 8, w: 8, c: 4 });
+        assert_eq!(s.output(3), crate::graph::FeatureShape { h: 8, w: 8, c: 16 });
+    }
+
+    #[test]
+    fn concat_spatial_mismatch_rejected() {
+        let mut b = NetworkBuilder::new("bad", 16, 16, 4);
+        let stem = b.mark();
+        b = b.conv(4, 3, 2, Padding::Same, true); // 8x8
+        let small = b.mark();
+        b = b.branch_from(stem).conv(4, 3, 1, Padding::Same, true); // 16x16
+        let big = b.mark();
+        let net = b.concat(&[small, big]).build_unchecked();
+        assert!(net.validate().is_err());
     }
 
     #[test]

@@ -1,17 +1,28 @@
-//! CNN graph IR — the input language of NeuroForge (Sec. III-A).
+//! CNN dataflow-graph IR — the input language of NeuroForge (Sec. III-A).
 //!
-//! The parser/builder produce a [`Network`]: an ordered layer list plus a
-//! connection table. Sequential CNNs are strict chains; residual
-//! architectures add skip edges that converge in [`LayerKind::ResidualAdd`]
-//! layers (the paper fuses main/shortcut paths into modular blocks based
-//! on graph connectivity).
+//! The parser/builder produce a [`Network`]: a layer list in topological
+//! order plus an explicit connection table (the dataflow edges).
+//! Sequential CNNs are strict chains; residual architectures add skip
+//! edges that converge in [`LayerKind::ResidualAdd`] layers; branchy
+//! topologies (CSP blocks, FPN/PAN necks, U-Nets) fork the stream and
+//! re-merge it through [`LayerKind::Concat`] (multi-input, channel-wise)
+//! with [`LayerKind::Upsample`] / [`LayerKind::SpatialPyramidPool`]
+//! covering the remaining detector-family constructs.
+//!
+//! Downstream consumers do not walk this layer list directly: the
+//! [`passes`] pipeline (canonicalize -> fuse -> schedule) lowers a
+//! validated `Network` into a [`passes::StagePlan`] of streaming stages
+//! with per-edge FIFO requirements, and `design`/`sim`/`rtl`/`dse`/
+//! `morph` all consume the plan.
 
 pub mod builder;
 pub mod parser;
+pub mod passes;
 pub mod shapes;
 pub mod zoo;
 
 pub use builder::NetworkBuilder;
+pub use passes::{schedule, StagePlan};
 pub use shapes::{FeatureShape, ShapeError};
 
 /// Spatial padding mode of a conv layer.
@@ -46,6 +57,20 @@ pub enum LayerKind {
     Fc { out: usize, relu: bool },
     /// Element-wise addition merging a skip edge from `from` (layer id).
     ResidualAdd { from: usize },
+    /// Channel-wise concatenation of the listed source layers, in order.
+    /// Unlike `ResidualAdd` the inputs are fully explicit: the layer is
+    /// connected to exactly the ids in `from` (all spatially equal).
+    Concat { from: Vec<usize> },
+    /// Nearest-neighbour spatial upsampling by an integer factor
+    /// (FPN top-down pathway).
+    Upsample { factor: usize },
+    /// SPPF-style pyramid: three cascaded stride-1 `k x k` max pools
+    /// whose taps (input + the three pool outputs) concatenate to 4x the
+    /// input channels. Spatial dimensions are preserved.
+    SpatialPyramidPool { k: usize },
+    /// Standalone rectifier (some exporters emit activation as its own
+    /// node); the pass pipeline fuses it into the producing conv/FC.
+    Relu,
     /// Final classifier non-linearity (optional, streamed inline).
     Softmax,
 }
@@ -60,7 +85,11 @@ pub struct Layer {
 
 /// A parsed network: layers in topological (stream) order plus the
 /// connection table (src -> dst layer ids). For sequential models the
-/// table is the chain `(i, i+1)`; residual models add skip edges.
+/// table is the chain `(i, i+1)`; residual models add skip edges and
+/// branchy models add fork edges (`builder::NetworkBuilder::branch_from`)
+/// plus the multi-input edges of `Concat` merges. `validate` enforces
+/// that every edge points forward, so layer-id order is always a valid
+/// topological order of the dataflow graph.
 #[derive(Debug, Clone)]
 pub struct Network {
     pub name: String,
@@ -106,6 +135,14 @@ impl Network {
             .any(|l| matches!(l.kind, LayerKind::ResidualAdd { .. }))
     }
 
+    /// True if the network forks into parallel branches that re-merge
+    /// through `Concat` (CSP / FPN / U-Net style topologies).
+    pub fn has_branches(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| matches!(l.kind, LayerKind::Concat { .. }))
+    }
+
     /// Total trainable parameters (weights + biases), following shapes.
     pub fn count_params(&self) -> Result<usize, ShapeError> {
         let shapes = shapes::infer(self)?;
@@ -139,9 +176,20 @@ impl Network {
         Ok(total)
     }
 
-    /// Validate graph structure: ids contiguous, connections reference
-    /// existing layers, ResidualAdd sources precede their merge point.
+    /// Validate graph structure AND shape feasibility (runs full shape
+    /// inference). The pass pipeline uses [`Self::validate_structure`] +
+    /// its own single inference instead, so `schedule()` never infers
+    /// shapes twice.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_structure()?;
+        shapes::infer(self).map_err(|e| e.to_string())?;
+        Ok(())
+    }
+
+    /// Structural validation only: ids contiguous, connections reference
+    /// existing layers and point forward, merge sources precede their
+    /// merge point. No shape inference.
+    pub fn validate_structure(&self) -> Result<(), String> {
         if self.layers.is_empty() {
             return Err("empty network".into());
         }
@@ -155,12 +203,40 @@ impl Network {
             if i > 0 && matches!(l.kind, LayerKind::Input { .. }) {
                 return Err(format!("layer {i}: Input must be unique/first"));
             }
-            if let LayerKind::ResidualAdd { from } = l.kind {
-                if from >= i {
-                    return Err(format!(
-                        "layer {i}: residual source {from} must precede the merge"
-                    ));
+            match &l.kind {
+                LayerKind::ResidualAdd { from } => {
+                    if *from >= i {
+                        return Err(format!(
+                            "layer {i}: residual source {from} must precede the merge"
+                        ));
+                    }
                 }
+                LayerKind::Concat { from } => {
+                    if from.len() < 2 {
+                        return Err(format!(
+                            "layer {i}: concat needs at least 2 inputs, has {}",
+                            from.len()
+                        ));
+                    }
+                    for &f in from {
+                        if f >= i {
+                            return Err(format!(
+                                "layer {i}: concat source {f} must precede the merge"
+                            ));
+                        }
+                    }
+                }
+                LayerKind::Upsample { factor } => {
+                    if *factor == 0 {
+                        return Err(format!("layer {i}: upsample factor must be >= 1"));
+                    }
+                }
+                LayerKind::SpatialPyramidPool { k } => {
+                    if *k < 2 {
+                        return Err(format!("layer {i}: pyramid pool window must be >= 2"));
+                    }
+                }
+                _ => {}
             }
         }
         for &(s, d) in &self.connections {
@@ -171,7 +247,6 @@ impl Network {
                 return Err(format!("connection ({s},{d}) must be forward"));
             }
         }
-        shapes::infer(self).map_err(|e| e.to_string())?;
         Ok(())
     }
 }

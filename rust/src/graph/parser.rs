@@ -19,9 +19,59 @@
 //!   ]
 //! }
 //! ```
+//!
+//! Branchy topologies use `concat` (multi-input, `"from": [ids...]`),
+//! `upsample` (`"factor"`), `sppf` (`"k"`) and standalone `relu` nodes.
+//! Errors are actionable: unknown ops suggest the closest known op, and
+//! bad `from` references are reported with the layer names involved.
 
 use super::{Layer, LayerKind, Network, Padding};
 use crate::util::json::Json;
+
+/// Every op the descriptor format accepts (suggestion source).
+const KNOWN_OPS: &[&str] = &[
+    "conv",
+    "dwconv",
+    "maxpool",
+    "avgpool",
+    "gap",
+    "global_avg_pool",
+    "fc",
+    "residual_add",
+    "concat",
+    "upsample",
+    "sppf",
+    "spatial_pyramid_pool",
+    "relu",
+    "softmax",
+];
+
+/// Levenshtein distance, for did-you-mean suggestions on unknown ops.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest known op within edit distance 2, if any.
+fn suggest_op(unknown: &str) -> Option<&'static str> {
+    KNOWN_OPS
+        .iter()
+        .map(|&op| (edit_distance(unknown, op), op))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, op)| op)
+}
 
 #[derive(Debug)]
 pub enum ParseError {
@@ -108,6 +158,19 @@ pub fn parse(text: &str) -> Result<Network, ParseError> {
             .get("type")
             .and_then(Json::as_str)
             .ok_or_else(|| schema(format!("{ctx}: missing 'type'")))?;
+        // a `from` reference must name an already-parsed layer; report the
+        // offending reference with layer *names*, not bare indices
+        let check_from = |from: usize, layers: &[Layer]| -> Result<(), ParseError> {
+            if from < layers.len() {
+                return Ok(());
+            }
+            let last = layers.last().map(|l| l.name.as_str()).unwrap_or("input");
+            Err(schema(format!(
+                "{ctx} ('{ty}'): 'from' references layer {from}, but only \
+                 layers 0..={} exist here (latest is '{last}')",
+                layers.len() - 1
+            )))
+        };
         let kind = match ty {
             "conv" => LayerKind::Conv {
                 filters: req_usize(desc, "filters", &ctx)?,
@@ -135,20 +198,62 @@ pub fn parse(text: &str) -> Result<Network, ParseError> {
                 out: req_usize(desc, "out", &ctx)?,
                 relu: opt_bool(desc, "relu", false),
             },
-            "residual_add" => LayerKind::ResidualAdd {
-                from: req_usize(desc, "from", &ctx)?,
-            },
+            "residual_add" => {
+                let from = req_usize(desc, "from", &ctx)?;
+                check_from(from, &layers)?;
+                LayerKind::ResidualAdd { from }
+            }
+            "concat" => {
+                let from = desc
+                    .get("from")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| {
+                        schema(format!("{ctx} ('concat'): missing 'from' id array"))
+                    })?;
+                if from.len() < 2 {
+                    return Err(schema(format!(
+                        "{ctx} ('concat'): needs at least 2 'from' inputs, has {}",
+                        from.len()
+                    )));
+                }
+                for &f in &from {
+                    check_from(f, &layers)?;
+                }
+                LayerKind::Concat { from }
+            }
+            "upsample" => LayerKind::Upsample { factor: opt_usize(desc, "factor", 2) },
+            "sppf" | "spatial_pyramid_pool" => {
+                LayerKind::SpatialPyramidPool { k: opt_usize(desc, "k", 5) }
+            }
+            "relu" => LayerKind::Relu,
             "softmax" => LayerKind::Softmax,
-            other => return Err(schema(format!("{ctx}: unknown type '{other}'"))),
+            other => {
+                let hint = suggest_op(other)
+                    .map(|s| format!(" (did you mean '{s}'?)"))
+                    .unwrap_or_default();
+                return Err(schema(format!(
+                    "{ctx}: unknown type '{other}'{hint} — known ops: {}",
+                    KNOWN_OPS.join(", ")
+                )));
+            }
         };
         let lname = desc
             .get("name")
             .and_then(Json::as_str)
             .map(str::to_string)
             .unwrap_or_else(|| format!("{ty}{id}"));
-        connections.push((id - 1, id));
-        if let LayerKind::ResidualAdd { from } = kind {
-            connections.push((from, id));
+        match &kind {
+            LayerKind::Concat { from } => {
+                // explicit multi-input merge: connected to exactly `from`
+                for &f in from {
+                    connections.push((f, id));
+                }
+            }
+            LayerKind::ResidualAdd { from } => {
+                connections.push((id - 1, id));
+                connections.push((*from, id));
+            }
+            _ => connections.push((id - 1, id)),
         }
         layers.push(Layer { id, name: lname, kind });
     }
@@ -208,6 +313,80 @@ mod tests {
     fn unknown_type_rejected() {
         let e = parse(r#"{"input":[8,8,1],"layers":[{"type":"lstm"}]}"#);
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn unknown_type_suggests_closest_op() {
+        let e = parse(r#"{"input":[8,8,1],"layers":[{"type":"convv","filters":4,"k":3}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("did you mean 'conv'"), "{e}");
+        let e2 = parse(r#"{"input":[8,8,1],"layers":[{"type":"upsamle"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e2.contains("did you mean 'upsample'"), "{e2}");
+        // hopeless typos still list the known ops
+        let e3 = parse(r#"{"input":[8,8,1],"layers":[{"type":"transformer"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e3.contains("known ops:") && e3.contains("concat"), "{e3}");
+    }
+
+    #[test]
+    fn parses_branchy_ops() {
+        let net = parse(
+            r#"{"name":"b","input":[8,8,4],"layers":[
+                {"type":"conv","filters":4,"k":3,"name":"stem"},
+                {"type":"upsample","factor":2},
+                {"type":"conv","filters":4,"k":3,"stride":2},
+                {"type":"concat","from":[1,3]},
+                {"type":"sppf","k":3},
+                {"type":"relu"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(net.has_branches());
+        // concat is connected to exactly its `from` list
+        assert!(net.connections.contains(&(1, 4)) && net.connections.contains(&(3, 4)));
+        assert_eq!(net.connections.iter().filter(|&&(_, d)| d == 4).count(), 2);
+        let s = crate::graph::shapes::infer(&net).unwrap();
+        assert_eq!(s.output(4).c, 8);
+        assert_eq!(s.output(5).c, 32);
+    }
+
+    #[test]
+    fn bad_from_reported_with_layer_names() {
+        let e = parse(
+            r#"{"input":[8,8,1],"layers":[
+                {"type":"conv","filters":4,"k":3,"name":"stem"},
+                {"type":"concat","from":[1,9]}
+            ]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("references layer 9"), "{e}");
+        assert!(e.contains("'stem'"), "{e}");
+        let e2 = parse(
+            r#"{"input":[4,4,2],"layers":[
+                {"type":"residual_add","from":7}
+            ]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e2.contains("references layer 7") && e2.contains("'input'"), "{e2}");
+    }
+
+    #[test]
+    fn concat_arity_checked() {
+        let e = parse(
+            r#"{"input":[8,8,1],"layers":[
+                {"type":"conv","filters":4,"k":3},
+                {"type":"concat","from":[1]}
+            ]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("at least 2"), "{e}");
     }
 
     #[test]

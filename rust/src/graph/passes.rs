@@ -1,0 +1,581 @@
+//! Pass pipeline: lowers a validated [`Network`] into a [`StagePlan`] —
+//! the scheduled streaming-dataflow form every downstream consumer
+//! (`design`, `sim`, `rtl`, `dse`, `morph`) reads instead of walking the
+//! raw layer list.
+//!
+//! Three passes run in sequence:
+//!
+//! 1. **canonicalize** — fold standalone [`LayerKind::Relu`] nodes into
+//!    their producing conv/FC (exporters often emit activation as its own
+//!    node; the hardware fuses it into the PE's output stage for free).
+//!    Ids are renumbered densely and every `from` reference is remapped.
+//! 2. **fuse / block grouping** — conv-like stages are numbered into
+//!    *gate blocks* (the NeuroMorph clock-gate bits: gate block `i` is
+//!    the i-th conv/dwconv stage in stream order, and the non-conv
+//!    stages it dominates ride on the same enable). Chains keep the
+//!    legacy "one bit per conv layer" semantics exactly.
+//! 3. **schedule** — emit stages in topological order with explicit
+//!    dataflow edges. Layer-id order *is* a topological order
+//!    (`Network::validate` rejects non-forward edges), and the pass
+//!    re-verifies producer-before-consumer for every edge. Each edge
+//!    carries its FIFO/buffer requirement:
+//!
+//!    * `Stream` — in-band pipeline edge; buffering lives in the
+//!      consumer's line buffers, zero extra words.
+//!    * `Skip` — residual shortcut; folded into the adder's register
+//!      FIFO (the legacy `ResidualAdd` LUT/FF cost), zero extra words.
+//!    * `Branch` — a non-primary `Concat` input. The merge must
+//!      re-synchronize branches of different latency, so the edge
+//!      buffers its full source feature map (`h*w*c` words); `design`
+//!      turns the words into 18 Kb BRAM at the datapath width.
+//!
+//! The plan also fixes the **DSE gene order**: `conv_stage_ids[g]` is the
+//! stage that chromosome slot `g` parallelizes, with bounds
+//! [`StagePlan::conv_bounds`] — identical to the legacy
+//! `Network::conv_filter_bounds` order, so chromosomes and
+//! `BENCH_dse.json` stay comparable.
+
+use super::shapes::{self, FeatureShape};
+use super::{Layer, LayerKind, Network};
+use crate::util::json::Json;
+
+/// Error raised by the pass pipeline.
+#[derive(Debug)]
+pub enum PassError {
+    Shape(shapes::ShapeError),
+    Invalid(String),
+}
+
+impl std::fmt::Display for PassError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PassError::Shape(e) => write!(f, "pass pipeline: {e}"),
+            PassError::Invalid(msg) => write!(f, "pass pipeline: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PassError {}
+
+impl From<shapes::ShapeError> for PassError {
+    fn from(e: shapes::ShapeError) -> Self {
+        PassError::Shape(e)
+    }
+}
+
+/// How an edge of the scheduled dataflow graph is buffered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// In-band pipeline edge (line buffers inside the consumer).
+    Stream,
+    /// Residual shortcut (register FIFO inside the adder).
+    Skip,
+    /// Fork/merge branch: buffers its full source fmap for re-sync.
+    Branch,
+}
+
+/// One scheduled dataflow edge with its buffering requirement.
+#[derive(Debug, Clone)]
+pub struct EdgeBuf {
+    /// producing stage id
+    pub src: usize,
+    /// consuming stage id
+    pub dst: usize,
+    /// feature map crossing the edge (the producer's output)
+    pub shape: FeatureShape,
+    /// words of FIFO buffering the edge needs (0 for Stream/Skip)
+    pub fifo_words: usize,
+    pub kind: EdgeKind,
+}
+
+/// One streaming stage of the scheduled plan.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// stage id == canonical layer id (topological order)
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// primary (or, for Concat, merged) input shape
+    pub input: FeatureShape,
+    pub output: FeatureShape,
+    /// producing stage ids, primary first (Concat: the `from` list)
+    pub preds: Vec<usize>,
+    /// DSE chromosome slot driving this stage's parallelism (conv-like)
+    pub conv_slot: Option<usize>,
+    /// NeuroMorph clock-gate bit this stage toggles with (conv-like)
+    pub gate_block: Option<usize>,
+}
+
+impl Stage {
+    pub fn is_conv_like(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::DwConv { .. })
+    }
+}
+
+/// The scheduled plan: the single source of truth for every consumer.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub net_name: String,
+    /// input frame dimensions (h, w, c)
+    pub input_dims: (usize, usize, usize),
+    /// stages in topological (stream) order
+    pub stages: Vec<Stage>,
+    /// all dataflow edges with buffering requirements
+    pub edges: Vec<EdgeBuf>,
+    /// stage id per DSE chromosome slot, in gene order
+    pub conv_stage_ids: Vec<usize>,
+    /// number of NeuroMorph gate blocks (== conv-like stage count)
+    pub gate_blocks: usize,
+}
+
+impl StagePlan {
+    /// Per-gene parallelism upper bounds, in chromosome order — identical
+    /// to the legacy `Network::conv_filter_bounds`.
+    pub fn conv_bounds(&self) -> Vec<usize> {
+        self.conv_stage_ids
+            .iter()
+            .map(|&s| match self.stages[s].kind {
+                LayerKind::Conv { filters, .. } => filters,
+                LayerKind::DwConv { .. } => 1,
+                _ => unreachable!("conv_stage_ids only lists conv-like stages"),
+            })
+            .collect()
+    }
+
+    /// Total branch-FIFO words buffered at a merge stage's inputs.
+    pub fn branch_words_into(&self, stage: usize) -> usize {
+        self.edges
+            .iter()
+            .filter(|e| e.dst == stage && e.kind == EdgeKind::Branch)
+            .map(|e| e.fifo_words)
+            .sum()
+    }
+
+    /// True when the plan is a pure chain (every stage has <= 1 pred and
+    /// no branch buffering anywhere).
+    pub fn is_chain(&self) -> bool {
+        self.stages.iter().all(|s| s.preds.len() <= 1)
+    }
+
+    /// JSON view of the plan (the `graph dump` CLI payload).
+    pub fn to_json(&self) -> Json {
+        fn shape_json(s: FeatureShape) -> Json {
+            Json::Arr(vec![
+                Json::Num(s.h as f64),
+                Json::Num(s.w as f64),
+                Json::Num(s.c as f64),
+            ])
+        }
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("id".into(), Json::Num(s.id as f64));
+                o.insert("name".into(), Json::Str(s.name.clone()));
+                o.insert("op".into(), Json::Str(kind_name(&s.kind).into()));
+                o.insert("input".into(), shape_json(s.input));
+                o.insert("output".into(), shape_json(s.output));
+                o.insert(
+                    "preds".into(),
+                    Json::Arr(s.preds.iter().map(|&p| Json::Num(p as f64)).collect()),
+                );
+                if let Some(slot) = s.conv_slot {
+                    o.insert("conv_slot".into(), Json::Num(slot as f64));
+                }
+                if let Some(g) = s.gate_block {
+                    o.insert("gate_block".into(), Json::Num(g as f64));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("src".into(), Json::Num(e.src as f64));
+                o.insert("dst".into(), Json::Num(e.dst as f64));
+                o.insert(
+                    "kind".into(),
+                    Json::Str(
+                        match e.kind {
+                            EdgeKind::Stream => "stream",
+                            EdgeKind::Skip => "skip",
+                            EdgeKind::Branch => "branch",
+                        }
+                        .into(),
+                    ),
+                );
+                o.insert("fifo_words".into(), Json::Num(e.fifo_words as f64));
+                o.insert("shape".into(), shape_json(e.shape));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("name".into(), Json::Str(self.net_name.clone()));
+        root.insert(
+            "input".into(),
+            Json::Arr(vec![
+                Json::Num(self.input_dims.0 as f64),
+                Json::Num(self.input_dims.1 as f64),
+                Json::Num(self.input_dims.2 as f64),
+            ]),
+        );
+        root.insert("stages".into(), Json::Arr(stages));
+        root.insert("edges".into(), Json::Arr(edges));
+        root.insert(
+            "conv_bounds".into(),
+            Json::Arr(self.conv_bounds().iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        root.insert("gate_blocks".into(), Json::Num(self.gate_blocks as f64));
+        Json::Obj(root)
+    }
+}
+
+/// Short op mnemonic for dumps and reports.
+pub fn kind_name(kind: &LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Input { .. } => "input",
+        LayerKind::Conv { .. } => "conv",
+        LayerKind::DwConv { .. } => "dwconv",
+        LayerKind::MaxPool { .. } => "maxpool",
+        LayerKind::AvgPool { .. } => "avgpool",
+        LayerKind::GlobalAvgPool => "gap",
+        LayerKind::Fc { .. } => "fc",
+        LayerKind::ResidualAdd { .. } => "residual_add",
+        LayerKind::Concat { .. } => "concat",
+        LayerKind::Upsample { .. } => "upsample",
+        LayerKind::SpatialPyramidPool { .. } => "sppf",
+        LayerKind::Relu => "relu",
+        LayerKind::Softmax => "softmax",
+    }
+}
+
+/// Pass 1: fold standalone `Relu` nodes into their conv/FC producer,
+/// renumbering ids densely and remapping every `from` reference. A `Relu`
+/// whose producer cannot carry an activation (pools, merges, ...) is kept
+/// as its own pass-through stage. Networks without standalone `Relu`
+/// come back byte-identical.
+pub fn canonicalize(net: &Network) -> Result<Network, PassError> {
+    net.validate_structure().map_err(PassError::Invalid)?;
+    if !net.layers.iter().any(|l| matches!(l.kind, LayerKind::Relu)) {
+        return Ok(net.clone());
+    }
+    let preds = shapes::predecessors(net);
+    let n = net.layers.len();
+    // out-degree per layer: a relu only folds into a producer whose SOLE
+    // consumer it is — if anyone else taps the producer pre-activation
+    // (a fork), folding would silently hand them the activated stream
+    let mut out_deg = vec![0usize; n];
+    for &(s, d) in &net.connections {
+        if s < d && d < n {
+            out_deg[s] += 1;
+        }
+    }
+    let mut map: Vec<usize> = vec![0; n];
+    // old relu id -> old producer id it folds into
+    let mut fold_into: Vec<Option<usize>> = vec![None; n];
+    let mut layers: Vec<Layer> = Vec::new();
+
+    for (i, l) in net.layers.iter().enumerate() {
+        if matches!(l.kind, LayerKind::Relu) && i > 0 {
+            let p = preds[i].first().copied().unwrap_or(i - 1);
+            let fusable = matches!(
+                net.layers[p].kind,
+                LayerKind::Conv { .. } | LayerKind::DwConv { .. } | LayerKind::Fc { .. }
+            ) && out_deg[p] <= 1;
+            if fusable {
+                fold_into[i] = Some(p);
+                map[i] = map[p];
+                continue;
+            }
+        }
+        let id = layers.len();
+        map[i] = id;
+        layers.push(Layer { id, name: l.name.clone(), kind: l.kind.clone() });
+    }
+
+    for i in 0..n {
+        if let Some(p) = fold_into[i] {
+            match &mut layers[map[p]].kind {
+                LayerKind::Conv { relu, .. }
+                | LayerKind::DwConv { relu, .. }
+                | LayerKind::Fc { relu, .. } => *relu = true,
+                _ => unreachable!("fold target is conv-like by construction"),
+            }
+        }
+    }
+    for l in &mut layers {
+        match &mut l.kind {
+            LayerKind::ResidualAdd { from } => *from = map[*from],
+            LayerKind::Concat { from } => {
+                for f in from.iter_mut() {
+                    *f = map[*f];
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut connections: Vec<(usize, usize)> = Vec::new();
+    for &(s, d) in &net.connections {
+        let e = (map[s], map[d]);
+        if e.0 != e.1 && !connections.contains(&e) {
+            connections.push(e);
+        }
+    }
+    let canon = Network { name: net.name.clone(), layers, connections };
+    canon.validate_structure().map_err(PassError::Invalid)?;
+    Ok(canon)
+}
+
+/// Passes 2+3: canonicalize, group gate blocks and schedule the plan.
+/// Exactly ONE shape inference runs per call (it doubles as the shape
+/// validation), and relu-free networks are scheduled without cloning.
+pub fn schedule(net: &Network) -> Result<StagePlan, PassError> {
+    let canon: std::borrow::Cow<'_, Network> =
+        if net.layers.iter().any(|l| matches!(l.kind, LayerKind::Relu)) {
+            std::borrow::Cow::Owned(canonicalize(net)?)
+        } else {
+            net.validate_structure().map_err(PassError::Invalid)?;
+            std::borrow::Cow::Borrowed(net)
+        };
+    let canon: &Network = &canon;
+    let shp = shapes::infer(canon)?;
+    let preds = shapes::predecessors(canon);
+    let n = canon.layers.len();
+
+    let mut stages: Vec<Stage> = Vec::with_capacity(n);
+    let mut edges: Vec<EdgeBuf> = Vec::new();
+    let mut conv_stage_ids: Vec<usize> = Vec::new();
+
+    for l in &canon.layers {
+        let id = l.id;
+        // effective inputs, primary first; hand-assembled graphs without
+        // recorded edges fall back to the chain predecessor (mirrors
+        // shapes::infer)
+        let eff: Vec<usize> = match &l.kind {
+            LayerKind::Input { .. } => Vec::new(),
+            LayerKind::Concat { from } => from.clone(),
+            _ if preds[id].is_empty() && id > 0 => vec![id - 1],
+            _ => preds[id].clone(),
+        };
+        for &p in &eff {
+            if p >= id {
+                return Err(PassError::Invalid(format!(
+                    "stage {id} ({}) consumes later stage {p} — not schedulable",
+                    l.name
+                )));
+            }
+        }
+        match &l.kind {
+            LayerKind::Concat { .. } => {
+                for (i, &p) in eff.iter().enumerate() {
+                    let shape = shp.output(p);
+                    let (kind, words) = if i == 0 {
+                        (EdgeKind::Stream, 0)
+                    } else {
+                        (EdgeKind::Branch, shape.features())
+                    };
+                    edges.push(EdgeBuf { src: p, dst: id, shape, fifo_words: words, kind });
+                }
+            }
+            LayerKind::ResidualAdd { from } => {
+                for (i, &p) in eff.iter().enumerate() {
+                    let kind = if i > 0 || (p == *from && eff.len() == 1) {
+                        EdgeKind::Skip
+                    } else {
+                        EdgeKind::Stream
+                    };
+                    edges.push(EdgeBuf {
+                        src: p,
+                        dst: id,
+                        shape: shp.output(p),
+                        fifo_words: 0,
+                        kind,
+                    });
+                }
+            }
+            _ => {
+                for &p in &eff {
+                    edges.push(EdgeBuf {
+                        src: p,
+                        dst: id,
+                        shape: shp.output(p),
+                        fifo_words: 0,
+                        kind: EdgeKind::Stream,
+                    });
+                }
+            }
+        }
+        let conv_like =
+            matches!(l.kind, LayerKind::Conv { .. } | LayerKind::DwConv { .. });
+        let (conv_slot, gate_block) = if conv_like {
+            let slot = conv_stage_ids.len();
+            conv_stage_ids.push(id);
+            (Some(slot), Some(slot))
+        } else {
+            (None, None)
+        };
+        stages.push(Stage {
+            id,
+            name: l.name.clone(),
+            kind: l.kind.clone(),
+            input: shp.input(id),
+            output: shp.output(id),
+            preds: eff,
+            conv_slot,
+            gate_block,
+        });
+    }
+
+    let gate_blocks = conv_stage_ids.len();
+    // Load-bearing morph invariant: GateMask::depth_prefix and
+    // gate_mask_for size masks from the RAW network's conv count, while
+    // the simulator gates by the plan's gate_block indices. Any future
+    // pass that merges/reorders conv-like stages must renumber both
+    // sides together — fail loudly here rather than desync silently.
+    if gate_blocks != net.conv_layer_ids().len() {
+        return Err(PassError::Invalid(format!(
+            "pass pipeline changed the conv-stage count ({} -> {gate_blocks}); \
+             morph gate masks would desync",
+            net.conv_layer_ids().len()
+        )));
+    }
+    Ok(StagePlan {
+        net_name: canon.name.clone(),
+        input_dims: net.input_dims(),
+        stages,
+        edges,
+        conv_stage_ids,
+        gate_blocks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{zoo, NetworkBuilder, Padding};
+
+    #[test]
+    fn chain_plan_mirrors_layer_list() {
+        let net = zoo::mnist();
+        let plan = schedule(&net).unwrap();
+        assert_eq!(plan.stages.len(), net.layers.len());
+        assert!(plan.is_chain());
+        assert_eq!(plan.conv_bounds(), net.conv_filter_bounds());
+        assert_eq!(plan.gate_blocks, net.conv_layer_ids().len());
+        for s in &plan.stages {
+            for &p in &s.preds {
+                assert!(p < s.id, "producer after consumer");
+            }
+        }
+        // every edge unbuffered on a chain
+        assert!(plan.edges.iter().all(|e| e.fifo_words == 0));
+    }
+
+    #[test]
+    fn residual_plan_keeps_zero_cost_skips() {
+        let plan = schedule(&zoo::resnet50()).unwrap();
+        let skips: Vec<&EdgeBuf> =
+            plan.edges.iter().filter(|e| e.kind == EdgeKind::Skip).collect();
+        assert!(!skips.is_empty());
+        assert!(skips.iter().all(|e| e.fifo_words == 0));
+        assert_eq!(plan.branch_words_into(plan.stages.len() - 1), 0);
+    }
+
+    #[test]
+    fn concat_branches_get_full_fmap_fifos() {
+        let mut b = NetworkBuilder::new("y", 8, 8, 4).conv(4, 3, 1, Padding::Same, true);
+        let stem = b.mark();
+        b = b.conv(2, 1, 1, Padding::Same, true);
+        let left = b.mark();
+        b = b.branch_from(stem).conv(6, 1, 1, Padding::Same, true);
+        let right = b.mark();
+        b = b.concat(&[left, right]);
+        let merge = b.mark();
+        let net = b.build();
+        let plan = schedule(&net).unwrap();
+        assert!(!plan.is_chain());
+        // primary input streams, the other buffers its whole 8x8x6 fmap
+        assert_eq!(plan.branch_words_into(merge), 8 * 8 * 6);
+        let branch = plan
+            .edges
+            .iter()
+            .find(|e| e.kind == EdgeKind::Branch)
+            .expect("branch edge");
+        assert_eq!((branch.src, branch.dst), (right, merge));
+    }
+
+    #[test]
+    fn relu_fuses_into_producer() {
+        let net = NetworkBuilder::new("r", 8, 8, 1)
+            .conv(4, 3, 1, Padding::Same, false)
+            .relu()
+            .maxpool(2, 2)
+            .build();
+        let canon = canonicalize(&net).unwrap();
+        assert_eq!(canon.layers.len(), net.layers.len() - 1);
+        assert!(matches!(
+            canon.layers[1].kind,
+            LayerKind::Conv { relu: true, .. }
+        ));
+        // edges re-route around the folded node
+        assert!(canon.connections.contains(&(1, 2)));
+        // shape agreement pre/post fusion at the surviving frontier
+        let pre = crate::graph::shapes::infer(&net).unwrap();
+        let post = crate::graph::shapes::infer(&canon).unwrap();
+        assert_eq!(pre.final_output(), post.final_output());
+    }
+
+    #[test]
+    fn relu_not_fused_when_producer_is_forked() {
+        // conv feeds both a standalone relu AND a pre-activation branch
+        // consumer: folding would hand the branch the activated stream,
+        // so the relu must survive as its own stage
+        let mut b = NetworkBuilder::new("f", 8, 8, 2).conv(4, 3, 1, Padding::Same, false);
+        let stem = b.mark();
+        b = b.relu();
+        let act = b.mark();
+        b = b.branch_from(stem).conv(4, 1, 1, Padding::Same, false);
+        let side = b.mark();
+        let net = b.concat(&[act, side]).build();
+        let canon = canonicalize(&net).unwrap();
+        assert_eq!(canon.layers.len(), net.layers.len(), "no fold on forked producer");
+        assert!(matches!(canon.layers[stem].kind, LayerKind::Conv { relu: false, .. }));
+        assert!(matches!(canon.layers[act].kind, LayerKind::Relu));
+        let plan = schedule(&net).unwrap();
+        assert_eq!(plan.stages.len(), net.layers.len());
+    }
+
+    #[test]
+    fn unfusable_relu_stays_a_stage() {
+        let net = NetworkBuilder::new("r2", 8, 8, 2)
+            .maxpool(2, 2)
+            .relu()
+            .build();
+        let canon = canonicalize(&net).unwrap();
+        assert_eq!(canon.layers.len(), net.layers.len());
+        assert!(matches!(canon.layers[2].kind, LayerKind::Relu));
+        let plan = schedule(&net).unwrap();
+        assert_eq!(plan.stages.len(), 3);
+    }
+
+    #[test]
+    fn no_relu_network_is_untouched() {
+        let net = zoo::cifar10();
+        let canon = canonicalize(&net).unwrap();
+        assert_eq!(canon.layers, net.layers);
+        assert_eq!(canon.connections, net.connections);
+    }
+
+    #[test]
+    fn plan_json_shape() {
+        let plan = schedule(&zoo::mnist()).unwrap();
+        let j = plan.to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert!(back.get("stages").is_some());
+        assert!(back.get("gate_blocks").is_some());
+    }
+}

@@ -1,8 +1,11 @@
-//! Shape inference over the network graph.
+//! Shape inference over the network dataflow graph.
 //!
-//! Walks the stream order, tracking the feature-map dimensions each layer
-//! consumes and produces — the parameters (FM_H, FM_W, Ch_D) that feed
-//! the PE latency/resource models (Eqs. 1-11).
+//! Walks the layers in topological (id) order, resolving each layer's
+//! input from its incoming edges in the connection table — the feature-map
+//! dimensions (FM_H, FM_W, Ch_D) feed the PE latency/resource models
+//! (Eqs. 1-11). Multi-input merges (`Concat`) check spatial agreement and
+//! sum channels; layers with no recorded edge fall back to the chain
+//! predecessor `id - 1`, which keeps hand-assembled test graphs working.
 
 use super::{LayerKind, Network, Padding};
 
@@ -71,10 +74,24 @@ fn conv_out(size: usize, k: usize, stride: usize, padding: Padding) -> usize {
     }
 }
 
+/// Incoming edges per layer, in connection-table insertion order (the
+/// builder and parser push the primary/stream edge first).
+pub(crate) fn predecessors(net: &Network) -> Vec<Vec<usize>> {
+    let n = net.layers.len();
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(s, d) in &net.connections {
+        if s < d && d < n {
+            preds[d].push(s);
+        }
+    }
+    preds
+}
+
 /// Infer shapes for every layer, validating spatial feasibility.
 pub fn infer(net: &Network) -> Result<Shapes, ShapeError> {
     let mut inputs = Vec::with_capacity(net.layers.len());
     let mut outputs: Vec<FeatureShape> = Vec::with_capacity(net.layers.len());
+    let preds = predecessors(net);
 
     for layer in &net.layers {
         let err = |msg: String| ShapeError::Invalid {
@@ -82,10 +99,42 @@ pub fn infer(net: &Network) -> Result<Shapes, ShapeError> {
             name: layer.name.clone(),
             msg,
         };
+        // primary input: first recorded edge, chain fallback otherwise
         let prev = if layer.id == 0 {
             FeatureShape { h: 0, w: 0, c: 0 }
         } else {
-            outputs[layer.id - 1]
+            match preds[layer.id].first() {
+                Some(&p) => outputs[p],
+                None => outputs[layer.id - 1],
+            }
+        };
+        let prev = if let LayerKind::Concat { from } = &layer.kind {
+            // merged input: spatially equal sources, channels summed
+            let mut merged: Option<FeatureShape> = None;
+            for &f in from {
+                if f >= layer.id {
+                    return Err(err(format!(
+                        "concat source {f} does not precede the merge"
+                    )));
+                }
+                let s = outputs[f];
+                merged = Some(match merged {
+                    None => s,
+                    Some(m) => {
+                        if (m.h, m.w) != (s.h, s.w) {
+                            return Err(err(format!(
+                                "concat inputs disagree spatially: {}x{} vs {}x{} \
+                                 (source '{}')",
+                                m.h, m.w, s.h, s.w, net.layers[f].name
+                            )));
+                        }
+                        FeatureShape { h: m.h, w: m.w, c: m.c + s.c }
+                    }
+                });
+            }
+            merged.ok_or_else(|| err("concat has no inputs".into()))?
+        } else {
+            prev
         };
         inputs.push(prev);
         let out = match layer.kind {
@@ -135,6 +184,11 @@ pub fn infer(net: &Network) -> Result<Shapes, ShapeError> {
             LayerKind::GlobalAvgPool => FeatureShape { h: 1, w: 1, c: prev.c },
             LayerKind::Fc { out, .. } => FeatureShape { h: 1, w: 1, c: out },
             LayerKind::ResidualAdd { from } => {
+                if from >= layer.id {
+                    return Err(err(format!(
+                        "residual source {from} does not precede the merge"
+                    )));
+                }
                 let skip = outputs[from];
                 if skip != prev {
                     return Err(err(format!(
@@ -143,6 +197,31 @@ pub fn infer(net: &Network) -> Result<Shapes, ShapeError> {
                 }
                 prev
             }
+            // merged shape already computed above
+            LayerKind::Concat { .. } => prev,
+            LayerKind::Upsample { factor } => {
+                if factor == 0 {
+                    return Err(err("upsample factor must be >= 1".into()));
+                }
+                FeatureShape { h: prev.h * factor, w: prev.w * factor, c: prev.c }
+            }
+            LayerKind::SpatialPyramidPool { k } => {
+                if k < 2 {
+                    return Err(err("pyramid pool window must be >= 2".into()));
+                }
+                if prev.c == 0 {
+                    return Err(err("pyramid pool on empty frame".into()));
+                }
+                if prev.h < k || prev.w < k {
+                    return Err(err(format!(
+                        "frame {}x{} smaller than pyramid window {k}", prev.h, prev.w
+                    )));
+                }
+                // stride-1 same-padded pools preserve HxW; four taps
+                // (input + three cascaded pools) concatenate channel-wise
+                FeatureShape { h: prev.h, w: prev.w, c: 4 * prev.c }
+            }
+            LayerKind::Relu => prev,
             LayerKind::Softmax => prev,
         };
         outputs.push(out);

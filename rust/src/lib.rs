@@ -9,7 +9,8 @@
 //!   model, DistillCycle-trained and AOT-lowered to per-morph-path HLO
 //!   text artifacts (`make artifacts`).
 //! * **L3 (this crate)** — everything at and after deployment:
-//!   * [`graph`] — CNN IR, descriptor parser, model zoo (Table II)
+//!   * [`graph`] — dataflow-graph IR, descriptor parser, pass pipeline
+//!     (canonicalize → fuse → `StagePlan`), model zoo (Table II)
 //!   * [`pe`] — analytical PE models (Eqs. 1-11, Table I)
 //!   * [`design`] — design-point evaluation (Eqs. 12-15)
 //!   * [`dse`] — NeuroForge's multi-objective genetic DSE (Alg. 1)

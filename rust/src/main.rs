@@ -6,6 +6,7 @@
 //!                   --latency MS --threads N --no-memo]
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
 //! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
+//! forgemorph graph dump --model yolov5l        topology + StagePlan as JSON
 //! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
 //!                   --workers N --backend pjrt|sim|analytical]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
@@ -27,6 +28,7 @@ use forgemorph::report;
 use forgemorph::runtime::Engine;
 use forgemorph::sim::{self, GateMask};
 use forgemorph::util::cli::Args;
+use forgemorph::util::json::Json;
 use forgemorph::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -36,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         Some("dse") | Some("explore") => cmd_dse(&args),
         Some("rtl") => cmd_rtl(&args),
         Some("sim") => cmd_sim(&args),
+        Some("graph") => cmd_graph(&args),
         Some("serve") => cmd_serve(&args),
         Some("verify") => cmd_verify(&args),
         _ => {
@@ -49,12 +52,14 @@ const HELP: &str = "\
 forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
-                fig10, fig11, fig12, backends, all)
+                fig10, fig11, fig12, backends, graphs, all)
   dse|explore   NeuroForge design space exploration (--threads N fans the
                 fitness evaluation out; results are bit-identical for any
                 thread count. --no-memo disables the chromosome cache)
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
+  graph         graph dump --model M: topology + scheduled StagePlan
+                (stages, dataflow edges, FIFO words, gate blocks) as JSON
   serve         run the NeuroMorph serving demo (--workers N shards;
                 --backend pjrt needs AOT artifacts, sim/analytical run
                 self-contained)
@@ -62,7 +67,8 @@ commands:
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
     let name = args.get_or("model", "mnist");
-    zoo::by_name(name).with_context(|| format!("unknown model '{name}'"))
+    // the zoo error already lists every valid model name
+    Ok(zoo::by_name(name)?)
 }
 
 fn rep_for(args: &Args) -> FpRep {
@@ -130,8 +136,11 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
 fn cmd_rtl(args: &Args) -> anyhow::Result<()> {
     let net = net_for(args)?;
     let cfg = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
-    let eval = design::evaluate(&net, &cfg, &ZYNQ_7100)?;
-    let bundle = forgemorph::rtl::emit(&net, &cfg, &eval);
+    // one pass-pipeline schedule shared by evaluation and emission
+    let plan = forgemorph::graph::passes::schedule(&net)
+        .map_err(|e| anyhow::anyhow!("scheduling '{}': {e}", net.name))?;
+    let eval = design::evaluate_plan(&plan, &cfg, &ZYNQ_7100)?;
+    let bundle = forgemorph::rtl::emit_plan(&plan, &cfg, &eval);
     let out = PathBuf::from(args.get_or("out", "rtl_out"));
     bundle.write_to(&out)?;
     println!(
@@ -150,7 +159,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let mask = if let Some(d) = args.get("depth") {
         GateMask::depth_prefix(&net, d.parse().context("--depth")?)
     } else if let Some(wp) = args.get("width") {
-        GateMask::width(wp.parse::<f64>().context("--width")? / 100.0)
+        // validated boundary: an out-of-range width is an error, not a clamp
+        GateMask::try_width(wp.parse::<f64>().context("--width")? / 100.0)
+            .context("--width")?
     } else {
         GateMask::all_active()
     };
@@ -171,6 +182,52 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             st.name, st.passes, st.busy_cycles, st.gated
         );
     }
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("dump") => {}
+        other => bail!(
+            "graph: unknown subcommand {:?} (expected: graph dump --model M)",
+            other.unwrap_or("<none>")
+        ),
+    }
+    let net = net_for(args)?;
+    let plan = forgemorph::graph::passes::schedule(&net)
+        .map_err(|e| anyhow::anyhow!("scheduling '{}': {e}", net.name))?;
+    // topology (raw layer list + edges) alongside the scheduled plan
+    let mut layers = Vec::new();
+    for l in &net.layers {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("id".to_string(), Json::Num(l.id as f64));
+        o.insert("name".to_string(), Json::Str(l.name.clone()));
+        o.insert(
+            "op".to_string(),
+            Json::Str(forgemorph::graph::passes::kind_name(&l.kind).to_string()),
+        );
+        layers.push(Json::Obj(o));
+    }
+    let connections = net
+        .connections
+        .iter()
+        .map(|&(s, d)| Json::Arr(vec![Json::Num(s as f64), Json::Num(d as f64)]))
+        .collect();
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("model".to_string(), Json::Str(net.name.clone()));
+    root.insert(
+        "topology".to_string(),
+        Json::Obj(
+            [
+                ("layers".to_string(), Json::Arr(layers)),
+                ("connections".to_string(), Json::Arr(connections)),
+            ]
+            .into_iter()
+            .collect(),
+        ),
+    );
+    root.insert("stage_plan".to_string(), plan.to_json());
+    println!("{}", Json::Obj(root));
     Ok(())
 }
 

@@ -16,7 +16,30 @@ pub mod governor;
 pub mod schedule;
 
 use crate::graph::{shapes, LayerKind, Network};
-use crate::sim::GateMask;
+use crate::sim::{GateError, GateMask};
+
+/// A morph path that cannot be lowered onto the deployed fabric — the
+/// explicit error a corrupt manifest hits at the morph/governor boundary
+/// instead of silently running at a clamped width.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MorphError {
+    /// width percentage outside the deployable (10..=100] range
+    Width { path: String, pct: usize },
+}
+
+impl std::fmt::Display for MorphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MorphError::Width { path, pct } => write!(
+                f,
+                "morph path '{path}': width {pct}% outside the deployable \
+                 range (10..=100) — rejecting instead of clamping"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MorphError {}
 
 /// One morphable execution path (a (depth, width) pair with a dedicated
 /// output head — Fig. 9).
@@ -134,15 +157,21 @@ pub fn depth_ladder(net: &Network) -> Vec<MorphPath> {
         .collect()
 }
 
-/// Translate a morph path into the clock-gate mask the simulator/RTL use.
-pub fn gate_mask_for(net: &Network, path: &MorphPath) -> GateMask {
+/// Translate a morph path into the clock-gate mask the simulator/RTL
+/// use. Gate bits follow the StagePlan's gate-block numbering (== the
+/// network's conv-like stage order). A width outside the deployable
+/// range is an explicit error — the governor refuses the path instead of
+/// silently clamping a corrupt manifest to 10% width.
+pub fn gate_mask_for(net: &Network, path: &MorphPath) -> Result<GateMask, MorphError> {
     let n_blocks = net.conv_layer_ids().len();
-    if path.width_pct < 100 {
-        GateMask::width(path.width_pct as f64 / 100.0)
+    if path.width_pct != 100 {
+        GateMask::try_width(path.width_pct as f64 / 100.0).map_err(|_: GateError| {
+            MorphError::Width { path: path.name.clone(), pct: path.width_pct }
+        })
     } else if path.depth < n_blocks {
-        GateMask::depth_prefix(net, path.depth)
+        Ok(GateMask::depth_prefix(net, path.depth))
     } else {
-        GateMask::all_active()
+        Ok(GateMask::all_active())
     }
 }
 
@@ -184,12 +213,31 @@ pub(crate) mod tests {
     fn gate_masks() {
         let net = zoo::mnist();
         let reg = PathRegistry::new(sample_paths());
-        let full = gate_mask_for(&net, reg.by_name("d3_w100").unwrap());
+        let full = gate_mask_for(&net, reg.by_name("d3_w100").unwrap()).unwrap();
         assert!(full.block_active.is_empty() && full.width_fraction == 1.0);
-        let d1 = gate_mask_for(&net, reg.by_name("d1_w100").unwrap());
+        let d1 = gate_mask_for(&net, reg.by_name("d1_w100").unwrap()).unwrap();
         assert_eq!(d1.block_active, vec![true, false, false]);
-        let w50 = gate_mask_for(&net, reg.by_name("d3_w50").unwrap());
+        let w50 = gate_mask_for(&net, reg.by_name("d3_w50").unwrap()).unwrap();
         assert!((w50.width_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_manifest_width_is_rejected_not_clamped() {
+        let net = zoo::mnist();
+        for pct in [0usize, 5, 9, 101, 500] {
+            let path = MorphPath {
+                name: format!("d3_w{pct}"),
+                depth: 3,
+                width_pct: pct,
+                accuracy: 0.5,
+                params: 1,
+                macs: 1,
+            };
+            let err = gate_mask_for(&net, &path).unwrap_err();
+            let MorphError::Width { pct: got, .. } = err.clone();
+            assert_eq!(got, pct);
+            assert!(err.to_string().contains("rejecting"), "{err}");
+        }
     }
 
     #[test]

@@ -630,6 +630,48 @@ pub fn backends() -> String {
     s
 }
 
+/// Graph IR / pass-pipeline summary: scheduled StagePlan shape for the
+/// branchy zoo models — stage counts, dataflow edges, branch-FIFO
+/// buffering and the resulting evaluate-model costs. (The chain models
+/// schedule 1:1 onto their layer lists; the branchy ones are where the
+/// plan earns its keep.)
+pub fn graphs() -> String {
+    use crate::graph::passes::{self, EdgeKind};
+    let mut s = header("Graph IR: scheduled StagePlans (branchy zoo models)");
+    let _ = writeln!(
+        s,
+        "{:<12} {:>7} {:>7} {:>8} {:>9} {:>12} {:>11} {:>12}",
+        "model", "stages", "edges", "branches", "gates", "fifo words", "BRAM(int8)", "latency ms"
+    );
+    for name in ["yolov5l", "unet_tiny", "resnet50"] {
+        let net = zoo::by_name(name).unwrap();
+        let plan = passes::schedule(&net).unwrap();
+        let branch_edges =
+            plan.edges.iter().filter(|e| e.kind == EdgeKind::Branch).count();
+        let fifo_words: usize = plan.edges.iter().map(|e| e.fifo_words).sum();
+        let cfg = DesignConfig::uniform(&net, 2, FpRep::Int8);
+        let eval = design::evaluate_plan(&plan, &cfg, &ZYNQ_7100).unwrap();
+        let _ = writeln!(
+            s,
+            "{:<12} {:>7} {:>7} {:>8} {:>9} {:>12} {:>11} {:>12.3}",
+            name,
+            plan.stages.len(),
+            plan.edges.len(),
+            branch_edges,
+            plan.gate_blocks,
+            fifo_words,
+            eval.resources.bram,
+            eval.latency_ms()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "branch FIFOs buffer each non-primary concat input's full fmap for\n\
+         re-sync; chain models carry zero branch words by construction."
+    );
+    s
+}
+
 /// Everything, in paper order.
 pub fn all() -> String {
     let mut s = String::new();
@@ -645,6 +687,7 @@ pub fn all() -> String {
     s.push_str(&fig11());
     s.push_str(&fig12());
     s.push_str(&backends());
+    s.push_str(&graphs());
     s
 }
 
@@ -663,6 +706,7 @@ pub fn by_name(id: &str) -> Option<String> {
         "fig11" => fig11(),
         "fig12" => fig12(),
         "backends" => backends(),
+        "graphs" => graphs(),
         "all" => all(),
         _ => return None,
     })
@@ -786,10 +830,28 @@ mod tests {
     fn by_name_covers_everything() {
         for id in [
             "table1", "table2", "table3", "table4", "table5", "table6",
-            "fig8", "fig10", "fig11", "fig12", "backends",
+            "fig8", "fig10", "fig11", "fig12", "backends", "graphs",
         ] {
             assert!(by_name(id).is_some(), "{id}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn graphs_report_shows_branch_buffering() {
+        let g = graphs();
+        assert!(g.contains("yolov5l") && g.contains("unet_tiny"));
+        // resnet50's skip edges carry zero FIFO words; yolo's concats don't
+        let row = |name: &str| {
+            g.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap_or_else(|| panic!("{name} row missing"))
+                .split_whitespace()
+                .map(str::to_string)
+                .collect::<Vec<_>>()
+        };
+        let yolo_words: usize = row("yolov5l")[5].parse().unwrap();
+        let resnet_words: usize = row("resnet50")[5].parse().unwrap();
+        assert!(yolo_words > 0 && resnet_words == 0);
     }
 }

@@ -15,6 +15,7 @@ pub mod modules;
 pub mod verilog;
 
 use crate::design::{DesignConfig, DesignEval};
+use crate::graph::passes::{self, StagePlan};
 use crate::graph::{LayerKind, Network};
 use crate::pe::FpRep;
 
@@ -48,8 +49,16 @@ impl RtlBundle {
     }
 }
 
-/// Emit the full RTL bundle for a design point.
+/// Emit the full RTL bundle for a design point. Schedules the pass
+/// pipeline internally; holders of a [`StagePlan`] can use
+/// [`emit_plan`].
 pub fn emit(net: &Network, cfg: &DesignConfig, eval: &DesignEval) -> RtlBundle {
+    let plan = passes::schedule(net).expect("validated network");
+    emit_plan(&plan, cfg, eval)
+}
+
+/// Emit the full RTL bundle against a pre-scheduled plan.
+pub fn emit_plan(plan: &StagePlan, cfg: &DesignConfig, eval: &DesignEval) -> RtlBundle {
     let width = match cfg.rep {
         FpRep::Int8 => 8,
         FpRep::Int16 => 16,
@@ -62,10 +71,13 @@ pub fn emit(net: &Network, cfg: &DesignConfig, eval: &DesignEval) -> RtlBundle {
         ("pool_pe.v".to_string(), modules::pool_pe(width)),
         ("fc_pe.v".to_string(), modules::fc_pe(width)),
         ("conv_pe.v".to_string(), modules::conv_pe(width)),
+        ("concat_mux.v".to_string(), modules::concat_mux(width)),
+        ("upsample.v".to_string(), modules::upsample(width)),
+        ("spp_pe.v".to_string(), modules::spp_pe(width)),
         ("gate_ctrl.v".to_string(), modules::gate_ctrl()),
     ];
-    let top_name = format!("{}_top", sanitize(&net.name));
-    files.push((format!("{top_name}.v"), modules::top(net, cfg, eval, &top_name, width)));
+    let top_name = format!("{}_top", sanitize(&plan.net_name));
+    files.push((format!("{top_name}.v"), modules::top(plan, cfg, eval, &top_name, width)));
     RtlBundle { files, top_name }
 }
 
@@ -81,7 +93,7 @@ pub fn sanitize(name: &str) -> String {
     s
 }
 
-/// Count conv stages (for reporting emitted hierarchy).
+/// Count emitted hardware stages (for reporting emitted hierarchy).
 pub fn stage_count(net: &Network) -> usize {
     net.layers
         .iter()
@@ -93,6 +105,9 @@ pub fn stage_count(net: &Network) -> usize {
                     | LayerKind::MaxPool { .. }
                     | LayerKind::AvgPool { .. }
                     | LayerKind::Fc { .. }
+                    | LayerKind::Concat { .. }
+                    | LayerKind::Upsample { .. }
+                    | LayerKind::SpatialPyramidPool { .. }
             )
         })
         .count()
@@ -122,11 +137,38 @@ mod tests {
             "conv_pe.v",
             "pool_pe.v",
             "fc_pe.v",
+            "concat_mux.v",
+            "upsample.v",
+            "spp_pe.v",
             "gate_ctrl.v",
         ] {
             assert!(b.file(f).is_some(), "missing {f}");
         }
         assert_eq!(b.top_name, "mnist_8_16_32_top");
+    }
+
+    #[test]
+    fn branchy_top_wires_merges() {
+        let net = zoo::unet_tiny();
+        let cfg = design::DesignConfig::uniform(&net, 2, FpRep::Int16);
+        let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        let b = emit(&net, &cfg, &eval);
+        let top = b.file(&format!("{}.v", b.top_name)).unwrap();
+        assert!(top.contains("concat_mux #("), "no concat instance");
+        assert!(top.contains("upsample #("), "no upsample instance");
+        // module/endmodule stays balanced on a DAG top
+        assert_eq!(top.matches("module ").count(), top.matches("endmodule").count());
+    }
+
+    #[test]
+    fn yolo_top_instantiates_sppf() {
+        let net = zoo::yolov5l();
+        let cfg = design::DesignConfig::uniform(&net, 1, FpRep::Int8);
+        let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+        let b = emit(&net, &cfg, &eval);
+        let top = b.file(&format!("{}.v", b.top_name)).unwrap();
+        assert!(top.contains("spp_pe #("));
+        assert!(top.matches("concat_mux #(").count() >= 10, "yolo has many concats");
     }
 
     #[test]

@@ -12,7 +12,8 @@
 
 use super::verilog::{Port, VerilogWriter};
 use crate::design::{DesignConfig, DesignEval};
-use crate::graph::{LayerKind, Network};
+use crate::graph::passes::StagePlan;
+use crate::graph::LayerKind;
 
 /// Streaming control bus (Fig. 4): Valid, hStart, hEnd, vStart, vEnd.
 pub const CTRL_BITS: usize = 5;
@@ -373,9 +374,217 @@ pub fn gate_ctrl() -> String {
     w.finish()
 }
 
-/// The configured top-level: chains every stage of the design point.
+pub fn concat_mux(width: usize) -> String {
+    let mut w = VerilogWriter::new(
+        "concat_mux: channel-wise merge of N_IN branch streams. The\n\
+         primary branch streams through; the others drain from their\n\
+         re-sync FIFOs (BRAM, sized by the compiler's StagePlan) in\n\
+         channel order behind it.\n\
+         STRUCTURAL SKETCH (like the zero-weight PE banks): the producer\n\
+         is assumed idle between a frame's vEnd and the end of the drain\n\
+         phase — the frame-paced source of the analytical model provides\n\
+         exactly that gap; no ready/backpressure wire is emitted.",
+    );
+    w.module(
+        "concat_mux",
+        &[
+            ("WIDTH", width.to_string()),
+            ("N_IN", "2".into()),
+            ("FIFO_DEPTH", "1024".into()),
+        ],
+        &[
+            Port::input("clk", 1),
+            Port::input("rst", 1),
+            Port::input("en", 1),
+            Port::input("px_flat", 1),
+            Port::input("valid_flat", 1),
+            Port::input("ctrl_in", CTRL_BITS),
+            Port::output_reg("px_out", 1),
+            Port::output_reg("valid_out", 1),
+        ],
+    );
+    w.line("// flattened input buses: one lane per branch");
+    w.line("wire [N_IN*WIDTH-1:0] px_flat;");
+    w.line("wire [N_IN-1:0] valid_flat;");
+    w.line("output reg [WIDTH-1:0] px_out;");
+    w.line("// branch re-sync FIFOs (BRAM inferred); branch 0 bypasses.");
+    w.line("// Pointers wrap AT FIFO_DEPTH (not free-running). The");
+    w.line("// compiler sizes FIFO_DEPTH strictly past the worst-case");
+    w.line("// content, so equal pointers always mean empty, never full.");
+    w.line("reg [WIDTH-1:0] fifo [1:N_IN-1][0:FIFO_DEPTH-1];");
+    w.line("reg [$clog2(FIFO_DEPTH):0] wr_ptr [1:N_IN-1];");
+    w.line("reg [$clog2(FIFO_DEPTH):0] rd_ptr [1:N_IN-1];");
+    w.line("reg [$clog2(N_IN):0] sel;");
+    w.line("wire [$clog2(FIFO_DEPTH):0] rd_next = (rd_ptr[sel] == FIFO_DEPTH-1) ? 0 : rd_ptr[sel] + 1;");
+    w.line("integer b;");
+    w.always_ff("posedge clk");
+    w.begin("if (rst)");
+    w.line("sel <= 0;");
+    w.line("valid_out <= 1'b0;");
+    w.begin("for (b = 1; b < N_IN; b = b + 1)");
+    w.line("wr_ptr[b] <= 0;");
+    w.line("rd_ptr[b] <= 0;");
+    w.end();
+    w.end();
+    w.begin("else if (en)");
+    w.line("// enqueue every non-primary branch as it arrives");
+    w.begin("for (b = 1; b < N_IN; b = b + 1)");
+    w.begin("if (valid_flat[b])");
+    w.line("fifo[b][wr_ptr[b]] <= px_flat[b*WIDTH +: WIDTH];");
+    w.line("wr_ptr[b] <= (wr_ptr[b] == FIFO_DEPTH-1) ? 0 : wr_ptr[b] + 1;");
+    w.end();
+    w.end();
+    w.line("// emit: primary stream first, then drain the FIFOs in order");
+    w.begin("if (sel == 0)");
+    w.line("px_out <= px_flat[0 +: WIDTH];");
+    w.line("valid_out <= valid_flat[0];");
+    w.line("sel <= (ctrl_in[4]) ? 1 : 0;"); // vEnd advances the selector
+    w.end();
+    w.begin("else");
+    w.line("px_out <= fifo[sel][rd_ptr[sel]];");
+    w.line("valid_out <= rd_ptr[sel] != wr_ptr[sel];");
+    w.line("// drain only while non-empty: an empty FIFO holds (waits for");
+    w.line("// the lagging branch) instead of overrunning its writer");
+    w.begin("if (rd_ptr[sel] != wr_ptr[sel])");
+    w.line("rd_ptr[sel] <= rd_next;");
+    w.line("sel <= (rd_next == wr_ptr[sel]) ? ((sel == N_IN-1) ? 0 : sel + 1) : sel;");
+    w.end();
+    w.end();
+    w.end();
+    w.end();
+    w.end_module();
+    w.finish()
+}
+
+pub fn upsample(width: usize) -> String {
+    let mut w = VerilogWriter::new(
+        "upsample: nearest-neighbour row/column repeater. Each input row\n\
+         is buffered once (one BRAM row of all channels) and replayed\n\
+         FACTOR times with each pixel held FACTOR cycles.\n\
+         STRUCTURAL SKETCH: the producer is assumed to deliver one input\n\
+         row per FACTOR^2 x FM_W output cycles (the design model paces\n\
+         this stage at its OUTPUT frame rate for exactly that reason);\n\
+         no ready/backpressure wire is emitted, so a free-running\n\
+         producer would overwrite the row bank mid-replay.",
+    );
+    w.module(
+        "upsample",
+        &[
+            ("WIDTH", width.to_string()),
+            ("FM_W", "28".into()),
+            ("FACTOR", "2".into()),
+        ],
+        &[
+            Port::input("clk", 1),
+            Port::input("rst", 1),
+            Port::input("en", 1),
+            Port::input("px_in", 0),
+            Port::input("ctrl_in", CTRL_BITS),
+            Port::output_reg("px_out", 1),
+            Port::output_reg("valid_out", 1),
+        ],
+    );
+    w.line("output reg [WIDTH-1:0] px_out;");
+    w.line("reg [WIDTH-1:0] row [0:FM_W-1];");
+    w.line("reg [$clog2(FM_W)-1:0] col;");
+    w.line("reg [$clog2(FM_W)-1:0] rep_col;");
+    w.line("reg [7:0] rep_px;");
+    w.line("reg primed; // a full input row is banked and replayable");
+    w.always_ff("posedge clk");
+    w.begin("if (rst)");
+    w.line("col <= 0;");
+    w.line("rep_col <= 0;");
+    w.line("rep_px <= 0;");
+    w.line("primed <= 1'b0;");
+    w.line("valid_out <= 1'b0;");
+    w.end();
+    w.begin("else if (en)");
+    w.line("// writer: bank the incoming row at the input rate");
+    w.begin("if (ctrl_in[0])"); // Valid
+    w.line("row[col] <= px_in;");
+    w.line("col <= (ctrl_in[2]) ? 0 : col + 1;"); // hEnd wraps
+    w.line("primed <= primed | ctrl_in[2];");
+    w.end();
+    w.line("// replayer: once primed it emits EVERY cycle — FACTOR copies");
+    w.line("// of each pixel. Row replay pacing (FACTOR passes per banked");
+    w.line("// row) is governed by the producer, which delivers one input");
+    w.line("// row per FACTOR output rows — the design model paces this");
+    w.line("// stage at its OUTPUT frame rate for exactly that reason.");
+    w.begin("if (primed)");
+    w.line("px_out <= row[rep_col];");
+    w.line("valid_out <= 1'b1;");
+    w.line("rep_px <= (rep_px == FACTOR-1) ? 0 : rep_px + 1;");
+    w.begin("if (rep_px == FACTOR-1)");
+    w.line("rep_col <= (rep_col == FM_W-1) ? 0 : rep_col + 1;");
+    w.end(); // rep_px wrap
+    w.end(); // primed replayer
+    w.end(); // else if (en)
+    w.end(); // always
+    w.end_module();
+    w.finish()
+}
+
+pub fn spp_pe(width: usize) -> String {
+    let mut w = VerilogWriter::new(
+        "spp_pe: SPPF pyramid — three cascaded stride-1 KxK max pools\n\
+         (shared line-buffer pattern) whose four taps (input + pool\n\
+         outputs) stream out channel-concatenated through a concat_mux.",
+    );
+    w.module(
+        "spp_pe",
+        &[
+            ("WIDTH", width.to_string()),
+            ("K", "5".into()),
+            ("FM_W", "20".into()),
+        ],
+        &[
+            Port::input("clk", 1),
+            Port::input("rst", 1),
+            Port::input("en", 1),
+            Port::input("px_in", 0),
+            Port::input("ctrl_in", CTRL_BITS),
+            Port::output("px_out", 1),
+            Port::output("valid_out", 1),
+        ],
+    );
+    w.line("wire [WIDTH-1:0] px_out;");
+    w.line("wire valid_out;");
+    w.line("wire [WIDTH-1:0] tap1, tap2, tap3;");
+    w.line("wire v1, v2, v3;");
+    w.blank();
+    w.line("// cascaded stride-1 pools: receptive fields k, 2k-1, 3k-2");
+    w.line("pool_pe #(.WIDTH(WIDTH), .K(K), .FM_W(FM_W), .MODE_MAX(1)) p1 (");
+    w.line("    .clk(clk), .rst(rst), .en(en), .px_in(px_in), .ctrl_in(ctrl_in),");
+    w.line("    .px_out(tap1), .valid_out(v1)");
+    w.line(");");
+    w.line("pool_pe #(.WIDTH(WIDTH), .K(K), .FM_W(FM_W), .MODE_MAX(1)) p2 (");
+    w.line("    .clk(clk), .rst(rst), .en(en), .px_in(tap1), .ctrl_in(ctrl_in),");
+    w.line("    .px_out(tap2), .valid_out(v2)");
+    w.line(");");
+    w.line("pool_pe #(.WIDTH(WIDTH), .K(K), .FM_W(FM_W), .MODE_MAX(1)) p3 (");
+    w.line("    .clk(clk), .rst(rst), .en(en), .px_in(tap2), .ctrl_in(ctrl_in),");
+    w.line("    .px_out(tap3), .valid_out(v3)");
+    w.line(");");
+    w.blank();
+    w.line("// four-tap channel concat (input + three pyramid levels)");
+    w.line("wire [4*WIDTH-1:0] taps_flat = {tap3, tap2, tap1, px_in};");
+    w.line("wire [3:0] taps_valid = {v3, v2, v1, ctrl_in[0]};");
+    w.line("// depth 8*FM_W: strictly past the 4-row-per-tap worst case,");
+    w.line("// so the mux's equal-pointer test stays an empty test");
+    w.line("concat_mux #(.WIDTH(WIDTH), .N_IN(4), .FIFO_DEPTH(8*FM_W)) cat (");
+    w.line("    .clk(clk), .rst(rst), .en(en), .px_flat(taps_flat),");
+    w.line("    .valid_flat(taps_valid), .ctrl_in(ctrl_in),");
+    w.line("    .px_out(px_out), .valid_out(valid_out)");
+    w.line(");");
+    w.end_module();
+    w.finish()
+}
+
+/// The configured top-level: wires every stage of the scheduled plan
+/// along its dataflow edges (branches fork, merges consume multiple
+/// stage outputs).
 pub fn top(
-    net: &Network,
+    plan: &StagePlan,
     cfg: &DesignConfig,
     eval: &DesignEval,
     top_name: &str,
@@ -384,28 +593,45 @@ pub fn top(
     let mut w = VerilogWriter::new(&format!(
         "{top_name}: generated streaming pipeline for '{}'\n\
          design point p = {:?} ({} PEs, {} DSP, est. {:.3} ms @ {} MHz)",
-        net.name,
+        plan.net_name,
         cfg.parallelism,
         eval.total_pes,
         eval.resources.dsp,
         eval.latency_ms(),
         eval.clock_mhz,
     ));
-    let n_blocks = net.conv_layer_ids().len();
-    w.module(
-        top_name,
-        &[("WIDTH", width.to_string())],
-        &[
-            Port::input("clk", 1),
-            Port::input("rst", 1),
-            Port::input("px_in", 0),
-            Port::input("ctrl_in", CTRL_BITS),
-            Port::input("path_sel", 4),
-            Port::input("frame_start", 1),
-            Port::output("result", 1),
-            Port::output("result_valid", 1),
-        ],
-    );
+    let n_blocks = plan.gate_blocks;
+    // dataflow sinks: stages nobody consumes. Chains have exactly one;
+    // multi-head detectors (yolov5l) get one result port per head so no
+    // output dangles for synthesis to prune away.
+    let mut consumed = vec![false; plan.stages.len()];
+    for e in &plan.edges {
+        consumed[e.src] = true;
+    }
+    let mut sinks: Vec<usize> = plan
+        .stages
+        .iter()
+        .filter(|s| !consumed[s.id] && !matches!(s.kind, LayerKind::Input { .. }))
+        .map(|s| s.id)
+        .collect();
+    if sinks.is_empty() {
+        sinks.push(plan.stages.len() - 1);
+    }
+    let mut ports = vec![
+        Port::input("clk", 1),
+        Port::input("rst", 1),
+        Port::input("px_in", 0),
+        Port::input("ctrl_in", CTRL_BITS),
+        Port::input("path_sel", 4),
+        Port::input("frame_start", 1),
+        Port::output("result", 1),
+        Port::output("result_valid", 1),
+    ];
+    for i in 0..sinks.len().saturating_sub(1) {
+        ports.push(Port::output(&format!("result_aux{i}"), 0));
+        ports.push(Port::output(&format!("result_aux{i}_valid"), 1));
+    }
+    w.module(top_name, &[("WIDTH", width.to_string())], &ports);
     w.line(&format!("wire [{}:0] block_en;", n_blocks.max(1) - 1));
     w.line("wire resync;");
     w.line(&format!(
@@ -416,91 +642,215 @@ pub fn top(
     w.line(");");
     w.blank();
 
-    let shapes = crate::graph::shapes::infer(net).expect("validated net");
-    let mut stage = 0usize;
-    let mut conv_idx = 0usize;
-    let mut prev_px = "px_in".to_string();
-    let mut prev_ctrl = "ctrl_in".to_string();
-    for layer in &net.layers {
-        let inp = shapes.input(layer.id);
-        match &layer.kind {
-            LayerKind::Conv { k, stride, relu, .. } | LayerKind::DwConv { k, stride, relu, .. } => {
-                let lanes = eval.mappings[layer.id].pe_count;
-                let block = conv_idx;
-                conv_idx += 1;
+    // per-stage output nets, wired along the plan's dataflow edges so
+    // forked branches read their true producer, not the last emitted
+    // stage. Pass-through stages alias their input net. The clock-gate
+    // block likewise follows the DATAFLOW producer (a pool on a forked
+    // branch rides its own branch's conv enable, not whichever conv was
+    // emitted last in topological order).
+    let mut px_of: Vec<String> = vec!["px_in".to_string(); plan.stages.len()];
+    let mut ctrl_of: Vec<String> = vec!["ctrl_in".to_string(); plan.stages.len()];
+    // producer valid nets (ctrl_in[0] is the source's Valid bit)
+    let mut valid_of: Vec<String> = vec!["ctrl_in[0]".to_string(); plan.stages.len()];
+    let mut block_of: Vec<usize> = vec![0usize; plan.stages.len()];
+    for stage in &plan.stages {
+        let sid = stage.id;
+        let inp = stage.input;
+        let (prev_px, prev_ctrl) = match stage.preds.first() {
+            Some(&p) => (px_of[p].clone(), ctrl_of[p].clone()),
+            None => ("px_in".to_string(), "ctrl_in".to_string()),
+        };
+        let prev_valid = stage
+            .preds
+            .first()
+            .map(|&p| valid_of[p].clone())
+            .unwrap_or_else(|| "ctrl_in[0]".to_string());
+        // gate block inherited along the stream: own block for convs,
+        // primary producer's block for everything else
+        let inherited_block = stage.preds.first().map(|&p| block_of[p]).unwrap_or(0);
+        block_of[sid] = stage.gate_block.unwrap_or(inherited_block);
+        match &stage.kind {
+            LayerKind::Conv { k, stride, relu, .. }
+            | LayerKind::DwConv { k, stride, relu, .. } => {
+                let lanes = eval.mappings[sid].pe_count;
+                let block = stage.gate_block.expect("conv stage gated");
                 w.line(&format!(
-                    "// stage {stage}: {} — {} C_PE lanes, serial x{}",
-                    layer.name, lanes, eval.mappings[layer.id].serial_factor
+                    "// stage {sid}: {} — {} C_PE lanes, serial x{}",
+                    stage.name, lanes, eval.mappings[sid].serial_factor
                 ));
-                w.line(&format!("wire [WIDTH-1:0] s{stage}_px;"));
-                w.line(&format!("wire s{stage}_valid;"));
-                w.line(&format!("wire [{CTRL_BITS}-1:0] s{stage}_ctrl = {prev_ctrl};"));
+                w.line(&format!("wire [WIDTH-1:0] s{sid}_px;"));
+                w.line(&format!("wire s{sid}_valid;"));
+                w.line(&format!("wire [{CTRL_BITS}-1:0] s{sid}_ctrl = {prev_ctrl};"));
                 w.line(&format!(
                     "conv_pe #(.WIDTH(WIDTH), .K({k}), .FM_W({}), .STRIDE({stride}), .RELU({})) u_{} (",
                     inp.w,
                     u8::from(*relu),
-                    layer.name
+                    stage.name
                 ));
                 w.line(&format!(
                     "    .clk(clk), .rst(rst), .en(block_en[{block}]), .px_in({prev_px}),"
                 ));
                 w.line(&format!(
-                    "    .ctrl_in({prev_ctrl}), .wgt_flat({}'d0), .px_out(s{stage}_px), .valid_out(s{stage}_valid)",
+                    "    .ctrl_in({prev_ctrl}), .wgt_flat({}'d0), .px_out(s{sid}_px), .valid_out(s{sid}_valid)",
                     k * k * width
                 ));
                 w.line(");");
-                prev_px = format!("s{stage}_px");
-                prev_ctrl = format!("s{stage}_ctrl");
-                stage += 1;
+                px_of[sid] = format!("s{sid}_px");
+                ctrl_of[sid] = format!("s{sid}_ctrl");
+                valid_of[sid] = format!("s{sid}_valid");
             }
             LayerKind::MaxPool { k, .. } | LayerKind::AvgPool { k, .. } => {
-                let is_max = matches!(layer.kind, LayerKind::MaxPool { .. });
-                let block = conv_idx.saturating_sub(1);
-                w.line(&format!("// stage {stage}: {}", layer.name));
-                w.line(&format!("wire [WIDTH-1:0] s{stage}_px;"));
-                w.line(&format!("wire s{stage}_valid;"));
-                w.line(&format!("wire [{CTRL_BITS}-1:0] s{stage}_ctrl = {prev_ctrl};"));
+                let is_max = matches!(stage.kind, LayerKind::MaxPool { .. });
+                w.line(&format!("// stage {sid}: {}", stage.name));
+                w.line(&format!("wire [WIDTH-1:0] s{sid}_px;"));
+                w.line(&format!("wire s{sid}_valid;"));
+                w.line(&format!("wire [{CTRL_BITS}-1:0] s{sid}_ctrl = {prev_ctrl};"));
                 w.line(&format!(
                     "pool_pe #(.WIDTH(WIDTH), .K({k}), .FM_W({}), .MODE_MAX({})) u_{} (",
                     inp.w,
                     u8::from(is_max),
-                    layer.name
+                    stage.name
                 ));
                 w.line(&format!(
-                    "    .clk(clk), .rst(rst), .en(block_en[{block}]), .px_in({prev_px}),"
+                    "    .clk(clk), .rst(rst), .en(block_en[{}]), .px_in({prev_px}),",
+                    block_of[sid]
                 ));
                 w.line(&format!(
-                    "    .ctrl_in({prev_ctrl}), .px_out(s{stage}_px), .valid_out(s{stage}_valid)"
+                    "    .ctrl_in({prev_ctrl}), .px_out(s{sid}_px), .valid_out(s{sid}_valid)"
                 ));
                 w.line(");");
-                prev_px = format!("s{stage}_px");
-                prev_ctrl = format!("s{stage}_ctrl");
-                stage += 1;
+                px_of[sid] = format!("s{sid}_px");
+                ctrl_of[sid] = format!("s{sid}_ctrl");
+                valid_of[sid] = format!("s{sid}_valid");
             }
             LayerKind::Fc { out, .. } => {
-                w.line(&format!("// stage {stage}: {} — {} heads", layer.name, out));
-                w.line(&format!("wire [2*WIDTH-1:0] s{stage}_y;"));
-                w.line(&format!("wire s{stage}_valid;"));
+                w.line(&format!("// stage {sid}: {} — {} heads", stage.name, out));
+                w.line(&format!("wire [2*WIDTH-1:0] s{sid}_y;"));
+                w.line(&format!("wire s{sid}_valid;"));
                 w.line(&format!(
                     "fc_pe #(.WIDTH(WIDTH), .N_IN({})) u_{} (",
                     inp.features(),
-                    layer.name
+                    stage.name
                 ));
                 w.line(&format!(
                     "    .clk(clk), .rst(rst), .en(1'b1), .x_in({prev_px}), .x_valid(1'b1),"
                 ));
                 w.line(&format!(
-                    "    .wgt({width}'d0), .bias({width}'d0), .y(s{stage}_y), .y_valid(s{stage}_valid)"
+                    "    .wgt({width}'d0), .bias({width}'d0), .y(s{sid}_y), .y_valid(s{sid}_valid)"
                 ));
                 w.line(");");
-                prev_px = format!("s{stage}_y[WIDTH-1:0]");
-                stage += 1;
+                px_of[sid] = format!("s{sid}_y[WIDTH-1:0]");
+                ctrl_of[sid] = prev_ctrl;
+                valid_of[sid] = format!("s{sid}_valid");
             }
-            _ => {}
+            LayerKind::Concat { .. } => {
+                let n_in = stage.preds.len().max(1);
+                // one PAST the worst-case content, so the mux's
+                // equal-pointers test always means empty, never full
+                let fifo = (plan.branch_words_into(sid).max(inp.w.max(1)) + 1)
+                    .next_power_of_two();
+                w.line(&format!(
+                    "// stage {sid}: {} — {}-way channel concat, {} FIFO words",
+                    stage.name,
+                    n_in,
+                    plan.branch_words_into(sid)
+                ));
+                w.line(&format!("wire [{n_in}*WIDTH-1:0] s{sid}_cat;"));
+                for (i, &p) in stage.preds.iter().enumerate() {
+                    w.line(&format!(
+                        "assign s{sid}_cat[{i}*WIDTH +: WIDTH] = {};",
+                        px_of[p]
+                    ));
+                }
+                w.line(&format!("wire [{n_in}-1:0] s{sid}_cat_vld;"));
+                for (i, &p) in stage.preds.iter().enumerate() {
+                    w.line(&format!(
+                        "assign s{sid}_cat_vld[{i}] = {};",
+                        valid_of[p]
+                    ));
+                }
+                w.line(&format!("wire [WIDTH-1:0] s{sid}_px;"));
+                w.line(&format!("wire s{sid}_valid;"));
+                w.line(&format!("wire [{CTRL_BITS}-1:0] s{sid}_ctrl = {prev_ctrl};"));
+                w.line(&format!(
+                    "concat_mux #(.WIDTH(WIDTH), .N_IN({n_in}), .FIFO_DEPTH({fifo})) u_{} (",
+                    stage.name
+                ));
+                w.line(&format!(
+                    "    .clk(clk), .rst(rst), .en(block_en[{}]), .px_flat(s{sid}_cat),",
+                    block_of[sid]
+                ));
+                w.line(&format!(
+                    "    .valid_flat(s{sid}_cat_vld), .ctrl_in({prev_ctrl}),"
+                ));
+                w.line(&format!(
+                    "    .px_out(s{sid}_px), .valid_out(s{sid}_valid)"
+                ));
+                w.line(");");
+                px_of[sid] = format!("s{sid}_px");
+                ctrl_of[sid] = format!("s{sid}_ctrl");
+                valid_of[sid] = format!("s{sid}_valid");
+            }
+            LayerKind::Upsample { factor } => {
+                w.line(&format!("// stage {sid}: {} — x{factor} repeater", stage.name));
+                w.line(&format!("wire [WIDTH-1:0] s{sid}_px;"));
+                w.line(&format!("wire s{sid}_valid;"));
+                w.line(&format!("wire [{CTRL_BITS}-1:0] s{sid}_ctrl = {prev_ctrl};"));
+                w.line(&format!(
+                    "upsample #(.WIDTH(WIDTH), .FM_W({}), .FACTOR({factor})) u_{} (",
+                    inp.w, stage.name
+                ));
+                w.line(&format!(
+                    "    .clk(clk), .rst(rst), .en(block_en[{}]), .px_in({prev_px}),",
+                    block_of[sid]
+                ));
+                w.line(&format!(
+                    "    .ctrl_in({prev_ctrl}), .px_out(s{sid}_px), .valid_out(s{sid}_valid)"
+                ));
+                w.line(");");
+                px_of[sid] = format!("s{sid}_px");
+                ctrl_of[sid] = format!("s{sid}_ctrl");
+                valid_of[sid] = format!("s{sid}_valid");
+            }
+            LayerKind::SpatialPyramidPool { k } => {
+                w.line(&format!("// stage {sid}: {} — SPPF k={k}", stage.name));
+                w.line(&format!("wire [WIDTH-1:0] s{sid}_px;"));
+                w.line(&format!("wire s{sid}_valid;"));
+                w.line(&format!("wire [{CTRL_BITS}-1:0] s{sid}_ctrl = {prev_ctrl};"));
+                w.line(&format!(
+                    "spp_pe #(.WIDTH(WIDTH), .K({k}), .FM_W({})) u_{} (",
+                    inp.w, stage.name
+                ));
+                w.line(&format!(
+                    "    .clk(clk), .rst(rst), .en(block_en[{}]), .px_in({prev_px}),",
+                    block_of[sid]
+                ));
+                w.line(&format!(
+                    "    .ctrl_in({prev_ctrl}), .px_out(s{sid}_px), .valid_out(s{sid}_valid)"
+                ));
+                w.line(");");
+                px_of[sid] = format!("s{sid}_px");
+                ctrl_of[sid] = format!("s{sid}_ctrl");
+                valid_of[sid] = format!("s{sid}_valid");
+            }
+            // pass-through stages alias their producer's net so every
+            // downstream branch reference resolves
+            _ => {
+                px_of[sid] = prev_px;
+                ctrl_of[sid] = prev_ctrl;
+                valid_of[sid] = prev_valid.clone();
+            }
         }
     }
-    w.line(&format!("assign result = {prev_px};"));
-    w.line("assign result_valid = 1'b1;");
+    // the topologically-last sink is the primary result; every other
+    // sink (extra detect heads) gets an aux port in stream order
+    let primary = *sinks.last().expect("at least one sink");
+    w.line(&format!("assign result = {};", px_of[primary]));
+    w.line(&format!("assign result_valid = {};", valid_of[primary]));
+    for (i, &s) in sinks[..sinks.len() - 1].iter().enumerate() {
+        w.line(&format!("assign result_aux{i} = {};", px_of[s]));
+        w.line(&format!("assign result_aux{i}_valid = {};", valid_of[s]));
+    }
     w.end_module();
     w.finish()
 }

@@ -17,7 +17,7 @@
 pub mod linebuffer;
 pub mod stream;
 
-pub use stream::{simulate, simulate_with, GateMask, SimReport, StageStats};
+pub use stream::{simulate, simulate_with, GateError, GateMask, SimReport, StageStats};
 
 #[cfg(test)]
 mod tests {

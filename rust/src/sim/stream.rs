@@ -10,9 +10,15 @@
 //!   power, exactly like a gated BUFGCE region. Re-activation costs one
 //!   full-frame delay (Sec. V: "resume ... after a full-frame delay").
 //! * Power integrates per-stage activity over busy cycles.
+//!
+//! The walk order is the [`StagePlan`]'s topological stage order — for
+//! chains identical to the old layer-list walk, for branchy graphs the
+//! only order in which every producer is simulated before its consumer.
+//! `Upsample` stages replay at their *output* frame geometry (they emit
+//! more rows than they consume); everything else replays its local input.
 
 use crate::design::{self, DesignConfig, DesignEval};
-use crate::graph::shapes::Shapes;
+use crate::graph::passes::{self, StagePlan};
 use crate::graph::{LayerKind, Network};
 use crate::pe::{Blanking, Device};
 use crate::power::{Activity, PowerModel};
@@ -20,11 +26,32 @@ use crate::power::{Activity, PowerModel};
 /// Runtime clock-gating state for NeuroMorph morphing.
 #[derive(Debug, Clone)]
 pub struct GateMask {
-    /// per-conv-block enable (depth-wise morphing); empty = all active
+    /// per-conv-block enable (depth-wise morphing); empty = all active.
+    /// Block `i` is the StagePlan's gate block `i` (the i-th conv-like
+    /// stage in stream order).
     pub block_active: Vec<bool>,
     /// fraction of filter lanes active per block (width-wise morphing)
     pub width_fraction: f64,
 }
+
+/// Rejected width fraction (the morph/governor boundary refuses to run a
+/// design at an out-of-range width instead of silently clamping).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateError {
+    pub fraction: f64,
+}
+
+impl std::fmt::Display for GateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "width fraction {} outside the deployable range [0.1, 1.0]",
+            self.fraction
+        )
+    }
+}
+
+impl std::error::Error for GateError {}
 
 impl GateMask {
     pub fn all_active() -> GateMask {
@@ -32,6 +59,8 @@ impl GateMask {
     }
 
     /// Depth-wise morph: keep the first `depth` conv blocks running.
+    /// (Gate bits follow the StagePlan's gate-block numbering, which for
+    /// every network equals the conv-like stage count.)
     pub fn depth_prefix(net: &Network, depth: usize) -> GateMask {
         let n = net.conv_layer_ids().len();
         GateMask {
@@ -41,8 +70,21 @@ impl GateMask {
     }
 
     /// Width-wise morph: all blocks active at `fraction` of their lanes.
+    /// Silently clamps to the deployable range — CLI/simulator
+    /// convenience; validated boundaries use [`GateMask::try_width`].
     pub fn width(fraction: f64) -> GateMask {
         GateMask { block_active: Vec::new(), width_fraction: fraction.clamp(0.1, 1.0) }
+    }
+
+    /// Width-wise morph with explicit validation: a fraction outside
+    /// `[0.1, 1.0]` (or NaN) is an error, so a corrupt manifest cannot
+    /// quietly run the fabric at the clamp floor.
+    pub fn try_width(fraction: f64) -> Result<GateMask, GateError> {
+        if (0.1..=1.0).contains(&fraction) {
+            Ok(GateMask { block_active: Vec::new(), width_fraction: fraction })
+        } else {
+            Err(GateError { fraction })
+        }
     }
 
     fn is_active(&self, block: usize) -> bool {
@@ -97,38 +139,36 @@ const PASS_DRAIN: u64 = 6;
 
 /// Simulate one frame through the configured design under a gate mask.
 ///
-/// Convenience wrapper that evaluates the design point and infers shapes
-/// on every call; hot paths that replay many frames on one fixed design
-/// (the serving backends) should pre-compute both once and call
-/// [`simulate_with`].
+/// Convenience wrapper that schedules the pass pipeline and evaluates the
+/// design point on every call; hot paths that replay many frames on one
+/// fixed design (the serving backends) should pre-compute both once and
+/// call [`simulate_with`].
 pub fn simulate(
     net: &Network,
     cfg: &DesignConfig,
     device: &Device,
     gate: &GateMask,
 ) -> SimReport {
-    let eval = design::evaluate(net, cfg, device).expect("valid design point");
-    let shapes = crate::graph::shapes::infer(net).expect("validated net");
-    simulate_with(net, device, gate, &eval, &shapes)
+    let plan = passes::schedule(net).expect("validated network");
+    let eval = design::evaluate_plan(&plan, cfg, device).expect("valid design point");
+    simulate_with(&plan, device, gate, &eval)
 }
 
-/// Simulate one frame against a pre-evaluated design point. This is the
-/// per-frame hot path of the cycle-level serving backend: the analytical
-/// evaluation and shape inference (both allocation-heavy) are hoisted
-/// out of the frame loop by the caller.
+/// Simulate one frame against a pre-scheduled plan and pre-evaluated
+/// design point. This is the per-frame hot path of the cycle-level
+/// serving backend: pass scheduling and the analytical evaluation (both
+/// allocation-heavy) are hoisted out of the frame loop by the caller.
 pub fn simulate_with(
-    net: &Network,
+    plan: &StagePlan,
     device: &Device,
     gate: &GateMask,
     eval: &DesignEval,
-    shapes: &Shapes,
 ) -> SimReport {
     let blank = Blanking::default();
 
     let mut per_stage = Vec::new();
-    let mut conv_block = 0usize;
     let mut gated_from_here = false; // depth gating truncates the pipeline
-    let (in_h, in_w, _) = net.input_dims();
+    let (in_h, in_w, _) = plan.input_dims;
     // the source itself paces at the input frame rate
     let mut bottleneck: u64 = in_h as u64
         * ((in_w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
@@ -140,20 +180,10 @@ pub fn simulate_with(
     let mut active_lut = 0usize;
     let mut active_bram = 0usize;
 
-    for layer in &net.layers {
-        let m = &eval.mappings[layer.id];
-        let is_conv = matches!(
-            layer.kind,
-            LayerKind::Conv { .. } | LayerKind::DwConv { .. }
-        );
-        let block_idx = if is_conv {
-            let b = conv_block;
-            conv_block += 1;
-            Some(b)
-        } else {
-            None
-        };
-        if let Some(b) = block_idx {
+    for stage in &plan.stages {
+        let m = &eval.mappings[stage.id];
+        let is_conv = stage.is_conv_like();
+        if let Some(b) = stage.gate_block {
             if !gate.is_active(b) {
                 gated_from_here = true;
             }
@@ -181,18 +211,23 @@ pub fn simulate_with(
             m.serial_factor as u64
         };
 
-        let (weight_reload, _k) = match layer.kind {
-            LayerKind::Conv { k, .. } | LayerKind::DwConv { k, .. } => ((k * k) as u64, k),
-            _ => (0, 0),
+        let weight_reload = match stage.kind {
+            LayerKind::Conv { k, .. } | LayerKind::DwConv { k, .. } => (k * k) as u64,
+            _ => 0,
         };
-        // one pass replays the stage's LOCAL input fmap from its buffers:
-        // H rows of (W + porches) px + a per-row handshake bubble
-        let inp = shapes.input(layer.id);
-        let replay_cycles = inp.h as u64
-            * ((inp.w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
+        // one pass replays the stage's LOCAL fmap from its buffers:
+        // H rows of (W + porches) px + a per-row handshake bubble.
+        // Upsample emits its larger OUTPUT frame, so it replays at the
+        // output geometry.
+        let rep_shape = match stage.kind {
+            LayerKind::Upsample { .. } => stage.output,
+            _ => stage.input,
+        };
+        let replay_cycles = rep_shape.h as u64
+            * ((rep_shape.w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
         let busy = serial * replay_cycles.max(1)
             + serial.saturating_sub(1) * (PASS_DRAIN + weight_reload);
-        let stall = serial * inp.h as u64 * ROW_BUBBLE;
+        let stall = serial * rep_shape.h as u64 * ROW_BUBBLE;
         bottleneck = bottleneck.max(busy);
         fill_total += m.fill_cycles as u64;
         if serial > 1 {
@@ -333,5 +368,34 @@ mod tests {
     fn width_fraction_clamped() {
         let g = GateMask::width(0.0);
         assert!(g.width_fraction >= 0.1);
+    }
+
+    #[test]
+    fn try_width_rejects_out_of_range() {
+        assert!(GateMask::try_width(0.5).is_ok());
+        assert!(GateMask::try_width(1.0).is_ok());
+        assert!(GateMask::try_width(0.1).is_ok());
+        for bad in [0.0, 0.05, 1.5, -1.0, f64::NAN] {
+            let e = GateMask::try_width(bad);
+            assert!(e.is_err(), "fraction {bad} must be rejected");
+        }
+        let msg = GateMask::try_width(7.0).unwrap_err().to_string();
+        assert!(msg.contains("7"), "{msg}");
+    }
+
+    #[test]
+    fn branchy_yolo_simulates_end_to_end() {
+        let net = zoo::yolov5l();
+        let cfg = DesignConfig::uniform(&net, 2, FpRep::Int8);
+        let full = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::all_active());
+        assert_eq!(full.per_stage.len(), net.layers.len());
+        assert!(full.latency_cycles > 0 && full.power_mw > 0.0);
+        // depth morph truncates the branchy pipeline too
+        let gated = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::depth_prefix(&net, 4));
+        assert!(gated.latency_cycles < full.latency_cycles);
+        assert!(gated.power_mw < full.power_mw);
+        // width morph reduces work
+        let half = simulate(&net, &cfg, &ZYNQ_7100, &GateMask::width(0.5));
+        assert!(half.period_cycles <= full.period_cycles);
     }
 }

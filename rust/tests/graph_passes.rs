@@ -1,0 +1,589 @@
+//! Pass-pipeline integration tests: the StagePlan refactor contract.
+//!
+//! * **Equivalence** — the pre-StagePlan analytical model and cycle
+//!   simulator (verbatim reference copies of the old layer-list walks)
+//!   produce bit-identical numbers to the new plan-driven paths on every
+//!   legacy chain/residual zoo model, so `BENCH_dse.json` stays
+//!   comparable across the refactor.
+//! * **Scheduling properties** — every StagePlan respects every dataflow
+//!   edge (producer before consumer), gene order matches the legacy
+//!   chromosome layout, shape inference agrees pre/post relu-fusion.
+//! * **Branchy end-to-end** — the faithful yolov5l (real Concat /
+//!   Upsample / SPPF nodes) runs through evaluate, simulate, RTL
+//!   emission, DSE and depth/width morphs.
+
+use forgemorph::design::{self, DesignConfig, DesignEval, LayerMapping};
+use forgemorph::graph::passes::{self, EdgeKind};
+use forgemorph::graph::{shapes, zoo, LayerKind, Network, NetworkBuilder, Padding};
+use forgemorph::morph;
+use forgemorph::pe::conv::ConvPe;
+use forgemorph::pe::fc::FcPe;
+use forgemorph::pe::pool::{PoolKind, PoolPe};
+use forgemorph::pe::{Blanking, Device, FpRep, Resources, ZYNQ_7100};
+use forgemorph::power::{Activity, PowerModel};
+use forgemorph::sim::{self, GateMask};
+use forgemorph::util::rng::Rng;
+
+/// Legacy chain/residual models whose numbers must survive the refactor.
+fn legacy_models() -> Vec<Network> {
+    vec![
+        zoo::mnist(),
+        zoo::svhn(),
+        zoo::cifar10(),
+        zoo::resnet50(),
+        zoo::mobilenet_v2(),
+        zoo::squeezenet(),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementations: the pre-StagePlan layer-list walks, verbatim
+// ---------------------------------------------------------------------------
+
+/// The old `design::evaluate`: walks `net.layers` carrying `prev_p` in
+/// list order. Legacy layer kinds only.
+fn reference_evaluate(net: &Network, cfg: &DesignConfig, device: &Device) -> DesignEval {
+    let shp = shapes::infer(net).unwrap();
+    let blank = Blanking::default();
+    let mut mappings = Vec::with_capacity(net.layers.len());
+    let mut total = Resources::default();
+    let mut conv_idx = 0usize;
+    let mut prev_p = 1usize;
+    let mut first_conv_seen = false;
+
+    for layer in &net.layers {
+        let inp = shp.input(layer.id);
+        let mapping = match &layer.kind {
+            LayerKind::Conv { filters, k, relu, .. } => {
+                let p = cfg.parallelism[conv_idx];
+                conv_idx += 1;
+                let lanes_in = prev_p.min(inp.c).max(1);
+                let pe_count = p * lanes_in;
+                let pe = ConvPe {
+                    k: *k,
+                    fm_w: inp.w,
+                    fm_h: inp.h,
+                    rep: cfg.rep,
+                    relu: *relu,
+                    first_layer: !first_conv_seen,
+                };
+                first_conv_seen = true;
+                let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
+                let serial = filters.div_ceil(p * simd) * inp.c.div_ceil(lanes_in);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                let m = LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles(),
+                    resources: pe.resources().scale(pe_count),
+                };
+                prev_p = p;
+                m
+            }
+            LayerKind::DwConv { k, relu, .. } => {
+                let p = cfg.parallelism[conv_idx];
+                conv_idx += 1;
+                let pe = ConvPe {
+                    k: *k,
+                    fm_w: inp.w,
+                    fm_h: inp.h,
+                    rep: cfg.rep,
+                    relu: *relu,
+                    first_layer: !first_conv_seen,
+                };
+                first_conv_seen = true;
+                let lanes = p.min(inp.c).max(1);
+                let simd = if cfg.rep == FpRep::Int8 { 2 } else { 1 };
+                let serial = inp.c.div_ceil(lanes * simd);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                let m = LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: lanes,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch)
+                        + pe.overhead_cycles(),
+                    resources: pe.resources().scale(lanes),
+                };
+                prev_p = lanes;
+                m
+            }
+            LayerKind::MaxPool { k, stride } | LayerKind::AvgPool { k, stride } => {
+                let kind = if matches!(layer.kind, LayerKind::MaxPool { .. }) {
+                    PoolKind::Max
+                } else {
+                    PoolKind::Avg
+                };
+                let pe = PoolPe { k: *k, stride: *stride, fm_w: inp.w, fm_h: inp.h, kind };
+                let lanes = prev_p.min(inp.c).max(1);
+                let serial = inp.c.div_ceil(lanes);
+                let pass = (inp.w + blank.back_porch + blank.front_porch) * inp.h;
+                LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: lanes,
+                    serial_factor: serial,
+                    occupancy_cycles: pass * serial,
+                    fill_cycles: (k - 1) * (inp.w + blank.back_porch + blank.front_porch) + 6,
+                    resources: pe.resources().scale(lanes),
+                }
+            }
+            LayerKind::Fc { out, .. } => {
+                let n_pe = prev_p.min(inp.c).max(1);
+                let pe = FcPe {
+                    fc_out: *out,
+                    n_pe,
+                    channels: inp.c,
+                    fm_w: inp.w,
+                    fm_h: inp.h.max(1),
+                };
+                LayerMapping {
+                    layer_id: layer.id,
+                    name: layer.name.clone(),
+                    pe_count: *out * n_pe,
+                    serial_factor: pe.parallelism(),
+                    occupancy_cycles: pe.latency_cycles(blank),
+                    fill_cycles: 4,
+                    resources: pe.resources(),
+                }
+            }
+            LayerKind::ResidualAdd { .. } => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: prev_p,
+                serial_factor: 1,
+                occupancy_cycles: 0,
+                fill_cycles: 1,
+                resources: Resources { dsp: 0, lut: 24 * prev_p, ff: 16 * prev_p, bram: 0 },
+            },
+            LayerKind::GlobalAvgPool => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: prev_p,
+                serial_factor: 1,
+                occupancy_cycles: (inp.w + 4) * inp.h,
+                fill_cycles: 4,
+                resources: Resources { dsp: 0, lut: 60 * prev_p, ff: 32 * prev_p, bram: 0 },
+            },
+            LayerKind::Softmax => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: 1,
+                serial_factor: 1,
+                occupancy_cycles: inp.c * 4,
+                fill_cycles: 8,
+                resources: Resources { dsp: 2, lut: 900, ff: 600, bram: 1 },
+            },
+            LayerKind::Input { .. } => LayerMapping {
+                layer_id: layer.id,
+                name: layer.name.clone(),
+                pe_count: 0,
+                serial_factor: 1,
+                occupancy_cycles: 0,
+                fill_cycles: 0,
+                resources: Resources::default(),
+            },
+            other => panic!("reference model does not cover {other:?}"),
+        };
+        total = total.add(&mapping.resources);
+        mappings.push(mapping);
+    }
+
+    let (in_h, in_w, _) = net.input_dims();
+    let source = (in_w + blank.back_porch + blank.front_porch) * in_h;
+    let fill: usize = mappings.iter().map(|m| m.fill_cycles).sum();
+    let serialized: usize = mappings
+        .iter()
+        .filter(|m| m.serial_factor > 1)
+        .map(|m| m.occupancy_cycles)
+        .sum();
+    let period = mappings
+        .iter()
+        .map(|m| m.occupancy_cycles)
+        .max()
+        .unwrap_or(1)
+        .max(source);
+    let latency = source + fill + serialized;
+    let total_pes = mappings
+        .iter()
+        .filter(|m| {
+            matches!(
+                net.layers[m.layer_id].kind,
+                LayerKind::Conv { .. } | LayerKind::DwConv { .. }
+            )
+        })
+        .map(|m| m.pe_count)
+        .sum();
+
+    DesignEval {
+        mappings,
+        resources: total,
+        total_pes,
+        latency_cycles: latency,
+        period_cycles: period,
+        clock_mhz: device.clock_mhz,
+    }
+}
+
+const ROW_BUBBLE: u64 = 2;
+const PASS_DRAIN: u64 = 6;
+
+fn mask_active(gate: &GateMask, block: usize) -> bool {
+    gate.block_active.get(block).copied().unwrap_or(true)
+}
+
+/// The old `sim::simulate_with`: walks `net.layers` in list order with a
+/// conv-ordinal gate counter. Legacy layer kinds only.
+fn reference_simulate(
+    net: &Network,
+    device: &Device,
+    gate: &GateMask,
+    eval: &DesignEval,
+) -> (u64, u64, f64, Resources, Vec<(u64, u64, bool)>) {
+    let blank = Blanking::default();
+    let shapes = shapes::infer(net).unwrap();
+    let mut per_stage = Vec::new();
+    let mut conv_block = 0usize;
+    let mut gated_from_here = false;
+    let (in_h, in_w, _) = net.input_dims();
+    let mut bottleneck: u64 = in_h as u64
+        * ((in_w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
+    let mut fill_total: u64 = 0;
+    let mut serialized_total: u64 = 0;
+    let pm = PowerModel::default();
+    let mut active_dsp = 0usize;
+    let mut active_lut = 0usize;
+    let mut active_bram = 0usize;
+
+    for layer in &net.layers {
+        let m = &eval.mappings[layer.id];
+        let is_conv = matches!(
+            layer.kind,
+            LayerKind::Conv { .. } | LayerKind::DwConv { .. }
+        );
+        if is_conv {
+            let b = conv_block;
+            conv_block += 1;
+            if !mask_active(gate, b) {
+                gated_from_here = true;
+            }
+        }
+        if gated_from_here {
+            per_stage.push((0, 0, true));
+            continue;
+        }
+        let serial = if is_conv && gate.width_fraction < 1.0 {
+            ((m.serial_factor as f64) * gate.width_fraction).ceil().max(1.0) as u64
+        } else {
+            m.serial_factor as u64
+        };
+        let weight_reload = match layer.kind {
+            LayerKind::Conv { k, .. } | LayerKind::DwConv { k, .. } => (k * k) as u64,
+            _ => 0,
+        };
+        let inp = shapes.input(layer.id);
+        let replay_cycles = inp.h as u64
+            * ((inp.w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
+        let busy = serial * replay_cycles.max(1)
+            + serial.saturating_sub(1) * (PASS_DRAIN + weight_reload);
+        bottleneck = bottleneck.max(busy);
+        fill_total += m.fill_cycles as u64;
+        if serial > 1 {
+            serialized_total += busy;
+        }
+        let lane_scale = if is_conv { gate.width_fraction } else { 1.0 };
+        active_dsp += (m.resources.dsp as f64 * lane_scale) as usize;
+        active_lut += (m.resources.lut as f64 * lane_scale) as usize;
+        active_bram += m.resources.bram;
+        per_stage.push((busy, serial, false));
+    }
+
+    let source = in_h as u64
+        * ((in_w + blank.back_porch + blank.front_porch) as u64 + ROW_BUBBLE);
+    let latency = source + fill_total + serialized_total;
+    let active_res =
+        Resources { dsp: active_dsp, lut: active_lut, ff: 0, bram: active_bram };
+    let power = pm.total_mw(&active_res, device.clock_mhz, Activity::default());
+    let stages = per_stage.len();
+    let elaborated = Resources {
+        dsp: eval.resources.dsp,
+        lut: eval.resources.lut + 140 * stages + eval.resources.lut / 25,
+        ff: eval.resources.ff + 90 * stages,
+        bram: eval.resources.bram,
+    };
+    (latency, bottleneck, power, elaborated, per_stage)
+}
+
+fn configs_for(net: &Network, rng: &mut Rng) -> Vec<DesignConfig> {
+    let bounds = net.conv_filter_bounds();
+    let mut cfgs = vec![
+        DesignConfig::uniform(net, 1, FpRep::Int16),
+        DesignConfig::uniform(net, 2, FpRep::Int8),
+        DesignConfig::uniform(net, 4, FpRep::Int16),
+        DesignConfig::full(net, FpRep::Int8),
+    ];
+    for _ in 0..3 {
+        let parallelism: Vec<usize> =
+            bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect();
+        let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };
+        cfgs.push(DesignConfig { parallelism, rep });
+    }
+    cfgs
+}
+
+fn mapping_tuples(e: &DesignEval) -> Vec<(usize, String, usize, usize, usize, usize, Resources)> {
+    e.mappings
+        .iter()
+        .map(|m| {
+            (
+                m.layer_id,
+                m.name.clone(),
+                m.pe_count,
+                m.serial_factor,
+                m.occupancy_cycles,
+                m.fill_cycles,
+                m.resources,
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: chain/residual models, old walk == new StagePlan path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evaluate_identical_through_stageplan_path() {
+    let mut rng = Rng::new(71);
+    for net in legacy_models() {
+        for cfg in configs_for(&net, &mut rng) {
+            let old = reference_evaluate(&net, &cfg, &ZYNQ_7100);
+            let new = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+            assert_eq!(old.resources, new.resources, "{} resources", net.name);
+            assert_eq!(old.total_pes, new.total_pes, "{} PEs", net.name);
+            assert_eq!(old.latency_cycles, new.latency_cycles, "{} latency", net.name);
+            assert_eq!(old.period_cycles, new.period_cycles, "{} period", net.name);
+            assert_eq!(
+                mapping_tuples(&old),
+                mapping_tuples(&new),
+                "{} per-stage mappings",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn simulate_identical_through_stageplan_path() {
+    let mut rng = Rng::new(72);
+    for net in legacy_models() {
+        let n_blocks = net.conv_layer_ids().len();
+        let masks = [
+            GateMask::all_active(),
+            GateMask::depth_prefix(&net, n_blocks.div_ceil(2)),
+            GateMask::width(0.5),
+        ];
+        for cfg in configs_for(&net, &mut rng).into_iter().take(3) {
+            let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
+            let plan = passes::schedule(&net).unwrap();
+            for mask in &masks {
+                let (lat, per, pw, res, stages) =
+                    reference_simulate(&net, &ZYNQ_7100, mask, &eval);
+                let new = sim::simulate_with(&plan, &ZYNQ_7100, mask, &eval);
+                assert_eq!(lat, new.latency_cycles, "{} latency", net.name);
+                assert_eq!(per, new.period_cycles, "{} period", net.name);
+                assert!((pw - new.power_mw).abs() < 1e-9, "{} power", net.name);
+                assert_eq!(res, new.resources, "{} resources", net.name);
+                let new_stages: Vec<(u64, u64, bool)> = new
+                    .per_stage
+                    .iter()
+                    .map(|s| (s.busy_cycles, s.passes, s.gated))
+                    .collect();
+                assert_eq!(stages, new_stages, "{} per-stage", net.name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_plan_respects_every_edge() {
+    for name in zoo::NAMES {
+        let net = zoo::by_name(name).unwrap();
+        let plan = passes::schedule(&net).unwrap();
+        // stage ids are a permutation-free topological order: every edge
+        // goes forward and matches a pred slot of its consumer
+        for e in &plan.edges {
+            assert!(e.src < e.dst, "{name}: edge ({}, {}) not forward", e.src, e.dst);
+            assert!(
+                plan.stages[e.dst].preds.contains(&e.src),
+                "{name}: edge ({}, {}) missing from preds",
+                e.src,
+                e.dst
+            );
+        }
+        for s in &plan.stages {
+            for &p in &s.preds {
+                assert!(p < s.id, "{name}: stage {} consumes later stage {p}", s.id);
+            }
+        }
+        // gene order == legacy chromosome layout
+        assert_eq!(plan.conv_bounds(), net.conv_filter_bounds(), "{name}");
+        assert_eq!(plan.gate_blocks, net.conv_layer_ids().len(), "{name}");
+        // conv slots are dense and in stage order
+        let slots: Vec<usize> = plan
+            .stages
+            .iter()
+            .filter_map(|s| s.conv_slot)
+            .collect();
+        assert_eq!(slots, (0..slots.len()).collect::<Vec<_>>(), "{name}");
+    }
+}
+
+#[test]
+fn shape_inference_agrees_pre_and_post_fusion() {
+    // sprinkle standalone relu nodes into random chains; canonicalize
+    // must fold them without changing any surviving layer's output shape
+    let mut rng = Rng::new(9);
+    for _ in 0..20 {
+        let mut b = NetworkBuilder::new("fuzz", 32, 32, 3);
+        let mut convs = 0;
+        let mut pools = 0;
+        for _ in 0..rng.below(6) + 1 {
+            b = b.conv(rng.below(8) + 1, 3, 1, Padding::Same, false);
+            convs += 1;
+            if rng.chance(0.6) {
+                b = b.relu();
+            }
+            // cap pooling so the 32x32 frame never shrinks below 4x4
+            if pools < 3 && rng.chance(0.3) {
+                b = b.maxpool(2, 2);
+                pools += 1;
+                if rng.chance(0.3) {
+                    b = b.relu(); // unfusable: stays a stage
+                }
+            }
+        }
+        let net = b.build();
+        assert!(convs > 0);
+        let pre = shapes::infer(&net).unwrap();
+        let canon = passes::canonicalize(&net).unwrap();
+        let post = shapes::infer(&canon).unwrap();
+        assert_eq!(pre.final_output(), post.final_output());
+        // every canonical layer keeps the shape of its source layer: walk
+        // both nets front-to-back skipping folded relus in the original
+        let mut ci = 0usize;
+        for l in &net.layers {
+            if ci < canon.layers.len() && canon.layers[ci].name == l.name {
+                assert_eq!(
+                    pre.output(l.id),
+                    post.output(ci),
+                    "shape drift at {}",
+                    l.name
+                );
+                ci += 1;
+            }
+        }
+        assert_eq!(ci, canon.layers.len(), "canonical layers unmatched");
+        // and the canonical net evaluates
+        let cfg = DesignConfig::uniform(&net, 2, FpRep::Int16);
+        assert!(design::evaluate(&net, &cfg, &ZYNQ_7100).is_ok());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Branchy end-to-end (acceptance: yolov5l through the whole compiler)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn yolov5l_full_compiler_pipeline() {
+    let net = zoo::yolov5l();
+    assert!(net.has_branches(), "faithful yolo must carry real concats");
+
+    // evaluate: branch buffering lands in the resource model
+    let plan = passes::schedule(&net).unwrap();
+    let cfg = DesignConfig::uniform(&net, 2, FpRep::Int8);
+    let eval = design::evaluate_plan(&plan, &cfg, &ZYNQ_7100).unwrap();
+    let branch_words: usize = plan
+        .edges
+        .iter()
+        .filter(|e| e.kind == EdgeKind::Branch)
+        .map(|e| e.fifo_words)
+        .sum();
+    assert!(branch_words > 0, "yolo must buffer branch edges");
+    let concat_bram: usize = plan
+        .stages
+        .iter()
+        .filter(|s| matches!(s.kind, LayerKind::Concat { .. }))
+        .map(|s| eval.mappings[s.id].resources.bram)
+        .sum();
+    assert!(concat_bram > 0, "branch buffers must cost BRAM");
+
+    // simulate under full, depth-morphed and width-morphed masks
+    let full = sim::simulate_with(&plan, &ZYNQ_7100, &GateMask::all_active(), &eval);
+    let depth_path = morph::MorphPath {
+        name: "d8_w100".into(),
+        depth: 8,
+        width_pct: 100,
+        accuracy: 0.5,
+        params: 1,
+        macs: 1,
+    };
+    let width_path = morph::MorphPath {
+        name: "d104_w50".into(),
+        depth: plan.gate_blocks,
+        width_pct: 50,
+        accuracy: 0.5,
+        params: 1,
+        macs: 2,
+    };
+    let d_mask = morph::gate_mask_for(&net, &depth_path).unwrap();
+    let w_mask = morph::gate_mask_for(&net, &width_path).unwrap();
+    let deep = sim::simulate_with(&plan, &ZYNQ_7100, &d_mask, &eval);
+    let wide = sim::simulate_with(&plan, &ZYNQ_7100, &w_mask, &eval);
+    assert!(deep.latency_cycles < full.latency_cycles, "depth morph must cut latency");
+    assert!(deep.power_mw < full.power_mw);
+    assert!(wide.period_cycles <= full.period_cycles);
+
+    // RTL emission
+    let bundle = forgemorph::rtl::emit_plan(&plan, &cfg, &eval);
+    let top = bundle.file(&format!("{}.v", bundle.top_name)).unwrap();
+    assert!(top.contains("concat_mux #(") && top.contains("spp_pe #("));
+
+    // DSE end-to-end on the 104-gene chromosome (quick profile)
+    let dse_cfg = forgemorph::dse::DseConfig {
+        population: 12,
+        generations: 2,
+        seed: 3,
+        rep: FpRep::Int8,
+        ..forgemorph::dse::DseConfig::default()
+    };
+    let res = forgemorph::dse::run(&net, &ZYNQ_7100, &dse_cfg);
+    assert!(!res.pareto.is_empty(), "unconstrained search must yield a front");
+    for c in &res.pareto {
+        assert_eq!(c.config.parallelism.len(), plan.conv_stage_ids.len());
+    }
+}
+
+#[test]
+fn unet_tiny_serves_as_second_branchy_workload() {
+    let net = zoo::unet_tiny();
+    let plan = passes::schedule(&net).unwrap();
+    assert!(!plan.is_chain());
+    let cfg = DesignConfig::uniform(&net, 4, FpRep::Int16);
+    let eval = design::evaluate_plan(&plan, &cfg, &ZYNQ_7100).unwrap();
+    let r = sim::simulate_with(&plan, &ZYNQ_7100, &GateMask::all_active(), &eval);
+    assert!(r.latency_cycles >= eval.latency_cycles as u64);
+    // skip-concat branches buffer the encoder fmaps
+    let words: usize = plan.edges.iter().map(|e| e.fifo_words).sum();
+    // e1 (96*96*16) + e2 (48*48*32) encoder taps
+    assert_eq!(words, 96 * 96 * 16 + 48 * 48 * 32);
+}

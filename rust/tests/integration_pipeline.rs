@@ -73,7 +73,7 @@ fn governor_tracks_budget_trace() {
         })
         .collect();
     let registry = PathRegistry::new(paths);
-    let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &registry);
+    let costs = sim_path_costs(&net, &design, &ZYNQ_7100, &registry).expect("lowerable paths");
     let mut gov = Governor::new(registry, costs, 1);
     assert_eq!(gov.current(), "d3_w100");
 
