@@ -112,6 +112,7 @@ fn main() -> Result<()> {
         max_wait: Duration::from_millis(2),
         patience: 2,
         workers,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec)?;
 

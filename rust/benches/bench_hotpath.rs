@@ -8,6 +8,9 @@
 //!                               memo-cache effectiveness, vs the pre-PR
 //!                               serial no-cache shape; writes
 //!                               `BENCH_dse.json` at the repo root
+//! * `distill epoch`           — DistillCycle ladder-training throughput on
+//!                               the tiny demo spec; writes
+//!                               `BENCH_distill.json` at the repo root
 //! * `sim::simulate`           — cycle simulation of small & big models
 //! * `rtl::emit`               — Verilog generation
 //! * `json parse`              — manifest parsing
@@ -281,6 +284,62 @@ fn main() {
         }
     }
 
+    // --- DistillCycle training engine ---------------------------------------
+    // Distill-epoch throughput on the tiny demo ladder: full teacher/
+    // student/polish cycle, best-of-3 wall time, machine-readable copy in
+    // BENCH_distill.json (the distill perf trajectory across PRs).
+    {
+        use forgemorph::distill::{self, DistillConfig, DistillSpec, Phase};
+        let spec = DistillSpec::tiny();
+        let cfg = DistillConfig { epochs_per_stage: 1, batch: 32, ..DistillConfig::default() };
+        let ds = spec.dataset(256, 64, 0);
+        let mut best_ms = f64::INFINITY;
+        let mut result = None;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let r = distill::distillcycle_train(&spec, &ds, &cfg);
+            best_ms = best_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+            result = Some(r);
+        }
+        let result = result.expect("trained");
+        let profile = distill::AccuracyProfile::from_result(&spec, &cfg, &result);
+        // teacher/student/polish records are one pass each; a calibrate
+        // record summarizes epochs_per_stage passes over the train set
+        let epoch_passes: usize = result
+            .history
+            .iter()
+            .map(|r| if r.phase == Phase::Calibrate { cfg.epochs_per_stage } else { 1 })
+            .sum();
+        let samples = epoch_passes * ds.n_train();
+        let samples_per_sec = samples as f64 / (best_ms / 1e3);
+        let epoch_ms = best_ms / epoch_passes as f64;
+        println!(
+            "distill::train_profile {} ({} paths):        {best_ms:>9.2} ms  \
+             ({epoch_passes} epoch passes, {epoch_ms:.2} ms/epoch, {samples_per_sec:.0} samples/s)",
+            spec.name,
+            profile.paths.len()
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"distill_engine\",\n  \"model\": \"{}\",\n  \
+             \"train_samples\": {},\n  \"epochs_per_stage\": {},\n  \
+             \"paths\": {},\n  \"epoch_passes\": {epoch_passes},\n  \
+             \"wall_ms\": {best_ms:.3},\n  \"epoch_ms\": {epoch_ms:.4},\n  \
+             \"samples_per_sec\": {samples_per_sec:.1},\n  \
+             \"floor\": {:.6}\n}}\n",
+            spec.name,
+            ds.n_train(),
+            cfg.epochs_per_stage,
+            profile.paths.len(),
+            profile.floor()
+        );
+        let out =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_distill.json");
+        match std::fs::write(&out, &json) {
+            Ok(()) => println!("wrote {}", out.display()),
+            Err(e) => println!("(BENCH_distill.json not written: {e})"),
+        }
+    }
+
     // --- cycle simulation ---------------------------------------------------
     bench("sim::simulate mnist", budget, || {
         std::hint::black_box(sim::simulate(&mnist, &cfg_m, &ZYNQ_7100, &GateMask::all_active()));
@@ -361,6 +420,7 @@ fn main() {
                 max_wait: Duration::from_micros(500),
                 patience: 2,
                 workers,
+                ..ServeConfig::default()
             };
             let t0 = Instant::now();
             let mut coord = Coordinator::start(cfg, spec).unwrap();

@@ -64,11 +64,19 @@ pub struct ServeConfig {
     pub patience: usize,
     /// worker shards (each with its own backend instance)
     pub workers: usize,
+    /// hard governor accuracy floor (DistillCycle profile floor or an
+    /// application SLO); 0.0 = unconstrained
+    pub accuracy_floor: f64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_wait: Duration::from_millis(2), patience: 2, workers: 1 }
+        ServeConfig {
+            max_wait: Duration::from_millis(2),
+            patience: 2,
+            workers: 1,
+            accuracy_floor: 0.0,
+        }
     }
 }
 
@@ -351,9 +359,9 @@ fn worker_loop(
         let costs = backend.path_costs();
         let _ = shared.frame_len.set(backend.frame_len());
         let _ = shared.cost_rows.set(costs.rows.clone());
-        let _ = shared
-            .governor
-            .set(Mutex::new(Governor::new(registry, costs, cfg.patience)));
+        let _ = shared.governor.set(Mutex::new(
+            Governor::new(registry, costs, cfg.patience).with_accuracy_floor(cfg.accuracy_floor),
+        ));
     }
     let _ = ready.send(Ok(()));
     // drop the handshake sender now: if another shard panics before its

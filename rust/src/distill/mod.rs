@@ -1,0 +1,1362 @@
+//! DistillCycle — joint full-model + subnetwork training with
+//! hierarchical knowledge distillation (Sec. IV-B, Algorithm 2).
+//!
+//! The third ForgeMorph pillar: every NeuroMorph execution path must be
+//! an *accurate* standalone network, so the trainer jointly optimizes
+//! the full model and all of its (depth, width) subnetworks:
+//!
+//! 1. **Grow progressively** — stage `i` appends Layer-Block `B_i`
+//!    (Eq. 19) and trains the depth-`i` network as the current *teacher*
+//!    with plain cross-entropy (Eq. 16).
+//! 2. **Train in cycles** — within each stage, teacher epochs alternate
+//!    with *student* phases over the cycled morph paths: the previous
+//!    depth (the teacher's depth-wise parent branch) and the stage's
+//!    reduced-width variants. A final head-only *calibration* pass
+//!    re-aligns every subnetwork head with the finished trunk.
+//! 3. **Hierarchical KD** — students minimize
+//!    `λ·CE + (1−λ)·τ²·KL(σ(t/τ) ‖ σ(s/τ))` against their parent path's
+//!    fresh logits (Eqs. 17–18).
+//! 4. **LR decay for stability** — block `j < i` trains at `α·γ^(i−1−j)`
+//!    (Eq. 20) against catastrophic forgetting; fresh heads are exempt.
+//!
+//! The engine is the Rust twin of `python/compile/train.py` (pinned
+//! against its reference behavior by `tests/distill_reference.rs`) built
+//! on the deterministic [`tensor`] core: single-threaded, seeded, no
+//! allocator- or thread-count-dependent numerics — two runs with the
+//! same seed produce **byte-identical** [`AccuracyProfile`] JSON.
+//!
+//! The output feeds the rest of the pipeline:
+//! * [`AccuracyProfile::apply_to`] persists trained accuracies into the
+//!   runtime manifest ([`crate::runtime::Manifest`]);
+//! * [`AccuracyProfile::morph_paths`] hands the ladder to
+//!   [`crate::dse`] as the third NSGA-II objective and to the
+//!   [`crate::morph::governor`] as its accuracy-floor registry.
+
+pub mod data;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+
+use crate::morph::MorphPath;
+use crate::quant::QParams;
+use crate::runtime::ModelManifest;
+use crate::sim::GateMask;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use data::Dataset;
+use tensor::{Conv, Dense};
+
+/// Errors from spec construction / profile parsing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistillError {
+    /// model cannot be distilled (not a chain of conv blocks)
+    Unsupported(String),
+    /// a ladder width outside the deployable gate range
+    Width(usize),
+    /// AccuracyProfile JSON malformed
+    Profile(String),
+}
+
+impl std::fmt::Display for DistillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistillError::Unsupported(m) => write!(f, "distill: unsupported model: {m}"),
+            DistillError::Width(pct) => write!(
+                f,
+                "distill: ladder width {pct}% outside the deployable range (10..=100)"
+            ),
+            DistillError::Profile(m) => write!(f, "accuracy profile: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DistillError {}
+
+/// One morphable execution path: the first `depth` blocks at `width_pct`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PathSpec {
+    pub depth: usize,
+    pub width_pct: usize,
+}
+
+impl PathSpec {
+    pub fn name(&self) -> String {
+        format!("d{}_w{}", self.depth, self.width_pct)
+    }
+}
+
+/// Architecture descriptor of the morphable `a-2a-3a...` pipeline
+/// (the Rust twin of `model.py::ModelSpec`).
+#[derive(Debug, Clone)]
+pub struct DistillSpec {
+    pub name: String,
+    /// input (h, w, c)
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    /// per Layer-Block conv filter counts
+    pub filters: Vec<usize>,
+    pub kernel: usize,
+    /// width ladder the morph layer exposes; every depth trains at each
+    /// of these (`100` is implicit and always present)
+    pub widths: Vec<usize>,
+}
+
+fn width_of(f: usize, pct: usize) -> usize {
+    ((f * pct) / 100).max(1)
+}
+
+impl DistillSpec {
+    /// Validated constructor: every ladder width must be deployable on
+    /// the gate fabric (the same `GateMask::try_width` boundary the
+    /// morph/governor layer enforces) — the sampler is gate-aligned by
+    /// construction.
+    pub fn new(
+        name: impl Into<String>,
+        input: (usize, usize, usize),
+        num_classes: usize,
+        filters: Vec<usize>,
+        widths: Vec<usize>,
+    ) -> Result<DistillSpec, DistillError> {
+        for &pct in &widths {
+            GateMask::try_width(pct as f64 / 100.0).map_err(|_| DistillError::Width(pct))?;
+        }
+        if filters.is_empty() {
+            return Err(DistillError::Unsupported("no conv blocks".into()));
+        }
+        Ok(DistillSpec {
+            name: name.into(),
+            input,
+            num_classes,
+            filters,
+            kernel: 3,
+            widths,
+        })
+    }
+
+    /// Derive the spec from a small a-2a-3a zoo chain. The trained twin
+    /// is `model.py`'s Layer-Block template — conv3x3(SAME, stride 1) +
+    /// ReLU + maxpool2 per block — so any network whose convs deviate
+    /// from that template (strides, other kernels, depthwise blocks,
+    /// branchy edges) is rejected rather than silently trained as a
+    /// different architecture. (Pooling follows the L2 reference: every
+    /// block pools while `min(h, w) >= 2`, even where an L3 descriptor
+    /// skips a trailing pool — the training model is `model.py`'s, by
+    /// design.)
+    pub fn from_network(net: &crate::graph::Network) -> Result<DistillSpec, DistillError> {
+        use crate::graph::LayerKind;
+        let mut filters = Vec::new();
+        for l in &net.layers {
+            match &l.kind {
+                LayerKind::Conv { filters: f, k, stride, .. } => {
+                    if *k != 3 || *stride != 1 {
+                        return Err(DistillError::Unsupported(format!(
+                            "{}: conv '{}' is {k}x{k}/s{stride}; the DistillCycle \
+                             Layer-Block template is 3x3/s1",
+                            net.name, l.name
+                        )));
+                    }
+                    filters.push(*f);
+                }
+                LayerKind::DwConv { .. } => {
+                    return Err(DistillError::Unsupported(format!(
+                        "{}: depthwise blocks are not morphable depth prefixes",
+                        net.name
+                    )))
+                }
+                _ => {}
+            }
+        }
+        for &(s, d) in &net.connections {
+            // a chain has exactly the implicit (i, i+1) edges
+            if d != s + 1 {
+                return Err(DistillError::Unsupported(format!(
+                    "{}: branchy graph (edge {s}->{d}); DistillCycle trains chains",
+                    net.name
+                )));
+            }
+        }
+        let classes = crate::backend::net_num_classes(net);
+        DistillSpec::new(net.name.clone(), net.input_dims(), classes, filters, vec![50])
+    }
+
+    /// Tiny 3-block spec shared by tests, the report harness and the
+    /// bench: fast enough to train in a debug-build test, deep enough to
+    /// exercise every DistillCycle phase (3 depths × 2 widths).
+    pub fn tiny() -> DistillSpec {
+        DistillSpec::new("tiny3", (16, 16, 1), 4, vec![8, 12, 16], vec![50]).unwrap()
+    }
+
+    /// The gate-aligned subnetwork ladder: the full `GateMask` widths ×
+    /// depth-ladder cross product — every depth prefix at full width and
+    /// at each reduced ladder width, exactly the execution paths the
+    /// morph layer can gate. Training the reduced widths at *every*
+    /// depth shapes the sliced filter prefixes from the first stage on
+    /// (a half-width path that only ever trains at full depth inherits
+    /// channels co-adapted to full-width use and underperforms —
+    /// measured, not hypothetical).
+    pub fn paths(&self) -> Vec<PathSpec> {
+        let d = self.filters.len();
+        let mut out: Vec<PathSpec> = Vec::new();
+        for depth in 1..=d {
+            out.push(PathSpec { depth, width_pct: 100 });
+            for &pct in self.widths.iter().filter(|&&p| p != 100) {
+                out.push(PathSpec { depth, width_pct: pct });
+            }
+        }
+        out
+    }
+
+    pub fn full_path(&self) -> PathSpec {
+        PathSpec { depth: self.filters.len(), width_pct: 100 }
+    }
+
+    /// (h, w) of the feature map after `depth` Layer-Blocks.
+    pub fn feature_shape(&self, depth: usize) -> (usize, usize) {
+        let (mut h, mut w, _) = self.input;
+        for _ in 0..depth {
+            if h.min(w) >= 2 {
+                h /= 2;
+                w /= 2;
+            }
+        }
+        (h, w)
+    }
+
+    /// FC head input size: the flattened streamed feature map (Eq. 5).
+    fn head_dim(&self, path: PathSpec) -> usize {
+        let (h, w) = self.feature_shape(path.depth);
+        h * w * width_of(self.filters[path.depth - 1], path.width_pct)
+    }
+
+    /// Active parameters on one path.
+    pub fn count_params(&self, path: PathSpec) -> usize {
+        let k = self.kernel;
+        let mut cin = self.input.2;
+        let mut total = 0;
+        for i in 0..path.depth {
+            let cout = width_of(self.filters[i], path.width_pct);
+            total += k * k * cin * cout + cout;
+            cin = cout;
+        }
+        total + self.head_dim(path) * self.num_classes + self.num_classes
+    }
+
+    /// MACs per frame on one path (conv + head).
+    pub fn count_macs(&self, path: PathSpec) -> usize {
+        let k = self.kernel;
+        let (mut h, mut w, mut cin) = self.input;
+        let mut total = 0;
+        for i in 0..path.depth {
+            let cout = width_of(self.filters[i], path.width_pct);
+            total += h * w * k * k * cin * cout;
+            if h.min(w) >= 2 {
+                h /= 2;
+                w /= 2;
+            }
+            cin = cout;
+        }
+        total + h * w * cin * self.num_classes
+    }
+
+    /// Seeded synthetic dataset with this spec's geometry. Noise/shift
+    /// are gentler than the Python reference's MNIST-scale settings:
+    /// tiny images average far less noise per feature, and these values
+    /// keep every ladder path comfortably above chance on the small
+    /// training budgets the offline tests/CI use.
+    pub fn dataset(&self, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+        let (h, w, c) = self.input;
+        data::make_dataset(&self.name, h, w, c, self.num_classes, n_train, n_test, 0.35, 1, seed)
+    }
+}
+
+/// DistillCycle hyperparameters (Algorithm 2's `params` input) —
+/// mirrors `train.py::TrainConfig`.
+#[derive(Debug, Clone)]
+pub struct DistillConfig {
+    /// α0
+    pub lr: f32,
+    pub momentum: f32,
+    /// λ — CE vs KD mix (Eq. 18)
+    pub lam: f32,
+    /// τ — distillation temperature (Eq. 17)
+    pub tau: f32,
+    /// γ — per-block LR decay (Eq. 20)
+    pub gamma: f32,
+    pub epochs_per_stage: usize,
+    pub batch: usize,
+    /// α shrink between growth stages (Alg. 2's α ← α/10, softened)
+    pub lr_stage_decay: f32,
+    pub seed: u64,
+    /// quantization-aware KD: fake-quant every block activation at this
+    /// bit width during training (straight-through gradients)
+    pub qat_bits: Option<u32>,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig {
+            // higher than train.py's 0.02: the offline regime trains on a
+            // few hundred samples for a handful of epochs, and the larger
+            // step (with the same norm-5 clip) is what reaches useful
+            // accuracy inside that budget
+            lr: 0.05,
+            momentum: 0.9,
+            lam: 0.5,
+            tau: 3.0,
+            gamma: 0.5,
+            epochs_per_stage: 3,
+            batch: 64,
+            lr_stage_decay: 0.6,
+            seed: 0,
+            qat_bits: None,
+        }
+    }
+}
+
+/// Trainable parameters: shared conv blocks + one head per morph path.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub blocks: Vec<Conv>,
+    pub heads: BTreeMap<String, Dense>,
+}
+
+/// He-init conv blocks + one FC head per morph path (fixed draw order:
+/// blocks first, then heads in ladder order — reproducible).
+pub fn init_params(spec: &DistillSpec, seed: u64) -> Params {
+    let mut rng = Rng::new(seed);
+    let k = spec.kernel;
+    let mut blocks = Vec::with_capacity(spec.filters.len());
+    let mut cin = spec.input.2;
+    for &f in &spec.filters {
+        let fan_in = (k * k * cin) as f64;
+        let scale = (2.0 / fan_in).sqrt();
+        let w: Vec<f32> = (0..k * k * cin * f).map(|_| (rng.gauss() * scale) as f32).collect();
+        blocks.push(Conv { w, b: vec![0.0; f], k, cin, cout: f });
+        cin = f;
+    }
+    let mut heads = BTreeMap::new();
+    for path in spec.paths() {
+        let dim = spec.head_dim(path);
+        let scale = (1.0 / dim as f64).sqrt();
+        let w: Vec<f32> =
+            (0..dim * spec.num_classes).map(|_| (rng.gauss() * scale) as f32).collect();
+        heads.insert(
+            path.name(),
+            Dense { w, b: vec![0.0; spec.num_classes], dim, classes: spec.num_classes },
+        );
+    }
+    Params { blocks, heads }
+}
+
+/// SGD velocity mirroring the parameter layout.
+struct Velocity {
+    blocks: Vec<(Vec<f32>, Vec<f32>)>,
+    heads: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+impl Velocity {
+    fn zeros(p: &Params) -> Velocity {
+        Velocity {
+            blocks: p
+                .blocks
+                .iter()
+                .map(|b| (vec![0.0; b.w.len()], vec![0.0; b.b.len()]))
+                .collect(),
+            heads: p
+                .heads
+                .iter()
+                .map(|(n, h)| (n.clone(), (vec![0.0; h.w.len()], vec![0.0; h.b.len()])))
+                .collect(),
+        }
+    }
+
+    /// Velocity reset at every phase switch: teacher and students
+    /// optimize different losses over shared blocks, and carrying
+    /// momentum across the switch destabilizes the cycle (train.py).
+    fn zero(&mut self) {
+        for (w, b) in &mut self.blocks {
+            w.iter_mut().for_each(|v| *v = 0.0);
+            b.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for (w, b) in self.heads.values_mut() {
+            w.iter_mut().for_each(|v| *v = 0.0);
+            b.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+/// Per-leaf learning rates — Eq. 20: block `j` at stage `i` trains at
+/// `base_lr * gamma^max(0, stage-1-j)`; heads are fresh capacity (never
+/// "earlier layers"), so they train at `head_lr`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LrTree {
+    pub blocks: Vec<f32>,
+    pub head: f32,
+}
+
+pub fn lr_tree(spec: &DistillSpec, stage: usize, base_lr: f32, gamma: f32, head_lr: f32) -> LrTree {
+    let blocks = (0..spec.filters.len())
+        .map(|j| base_lr * gamma.powi((stage as i32 - 1 - j as i32).max(0)))
+        .collect();
+    LrTree { blocks, head: head_lr }
+}
+
+/// Mean CE over the batch (Eq. 16).
+pub fn cross_entropy(logits: &[f32], classes: usize, y: &[u32]) -> f64 {
+    let n = y.len();
+    let mut total = 0.0f64;
+    for s in 0..n {
+        let row = &logits[s * classes..(s + 1) * classes];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse = row.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>().ln() + m;
+        total += lse - row[y[s] as usize] as f64;
+    }
+    total / n as f64
+}
+
+/// τ²-scaled KL between softened teacher/student outputs (Eq. 17).
+pub fn kd_loss(student: &[f32], teacher: &[f32], classes: usize, tau: f32) -> f64 {
+    let n = student.len() / classes;
+    let mut total = 0.0f64;
+    for s in 0..n {
+        let sl = &student[s * classes..(s + 1) * classes];
+        let tl = &teacher[s * classes..(s + 1) * classes];
+        let t = softmax_f64(tl, tau);
+        let sm = softmax_f64(sl, tau);
+        for c in 0..classes {
+            let tc = t[c].max(1e-9);
+            total += tc * (tc.ln() - sm[c].max(1e-12).ln());
+        }
+    }
+    (tau as f64) * (tau as f64) * total / n as f64
+}
+
+fn softmax_f64(row: &[f32], tau: f32) -> Vec<f64> {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = row.iter().map(|&v| (((v - m) / tau) as f64).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Per-block forward cache for backprop.
+struct BlockAct {
+    h_in: usize,
+    w_in: usize,
+    cin: usize,
+    cout: usize,
+    /// pre-activation (h_in × w_in × cout)
+    pre: Vec<f32>,
+    /// post-ReLU (and post fake-quant under QAT)
+    post: Vec<f32>,
+    /// pool argmax when this block pooled
+    pool_idx: Option<Vec<u32>>,
+    /// block output (post-pool) — next block's input
+    out: Vec<f32>,
+    h_out: usize,
+    w_out: usize,
+}
+
+/// Forward one morph path with caches. `x` is `[n, h, w, c]`.
+fn forward_cached(
+    params: &Params,
+    spec: &DistillSpec,
+    path: PathSpec,
+    x: &[f32],
+    n: usize,
+    qat: Option<u32>,
+) -> (Vec<BlockAct>, Vec<f32>) {
+    let (mut h, mut w, mut cin_a) = spec.input;
+    let mut acts: Vec<BlockAct> = Vec::with_capacity(path.depth);
+    for i in 0..path.depth {
+        let cur: &[f32] = if i == 0 { x } else { &acts[i - 1].out };
+        let conv = &params.blocks[i];
+        let cout_a = width_of(spec.filters[i], path.width_pct);
+        let pre = tensor::conv_fwd(cur, n, h, w, conv, cin_a, cout_a);
+        let mut post = tensor::relu(&pre);
+        if let Some(bits) = qat {
+            fake_quant_tensor(&mut post, bits);
+        }
+        let (out, pool_idx, h_out, w_out) = if h.min(w) >= 2 {
+            let (o, idx) = tensor::pool_fwd(&post, n, h, w, cout_a);
+            (o, Some(idx), h / 2, w / 2)
+        } else {
+            (post.clone(), None, h, w)
+        };
+        acts.push(BlockAct {
+            h_in: h,
+            w_in: w,
+            cin: cin_a,
+            cout: cout_a,
+            pre,
+            post,
+            pool_idx,
+            out,
+            h_out,
+            w_out,
+        });
+        h = h_out;
+        w = w_out;
+        cin_a = cout_a;
+    }
+    let feats = &acts.last().expect("depth >= 1").out;
+    let logits = tensor::fc_fwd(feats, n, &params.heads[&path.name()]);
+    (acts, logits)
+}
+
+/// Symmetric per-tensor fake-quant of an activation tensor (the same
+/// round trip the Pallas kernels apply in their MAC epilogue —
+/// [`crate::quant::QParams`]). Gradients use the straight-through
+/// estimator: the backward pass treats this as identity.
+fn fake_quant_tensor(t: &mut [f32], bits: u32) {
+    let amax = t.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs())).max(1e-8);
+    let p = QParams { scale: amax / QParams::qmax(bits) as f64, bits };
+    for v in t.iter_mut() {
+        *v = p.fake_quant(*v as f64) as f32;
+    }
+}
+
+/// Inference-only forward (teacher logits / accuracy evaluation): the
+/// same arithmetic as [`forward_cached`] — bit-identical logits — with
+/// no backprop caches, no argmax bookkeeping and in-place ReLU. This is
+/// the hot inner loop of every student/calibration phase (teacher
+/// logits are recomputed per batch).
+pub fn forward(
+    params: &Params,
+    spec: &DistillSpec,
+    path: PathSpec,
+    x: &[f32],
+    n: usize,
+    qat: Option<u32>,
+) -> Vec<f32> {
+    debug_assert!(path.depth >= 1);
+    let (mut h, mut w, mut cin_a) = spec.input;
+    let mut cur: Vec<f32> = Vec::new();
+    for i in 0..path.depth {
+        let xin: &[f32] = if i == 0 { x } else { &cur };
+        let cout_a = width_of(spec.filters[i], path.width_pct);
+        let mut act = tensor::conv_fwd(xin, n, h, w, &params.blocks[i], cin_a, cout_a);
+        // in-place ReLU, same -0.0 normalization as tensor::relu
+        for v in act.iter_mut() {
+            *v = if *v > 0.0 { *v } else { 0.0 };
+        }
+        if let Some(bits) = qat {
+            fake_quant_tensor(&mut act, bits);
+        }
+        if h.min(w) >= 2 {
+            cur = tensor::pool_max(&act, n, h, w, cout_a);
+            h /= 2;
+            w /= 2;
+        } else {
+            cur = act;
+        }
+        cin_a = cout_a;
+    }
+    tensor::fc_fwd(&cur, n, &params.heads[&path.name()])
+}
+
+/// Gradients for one step (full-size buffers; zero outside active slices).
+struct Grads {
+    blocks: Vec<(Vec<f32>, Vec<f32>)>,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+}
+
+/// One SGD step on one morph path; optionally distilling (Eq. 18).
+/// Returns the scalar loss.
+#[allow(clippy::too_many_arguments)]
+fn train_step(
+    params: &mut Params,
+    vel: &mut Velocity,
+    spec: &DistillSpec,
+    path: PathSpec,
+    x: &[f32],
+    y: &[u32],
+    teacher_logits: Option<&[f32]>,
+    cfg: &DistillConfig,
+    lrs: &LrTree,
+) -> f64 {
+    let n = y.len();
+    let classes = spec.num_classes;
+    let (acts, logits) = forward_cached(params, spec, path, x, n, cfg.qat_bits);
+
+    // loss + dlogits
+    let ce = cross_entropy(&logits, classes, y);
+    let mut loss = ce;
+    let mut dlogits = vec![0.0f32; n * classes];
+    let ce_w = if teacher_logits.is_some() { cfg.lam } else { 1.0 };
+    for s in 0..n {
+        let p = softmax_f64(&logits[s * classes..(s + 1) * classes], 1.0);
+        for c in 0..classes {
+            let onehot = if c == y[s] as usize { 1.0 } else { 0.0 };
+            dlogits[s * classes + c] = ce_w * (((p[c] - onehot) / n as f64) as f32);
+        }
+    }
+    if let Some(t_logits) = teacher_logits {
+        let kd = kd_loss(&logits, t_logits, classes, cfg.tau);
+        loss = (cfg.lam as f64) * ce + (1.0 - cfg.lam as f64) * kd;
+        // dKD/dS = τ·(σ(s/τ) − σ(t/τ))/N per element
+        for s in 0..n {
+            let sp = softmax_f64(&logits[s * classes..(s + 1) * classes], cfg.tau);
+            let tp = softmax_f64(&t_logits[s * classes..(s + 1) * classes], cfg.tau);
+            for c in 0..classes {
+                dlogits[s * classes + c] += (1.0 - cfg.lam)
+                    * ((cfg.tau as f64 * (sp[c] - tp[c]) / n as f64) as f32);
+            }
+        }
+    }
+
+    // backward
+    let head_name = path.name();
+    let head = &params.heads[&head_name];
+    let mut grads = Grads {
+        blocks: params
+            .blocks
+            .iter()
+            .map(|b| (vec![0.0; b.w.len()], vec![0.0; b.b.len()]))
+            .collect(),
+        head_w: vec![0.0; head.w.len()],
+        head_b: vec![0.0; head.b.len()],
+    };
+    let feats = &acts.last().expect("depth >= 1").out;
+    let mut dout =
+        tensor::fc_bwd(feats, n, head, &dlogits, &mut grads.head_w, &mut grads.head_b);
+    // head-only phases (calibration) freeze the trunk: skip the conv
+    // backward entirely — the head update and the clip norm then see
+    // exactly the gradients that will be applied
+    let head_only = lrs.blocks.iter().take(path.depth).all(|&l| l == 0.0);
+    if !head_only {
+        for (i, act) in acts.iter().enumerate().rev() {
+            let dpost = match &act.pool_idx {
+                Some(idx) => tensor::pool_bwd(&dout, idx, act.post.len()),
+                None => dout,
+            };
+            // QAT fake-quant: straight-through (identity) backward
+            let dpre = tensor::relu_bwd(&act.pre, &dpost);
+            let x_in: &[f32] = if i == 0 { x } else { &acts[i - 1].out };
+            let (gw, gb) = &mut grads.blocks[i];
+            // the first block's input gradient has no consumer
+            dout = tensor::conv_bwd(
+                x_in, n, act.h_in, act.w_in, &params.blocks[i], act.cin, act.cout, &dpre, gw,
+                gb, i != 0,
+            );
+        }
+    }
+    let _ = dout;
+
+    // global-norm clipping at 5.0 (train.py): keeps the alternating
+    // teacher/student updates stable across growth stages
+    let mut sq = 1e-12f64;
+    for (gw, gb) in &grads.blocks {
+        sq += gw.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+        sq += gb.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+    }
+    sq += grads.head_w.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+    sq += grads.head_b.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+    let clip = (5.0 / sq.sqrt()).min(1.0) as f32;
+
+    // SGD + momentum with the per-leaf LR tree
+    let m = cfg.momentum;
+    for (i, block) in params.blocks.iter_mut().enumerate().take(path.depth) {
+        let (gw, gb) = &grads.blocks[i];
+        let (vw, vb) = &mut vel.blocks[i];
+        let lr = lrs.blocks[i];
+        for ((p, v), &g) in block.w.iter_mut().zip(vw.iter_mut()).zip(gw.iter()) {
+            *v = m * *v + g * clip;
+            *p -= lr * *v;
+        }
+        for ((p, v), &g) in block.b.iter_mut().zip(vb.iter_mut()).zip(gb.iter()) {
+            *v = m * *v + g * clip;
+            *p -= lr * *v;
+        }
+    }
+    let head = params.heads.get_mut(&head_name).expect("head exists");
+    let (vw, vb) = vel.heads.get_mut(&head_name).expect("velocity exists");
+    for ((p, v), &g) in head.w.iter_mut().zip(vw.iter_mut()).zip(grads.head_w.iter()) {
+        *v = m * *v + g * clip;
+        *p -= lrs.head * *v;
+    }
+    for ((p, v), &g) in head.b.iter_mut().zip(vb.iter_mut()).zip(grads.head_b.iter()) {
+        *v = m * *v + g * clip;
+        *p -= lrs.head * *v;
+    }
+    loss
+}
+
+/// Which DistillCycle phase produced a loss record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Teacher,
+    Student,
+    Polish,
+    /// head-only KD refresh against the final trunk (see
+    /// [`distillcycle_train`])
+    Calibrate,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Teacher => "teacher",
+            Phase::Student => "student",
+            Phase::Polish => "polish",
+            Phase::Calibrate => "calibrate",
+        }
+    }
+}
+
+/// One epoch's mean loss for one (stage, phase, path).
+#[derive(Debug, Clone)]
+pub struct LossRecord {
+    pub stage: usize,
+    pub phase: Phase,
+    pub path: String,
+    pub epoch: usize,
+    pub loss: f64,
+}
+
+/// Training outcome: parameters, per-path accuracy, full loss history.
+pub struct TrainResult {
+    pub params: Params,
+    /// (path name, test accuracy) in ladder order
+    pub accuracies: Vec<(String, f64)>,
+    pub history: Vec<LossRecord>,
+}
+
+/// Shuffled full-batch index chunks; the trailing partial batch is
+/// dropped, matching `train.py::_epoch_batches` (reference parity — the
+/// CLI warns when the train count is not a batch multiple).
+fn epoch_batches(rng: &mut Rng, n: usize, batch: usize) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    order.chunks_exact(batch.min(n).max(1)).map(|c| c.to_vec()).collect()
+}
+
+fn gather(ds_x: &[f32], frame: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * frame);
+    for &i in idx {
+        out.extend_from_slice(&ds_x[i * frame..(i + 1) * frame]);
+    }
+    out
+}
+
+/// Top-1 accuracy of one morph path on the test split. `qat` must match
+/// the training datapath: a QAT-trained ladder is evaluated through the
+/// same fake-quant forward it will deploy with, so the profile reports
+/// the quantized accuracy the governor/DSE actually get.
+pub fn accuracy(
+    params: &Params,
+    spec: &DistillSpec,
+    path: PathSpec,
+    ds: &Dataset,
+    qat: Option<u32>,
+) -> f64 {
+    let frame = ds.frame_len();
+    let classes = spec.num_classes;
+    let mut hits = 0usize;
+    let batch = 256usize;
+    let n = ds.n_test();
+    if n == 0 {
+        // an empty test split measures nothing; 0.0 (the manifest's
+        // "untrained" marker) beats a NaN that would poison the profile
+        return 0.0;
+    }
+    let mut i = 0;
+    while i < n {
+        let m = batch.min(n - i);
+        let x = &ds.x_test[i * frame..(i + m) * frame];
+        let logits = forward(params, spec, path, x, m, qat);
+        for s in 0..m {
+            let row = &logits[s * classes..(s + 1) * classes];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                .unwrap()
+                .0;
+            if arg == ds.y_test[i + s] as usize {
+                hits += 1;
+            }
+        }
+        i += m;
+    }
+    hits as f64 / n as f64
+}
+
+/// Algorithm 2: progressive growth with teacher/student KD cycles and a
+/// final full-path polish. Deterministic: seeded, single-threaded.
+pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig) -> TrainResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut params = init_params(spec, cfg.seed);
+    let mut vel = Velocity::zeros(&params);
+    let frame = ds.frame_len();
+    let n_train = ds.n_train();
+    let mut history: Vec<LossRecord> = Vec::new();
+
+    let n_stages = spec.filters.len();
+    let mut alpha = cfg.lr;
+    for stage in 1..=n_stages {
+        let teacher = PathSpec { depth: stage, width_pct: 100 };
+        // students cycled within every epoch (Alg. 2's
+        // morphing_schedule): each subnetwork distills from its parent
+        // path — the previous depth (early-exit branch, depth-wise
+        // parent) and this stage's reduced widths (width-wise children
+        // of the current teacher)
+        let mut students: Vec<PathSpec> = Vec::new();
+        if stage > 1 {
+            students.push(PathSpec { depth: stage - 1, width_pct: 100 });
+        }
+        for &pct in spec.widths.iter().filter(|&&p| p != 100) {
+            students.push(PathSpec { depth: stage, width_pct: pct });
+        }
+
+        let lr_teacher = lr_tree(spec, stage, alpha, cfg.gamma, cfg.lr);
+        for epoch in 0..cfg.epochs_per_stage {
+            // Phase 1 — teacher: grow and train N_full^(i) with CE
+            vel.zero();
+            let mut losses = Vec::new();
+            for idx in epoch_batches(&mut rng, n_train, cfg.batch) {
+                let bx = gather(&ds.x_train, frame, &idx);
+                let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
+                losses.push(train_step(
+                    &mut params, &mut vel, spec, teacher, &bx, &by, None, cfg, &lr_teacher,
+                ));
+            }
+            history.push(LossRecord {
+                stage,
+                phase: Phase::Teacher,
+                path: teacher.name(),
+                epoch,
+                loss: mean(&losses),
+            });
+
+            // Phase 2 — students: CE + KD against the fresh teacher
+            for &spath in &students {
+                let lr_student = lr_tree(spec, stage, alpha, cfg.gamma, cfg.lr);
+                vel.zero();
+                let mut losses = Vec::new();
+                for idx in epoch_batches(&mut rng, n_train, cfg.batch) {
+                    let bx = gather(&ds.x_train, frame, &idx);
+                    let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
+                    let t_logits =
+                        forward(&params, spec, teacher, &bx, by.len(), cfg.qat_bits);
+                    losses.push(train_step(
+                        &mut params,
+                        &mut vel,
+                        spec,
+                        spath,
+                        &bx,
+                        &by,
+                        Some(&t_logits),
+                        cfg,
+                        &lr_student,
+                    ));
+                }
+                history.push(LossRecord {
+                    stage,
+                    phase: Phase::Student,
+                    path: spath.name(),
+                    epoch,
+                    loss: mean(&losses),
+                });
+            }
+        }
+        alpha *= cfg.lr_stage_decay; // α ← α/10 in Alg. 2, softened
+    }
+
+    // Final polish: the last-added block+head saw the fewest updates, so
+    // the full path gets one extra teacher-only cycle (keeps full >=
+    // subnets, the ordering the paper reports).
+    let full = spec.full_path();
+    let lr_full = lr_tree(spec, n_stages, alpha, cfg.gamma, cfg.lr);
+    vel.zero();
+    for epoch in 0..cfg.epochs_per_stage {
+        let mut losses = Vec::new();
+        for idx in epoch_batches(&mut rng, n_train, cfg.batch) {
+            let bx = gather(&ds.x_train, frame, &idx);
+            let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
+            losses.push(train_step(
+                &mut params, &mut vel, spec, full, &bx, &by, None, cfg, &lr_full,
+            ));
+        }
+        history.push(LossRecord {
+            stage: n_stages + 1,
+            phase: Phase::Polish,
+            path: full.name(),
+            epoch,
+            loss: mean(&losses),
+        });
+    }
+
+    // Head calibration: every non-full head was last trained against an
+    // *earlier* trunk, and later stages + polish keep moving the shared
+    // blocks (at γ-decayed but nonzero rates) — enough drift to strand a
+    // head trained stages ago. One head-only KD pass per path against
+    // the FINAL network re-aligns every readout with the trunk that
+    // actually ships; trunk weights are frozen (block LR 0), so no path
+    // can disturb another.
+    let lr_cal = LrTree { blocks: vec![0.0; n_stages], head: cfg.lr };
+    for &cpath in spec.paths().iter().filter(|&&p| p != full) {
+        vel.zero();
+        let mut losses = Vec::new();
+        for _ in 0..cfg.epochs_per_stage {
+            for idx in epoch_batches(&mut rng, n_train, cfg.batch) {
+                let bx = gather(&ds.x_train, frame, &idx);
+                let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
+                let t_logits = forward(&params, spec, full, &bx, by.len(), cfg.qat_bits);
+                losses.push(train_step(
+                    &mut params,
+                    &mut vel,
+                    spec,
+                    cpath,
+                    &bx,
+                    &by,
+                    Some(&t_logits),
+                    cfg,
+                    &lr_cal,
+                ));
+            }
+        }
+        history.push(LossRecord {
+            stage: n_stages + 2,
+            phase: Phase::Calibrate,
+            path: cpath.name(),
+            epoch: 0,
+            loss: mean(&losses),
+        });
+    }
+
+    let accuracies = spec
+        .paths()
+        .iter()
+        .map(|&p| (p.name(), accuracy(&params, spec, p, ds, cfg.qat_bits)))
+        .collect();
+    TrainResult { params, accuracies, history }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AccuracyProfile — the artifact the rest of the pipeline consumes
+// ---------------------------------------------------------------------------
+
+/// One execution path's trained outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathAccuracy {
+    pub name: String,
+    pub depth: usize,
+    pub width_pct: usize,
+    pub accuracy: f64,
+    pub params: usize,
+    pub macs: usize,
+    /// per-epoch mean loss trajectory of this path (KD loss for student
+    /// phases, CE for teacher/polish), in training order
+    pub loss_trajectory: Vec<f64>,
+}
+
+/// Per-execution-path accuracies + loss trajectories: the DistillCycle
+/// output persisted next to the AOT manifest and consumed by the
+/// governor (accuracy floor) and the DSE (third objective).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyProfile {
+    pub model: String,
+    pub seed: u64,
+    pub qat_bits: Option<u32>,
+    pub paths: Vec<PathAccuracy>,
+}
+
+impl AccuracyProfile {
+    /// Build from a training run.
+    pub fn from_result(spec: &DistillSpec, cfg: &DistillConfig, res: &TrainResult) -> AccuracyProfile {
+        let paths = spec
+            .paths()
+            .iter()
+            .map(|&p| {
+                let name = p.name();
+                let accuracy = res
+                    .accuracies
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, a)| *a)
+                    .unwrap_or(0.0);
+                let loss_trajectory = res
+                    .history
+                    .iter()
+                    .filter(|r| r.path == name)
+                    .map(|r| r.loss)
+                    .collect();
+                PathAccuracy {
+                    name,
+                    depth: p.depth,
+                    width_pct: p.width_pct,
+                    accuracy,
+                    params: spec.count_params(p),
+                    macs: spec.count_macs(p),
+                    loss_trajectory,
+                }
+            })
+            .collect();
+        AccuracyProfile { model: spec.name.clone(), seed: cfg.seed, qat_bits: cfg.qat_bits, paths }
+    }
+
+    /// The hard accuracy floor this profile supports: the worst trained
+    /// path. Any path falling below it (corruption, an untrained entry)
+    /// is not deployable.
+    pub fn floor(&self) -> f64 {
+        self.paths.iter().map(|p| p.accuracy).fold(f64::INFINITY, f64::min)
+    }
+
+    /// The ladder as governor/DSE-facing morph paths.
+    pub fn morph_paths(&self) -> Vec<MorphPath> {
+        self.paths
+            .iter()
+            .map(|p| MorphPath {
+                name: p.name.clone(),
+                depth: p.depth,
+                width_pct: p.width_pct,
+                accuracy: p.accuracy,
+                params: p.params,
+                macs: p.macs,
+            })
+            .collect()
+    }
+
+    /// Persist trained accuracies into a loaded runtime manifest entry.
+    /// Every profile path must exist in the manifest; returns the number
+    /// of updated paths.
+    pub fn apply_to(&self, manifest: &mut ModelManifest) -> Result<usize, DistillError> {
+        let mut updated = 0;
+        for p in &self.paths {
+            match manifest.paths.iter_mut().find(|mp| mp.path.name == p.name) {
+                Some(mp) => {
+                    mp.path.accuracy = p.accuracy;
+                    updated += 1;
+                }
+                None => {
+                    return Err(DistillError::Profile(format!(
+                        "path '{}' not in manifest for model '{}'",
+                        p.name, manifest.name
+                    )))
+                }
+            }
+        }
+        Ok(updated)
+    }
+
+    /// Deterministic JSON encoding — byte-identical for identical
+    /// profiles (BTreeMap key order + Rust's shortest-roundtrip float
+    /// formatting).
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("model".to_string(), Json::Str(self.model.clone()));
+        root.insert("seed".to_string(), Json::Num(self.seed as f64));
+        root.insert(
+            "qat_bits".to_string(),
+            self.qat_bits.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+        );
+        root.insert("floor".to_string(), Json::Num(self.floor()));
+        let paths = self
+            .paths
+            .iter()
+            .map(|p| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(p.name.clone()));
+                o.insert("depth".to_string(), Json::Num(p.depth as f64));
+                o.insert("width_pct".to_string(), Json::Num(p.width_pct as f64));
+                o.insert("accuracy".to_string(), Json::Num(p.accuracy));
+                o.insert("params".to_string(), Json::Num(p.params as f64));
+                o.insert("macs".to_string(), Json::Num(p.macs as f64));
+                o.insert(
+                    "loss_trajectory".to_string(),
+                    Json::Arr(p.loss_trajectory.iter().map(|&l| Json::Num(l)).collect()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("paths".to_string(), Json::Arr(paths));
+        Json::Obj(root).to_string()
+    }
+
+    /// Parse a profile emitted by [`AccuracyProfile::to_json`].
+    pub fn parse(text: &str) -> Result<AccuracyProfile, DistillError> {
+        let bad = |m: &str| DistillError::Profile(m.to_string());
+        let root = Json::parse(text).map_err(|e| DistillError::Profile(e.to_string()))?;
+        let model = root
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing 'model'"))?
+            .to_string();
+        let seed = root.get("seed").and_then(Json::as_u64).ok_or_else(|| bad("missing 'seed'"))?;
+        let qat_bits = match root.get("qat_bits") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_u64().ok_or_else(|| bad("bad 'qat_bits'"))? as u32),
+        };
+        let mut paths = Vec::new();
+        for p in root.get("paths").and_then(Json::as_arr).ok_or_else(|| bad("missing 'paths'"))? {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("path missing 'name'"))?
+                .to_string();
+            let accuracy = p
+                .get("accuracy")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad("path missing 'accuracy'"))?;
+            if !(0.0..=1.0).contains(&accuracy) {
+                return Err(DistillError::Profile(format!(
+                    "path '{name}': accuracy {accuracy} outside 0.0..=1.0"
+                )));
+            }
+            // macs is load-bearing: the DSE scales candidate latency by
+            // the path's MAC fraction, so a defaulted 0 would make the
+            // path report zero latency and dominate every front
+            let macs = p
+                .get("macs")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad("path missing 'macs'"))? as usize;
+            if macs == 0 {
+                return Err(DistillError::Profile(format!("path '{name}': macs must be > 0")));
+            }
+            paths.push(PathAccuracy {
+                name,
+                depth: p.get("depth").and_then(Json::as_u64).ok_or_else(|| bad("path missing 'depth'"))?
+                    as usize,
+                width_pct: p
+                    .get("width_pct")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| bad("path missing 'width_pct'"))? as usize,
+                accuracy,
+                params: p.get("params").and_then(Json::as_u64).unwrap_or(0) as usize,
+                macs,
+                loss_trajectory: p
+                    .get("loss_trajectory")
+                    .and_then(Json::as_f64_vec)
+                    .unwrap_or_default(),
+            });
+        }
+        if paths.is_empty() {
+            return Err(bad("empty 'paths'"));
+        }
+        Ok(AccuracyProfile { model, seed, qat_bits, paths })
+    }
+}
+
+/// Train the full DistillCycle and package the profile — the one-call
+/// entry the CLI / report / bench use.
+pub fn train_profile(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig) -> AccuracyProfile {
+    let res = distillcycle_train(spec, ds, cfg);
+    AccuracyProfile::from_result(spec, cfg, &res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> DistillConfig {
+        DistillConfig { epochs_per_stage: 1, batch: 32, ..DistillConfig::default() }
+    }
+
+    fn one_block_spec() -> DistillSpec {
+        DistillSpec::new("micro", (12, 12, 1), 3, vec![8], vec![50]).unwrap()
+    }
+
+    #[test]
+    fn ladder_matches_morph_gates() {
+        let spec = DistillSpec::tiny();
+        let names: Vec<String> = spec.paths().iter().map(|p| p.name()).collect();
+        // the full GateMask-width × depth cross product
+        assert_eq!(
+            names,
+            vec!["d1_w100", "d1_w50", "d2_w100", "d2_w50", "d3_w100", "d3_w50"]
+        );
+        // every ladder path must translate to a deployable gate mask
+        let net = crate::graph::zoo::mnist();
+        for p in spec.paths() {
+            let mp = MorphPath {
+                name: p.name(),
+                depth: p.depth,
+                width_pct: p.width_pct,
+                accuracy: 0.5,
+                params: 1,
+                macs: 1,
+            };
+            assert!(crate::morph::gate_mask_for(&net, &mp).is_ok(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn undeployable_width_rejected() {
+        let err = DistillSpec::new("bad", (8, 8, 1), 2, vec![4], vec![5]).unwrap_err();
+        assert_eq!(err, DistillError::Width(5));
+    }
+
+    #[test]
+    fn spec_from_zoo_chain_and_branchy_rejected() {
+        let spec = DistillSpec::from_network(&crate::graph::zoo::mnist()).unwrap();
+        assert_eq!(spec.filters, vec![8, 16, 32]);
+        assert_eq!(spec.input, (28, 28, 1));
+        assert_eq!(spec.num_classes, 10);
+        assert!(DistillSpec::from_network(&crate::graph::zoo::unet_tiny()).is_err());
+        // resnet50's 7x7/s2 stem deviates from the Layer-Block template:
+        // rejected instead of silently trained as a different net
+        assert!(DistillSpec::from_network(&crate::graph::zoo::resnet50()).is_err());
+    }
+
+    #[test]
+    fn counts_match_reference_formulas() {
+        // mirror model.py::count_params on the mnist spec, d1_w100:
+        // conv 3*3*1*8 + 8 = 80; head 14*14*8*10 + 10 = 15690 -> 15770?
+        // model.py feature_shape(1) = 14 -> head dim 14*14*8 = 1568
+        let spec = DistillSpec::from_network(&crate::graph::zoo::mnist()).unwrap();
+        let d1 = PathSpec { depth: 1, width_pct: 100 };
+        assert_eq!(spec.count_params(d1), 3 * 3 * 8 + 8 + 1568 * 10 + 10);
+        let full = spec.full_path();
+        // the sample_paths macs in morph::tests were computed from the
+        // python reference; full-depth macs must match that scale
+        assert_eq!(spec.count_macs(full), 28 * 28 * 9 * 8 + 14 * 14 * 9 * 8 * 16 + 7 * 7 * 9 * 16 * 32 + 3 * 3 * 32 * 10);
+    }
+
+    #[test]
+    fn training_reduces_teacher_loss_and_beats_chance() {
+        let spec = one_block_spec();
+        let ds = spec.dataset(256, 96, 0);
+        let cfg = DistillConfig { epochs_per_stage: 3, ..quick_cfg() };
+        let res = distillcycle_train(&spec, &ds, &cfg);
+        let teacher: Vec<f64> = res
+            .history
+            .iter()
+            .filter(|r| r.stage == 1 && r.phase == Phase::Teacher)
+            .map(|r| r.loss)
+            .collect();
+        assert!(teacher.last().unwrap() < teacher.first().unwrap(), "{teacher:?}");
+        // chance is 1/3; every ladder path must clear it decisively
+        for (name, acc) in &res.accuracies {
+            assert!(*acc > 0.40, "{name}: {acc} (chance 0.33)");
+        }
+    }
+
+    #[test]
+    fn qat_training_still_learns() {
+        let spec = one_block_spec();
+        let ds = spec.dataset(256, 96, 0);
+        let cfg = DistillConfig {
+            epochs_per_stage: 3,
+            qat_bits: Some(8),
+            ..quick_cfg()
+        };
+        let res = distillcycle_train(&spec, &ds, &cfg);
+        let (_, acc) = res.accuracies.iter().find(|(n, _)| n == "d1_w100").unwrap();
+        assert!(*acc > 0.35, "int8 QAT accuracy {acc} (chance 0.33)");
+    }
+
+    #[test]
+    fn inference_forward_matches_cached_forward() {
+        // the lean inference forward must be bit-identical to the
+        // training forward (teacher logits feed the KD loss)
+        let spec = DistillSpec::tiny();
+        let params = init_params(&spec, 7);
+        let ds = spec.dataset(8, 8, 7);
+        for &p in &spec.paths() {
+            for qat in [None, Some(8)] {
+                let lean = forward(&params, &spec, p, &ds.x_test, 8, qat);
+                let (_, cached) = forward_cached(&params, &spec, p, &ds.x_test, 8, qat);
+                assert_eq!(lean, cached, "{} qat {qat:?}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn profile_roundtrip_and_floor() {
+        let spec = one_block_spec();
+        let ds = spec.dataset(96, 48, 1);
+        let cfg = quick_cfg();
+        let prof = train_profile(&spec, &ds, &cfg);
+        assert_eq!(prof.paths.len(), 2); // d1_w100 + d1_w50
+        let parsed = AccuracyProfile::parse(&prof.to_json()).unwrap();
+        assert_eq!(parsed, prof);
+        let floor = prof.floor();
+        assert!(prof.paths.iter().all(|p| p.accuracy >= floor));
+    }
+
+    #[test]
+    fn profile_rejects_out_of_range_accuracy() {
+        let text = r#"{"model":"m","seed":0,"qat_bits":null,
+          "paths":[{"name":"d1_w100","depth":1,"width_pct":100,"accuracy":1.5}]}"#;
+        assert!(matches!(
+            AccuracyProfile::parse(text),
+            Err(DistillError::Profile(_))
+        ));
+    }
+
+    #[test]
+    fn profile_rejects_missing_or_zero_macs() {
+        // macs scales DSE latency: a defaulted 0 would make the path
+        // report zero latency and dominate every front
+        for macs in ["", r#","macs":0"#] {
+            let text = format!(
+                r#"{{"model":"m","seed":0,"qat_bits":null,
+                  "paths":[{{"name":"d1_w100","depth":1,"width_pct":100,
+                             "accuracy":0.9,"params":10{macs}}}]}}"#
+            );
+            assert!(
+                matches!(AccuracyProfile::parse(&text), Err(DistillError::Profile(_))),
+                "macs case {macs:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn profile_applies_to_manifest() {
+        let spec = one_block_spec();
+        let ds = spec.dataset(96, 48, 1);
+        let prof = train_profile(&spec, &ds, &quick_cfg());
+        // manifest with matching path names
+        let manifest_text = format!(
+            r#"{{"version":1,"models":{{"micro":{{
+              "input_shape":[8,8,1],"num_classes":3,"filters":[4],"batches":[1],
+              "paths":[
+                {{"name":"d1_w100","depth":1,"width_pct":100,"accuracy":null,
+                  "artifacts":{{"1":"a.hlo.txt"}}}},
+                {{"name":"d1_w50","depth":1,"width_pct":50,"accuracy":null,
+                  "artifacts":{{"1":"b.hlo.txt"}}}}],
+              "probe":{{"shape":[1,1],"x":[0.5],"logits":{{}}}}}}}}}}"#
+        );
+        let mut manifest =
+            crate::runtime::Manifest::parse(std::path::Path::new("/tmp"), &manifest_text).unwrap();
+        let model = manifest.models.get_mut("micro").unwrap();
+        assert_eq!(prof.apply_to(model).unwrap(), 2);
+        for (mp, pp) in model.paths.iter().zip(&prof.paths) {
+            assert_eq!(mp.path.accuracy, pp.accuracy);
+        }
+        // unknown path -> explicit error
+        let mut bad = prof.clone();
+        bad.paths[0].name = "d9_w100".into();
+        assert!(bad.apply_to(model).is_err());
+    }
+
+    #[test]
+    fn lr_tree_matches_eq20() {
+        let spec = DistillSpec::tiny();
+        let t = lr_tree(&spec, 3, 0.1, 0.5, 0.1);
+        assert_eq!(t.blocks, vec![0.025, 0.05, 0.1]); // γ², γ¹, γ⁰
+        assert_eq!(t.head, 0.1);
+        let t2 = lr_tree(&spec, 2, 0.01, 0.5, 0.3);
+        assert_eq!(t2.head, 0.3);
+        assert_eq!(t2.blocks[2], 0.01); // beyond-stage blocks undecayed
+    }
+
+    #[test]
+    fn byte_identical_profiles_across_runs() {
+        let spec = one_block_spec();
+        let cfg = quick_cfg();
+        let a = train_profile(&spec, &spec.dataset(96, 48, 2), &cfg).to_json();
+        let b = train_profile(&spec, &spec.dataset(96, 48, 2), &cfg).to_json();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,410 @@
+//! Deterministic tensor core for the DistillCycle trainer.
+//!
+//! Flat `Vec<f32>` NHWC tensors with explicit dims and plain loop nests —
+//! no BLAS, no threads, no SIMD intrinsics — so every training run is a
+//! single fixed sequence of f32 operations: bit-identical across reruns
+//! and independent of whatever `--threads N` the rest of the pipeline
+//! uses. The ops mirror `python/compile/kernels/ref.py`: conv3x3 SAME,
+//! ReLU, 2x2 max-pool (stride 2, odd edge dropped) and a dense head.
+//!
+//! Width-morphing follows `model.py::slice_block`: weight buffers are
+//! allocated at full width and the active `(cin, cout)` slice is indexed
+//! directly, so gated filters are never touched — the software twin of
+//! clock-gated PEs never toggling.
+
+/// One morphable conv block's parameters (full-width storage).
+#[derive(Debug, Clone)]
+pub struct Conv {
+    /// `[k, k, cin, cout]` weights, row-major
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl Conv {
+    #[inline]
+    pub fn widx(&self, ky: usize, kx: usize, ci: usize, co: usize) -> usize {
+        ((ky * self.k + kx) * self.cin + ci) * self.cout + co
+    }
+}
+
+/// One execution path's dense output head.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    /// `[dim, classes]` weights, row-major
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+/// conv SAME + bias over the active `(cin_a, cout_a)` slice.
+/// Input `x` is `[n, h, w, cin_a]` (activations are stored compact at the
+/// active width); output is the pre-activation `[n, h, w, cout_a]`.
+pub fn conv_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * h * w * cin_a);
+    let k = conv.k;
+    let pad = k / 2;
+    let mut out = vec![0.0f32; n * h * w * cout_a];
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let obase = ((s * h + oy) * w + ox) * cout_a;
+                for co in 0..cout_a {
+                    let mut acc = conv.b[co];
+                    for ky in 0..k {
+                        let iy = oy + ky;
+                        if iy < pad || iy - pad >= h {
+                            continue;
+                        }
+                        let iy = iy - pad;
+                        for kx in 0..k {
+                            let ix = ox + kx;
+                            if ix < pad || ix - pad >= w {
+                                continue;
+                            }
+                            let ix = ix - pad;
+                            let ibase = ((s * h + iy) * w + ix) * cin_a;
+                            for ci in 0..cin_a {
+                                acc += x[ibase + ci] * conv.w[conv.widx(ky, kx, ci, co)];
+                            }
+                        }
+                    }
+                    out[obase + co] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// conv SAME backward: given `dpre` (gradient at the pre-activation),
+/// accumulate weight/bias grads into the full-size `gw`/`gb` buffers
+/// (active slice only — gated filters stay untouched) and return `dx`.
+/// `compute_dx: false` (the first block, whose input gradient nobody
+/// consumes) skips the propagation accumulation — it runs over the
+/// largest feature map in the net — and returns an empty vec.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+    dpre: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    compute_dx: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(gw.len(), conv.w.len());
+    debug_assert_eq!(gb.len(), conv.b.len());
+    let k = conv.k;
+    let pad = k / 2;
+    let mut dx = vec![0.0f32; if compute_dx { n * h * w * cin_a } else { 0 }];
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let obase = ((s * h + oy) * w + ox) * cout_a;
+                for co in 0..cout_a {
+                    let g = dpre[obase + co];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    gb[co] += g;
+                    for ky in 0..k {
+                        let iy = oy + ky;
+                        if iy < pad || iy - pad >= h {
+                            continue;
+                        }
+                        let iy = iy - pad;
+                        for kx in 0..k {
+                            let ix = ox + kx;
+                            if ix < pad || ix - pad >= w {
+                                continue;
+                            }
+                            let ix = ix - pad;
+                            let ibase = ((s * h + iy) * w + ix) * cin_a;
+                            for ci in 0..cin_a {
+                                gw[conv.widx(ky, kx, ci, co)] += x[ibase + ci] * g;
+                                if compute_dx {
+                                    dx[ibase + ci] += conv.w[conv.widx(ky, kx, ci, co)] * g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// 2x2 max-pool, stride 2 (odd trailing row/col dropped, matching the
+/// reference kernels). Returns the pooled tensor and the argmax index of
+/// every output element (flat index into the input) for the backward
+/// routing.
+pub fn pool_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let ho = h / 2;
+    let wo = w / 2;
+    let mut out = vec![0.0f32; n * ho * wo * c];
+    let mut idx = vec![0u32; n * ho * wo * c];
+    for s in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0usize;
+                    for dy in 0..2 {
+                        for dx_ in 0..2 {
+                            let i = ((s * h + oy * 2 + dy) * w + ox * 2 + dx_) * c + ch;
+                            // strict `>` keeps the first (top-left) max —
+                            // a fixed, deterministic tie-break
+                            if x[i] > best {
+                                best = x[i];
+                                bi = i;
+                            }
+                        }
+                    }
+                    let o = ((s * ho + oy) * wo + ox) * c + ch;
+                    out[o] = best;
+                    idx[o] = bi as u32;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// 2x2 max-pool without the argmax bookkeeping — the inference path
+/// (teacher logits, accuracy evaluation), where no backward follows.
+/// Values are identical to [`pool_fwd`]'s output.
+pub fn pool_max(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let ho = h / 2;
+    let wo = w / 2;
+    let mut out = vec![0.0f32; n * ho * wo * c];
+    for s in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx_ in 0..2 {
+                            let i = ((s * h + oy * 2 + dy) * w + ox * 2 + dx_) * c + ch;
+                            if x[i] > best {
+                                best = x[i];
+                            }
+                        }
+                    }
+                    out[((s * ho + oy) * wo + ox) * c + ch] = best;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max-pool backward: route each output gradient to its argmax input.
+pub fn pool_bwd(dout: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; in_len];
+    for (g, &i) in dout.iter().zip(idx) {
+        dx[i as usize] += g;
+    }
+    dx
+}
+
+/// Dense head forward: `[n, dim] x [dim, classes] + b`.
+pub fn fc_fwd(x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
+    let (dim, classes) = (head.dim, head.classes);
+    debug_assert_eq!(x.len(), n * dim);
+    let mut out = vec![0.0f32; n * classes];
+    for s in 0..n {
+        let row = &x[s * dim..(s + 1) * dim];
+        let o = &mut out[s * classes..(s + 1) * classes];
+        o.copy_from_slice(&head.b);
+        for (d, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &head.w[d * classes..(d + 1) * classes];
+            for (c, &wv) in wrow.iter().enumerate() {
+                o[c] += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Dense head backward: accumulates into `gw`/`gb`, returns `dx`.
+pub fn fc_bwd(
+    x: &[f32],
+    n: usize,
+    head: &Dense,
+    dlogits: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+) -> Vec<f32> {
+    let (dim, classes) = (head.dim, head.classes);
+    let mut dx = vec![0.0f32; n * dim];
+    for s in 0..n {
+        let row = &x[s * dim..(s + 1) * dim];
+        let g = &dlogits[s * classes..(s + 1) * classes];
+        for (c, &gv) in g.iter().enumerate() {
+            gb[c] += gv;
+        }
+        for (d, &xv) in row.iter().enumerate() {
+            let wrow = &head.w[d * classes..(d + 1) * classes];
+            let mut acc = 0.0f32;
+            for (c, &gv) in g.iter().enumerate() {
+                gw[d * classes + c] += xv * gv;
+                acc += wrow[c] * gv;
+            }
+            dx[s * dim + d] = acc;
+        }
+    }
+    dx
+}
+
+/// In-place ReLU; returns the output (pre-activation left in `pre`).
+pub fn relu(pre: &[f32]) -> Vec<f32> {
+    pre.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+}
+
+/// ReLU backward mask: `dpre = dpost * [pre > 0]`.
+pub fn relu_bwd(pre: &[f32], dpost: &[f32]) -> Vec<f32> {
+    pre.iter()
+        .zip(dpost)
+        .map(|(&p, &g)| if p > 0.0 { g } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv1() -> Conv {
+        // 1x1 identity-ish kernel on 1 channel: w = 2, b = 1
+        Conv { w: vec![2.0], b: vec![1.0], k: 1, cin: 1, cout: 1 }
+    }
+
+    #[test]
+    fn conv_1x1_scales_and_biases() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let y = conv_fwd(&x, 1, 2, 2, &conv1(), 1, 1);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn conv_same_padding_border() {
+        // 3x3 all-ones kernel on a 2x2 of ones: corners see 4 taps
+        let c = Conv { w: vec![1.0; 9], b: vec![0.0], k: 3, cin: 1, cout: 1 };
+        let y = conv_fwd(&[1.0; 4], 1, 2, 2, &c, 1, 1);
+        assert_eq!(y, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn conv_grad_matches_finite_difference() {
+        // tiny 3x3 input, 3x3 kernel, 2 in / 2 out channels
+        let (h, w, cin, cout) = (3usize, 3usize, 2usize, 2usize);
+        let mut conv = Conv {
+            w: (0..9 * cin * cout).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.1).collect(),
+            b: vec![0.05, -0.05],
+            k: 3,
+            cin,
+            cout,
+        };
+        let x: Vec<f32> = (0..h * w * cin).map(|i| ((i * 5 % 11) as f32 - 5.0) * 0.2).collect();
+        // loss = sum(conv(x)) -> dpre = 1 everywhere
+        let dpre = vec![1.0f32; h * w * cout];
+        let mut gw = vec![0.0f32; conv.w.len()];
+        let mut gb = vec![0.0f32; conv.b.len()];
+        let dx = conv_bwd(&x, 1, h, w, &conv, cin, cout, &dpre, &mut gw, &mut gb, true);
+        // compute_dx=false: same weight grads, empty dx
+        let mut gw2 = vec![0.0f32; conv.w.len()];
+        let mut gb2 = vec![0.0f32; conv.b.len()];
+        let dx2 = conv_bwd(&x, 1, h, w, &conv, cin, cout, &dpre, &mut gw2, &mut gb2, false);
+        assert_eq!(gw, gw2);
+        assert_eq!(gb, gb2);
+        assert!(dx2.is_empty());
+        let loss = |c: &Conv, xv: &[f32]| -> f64 {
+            conv_fwd(xv, 1, h, w, c, cin, cout).iter().map(|&v| v as f64).sum()
+        };
+        let eps = 1e-2f32;
+        // spot-check a few weight grads
+        for wi in [0usize, 7, 17, conv.w.len() - 1] {
+            let orig = conv.w[wi];
+            conv.w[wi] = orig + eps;
+            let up = loss(&conv, &x);
+            conv.w[wi] = orig - eps;
+            let dn = loss(&conv, &x);
+            conv.w[wi] = orig;
+            let fd = (up - dn) / (2.0 * eps as f64);
+            assert!((fd - gw[wi] as f64).abs() < 1e-2, "w[{wi}]: fd {fd} vs {}", gw[wi]);
+        }
+        // and an input grad
+        let mut x2 = x.clone();
+        x2[4] += eps;
+        let up = loss(&conv, &x2);
+        x2[4] = x[4] - eps;
+        let dn = loss(&conv, &x2);
+        let fd = (up - dn) / (2.0 * eps as f64);
+        assert!((fd - dx[4] as f64).abs() < 1e-2, "dx: fd {fd} vs {}", dx[4]);
+        assert_eq!(gb, vec![9.0, 9.0]); // 9 output pixels per channel
+    }
+
+    #[test]
+    fn pool_takes_max_and_routes_grad() {
+        // 2x2 single-channel: max at position 3
+        let x = vec![0.1f32, 0.2, 0.3, 0.9];
+        let (y, idx) = pool_fwd(&x, 1, 2, 2, 1);
+        assert_eq!(y, vec![0.9]);
+        assert_eq!(idx, vec![3]);
+        let dx = pool_bwd(&[2.0], &idx, 4);
+        assert_eq!(dx, vec![0.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn pool_drops_odd_edge() {
+        let x = vec![1.0f32; 3 * 3];
+        let (y, _) = pool_fwd(&x, 1, 3, 3, 1);
+        assert_eq!(y.len(), 1);
+    }
+
+    #[test]
+    fn fc_fwd_bwd_consistent() {
+        let head = Dense {
+            w: vec![0.5, -0.5, 0.25, 0.75],
+            b: vec![0.1, -0.1],
+            dim: 2,
+            classes: 2,
+        };
+        let x = vec![1.0f32, 2.0];
+        let y = fc_fwd(&x, 1, &head);
+        assert!((y[0] - (0.1 + 0.5 + 0.5)).abs() < 1e-6);
+        assert!((y[1] - (-0.1 - 0.5 + 1.5)).abs() < 1e-6);
+        let mut gw = vec![0.0f32; 4];
+        let mut gb = vec![0.0f32; 2];
+        let dx = fc_bwd(&x, 1, &head, &[1.0, 0.0], &mut gw, &mut gb);
+        assert_eq!(gb, vec![1.0, 0.0]);
+        assert_eq!(gw, vec![1.0, 0.0, 2.0, 0.0]);
+        assert_eq!(dx, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn relu_masks_negative() {
+        let pre = vec![-1.0f32, 0.0, 2.0];
+        assert_eq!(relu(&pre), vec![0.0, 0.0, 2.0]);
+        assert_eq!(relu_bwd(&pre, &[5.0, 5.0, 5.0]), vec![0.0, 0.0, 5.0]);
+    }
+}

@@ -23,11 +23,14 @@
 //!   `threads` value (test-enforced).
 //! * **Memoization.** GA populations are heavily duplicated (elitist
 //!   re-selection, no-op mutations, clone-producing crossover). A
-//!   chromosome cache keyed on `(parallelism, rep)` — `rep` is fixed per
-//!   search, so the map keys on the gene vector alone with the vendored
-//!   [`crate::util::hash::FxHasher`] — skips re-evaluating duplicates,
-//!   both across generations and within one batch. Hit telemetry lands in
-//!   [`DseResult`].
+//!   chromosome cache keyed on `(conv genes, rep)` — `rep` is fixed per
+//!   search, so the map keys on the conv-gene vector alone with the
+//!   vendored [`crate::util::hash::FxHasher`] — skips re-evaluating
+//!   duplicates, both across generations and within one batch. The
+//!   3-objective path gene is excluded from the key: the cache stores
+//!   the path-independent base fitness and candidates differing only in
+//!   execution path share one analytical evaluation. Hit telemetry
+//!   lands in [`DseResult`].
 //! * **Allocation discipline.** Gene buffers recycle through a scratch
 //!   pool ([`crossover_into`] fills caller buffers; discarded candidates
 //!   donate their vectors back), environmental selection is index-based
@@ -92,7 +95,9 @@ impl Constraints {
     }
 }
 
-/// Objective vector `Y = {Y_t, Y_DSP, Y_LUT, Y_BRAM}` (Alg. 1 output).
+/// Objective vector `Y = {Y_t, Y_DSP, Y_LUT, Y_BRAM}` (Alg. 1 output),
+/// extended with the DistillCycle path accuracy when the search runs in
+/// 3-objective mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Objectives {
     pub latency_ms: f64,
@@ -101,14 +106,25 @@ pub struct Objectives {
     pub bram: usize,
     /// "Design PEs" (Table III indicator column)
     pub total_pes: usize,
+    /// execution-path accuracy from the DistillCycle
+    /// [`AccuracyProfile`](crate::distill::AccuracyProfile) (maximized);
+    /// a constant `1.0` in plain 2-objective searches
+    pub accuracy: f64,
 }
 
 impl Objectives {
-    /// Pareto dominance on the optimized pair (latency, DSP) — the paper
-    /// optimizes DSP against latency and constraint-checks the rest.
+    /// Pareto dominance on the optimized objectives: (latency, DSP)
+    /// minimized and accuracy maximized — the paper optimizes DSP
+    /// against latency and constraint-checks the rest; accuracy joins as
+    /// the third axis in profile-driven searches (constant otherwise, so
+    /// it never affects 2-objective dominance).
     pub fn dominates(&self, other: &Objectives) -> bool {
-        let no_worse = self.latency_ms <= other.latency_ms && self.dsp <= other.dsp;
-        let better = self.latency_ms < other.latency_ms || self.dsp < other.dsp;
+        let no_worse = self.latency_ms <= other.latency_ms
+            && self.dsp <= other.dsp
+            && self.accuracy >= other.accuracy;
+        let better = self.latency_ms < other.latency_ms
+            || self.dsp < other.dsp
+            || self.accuracy > other.accuracy;
         no_worse && better
     }
 }
@@ -139,6 +155,15 @@ pub struct DseConfig {
     /// chromosome memo cache on/off (off reproduces the pre-cache
     /// baseline for benchmarking; results are identical either way)
     pub memo: bool,
+    /// DistillCycle execution-path ladder (accuracy + MAC metadata,
+    /// typically `AccuracyProfile::morph_paths()`). `Some` switches the
+    /// search to three objectives: the chromosome gains one trailing
+    /// path-selection gene, each candidate's latency is scaled by its
+    /// path's MAC fraction (the same first-order model the analytical
+    /// serving backend uses) and the path accuracy is maximized
+    /// alongside (latency, DSP). `None` reproduces the 2-objective
+    /// search bit-for-bit.
+    pub accuracy_paths: Option<Vec<crate::morph::MorphPath>>,
 }
 
 impl Default for DseConfig {
@@ -154,6 +179,7 @@ impl Default for DseConfig {
             seed: 0,
             threads: 1,
             memo: true,
+            accuracy_paths: None,
         }
     }
 }
@@ -209,46 +235,127 @@ pub fn evaluate_with(
     rep: FpRep,
     constraints: &Constraints,
 ) -> Candidate {
-    let (objectives, violation) = eval_genes(evaluator, &parallelism, rep, constraints);
+    let (objectives, violation) = eval_genes(evaluator, &parallelism, rep, constraints, None);
     Candidate { config: DesignConfig { parallelism, rep }, objectives, violation }
 }
 
-/// The raw fitness kernel every evaluation path shares.
+/// Accuracy context of a 3-objective search: per-path latency ratios
+/// (MAC fraction of the heaviest path — the deployed bitstream carries
+/// every path's PEs, so *resources* stay those of the full design while
+/// latency and accuracy follow the selected execution path) plus the
+/// DistillCycle accuracies, indexed by the trailing path gene.
+struct AccCtx {
+    ratios: Vec<f64>,
+    accs: Vec<f64>,
+}
+
+impl AccCtx {
+    fn new(paths: &[crate::morph::MorphPath]) -> AccCtx {
+        assert!(!paths.is_empty(), "accuracy ladder must not be empty");
+        let full = paths.iter().map(|p| p.macs).max().unwrap_or(1).max(1);
+        AccCtx {
+            ratios: paths.iter().map(|p| p.macs as f64 / full as f64).collect(),
+            accs: paths.iter().map(|p| p.accuracy).collect(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.accs.len()
+    }
+}
+
+/// Path-independent analytical fitness of the conv genes — the
+/// expensive kernel (and the unit of memoization): everything below it
+/// (path scaling, constraint checking) is a handful of multiplies.
+#[derive(Debug, Clone, Copy)]
+struct BaseFit {
+    latency_ms: f64,
+    dsp: usize,
+    lut: usize,
+    bram: usize,
+    total_pes: usize,
+}
+
+#[inline]
+fn base_eval(evaluator: &design::Evaluator, conv_genes: &[usize], rep: FpRep) -> BaseFit {
+    let fast = evaluator
+        .objectives(conv_genes, rep)
+        .expect("chromosome respects bounds by construction");
+    BaseFit {
+        latency_ms: evaluator.latency_ms(&fast),
+        dsp: fast.resources.dsp,
+        lut: fast.resources.lut,
+        bram: fast.resources.bram,
+        total_pes: fast.total_pes,
+    }
+}
+
+/// Apply the (optional) trailing path-selection gene and the
+/// constraints to a base fitness: latency scales by the path's MAC
+/// fraction, accuracy becomes the third objective.
+#[inline]
+fn finish_fit(
+    base: BaseFit,
+    genes: &[usize],
+    acc: Option<&AccCtx>,
+    constraints: &Constraints,
+) -> (Objectives, f64) {
+    let mut latency_ms = base.latency_ms;
+    let mut accuracy = 1.0;
+    if let Some(ctx) = acc {
+        let pi = genes[genes.len() - 1] - 1; // path gene is 1-based
+        latency_ms *= ctx.ratios[pi];
+        accuracy = ctx.accs[pi];
+    }
+    let objectives = Objectives {
+        latency_ms,
+        dsp: base.dsp,
+        lut: base.lut,
+        bram: base.bram,
+        total_pes: base.total_pes,
+        accuracy,
+    };
+    let violation = constraints.violation(&objectives);
+    (objectives, violation)
+}
+
+/// How many trailing non-conv genes the chromosome carries.
+#[inline]
+fn gene_strip(acc: Option<&AccCtx>) -> usize {
+    usize::from(acc.is_some())
+}
+
+/// One-shot fitness on a full chromosome (public surface + workers).
 #[inline]
 fn eval_genes(
     evaluator: &design::Evaluator,
     genes: &[usize],
     rep: FpRep,
     constraints: &Constraints,
+    acc: Option<&AccCtx>,
 ) -> (Objectives, f64) {
-    let fast = evaluator
-        .objectives(genes, rep)
-        .expect("chromosome respects bounds by construction");
-    let objectives = Objectives {
-        latency_ms: evaluator.latency_ms(&fast),
-        dsp: fast.resources.dsp,
-        lut: fast.resources.lut,
-        bram: fast.resources.bram,
-        total_pes: fast.total_pes,
-    };
-    let violation = constraints.violation(&objectives);
-    (objectives, violation)
+    let base = base_eval(evaluator, &genes[..genes.len() - gene_strip(acc)], rep);
+    finish_fit(base, genes, acc, constraints)
 }
 
 /// A worker's share of one generation: (batch slot, chromosome).
 type Job = Vec<(usize, Vec<usize>)>;
-/// Evaluated share: (batch slot, chromosome back, objectives, violation).
-type Done = Vec<(usize, Vec<usize>, Objectives, f64)>;
+/// Evaluated share: (batch slot, chromosome back, base fitness).
+type Done = Vec<(usize, Vec<usize>, BaseFit)>;
 
-/// Chromosome memo cache. Keyed on `(parallelism, rep)`: `rep` is fixed
-/// for a whole search, so the map keys on the boxed gene slice alone
-/// (lookups borrow `&[usize]` — no allocation on the hit path). A `None`
-/// value is an in-flight sentinel: the chromosome's first occurrence in
-/// the current batch is being evaluated, so later duplicates wait on it
-/// instead of re-evaluating — one key boxing per unique chromosome,
-/// ever.
+/// Chromosome memo cache. Keyed on `(conv genes, rep)`: `rep` is fixed
+/// for a whole search, so the map keys on the boxed conv-gene slice
+/// alone (lookups borrow `&[usize]` — no allocation on the hit path).
+/// In 3-objective mode the trailing path gene is *excluded* from the
+/// key and the cache stores the path-independent [`BaseFit`]: two
+/// candidates that differ only in execution path share one analytical
+/// evaluation, and the per-path latency/accuracy scaling is applied at
+/// lookup. A `None` value is an in-flight sentinel: the conv genes'
+/// first occurrence in the current batch is being evaluated, so later
+/// duplicates wait on it instead of re-evaluating — one key boxing per
+/// unique conv-gene vector, ever.
 struct Memo {
-    map: FxHashMap<Box<[usize]>, Option<(Objectives, f64)>>,
+    map: FxHashMap<Box<[usize]>, Option<BaseFit>>,
     hits: usize,
 }
 
@@ -258,6 +365,8 @@ struct Engine<'a> {
     evaluator: &'a design::Evaluator,
     rep: FpRep,
     constraints: Constraints,
+    /// 3-objective accuracy context (None ⇒ classic 2-objective search)
+    acc: Option<&'a AccCtx>,
     memo: Option<Memo>,
     /// per-worker job channels (empty ⇒ serial)
     job_txs: Vec<mpsc::Sender<Job>>,
@@ -267,6 +376,13 @@ struct Engine<'a> {
 }
 
 impl Engine<'_> {
+    /// Finish a chromosome into a Candidate from its base fitness
+    /// (path scaling + constraints — main-thread, deterministic).
+    fn candidate(&self, genes: Vec<usize>, base: BaseFit) -> Candidate {
+        let (objectives, violation) = finish_fit(base, &genes, self.acc, &self.constraints);
+        Candidate { config: DesignConfig { parallelism: genes, rep: self.rep }, objectives, violation }
+    }
+
     /// Evaluate a whole generation of chromosomes. Memo hits and
     /// within-batch duplicates are resolved on the main thread; misses
     /// fan out across the workers in index-chunked shares and land back
@@ -275,6 +391,7 @@ impl Engine<'_> {
     fn eval_batch(&mut self, batch: Vec<Vec<usize>>) -> Vec<Candidate> {
         let n = batch.len();
         self.evaluations += n;
+        let strip = gene_strip(self.acc);
         let mut slots: Vec<Option<Candidate>> = (0..n).map(|_| None).collect();
         let mut misses: Job = Vec::new();
         // slots of in-batch duplicates, resolved from the memo afterwards
@@ -282,11 +399,14 @@ impl Engine<'_> {
 
         for (i, genes) in batch.into_iter().enumerate() {
             if let Some(memo) = &mut self.memo {
+                let key = &genes[..genes.len() - strip];
                 // owned copy of the cached state — keeps the map free for
                 // the pending-sentinel insert below
-                match memo.map.get(genes.as_slice()).copied() {
-                    Some(Some((objectives, violation))) => {
+                match memo.map.get(key).copied() {
+                    Some(Some(base)) => {
                         memo.hits += 1;
+                        let (objectives, violation) =
+                            finish_fit(base, &genes, self.acc, &self.constraints);
                         slots[i] = Some(Candidate {
                             config: DesignConfig { parallelism: genes, rep: self.rep },
                             objectives,
@@ -301,7 +421,7 @@ impl Engine<'_> {
                         continue;
                     }
                     None => {
-                        memo.map.insert(genes.clone().into_boxed_slice(), None);
+                        memo.map.insert(key.to_vec().into_boxed_slice(), None);
                     }
                 }
             }
@@ -315,8 +435,9 @@ impl Engine<'_> {
             misses
                 .into_iter()
                 .map(|(i, genes)| {
-                    let (o, v) = eval_genes(self.evaluator, &genes, self.rep, &self.constraints);
-                    (i, genes, o, v)
+                    let base =
+                        base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
+                    (i, genes, base)
                 })
                 .collect()
         } else {
@@ -337,8 +458,9 @@ impl Engine<'_> {
             let mut done: Done = misses
                 .into_iter()
                 .map(|(i, genes)| {
-                    let (o, v) = eval_genes(self.evaluator, &genes, self.rep, &self.constraints);
-                    (i, genes, o, v)
+                    let base =
+                        base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
+                    (i, genes, base)
                 })
                 .collect();
             for _ in 0..sent {
@@ -347,32 +469,26 @@ impl Engine<'_> {
             done
         };
 
-        for (i, genes, objectives, violation) in done {
+        for (i, genes, base) in done {
             if let Some(memo) = &mut self.memo {
                 // fill the pending sentinel in place — the key was boxed
                 // exactly once, at first sight
-                *memo.map.get_mut(genes.as_slice()).expect("pending entry present") =
-                    Some((objectives, violation));
+                *memo
+                    .map
+                    .get_mut(&genes[..genes.len() - strip])
+                    .expect("pending entry present") = Some(base);
             }
-            slots[i] = Some(Candidate {
-                config: DesignConfig { parallelism: genes, rep: self.rep },
-                objectives,
-                violation,
-            });
+            slots[i] = Some(self.candidate(genes, base));
         }
         for (i, genes) in dups {
             let memo = self.memo.as_ref().expect("dups only collected with memo on");
-            let (objectives, violation) = memo
+            let base = memo
                 .map
-                .get(genes.as_slice())
+                .get(&genes[..genes.len() - strip])
                 .copied()
                 .flatten()
                 .expect("first occurrence evaluated");
-            slots[i] = Some(Candidate {
-                config: DesignConfig { parallelism: genes, rep: self.rep },
-                objectives,
-                violation,
-            });
+            slots[i] = Some(self.candidate(genes, base));
         }
         slots.into_iter().map(|s| s.expect("every slot filled")).collect()
     }
@@ -386,11 +502,17 @@ impl Engine<'_> {
 /// StagePlan's gene order — one slot per conv-like *stage* — so branchy
 /// networks (concat/upsample/SPP merges between convs) explore exactly
 /// like chains; the bounds come from the scheduled plan via the
-/// [`design::Evaluator`].
+/// [`design::Evaluator`]. With [`DseConfig::accuracy_paths`] set, one
+/// trailing path-selection gene joins the chromosome and the search runs
+/// on three objectives (latency, DSP, accuracy).
 pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
     let evaluator = design::Evaluator::new(net, device).expect("valid network");
-    let bounds = evaluator.bounds().to_vec();
+    let mut bounds = evaluator.bounds().to_vec();
     assert!(!bounds.is_empty(), "network has no conv stages to map");
+    let acc_ctx = cfg.accuracy_paths.as_deref().map(AccCtx::new);
+    if let Some(ctx) = &acc_ctx {
+        bounds.push(ctx.len());
+    }
     let threads = cfg.threads.max(1);
     let t0 = Instant::now();
 
@@ -402,16 +524,19 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
             let done_tx = done_tx.clone();
             let evaluator = &evaluator;
             let rep = cfg.rep;
-            let constraints = cfg.constraints;
+            let strip = gene_strip(acc_ctx.as_ref());
             scope.spawn(move || {
                 // persistent worker: one wake-up per generation, exits
-                // when the engine (and with it the job sender) drops
+                // when the engine (and with it the job sender) drops.
+                // Workers run only the pure path-independent kernel; the
+                // path/constraint finishing stays on the main thread.
                 while let Ok(job) = rx.recv() {
                     let done: Done = job
                         .into_iter()
                         .map(|(i, genes)| {
-                            let (o, v) = eval_genes(evaluator, &genes, rep, &constraints);
-                            (i, genes, o, v)
+                            let base =
+                                base_eval(evaluator, &genes[..genes.len() - strip], rep);
+                            (i, genes, base)
                         })
                         .collect();
                     if done_tx.send(done).is_err() {
@@ -427,6 +552,7 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
             evaluator: &evaluator,
             rep: cfg.rep,
             constraints: cfg.constraints,
+            acc: acc_ctx.as_ref(),
             memo: cfg.memo.then(|| Memo { map: FxHashMap::default(), hits: 0 }),
             job_txs,
             done_rx,
@@ -468,6 +594,9 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
     // candidates donate theirs back — zero steady-state allocation
     let mut spare: Vec<Vec<usize>> = Vec::new();
     let mut soa = nsga2::ObjSoa::default();
+    // accuracy joins crowding-distance spread only in 3-objective mode,
+    // so 2-objective searches keep their exact pre-accuracy selection
+    soa.accuracy_axis = engine.acc.is_some();
     // mating-selection key: front rank + crowding, computed once per
     // generation (NSGA-II's crowded tournament), built explicitly for
     // generation 0 and thereafter reused from environmental selection
@@ -545,6 +674,7 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
             .partial_cmp(&b.objectives.latency_ms)
             .unwrap()
             .then(a.objectives.dsp.cmp(&b.objectives.dsp))
+            .then(b.objectives.accuracy.partial_cmp(&a.objectives.accuracy).unwrap())
     });
     pareto.dedup_by(|a, b| a.config.parallelism == b.config.parallelism);
 
@@ -764,24 +894,126 @@ mod tests {
         assert!(last <= first, "search regressed: {first} -> {last}");
     }
 
+    fn obj(latency_ms: f64, dsp: usize) -> Objectives {
+        Objectives { latency_ms, dsp, lut: 0, bram: 0, total_pes: 0, accuracy: 1.0 }
+    }
+
     #[test]
     fn dominance_definition() {
-        let a = Objectives { latency_ms: 1.0, dsp: 100, lut: 0, bram: 0, total_pes: 0 };
-        let b = Objectives { latency_ms: 2.0, dsp: 200, lut: 0, bram: 0, total_pes: 0 };
-        let c = Objectives { latency_ms: 0.5, dsp: 300, lut: 0, bram: 0, total_pes: 0 };
+        let a = obj(1.0, 100);
+        let b = obj(2.0, 200);
+        let c = obj(0.5, 300);
         assert!(a.dominates(&b));
         assert!(!b.dominates(&a));
         assert!(!a.dominates(&c) && !c.dominates(&a));
         assert!(!a.dominates(&a));
+        // third axis: equal (latency, dsp) resolves on accuracy alone
+        let hi = Objectives { accuracy: 0.9, ..a };
+        let lo = Objectives { accuracy: 0.6, ..a };
+        assert!(hi.dominates(&lo) && !lo.dominates(&hi));
     }
 
     #[test]
     fn violation_math() {
         let cons = Constraints { latency_ms: Some(1.0), dsp: Some(100), lut: None, bram: None };
-        let ok = Objectives { latency_ms: 0.9, dsp: 100, lut: 0, bram: 0, total_pes: 0 };
-        let bad = Objectives { latency_ms: 2.0, dsp: 150, lut: 0, bram: 0, total_pes: 0 };
+        let ok = obj(0.9, 100);
+        let bad = obj(2.0, 150);
         assert_eq!(cons.violation(&ok), 0.0);
         assert!((cons.violation(&bad) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn three_objective_front_spans_accuracy() {
+        // accuracy ladder from the morph layer: the search must surface
+        // trade-offs across execution paths, with every accuracy value
+        // drawn verbatim from the ladder
+        let net = zoo::mnist();
+        let paths = crate::morph::depth_ladder(&net);
+        let ladder_accs: Vec<f64> = paths.iter().map(|p| p.accuracy).collect();
+        let n_paths = paths.len();
+        let cfg = DseConfig { accuracy_paths: Some(paths), ..quick_cfg() };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert!(!res.pareto.is_empty());
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &res.pareto {
+            assert!(
+                ladder_accs.iter().any(|&a| a == c.objectives.accuracy),
+                "accuracy {} not from the ladder",
+                c.objectives.accuracy
+            );
+            seen.insert(c.objectives.accuracy.to_bits());
+            // chromosome carries the trailing path gene
+            let &pg = c.config.parallelism.last().unwrap();
+            assert!((1..=n_paths).contains(&pg), "path gene {pg}");
+        }
+        assert!(seen.len() >= 2, "front collapsed to one accuracy level");
+        // mutual non-dominance in 3-D
+        for a in &res.pareto {
+            for b in &res.pareto {
+                assert!(
+                    !a.objectives.dominates(&b.objectives)
+                        || a.config.parallelism == b.config.parallelism
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn three_objective_thread_invariance_and_determinism() {
+        let net = zoo::mnist();
+        let mk = |threads: usize| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            threads,
+            accuracy_paths: Some(crate::morph::depth_ladder(&net)),
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let serial = run(&net, &ZYNQ_7100, &mk(1));
+        let parallel = run(&net, &ZYNQ_7100, &mk(4));
+        assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+        assert_eq!(serial.evaluated, parallel.evaluated);
+        let acc = |r: &DseResult| -> Vec<u64> {
+            r.pareto.iter().map(|c| c.objectives.accuracy.to_bits()).collect()
+        };
+        assert_eq!(acc(&serial), acc(&parallel));
+    }
+
+    #[test]
+    fn three_objective_memo_shares_conv_evaluations() {
+        // the memo keys on conv genes only: candidates differing in just
+        // the path gene share one analytical evaluation, transparently
+        let net = zoo::mnist();
+        let paths = crate::morph::depth_ladder(&net);
+        let mk = |memo: bool| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 5,
+            memo,
+            accuracy_paths: Some(paths.clone()),
+            ..DseConfig::default()
+        };
+        let on = run(&net, &ZYNQ_7100, &mk(true));
+        let off = run(&net, &ZYNQ_7100, &mk(false));
+        assert_eq!(fingerprint(&on), fingerprint(&off));
+        assert_eq!(on.evaluated, off.evaluated);
+        assert!(on.cache_hits > 0, "conv-keyed cache must fire");
+        assert_eq!(on.unique_evaluations + on.cache_hits, on.evaluations);
+    }
+
+    #[test]
+    fn no_ladder_reproduces_two_objective_search() {
+        // accuracy_paths: None must leave the classic search untouched:
+        // same chromosome length, every accuracy pinned at the 1.0
+        // constant
+        let net = zoo::mnist();
+        let res = run(&net, &ZYNQ_7100, &quick_cfg());
+        let n_genes = design::Evaluator::new(&net, &ZYNQ_7100).unwrap().bounds().len();
+        for c in &res.pareto {
+            assert_eq!(c.config.parallelism.len(), n_genes);
+            assert_eq!(c.objectives.accuracy, 1.0);
+        }
     }
 
     #[test]

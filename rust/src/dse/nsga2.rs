@@ -15,15 +15,25 @@ use super::Candidate;
 use crate::util::rng::Rng;
 
 /// Flat structure-of-arrays objective view of a population: the single
-/// dominance key `(violation, latency_ms, dsp)` per member, kept in
-/// cache-friendly parallel arrays. Rebuilt (allocation-free at steady
-/// state) once per generation and threaded through the sort, crowding
-/// and selection kernels.
+/// dominance key `(violation, latency_ms, dsp, -accuracy)` per member,
+/// kept in cache-friendly parallel arrays. Rebuilt (allocation-free at
+/// steady state) once per generation and threaded through the sort,
+/// crowding and selection kernels.
+///
+/// `accuracy_axis` gates the third *crowding* axis: it is `true` only
+/// for accuracy-aware searches (a DistillCycle ladder was supplied), so
+/// plain 2-objective runs keep their exact pre-accuracy selection — the
+/// dominance key itself is harmless when disabled because every
+/// candidate then carries the same constant accuracy.
 #[derive(Debug, Default, Clone)]
 pub struct ObjSoa {
     pub violation: Vec<f64>,
     pub latency: Vec<f64>,
     pub dsp: Vec<f64>,
+    /// negated accuracy (all objectives minimize)
+    pub neg_acc: Vec<f64>,
+    /// include accuracy in crowding-distance spread (3-objective mode)
+    pub accuracy_axis: bool,
 }
 
 impl ObjSoa {
@@ -33,15 +43,18 @@ impl ObjSoa {
         soa
     }
 
-    /// Refill from a population, reusing the existing buffers.
+    /// Refill from a population, reusing the existing buffers (the
+    /// `accuracy_axis` flag is sticky across rebuilds).
     pub fn rebuild(&mut self, pop: &[Candidate]) {
         self.violation.clear();
         self.latency.clear();
         self.dsp.clear();
+        self.neg_acc.clear();
         for c in pop {
             self.violation.push(c.violation);
             self.latency.push(c.objectives.latency_ms);
             self.dsp.push(c.objectives.dsp as f64);
+            self.neg_acc.push(-c.objectives.accuracy);
         }
     }
 
@@ -54,34 +67,39 @@ impl ObjSoa {
     }
 
     #[inline(always)]
-    fn key(&self, i: usize) -> (f64, f64, f64) {
-        (self.violation[i], self.latency[i], self.dsp[i])
+    fn key(&self, i: usize) -> (f64, f64, f64, f64) {
+        (self.violation[i], self.latency[i], self.dsp[i], self.neg_acc[i])
     }
 }
 
 /// Feasibility-first dominance kernel on a flat `(violation, latency,
-/// dsp)` key — the ONE implementation every comparison site shares
-/// (struct-level [`beats`], the SoA sort, and the engine's final-front
-/// extraction): a feasible candidate beats an infeasible one; two
-/// infeasible compare by violation; two feasible by Pareto dominance on
-/// (latency, DSP).
+/// dsp, -accuracy)` key — the ONE implementation every comparison site
+/// shares (struct-level [`beats`], the SoA sort, and the engine's
+/// final-front extraction): a feasible candidate beats an infeasible
+/// one; two infeasible compare by violation; two feasible by Pareto
+/// dominance on (latency, DSP, -accuracy). In 2-objective searches every
+/// candidate carries the same accuracy, so the fourth component is a
+/// constant and the kernel degenerates to the (latency, DSP) test.
 #[inline(always)]
-pub fn beats_key(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
+pub fn beats_key(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> bool {
     if a.0 == 0.0 && b.0 > 0.0 {
         return true;
     }
     if a.0 > 0.0 {
         return b.0 > 0.0 && a.0 < b.0;
     }
-    a.1 <= b.1 && a.2 <= b.2 && (a.1 < b.1 || a.2 < b.2)
+    a.1 <= b.1
+        && a.2 <= b.2
+        && a.3 <= b.3
+        && (a.1 < b.1 || a.2 < b.2 || a.3 < b.3)
 }
 
 /// [`beats_key`] on `Candidate` structs (convenience / test surface).
 #[inline]
 pub fn beats(a: &Candidate, b: &Candidate) -> bool {
     beats_key(
-        (a.violation, a.objectives.latency_ms, a.objectives.dsp as f64),
-        (b.violation, b.objectives.latency_ms, b.objectives.dsp as f64),
+        (a.violation, a.objectives.latency_ms, a.objectives.dsp as f64, -a.objectives.accuracy),
+        (b.violation, b.objectives.latency_ms, b.objectives.dsp as f64, -b.objectives.accuracy),
     )
 }
 
@@ -104,7 +122,7 @@ pub fn sort_fronts_soa(soa: &ObjSoa) -> Vec<Vec<usize>> {
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| soa.key(a).partial_cmp(&soa.key(b)).unwrap());
     // contiguous sorted keys: the n^2 sweep reads them in order
-    let keys: Vec<(f64, f64, f64)> = idx.iter().map(|&i| soa.key(i)).collect();
+    let keys: Vec<(f64, f64, f64, f64)> = idx.iter().map(|&i| soa.key(i)).collect();
     let mut rank = vec![0usize; n]; // rank[sorted position]
     let mut max_rank = 0usize;
     for j in 1..n {
@@ -135,20 +153,22 @@ pub fn sort_fronts(pop: &[Candidate]) -> Vec<Vec<usize>> {
     sort_fronts_soa(&ObjSoa::from_candidates(pop))
 }
 
-/// Crowding distance of each member of one front (on latency and DSP),
-/// computed on the flat objective view.
+/// Crowding distance of each member of one front — on latency and DSP,
+/// plus the accuracy axis when the SoA is in 3-objective mode — computed
+/// on the flat objective view.
 pub fn crowding_soa(soa: &ObjSoa, front: &[usize]) -> Vec<f64> {
     let m = front.len();
     let mut dist = vec![0.0f64; m];
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
-    for axis in 0..2 {
+    let axes = if soa.accuracy_axis { 3 } else { 2 };
+    for axis in 0..axes {
         let key = |i: usize| -> f64 {
-            if axis == 0 {
-                soa.latency[front[i]]
-            } else {
-                soa.dsp[front[i]]
+            match axis {
+                0 => soa.latency[front[i]],
+                1 => soa.dsp[front[i]],
+                _ => soa.neg_acc[front[i]],
             }
         };
         let mut order: Vec<usize> = (0..m).collect();
@@ -314,9 +334,20 @@ mod tests {
     use crate::util::prop;
 
     fn cand(lat: f64, dsp: usize, viol: f64) -> Candidate {
+        cand_acc(lat, dsp, viol, 1.0)
+    }
+
+    fn cand_acc(lat: f64, dsp: usize, viol: f64, acc: f64) -> Candidate {
         Candidate {
             config: DesignConfig { parallelism: vec![1], rep: FpRep::Int16 },
-            objectives: Objectives { latency_ms: lat, dsp, lut: 0, bram: 0, total_pes: 0 },
+            objectives: Objectives {
+                latency_ms: lat,
+                dsp,
+                lut: 0,
+                bram: 0,
+                total_pes: 0,
+                accuracy: acc,
+            },
             violation: viol,
         }
     }
@@ -430,10 +461,13 @@ mod tests {
             77,
             |rng| {
                 let mut mk = |rng: &mut crate::util::rng::Rng| {
-                    cand(
+                    cand_acc(
                         rng.f64() * 10.0,
                         rng.below(500),
                         if rng.chance(0.4) { rng.f64() * 2.0 } else { 0.0 },
+                        // half the cases share one accuracy (2-objective
+                        // shape), half spread it (3-objective shape)
+                        if rng.chance(0.5) { 1.0 } else { rng.f64() },
                     )
                 };
                 let (a, b) = (mk(rng), mk(rng));
@@ -458,6 +492,51 @@ mod tests {
                 )
             },
         );
+    }
+
+    #[test]
+    fn accuracy_breaks_dominance_in_three_objective_mode() {
+        // same latency/DSP, different accuracy: with the accuracy axis
+        // the more accurate candidate dominates; identical accuracies
+        // reproduce the 2-objective outcome exactly
+        let hi = cand_acc(1.0, 100, 0.0, 0.9);
+        let lo = cand_acc(1.0, 100, 0.0, 0.5);
+        assert!(beats(&hi, &lo));
+        assert!(!beats(&lo, &hi));
+        let same = cand_acc(1.0, 100, 0.0, 0.9);
+        assert!(!beats(&hi, &same) && !beats(&same, &hi));
+        // a slower-but-more-accurate candidate is a trade-off, not dominated
+        let slow_acc = cand_acc(2.0, 100, 0.0, 0.99);
+        assert!(!beats(&hi, &slow_acc) && !beats(&slow_acc, &hi));
+        let pop = vec![hi, lo, slow_acc];
+        let mut soa = ObjSoa::from_candidates(&pop);
+        soa.accuracy_axis = true;
+        let fronts = sort_fronts_soa(&soa);
+        assert_eq!(fronts[0], vec![0, 2]);
+        assert_eq!(fronts[1], vec![1]);
+    }
+
+    #[test]
+    fn accuracy_axis_changes_crowding_only_when_enabled() {
+        // four mutually non-dominated members spread along accuracy at
+        // identical latency-vs-dsp trade-off spacing
+        let pop = vec![
+            cand_acc(1.0, 400, 0.0, 0.70),
+            cand_acc(2.0, 300, 0.0, 0.90),
+            cand_acc(3.0, 200, 0.0, 0.95),
+            cand_acc(4.0, 100, 0.0, 0.99),
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let mut soa = ObjSoa::from_candidates(&pop);
+        let two_axis = crowding_soa(&soa, &front);
+        soa.accuracy_axis = true;
+        let three_axis = crowding_soa(&soa, &front);
+        // extremes stay infinite either way
+        assert!(two_axis[0].is_infinite() && two_axis[3].is_infinite());
+        assert!(three_axis[0].is_infinite() && three_axis[3].is_infinite());
+        // interior members gain the accuracy-spread contribution
+        assert!(three_axis[1] > two_axis[1]);
+        assert!(three_axis[2] > two_axis[2]);
     }
 
     #[test]

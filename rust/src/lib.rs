@@ -13,7 +13,11 @@
 //!     (canonicalize → fuse → `StagePlan`), model zoo (Table II)
 //!   * [`pe`] — analytical PE models (Eqs. 1-11, Table I)
 //!   * [`design`] — design-point evaluation (Eqs. 12-15)
-//!   * [`dse`] — NeuroForge's multi-objective genetic DSE (Alg. 1)
+//!   * [`dse`] — NeuroForge's multi-objective genetic DSE (Alg. 1),
+//!     3-objective (latency, DSP, accuracy) when given a profile
+//!   * [`distill`] — DistillCycle training engine (Alg. 2): joint
+//!     full-model + subnetwork training with hierarchical KD, emitting
+//!     the per-path [`distill::AccuracyProfile`]
 //!   * [`rtl`] — Verilog emission for selected design points
 //!   * [`sim`] — cycle-level streaming simulator (the hardware stand-in)
 //!   * [`morph`] — NeuroMorph runtime reconfiguration + governor
@@ -30,6 +34,7 @@ pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod design;
+pub mod distill;
 pub mod dse;
 pub mod graph;
 pub mod morph;

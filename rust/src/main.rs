@@ -3,12 +3,16 @@
 //! ```text
 //! forgemorph report <table1|...|fig12|all>     regenerate paper tables/figures
 //! forgemorph dse|explore --model cifar10 [--pop N --gens N --seed N --dsp N
-//!                   --latency MS --threads N --no-memo]
+//!                   --latency MS --threads N --no-memo --profile FILE]
+//! forgemorph distill --model mnist [--train N --test N --epochs N --batch N
+//!                   --seed N --qbits B --out FILE]   train the morph-path
+//!                   ladder (DistillCycle) and emit an AccuracyProfile
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
 //! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
 //! forgemorph graph dump --model yolov5l        topology + StagePlan as JSON
 //! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
-//!                   --workers N --backend pjrt|sim|analytical]
+//!                   --workers N --backend pjrt|sim|analytical
+//!                   --accuracy-floor F]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
 //! ```
 
@@ -36,6 +40,7 @@ fn main() -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("report") => cmd_report(&args),
         Some("dse") | Some("explore") => cmd_dse(&args),
+        Some("distill") => cmd_distill(&args),
         Some("rtl") => cmd_rtl(&args),
         Some("sim") => cmd_sim(&args),
         Some("graph") => cmd_graph(&args),
@@ -52,17 +57,22 @@ const HELP: &str = "\
 forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
-                fig10, fig11, fig12, backends, graphs, all)
+                fig10, fig11, fig12, backends, graphs, distill, all)
   dse|explore   NeuroForge design space exploration (--threads N fans the
                 fitness evaluation out; results are bit-identical for any
-                thread count. --no-memo disables the chromosome cache)
+                thread count. --no-memo disables the chromosome cache.
+                --profile FILE adds a DistillCycle AccuracyProfile and
+                switches to 3-objective latency/DSP/accuracy fronts)
+  distill       DistillCycle-train a small zoo model's morph-path ladder
+                (hierarchical KD) and emit its AccuracyProfile JSON
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
   graph         graph dump --model M: topology + scheduled StagePlan
                 (stages, dataflow edges, FIFO words, gate blocks) as JSON
   serve         run the NeuroMorph serving demo (--workers N shards;
                 --backend pjrt needs AOT artifacts, sim/analytical run
-                self-contained)
+                self-contained; --accuracy-floor F pins the governor's
+                hard minimum path accuracy)
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
@@ -93,6 +103,27 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     let net = net_for(args)?;
     let default_threads =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // --profile FILE: DistillCycle AccuracyProfile -> 3-objective search
+    let profile = match args.get("profile") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading profile {path}"))?;
+            let p = forgemorph::distill::AccuracyProfile::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            // a ladder trained for another model would silently attach
+            // meaningless accuracies/MAC fractions to this search
+            if p.model != net.name {
+                bail!(
+                    "profile {path} was trained for model '{}' but exploring '{}' — \
+                     regenerate it with `distill --model`",
+                    p.model,
+                    net.name
+                );
+            }
+            Some(p)
+        }
+        None => None,
+    };
     let cfg = dse::DseConfig {
         population: args.get_usize("pop", 96),
         generations: args.get_usize("gens", 40),
@@ -100,6 +131,7 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         rep: rep_for(args),
         threads: args.get_usize("threads", default_threads),
         memo: !args.flag("no-memo"),
+        accuracy_paths: profile.as_ref().map(|p| p.morph_paths()),
         constraints: dse::Constraints {
             latency_ms: args.get("latency").and_then(|s| s.parse().ok()),
             dsp: args.get("dsp").and_then(|s| s.parse().ok()),
@@ -111,24 +143,125 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     let res = dse::run(&net, &ZYNQ_7100, &cfg);
     println!(
         "explored {} candidates in {:.2}s ({} threads, {} unique evals, \
-         cache hit rate {:.1}%) — Pareto front ({} points):",
+         cache hit rate {:.1}%) — Pareto front ({} points{}):",
         res.evaluations,
         res.wall_ms / 1e3,
         cfg.threads,
         res.unique_evaluations,
         res.cache_hit_rate() * 100.0,
-        res.pareto.len()
+        res.pareto.len(),
+        if profile.is_some() { ", 3 objectives" } else { "" }
     );
-    println!("{:<28} {:>8} {:>12} {:>9} {:>9}", "p(i)", "DSP", "latency ms", "LUT", "BRAM");
-    for c in &res.pareto {
+    match &profile {
+        None => {
+            println!(
+                "{:<28} {:>8} {:>12} {:>9} {:>9}",
+                "p(i)", "DSP", "latency ms", "LUT", "BRAM"
+            );
+            for c in &res.pareto {
+                println!(
+                    "{:<28} {:>8} {:>12.4} {:>9} {:>9}",
+                    format!("{:?}", c.config.parallelism),
+                    c.objectives.dsp,
+                    c.objectives.latency_ms,
+                    c.objectives.lut,
+                    c.objectives.bram
+                );
+            }
+        }
+        Some(prof) => {
+            println!(
+                "{:<24} {:>8} {:>12} {:>9} {:>9} {:>9} {:>9}",
+                "p(i)", "DSP", "latency ms", "LUT", "BRAM", "path", "accuracy"
+            );
+            for c in &res.pareto {
+                // the trailing gene selects the execution path (1-based)
+                let (path_gene, conv) = c.config.parallelism.split_last().unwrap();
+                let path = &prof.paths[path_gene - 1];
+                println!(
+                    "{:<24} {:>8} {:>12.4} {:>9} {:>9} {:>9} {:>8.1}%",
+                    format!("{conv:?}"),
+                    c.objectives.dsp,
+                    c.objectives.latency_ms,
+                    c.objectives.lut,
+                    c.objectives.bram,
+                    path.name,
+                    c.objectives.accuracy * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_distill(args: &Args) -> anyhow::Result<()> {
+    use forgemorph::distill::{self, DistillConfig, DistillSpec};
+    let net = net_for(args)?;
+    let spec = DistillSpec::from_network(&net).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let qat_bits: Option<u32> = match args.get("qbits") {
+        None => None,
+        Some(s) => {
+            let bits: u32 = s.parse().with_context(|| format!("--qbits {s}"))?;
+            // QParams shifts 1 << (bits-1) in i64 and needs a usable grid
+            if !(2..=32).contains(&bits) {
+                bail!("--qbits {bits}: supported quantization widths are 2..=32");
+            }
+            Some(bits)
+        }
+    };
+    let cfg = DistillConfig {
+        epochs_per_stage: args.get_usize("epochs", 2),
+        batch: args.get_usize("batch", 32),
+        seed: args.get_u64("seed", 0),
+        qat_bits,
+        ..DistillConfig::default()
+    };
+    let n_train = args.get_usize("train", 512);
+    let n_test = args.get_usize("test", 128);
+    if n_train == 0 {
+        bail!("--train 0: nothing to train on");
+    }
+    if n_test == 0 {
+        bail!("--test 0: accuracy needs at least one test sample");
+    }
+    // the engine clamps the batch to the train count, then drops any
+    // trailing partial batch each epoch (train.py parity) — say so
+    let eff_batch = cfg.batch.min(n_train);
+    if n_train % eff_batch != 0 {
         println!(
-            "{:<28} {:>8} {:>12.4} {:>9} {:>9}",
-            format!("{:?}", c.config.parallelism),
-            c.objectives.dsp,
-            c.objectives.latency_ms,
-            c.objectives.lut,
-            c.objectives.bram
+            "note: trailing {} samples are dropped each epoch (batch {eff_batch})",
+            n_train % eff_batch
         );
+    }
+    let ds = spec.dataset(n_train, n_test, cfg.seed);
+    println!(
+        "DistillCycle: training '{}' ladder ({} paths) on {n_train}+{n_test} samples, \
+         {} epochs/stage, seed {}{}",
+        spec.name,
+        spec.paths().len(),
+        cfg.epochs_per_stage,
+        cfg.seed,
+        cfg.qat_bits.map(|b| format!(", int{b} QAT")).unwrap_or_default()
+    );
+    let t0 = std::time::Instant::now();
+    let profile = distill::train_profile(&spec, &ds, &cfg);
+    println!("trained in {:.2}s", t0.elapsed().as_secs_f64());
+    println!(
+        "{:<10} {:>7} {:>10} {:>12} {:>10}",
+        "path", "depth", "params", "MACs", "accuracy"
+    );
+    for p in &profile.paths {
+        println!(
+            "{:<10} {:>7} {:>10} {:>12} {:>9.1}%",
+            p.name, p.depth, p.params, p.macs, p.accuracy * 100.0
+        );
+    }
+    println!("accuracy floor (worst path): {:.1}%", profile.floor() * 100.0);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, profile.to_json()).with_context(|| format!("writing {out}"))?;
+        println!("wrote AccuracyProfile to {out}");
+    } else {
+        println!("{}", profile.to_json());
     }
     Ok(())
 }
@@ -255,15 +388,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         other => bail!("unknown backend '{other}' (pjrt|sim|analytical)"),
     };
+    let accuracy_floor = args.get_f64("accuracy-floor", 0.0);
+    // same strict boundary as every other accuracy entry point (manifest,
+    // AccuracyProfile): an out-of-range floor would silently disable the
+    // SLO via the governor's degraded-profile fallback
+    if !(0.0..=1.0).contains(&accuracy_floor) {
+        bail!("--accuracy-floor {accuracy_floor}: must be within 0.0..=1.0 (a fraction, not a percent)");
+    }
     let cfg = ServeConfig {
         max_wait: Duration::from_millis(2),
         patience: 2,
         workers,
+        accuracy_floor,
     };
     let mut coord = Coordinator::start(cfg, spec)?;
     println!(
         "serving {requests} requests at ~{rate_hz} Hz on '{model}' \
-         ({backend} backend, {workers} worker shard(s))"
+         ({backend} backend, {workers} worker shard(s), accuracy floor {:.1}%)",
+        accuracy_floor * 100.0
     );
 
     let mut rng = Rng::new(42);

@@ -9,7 +9,14 @@
 //! * **full-frame reactivation delay** — re-enabling gated blocks stalls
 //!   one frame while line buffers re-prime (Sec. V: "resume execution
 //!   only after reactivation and a full-frame delay"). Switching *down*
-//!   (gating more) is free: gated blocks simply stop toggling.
+//!   (gating more) is free: gated blocks simply stop toggling;
+//! * **hard accuracy floor** — a DistillCycle
+//!   [`AccuracyProfile`](crate::distill::AccuracyProfile) (or the
+//!   application) pins the minimum deployable accuracy: a path below the
+//!   floor is never selected, even when it wins on latency/power. The
+//!   floor is *hard* and the budget *soft* — when no floor-meeting path
+//!   fits the budget, the governor picks the cheapest floor-meeting path
+//!   (a budget overrun) rather than an inaccurate one.
 
 use super::{MorphPath, PathRegistry};
 
@@ -66,6 +73,8 @@ pub struct Governor {
     patience: usize,
     /// frames of stall when re-activating gated blocks
     reactivation_frames: usize,
+    /// hard floor: paths below this accuracy are never selected
+    accuracy_floor: f64,
     /// switches performed (telemetry)
     pub switch_count: usize,
 }
@@ -80,8 +89,22 @@ impl Governor {
             pending: None,
             patience: patience.max(1),
             reactivation_frames: 1,
+            accuracy_floor: 0.0,
             switch_count: 0,
         }
+    }
+
+    /// Install a hard accuracy floor (typically
+    /// `AccuracyProfile::floor()` or an application SLO). Paths with
+    /// `accuracy < floor` are excluded from every selection; a path at
+    /// exactly the floor remains deployable.
+    pub fn with_accuracy_floor(mut self, floor: f64) -> Governor {
+        self.accuracy_floor = floor;
+        self
+    }
+
+    pub fn accuracy_floor(&self) -> f64 {
+        self.accuracy_floor
     }
 
     pub fn current(&self) -> &str {
@@ -92,8 +115,14 @@ impl Governor {
         &self.registry
     }
 
-    /// The most accurate path whose measured power & latency fit `budget`.
+    /// The most accurate floor-meeting path whose measured power &
+    /// latency fit `budget`. The floor is hard, the budget soft: with no
+    /// floor-meeting path inside the budget the cheapest floor-meeting
+    /// path wins; only when NO path meets the floor at all (corrupt or
+    /// untrained profile) does the governor fall back to the most
+    /// accurate path available.
     fn best_for(&self, budget: &Budget) -> &MorphPath {
+        let meets_floor = |p: &&MorphPath| p.accuracy >= self.accuracy_floor;
         let fits = |p: &&MorphPath| -> bool {
             match self.costs.for_path(&p.name) {
                 Some((pw, lat)) => {
@@ -106,6 +135,7 @@ impl Governor {
         self.registry
             .paths()
             .iter()
+            .filter(meets_floor)
             .filter(fits)
             .max_by(|a, b| {
                 a.accuracy
@@ -113,7 +143,21 @@ impl Governor {
                     .unwrap()
                     .then(b.macs.cmp(&a.macs)) // tie-break: cheaper
             })
-            .unwrap_or_else(|| self.registry.lightest())
+            .or_else(|| {
+                // budget infeasible: cheapest path that still meets the
+                // floor (registry is cost-sorted — first match is it)
+                self.registry.paths().iter().find(meets_floor)
+            })
+            .unwrap_or_else(|| {
+                // nothing meets the floor: degrade as little as possible
+                self.registry
+                    .paths()
+                    .iter()
+                    .max_by(|a, b| {
+                        a.accuracy.partial_cmp(&b.accuracy).unwrap().then(b.macs.cmp(&a.macs))
+                    })
+                    .expect("registry is non-empty")
+            })
     }
 
     /// Feed one budget observation; returns the (possibly Hold) decision.
@@ -262,6 +306,84 @@ mod tests {
         let mut gov = Governor::new(registry(), costs(), 1);
         let b = Budget { power_mw: Some(1.0), latency_ms: Some(0.0001) };
         match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d1_w100"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn below_floor_paths_never_selected_even_when_they_win_on_cost() {
+        // d1_w100 (acc 0.93) wins every power/latency comparison, but a
+        // 0.94 floor bans it: the governor must hold the floor on ANY
+        // budget trace, including ones only d1 could satisfy.
+        let mut gov = Governor::new(registry(), costs(), 1).with_accuracy_floor(0.94);
+        let traces = [
+            Budget { power_mw: Some(500.0), latency_ms: None }, // only d1 fits
+            Budget { power_mw: Some(1.0), latency_ms: Some(0.0001) }, // nothing fits
+            Budget { power_mw: Some(600.0), latency_ms: Some(0.3) }, // d1/d3_w50 region
+            Budget::unconstrained(),
+        ];
+        for b in &traces {
+            gov.observe(b);
+            let cur = gov.registry().by_name(gov.current()).unwrap();
+            assert!(
+                cur.accuracy >= 0.94,
+                "budget {b:?} selected below-floor path {} ({})",
+                cur.name,
+                cur.accuracy
+            );
+            assert_ne!(gov.current(), "d1_w100");
+        }
+    }
+
+    #[test]
+    fn floor_is_hard_budget_is_soft() {
+        // floor 0.96 leaves {d2_w100 (610 mW), d3_w100 (740 mW)}; a
+        // 500 mW cap fits neither -> the governor overruns the budget
+        // with the cheapest floor-meeting path instead of dropping to d1
+        let mut gov = Governor::new(registry(), costs(), 1).with_accuracy_floor(0.96);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        match gov.observe(&tight) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d2_w100"),
+            d => panic!("expected budget-overrun switch to d2_w100, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn exactly_equal_accuracy_meets_the_floor() {
+        // boundary: a path AT the floor stays deployable. Floor 0.95 ==
+        // d3_w50's accuracy; with a budget only d1 (0.93) and d3_w50
+        // (0.95) can satisfy, d3_w50 must be chosen.
+        let mut gov = Governor::new(registry(), costs(), 1).with_accuracy_floor(0.95);
+        let b = Budget { power_mw: Some(560.0), latency_ms: None };
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d3_w50"),
+            d => panic!("{d:?}"),
+        }
+        // nudging the floor past it bans it
+        let mut gov = Governor::new(registry(), costs(), 1)
+            .with_accuracy_floor(0.95 + 1e-12);
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d2_w100", "soft-budget overrun"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn unmeetable_floor_degrades_to_most_accurate() {
+        let mut gov = Governor::new(registry(), costs(), 1).with_accuracy_floor(0.999);
+        // full path is already current (most accurate): hold, never panic
+        assert_eq!(gov.observe(&Budget { power_mw: Some(1.0), latency_ms: None }), Decision::Hold);
+        assert_eq!(gov.current(), "d3_w100");
+    }
+
+    #[test]
+    fn zero_floor_preserves_legacy_behavior() {
+        // with the default floor the selection must match the pre-floor
+        // governor on every test budget above
+        let mut legacy = Governor::new(registry(), costs(), 1);
+        let b = Budget { power_mw: Some(500.0), latency_ms: None };
+        match legacy.observe(&b) {
             Decision::Switch { to, .. } => assert_eq!(to, "d1_w100"),
             d => panic!("{d:?}"),
         }

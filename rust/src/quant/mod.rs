@@ -93,6 +93,46 @@ mod tests {
     }
 
     #[test]
+    fn prop_fake_quant_idempotent_and_clamped() {
+        // quantize∘dequantize is a projection: applying it twice changes
+        // nothing, and values beyond the fitted range pin EXACTLY to the
+        // int8/int16 grid boundaries (the QAT forward pass in
+        // `distill` relies on both properties).
+        check(
+            "quant-idempotent",
+            300,
+            21,
+            |r: &mut Rng| {
+                let n = r.below(48) + 2;
+                let bits = if r.chance(0.5) { 8 } else { 16 };
+                let data: Vec<f64> = (0..n).map(|_| r.gauss() * 5.0).collect();
+                (data, bits)
+            },
+            |(data, bits)| {
+                let p = QParams::fit(data, *bits);
+                for &x in data {
+                    let once = p.fake_quant(x);
+                    let twice = p.fake_quant(once);
+                    if once != twice {
+                        return ensure(false, format!("not idempotent at {x}: {once} vs {twice}"));
+                    }
+                }
+                // clamp behavior at the signed-int boundaries
+                let (qmin, qmax) = (QParams::qmin(*bits), QParams::qmax(*bits));
+                let amax = data.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-8);
+                ensure(p.quantize(amax) == qmax, "amax must hit qmax")?;
+                ensure(p.quantize(-amax) == -qmax, "symmetric scheme: -amax -> -qmax")?;
+                ensure(p.quantize(amax * 10.0) == qmax, "overflow clamps to qmax")?;
+                ensure(p.quantize(-amax * 10.0) == qmin, "underflow clamps to qmin")?;
+                ensure(
+                    p.fake_quant(amax * 10.0) == p.dequantize(qmax),
+                    "clamped round trip lands on the top grid point",
+                )
+            },
+        );
+    }
+
+    #[test]
     fn prop_roundtrip_error_half_ulp() {
         check(
             "quant-roundtrip",

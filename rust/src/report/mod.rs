@@ -672,6 +672,57 @@ pub fn graphs() -> String {
     s
 }
 
+/// DistillCycle summary: train the tiny demo ladder live and show the
+/// per-path accuracy table, the loss trajectories' endpoints and the
+/// governor floor the profile implies. (The small budget keeps this
+/// report runnable in seconds; the real ladders come from
+/// `forgemorph distill --model mnist|svhn|cifar10`.)
+pub fn distill() -> String {
+    use crate::distill::{self, DistillConfig, DistillSpec};
+    let spec = DistillSpec::tiny();
+    let cfg = DistillConfig { epochs_per_stage: 1, batch: 32, ..DistillConfig::default() };
+    let ds = spec.dataset(192, 96, cfg.seed);
+    let profile = distill::train_profile(&spec, &ds, &cfg);
+    let mut s = header("DistillCycle: hierarchical-KD ladder training (tiny demo spec)");
+    let _ = writeln!(
+        s,
+        "model '{}' — {} Layer-Blocks, widths {:?}, {} train / {} test samples",
+        spec.name,
+        spec.filters.len(),
+        spec.widths,
+        ds.n_train(),
+        ds.n_test()
+    );
+    let _ = writeln!(
+        s,
+        "{:<10} {:>7} {:>9} {:>10} {:>10} {:>12}",
+        "path", "params", "MACs", "accuracy", "first loss", "last loss"
+    );
+    for p in &profile.paths {
+        let _ = writeln!(
+            s,
+            "{:<10} {:>7} {:>9} {:>9.1}% {:>10.4} {:>12.4}",
+            p.name,
+            p.params,
+            p.macs,
+            p.accuracy * 100.0,
+            p.loss_trajectory.first().copied().unwrap_or(f64::NAN),
+            p.loss_trajectory.last().copied().unwrap_or(f64::NAN)
+        );
+    }
+    let _ = writeln!(
+        s,
+        "governor accuracy floor (worst trained path): {:.1}%",
+        profile.floor() * 100.0
+    );
+    let _ = writeln!(
+        s,
+        "profiles feed `explore --profile` (3-objective fronts) and the\n\
+         governor's hard floor; identical seeds give byte-identical JSON."
+    );
+    s
+}
+
 /// Everything, in paper order.
 pub fn all() -> String {
     let mut s = String::new();
@@ -688,6 +739,7 @@ pub fn all() -> String {
     s.push_str(&fig12());
     s.push_str(&backends());
     s.push_str(&graphs());
+    s.push_str(&distill());
     s
 }
 
@@ -707,6 +759,7 @@ pub fn by_name(id: &str) -> Option<String> {
         "fig12" => fig12(),
         "backends" => backends(),
         "graphs" => graphs(),
+        "distill" => distill(),
         "all" => all(),
         _ => return None,
     })
@@ -830,11 +883,20 @@ mod tests {
     fn by_name_covers_everything() {
         for id in [
             "table1", "table2", "table3", "table4", "table5", "table6",
-            "fig8", "fig10", "fig11", "fig12", "backends", "graphs",
+            "fig8", "fig10", "fig11", "fig12", "backends", "graphs", "distill",
         ] {
             assert!(by_name(id).is_some(), "{id}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn distill_report_lists_ladder_and_floor() {
+        let d = distill();
+        for p in ["d1_w100", "d2_w100", "d3_w100", "d3_w50"] {
+            assert!(d.contains(p), "{p} missing from distill report");
+        }
+        assert!(d.contains("accuracy floor"), "{d}");
     }
 
     #[test]

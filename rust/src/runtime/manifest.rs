@@ -173,12 +173,35 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelManifest, ManifestError> {
                 f.as_str().ok_or_else(|| schema(ctx("artifact file")))?.to_string(),
             );
         }
+        // accuracy is load-bearing (governor floor, DSE objective): a
+        // missing or out-of-range value is a schema error, never a silent
+        // 0.0. Untrained paths must say so explicitly with `null`.
+        let accuracy = match p.get("accuracy") {
+            None => {
+                return Err(schema(format!(
+                    "model {name}: path '{pname}': missing 'accuracy' \
+                     (use null for an untrained path)"
+                )))
+            }
+            Some(Json::Null) => 0.0,
+            Some(v) => {
+                let a = v.as_f64().ok_or_else(|| {
+                    schema(format!("model {name}: path '{pname}': non-numeric 'accuracy'"))
+                })?;
+                if !(0.0..=1.0).contains(&a) {
+                    return Err(schema(format!(
+                        "model {name}: path '{pname}': accuracy {a} outside 0.0..=1.0"
+                    )));
+                }
+                a
+            }
+        };
         paths.push(PathArtifacts {
             path: MorphPath {
                 name: pname.to_string(),
                 depth: p.get("depth").and_then(Json::as_u64).unwrap_or(0) as usize,
                 width_pct: p.get("width_pct").and_then(Json::as_u64).unwrap_or(100) as usize,
-                accuracy: p.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+                accuracy,
                 params: p.get("params").and_then(Json::as_u64).unwrap_or(0) as usize,
                 macs: p.get("macs").and_then(Json::as_u64).unwrap_or(0) as usize,
             },
@@ -290,6 +313,35 @@ mod tests {
     fn rejects_wrong_version() {
         let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
         assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_accuracy_is_schema_error_not_zero() {
+        let bad = SAMPLE.replace("\"accuracy\": 0.9, ", "");
+        match Manifest::parse(Path::new("/tmp"), &bad) {
+            Err(ManifestError::Schema(msg)) => {
+                assert!(msg.contains("accuracy") && msg.contains("null"), "{msg}")
+            }
+            other => panic!("expected schema error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_null_accuracy_means_untrained() {
+        let untrained = SAMPLE.replace("\"accuracy\": 0.9", "\"accuracy\": null");
+        let m = Manifest::parse(Path::new("/tmp"), &untrained).unwrap();
+        assert_eq!(m.model("mnist").unwrap().paths[0].path.accuracy, 0.0);
+    }
+
+    #[test]
+    fn out_of_range_accuracy_rejected() {
+        for v in ["1.5", "-0.1", "\"high\""] {
+            let bad = SAMPLE.replace("\"accuracy\": 0.9", &format!("\"accuracy\": {v}"));
+            assert!(
+                matches!(Manifest::parse(Path::new("/tmp"), &bad), Err(ManifestError::Schema(_))),
+                "accuracy {v} must be rejected"
+            );
+        }
     }
 
     #[test]

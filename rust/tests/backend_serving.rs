@@ -50,6 +50,7 @@ fn serve(
         max_wait: Duration::from_millis(1),
         patience: 1,
         workers,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec_for(kind)).expect("start");
     let rxs: Vec<_> = stream
@@ -101,6 +102,7 @@ fn budget_squeeze_downshifts_all_shards_once() {
         max_wait: Duration::from_millis(1),
         patience: 1,
         workers: 4,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
 
@@ -145,6 +147,7 @@ fn shutdown_drains_inflight_requests() {
         max_wait: Duration::from_millis(5),
         patience: 2,
         workers: 2,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
     let rxs: Vec<_> = stream
@@ -172,6 +175,7 @@ fn work_stealing_spreads_load_across_shards() {
         max_wait: Duration::from_millis(1),
         patience: 2,
         workers: 4,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
     let rxs: Vec<_> = stream

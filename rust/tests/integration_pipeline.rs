@@ -111,6 +111,7 @@ fn coordinator_serves_and_morphs() {
         max_wait: Duration::from_millis(1),
         patience: 1,
         workers: 2,
+        ..ServeConfig::default()
     };
     let mut coord = Coordinator::start(cfg, spec).expect("coordinator start");
 
