@@ -70,6 +70,7 @@ fn main() -> Result<()> {
                 dsp: Some(600),
                 lut: None,
                 bram: None,
+                power_mw: None,
             },
         ),
     ] {

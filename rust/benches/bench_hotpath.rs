@@ -24,7 +24,7 @@
 use std::time::{Duration, Instant};
 
 use forgemorph::backend::BackendSpec;
-use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig};
 use forgemorph::design::{self, DesignConfig};
 use forgemorph::dse;
 use forgemorph::graph::zoo;
@@ -387,6 +387,43 @@ fn main() {
         }
     } else {
         println!("(engine benches skipped: run `make artifacts`)");
+    }
+
+    // --- power-aware trace replay (the closed-loop budget path) -------------
+    // Whole-stack step-trace replay: per-frame governor observation,
+    // pinned-path batching, energy integral. Reported as replayed
+    // frames/sec; the decision log is deterministic, so every repeat does
+    // identical work.
+    {
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        let frames = 512usize;
+        let rate_hz = 4000.0;
+        let t0 = Instant::now();
+        let mut coord = Coordinator::start(
+            ServeConfig { workers: 2, external_pacing: true, ..ServeConfig::default() },
+            BackendSpec::sim(net, design, ZYNQ_7100, paths),
+        )
+        .unwrap();
+        let cap = trace::default_squeeze_cap(&coord.path_energy_rows());
+        let events = trace::step(frames as f64 / rate_hz, cap);
+        let out = coord
+            .replay_power_trace(
+                &events,
+                &TraceConfig { frames, rate_hz, seed: 11 },
+            )
+            .unwrap();
+        let wall = t0.elapsed();
+        println!(
+            "power-trace replay mnist p=16 ({frames} frames, 2 shards): {} in {}  \
+             ({:.0} frames/s, {} switches, squeeze saving {:.1}%)",
+            out.answered,
+            fmt_t(wall.as_secs_f64()),
+            out.answered as f64 / wall.as_secs_f64(),
+            out.switches.len(),
+            out.squeeze_reduction_pct().unwrap_or(0.0)
+        );
     }
 
     // --- sharded serving throughput (sim backend, no artifacts needed) ------

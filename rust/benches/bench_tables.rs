@@ -11,6 +11,7 @@ fn main() {
     let experiments: &[&str] = &[
         "table1", "table2", "fig2", "fig8", "fig10", "table3", "table4",
         "table5", "table6", "fig11", "fig12", "backends", "graphs", "distill",
+        "power",
     ];
     let mut timings: Vec<(&str, f64)> = Vec::new();
     for id in experiments {

@@ -15,7 +15,7 @@ use crate::graph::Network;
 use crate::morph::governor::PathCosts;
 use crate::morph::{MorphPath, PathRegistry};
 use crate::pe::{Device, Resources};
-use crate::power::{Activity, PowerModel};
+use crate::power::{Activity, PathEnergy, PowerModel};
 
 /// The analytical serving backend.
 pub struct AnalyticalBackend {
@@ -25,6 +25,7 @@ pub struct AnalyticalBackend {
     frame_len: usize,
     num_classes: usize,
     costs: PathCosts,
+    energy: Vec<PathEnergy>,
 }
 
 impl AnalyticalBackend {
@@ -60,16 +61,22 @@ impl AnalyticalBackend {
                 .map_err(|e| BackendError::Init(e.to_string()))?;
         }
         let full_macs = registry.full().macs.max(1);
-        let rows = registry
-            .paths()
-            .iter()
-            .map(|p| {
-                let ratio = p.macs as f64 / full_macs as f64;
-                let power = floor + (full_power - floor) * ratio;
-                let latency = full_latency_ms * ratio;
-                (p.name.clone(), power, latency)
-            })
-            .collect();
+        let mut rows = Vec::with_capacity(registry.paths().len());
+        let mut energy = Vec::with_capacity(registry.paths().len());
+        for p in registry.paths() {
+            let ratio = p.macs as f64 / full_macs as f64;
+            let power = floor + (full_power - floor) * ratio;
+            let latency = full_latency_ms * ratio;
+            rows.push((p.name.clone(), power, latency));
+            // first-order activity: the MAC fraction is the fraction of
+            // the fabric still toggling on this path
+            energy.push(PathEnergy {
+                name: p.name.clone(),
+                activity: Activity { active_fraction: ratio, ..Activity::default() },
+                power_mw: power,
+                frame_ms: latency,
+            });
+        }
 
         let (h, w, c) = net.input_dims();
         let frame_len = h * w * c;
@@ -82,6 +89,7 @@ impl AnalyticalBackend {
             frame_len,
             num_classes,
             costs: PathCosts { rows },
+            energy,
         })
     }
 }
@@ -109,6 +117,10 @@ impl InferenceBackend for AnalyticalBackend {
 
     fn path_costs(&self) -> PathCosts {
         self.costs.clone()
+    }
+
+    fn path_energy(&self) -> Vec<PathEnergy> {
+        self.energy.clone()
     }
 
     fn execute(

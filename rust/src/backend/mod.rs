@@ -37,6 +37,7 @@ use crate::graph::{LayerKind, Network};
 use crate::morph::governor::PathCosts;
 use crate::morph::MorphPath;
 use crate::pe::Device;
+use crate::power::{Activity, PathEnergy};
 use crate::util::rng::Rng;
 
 /// Errors surfaced by backend construction and execution.
@@ -89,6 +90,26 @@ pub trait InferenceBackend: Send {
 
     /// Per-path (power mW, latency ms) table the governor trades on.
     fn path_costs(&self) -> PathCosts;
+
+    /// Per-path power/energy operating points the serving layer's energy
+    /// accounting consumes. The default derives rows from [`path_costs`]
+    /// at the default activity; backends with a richer activity model
+    /// (the cycle simulator's StagePlan gating footprint, the analytical
+    /// model's MAC fraction) override it.
+    ///
+    /// [`path_costs`]: InferenceBackend::path_costs
+    fn path_energy(&self) -> Vec<PathEnergy> {
+        self.path_costs()
+            .rows
+            .iter()
+            .map(|(name, power_mw, frame_ms)| PathEnergy {
+                name: name.clone(),
+                activity: Activity::default(),
+                power_mw: *power_mw,
+                frame_ms: *frame_ms,
+            })
+            .collect()
+    }
 
     /// Execute `batch` frames on `path`; returns flattened logits
     /// `[batch * num_classes]`.
@@ -361,6 +382,46 @@ mod tests {
             assert_eq!(b.num_classes(), 10);
             assert_eq!(b.batch_sizes(), vec![1, 8]);
             assert_eq!(b.morph_paths().len(), 3);
+        }
+    }
+
+    #[test]
+    fn path_energy_consistent_with_costs_on_every_backend() {
+        // the energy rows must cover exactly the cost-table paths, agree
+        // on power/latency, and be monotone in path depth (gating fewer
+        // blocks can only draw more power)
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        for spec in [
+            BackendSpec::sim(net.clone(), design.clone(), ZYNQ_7100, paths()),
+            BackendSpec::analytical(net.clone(), design.clone(), ZYNQ_7100, paths()),
+        ] {
+            let b = spec.build().expect("build");
+            let costs = b.path_costs();
+            let energy = b.path_energy();
+            assert_eq!(energy.len(), costs.rows.len());
+            for (name, power, lat) in &costs.rows {
+                let e = energy
+                    .iter()
+                    .find(|e| &e.name == name)
+                    .unwrap_or_else(|| panic!("no energy row for {name}"));
+                assert!((e.power_mw - power).abs() < 1e-9, "{name} power");
+                assert!((e.frame_ms - lat).abs() < 1e-9, "{name} latency");
+                assert!(e.energy_mj_per_frame() > 0.0);
+                assert!((0.0..=1.0).contains(&e.activity.active_fraction));
+                assert!((0.0..=1.0).contains(&e.activity.toggle_rate));
+            }
+            let by_depth = |d: usize| {
+                energy
+                    .iter()
+                    .find(|e| e.name == format!("d{d}_w100"))
+                    .unwrap()
+                    .clone()
+            };
+            let (e1, e3) = (by_depth(1), by_depth(3));
+            assert!(e1.power_mw < e3.power_mw);
+            assert!(e1.activity.active_fraction <= e3.activity.active_fraction);
+            assert!(e1.energy_mj_per_frame() < e3.energy_mj_per_frame());
         }
     }
 

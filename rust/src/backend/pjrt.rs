@@ -77,6 +77,9 @@ impl InferenceBackend for PjrtBackend {
         self.engine.model().morph_paths()
     }
 
+    // `path_energy` stays the trait default: FPGA-side power/latency for
+    // a PJRT deployment come from the cycle simulator's cost table below
+    // (host-side PJRT numerics carry no power model of their own).
     fn path_costs(&self) -> PathCosts {
         self.costs
             .get_or_init(|| {

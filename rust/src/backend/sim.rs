@@ -18,6 +18,7 @@ use crate::graph::Network;
 use crate::morph::governor::PathCosts;
 use crate::morph::{gate_mask_for, MorphError, MorphPath, PathRegistry};
 use crate::pe::Device;
+use crate::power::{Activity, PathEnergy};
 use crate::sim::{self, GateMask, SimReport};
 
 /// Build the per-path cost table from the cycle simulator — the data the
@@ -51,12 +52,34 @@ pub struct SimBackend {
     num_classes: usize,
     eval: DesignEval,
     masks: BTreeMap<String, GateMask>,
-    /// governor cost table, computed on first request — only shard 0's
-    /// table feeds the shared governor, so the other shards never pay
-    /// the per-path frame simulations
-    costs: OnceCell<PathCosts>,
+    /// governor cost table + per-path energy rows, computed on first
+    /// request — only shard 0's tables feed the shared governor, so the
+    /// other shards never pay the per-path frame simulations
+    costs: OnceCell<(PathCosts, Vec<PathEnergy>)>,
     /// cycle report of the most recently executed path (telemetry)
     last_report: Option<SimReport>,
+}
+
+/// Runtime [`Activity`] of a gated path, derived from its gate mask and
+/// cycle report: the active gate-block fraction (scaled by the width
+/// lanes still toggling) times the surviving stages' busy toggle rate —
+/// the StagePlan-level stand-in for a SAIF activity trace.
+fn activity_from(mask: &GateMask, rep: &SimReport) -> Activity {
+    let total = rep.per_stage.len().max(1);
+    let active = rep.per_stage.iter().filter(|s| !s.gated).count();
+    let block_fraction = active as f64 / total as f64;
+    let busy: u64 = rep
+        .per_stage
+        .iter()
+        .filter(|s| !s.gated)
+        .map(|s| s.busy_cycles)
+        .sum();
+    let denom = (active.max(1) as u64 * rep.period_cycles.max(1)) as f64;
+    let toggle = (Activity::default().toggle_rate * (busy as f64 / denom)).clamp(0.05, 1.0);
+    Activity {
+        active_fraction: (block_fraction * mask.width_fraction).clamp(0.0, 1.0),
+        toggle_rate: toggle,
+    }
 }
 
 impl SimBackend {
@@ -111,6 +134,29 @@ impl SimBackend {
     pub fn last_report(&self) -> Option<&SimReport> {
         self.last_report.as_ref()
     }
+
+    /// One frame sim per path against the pre-scheduled plan and
+    /// pre-evaluated design point (cheaper than the standalone
+    /// [`sim_path_costs`] convenience, which re-schedules per path);
+    /// yields the governor cost table and the energy rows in one pass.
+    fn tables(&self) -> &(PathCosts, Vec<PathEnergy>) {
+        self.costs.get_or_init(|| {
+            let mut rows = Vec::with_capacity(self.registry.paths().len());
+            let mut energy = Vec::with_capacity(self.registry.paths().len());
+            for p in self.registry.paths() {
+                let mask = &self.masks[&p.name];
+                let rep = sim::simulate_with(&self.plan, &self.device, mask, &self.eval);
+                rows.push((p.name.clone(), rep.power_mw, rep.latency_ms()));
+                energy.push(PathEnergy {
+                    name: p.name.clone(),
+                    activity: activity_from(mask, &rep),
+                    power_mw: rep.power_mw,
+                    frame_ms: rep.latency_ms(),
+                });
+            }
+            (PathCosts { rows }, energy)
+        })
+    }
 }
 
 impl InferenceBackend for SimBackend {
@@ -135,27 +181,11 @@ impl InferenceBackend for SimBackend {
     }
 
     fn path_costs(&self) -> PathCosts {
-        // one frame sim per path against the pre-scheduled plan and
-        // pre-evaluated design point (cheaper than the standalone
-        // sim_path_costs() convenience, which re-schedules per path)
-        self.costs
-            .get_or_init(|| PathCosts {
-                rows: self
-                    .registry
-                    .paths()
-                    .iter()
-                    .map(|p| {
-                        let rep = sim::simulate_with(
-                            &self.plan,
-                            &self.device,
-                            &self.masks[&p.name],
-                            &self.eval,
-                        );
-                        (p.name.clone(), rep.power_mw, rep.latency_ms())
-                    })
-                    .collect(),
-            })
-            .clone()
+        self.tables().0.clone()
+    }
+
+    fn path_energy(&self) -> Vec<PathEnergy> {
+        self.tables().1.clone()
     }
 
     fn execute(
@@ -240,6 +270,43 @@ mod tests {
         let (_, p1, l1) = get("d1_w100");
         let (_, p3, l3) = get("d3_w100");
         assert!(p1 < p3 && l1 < l3);
+    }
+
+    #[test]
+    fn activity_tracks_gating_depth_and_width() {
+        let b = backend();
+        let energy = b.path_energy();
+        let frac = |n: &str| {
+            energy
+                .iter()
+                .find(|e| e.name == n)
+                .unwrap()
+                .activity
+                .active_fraction
+        };
+        // deeper paths keep more gate blocks toggling
+        assert!(frac("d1_w100") < frac("d2_w100"));
+        assert!(frac("d2_w100") < frac("d3_w100"));
+        // a width-gated full-depth path sits below the full path
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 4, FpRep::Int16);
+        let mut paths = morph::depth_ladder(&net);
+        paths.push(MorphPath {
+            name: "d3_w50".into(),
+            depth: 3,
+            width_pct: 50,
+            accuracy: 0.95,
+            params: 1,
+            macs: paths.last().unwrap().macs / 2,
+        });
+        let b = SimBackend::new(net, design, ZYNQ_7100, paths, vec![1], 1).unwrap();
+        let energy = b.path_energy();
+        let get = |n: &str| energy.iter().find(|e| e.name == n).unwrap();
+        assert!(
+            get("d3_w50").activity.active_fraction
+                < get("d3_w100").activity.active_fraction
+        );
+        assert!(get("d3_w50").power_mw < get("d3_w100").power_mw);
     }
 
     #[test]

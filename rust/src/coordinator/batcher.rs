@@ -5,7 +5,30 @@
 //! largest supported batch, flushing early when the oldest request's
 //! queueing deadline expires — the standard latency/throughput dial.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Pop up to `size` requests that share one pinned morph path (all
+/// unpinned requests count as one group). A batch never straddles a
+/// pinned-path boundary, so across a morph transition the outgoing
+/// path's requests drain first — the drain half of the serving engine's
+/// drain→swap→resume reconfiguration timeline.
+pub fn pop_pinned_run(q: &mut VecDeque<Request>, size: usize) -> Vec<Request> {
+    let mut out: Vec<Request> = Vec::with_capacity(size.min(q.len()));
+    while out.len() < size {
+        match q.front() {
+            Some(next)
+                if out.is_empty() || next.pinned_path == out[0].pinned_path =>
+            {
+                out.push(q.pop_front().expect("front just checked"));
+            }
+            _ => break,
+        }
+    }
+    out
+}
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -36,6 +59,14 @@ impl BatchPolicy {
             .find(|&&s| s <= n)
             .copied()
             .unwrap_or(self.sizes[0])
+    }
+
+    /// Smallest supported size that covers `n` requests (the menu's max
+    /// when nothing does). The executed-batch size for a run that came
+    /// up short of the decided size — e.g. split at a pinned-path
+    /// boundary — so padding never exceeds the tightest menu entry.
+    pub fn cover(&self, n: usize) -> usize {
+        self.sizes.iter().find(|&&s| s >= n).copied().unwrap_or_else(|| self.max_size())
     }
 
     /// Decide whether to emit a batch given `pending` queued requests and
@@ -80,6 +111,18 @@ mod tests {
     }
 
     #[test]
+    fn cover_picks_smallest_ge() {
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
+        assert_eq!(p.cover(0), 1);
+        assert_eq!(p.cover(1), 1);
+        assert_eq!(p.cover(2), 4);
+        assert_eq!(p.cover(4), 4);
+        assert_eq!(p.cover(5), 8);
+        // beyond the menu: the max size (padding is capped by the menu)
+        assert_eq!(p.cover(12), 8);
+    }
+
+    #[test]
     fn full_batch_fires_immediately() {
         let p = policy();
         let now = Instant::now();
@@ -112,5 +155,54 @@ mod tests {
     fn empty_queue_never_fires() {
         let p = policy();
         assert_eq!(p.decide(0, None, Instant::now()), None);
+    }
+
+    fn req(pin: Option<&str>) -> (Request, std::sync::mpsc::Receiver<super::super::Response>) {
+        let (reply, rx) = std::sync::mpsc::channel();
+        (
+            Request {
+                id: 0,
+                data: Vec::new(),
+                enqueued: Instant::now(),
+                reply,
+                pinned_path: pin.map(str::to_string),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn pinned_run_splits_at_path_boundary() {
+        let mut q = VecDeque::new();
+        let mut keep = Vec::new();
+        for pin in [Some("d3"), Some("d3"), Some("d1"), Some("d1"), Some("d1")] {
+            let (r, rx) = req(pin);
+            q.push_back(r);
+            keep.push(rx);
+        }
+        // the d3 run drains first even though 8 were requested
+        let run = pop_pinned_run(&mut q, 8);
+        assert_eq!(run.len(), 2);
+        assert!(run.iter().all(|r| r.pinned_path.as_deref() == Some("d3")));
+        // next call picks up the d1 run, capped by size
+        let run = pop_pinned_run(&mut q, 2);
+        assert_eq!(run.len(), 2);
+        assert!(run.iter().all(|r| r.pinned_path.as_deref() == Some("d1")));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn unpinned_requests_batch_together() {
+        let mut q = VecDeque::new();
+        let mut keep = Vec::new();
+        for _ in 0..3 {
+            let (r, rx) = req(None);
+            q.push_back(r);
+            keep.push(rx);
+        }
+        let run = pop_pinned_run(&mut q, 8);
+        assert_eq!(run.len(), 3);
+        assert!(q.is_empty());
+        assert!(pop_pinned_run(&mut q, 8).is_empty());
     }
 }

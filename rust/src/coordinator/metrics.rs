@@ -1,6 +1,9 @@
-//! Serving metrics: latency histogram, counters, per-path accounting.
+//! Serving metrics: latency histogram, counters, per-path accounting,
+//! and the modeled power/energy telemetry of the power-aware loop.
 
 use std::time::Duration;
+
+use crate::power::PathEnergy;
 
 /// Log-bucketed latency histogram (microsecond resolution, ~7 decades).
 #[derive(Debug, Clone)]
@@ -86,6 +89,12 @@ pub struct ServingMetrics {
     pub stall_frames: u64,
     /// modeled FPGA energy integral (J) over the run
     pub energy_j: f64,
+    /// modeled energy per morph path (mJ) — the Figs. 11-12 breakdown
+    pub energy_mj_by_path: std::collections::BTreeMap<String, f64>,
+    /// Σ power x modeled busy time (mW·ms): mean power = this / modeled_ms
+    pub power_mw_ms: f64,
+    /// modeled FPGA busy time (ms) the energy integral covers
+    pub modeled_ms: f64,
 }
 
 impl ServingMetrics {
@@ -104,8 +113,34 @@ impl ServingMetrics {
         self.e2e_latency.record(queue + exec);
     }
 
+    /// Account `frames` executed on a path with the given energy row:
+    /// the per-inference energy integral of the power-aware loop.
+    pub fn record_energy(&mut self, e: &PathEnergy, frames: usize) {
+        let f = frames as f64;
+        let mj = f * e.energy_mj_per_frame();
+        *self.energy_mj_by_path.entry(e.name.clone()).or_insert(0.0) += mj;
+        self.energy_j += mj / 1000.0;
+        self.power_mw_ms += f * e.frame_ms * e.power_mw;
+        self.modeled_ms += f * e.frame_ms;
+    }
+
+    /// Modeled energy over the run, mJ.
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_mj_by_path.values().sum()
+    }
+
+    /// Time-weighted mean modeled power (mW) while frames executed.
+    pub fn mean_power_mw(&self) -> f64 {
+        if self.modeled_ms == 0.0 {
+            0.0
+        } else {
+            self.power_mw_ms / self.modeled_ms
+        }
+    }
+
     /// Fold another shard's metrics into this one (cross-shard
-    /// aggregation at coordinator shutdown).
+    /// aggregation at coordinator shutdown). Associative up to f64
+    /// rounding: every field is a sum, count-merge or max.
     pub fn merge(&mut self, other: &ServingMetrics) {
         self.requests += other.requests;
         self.batches += other.batches;
@@ -118,6 +153,11 @@ impl ServingMetrics {
         self.morph_switches += other.morph_switches;
         self.stall_frames += other.stall_frames;
         self.energy_j += other.energy_j;
+        for (path, mj) in &other.energy_mj_by_path {
+            *self.energy_mj_by_path.entry(path.clone()).or_insert(0.0) += mj;
+        }
+        self.power_mw_ms += other.power_mw_ms;
+        self.modeled_ms += other.modeled_ms;
     }
 
     pub fn throughput_fps(&self, wall: Duration) -> f64 {
@@ -198,6 +238,32 @@ mod tests {
         assert_eq!(a.morph_switches, 1);
         assert_eq!(a.stall_frames, 2);
         assert!((a.energy_j - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_telemetry_records_and_merges() {
+        let row = |name: &str, power_mw: f64, frame_ms: f64| PathEnergy {
+            name: name.into(),
+            activity: crate::power::Activity::default(),
+            power_mw,
+            frame_ms,
+        };
+        let full = row("d3_w100", 800.0, 2.0);
+        let light = row("d1_w100", 500.0, 0.5);
+        let mut a = ServingMetrics::default();
+        a.record_energy(&full, 10); // 10 x 1.6 mJ
+        let mut b = ServingMetrics::default();
+        b.record_energy(&light, 4); // 4 x 0.25 mJ
+        a.merge(&b);
+        assert!((a.energy_mj() - (16.0 + 1.0)).abs() < 1e-9);
+        assert!((a.energy_j - a.energy_mj() / 1000.0).abs() < 1e-12);
+        assert!((a.energy_mj_by_path["d3_w100"] - 16.0).abs() < 1e-9);
+        assert!((a.energy_mj_by_path["d1_w100"] - 1.0).abs() < 1e-9);
+        // time-weighted mean power: (10*2*800 + 4*0.5*500) / (20 + 2)
+        let want = (10.0 * 2.0 * 800.0 + 4.0 * 0.5 * 500.0) / 22.0;
+        assert!((a.mean_power_mw() - want).abs() < 1e-9, "{}", a.mean_power_mw());
+        // empty metrics report zero power, not NaN
+        assert_eq!(ServingMetrics::default().mean_power_mw(), 0.0);
     }
 
     #[test]

@@ -24,15 +24,18 @@ pub use metrics::{Histogram, ServingMetrics};
 // backend layer with the rest of the sim-serving glue
 pub use crate::backend::sim_path_costs;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::backend::{BackendSpec, InferenceBackend as _};
 use crate::morph::governor::{Budget, Decision, Governor};
-use crate::morph::PathRegistry;
+use crate::morph::{schedule, PathRegistry};
+use crate::power::PathEnergy;
+use crate::util::rng::Rng;
 
 /// An inference request: one flat NHWC frame.
 pub struct Request {
@@ -40,6 +43,11 @@ pub struct Request {
     pub data: Vec<f32>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Response>,
+    /// morph path pre-selected by the submitter (trace-replay mode): the
+    /// worker executes exactly this path instead of observing the
+    /// governor, so decisions are deterministic for any worker count. A
+    /// batch never mixes pins — the old path drains before a swap.
+    pub pinned_path: Option<String>,
 }
 
 /// The reply: logits + serving telemetry.
@@ -67,6 +75,11 @@ pub struct ServeConfig {
     /// hard governor accuracy floor (DistillCycle profile floor or an
     /// application SLO); 0.0 = unconstrained
     pub accuracy_floor: f64,
+    /// external budget pacing: morph decisions are made on the submit
+    /// side (trace replay) and pinned per request — workers never
+    /// observe the governor, so the decision sequence is independent of
+    /// worker count. Default `false` = classic batch-paced observation.
+    pub external_pacing: bool,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +89,7 @@ impl Default for ServeConfig {
             patience: 2,
             workers: 1,
             accuracy_floor: 0.0,
+            external_pacing: false,
         }
     }
 }
@@ -87,6 +101,10 @@ pub enum CoordinatorError {
     Closed,
     /// submitted frame length does not match the backend's frame
     BadFrame { got: usize, want: usize },
+    /// trace replay on a coordinator whose workers also observe the
+    /// governor — the replay would race shard 0's idle observer and
+    /// lose its determinism guarantee
+    ExternalPacingRequired,
 }
 
 impl fmt::Display for CoordinatorError {
@@ -96,6 +114,12 @@ impl fmt::Display for CoordinatorError {
             CoordinatorError::BadFrame { got, want } => {
                 write!(f, "frame has {got} elements, backend expects {want}")
             }
+            CoordinatorError::ExternalPacingRequired => write!(
+                f,
+                "trace replay needs a coordinator started with \
+                 ServeConfig.external_pacing (worker-side governor \
+                 observation would race the replay)"
+            ),
         }
     }
 }
@@ -114,25 +138,29 @@ struct Shared {
     budget: Mutex<Budget>,
     /// the shared NeuroMorph governor (installed by shard 0 at startup)
     governor: OnceLock<Mutex<Governor>>,
-    /// (path, power mW, latency ms) rows for energy accounting
-    cost_rows: OnceLock<Vec<(String, f64, f64)>>,
+    /// per-path power/energy rows for the per-inference energy integral
+    energy_rows: OnceLock<Vec<PathEnergy>>,
     /// backend frame length, for validating submissions up front
     frame_len: OnceLock<usize>,
+    /// workers never observe the governor (submit-side pacing); the
+    /// precondition `replay_power_trace` validates
+    external_pacing: bool,
     /// sleep/wake for idle workers
     wake: Mutex<()>,
     wake_cv: Condvar,
 }
 
 impl Shared {
-    fn new(shards: usize) -> Shared {
+    fn new(shards: usize, external_pacing: bool) -> Shared {
         Shared {
             queues: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
             open: AtomicBool::new(true),
             pending: AtomicUsize::new(0),
             budget: Mutex::new(Budget::unconstrained()),
             governor: OnceLock::new(),
-            cost_rows: OnceLock::new(),
+            energy_rows: OnceLock::new(),
             frame_len: OnceLock::new(),
+            external_pacing,
             wake: Mutex::new(()),
             wake_cv: Condvar::new(),
         }
@@ -169,7 +197,7 @@ impl Coordinator {
     /// from `spec`. Fails if any shard's backend fails to initialize.
     pub fn start(cfg: ServeConfig, spec: BackendSpec) -> anyhow::Result<Coordinator> {
         let n = cfg.workers.max(1);
-        let shared = Arc::new(Shared::new(n));
+        let shared = Arc::new(Shared::new(n, cfg.external_pacing));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::with_capacity(n);
         for shard_id in 0..n {
@@ -211,6 +239,25 @@ impl Coordinator {
     /// [`CoordinatorError::Closed`] once the coordinator has shut down
     /// (previously this silently dropped the request).
     pub fn submit(&self, data: Vec<f32>) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
+        self.submit_inner(data, None)
+    }
+
+    /// Submit one frame pinned to a morph path chosen by the caller (the
+    /// trace-replay loop). The worker executes exactly this path; pinned
+    /// requests drain in submission order across any reconfiguration.
+    pub fn submit_pinned(
+        &self,
+        data: Vec<f32>,
+        path: String,
+    ) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
+        self.submit_inner(data, Some(path))
+    }
+
+    fn submit_inner(
+        &self,
+        data: Vec<f32>,
+        pinned_path: Option<String>,
+    ) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
         if !self.shared.open.load(Ordering::Acquire) {
             return Err(CoordinatorError::Closed);
         }
@@ -231,9 +278,17 @@ impl Coordinator {
             data,
             enqueued: Instant::now(),
             reply,
+            pinned_path,
         });
         self.shared.notify_one();
         Ok(rx)
+    }
+
+    /// Per-path power/energy rows the serving engine accounts with
+    /// (installed by shard 0 at startup; empty before the first shard is
+    /// ready).
+    pub fn path_energy_rows(&self) -> Vec<PathEnergy> {
+        self.shared.energy_rows.get().cloned().unwrap_or_default()
     }
 
     /// Update the operating budget the governor sees. Errors once the
@@ -249,6 +304,123 @@ impl Coordinator {
     /// Worker shard count.
     pub fn workers(&self) -> usize {
         self.shared.queues.len()
+    }
+
+    /// Replay a deterministic power/latency budget trace through the
+    /// serving stack on a **virtual clock**: frame `i` lands at trace
+    /// time `i / rate_hz`, the submit thread feeds the budget in force
+    /// to the shared governor (one observation per frame — the only
+    /// governor mutations in the run) and pins the resulting path on the
+    /// request. Workers drain pinned batches without re-deciding, so the
+    /// decision log, per-path frame counts and energy integral are
+    /// byte-identical for any worker count and any frame seed
+    /// (test-enforced). Morph transitions follow drain→swap→resume:
+    /// already-pinned requests finish on the outgoing path, the swap
+    /// pays the modeled DPR window ([`schedule::swap_timeline`]), then
+    /// the incoming path resumes — no in-flight request is lost.
+    ///
+    /// Consumes the serving run: the coordinator is shut down (and its
+    /// merged metrics returned in the outcome) when the trace ends.
+    ///
+    /// Requires a coordinator started with
+    /// [`ServeConfig::external_pacing`] (enforced — returns
+    /// [`CoordinatorError::ExternalPacingRequired`] otherwise):
+    /// worker-side observation would race the replay's budget and
+    /// re-expand the fleet to the full path between frames.
+    pub fn replay_power_trace(
+        &mut self,
+        events: &[trace::BudgetEvent],
+        tcfg: &TraceConfig,
+    ) -> Result<TraceOutcome, CoordinatorError> {
+        if !self.shared.open.load(Ordering::Acquire) {
+            return Err(CoordinatorError::Closed);
+        }
+        if !self.shared.external_pacing {
+            return Err(CoordinatorError::ExternalPacingRequired);
+        }
+        // start() returns only after shard 0 installed these
+        let governor = self.shared.governor.get().ok_or(CoordinatorError::Closed)?;
+        let frame_len = self.shared.frame_len.get().copied().ok_or(CoordinatorError::Closed)?;
+        let energy_rows = self.shared.energy_rows.get().cloned().unwrap_or_default();
+        // reconfiguration stalls are measured in full-path frame periods
+        let full_frame_ms = energy_rows.iter().map(|e| e.frame_ms).fold(0.0, f64::max);
+        let rate_hz = tcfg.rate_hz.max(1e-9);
+
+        let mut rng = Rng::new(tcfg.seed);
+        let mut receivers = Vec::with_capacity(tcfg.frames);
+        let mut switches: Vec<SwitchRecord> = Vec::new();
+        let mut seg_acc: Vec<(usize, f64)> = vec![(0, 0.0); events.len().max(1)];
+        let mut frames_by_path: BTreeMap<String, usize> = BTreeMap::new();
+        let mut energy_mj = 0.0f64;
+
+        for i in 0..tcfg.frames {
+            let t = i as f64 / rate_hz;
+            let budget = trace::budget_at(events, t);
+            let path = {
+                let mut gov = governor.lock().unwrap();
+                let from_idx = gov.current_index();
+                match gov.observe(&budget) {
+                    Decision::Switch { to, stall_frames } => {
+                        let timeline = schedule::swap_timeline(stall_frames, full_frame_ms);
+                        switches.push(SwitchRecord {
+                            frame: i,
+                            budget_mw: budget.power_mw,
+                            from: gov.registry().paths()[from_idx].name.clone(),
+                            to,
+                            stall_frames,
+                            swap_ms: timeline.swap_ms,
+                        });
+                    }
+                    Decision::Hold => {}
+                }
+                gov.current().to_string()
+            };
+            if let Some(e) = energy_rows.iter().find(|e| e.name == path) {
+                let seg = trace::segment_at(events, t);
+                seg_acc[seg].0 += 1;
+                seg_acc[seg].1 += e.power_mw;
+                energy_mj += e.energy_mj_per_frame();
+            }
+            *frames_by_path.entry(path.clone()).or_insert(0) += 1;
+            let data: Vec<f32> = (0..frame_len).map(|_| rng.f64() as f32).collect();
+            receivers.push(self.submit_pinned(data, path)?);
+        }
+
+        // drain every response: reconfigurations must not lose requests
+        let mut answered = 0usize;
+        for rx in receivers {
+            if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+                answered += 1;
+            }
+        }
+        let mut metrics = self.shutdown();
+        // fold the submit-side decisions into the run telemetry (workers
+        // never observed, so their counters carry none of them)
+        metrics.morph_switches += switches.len() as u64;
+        metrics.stall_frames += switches.iter().map(|s| s.stall_frames as u64).sum::<u64>();
+
+        let segments = events
+            .iter()
+            .enumerate()
+            .map(|(k, e)| SegmentPower {
+                start_s: e.at_s,
+                budget_mw: e.budget.power_mw,
+                frames: seg_acc[k].0,
+                mean_power_mw: if seg_acc[k].0 == 0 {
+                    0.0
+                } else {
+                    seg_acc[k].1 / seg_acc[k].0 as f64
+                },
+            })
+            .collect();
+        Ok(TraceOutcome {
+            switches,
+            segments,
+            frames_by_path,
+            energy_mj,
+            answered,
+            metrics,
+        })
     }
 
     /// Stop accepting work, drain every in-flight request, and return
@@ -291,6 +463,128 @@ impl Drop for Coordinator {
     }
 }
 
+/// Virtual-clock trace-replay configuration
+/// ([`Coordinator::replay_power_trace`]).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// frames to submit over the trace
+    pub frames: usize,
+    /// virtual frame rate mapping frame index -> trace time
+    pub rate_hz: f64,
+    /// frame-content seed; must not affect decisions (test-enforced)
+    pub seed: u64,
+}
+
+/// One morph transition recorded during a trace replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchRecord {
+    /// frame index the switch fired at
+    pub frame: usize,
+    /// power budget in force when it fired
+    pub budget_mw: Option<f64>,
+    pub from: String,
+    pub to: String,
+    /// reactivation stall (frames); 0 on down-shifts
+    pub stall_frames: usize,
+    /// modeled DPR/reconfiguration window, ms
+    pub swap_ms: f64,
+}
+
+/// Mean modeled power over one trace segment (between budget events).
+#[derive(Debug, Clone)]
+pub struct SegmentPower {
+    pub start_s: f64,
+    pub budget_mw: Option<f64>,
+    pub frames: usize,
+    pub mean_power_mw: f64,
+}
+
+/// Everything a trace replay produces: the decision log, per-segment
+/// power, per-path frame counts, the energy integral and the merged
+/// serving metrics of the (shut-down) coordinator.
+pub struct TraceOutcome {
+    pub switches: Vec<SwitchRecord>,
+    pub segments: Vec<SegmentPower>,
+    pub frames_by_path: BTreeMap<String, usize>,
+    /// modeled energy over the replay (mJ), from the pinned-path rows
+    pub energy_mj: f64,
+    /// responses actually received (must equal `TraceConfig::frames`)
+    pub answered: usize,
+    pub metrics: ServingMetrics,
+}
+
+impl TraceOutcome {
+    /// Canonical decision-log text — byte-identical across worker counts
+    /// and frame seeds (test-enforced), greppable in CI.
+    pub fn decision_log(&self) -> String {
+        let mut s = String::new();
+        for r in &self.switches {
+            let budget = r
+                .budget_mw
+                .map(|b| format!("{b:.0} mW"))
+                .unwrap_or_else(|| "none".into());
+            let _ = writeln!(
+                s,
+                "[frame {:05}] budget {budget}: switch {} -> {} (stall {}, swap {:.3} ms)",
+                r.frame, r.from, r.to, r.stall_frames, r.swap_ms
+            );
+        }
+        s
+    }
+
+    /// Human-readable per-segment power table + squeeze summary — the
+    /// ONE rendering shared by `serve --power-trace` and `report power`
+    /// (CI greps the "power reduction after squeeze" line).
+    pub fn render_summary(&self) -> String {
+        let mut s = String::new();
+        for seg in &self.segments {
+            let budget = seg
+                .budget_mw
+                .map(|b| format!("{b:.0} mW"))
+                .unwrap_or_else(|| "none".into());
+            let _ = writeln!(
+                s,
+                "segment t={:>6.3}s budget {budget:>8}: {:>5} frames, mean power {:>7.1} mW",
+                seg.start_s, seg.frames, seg.mean_power_mw
+            );
+        }
+        if let Some(r) = self.squeeze_reduction_pct() {
+            let _ = writeln!(s, "power reduction after squeeze: {r:.1}%");
+        }
+        for (path, n) in &self.frames_by_path {
+            let _ = writeln!(s, "  path {path}: {n} frames");
+        }
+        let _ = writeln!(
+            s,
+            "modeled energy {:.2} mJ | {} switches ({} stall frames) | answered {}",
+            self.energy_mj,
+            self.switches.len(),
+            self.metrics.stall_frames,
+            self.answered
+        );
+        s
+    }
+
+    /// Modeled power reduction (%) from the first unconstrained segment
+    /// that served frames to the tightest-budget segment — the paper's
+    /// Figs. 11-12 down-shift number.
+    pub fn squeeze_reduction_pct(&self) -> Option<f64> {
+        let base = self
+            .segments
+            .iter()
+            .find(|s| s.budget_mw.is_none() && s.frames > 0)?;
+        let tight = self
+            .segments
+            .iter()
+            .filter(|s| s.budget_mw.is_some() && s.frames > 0)
+            .min_by(|a, b| a.budget_mw.partial_cmp(&b.budget_mw).unwrap())?;
+        if base.mean_power_mw <= 0.0 {
+            return None;
+        }
+        Some((1.0 - tight.mean_power_mw / base.mean_power_mw) * 100.0)
+    }
+}
+
 /// How often shard 0 tracks the budget while the fleet is idle — the
 /// pre-refactor single worker's poll cadence, so a squeeze applied in a
 /// traffic lull still downshifts within ~patience x 5ms.
@@ -328,12 +622,16 @@ fn take_batch(
         let mut q = shared.queues[qi].lock().unwrap();
         let oldest = q.front().map(|r| r.enqueued);
         if let Some(size) = policy.decide(q.len(), oldest, now) {
-            let take: Vec<Request> =
-                (0..size.min(q.len())).filter_map(|_| q.pop_front()).collect();
+            // a batch never straddles a pinned-path boundary: the old
+            // path drains before the swap (drain→swap→resume)
+            let take = batcher::pop_pinned_run(&mut q, size.min(q.len()));
             drop(q);
             if !take.is_empty() {
                 shared.pending.fetch_sub(take.len(), Ordering::AcqRel);
-                return Some((size, take));
+                // a run cut short at a pin boundary re-fits to the
+                // smallest covering menu size instead of padding all the
+                // way to the pre-split decision
+                return Some((policy.cover(take.len()), take));
             }
         }
     }
@@ -358,7 +656,7 @@ fn worker_loop(
         let registry = PathRegistry::new(backend.morph_paths());
         let costs = backend.path_costs();
         let _ = shared.frame_len.set(backend.frame_len());
-        let _ = shared.cost_rows.set(costs.rows.clone());
+        let _ = shared.energy_rows.set(backend.path_energy());
         let _ = shared.governor.set(Mutex::new(
             Governor::new(registry, costs, cfg.patience).with_accuracy_floor(cfg.accuracy_floor),
         ));
@@ -378,7 +676,7 @@ fn worker_loop(
         }
         std::thread::sleep(Duration::from_micros(200));
     };
-    let cost_rows = shared.cost_rows.get().cloned().unwrap_or_default();
+    let energy_rows = shared.energy_rows.get().cloned().unwrap_or_default();
     let policy = BatchPolicy::new(backend.batch_sizes(), cfg.max_wait);
     let frame = backend.frame_len();
     let nc = backend.num_classes();
@@ -394,8 +692,13 @@ fn worker_loop(
             }
             // budget changes must bite during traffic lulls too; shard 0
             // alone polls at the single-worker cadence so idle spinning
-            // across N shards does not dilute the patience hysteresis
-            if shard_id == 0 && last_idle_observe.elapsed() >= IDLE_OBSERVE_PERIOD {
+            // across N shards does not dilute the patience hysteresis.
+            // Externally paced serving never observes from the workers —
+            // the submit side owns every governor mutation.
+            if shard_id == 0
+                && !cfg.external_pacing
+                && last_idle_observe.elapsed() >= IDLE_OBSERVE_PERIOD
+            {
                 let _ = observe_governor(governor, &shared, &mut metrics);
                 last_idle_observe = Instant::now();
             }
@@ -406,8 +709,14 @@ fn worker_loop(
         // morph decision between batches (never mid-batch), paced by
         // batch execution so `patience` keeps its meaning regardless of
         // worker count. The governor is shared, so the whole fleet
-        // tracks one active path.
-        let path = observe_governor(governor, &shared, &mut metrics);
+        // tracks one active path. Pinned requests (trace replay) carry
+        // their decision with them; externally paced unpinned requests
+        // read the active path without observing.
+        let path = match take[0].pinned_path.as_ref() {
+            Some(p) => p.clone(),
+            None if cfg.external_pacing => governor.lock().unwrap().current().to_string(),
+            None => observe_governor(governor, &shared, &mut metrics),
+        };
 
         let mut input = Vec::with_capacity(size * frame);
         for r in &take {
@@ -441,9 +750,10 @@ fn worker_loop(
                 let queue_d = t0.duration_since(take[0].enqueued);
                 metrics.record_batch(&path, take.len(), queue_d, exec);
                 // modeled FPGA energy for these frames on the active path:
-                // E = frames x P_path x T_frame (from the backend's table)
-                if let Some((_, pw, lat)) = cost_rows.iter().find(|(n, _, _)| *n == path) {
-                    metrics.energy_j += take.len() as f64 * (pw / 1000.0) * (lat / 1000.0);
+                // E = frames x P_path x T_frame (from the backend's
+                // activity-derived energy rows)
+                if let Some(e) = energy_rows.iter().find(|e| e.name == path) {
+                    metrics.record_energy(e, take.len());
                 }
             }
             Err(e) => {
@@ -522,6 +832,27 @@ mod tests {
             Err(CoordinatorError::BadFrame { .. })
         ));
         assert!(coord.submit(vec![0.0; 784]).is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replay_refuses_batch_paced_coordinator() {
+        // the determinism guarantee needs submit-side pacing; a default
+        // (batch-paced) coordinator must be rejected, not silently raced
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 2, FpRep::Int16);
+        let spec = BackendSpec::sim(
+            net.clone(),
+            design,
+            ZYNQ_7100,
+            crate::morph::depth_ladder(&net),
+        );
+        let mut coord = Coordinator::start(ServeConfig::default(), spec).unwrap();
+        let events = trace::step(0.01, 500.0);
+        let err = coord
+            .replay_power_trace(&events, &TraceConfig { frames: 4, rate_hz: 1000.0, seed: 1 })
+            .unwrap_err();
+        assert_eq!(err, CoordinatorError::ExternalPacingRequired);
         coord.shutdown();
     }
 

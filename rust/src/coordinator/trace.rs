@@ -7,6 +7,7 @@
 //! latency budget the NeuroMorph governor must track.
 
 use crate::morph::governor::Budget;
+use crate::power::PathEnergy;
 use crate::util::rng::Rng;
 
 /// Arrival pattern of inference requests.
@@ -82,6 +83,158 @@ pub fn staircase(duration_s: f64, caps_mw: &[f64]) -> Vec<BudgetEvent> {
     out
 }
 
+/// The canonical down-shift step (`--power-trace step`): run free,
+/// squeeze to `cap_mw` at one third, release at two thirds — the paper's
+/// power-saving-mode experiment (alias of [`squeeze_release`] under the
+/// trace-spec grammar's name).
+pub fn step(duration_s: f64, cap_mw: f64) -> Vec<BudgetEvent> {
+    squeeze_release(duration_s, cap_mw)
+}
+
+/// Thermal-throttle ramp: unconstrained, then `steps` equal plateaus
+/// descending linearly from `from_mw` to `to_mw` across the middle half,
+/// releasing at three quarters.
+pub fn ramp(duration_s: f64, from_mw: f64, to_mw: f64, steps: usize) -> Vec<BudgetEvent> {
+    let steps = steps.max(1);
+    let t0 = duration_s / 4.0;
+    let t1 = 3.0 * duration_s / 4.0;
+    let mut out = vec![BudgetEvent { at_s: 0.0, budget: Budget::unconstrained() }];
+    for k in 0..steps {
+        let f = if steps == 1 { 1.0 } else { k as f64 / (steps - 1) as f64 };
+        out.push(BudgetEvent {
+            at_s: t0 + (t1 - t0) * k as f64 / steps as f64,
+            budget: Budget {
+                power_mw: Some(from_mw + (to_mw - from_mw) * f),
+                latency_ms: None,
+            },
+        });
+    }
+    out.push(BudgetEvent { at_s: t1, budget: Budget::unconstrained() });
+    out
+}
+
+/// Repeated short dips to `cap_mw`, alternating every `period_s`
+/// (event-triggered thermal spikes — the governor's hysteresis test).
+pub fn spike(duration_s: f64, cap_mw: f64, period_s: f64) -> Vec<BudgetEvent> {
+    let period_s = period_s.max(1e-6);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut tight = false;
+    while t < duration_s {
+        out.push(BudgetEvent {
+            at_s: t,
+            budget: if tight {
+                Budget { power_mw: Some(cap_mw), latency_ms: None }
+            } else {
+                Budget::unconstrained()
+            },
+        });
+        tight = !tight;
+        t += period_s;
+    }
+    out
+}
+
+/// Day/night power envelope: a sampled cosine staircase between
+/// `base_mw` (peak allowance) and `base_mw - amp_mw` (deepest night),
+/// `cycles` full periods of 8 plateaus each.
+pub fn diurnal(duration_s: f64, base_mw: f64, amp_mw: f64, cycles: usize) -> Vec<BudgetEvent> {
+    let plateaus = cycles.max(1) * 8;
+    (0..plateaus)
+        .map(|k| {
+            let phase = 2.0 * std::f64::consts::PI * (k % 8) as f64 / 8.0;
+            BudgetEvent {
+                at_s: duration_s * k as f64 / plateaus as f64,
+                budget: Budget {
+                    power_mw: Some(base_mw - amp_mw * (1.0 - phase.cos()) / 2.0),
+                    latency_ms: None,
+                },
+            }
+        })
+        .collect()
+}
+
+/// Default squeeze cap for a deployed ladder: just above the lightest
+/// path's draw (5% of the power span), so a bare `step`/`spike` spec
+/// always has a feasible down-shift target strictly below every heavier
+/// path. The ONE cap policy shared by the CLI, the power report, the
+/// replay bench and the determinism tests. Returns 0.0 on an empty
+/// table.
+pub fn default_squeeze_cap(rows: &[PathEnergy]) -> f64 {
+    if rows.is_empty() {
+        return 0.0;
+    }
+    let full = rows.iter().map(|e| e.power_mw).fold(f64::NEG_INFINITY, f64::max);
+    let light = rows.iter().map(|e| e.power_mw).fold(f64::INFINITY, f64::min);
+    light + 0.05 * (full - light).max(0.0)
+}
+
+/// Parse a `serve --power-trace` spec into a budget-event trace.
+///
+/// Grammar: `<name>[:key=value[,key=value...]]` with the generator names
+/// `step | ramp | spike | diurnal`. Power values are mW, times seconds;
+/// omitted keys default relative to `default_cap_mw` (derived by the
+/// caller from the deployed path table, so a bare `step` always has a
+/// feasible down-shift target). Examples: `step`, `step:cap=520`,
+/// `ramp:from=700,to=500,steps=4`, `spike:cap=500,period=0.25`,
+/// `diurnal:base=700,amp=250,cycles=2`.
+pub fn parse_spec(
+    spec: &str,
+    duration_s: f64,
+    default_cap_mw: f64,
+) -> Result<Vec<BudgetEvent>, String> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let mut kv = std::collections::BTreeMap::new();
+    for pair in rest.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("power-trace '{spec}': expected key=value, got '{pair}'"))?;
+        let num: f64 = v
+            .parse()
+            .map_err(|_| format!("power-trace '{spec}': non-numeric value '{v}' for '{k}'"))?;
+        kv.insert(k.to_string(), num);
+    }
+    let known: &[&str] = match name {
+        "step" => &["cap"],
+        "ramp" => &["from", "to", "steps"],
+        "spike" => &["cap", "period"],
+        "diurnal" => &["base", "amp", "cycles"],
+        other => {
+            return Err(format!(
+                "unknown power-trace '{other}' (expected step|ramp|spike|diurnal)"
+            ))
+        }
+    };
+    if let Some(bad) = kv.keys().find(|k| !known.contains(&k.as_str())) {
+        return Err(format!(
+            "power-trace '{name}': unknown key '{bad}' (valid: {})",
+            known.join(", ")
+        ));
+    }
+    let get = |k: &str, d: f64| kv.get(k).copied().unwrap_or(d);
+    Ok(match name {
+        "step" => step(duration_s, get("cap", default_cap_mw)),
+        "ramp" => ramp(
+            duration_s,
+            get("from", default_cap_mw * 1.4),
+            get("to", default_cap_mw),
+            get("steps", 3.0).max(1.0) as usize,
+        ),
+        "spike" => spike(
+            duration_s,
+            get("cap", default_cap_mw),
+            get("period", duration_s / 6.0),
+        ),
+        "diurnal" => diurnal(
+            duration_s,
+            get("base", default_cap_mw * 1.4),
+            get("amp", default_cap_mw * 0.6),
+            get("cycles", 1.0).max(1.0) as usize,
+        ),
+        _ => unreachable!("name validated above"),
+    })
+}
+
 /// Latency-SLA trace: a deadline tightens when the system enters a
 /// "reactive" mode (the autonomous-vehicle scenario of Sec. I).
 pub fn sla_tightening(duration_s: f64, relaxed_ms: f64, tight_ms: f64) -> Vec<BudgetEvent> {
@@ -105,6 +258,12 @@ pub fn budget_at(events: &[BudgetEvent], t: f64) -> Budget {
         .find(|e| e.at_s <= t)
         .map(|e| e.budget)
         .unwrap_or_else(Budget::unconstrained)
+}
+
+/// Index of the trace event in force at time `t` (0 when `t` precedes
+/// the first event) — the per-segment accounting key of trace replays.
+pub fn segment_at(events: &[BudgetEvent], t: f64) -> usize {
+    events.iter().rposition(|e| e.at_s <= t).unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -169,6 +328,101 @@ mod tests {
         let ev = sla_tightening(2.0, 10.0, 1.0);
         assert_eq!(budget_at(&ev, 0.1).latency_ms, Some(10.0));
         assert_eq!(budget_at(&ev, 1.9).latency_ms, Some(1.0));
+    }
+
+    #[test]
+    fn step_is_squeeze_release() {
+        let a = step(3.0, 500.0);
+        let b = squeeze_release(3.0, 500.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.budget.power_mw, y.budget.power_mw);
+        }
+    }
+
+    #[test]
+    fn ramp_descends_then_releases() {
+        let ev = ramp(8.0, 700.0, 500.0, 3);
+        assert_eq!(ev.len(), 5);
+        assert!(budget_at(&ev, 0.5).power_mw.is_none());
+        assert_eq!(budget_at(&ev, 2.1).power_mw, Some(700.0));
+        assert_eq!(budget_at(&ev, 4.1).power_mw, Some(600.0));
+        assert_eq!(budget_at(&ev, 5.9).power_mw, Some(500.0));
+        assert!(budget_at(&ev, 6.1).power_mw.is_none());
+    }
+
+    #[test]
+    fn spike_alternates_every_period() {
+        let ev = spike(2.0, 500.0, 0.5);
+        assert_eq!(ev.len(), 4);
+        assert!(budget_at(&ev, 0.25).power_mw.is_none());
+        assert_eq!(budget_at(&ev, 0.75).power_mw, Some(500.0));
+        assert!(budget_at(&ev, 1.25).power_mw.is_none());
+        assert_eq!(budget_at(&ev, 1.75).power_mw, Some(500.0));
+    }
+
+    #[test]
+    fn diurnal_oscillates_within_envelope() {
+        let ev = diurnal(8.0, 700.0, 200.0, 2);
+        assert_eq!(ev.len(), 16);
+        for e in &ev {
+            let p = e.budget.power_mw.unwrap();
+            assert!((500.0..=700.0).contains(&p), "{p}");
+        }
+        // peak at phase 0, trough half a cycle later
+        assert_eq!(ev[0].budget.power_mw, Some(700.0));
+        assert!((ev[4].budget.power_mw.unwrap() - 500.0).abs() < 1e-9);
+        // second cycle repeats the first
+        assert_eq!(ev[0].budget.power_mw, ev[8].budget.power_mw);
+    }
+
+    #[test]
+    fn parse_spec_grammar() {
+        // bare name uses the caller-derived default cap
+        let ev = parse_spec("step", 3.0, 520.0).unwrap();
+        assert_eq!(budget_at(&ev, 1.5).power_mw, Some(520.0));
+        // explicit key overrides
+        let ev = parse_spec("step:cap=480", 3.0, 520.0).unwrap();
+        assert_eq!(budget_at(&ev, 1.5).power_mw, Some(480.0));
+        let ev = parse_spec("ramp:from=700,to=500,steps=4", 8.0, 0.0).unwrap();
+        assert_eq!(ev.len(), 6);
+        assert!(parse_spec("spike:cap=500,period=0.5", 2.0, 0.0).is_ok());
+        assert!(parse_spec("diurnal:base=700,amp=200,cycles=2", 8.0, 0.0).is_ok());
+        // errors name the problem
+        let e = parse_spec("sawtooth", 1.0, 500.0).unwrap_err();
+        assert!(e.contains("sawtooth") && e.contains("step|ramp|spike|diurnal"), "{e}");
+        let e = parse_spec("step:watts=5", 1.0, 500.0).unwrap_err();
+        assert!(e.contains("watts") && e.contains("cap"), "{e}");
+        let e = parse_spec("step:cap=high", 1.0, 500.0).unwrap_err();
+        assert!(e.contains("non-numeric"), "{e}");
+        let e = parse_spec("step:cap", 1.0, 500.0).unwrap_err();
+        assert!(e.contains("key=value"), "{e}");
+    }
+
+    #[test]
+    fn default_cap_sits_between_lightest_and_next_path() {
+        let row = |name: &str, power_mw: f64| PathEnergy {
+            name: name.into(),
+            activity: crate::power::Activity::default(),
+            power_mw,
+            frame_ms: 1.0,
+        };
+        let rows = vec![row("d1", 466.0), row("d2", 635.0), row("d3", 974.0)];
+        let cap = default_squeeze_cap(&rows);
+        assert!(cap > 466.0 && cap < 635.0, "{cap}");
+        assert_eq!(default_squeeze_cap(&[]), 0.0);
+        // a one-path ladder degenerates to that path's own draw
+        assert!((default_squeeze_cap(&rows[..1]) - 466.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segment_index_follows_events() {
+        let ev = step(3.0, 500.0);
+        assert_eq!(segment_at(&ev, 0.5), 0);
+        assert_eq!(segment_at(&ev, 1.5), 1);
+        assert_eq!(segment_at(&ev, 2.5), 2);
+        assert_eq!(segment_at(&[], 1.0), 0);
     }
 
     #[test]

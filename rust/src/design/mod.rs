@@ -1034,6 +1034,11 @@ impl Evaluator {
         eval.latency_cycles as f64 / (self.clock_mhz * 1e3)
     }
 
+    /// Deployed clock (MHz) — the power/energy model's frequency input.
+    pub fn clock_mhz(&self) -> f64 {
+        self.clock_mhz
+    }
+
     pub fn fits(&self, eval: &FastEval) -> bool {
         eval.resources.fits(&self.budget)
     }

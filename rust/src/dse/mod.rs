@@ -46,11 +46,13 @@ use std::time::Instant;
 
 use crate::design::{self, DesignConfig};
 use crate::graph::Network;
-use crate::pe::{Device, FpRep};
+use crate::pe::{Device, FpRep, Resources};
+use crate::power::{Activity, PowerModel};
 use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 
-/// User constraints (Algorithm 1's `constraints [t, DSP, LUT, BRAM]`).
+/// User constraints (Algorithm 1's `constraints [t, DSP, LUT, BRAM]`,
+/// extended with the runtime power budget of the closed loop).
 #[derive(Debug, Clone, Copy)]
 pub struct Constraints {
     /// max latency, ms (None = unconstrained)
@@ -58,11 +60,16 @@ pub struct Constraints {
     pub dsp: Option<usize>,
     pub lut: Option<usize>,
     pub bram: Option<usize>,
+    /// max modeled power draw, mW (`explore --power-budget`): candidates
+    /// above it are penalized exactly like resource overruns, so the
+    /// search lands on designs the runtime governor can actually hold
+    /// under the deployment's power cap
+    pub power_mw: Option<f64>,
 }
 
 impl Constraints {
     pub fn none() -> Constraints {
-        Constraints { latency_ms: None, dsp: None, lut: None, bram: None }
+        Constraints { latency_ms: None, dsp: None, lut: None, bram: None, power_mw: None }
     }
 
     /// Constrain to a device's full budget.
@@ -72,6 +79,7 @@ impl Constraints {
             dsp: Some(dev.budget.dsp),
             lut: Some(dev.budget.lut),
             bram: Some(dev.budget.bram),
+            power_mw: None,
         }
     }
 
@@ -90,6 +98,9 @@ impl Constraints {
         }
         if let Some(b) = self.bram {
             v += ((obj.bram as f64 - b as f64) / b as f64).max(0.0);
+        }
+        if let Some(p) = self.power_mw {
+            v += ((obj.power_mw - p) / p).max(0.0);
         }
         v
     }
@@ -110,6 +121,14 @@ pub struct Objectives {
     /// [`AccuracyProfile`](crate::distill::AccuracyProfile) (maximized);
     /// a constant `1.0` in plain 2-objective searches
     pub accuracy: f64,
+    /// modeled power draw (mW): [`PowerModel`] over the allocated
+    /// resources at the device clock; on a 3-objective search the
+    /// dynamic share scales with the selected path's MAC fraction (the
+    /// analytical serving backend's first-order model)
+    pub power_mw: f64,
+    /// modeled energy per frame (mJ) = power x path-scaled latency;
+    /// the optional fourth search axis (`DseConfig::energy_objective`)
+    pub energy_mj: f64,
 }
 
 impl Objectives {
@@ -164,6 +183,12 @@ pub struct DseConfig {
     /// alongside (latency, DSP). `None` reproduces the 2-objective
     /// search bit-for-bit.
     pub accuracy_paths: Option<Vec<crate::morph::MorphPath>>,
+    /// add modeled energy-per-frame as a minimized search axis
+    /// (`explore --energy-front`). Off (the default), power/energy are
+    /// computed for telemetry and the power-budget constraint only and
+    /// contribute nothing to dominance or crowding — existing 2- and
+    /// 3-objective searches stay bit-identical (test-enforced).
+    pub energy_objective: bool,
 }
 
 impl Default for DseConfig {
@@ -180,6 +205,7 @@ impl Default for DseConfig {
             threads: 1,
             memo: true,
             accuracy_paths: None,
+            energy_objective: false,
         }
     }
 }
@@ -266,7 +292,8 @@ impl AccCtx {
 
 /// Path-independent analytical fitness of the conv genes — the
 /// expensive kernel (and the unit of memoization): everything below it
-/// (path scaling, constraint checking) is a handful of multiplies.
+/// (path scaling, constraint checking, power scaling) is a handful of
+/// multiplies.
 #[derive(Debug, Clone, Copy)]
 struct BaseFit {
     latency_ms: f64,
@@ -274,6 +301,8 @@ struct BaseFit {
     lut: usize,
     bram: usize,
     total_pes: usize,
+    /// full-design power at the device clock and default activity
+    power_mw: f64,
 }
 
 #[inline]
@@ -281,32 +310,49 @@ fn base_eval(evaluator: &design::Evaluator, conv_genes: &[usize], rep: FpRep) ->
     let fast = evaluator
         .objectives(conv_genes, rep)
         .expect("chromosome respects bounds by construction");
+    let power_mw = PowerModel::default().total_mw(
+        &fast.resources,
+        evaluator.clock_mhz(),
+        Activity::default(),
+    );
     BaseFit {
         latency_ms: evaluator.latency_ms(&fast),
         dsp: fast.resources.dsp,
         lut: fast.resources.lut,
         bram: fast.resources.bram,
         total_pes: fast.total_pes,
+        power_mw,
     }
 }
 
 /// Apply the (optional) trailing path-selection gene and the
 /// constraints to a base fitness: latency scales by the path's MAC
-/// fraction, accuracy becomes the third objective.
+/// fraction, accuracy becomes the third objective, and the dynamic power
+/// share scales with the active MAC fraction (the static + clock-tree
+/// floor stays — clock-gated blocks leak but never toggle).
 #[inline]
 fn finish_fit(
     base: BaseFit,
     genes: &[usize],
     acc: Option<&AccCtx>,
     constraints: &Constraints,
+    clock_mhz: f64,
 ) -> (Objectives, f64) {
     let mut latency_ms = base.latency_ms;
+    let mut power_mw = base.power_mw;
     let mut accuracy = 1.0;
     if let Some(ctx) = acc {
         let pi = genes[genes.len() - 1] - 1; // path gene is 1-based
         latency_ms *= ctx.ratios[pi];
         accuracy = ctx.accs[pi];
+        let floor = PowerModel::default().total_mw(
+            &Resources::default(),
+            clock_mhz,
+            Activity::default(),
+        );
+        power_mw = floor + (base.power_mw - floor) * ctx.ratios[pi];
     }
+    let energy_mj = power_mw * latency_ms / 1000.0;
     let objectives = Objectives {
         latency_ms,
         dsp: base.dsp,
@@ -314,6 +360,8 @@ fn finish_fit(
         bram: base.bram,
         total_pes: base.total_pes,
         accuracy,
+        power_mw,
+        energy_mj,
     };
     let violation = constraints.violation(&objectives);
     (objectives, violation)
@@ -335,7 +383,7 @@ fn eval_genes(
     acc: Option<&AccCtx>,
 ) -> (Objectives, f64) {
     let base = base_eval(evaluator, &genes[..genes.len() - gene_strip(acc)], rep);
-    finish_fit(base, genes, acc, constraints)
+    finish_fit(base, genes, acc, constraints, evaluator.clock_mhz())
 }
 
 /// A worker's share of one generation: (batch slot, chromosome).
@@ -379,7 +427,8 @@ impl Engine<'_> {
     /// Finish a chromosome into a Candidate from its base fitness
     /// (path scaling + constraints — main-thread, deterministic).
     fn candidate(&self, genes: Vec<usize>, base: BaseFit) -> Candidate {
-        let (objectives, violation) = finish_fit(base, &genes, self.acc, &self.constraints);
+        let (objectives, violation) =
+            finish_fit(base, &genes, self.acc, &self.constraints, self.evaluator.clock_mhz());
         Candidate { config: DesignConfig { parallelism: genes, rep: self.rep }, objectives, violation }
     }
 
@@ -405,8 +454,13 @@ impl Engine<'_> {
                 match memo.map.get(key).copied() {
                     Some(Some(base)) => {
                         memo.hits += 1;
-                        let (objectives, violation) =
-                            finish_fit(base, &genes, self.acc, &self.constraints);
+                        let (objectives, violation) = finish_fit(
+                            base,
+                            &genes,
+                            self.acc,
+                            &self.constraints,
+                            self.evaluator.clock_mhz(),
+                        );
                         slots[i] = Some(Candidate {
                             config: DesignConfig { parallelism: genes, rep: self.rep },
                             objectives,
@@ -595,8 +649,10 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
     let mut spare: Vec<Vec<usize>> = Vec::new();
     let mut soa = nsga2::ObjSoa::default();
     // accuracy joins crowding-distance spread only in 3-objective mode,
-    // so 2-objective searches keep their exact pre-accuracy selection
+    // so 2-objective searches keep their exact pre-accuracy selection;
+    // likewise energy joins dominance + crowding only when requested
     soa.accuracy_axis = engine.acc.is_some();
+    soa.energy_axis = cfg.energy_objective;
     // mating-selection key: front rank + crowding, computed once per
     // generation (NSGA-II's crowded tournament), built explicitly for
     // generation 0 and thereafter reused from environmental selection
@@ -811,6 +867,7 @@ mod tests {
             dsp: Some(600),
             lut: None,
             bram: None,
+            power_mw: None,
         };
         let res = run(&net, &ZYNQ_7100, &cfg);
         assert!(!res.pareto.is_empty());
@@ -895,7 +952,16 @@ mod tests {
     }
 
     fn obj(latency_ms: f64, dsp: usize) -> Objectives {
-        Objectives { latency_ms, dsp, lut: 0, bram: 0, total_pes: 0, accuracy: 1.0 }
+        Objectives {
+            latency_ms,
+            dsp,
+            lut: 0,
+            bram: 0,
+            total_pes: 0,
+            accuracy: 1.0,
+            power_mw: 0.0,
+            energy_mj: 0.0,
+        }
     }
 
     #[test]
@@ -915,11 +981,23 @@ mod tests {
 
     #[test]
     fn violation_math() {
-        let cons = Constraints { latency_ms: Some(1.0), dsp: Some(100), lut: None, bram: None };
+        let cons = Constraints {
+            latency_ms: Some(1.0),
+            dsp: Some(100),
+            lut: None,
+            bram: None,
+            power_mw: None,
+        };
         let ok = obj(0.9, 100);
         let bad = obj(2.0, 150);
         assert_eq!(cons.violation(&ok), 0.0);
         assert!((cons.violation(&bad) - 1.5).abs() < 1e-9);
+        // power overruns penalize exactly like resource overruns
+        let cons = Constraints { power_mw: Some(500.0), ..Constraints::none() };
+        let hot = Objectives { power_mw: 750.0, ..obj(1.0, 10) };
+        let cool = Objectives { power_mw: 500.0, ..obj(1.0, 10) };
+        assert!((cons.violation(&hot) - 0.5).abs() < 1e-9);
+        assert_eq!(cons.violation(&cool), 0.0);
     }
 
     #[test]
@@ -1013,6 +1091,121 @@ mod tests {
         for c in &res.pareto {
             assert_eq!(c.config.parallelism.len(), n_genes);
             assert_eq!(c.objectives.accuracy, 1.0);
+        }
+    }
+
+    #[test]
+    fn power_budget_constrains_front() {
+        // every surviving candidate respects --power-budget, and the
+        // telemetry fields are physically consistent
+        let net = zoo::mnist();
+        let mut cfg = quick_cfg();
+        cfg.constraints = Constraints { power_mw: Some(520.0), ..Constraints::none() };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert!(!res.pareto.is_empty(), "520 mW admits small designs");
+        for c in &res.pareto {
+            assert!(c.objectives.power_mw <= 520.0, "{:?}", c.objectives);
+            assert!(c.objectives.power_mw > 0.0);
+            let want = c.objectives.power_mw * c.objectives.latency_ms / 1000.0;
+            assert!((c.objectives.energy_mj - want).abs() < 1e-9);
+        }
+        // the cap really binds: the unconstrained front reaches hotter designs
+        let free = run(&net, &ZYNQ_7100, &quick_cfg());
+        let hottest = free
+            .pareto
+            .iter()
+            .map(|c| c.objectives.power_mw)
+            .fold(0.0f64, f64::max);
+        assert!(hottest > 520.0, "unconstrained hottest {hottest}");
+    }
+
+    #[test]
+    fn power_telemetry_does_not_change_selection() {
+        // energy_objective=false (the default): the front must be
+        // identical whether or not a (non-binding) power budget merely
+        // reads the new fields — i.e. power is telemetry, not a hidden
+        // objective
+        let net = zoo::mnist();
+        let base = run(&net, &ZYNQ_7100, &quick_cfg());
+        let mut cfg = quick_cfg();
+        cfg.constraints = Constraints { power_mw: Some(1e9), ..Constraints::none() };
+        let loose = run(&net, &ZYNQ_7100, &cfg);
+        assert_eq!(fingerprint(&base), fingerprint(&loose));
+        assert_eq!(base.evaluated, loose.evaluated);
+    }
+
+    #[test]
+    fn energy_objective_spans_energy_axis() {
+        let net = zoo::mnist();
+        let mut cfg = quick_cfg();
+        cfg.energy_objective = true;
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert!(!res.pareto.is_empty());
+        // the 3rd axis surfaces energy trade-offs: front members must not
+        // all collapse to one energy value
+        let energies: std::collections::BTreeSet<u64> =
+            res.pareto.iter().map(|c| c.objectives.energy_mj.to_bits()).collect();
+        assert!(energies.len() >= 2, "front collapsed to one energy level");
+        // mutual non-dominance under the energy-aware kernel
+        let mut soa = nsga2::ObjSoa::from_candidates(&res.pareto);
+        soa.energy_axis = true;
+        let fronts = nsga2::sort_fronts_soa(&soa);
+        assert_eq!(fronts[0].len(), res.pareto.len(), "dominated member on the front");
+    }
+
+    #[test]
+    fn energy_objective_thread_invariant() {
+        let net = zoo::mnist();
+        let mk = |threads: usize| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            threads,
+            energy_objective: true,
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let serial = run(&net, &ZYNQ_7100, &mk(1));
+        let parallel = run(&net, &ZYNQ_7100, &mk(4));
+        assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+        let e = |r: &DseResult| -> Vec<u64> {
+            r.pareto.iter().map(|c| c.objectives.energy_mj.to_bits()).collect()
+        };
+        assert_eq!(e(&serial), e(&parallel));
+    }
+
+    #[test]
+    fn three_objective_power_scales_with_path() {
+        // on a 3-objective search the candidate's power follows its
+        // execution path: lighter paths must never model hotter than the
+        // full path on the same conv genes
+        let net = zoo::mnist();
+        let paths = crate::morph::depth_ladder(&net);
+        let cfg = DseConfig { accuracy_paths: Some(paths.clone()), ..quick_cfg() };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        let full_macs = paths.iter().map(|p| p.macs).max().unwrap();
+        for c in &res.pareto {
+            let &pg = c.config.parallelism.last().unwrap();
+            let ratio = paths[pg - 1].macs as f64 / full_macs as f64;
+            assert!(c.objectives.power_mw > 0.0);
+            if ratio < 1.0 {
+                // a gated path draws less than the same fabric fully active
+                let full_equiv = {
+                    let conv = &c.config.parallelism[..c.config.parallelism.len() - 1];
+                    let ev = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+                    let fast = ev.objectives(conv, cfg.rep).unwrap();
+                    crate::power::PowerModel::default().total_mw(
+                        &fast.resources,
+                        ev.clock_mhz(),
+                        crate::power::Activity::default(),
+                    )
+                };
+                assert!(
+                    c.objectives.power_mw < full_equiv,
+                    "path ratio {ratio}: {} !< {full_equiv}",
+                    c.objectives.power_mw
+                );
+            }
         }
     }
 

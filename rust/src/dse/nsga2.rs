@@ -32,8 +32,14 @@ pub struct ObjSoa {
     pub dsp: Vec<f64>,
     /// negated accuracy (all objectives minimize)
     pub neg_acc: Vec<f64>,
+    /// modeled energy per frame, mJ (minimized when `energy_axis`)
+    pub energy: Vec<f64>,
     /// include accuracy in crowding-distance spread (3-objective mode)
     pub accuracy_axis: bool,
+    /// include energy in dominance + crowding (`--energy-front`). Off,
+    /// the key's energy component is pinned to a constant, so existing
+    /// searches keep their exact pre-energy selection.
+    pub energy_axis: bool,
 }
 
 impl ObjSoa {
@@ -44,17 +50,19 @@ impl ObjSoa {
     }
 
     /// Refill from a population, reusing the existing buffers (the
-    /// `accuracy_axis` flag is sticky across rebuilds).
+    /// `accuracy_axis`/`energy_axis` flags are sticky across rebuilds).
     pub fn rebuild(&mut self, pop: &[Candidate]) {
         self.violation.clear();
         self.latency.clear();
         self.dsp.clear();
         self.neg_acc.clear();
+        self.energy.clear();
         for c in pop {
             self.violation.push(c.violation);
             self.latency.push(c.objectives.latency_ms);
             self.dsp.push(c.objectives.dsp as f64);
             self.neg_acc.push(-c.objectives.accuracy);
+            self.energy.push(c.objectives.energy_mj);
         }
     }
 
@@ -67,21 +75,28 @@ impl ObjSoa {
     }
 
     #[inline(always)]
-    fn key(&self, i: usize) -> (f64, f64, f64, f64) {
-        (self.violation[i], self.latency[i], self.dsp[i], self.neg_acc[i])
+    fn key(&self, i: usize) -> (f64, f64, f64, f64, f64) {
+        (
+            self.violation[i],
+            self.latency[i],
+            self.dsp[i],
+            self.neg_acc[i],
+            if self.energy_axis { self.energy[i] } else { 0.0 },
+        )
     }
 }
 
 /// Feasibility-first dominance kernel on a flat `(violation, latency,
-/// dsp, -accuracy)` key — the ONE implementation every comparison site
-/// shares (struct-level [`beats`], the SoA sort, and the engine's
-/// final-front extraction): a feasible candidate beats an infeasible
-/// one; two infeasible compare by violation; two feasible by Pareto
-/// dominance on (latency, DSP, -accuracy). In 2-objective searches every
-/// candidate carries the same accuracy, so the fourth component is a
-/// constant and the kernel degenerates to the (latency, DSP) test.
+/// dsp, -accuracy, energy)` key — the ONE implementation every
+/// comparison site shares (struct-level [`beats`], the SoA sort, and the
+/// engine's final-front extraction): a feasible candidate beats an
+/// infeasible one; two infeasible compare by violation; two feasible by
+/// Pareto dominance on (latency, DSP, -accuracy, energy). In 2-objective
+/// searches every candidate carries the same accuracy and the SoA pins
+/// the energy component to a constant, so the kernel degenerates to the
+/// (latency, DSP) test.
 #[inline(always)]
-pub fn beats_key(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> bool {
+pub fn beats_key(a: (f64, f64, f64, f64, f64), b: (f64, f64, f64, f64, f64)) -> bool {
     if a.0 == 0.0 && b.0 > 0.0 {
         return true;
     }
@@ -91,15 +106,31 @@ pub fn beats_key(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> bool {
     a.1 <= b.1
         && a.2 <= b.2
         && a.3 <= b.3
-        && (a.1 < b.1 || a.2 < b.2 || a.3 < b.3)
+        && a.4 <= b.4
+        && (a.1 < b.1 || a.2 < b.2 || a.3 < b.3 || a.4 < b.4)
 }
 
 /// [`beats_key`] on `Candidate` structs (convenience / test surface).
+/// The energy component is pinned to the off-axis constant here — the
+/// energy objective participates only through an [`ObjSoa`] whose
+/// `energy_axis` is enabled.
 #[inline]
 pub fn beats(a: &Candidate, b: &Candidate) -> bool {
     beats_key(
-        (a.violation, a.objectives.latency_ms, a.objectives.dsp as f64, -a.objectives.accuracy),
-        (b.violation, b.objectives.latency_ms, b.objectives.dsp as f64, -b.objectives.accuracy),
+        (
+            a.violation,
+            a.objectives.latency_ms,
+            a.objectives.dsp as f64,
+            -a.objectives.accuracy,
+            0.0,
+        ),
+        (
+            b.violation,
+            b.objectives.latency_ms,
+            b.objectives.dsp as f64,
+            -b.objectives.accuracy,
+            0.0,
+        ),
     )
 }
 
@@ -122,7 +153,7 @@ pub fn sort_fronts_soa(soa: &ObjSoa) -> Vec<Vec<usize>> {
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| soa.key(a).partial_cmp(&soa.key(b)).unwrap());
     // contiguous sorted keys: the n^2 sweep reads them in order
-    let keys: Vec<(f64, f64, f64, f64)> = idx.iter().map(|&i| soa.key(i)).collect();
+    let keys: Vec<(f64, f64, f64, f64, f64)> = idx.iter().map(|&i| soa.key(i)).collect();
     let mut rank = vec![0usize; n]; // rank[sorted position]
     let mut max_rank = 0usize;
     for j in 1..n {
@@ -154,21 +185,22 @@ pub fn sort_fronts(pop: &[Candidate]) -> Vec<Vec<usize>> {
 }
 
 /// Crowding distance of each member of one front — on latency and DSP,
-/// plus the accuracy axis when the SoA is in 3-objective mode — computed
-/// on the flat objective view.
+/// plus the accuracy axis in 3-objective mode and the energy axis in
+/// energy-front mode — computed on the flat objective view.
 pub fn crowding_soa(soa: &ObjSoa, front: &[usize]) -> Vec<f64> {
     let m = front.len();
     let mut dist = vec![0.0f64; m];
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
-    let axes = if soa.accuracy_axis { 3 } else { 2 };
+    let axes = 2 + usize::from(soa.accuracy_axis) + usize::from(soa.energy_axis);
     for axis in 0..axes {
         let key = |i: usize| -> f64 {
             match axis {
                 0 => soa.latency[front[i]],
                 1 => soa.dsp[front[i]],
-                _ => soa.neg_acc[front[i]],
+                2 if soa.accuracy_axis => soa.neg_acc[front[i]],
+                _ => soa.energy[front[i]],
             }
         };
         let mut order: Vec<usize> = (0..m).collect();
@@ -338,6 +370,10 @@ mod tests {
     }
 
     fn cand_acc(lat: f64, dsp: usize, viol: f64, acc: f64) -> Candidate {
+        cand_energy(lat, dsp, viol, acc, 0.0)
+    }
+
+    fn cand_energy(lat: f64, dsp: usize, viol: f64, acc: f64, energy_mj: f64) -> Candidate {
         Candidate {
             config: DesignConfig { parallelism: vec![1], rep: FpRep::Int16 },
             objectives: Objectives {
@@ -347,6 +383,8 @@ mod tests {
                 bram: 0,
                 total_pes: 0,
                 accuracy: acc,
+                power_mw: 0.0,
+                energy_mj,
             },
             violation: viol,
         }
@@ -537,6 +575,70 @@ mod tests {
         // interior members gain the accuracy-spread contribution
         assert!(three_axis[1] > two_axis[1]);
         assert!(three_axis[2] > two_axis[2]);
+    }
+
+    #[test]
+    fn energy_axis_changes_dominance_only_when_enabled() {
+        // identical (latency, dsp, accuracy), different energy: without
+        // the axis they tie (one front); with it the cooler one dominates
+        let pop = vec![
+            cand_energy(1.0, 100, 0.0, 1.0, 5.0),
+            cand_energy(1.0, 100, 0.0, 1.0, 2.0),
+        ];
+        let mut soa = ObjSoa::from_candidates(&pop);
+        let fronts = sort_fronts_soa(&soa);
+        assert_eq!(fronts[0].len(), 2, "axis off: energy must not discriminate");
+        soa.energy_axis = true;
+        let fronts = sort_fronts_soa(&soa);
+        assert_eq!(fronts[0], vec![1]);
+        assert_eq!(fronts[1], vec![0]);
+        // a slower-but-cooler candidate is a trade-off, not dominated
+        let pop = vec![
+            cand_energy(1.0, 100, 0.0, 1.0, 5.0),
+            cand_energy(2.0, 100, 0.0, 1.0, 2.0),
+        ];
+        let mut soa = ObjSoa::from_candidates(&pop);
+        soa.energy_axis = true;
+        assert_eq!(sort_fronts_soa(&soa)[0].len(), 2);
+    }
+
+    #[test]
+    fn energy_axis_changes_crowding_only_when_enabled() {
+        // four mutually non-dominated members spread along energy at
+        // identical latency-vs-dsp spacing
+        let pop = vec![
+            cand_energy(1.0, 400, 0.0, 1.0, 1.0),
+            cand_energy(2.0, 300, 0.0, 1.0, 4.0),
+            cand_energy(3.0, 200, 0.0, 1.0, 5.0),
+            cand_energy(4.0, 100, 0.0, 1.0, 9.0),
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let mut soa = ObjSoa::from_candidates(&pop);
+        let off = crowding_soa(&soa, &front);
+        soa.energy_axis = true;
+        let on = crowding_soa(&soa, &front);
+        assert!(off[0].is_infinite() && on[0].is_infinite());
+        assert!(on[1] > off[1]);
+        assert!(on[2] > off[2]);
+    }
+
+    #[test]
+    fn accuracy_and_energy_axes_compose() {
+        // all four axes enabled: the crowding sum picks up both spreads
+        let pop = vec![
+            cand_energy(1.0, 400, 0.0, 0.70, 1.0),
+            cand_energy(2.0, 300, 0.0, 0.90, 4.0),
+            cand_energy(3.0, 200, 0.0, 0.95, 5.0),
+            cand_energy(4.0, 100, 0.0, 0.99, 9.0),
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let mut soa = ObjSoa::from_candidates(&pop);
+        soa.accuracy_axis = true;
+        let acc_only = crowding_soa(&soa, &front);
+        soa.energy_axis = true;
+        let both = crowding_soa(&soa, &front);
+        assert!(both[1] > acc_only[1]);
+        assert!(both[2] > acc_only[2]);
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! ForgeMorph CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! forgemorph report <table1|...|fig12|all>     regenerate paper tables/figures
+//! forgemorph report <table1|...|fig12|power|all>   regenerate paper tables/figures
+//! forgemorph report bench-check --baseline FILE [--current FILE
+//!                   --tolerance-pct 20 --absolute]   perf-regression gate
 //! forgemorph dse|explore --model cifar10 [--pop N --gens N --seed N --dsp N
-//!                   --latency MS --threads N --no-memo --profile FILE]
+//!                   --latency MS --power-budget MW --energy-front
+//!                   --threads N --no-memo --profile FILE]
 //! forgemorph distill --model mnist [--train N --test N --epochs N --batch N
 //!                   --seed N --qbits B --out FILE]   train the morph-path
 //!                   ladder (DistillCycle) and emit an AccuracyProfile
@@ -12,7 +15,8 @@
 //! forgemorph graph dump --model yolov5l        topology + StagePlan as JSON
 //! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
 //!                   --workers N --backend pjrt|sim|analytical
-//!                   --accuracy-floor F]
+//!                   --accuracy-floor F --patience K
+//!                   --power-trace step|ramp|spike|diurnal[:k=v,...]]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
 //! ```
 
@@ -21,7 +25,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context};
 use forgemorph::backend::BackendSpec;
-use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig};
 use forgemorph::morph;
 use forgemorph::design::{self, DesignConfig};
 use forgemorph::dse;
@@ -57,12 +61,16 @@ const HELP: &str = "\
 forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
-                fig10, fig11, fig12, backends, graphs, distill, all)
+                fig10, fig11, fig12, backends, graphs, distill, power, all);
+                `report bench-check --baseline BENCH_x.json` gates perf
+                regressions against the committed bench trajectory
   dse|explore   NeuroForge design space exploration (--threads N fans the
                 fitness evaluation out; results are bit-identical for any
                 thread count. --no-memo disables the chromosome cache.
                 --profile FILE adds a DistillCycle AccuracyProfile and
-                switches to 3-objective latency/DSP/accuracy fronts)
+                switches to 3-objective latency/DSP/accuracy fronts.
+                --power-budget MW caps modeled power; --energy-front adds
+                energy-per-frame as a minimized objective)
   distill       DistillCycle-train a small zoo model's morph-path ladder
                 (hierarchical KD) and emit its AccuracyProfile JSON
   rtl           emit Verilog for a design point
@@ -72,7 +80,10 @@ commands:
   serve         run the NeuroMorph serving demo (--workers N shards;
                 --backend pjrt needs AOT artifacts, sim/analytical run
                 self-contained; --accuracy-floor F pins the governor's
-                hard minimum path accuracy)
+                hard minimum path accuracy; --power-trace SPEC replays a
+                deterministic budget trace — step|ramp|spike|diurnal with
+                optional k=v params — and prints the decision log, which
+                is byte-identical for any --workers value)
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
@@ -90,6 +101,9 @@ fn rep_for(args: &Args) -> FpRep {
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    if id == "bench-check" {
+        return cmd_bench_check(args);
+    }
     match report::by_name(id) {
         Some(text) => {
             println!("{text}");
@@ -97,6 +111,53 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
         }
         None => bail!("unknown report id '{id}'"),
     }
+}
+
+/// `report bench-check --baseline FILE [--current FILE]
+/// [--tolerance-pct 20] [--absolute]`: the CI perf-regression gate over
+/// the BENCH_*.json trajectory files. Exits nonzero on regression.
+fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
+    let baseline_path = args
+        .get("baseline")
+        .context("bench-check needs --baseline FILE (a committed BENCH_*.json)")?;
+    let tolerance = args.get_f64("tolerance-pct", 20.0);
+    let base_text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let base = Json::parse(&base_text)
+        .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+    // the baseline's bench id names the default current file at the repo root
+    let current_path = match args.get("current") {
+        Some(p) => p.to_string(),
+        None => match base.get("bench").and_then(Json::as_str) {
+            Some("dse_engine") => "BENCH_dse.json".to_string(),
+            Some("distill_engine") => "BENCH_distill.json".to_string(),
+            other => bail!(
+                "baseline carries unknown bench id {other:?}; pass --current FILE explicitly"
+            ),
+        },
+    };
+    let cur_text = std::fs::read_to_string(&current_path).with_context(|| {
+        format!("reading current run {current_path} (run `cargo bench --bench bench_hotpath` first)")
+    })?;
+    let cur = Json::parse(&cur_text)
+        .map_err(|e| anyhow::anyhow!("parsing current run {current_path}: {e}"))?;
+    let result = report::bench::check(&base, &cur, tolerance, args.flag("absolute"));
+    print!("{}", result.report());
+    if !result.passed() {
+        bail!(
+            "{} perf regression(s) beyond {tolerance}% tolerance vs {baseline_path}",
+            result.regressions.len()
+        );
+    }
+    if result.gated == 0 {
+        println!("bench-check: no gated metrics in {baseline_path} (informational only) — OK");
+    } else {
+        println!(
+            "bench-check OK: {} gated metric(s) within {tolerance}% of {baseline_path}",
+            result.gated
+        );
+    }
+    Ok(())
 }
 
 fn cmd_dse(args: &Args) -> anyhow::Result<()> {
@@ -132,11 +193,13 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         threads: args.get_usize("threads", default_threads),
         memo: !args.flag("no-memo"),
         accuracy_paths: profile.as_ref().map(|p| p.morph_paths()),
+        energy_objective: args.flag("energy-front"),
         constraints: dse::Constraints {
             latency_ms: args.get("latency").and_then(|s| s.parse().ok()),
             dsp: args.get("dsp").and_then(|s| s.parse().ok()),
             lut: args.get("lut").and_then(|s| s.parse().ok()),
             bram: args.get("bram").and_then(|s| s.parse().ok()),
+            power_mw: args.get("power-budget").and_then(|s| s.parse().ok()),
         },
         ..dse::DseConfig::default()
     };
@@ -152,7 +215,27 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         res.pareto.len(),
         if profile.is_some() { ", 3 objectives" } else { "" }
     );
+    // power/energy columns join the table when the new axes are in play
+    let show_power = cfg.constraints.power_mw.is_some() || cfg.energy_objective;
     match &profile {
+        None if show_power => {
+            println!(
+                "{:<28} {:>8} {:>12} {:>9} {:>9} {:>10} {:>11}",
+                "p(i)", "DSP", "latency ms", "LUT", "BRAM", "power mW", "energy mJ"
+            );
+            for c in &res.pareto {
+                println!(
+                    "{:<28} {:>8} {:>12.4} {:>9} {:>9} {:>10.1} {:>11.4}",
+                    format!("{:?}", c.config.parallelism),
+                    c.objectives.dsp,
+                    c.objectives.latency_ms,
+                    c.objectives.lut,
+                    c.objectives.bram,
+                    c.objectives.power_mw,
+                    c.objectives.energy_mj
+                );
+            }
+        }
         None => {
             println!(
                 "{:<28} {:>8} {:>12} {:>9} {:>9}",
@@ -371,8 +454,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let rate_hz = args.get_f64("rate", 2000.0);
     let workers = args.get_usize("workers", 1);
     let backend = args.get_or("backend", "pjrt").to_string();
+    let trace_spec = args.get("power-trace").map(str::to_string);
     let net = net_for(args)?;
-    let design = DesignConfig::uniform(&net, args.get_usize("p", 4), rep_for(args));
+    // trace mode defaults to the Table III 164-PE-class mapping: large
+    // enough that gated blocks dominate the draw — where the paper's
+    // ~32% runtime power saving lives
+    let p_default = if trace_spec.is_some() { 16 } else { 4 };
+    let design = DesignConfig::uniform(&net, args.get_usize("p", p_default), rep_for(args));
 
     let spec = match backend.as_str() {
         "pjrt" => BackendSpec::Pjrt {
@@ -397,10 +485,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let cfg = ServeConfig {
         max_wait: Duration::from_millis(2),
-        patience: 2,
+        patience: args.get_usize("patience", 2),
         workers,
         accuracy_floor,
+        external_pacing: trace_spec.is_some(),
     };
+    if let Some(tspec) = trace_spec {
+        return cmd_serve_trace(args, cfg, spec, &tspec, &model, &backend, requests, rate_hz);
+    }
     let mut coord = Coordinator::start(cfg, spec)?;
     println!(
         "serving {requests} requests at ~{rate_hz} Hz on '{model}' \
@@ -452,6 +544,48 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     for (path, n) in by_path {
         println!("  path {path}: {n} frames");
     }
+    Ok(())
+}
+
+/// `serve --power-trace <spec>`: replay a deterministic budget trace
+/// through the serving stack on a virtual clock and print the decision
+/// log + per-segment modeled power (the paper's down-shift experiment).
+#[allow(clippy::too_many_arguments)]
+fn cmd_serve_trace(
+    args: &Args,
+    cfg: ServeConfig,
+    spec: BackendSpec,
+    tspec: &str,
+    model: &str,
+    backend: &str,
+    requests: usize,
+    rate_hz: f64,
+) -> anyhow::Result<()> {
+    let workers = cfg.workers;
+    let mut coord = Coordinator::start(cfg, spec)?;
+    let rows = coord.path_energy_rows();
+    anyhow::ensure!(!rows.is_empty(), "backend reported no path energy rows");
+    let default_cap = trace::default_squeeze_cap(&rows);
+    let duration_s = requests as f64 / rate_hz;
+    let events =
+        trace::parse_spec(tspec, duration_s, default_cap).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "power trace '{tspec}' on '{model}' ({backend} backend, {workers} worker shard(s)): \
+         {} budget events, {requests} frames @ {rate_hz:.0} Hz virtual, {} deployed paths",
+        events.len(),
+        rows.len()
+    );
+    let outcome = coord.replay_power_trace(
+        &events,
+        &TraceConfig { frames: requests, rate_hz, seed: args.get_u64("seed", 42) },
+    )?;
+    print!("{}", outcome.decision_log());
+    print!("{}", outcome.render_summary());
+    anyhow::ensure!(
+        outcome.answered == requests,
+        "dropped {} in-flight request(s) across reconfigurations",
+        requests - outcome.answered
+    );
     Ok(())
 }
 

@@ -62,13 +62,19 @@ pub enum Decision {
 }
 
 /// Governor state machine.
+///
+/// All per-observation state is tracked by *registry index* — `observe`
+/// allocates nothing on the hot path (it runs per frame once the trace
+/// loop drives it); the target path name is cloned only when a switch
+/// actually fires.
 #[derive(Debug)]
 pub struct Governor {
     registry: PathRegistry,
     costs: PathCosts,
-    current: String,
+    /// index of the active path in the (cost-sorted) registry
+    current: usize,
     /// consecutive observations pointing at a different best path
-    pending: Option<(String, usize)>,
+    pending: Option<(usize, usize)>,
     /// observations required before switching
     patience: usize,
     /// frames of stall when re-activating gated blocks
@@ -81,7 +87,8 @@ pub struct Governor {
 
 impl Governor {
     pub fn new(registry: PathRegistry, costs: PathCosts, patience: usize) -> Governor {
-        let current = registry.full().name.clone();
+        // the registry is cost-sorted: the full path is last
+        let current = registry.paths().len() - 1;
         Governor {
             registry,
             costs,
@@ -108,7 +115,13 @@ impl Governor {
     }
 
     pub fn current(&self) -> &str {
-        &self.current
+        &self.registry.paths()[self.current].name
+    }
+
+    /// Registry index of the active path (allocation-free identity for
+    /// callers that log transitions).
+    pub fn current_index(&self) -> usize {
+        self.current
     }
 
     pub fn registry(&self) -> &PathRegistry {
@@ -121,10 +134,11 @@ impl Governor {
     /// path wins; only when NO path meets the floor at all (corrupt or
     /// untrained profile) does the governor fall back to the most
     /// accurate path available.
-    fn best_for(&self, budget: &Budget) -> &MorphPath {
-        let meets_floor = |p: &&MorphPath| p.accuracy >= self.accuracy_floor;
-        let fits = |p: &&MorphPath| -> bool {
-            match self.costs.for_path(&p.name) {
+    fn best_for(&self, budget: &Budget) -> usize {
+        let paths = self.registry.paths();
+        let meets_floor = |i: &usize| paths[*i].accuracy >= self.accuracy_floor;
+        let fits = |i: &usize| -> bool {
+            match self.costs.for_path(&paths[*i].name) {
                 Some((pw, lat)) => {
                     budget.power_mw.map(|b| pw <= b).unwrap_or(true)
                         && budget.latency_ms.map(|b| lat <= b).unwrap_or(true)
@@ -132,58 +146,56 @@ impl Governor {
                 None => false,
             }
         };
-        self.registry
-            .paths()
-            .iter()
+        let most_accurate = |a: &usize, b: &usize| {
+            paths[*a]
+                .accuracy
+                .partial_cmp(&paths[*b].accuracy)
+                .unwrap()
+                .then(paths[*b].macs.cmp(&paths[*a].macs)) // tie-break: cheaper
+        };
+        (0..paths.len())
             .filter(meets_floor)
             .filter(fits)
-            .max_by(|a, b| {
-                a.accuracy
-                    .partial_cmp(&b.accuracy)
-                    .unwrap()
-                    .then(b.macs.cmp(&a.macs)) // tie-break: cheaper
-            })
+            .max_by(most_accurate)
             .or_else(|| {
                 // budget infeasible: cheapest path that still meets the
                 // floor (registry is cost-sorted — first match is it)
-                self.registry.paths().iter().find(meets_floor)
+                (0..paths.len()).find(meets_floor)
             })
             .unwrap_or_else(|| {
                 // nothing meets the floor: degrade as little as possible
-                self.registry
-                    .paths()
-                    .iter()
-                    .max_by(|a, b| {
-                        a.accuracy.partial_cmp(&b.accuracy).unwrap().then(b.macs.cmp(&a.macs))
-                    })
+                (0..paths.len())
+                    .max_by(most_accurate)
                     .expect("registry is non-empty")
             })
     }
 
     /// Feed one budget observation; returns the (possibly Hold) decision.
+    /// Allocation-free except when a switch actually fires.
     pub fn observe(&mut self, budget: &Budget) -> Decision {
-        let target = self.best_for(budget).name.clone();
+        let target = self.best_for(budget);
         if target == self.current {
             self.pending = None;
             return Decision::Hold;
         }
-        let count = match &self.pending {
-            Some((name, n)) if *name == target => n + 1,
+        let count = match self.pending {
+            Some((idx, n)) if idx == target => n + 1,
             _ => 1,
         };
         if count < self.patience {
             self.pending = Some((target, count));
             return Decision::Hold;
         }
-        // fire the switch
+        // fire the switch. The registry is cost-sorted, so a larger index
+        // grows the active region and re-primes line buffers: 1 frame stall
         self.pending = None;
-        let from_idx = self.registry.index_of(&self.current).unwrap();
-        let to_idx = self.registry.index_of(&target).unwrap();
-        // growing the active region re-primes line buffers: 1 frame stall
-        let stall = if to_idx > from_idx { self.reactivation_frames } else { 0 };
-        self.current = target.clone();
+        let stall = if target > self.current { self.reactivation_frames } else { 0 };
+        self.current = target;
         self.switch_count += 1;
-        Decision::Switch { to: target, stall_frames: stall }
+        Decision::Switch {
+            to: self.registry.paths()[target].name.clone(),
+            stall_frames: stall,
+        }
     }
 }
 
@@ -210,6 +222,22 @@ mod tests {
     fn starts_on_full_path() {
         let gov = Governor::new(registry(), costs(), 2);
         assert_eq!(gov.current(), "d3_w100");
+        assert_eq!(gov.current_index(), gov.registry().paths().len() - 1);
+    }
+
+    #[test]
+    fn current_index_tracks_switches() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        gov.observe(&tight);
+        let idx = gov.current_index();
+        assert_eq!(gov.registry().paths()[idx].name, gov.current());
+        assert_eq!(gov.current(), "d1_w100");
+        gov.observe(&Budget::unconstrained());
+        assert_eq!(
+            gov.registry().paths()[gov.current_index()].name,
+            "d3_w100"
+        );
     }
 
     #[test]

@@ -87,6 +87,32 @@ pub fn extract(cands: Vec<Candidate>, spec: &ScheduleSpec) -> Vec<Candidate> {
     keep.into_iter().map(|i| front[i].clone()).collect()
 }
 
+/// Drain→swap→resume timeline of one runtime morph transition (Sec. V).
+///
+/// The serving engine realizes a governor switch in three phases:
+/// requests already pinned to the outgoing path **drain** on it (no
+/// in-flight request is ever lost to a reconfiguration), the fabric
+/// **swaps** its clock-gate state — the modeled DPR window: the
+/// governor's reactivation stall times the full-path frame period, zero
+/// on a pure down-shift where gated blocks simply stop toggling — and
+/// the incoming path **resumes**.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapTimeline {
+    /// reactivation stall in frames (0 for down-shifts)
+    pub stall_frames: usize,
+    /// modeled reconfiguration window, milliseconds
+    pub swap_ms: f64,
+}
+
+/// Timeline of a switch that stalls `stall_frames` full frames of
+/// `full_frame_ms` each (the paper's full-frame reactivation delay).
+pub fn swap_timeline(stall_frames: usize, full_frame_ms: f64) -> SwapTimeline {
+    SwapTimeline {
+        stall_frames,
+        swap_ms: stall_frames as f64 * full_frame_ms.max(0.0),
+    }
+}
+
 /// Accuracy-constrained operating point: the cheapest kept path meeting
 /// `min_accuracy` (what the paper's future-work selector would return).
 pub fn cheapest_meeting<'a>(
@@ -159,6 +185,20 @@ mod tests {
         // log-equidistant picks: ends + middle
         let names: Vec<&str> = sel.iter().map(|c| c.path.name.as_str()).collect();
         assert_eq!(names, vec!["p0", "p2", "p4"]);
+    }
+
+    #[test]
+    fn swap_timeline_models_dpr_cost() {
+        // down-shift: gated blocks stop toggling — free
+        let down = swap_timeline(0, 1.2);
+        assert_eq!(down.stall_frames, 0);
+        assert_eq!(down.swap_ms, 0.0);
+        // up-shift: one full-frame reactivation delay
+        let up = swap_timeline(1, 1.2);
+        assert_eq!(up.stall_frames, 1);
+        assert!((up.swap_ms - 1.2).abs() < 1e-12);
+        // degenerate frame period never yields negative windows
+        assert_eq!(swap_timeline(3, -1.0).swap_ms, 0.0);
     }
 
     #[test]

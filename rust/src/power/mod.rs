@@ -44,7 +44,7 @@ impl Default for PowerModel {
 
 /// A runtime activity snapshot: which fraction of each resource class is
 /// actually toggling (clock gating drives these to 0 for gated blocks).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Activity {
     /// fraction of allocated PEs not clock-gated, in [0,1]
     pub active_fraction: f64,
@@ -78,6 +78,29 @@ impl PowerModel {
         latency_ms: f64,
     ) -> f64 {
         self.total_mw(res, clock_mhz, act) * latency_ms / 1000.0
+    }
+}
+
+/// One morph path's modeled runtime operating point: the activity the
+/// path toggles at, the resulting power draw and the per-frame latency —
+/// the row the serving layer's energy accounting and the trace-driven
+/// budget loop consume (the SAIF-style measurement the paper reads off
+/// the board, Figs. 11-12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathEnergy {
+    pub name: String,
+    /// activity snapshot the power figure was computed at
+    pub activity: Activity,
+    /// modeled total draw while this path executes (mW)
+    pub power_mw: f64,
+    /// modeled frame latency on this path (ms)
+    pub frame_ms: f64,
+}
+
+impl PathEnergy {
+    /// Modeled energy per frame (mJ): `P[mW] x T[ms] / 1000`.
+    pub fn energy_mj_per_frame(&self) -> f64 {
+        self.power_mw * self.frame_ms / 1000.0
     }
 }
 
@@ -125,6 +148,23 @@ mod tests {
         let e1 = m.energy_per_frame_mj(&mnist_small(), 250.0, Activity::default(), 1.0);
         let e2 = m.energy_per_frame_mj(&mnist_small(), 250.0, Activity::default(), 2.0);
         assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_energy_row_consistent() {
+        let m = PowerModel::default();
+        let act = Activity { active_fraction: 0.4, toggle_rate: 0.8 };
+        let power = m.total_mw(&mnist_small(), 250.0, act);
+        let row = PathEnergy {
+            name: "d1_w100".into(),
+            activity: act,
+            power_mw: power,
+            frame_ms: 0.25,
+        };
+        assert!((row.energy_mj_per_frame() - power * 0.25 / 1000.0).abs() < 1e-12);
+        // the row's energy matches the model's own per-frame figure
+        let direct = m.energy_per_frame_mj(&mnist_small(), 250.0, act, 0.25);
+        assert!((row.energy_mj_per_frame() - direct).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Perf-regression gate over the `BENCH_*.json` trajectory files
+//! (`forgemorph report bench-check`).
+//!
+//! The bench harness (`cargo bench --bench bench_hotpath`) writes
+//! machine-readable results to `BENCH_dse.json` / `BENCH_distill.json`
+//! at the repo root; the committed copies are the baselines of the perf
+//! trajectory. This module diffs a fresh run against a baseline:
+//!
+//! * **Gated by default — machine-independent metrics.** Parallel
+//!   speedups (`speedup*`) and determinism booleans
+//!   (`front_identical`) do not depend on the host's absolute speed:
+//!   a drop beyond the tolerance is a real engine regression (lost
+//!   parallel efficiency, broken thread invariance) wherever the bench
+//!   runs.
+//! * **Informational by default — absolute metrics.** Wall times,
+//!   per-candidate µs, samples/s and cache-hit rates vary with the
+//!   host; they are reported with their deltas and gated only under
+//!   `--absolute` (for trajectory tracking on a fixed reference
+//!   machine).
+//!
+//! Refresh baselines on the reference machine with
+//! `BENCH_MS=800 cargo bench --bench bench_hotpath` and commit the
+//! rewritten `BENCH_*.json` (see DESIGN.md §10).
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Outcome of one baseline/current comparison.
+#[derive(Debug, Default)]
+pub struct GateResult {
+    /// one human-readable line per compared metric
+    pub lines: Vec<String>,
+    /// metric paths that regressed beyond tolerance
+    pub regressions: Vec<String>,
+    /// metrics that actually gated (regression-capable)
+    pub gated: usize,
+}
+
+impl GateResult {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// The full report as one printable block.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for l in &self.lines {
+            let _ = writeln!(s, "{l}");
+        }
+        s
+    }
+}
+
+/// Metric class, inferred from the key path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Class {
+    /// machine-independent, higher is better (speedups) — always gated
+    RelativeHigher,
+    /// absolute time, lower is better — gated only with `gate_absolute`
+    AbsoluteLower,
+    /// absolute rate, higher is better — gated only with `gate_absolute`
+    AbsoluteHigher,
+    /// reported with delta, never gated
+    Info,
+}
+
+fn classify(path: &str) -> Class {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    if leaf.contains("speedup") {
+        Class::RelativeHigher
+    } else if leaf.ends_with("_ms") || leaf.ends_with("_us") || leaf == "mean" || leaf == "p50" {
+        Class::AbsoluteLower
+    } else if leaf.contains("per_sec") {
+        Class::AbsoluteHigher
+    } else {
+        Class::Info
+    }
+}
+
+/// Compare a current bench JSON against a baseline. `tolerance_pct` is
+/// the allowed relative slack; `gate_absolute` promotes absolute
+/// time/throughput metrics from informational to gated.
+pub fn check(
+    baseline: &Json,
+    current: &Json,
+    tolerance_pct: f64,
+    gate_absolute: bool,
+) -> GateResult {
+    let mut out = GateResult::default();
+    let tol = tolerance_pct.max(0.0) / 100.0;
+    walk("", baseline, current, tol, gate_absolute, &mut out);
+    out
+}
+
+fn walk(path: &str, base: &Json, cur: &Json, tol: f64, gate_abs: bool, out: &mut GateResult) {
+    let join = |key: &str| {
+        if path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{path}.{key}")
+        }
+    };
+    match (base, cur) {
+        (Json::Obj(b), Json::Obj(c)) => {
+            for (k, bv) in b {
+                match c.get(k) {
+                    Some(cv) => walk(&join(k), bv, cv, tol, gate_abs, out),
+                    None => out.lines.push(format!("note {}: missing in current run", join(k))),
+                }
+            }
+        }
+        (Json::Arr(b), Json::Arr(c)) => {
+            for (i, bv) in b.iter().enumerate() {
+                if let Some(cv) = c.get(i) {
+                    walk(&join(&i.to_string()), bv, cv, tol, gate_abs, out);
+                } else {
+                    out.lines.push(format!(
+                        "note {path}: baseline has {} entries, current {}",
+                        b.len(),
+                        c.len()
+                    ));
+                    break;
+                }
+            }
+        }
+        (Json::Bool(b), Json::Bool(c)) => {
+            out.gated += 1;
+            if *b && !*c {
+                out.regressions.push(path.to_string());
+                out.lines.push(format!("REGR {path}: was true, now false"));
+            } else {
+                out.lines.push(format!("ok   {path}: {c}"));
+            }
+        }
+        (Json::Num(b), Json::Num(c)) => num_metric(path, *b, *c, tol, gate_abs, out),
+        _ => {}
+    }
+}
+
+fn num_metric(path: &str, base: f64, cur: f64, tol: f64, gate_abs: bool, out: &mut GateResult) {
+    let class = classify(path);
+    let delta_pct = if base != 0.0 { (cur - base) / base * 100.0 } else { 0.0 };
+    let gate = match class {
+        Class::RelativeHigher => true,
+        Class::AbsoluteLower | Class::AbsoluteHigher => gate_abs,
+        Class::Info => false,
+    };
+    let regressed = match class {
+        Class::RelativeHigher | Class::AbsoluteHigher => cur < base * (1.0 - tol),
+        Class::AbsoluteLower => cur > base * (1.0 + tol),
+        Class::Info => false,
+    };
+    if gate {
+        out.gated += 1;
+        if regressed {
+            out.regressions.push(path.to_string());
+            out.lines.push(format!(
+                "REGR {path}: {cur:.4} vs baseline {base:.4} ({delta_pct:+.1}%)"
+            ));
+            return;
+        }
+        out.lines.push(format!(
+            "ok   {path}: {cur:.4} vs baseline {base:.4} ({delta_pct:+.1}%)"
+        ));
+    } else {
+        out.lines.push(format!(
+            "info {path}: {cur:.4} vs baseline {base:.4} ({delta_pct:+.1}%)"
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(text: &str) -> Json {
+        Json::parse(text).expect("valid test json")
+    }
+
+    #[test]
+    fn speedup_drop_beyond_tolerance_regresses() {
+        let base = j(r#"{"threads": [{"threads": 4, "speedup_vs_serial_nomemo": 3.0}]}"#);
+        let ok = j(r#"{"threads": [{"threads": 4, "speedup_vs_serial_nomemo": 2.5}]}"#);
+        let bad = j(r#"{"threads": [{"threads": 4, "speedup_vs_serial_nomemo": 2.0}]}"#);
+        let r = check(&base, &ok, 20.0, false);
+        assert!(r.passed(), "{:?}", r.regressions);
+        let r = check(&base, &bad, 20.0, false);
+        assert!(!r.passed());
+        assert_eq!(r.regressions, vec!["threads.0.speedup_vs_serial_nomemo"]);
+    }
+
+    #[test]
+    fn boolean_flip_regresses() {
+        let base = j(r#"{"front_identical": true}"#);
+        let r = check(&base, &j(r#"{"front_identical": false}"#), 20.0, false);
+        assert!(!r.passed());
+        let r = check(&base, &j(r#"{"front_identical": true}"#), 20.0, false);
+        assert!(r.passed());
+        assert_eq!(r.gated, 1);
+    }
+
+    #[test]
+    fn absolute_times_gate_only_on_request() {
+        let base = j(r#"{"wall_ms": 100.0, "samples_per_sec": 5000.0}"#);
+        let slow = j(r#"{"wall_ms": 200.0, "samples_per_sec": 2000.0}"#);
+        // informational by default: a slower machine must not fail CI
+        let r = check(&base, &slow, 20.0, false);
+        assert!(r.passed());
+        assert_eq!(r.gated, 0);
+        assert!(r.report().contains("info wall_ms"));
+        // --absolute promotes them
+        let r = check(&base, &slow, 20.0, true);
+        assert!(!r.passed());
+        assert!(r.regressions.contains(&"wall_ms".to_string()));
+        assert!(r.regressions.contains(&"samples_per_sec".to_string()));
+    }
+
+    #[test]
+    fn improvements_and_info_fields_pass() {
+        let base = j(r#"{"cache_hit_rate": 0.4, "floor": 0.8, "paths": 8,
+                          "threads": [{"speedup": 2.0}]}"#);
+        let cur = j(r#"{"cache_hit_rate": 0.1, "floor": 0.7, "paths": 8,
+                         "threads": [{"speedup": 4.0}]}"#);
+        let r = check(&base, &cur, 20.0, false);
+        assert!(r.passed(), "{:?}", r.regressions);
+        // only the speedup gated
+        assert_eq!(r.gated, 1);
+    }
+
+    #[test]
+    fn missing_keys_are_noted_not_fatal() {
+        let base = j(r#"{"threads": [{"speedup": 2.0}], "gone": 1.0}"#);
+        let cur = j(r#"{"threads": [{"speedup": 2.0}]}"#);
+        let r = check(&base, &cur, 20.0, false);
+        assert!(r.passed());
+        assert!(r.report().contains("missing in current run"));
+    }
+
+    #[test]
+    fn tolerance_boundary_is_exclusive() {
+        let base = j(r#"{"speedup": 1.0}"#);
+        // exactly at the edge stays ok; just past it regresses
+        assert!(check(&base, &j(r#"{"speedup": 0.8}"#), 20.0, false).passed());
+        assert!(!check(&base, &j(r#"{"speedup": 0.79}"#), 20.0, false).passed());
+    }
+}

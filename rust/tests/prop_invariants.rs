@@ -99,6 +99,7 @@ fn prop_pareto_front_sound() {
                     dsp: Some(dsp_cap),
                     lut: None,
                     bram: None,
+                    power_mw: None,
                 },
                 ..dse::DseConfig::default()
             };
@@ -167,6 +168,126 @@ fn prop_dse_invariant_under_threads_and_memo() {
                 runs.iter().all(|r| r.evaluations == runs[0].evaluations),
                 "evaluation count drifted",
             )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_power_model_monotone_in_every_axis() {
+    // total_mw must be monotone (non-decreasing) in each resource count,
+    // the clock, and both activity axes — the property the governor's
+    // ordering arguments and the DSE power constraint rely on.
+    use forgemorph::pe::Resources;
+    use forgemorph::power::{Activity, PowerModel};
+    check(
+        "power-monotone",
+        400,
+        21,
+        |rng: &mut Rng| {
+            let res = Resources {
+                dsp: rng.below(2000),
+                lut: rng.below(400_000),
+                ff: rng.below(500_000),
+                bram: rng.below(1500),
+            };
+            let clock = 50.0 + rng.f64() * 400.0;
+            let act = Activity {
+                active_fraction: rng.f64(),
+                toggle_rate: rng.f64(),
+            };
+            // which axis to bump, and by how much
+            let axis = rng.below(6);
+            let bump = 1.0 + rng.f64() * 4.0;
+            (res, clock, act, axis, bump)
+        },
+        |&(res, clock, act, axis, bump)| {
+            let m = PowerModel::default();
+            let base = m.total_mw(&res, clock, act);
+            let mut res2 = res;
+            let mut clock2 = clock;
+            let mut act2 = act;
+            match axis {
+                0 => res2.dsp += bump as usize + 1,
+                1 => res2.lut += (bump * 1000.0) as usize + 1,
+                2 => res2.bram += bump as usize + 1,
+                3 => clock2 += bump * 10.0,
+                4 => act2.active_fraction = (act.active_fraction + bump / 10.0).min(1.0),
+                _ => act2.toggle_rate = (act.toggle_rate + bump / 10.0).min(1.0),
+            }
+            let bumped = m.total_mw(&res2, clock2, act2);
+            ensure(
+                bumped >= base - 1e-9,
+                format!("axis {axis}: {base} -> {bumped} decreased"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_energy_telemetry_merge_associative() {
+    // shard metrics merge like a monoid: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) on
+    // every energy/power field (up to f64 rounding), so cross-shard
+    // aggregation order can never change a run report.
+    use forgemorph::coordinator::ServingMetrics;
+    use forgemorph::power::{Activity, PathEnergy};
+    check(
+        "energy-merge-assoc",
+        200,
+        22,
+        |rng: &mut Rng| {
+            let mk = |rng: &mut Rng| {
+                let mut m = ServingMetrics::default();
+                for path in ["d1_w100", "d2_w100", "d3_w100"] {
+                    if rng.chance(0.7) {
+                        let row = PathEnergy {
+                            name: path.into(),
+                            activity: Activity::default(),
+                            power_mw: 400.0 + rng.f64() * 600.0,
+                            frame_ms: 0.05 + rng.f64() * 2.0,
+                        };
+                        m.record_energy(&row, rng.below(50) + 1);
+                    }
+                }
+                m
+            };
+            (mk(rng), mk(rng), mk(rng))
+        },
+        |(a, b, c)| {
+            let left = {
+                let mut x = a.clone();
+                x.merge(b);
+                x.merge(c);
+                x
+            };
+            let right = {
+                let mut bc = b.clone();
+                bc.merge(c);
+                let mut x = a.clone();
+                x.merge(&bc);
+                x
+            };
+            let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs()));
+            ensure(close(left.energy_j, right.energy_j), "energy_j not associative")?;
+            ensure(
+                close(left.power_mw_ms, right.power_mw_ms),
+                "power integral not associative",
+            )?;
+            ensure(close(left.modeled_ms, right.modeled_ms), "modeled_ms not associative")?;
+            ensure(
+                close(left.mean_power_mw(), right.mean_power_mw()),
+                "mean power not associative",
+            )?;
+            ensure(
+                left.energy_mj_by_path.keys().eq(right.energy_mj_by_path.keys()),
+                "per-path keys diverge",
+            )?;
+            for (k, v) in &left.energy_mj_by_path {
+                ensure(
+                    close(*v, right.energy_mj_by_path[k]),
+                    format!("per-path energy diverges on {k}"),
+                )?;
+            }
             Ok(())
         },
     );
