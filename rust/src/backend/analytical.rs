@@ -6,7 +6,8 @@
 //! trades on during search. Orders of magnitude cheaper per batch than
 //! the cycle simulator while preserving the cost *ordering* the governor
 //! needs, so morph decisions match the sim backend on the same budget
-//! trace. Numerics come from the shared [`SurrogateClassifier`], making
+//! trace. Numerics come from the shared [`SurrogateClassifier`]'s packed
+//! batch pass (one pass per batch, nothing allocated per frame), making
 //! logits bit-identical to the sim backend.
 
 use super::{BackendError, InferenceBackend, SurrogateClassifier};

@@ -250,41 +250,75 @@ pub fn net_num_classes(net: &Network) -> usize {
 /// property the sharding determinism test pins. Weights are derived from
 /// a seeded [`Rng`] keyed on the path name only, so two independently
 /// constructed backends agree exactly.
+///
+/// The batch hot path runs one packed pass over the whole batch against
+/// a *transposed* `[frame_len, num_classes]` weight copy: per frame the
+/// `classes`-wide logit row is the vector lane and `d` ascends per
+/// accumulator — the same per-(frame, class) reduction order as the
+/// scalar per-class dot (weights are drawn in the original row-major RNG
+/// order and only then transposed), so logits stay bit-identical to
+/// [`SurrogateClassifier::scalar_logits`] while the batch loop allocates
+/// nothing per frame.
 #[derive(Debug, Clone)]
 pub struct SurrogateClassifier {
     frame_len: usize,
     num_classes: usize,
-    /// path name -> row-major [num_classes * frame_len] weights
-    weights: BTreeMap<String, Vec<f32>>,
+    /// path name -> transposed [frame_len * num_classes] weights
+    /// (`wt[d * num_classes + c]`)
+    weights_t: BTreeMap<String, Vec<f32>>,
 }
 
 impl SurrogateClassifier {
     pub fn new(frame_len: usize, num_classes: usize, paths: &[MorphPath]) -> SurrogateClassifier {
-        let mut weights = BTreeMap::new();
+        let mut weights_t = BTreeMap::new();
         for p in paths {
             let mut rng = Rng::new(fnv1a(&p.name));
+            // draw in the historical row-major [classes, frame_len] order
+            // (the RNG stream defines the weights), then transpose for
+            // the packed batch pass
             let w: Vec<f32> = (0..num_classes * frame_len)
                 .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
                 .collect();
-            weights.insert(p.name.clone(), w);
+            let mut wt = vec![0.0f32; num_classes * frame_len];
+            for c in 0..num_classes {
+                for d in 0..frame_len {
+                    wt[d * num_classes + c] = w[c * frame_len + d];
+                }
+            }
+            weights_t.insert(p.name.clone(), wt);
         }
-        SurrogateClassifier { frame_len, num_classes, weights }
+        SurrogateClassifier { frame_len, num_classes, weights_t }
+    }
+
+    fn path_weights(&self, path: &str) -> Result<&[f32], BackendError> {
+        self.weights_t
+            .get(path)
+            .map(Vec::as_slice)
+            .ok_or_else(|| BackendError::UnknownPath(path.to_string()))
     }
 
     /// Logits for one frame on one path.
     pub fn logits(&self, path: &str, frame: &[f32]) -> Result<Vec<f32>, BackendError> {
-        let w = self
-            .weights
-            .get(path)
-            .ok_or_else(|| BackendError::UnknownPath(path.to_string()))?;
+        if frame.len() != self.frame_len {
+            // check before the batch path so the error reports the
+            // per-frame expectation, as it always has
+            self.path_weights(path)?;
+            return Err(BackendError::BadInput { got: frame.len(), want: self.frame_len });
+        }
+        self.batch_logits(path, 1, frame)
+    }
+
+    /// The retained scalar reference: per-class dots, one frame at a
+    /// time. Kept as the bit-level spec the packed batch pass is tested
+    /// against, and as the serving bench's batched-vs-scalar baseline.
+    pub fn scalar_logits(&self, path: &str, frame: &[f32]) -> Result<Vec<f32>, BackendError> {
+        let wt = self.path_weights(path)?;
         if frame.len() != self.frame_len {
             return Err(BackendError::BadInput { got: frame.len(), want: self.frame_len });
         }
-        Ok((0..self.num_classes)
-            .map(|c| {
-                let row = &w[c * self.frame_len..(c + 1) * self.frame_len];
-                row.iter().zip(frame).map(|(a, b)| a * b).sum()
-            })
+        let classes = self.num_classes;
+        Ok((0..classes)
+            .map(|c| (0..self.frame_len).map(|d| wt[d * classes + c] * frame[d]).sum())
             .collect())
     }
 
@@ -295,17 +329,46 @@ impl SurrogateClassifier {
         batch: usize,
         input: &[f32],
     ) -> Result<Vec<f32>, BackendError> {
+        let mut out = Vec::new();
+        self.batch_logits_into(path, batch, input, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`batch_logits`](SurrogateClassifier::batch_logits) into a
+    /// caller-held buffer: the per-shard scratch-reuse entry — a shard
+    /// that keeps `out` across batches allocates nothing here once the
+    /// buffer has grown to the largest batch it serves.
+    pub fn batch_logits_into(
+        &self,
+        path: &str,
+        batch: usize,
+        input: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), BackendError> {
+        let wt = self.path_weights(path)?;
         if input.len() != batch * self.frame_len {
             return Err(BackendError::BadInput {
                 got: input.len(),
                 want: batch * self.frame_len,
             });
         }
-        let mut out = Vec::with_capacity(batch * self.num_classes);
-        for f in 0..batch {
-            out.extend(self.logits(path, &input[f * self.frame_len..(f + 1) * self.frame_len])?);
+        let classes = self.num_classes;
+        out.clear();
+        out.resize(batch * classes, 0.0);
+        if self.frame_len == 0 || classes == 0 {
+            return Ok(());
         }
-        Ok(out)
+        for (orow, frame) in
+            out.chunks_exact_mut(classes).zip(input.chunks_exact(self.frame_len))
+        {
+            for (d, &xv) in frame.iter().enumerate() {
+                let wrow = &wt[d * classes..(d + 1) * classes];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -361,6 +424,29 @@ mod tests {
             c.batch_logits("d1_w100", 2, &[0.0; 7]),
             Err(BackendError::BadInput { .. })
         ));
+    }
+
+    #[test]
+    fn batched_logits_match_scalar_reference_bitwise() {
+        let c = SurrogateClassifier::new(37, 5, &paths());
+        let batch = 9;
+        let input: Vec<f32> = (0..batch * 37)
+            .map(|i| ((i * 2_654_435_761_usize) % 1000) as f32 / 500.0 - 1.0)
+            .collect();
+        let out = c.batch_logits("d2_w100", batch, &input).unwrap();
+        let mut reused = vec![0.0f32; 1]; // scratch-reuse entry agrees too
+        c.batch_logits_into("d2_w100", batch, &input, &mut reused).unwrap();
+        assert_eq!(out, reused);
+        for f in 0..batch {
+            let frame = &input[f * 37..(f + 1) * 37];
+            let want = c.scalar_logits("d2_w100", frame).unwrap();
+            let got = &out[f * 5..(f + 1) * 5];
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "frame {f}"
+            );
+        }
     }
 
     #[test]

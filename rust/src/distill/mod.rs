@@ -21,9 +21,16 @@
 //!
 //! The engine is the Rust twin of `python/compile/train.py` (pinned
 //! against its reference behavior by `tests/distill_reference.rs`) built
-//! on the deterministic [`tensor`] core: single-threaded, seeded, no
-//! allocator- or thread-count-dependent numerics — two runs with the
-//! same seed produce **byte-identical** [`AccuracyProfile`] JSON.
+//! on the deterministic [`tensor`] core: seeded, no allocator- or
+//! thread-count-dependent numerics — two runs with the same seed produce
+//! **byte-identical** [`AccuracyProfile`] JSON, for *any*
+//! [`DistillConfig::threads`] value. The KD cycles themselves mutate the
+//! shared trunk and stay sequential; the phases where ladder paths are
+//! truly independent — the final head-only calibration against the
+//! frozen trunk, and the accuracy sweep — fan out across a scoped worker
+//! pool (the `dse::run` pattern) with RNG schedules pre-drawn on the
+//! main thread and results merged in ladder order, so the worker count
+//! changes wall-clock only, never a single bit of output.
 //!
 //! The output feeds the rest of the pipeline:
 //! * [`AccuracyProfile::apply_to`] persists trained accuracies into the
@@ -34,6 +41,7 @@
 
 pub mod data;
 pub mod tensor;
+pub mod tensor_ref;
 
 use std::collections::BTreeMap;
 
@@ -45,7 +53,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use data::Dataset;
-use tensor::{Conv, Dense};
+use tensor::{Conv, Dense, Scratch};
 
 /// Errors from spec construction / profile parsing.
 #[derive(Debug, Clone, PartialEq)]
@@ -291,6 +299,14 @@ pub struct DistillConfig {
     /// quantization-aware KD: fake-quant every block activation at this
     /// bit width during training (straight-through gradients)
     pub qat_bits: Option<u32>,
+    /// worker threads for the independent ladder phases (head
+    /// calibration, accuracy sweep): `0` routes everything through the
+    /// scalar [`tensor_ref`] kernels serially (the reference/baseline
+    /// path), `>= 1` uses the blocked [`tensor`] microkernels with up to
+    /// N scoped workers. Output is byte-identical for every value — the
+    /// blocked kernels reproduce the reference reduction order and the
+    /// fan-out only covers paths that share no trainable state.
+    pub threads: usize,
 }
 
 impl Default for DistillConfig {
@@ -310,6 +326,7 @@ impl Default for DistillConfig {
             lr_stage_decay: 0.6,
             seed: 0,
             qat_bits: None,
+            threads: 1,
         }
     }
 }
@@ -382,6 +399,110 @@ impl Velocity {
         for (w, b) in self.heads.values_mut() {
             w.iter_mut().for_each(|v| *v = 0.0);
             b.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+/// Per-worker kernel context: selects the tensor core (blocked
+/// microkernels vs the retained scalar reference) and owns the reusable
+/// [`Scratch`] the blocked kernels pack into — the train loop allocates
+/// no im2col/transpose buffers per step. Both cores produce bit-identical
+/// results (the property suite's central claim); `reference` exists so
+/// `threads: 0` stays an auditable, obviously-correct serial baseline.
+struct KernelCtx {
+    reference: bool,
+    sc: Scratch,
+}
+
+impl KernelCtx {
+    fn new(reference: bool) -> KernelCtx {
+        KernelCtx { reference, sc: Scratch::new() }
+    }
+
+    fn for_cfg(cfg: &DistillConfig) -> KernelCtx {
+        KernelCtx::new(cfg.threads == 0)
+    }
+
+    fn conv_fwd(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        conv: &Conv,
+        cin_a: usize,
+        cout_a: usize,
+    ) -> Vec<f32> {
+        if self.reference {
+            tensor_ref::conv_fwd(x, n, h, w, conv, cin_a, cout_a)
+        } else {
+            let mut out = Vec::new();
+            tensor::conv_fwd_scratch(&mut self.sc, x, n, h, w, conv, cin_a, cout_a, &mut out);
+            out
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_bwd(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        conv: &Conv,
+        cin_a: usize,
+        cout_a: usize,
+        dpre: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+        compute_dx: bool,
+    ) -> Vec<f32> {
+        if self.reference {
+            tensor_ref::conv_bwd(x, n, h, w, conv, cin_a, cout_a, dpre, gw, gb, compute_dx)
+        } else {
+            let mut dx = Vec::new();
+            tensor::conv_bwd_scratch(
+                &mut self.sc,
+                x,
+                n,
+                h,
+                w,
+                conv,
+                cin_a,
+                cout_a,
+                dpre,
+                gw,
+                gb,
+                compute_dx,
+                &mut dx,
+            );
+            dx
+        }
+    }
+
+    fn fc_fwd(&mut self, x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
+        if self.reference {
+            tensor_ref::fc_fwd(x, n, head)
+        } else {
+            tensor::fc_fwd(x, n, head)
+        }
+    }
+
+    fn fc_bwd(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        head: &Dense,
+        dlogits: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) -> Vec<f32> {
+        if self.reference {
+            tensor_ref::fc_bwd(x, n, head, dlogits, gw, gb)
+        } else {
+            let mut dx = Vec::new();
+            tensor::fc_bwd_scratch(&mut self.sc, x, n, head, dlogits, gw, gb, &mut dx);
+            dx
         }
     }
 }
@@ -459,6 +580,7 @@ struct BlockAct {
 
 /// Forward one morph path with caches. `x` is `[n, h, w, c]`.
 fn forward_cached(
+    ctx: &mut KernelCtx,
     params: &Params,
     spec: &DistillSpec,
     path: PathSpec,
@@ -472,7 +594,7 @@ fn forward_cached(
         let cur: &[f32] = if i == 0 { x } else { &acts[i - 1].out };
         let conv = &params.blocks[i];
         let cout_a = width_of(spec.filters[i], path.width_pct);
-        let pre = tensor::conv_fwd(cur, n, h, w, conv, cin_a, cout_a);
+        let pre = ctx.conv_fwd(cur, n, h, w, conv, cin_a, cout_a);
         let mut post = tensor::relu(&pre);
         if let Some(bits) = qat {
             fake_quant_tensor(&mut post, bits);
@@ -500,7 +622,7 @@ fn forward_cached(
         cin_a = cout_a;
     }
     let feats = &acts.last().expect("depth >= 1").out;
-    let logits = tensor::fc_fwd(feats, n, &params.heads[&path.name()]);
+    let logits = ctx.fc_fwd(feats, n, &params.heads[&path.name()]);
     (acts, logits)
 }
 
@@ -529,13 +651,27 @@ pub fn forward(
     n: usize,
     qat: Option<u32>,
 ) -> Vec<f32> {
+    forward_with(&mut KernelCtx::new(false), params, spec, path, x, n, qat)
+}
+
+/// [`forward`] through a caller-held [`KernelCtx`] — the hot loops reuse
+/// one context (and its im2col scratch) across every batch they run.
+fn forward_with(
+    ctx: &mut KernelCtx,
+    params: &Params,
+    spec: &DistillSpec,
+    path: PathSpec,
+    x: &[f32],
+    n: usize,
+    qat: Option<u32>,
+) -> Vec<f32> {
     debug_assert!(path.depth >= 1);
     let (mut h, mut w, mut cin_a) = spec.input;
     let mut cur: Vec<f32> = Vec::new();
     for i in 0..path.depth {
         let xin: &[f32] = if i == 0 { x } else { &cur };
         let cout_a = width_of(spec.filters[i], path.width_pct);
-        let mut act = tensor::conv_fwd(xin, n, h, w, &params.blocks[i], cin_a, cout_a);
+        let mut act = ctx.conv_fwd(xin, n, h, w, &params.blocks[i], cin_a, cout_a);
         // in-place ReLU, same -0.0 normalization as tensor::relu
         for v in act.iter_mut() {
             *v = if *v > 0.0 { *v } else { 0.0 };
@@ -552,7 +688,7 @@ pub fn forward(
         }
         cin_a = cout_a;
     }
-    tensor::fc_fwd(&cur, n, &params.heads[&path.name()])
+    ctx.fc_fwd(&cur, n, &params.heads[&path.name()])
 }
 
 /// Gradients for one step (full-size buffers; zero outside active slices).
@@ -566,6 +702,7 @@ struct Grads {
 /// Returns the scalar loss.
 #[allow(clippy::too_many_arguments)]
 fn train_step(
+    ctx: &mut KernelCtx,
     params: &mut Params,
     vel: &mut Velocity,
     spec: &DistillSpec,
@@ -578,7 +715,7 @@ fn train_step(
 ) -> f64 {
     let n = y.len();
     let classes = spec.num_classes;
-    let (acts, logits) = forward_cached(params, spec, path, x, n, cfg.qat_bits);
+    let (acts, logits) = forward_cached(ctx, params, spec, path, x, n, cfg.qat_bits);
 
     // loss + dlogits
     let ce = cross_entropy(&logits, classes, y);
@@ -619,8 +756,7 @@ fn train_step(
         head_b: vec![0.0; head.b.len()],
     };
     let feats = &acts.last().expect("depth >= 1").out;
-    let mut dout =
-        tensor::fc_bwd(feats, n, head, &dlogits, &mut grads.head_w, &mut grads.head_b);
+    let mut dout = ctx.fc_bwd(feats, n, head, &dlogits, &mut grads.head_w, &mut grads.head_b);
     // head-only phases (calibration) freeze the trunk: skip the conv
     // backward entirely — the head update and the clip norm then see
     // exactly the gradients that will be applied
@@ -636,7 +772,7 @@ fn train_step(
             let x_in: &[f32] = if i == 0 { x } else { &acts[i - 1].out };
             let (gw, gb) = &mut grads.blocks[i];
             // the first block's input gradient has no consumer
-            dout = tensor::conv_bwd(
+            dout = ctx.conv_bwd(
                 x_in, n, act.h_in, act.w_in, &params.blocks[i], act.cin, act.cout, &dpre, gw,
                 gb, i != 0,
             );
@@ -751,6 +887,17 @@ pub fn accuracy(
     ds: &Dataset,
     qat: Option<u32>,
 ) -> f64 {
+    accuracy_with(&mut KernelCtx::new(false), params, spec, path, ds, qat)
+}
+
+fn accuracy_with(
+    ctx: &mut KernelCtx,
+    params: &Params,
+    spec: &DistillSpec,
+    path: PathSpec,
+    ds: &Dataset,
+    qat: Option<u32>,
+) -> f64 {
     let frame = ds.frame_len();
     let classes = spec.num_classes;
     let mut hits = 0usize;
@@ -765,7 +912,7 @@ pub fn accuracy(
     while i < n {
         let m = batch.min(n - i);
         let x = &ds.x_test[i * frame..(i + m) * frame];
-        let logits = forward(params, spec, path, x, m, qat);
+        let logits = forward_with(ctx, params, spec, path, x, m, qat);
         for s in 0..m {
             let row = &logits[s * classes..(s + 1) * classes];
             let arg = row
@@ -783,12 +930,58 @@ pub fn accuracy(
     hits as f64 / n as f64
 }
 
+/// `dse::run`'s scoped worker pattern in miniature: fan `jobs` out over
+/// up to `threads` scoped workers (shared-iterator work stealing) and
+/// place every result by its job index — output order is input order
+/// whatever the worker count or completion interleaving. `threads <= 1`
+/// (or a single job) runs inline with no threads spawned.
+fn parallel_map<T, R>(jobs: Vec<T>, threads: usize, f: impl Fn(T) -> R + Sync) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let threads = threads.max(1).min(jobs.len());
+    if threads <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let n = jobs.len();
+    let queue = std::sync::Mutex::new(jobs.into_iter().enumerate());
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let queue = &queue;
+            let f = &f;
+            scope.spawn(move || loop {
+                // take the lock only to draw the next job; run it outside
+                let job = queue.lock().expect("job queue lock").next();
+                let Some((i, t)) = job else { break };
+                if tx.send((i, f(t))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx); // only worker clones remain
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("every job reports")).collect()
+        // scope joins the workers here
+    })
+}
+
 /// Algorithm 2: progressive growth with teacher/student KD cycles and a
-/// final full-path polish. Deterministic: seeded, single-threaded.
+/// final full-path polish. Deterministic: seeded; the KD cycles run
+/// sequentially (they mutate the shared trunk), the independent phases
+/// (head calibration, accuracy sweep) fan out over
+/// [`DistillConfig::threads`] workers with byte-identical results for
+/// any worker count.
 pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig) -> TrainResult {
     let mut rng = Rng::new(cfg.seed);
     let mut params = init_params(spec, cfg.seed);
     let mut vel = Velocity::zeros(&params);
+    let mut ctx = KernelCtx::for_cfg(cfg);
     let frame = ds.frame_len();
     let n_train = ds.n_train();
     let mut history: Vec<LossRecord> = Vec::new();
@@ -819,7 +1012,8 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
                 let bx = gather(&ds.x_train, frame, &idx);
                 let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
                 losses.push(train_step(
-                    &mut params, &mut vel, spec, teacher, &bx, &by, None, cfg, &lr_teacher,
+                    &mut ctx, &mut params, &mut vel, spec, teacher, &bx, &by, None, cfg,
+                    &lr_teacher,
                 ));
             }
             history.push(LossRecord {
@@ -839,8 +1033,9 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
                     let bx = gather(&ds.x_train, frame, &idx);
                     let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
                     let t_logits =
-                        forward(&params, spec, teacher, &bx, by.len(), cfg.qat_bits);
+                        forward_with(&mut ctx, &params, spec, teacher, &bx, by.len(), cfg.qat_bits);
                     losses.push(train_step(
+                        &mut ctx,
                         &mut params,
                         &mut vel,
                         spec,
@@ -876,7 +1071,7 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
             let bx = gather(&ds.x_train, frame, &idx);
             let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
             losses.push(train_step(
-                &mut params, &mut vel, spec, full, &bx, &by, None, cfg, &lr_full,
+                &mut ctx, &mut params, &mut vel, spec, full, &bx, &by, None, cfg, &lr_full,
             ));
         }
         history.push(LossRecord {
@@ -894,19 +1089,38 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
     // head trained stages ago. One head-only KD pass per path against
     // the FINAL network re-aligns every readout with the trunk that
     // actually ships; trunk weights are frozen (block LR 0), so no path
-    // can disturb another.
+    // can disturb another — which makes the ladder's calibration passes
+    // *independent*: each worker trains its path's head on a clone of
+    // the frozen network and only that head merges back, in ladder
+    // order. RNG schedules are pre-drawn on the main thread in the
+    // serial order (path-major, epoch-minor), so the stream consumed —
+    // and every trained bit — is identical for any worker count.
     let lr_cal = LrTree { blocks: vec![0.0; n_stages], head: cfg.lr };
-    for &cpath in spec.paths().iter().filter(|&&p| p != full) {
-        vel.zero();
+    let cal_jobs: Vec<(PathSpec, Vec<Vec<Vec<usize>>>)> = spec
+        .paths()
+        .into_iter()
+        .filter(|&p| p != full)
+        .map(|p| {
+            let sched = (0..cfg.epochs_per_stage)
+                .map(|_| epoch_batches(&mut rng, n_train, cfg.batch))
+                .collect();
+            (p, sched)
+        })
+        .collect();
+    let calibrated = parallel_map(cal_jobs, cfg.threads, |(cpath, sched)| {
+        let mut p = params.clone();
+        let mut v = Velocity::zeros(&p);
+        let mut ctx = KernelCtx::for_cfg(cfg);
         let mut losses = Vec::new();
-        for _ in 0..cfg.epochs_per_stage {
-            for idx in epoch_batches(&mut rng, n_train, cfg.batch) {
-                let bx = gather(&ds.x_train, frame, &idx);
+        for batches in &sched {
+            for idx in batches {
+                let bx = gather(&ds.x_train, frame, idx);
                 let by: Vec<u32> = idx.iter().map(|&i| ds.y_train[i]).collect();
-                let t_logits = forward(&params, spec, full, &bx, by.len(), cfg.qat_bits);
+                let t_logits = forward_with(&mut ctx, &p, spec, full, &bx, by.len(), cfg.qat_bits);
                 losses.push(train_step(
-                    &mut params,
-                    &mut vel,
+                    &mut ctx,
+                    &mut p,
+                    &mut v,
                     spec,
                     cpath,
                     &bx,
@@ -917,20 +1131,27 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
                 ));
             }
         }
+        let head = p.heads.remove(&cpath.name()).expect("head exists");
+        (cpath, head, mean(&losses))
+    });
+    for (cpath, head, loss) in calibrated {
+        params.heads.insert(cpath.name(), head);
         history.push(LossRecord {
             stage: n_stages + 2,
             phase: Phase::Calibrate,
             path: cpath.name(),
             epoch: 0,
-            loss: mean(&losses),
+            loss,
         });
     }
 
-    let accuracies = spec
-        .paths()
-        .iter()
-        .map(|&p| (p.name(), accuracy(&params, spec, p, ds, cfg.qat_bits)))
-        .collect();
+    // Accuracy sweep: read-only per path — the other trivially parallel
+    // ladder phase; results collect in ladder order regardless of which
+    // worker finishes first.
+    let accuracies = parallel_map(spec.paths(), cfg.threads, |p| {
+        let mut ctx = KernelCtx::for_cfg(cfg);
+        (p.name(), accuracy_with(&mut ctx, &params, spec, p, ds, cfg.qat_bits))
+    });
     TrainResult { params, accuracies, history }
 }
 
@@ -1265,10 +1486,34 @@ mod tests {
         for &p in &spec.paths() {
             for qat in [None, Some(8)] {
                 let lean = forward(&params, &spec, p, &ds.x_test, 8, qat);
-                let (_, cached) = forward_cached(&params, &spec, p, &ds.x_test, 8, qat);
+                let (_, cached) =
+                    forward_cached(&mut KernelCtx::new(false), &params, &spec, p, &ds.x_test, 8, qat);
                 assert_eq!(lean, cached, "{} qat {qat:?}", p.name());
+                // and the scalar reference core agrees bit-for-bit
+                let reference =
+                    forward_with(&mut KernelCtx::new(true), &params, &spec, p, &ds.x_test, 8, qat);
+                assert_eq!(lean, reference, "{} qat {qat:?} (reference core)", p.name());
             }
         }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_profile() {
+        // threads=0 (serial, scalar reference kernels), threads=1
+        // (blocked kernels, inline) and threads=3 (blocked kernels,
+        // scoped fan-out) must emit byte-identical AccuracyProfile JSON
+        // — the invariant the CLI's --threads default leans on. The
+        // wider 1-vs-4 sweep over two seeds lives in
+        // tests/prop_invariants.rs.
+        let spec = one_block_spec();
+        let base = quick_cfg();
+        let emit = |threads: usize| {
+            let cfg = DistillConfig { threads, ..base.clone() };
+            train_profile(&spec, &spec.dataset(96, 48, 5), &cfg).to_json()
+        };
+        let serial_ref = emit(0);
+        assert_eq!(serial_ref, emit(1));
+        assert_eq!(serial_ref, emit(3));
     }
 
     #[test]

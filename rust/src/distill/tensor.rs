@@ -1,16 +1,27 @@
-//! Deterministic tensor core for the DistillCycle trainer.
+//! Deterministic tensor core for the DistillCycle trainer — blocked
+//! im2col microkernels.
 //!
-//! Flat `Vec<f32>` NHWC tensors with explicit dims and plain loop nests —
-//! no BLAS, no threads, no SIMD intrinsics — so every training run is a
-//! single fixed sequence of f32 operations: bit-identical across reruns
-//! and independent of whatever `--threads N` the rest of the pipeline
-//! uses. The ops mirror `python/compile/kernels/ref.py`: conv3x3 SAME,
-//! ReLU, 2x2 max-pool (stride 2, odd edge dropped) and a dense head.
+//! Flat `Vec<f32>` NHWC tensors with explicit dims — no BLAS, no SIMD
+//! intrinsics — but structured for the auto-vectorizer: the conv kernels
+//! pack each input patch into a reusable im2col scratch buffer (zero
+//! padding materialized, `(ky, kx, ci)` order) and run a register-blocked
+//! matmul microkernel over it. Determinism survives the blocking because
+//! the **reduction order per output element is fixed** and identical to
+//! the retained scalar reference kernels ([`super::tensor_ref`]): every
+//! accumulator starts from its bias (or `+0.0`) and consumes its terms in
+//! the reference sequence; blocking/vectorization only runs *independent*
+//! accumulators side by side (4 output pixels × the `co` lane), never a
+//! tree reduction. The property suite bit-compares both cores across
+//! random shapes, widths and batch sizes (see DESIGN.md §11 for the
+//! `±0.0` argument that makes the zero-skips exact).
+//!
+//! The ops mirror `python/compile/kernels/ref.py`: conv3x3 SAME, ReLU,
+//! 2x2 max-pool (stride 2, odd edge dropped) and a dense head.
 //!
 //! Width-morphing follows `model.py::slice_block`: weight buffers are
 //! allocated at full width and the active `(cin, cout)` slice is indexed
-//! directly, so gated filters are never touched — the software twin of
-//! clock-gated PEs never toggling.
+//! via precomputed packed-row offsets, so gated filters are never touched
+//! — the software twin of clock-gated PEs never toggling.
 
 /// One morphable conv block's parameters (full-width storage).
 #[derive(Debug, Clone)]
@@ -40,9 +51,155 @@ pub struct Dense {
     pub classes: usize,
 }
 
-/// conv SAME + bias over the active `(cin_a, cout_a)` slice.
-/// Input `x` is `[n, h, w, cin_a]` (activations are stored compact at the
-/// active width); output is the pre-activation `[n, h, w, cout_a]`.
+/// Reusable scratch for the blocked kernels: one per worker thread, grown
+/// on demand and reused across every batch/layer it touches — the hot
+/// loops allocate nothing per step beyond their output tensors.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// im2col patch matrix, `[n*h*w, k*k*cin_a]`
+    col: Vec<f32>,
+    /// transposed active weights for the backward scatter,
+    /// `[cout_a, k*k*cin_a]` (conv) or `[classes, dim]` (dense)
+    wt: Vec<f32>,
+    /// packed patch column `j = (ky,kx,ci)` -> full-width weight row
+    /// offset `((ky*k+kx)*cin + ci)*cout` — the indirection that keeps
+    /// gated channels untouched under width morphing
+    row_off: Vec<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// Pack `x` (`[n, h, w, cin_a]`, SAME pad `k/2`) into the im2col patch
+/// matrix `col[row][j]` with `row = (s, oy, ox)` and `j = (ky, kx, ci)`
+/// ascending — the fixed reduction order of the reference kernels, with
+/// out-of-bounds taps materialized as `+0.0`. Contiguous `kx` runs are
+/// bulk-copied.
+pub fn im2col(x: &[f32], n: usize, h: usize, w: usize, cin_a: usize, k: usize, col: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), n * h * w * cin_a);
+    let pad = k / 2;
+    let kk = k * k * cin_a;
+    col.clear();
+    col.resize(n * h * w * kk, 0.0);
+    let mut r = 0usize;
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let row = &mut col[r * kk..(r + 1) * kk];
+                for ky in 0..k {
+                    let seg = &mut row[ky * k * cin_a..(ky + 1) * k * cin_a];
+                    let iy = oy + ky;
+                    if iy < pad || iy - pad >= h {
+                        seg.fill(0.0);
+                        continue;
+                    }
+                    let iy = iy - pad;
+                    // valid kx span: pad <= ox + kx < w + pad
+                    let kx_lo = pad.saturating_sub(ox);
+                    let kx_hi = k.min(w + pad - ox);
+                    let ix_lo = ox + kx_lo - pad;
+                    seg[..kx_lo * cin_a].fill(0.0);
+                    let src = &x[((s * h + iy) * w + ix_lo) * cin_a..][..(kx_hi - kx_lo) * cin_a];
+                    seg[kx_lo * cin_a..kx_hi * cin_a].copy_from_slice(src);
+                    seg[kx_hi * cin_a..].fill(0.0);
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// Packed patch column -> full-width weight row offsets (the active
+/// `co` slice of row `j` is `w[row_off[j]..row_off[j] + cout_a]`).
+fn fill_row_off(row_off: &mut Vec<usize>, conv: &Conv, cin_a: usize) {
+    let k = conv.k;
+    row_off.clear();
+    row_off.reserve(k * k * cin_a);
+    for t in 0..k * k {
+        for ci in 0..cin_a {
+            row_off.push((t * conv.cin + ci) * conv.cout);
+        }
+    }
+}
+
+/// conv SAME + bias over the active `(cin_a, cout_a)` slice — blocked
+/// im2col microkernel. Input `x` is `[n, h, w, cin_a]` (activations are
+/// stored compact at the active width); the pre-activation
+/// `[n, h, w, cout_a]` is written into `out`.
+///
+/// Microkernel shape: 4 output pixels ride together (shared weight-row
+/// loads), the `co` loop is the vector lane; each `out[p][co]`
+/// accumulator starts at `b[co]` and consumes `j = (ky, kx, ci)`
+/// ascending — the reference reduction order, padding taps contributing
+/// inert `±0.0` terms.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_fwd_scratch(
+    sc: &mut Scratch,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), n * h * w * cin_a);
+    let rows = n * h * w;
+    let kk = conv.k * conv.k * cin_a;
+    im2col(x, n, h, w, cin_a, conv.k, &mut sc.col);
+    fill_row_off(&mut sc.row_off, conv, cin_a);
+    out.clear();
+    out.resize(rows * cout_a, 0.0);
+    let bias = &conv.b[..cout_a];
+    let col = &sc.col;
+    let ro = &sc.row_off;
+
+    const MR: usize = 4;
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let chunk = &mut out[r * cout_a..(r + MR) * cout_a];
+        for orow in chunk.chunks_exact_mut(cout_a) {
+            orow.copy_from_slice(bias);
+        }
+        let (o0, rest) = chunk.split_at_mut(cout_a);
+        let (o1, rest) = rest.split_at_mut(cout_a);
+        let (o2, o3) = rest.split_at_mut(cout_a);
+        let c0 = &col[r * kk..(r + 1) * kk];
+        let c1 = &col[(r + 1) * kk..(r + 2) * kk];
+        let c2 = &col[(r + 2) * kk..(r + 3) * kk];
+        let c3 = &col[(r + 3) * kk..(r + 4) * kk];
+        for j in 0..kk {
+            let wrow = &conv.w[ro[j]..ro[j] + cout_a];
+            let (x0, x1, x2, x3) = (c0[j], c1[j], c2[j], c3[j]);
+            for (co, &wv) in wrow.iter().enumerate() {
+                o0[co] += x0 * wv;
+                o1[co] += x1 * wv;
+                o2[co] += x2 * wv;
+                o3[co] += x3 * wv;
+            }
+        }
+        r += MR;
+    }
+    while r < rows {
+        let orow = &mut out[r * cout_a..(r + 1) * cout_a];
+        orow.copy_from_slice(bias);
+        let crow = &col[r * kk..(r + 1) * kk];
+        for (j, &xv) in crow.iter().enumerate() {
+            let wrow = &conv.w[ro[j]..ro[j] + cout_a];
+            for (co, &wv) in wrow.iter().enumerate() {
+                orow[co] += xv * wv;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// conv SAME + bias — allocating wrapper over [`conv_fwd_scratch`] (the
+/// hot loops hold a per-worker [`Scratch`] instead).
 pub fn conv_fwd(
     x: &[f32],
     n: usize,
@@ -52,48 +209,118 @@ pub fn conv_fwd(
     cin_a: usize,
     cout_a: usize,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * h * w * cin_a);
-    let k = conv.k;
-    let pad = k / 2;
-    let mut out = vec![0.0f32; n * h * w * cout_a];
-    for s in 0..n {
-        for oy in 0..h {
-            for ox in 0..w {
-                let obase = ((s * h + oy) * w + ox) * cout_a;
-                for co in 0..cout_a {
-                    let mut acc = conv.b[co];
-                    for ky in 0..k {
-                        let iy = oy + ky;
-                        if iy < pad || iy - pad >= h {
-                            continue;
-                        }
-                        let iy = iy - pad;
-                        for kx in 0..k {
-                            let ix = ox + kx;
-                            if ix < pad || ix - pad >= w {
-                                continue;
-                            }
-                            let ix = ix - pad;
-                            let ibase = ((s * h + iy) * w + ix) * cin_a;
-                            for ci in 0..cin_a {
-                                acc += x[ibase + ci] * conv.w[conv.widx(ky, kx, ci, co)];
-                            }
-                        }
-                    }
-                    out[obase + co] = acc;
-                }
-            }
-        }
-    }
+    let mut sc = Scratch::new();
+    let mut out = Vec::new();
+    conv_fwd_scratch(&mut sc, x, n, h, w, conv, cin_a, cout_a, &mut out);
     out
 }
 
-/// conv SAME backward: given `dpre` (gradient at the pre-activation),
-/// accumulate weight/bias grads into the full-size `gw`/`gb` buffers
-/// (active slice only — gated filters stay untouched) and return `dx`.
-/// `compute_dx: false` (the first block, whose input gradient nobody
-/// consumes) skips the propagation accumulation — it runs over the
-/// largest feature map in the net — and returns an empty vec.
+/// conv SAME backward — blocked twin of [`super::tensor_ref::conv_bwd`]:
+/// given `dpre` (gradient at the pre-activation), accumulate weight/bias
+/// grads into the full-size `gw`/`gb` buffers (active slice only — gated
+/// filters stay untouched) and write `dx` (left empty when
+/// `compute_dx` is false: the first block's input gradient has no
+/// consumer and its feature map is the largest in the net).
+///
+/// Reduction orders (all matching the reference bit-for-bit):
+/// * `gb[co]`, `gw[j][co]`: output pixels `(s, oy, ox)` ascending — the
+///   pixel loop stays outermost and accumulates straight into the
+///   buffers, so no per-tile partials ever get merged;
+/// * `dx[e]`: pixels ascending, then `co` ascending — the per-`co`
+///   scatter adds each `w·g` term directly, as the reference does.
+/// Zero skips (`xv == 0.0` patch columns, `g == 0.0` lanes) drop only
+/// inert `±0.0` terms — exactness argued in DESIGN.md §11.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_scratch(
+    sc: &mut Scratch,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+    dpre: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    compute_dx: bool,
+    dx: &mut Vec<f32>,
+) {
+    debug_assert_eq!(gw.len(), conv.w.len());
+    debug_assert_eq!(gb.len(), conv.b.len());
+    let k = conv.k;
+    let pad = k / 2;
+    let kk = k * k * cin_a;
+    im2col(x, n, h, w, cin_a, k, &mut sc.col);
+    fill_row_off(&mut sc.row_off, conv, cin_a);
+    dx.clear();
+    dx.resize(if compute_dx { n * h * w * cin_a } else { 0 }, 0.0);
+    if compute_dx {
+        // transposed active weights: wt[co][j] with j = (ky, kx, ci)
+        // packed — contiguous ci runs for the saxpy scatter below
+        sc.wt.clear();
+        sc.wt.resize(cout_a * kk, 0.0);
+        for co in 0..cout_a {
+            let wtr = &mut sc.wt[co * kk..(co + 1) * kk];
+            for (j, wv) in wtr.iter_mut().enumerate() {
+                *wv = conv.w[sc.row_off[j] + co];
+            }
+        }
+    }
+    let col = &sc.col;
+    let ro = &sc.row_off;
+    let gbs = &mut gb[..cout_a];
+
+    let mut r = 0usize;
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let g = &dpre[r * cout_a..(r + 1) * cout_a];
+                for (co, &gv) in g.iter().enumerate() {
+                    gbs[co] += gv;
+                }
+                let crow = &col[r * kk..(r + 1) * kk];
+                for (j, &xv) in crow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut gw[ro[j]..ro[j] + cout_a];
+                    for (co, &gv) in g.iter().enumerate() {
+                        grow[co] += xv * gv;
+                    }
+                }
+                if compute_dx {
+                    let kx_lo = pad.saturating_sub(ox);
+                    let kx_hi = k.min(w + pad - ox);
+                    let ix_lo = ox + kx_lo - pad;
+                    for (co, &gv) in g.iter().enumerate() {
+                        if gv == 0.0 {
+                            continue;
+                        }
+                        let wtr = &sc.wt[co * kk..(co + 1) * kk];
+                        for ky in 0..k {
+                            let iy = oy + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            let iy = iy - pad;
+                            let dseg = &mut dx[((s * h + iy) * w + ix_lo) * cin_a..]
+                                [..(kx_hi - kx_lo) * cin_a];
+                            let wseg =
+                                &wtr[(ky * k + kx_lo) * cin_a..(ky * k + kx_hi) * cin_a];
+                            for (dv, &wv) in dseg.iter_mut().zip(wseg) {
+                                *dv += gv * wv;
+                            }
+                        }
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// conv SAME backward — allocating wrapper over [`conv_bwd_scratch`].
 #[allow(clippy::too_many_arguments)]
 pub fn conv_bwd(
     x: &[f32],
@@ -108,46 +335,9 @@ pub fn conv_bwd(
     gb: &mut [f32],
     compute_dx: bool,
 ) -> Vec<f32> {
-    debug_assert_eq!(gw.len(), conv.w.len());
-    debug_assert_eq!(gb.len(), conv.b.len());
-    let k = conv.k;
-    let pad = k / 2;
-    let mut dx = vec![0.0f32; if compute_dx { n * h * w * cin_a } else { 0 }];
-    for s in 0..n {
-        for oy in 0..h {
-            for ox in 0..w {
-                let obase = ((s * h + oy) * w + ox) * cout_a;
-                for co in 0..cout_a {
-                    let g = dpre[obase + co];
-                    if g == 0.0 {
-                        continue;
-                    }
-                    gb[co] += g;
-                    for ky in 0..k {
-                        let iy = oy + ky;
-                        if iy < pad || iy - pad >= h {
-                            continue;
-                        }
-                        let iy = iy - pad;
-                        for kx in 0..k {
-                            let ix = ox + kx;
-                            if ix < pad || ix - pad >= w {
-                                continue;
-                            }
-                            let ix = ix - pad;
-                            let ibase = ((s * h + iy) * w + ix) * cin_a;
-                            for ci in 0..cin_a {
-                                gw[conv.widx(ky, kx, ci, co)] += x[ibase + ci] * g;
-                                if compute_dx {
-                                    dx[ibase + ci] += conv.w[conv.widx(ky, kx, ci, co)] * g;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let mut sc = Scratch::new();
+    let mut dx = Vec::new();
+    conv_bwd_scratch(&mut sc, x, n, h, w, conv, cin_a, cout_a, dpre, gw, gb, compute_dx, &mut dx);
     dx
 }
 
@@ -224,11 +414,15 @@ pub fn pool_bwd(dout: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
     dx
 }
 
-/// Dense head forward: `[n, dim] x [dim, classes] + b`.
-pub fn fc_fwd(x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
+/// Dense head forward into a reusable buffer:
+/// `[n, dim] x [dim, classes] + b`. Already a saxpy over the contiguous
+/// `classes` lane with `d` ascending per accumulator (the reference
+/// order); the zero-row skip exploits post-ReLU/post-pool sparsity.
+pub fn fc_fwd_into(x: &[f32], n: usize, head: &Dense, out: &mut Vec<f32>) {
     let (dim, classes) = (head.dim, head.classes);
     debug_assert_eq!(x.len(), n * dim);
-    let mut out = vec![0.0f32; n * classes];
+    out.clear();
+    out.resize(n * classes, 0.0);
     for s in 0..n {
         let row = &x[s * dim..(s + 1) * dim];
         let o = &mut out[s * classes..(s + 1) * classes];
@@ -243,10 +437,71 @@ pub fn fc_fwd(x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Dense head forward — allocating wrapper over [`fc_fwd_into`].
+pub fn fc_fwd(x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
+    let mut out = Vec::new();
+    fc_fwd_into(x, n, head, &mut out);
     out
 }
 
-/// Dense head backward: accumulates into `gw`/`gb`, returns `dx`.
+/// Dense head backward — blocked twin of
+/// [`super::tensor_ref::fc_bwd`]: accumulates into `gw`/`gb`, writes
+/// `dx`. The combined reference loop is split into a vectorizable
+/// `gw` saxpy (contiguous `classes` lane, `s` ascending per element)
+/// and a transposed-weight `dx` saxpy (contiguous `dim` lane, `c`
+/// ascending per element — the reference's inner-dot order).
+pub fn fc_bwd_scratch(
+    sc: &mut Scratch,
+    x: &[f32],
+    n: usize,
+    head: &Dense,
+    dlogits: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    dx: &mut Vec<f32>,
+) {
+    let (dim, classes) = (head.dim, head.classes);
+    dx.clear();
+    dx.resize(n * dim, 0.0);
+    // transposed head weights: wt[c][d]
+    sc.wt.clear();
+    sc.wt.resize(classes * dim, 0.0);
+    for (d, wrow) in head.w.chunks_exact(classes).enumerate() {
+        for (c, &wv) in wrow.iter().enumerate() {
+            sc.wt[c * dim + d] = wv;
+        }
+    }
+    for s in 0..n {
+        let row = &x[s * dim..(s + 1) * dim];
+        let g = &dlogits[s * classes..(s + 1) * classes];
+        for (c, &gv) in g.iter().enumerate() {
+            gb[c] += gv;
+        }
+        for (d, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[d * classes..(d + 1) * classes];
+            for (c, &gv) in g.iter().enumerate() {
+                grow[c] += xv * gv;
+            }
+        }
+        let dxrow = &mut dx[s * dim..(s + 1) * dim];
+        for (c, &gv) in g.iter().enumerate() {
+            if gv == 0.0 {
+                continue;
+            }
+            let wtr = &sc.wt[c * dim..(c + 1) * dim];
+            for (dv, &wv) in dxrow.iter_mut().zip(wtr) {
+                *dv += gv * wv;
+            }
+        }
+    }
+}
+
+/// Dense head backward — allocating wrapper over [`fc_bwd_scratch`].
 pub fn fc_bwd(
     x: &[f32],
     n: usize,
@@ -255,24 +510,9 @@ pub fn fc_bwd(
     gw: &mut [f32],
     gb: &mut [f32],
 ) -> Vec<f32> {
-    let (dim, classes) = (head.dim, head.classes);
-    let mut dx = vec![0.0f32; n * dim];
-    for s in 0..n {
-        let row = &x[s * dim..(s + 1) * dim];
-        let g = &dlogits[s * classes..(s + 1) * classes];
-        for (c, &gv) in g.iter().enumerate() {
-            gb[c] += gv;
-        }
-        for (d, &xv) in row.iter().enumerate() {
-            let wrow = &head.w[d * classes..(d + 1) * classes];
-            let mut acc = 0.0f32;
-            for (c, &gv) in g.iter().enumerate() {
-                gw[d * classes + c] += xv * gv;
-                acc += wrow[c] * gv;
-            }
-            dx[s * dim + d] = acc;
-        }
-    }
+    let mut sc = Scratch::new();
+    let mut dx = Vec::new();
+    fc_bwd_scratch(&mut sc, x, n, head, dlogits, gw, gb, &mut dx);
     dx
 }
 
@@ -311,6 +551,20 @@ mod tests {
         let c = Conv { w: vec![1.0; 9], b: vec![0.0], k: 3, cin: 1, cout: 1 };
         let y = conv_fwd(&[1.0; 4], 1, 2, 2, &c, 1, 1);
         assert_eq!(y, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn im2col_packs_padded_patches() {
+        // 2x2 single-channel image, 3x3 patches: center-of-kernel is the
+        // pixel itself; corners of the patch fall outside -> zeros
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut col = Vec::new();
+        im2col(&x, 1, 2, 2, 1, 3, &mut col);
+        assert_eq!(col.len(), 4 * 9);
+        // patch at (0,0): only (ky,kx) in {(1,1),(1,2),(2,1),(2,2)} valid
+        assert_eq!(&col[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // patch at (1,1): top-left quadrant valid
+        assert_eq!(&col[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -406,5 +660,38 @@ mod tests {
         let pre = vec![-1.0f32, 0.0, 2.0];
         assert_eq!(relu(&pre), vec![0.0, 0.0, 2.0]);
         assert_eq!(relu_bwd(&pre, &[5.0, 5.0, 5.0]), vec![0.0, 0.0, 5.0]);
+    }
+
+    /// Blocked kernels vs the retained scalar reference on one awkward
+    /// geometry (the exhaustive random sweep lives in
+    /// `tests/prop_invariants.rs`).
+    #[test]
+    fn blocked_matches_reference_smoke() {
+        use super::super::tensor_ref;
+        let (n, h, w, cin, cout, cin_a, cout_a) = (2usize, 5, 3, 3, 4, 2, 3);
+        let conv = Conv {
+            w: (0..9 * cin * cout).map(|i| ((i * 37 % 41) as f32 - 20.0) * 0.07).collect(),
+            b: (0..cout).map(|i| (i as f32 - 1.0) * 0.11).collect(),
+            k: 3,
+            cin,
+            cout,
+        };
+        let x: Vec<f32> = (0..n * h * w * cin_a)
+            .map(|i| if i % 5 == 0 { 0.0 } else { ((i * 13 % 23) as f32 - 11.0) * 0.09 })
+            .collect();
+        let fwd = conv_fwd(&x, n, h, w, &conv, cin_a, cout_a);
+        let fwd_ref = tensor_ref::conv_fwd(&x, n, h, w, &conv, cin_a, cout_a);
+        assert_eq!(fwd, fwd_ref);
+        let dpre: Vec<f32> = (0..n * h * w * cout_a)
+            .map(|i| if i % 4 == 0 { 0.0 } else { ((i * 7 % 19) as f32 - 9.0) * 0.05 })
+            .collect();
+        let (mut gw, mut gb) = (vec![0.0f32; conv.w.len()], vec![0.0f32; conv.b.len()]);
+        let (mut gw2, mut gb2) = (gw.clone(), gb.clone());
+        let dx = conv_bwd(&x, n, h, w, &conv, cin_a, cout_a, &dpre, &mut gw, &mut gb, true);
+        let dx_ref =
+            tensor_ref::conv_bwd(&x, n, h, w, &conv, cin_a, cout_a, &dpre, &mut gw2, &mut gb2, true);
+        assert_eq!(dx, dx_ref);
+        assert_eq!(gw, gw2);
+        assert_eq!(gb, gb2);
     }
 }

@@ -1,0 +1,179 @@
+//! Retained scalar reference kernels for the DistillCycle tensor core.
+//!
+//! These are the original plain loop-nest implementations of the four
+//! hot kernels (conv fwd/bwd, dense fwd/bwd), kept verbatim as the
+//! **bit-level specification** of the reduction order the blocked
+//! [`super::tensor`] microkernels must reproduce: per output element the
+//! accumulation runs bias-first then `(ky, kx, ci)` ascending (conv
+//! forward), output pixels in `(s, oy, ox)` order then `co` ascending
+//! (conv backward), and `d` ascending per class (dense). The equivalence
+//! property tests (`tests/prop_invariants.rs`) bit-compare the blocked
+//! kernels against these across random shapes, widths and batch sizes;
+//! `DistillConfig { threads: 0 }` routes the whole trainer through them
+//! (the serial reference path, also the scalar baseline the bench
+//! speedups are measured against).
+//!
+//! Do not "optimize" this module — its value is being obviously-correct
+//! scalar code with a fixed f32 operation sequence.
+
+use super::tensor::{Conv, Dense};
+
+/// conv SAME + bias over the active `(cin_a, cout_a)` slice — scalar
+/// reference. See [`super::tensor::conv_fwd`] for the blocked twin.
+pub fn conv_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * h * w * cin_a);
+    let k = conv.k;
+    let pad = k / 2;
+    let mut out = vec![0.0f32; n * h * w * cout_a];
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let obase = ((s * h + oy) * w + ox) * cout_a;
+                for co in 0..cout_a {
+                    let mut acc = conv.b[co];
+                    for ky in 0..k {
+                        let iy = oy + ky;
+                        if iy < pad || iy - pad >= h {
+                            continue;
+                        }
+                        let iy = iy - pad;
+                        for kx in 0..k {
+                            let ix = ox + kx;
+                            if ix < pad || ix - pad >= w {
+                                continue;
+                            }
+                            let ix = ix - pad;
+                            let ibase = ((s * h + iy) * w + ix) * cin_a;
+                            for ci in 0..cin_a {
+                                acc += x[ibase + ci] * conv.w[conv.widx(ky, kx, ci, co)];
+                            }
+                        }
+                    }
+                    out[obase + co] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// conv SAME backward — scalar reference. Accumulates into the full-size
+/// `gw`/`gb` buffers (active slice only) and returns `dx` (empty when
+/// `compute_dx` is false).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    conv: &Conv,
+    cin_a: usize,
+    cout_a: usize,
+    dpre: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    compute_dx: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(gw.len(), conv.w.len());
+    debug_assert_eq!(gb.len(), conv.b.len());
+    let k = conv.k;
+    let pad = k / 2;
+    let mut dx = vec![0.0f32; if compute_dx { n * h * w * cin_a } else { 0 }];
+    for s in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let obase = ((s * h + oy) * w + ox) * cout_a;
+                for co in 0..cout_a {
+                    let g = dpre[obase + co];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    gb[co] += g;
+                    for ky in 0..k {
+                        let iy = oy + ky;
+                        if iy < pad || iy - pad >= h {
+                            continue;
+                        }
+                        let iy = iy - pad;
+                        for kx in 0..k {
+                            let ix = ox + kx;
+                            if ix < pad || ix - pad >= w {
+                                continue;
+                            }
+                            let ix = ix - pad;
+                            let ibase = ((s * h + iy) * w + ix) * cin_a;
+                            for ci in 0..cin_a {
+                                gw[conv.widx(ky, kx, ci, co)] += x[ibase + ci] * g;
+                                if compute_dx {
+                                    dx[ibase + ci] += conv.w[conv.widx(ky, kx, ci, co)] * g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Dense head forward — scalar reference (`[n, dim] x [dim, classes] + b`
+/// with the zero-row skip the blocked kernel also takes).
+pub fn fc_fwd(x: &[f32], n: usize, head: &Dense) -> Vec<f32> {
+    let (dim, classes) = (head.dim, head.classes);
+    debug_assert_eq!(x.len(), n * dim);
+    let mut out = vec![0.0f32; n * classes];
+    for s in 0..n {
+        let row = &x[s * dim..(s + 1) * dim];
+        let o = &mut out[s * classes..(s + 1) * classes];
+        o.copy_from_slice(&head.b);
+        for (d, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &head.w[d * classes..(d + 1) * classes];
+            for (c, &wv) in wrow.iter().enumerate() {
+                o[c] += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Dense head backward — scalar reference.
+pub fn fc_bwd(
+    x: &[f32],
+    n: usize,
+    head: &Dense,
+    dlogits: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+) -> Vec<f32> {
+    let (dim, classes) = (head.dim, head.classes);
+    let mut dx = vec![0.0f32; n * dim];
+    for s in 0..n {
+        let row = &x[s * dim..(s + 1) * dim];
+        let g = &dlogits[s * classes..(s + 1) * classes];
+        for (c, &gv) in g.iter().enumerate() {
+            gb[c] += gv;
+        }
+        for (d, &xv) in row.iter().enumerate() {
+            let wrow = &head.w[d * classes..(d + 1) * classes];
+            let mut acc = 0.0f32;
+            for (c, &gv) in g.iter().enumerate() {
+                gw[d * classes + c] += xv * gv;
+                acc += wrow[c] * gv;
+            }
+            dx[s * dim + d] = acc;
+        }
+    }
+    dx
+}

@@ -8,8 +8,9 @@
 //!                   --latency MS --power-budget MW --energy-front
 //!                   --threads N --no-memo --profile FILE]
 //! forgemorph distill --model mnist [--train N --test N --epochs N --batch N
-//!                   --seed N --qbits B --out FILE]   train the morph-path
-//!                   ladder (DistillCycle) and emit an AccuracyProfile
+//!                   --seed N --qbits B --threads N --out FILE]   train the
+//!                   morph-path ladder (DistillCycle) and emit an
+//!                   AccuracyProfile
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
 //! forgemorph sim --model mnist --p 4 [--depth D | --width PCT]
 //! forgemorph graph dump --model yolov5l        topology + StagePlan as JSON
@@ -73,6 +74,10 @@ commands:
                 energy-per-frame as a minimized objective)
   distill       DistillCycle-train a small zoo model's morph-path ladder
                 (hierarchical KD) and emit its AccuracyProfile JSON
+                (--threads N fans the independent ladder phases out —
+                same semantics as explore's flag, byte-identical profile
+                for any value; --threads 0 runs the serial scalar
+                reference kernels)
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
   graph         graph dump --model M: topology + scheduled StagePlan
@@ -292,11 +297,16 @@ fn cmd_distill(args: &Args) -> anyhow::Result<()> {
             Some(bits)
         }
     };
+    // same default as explore: all available cores. 0 is meaningful
+    // (the serial scalar-reference path), so no .max(1) clamp here.
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let cfg = DistillConfig {
         epochs_per_stage: args.get_usize("epochs", 2),
         batch: args.get_usize("batch", 32),
         seed: args.get_u64("seed", 0),
         qat_bits,
+        threads: args.get_usize("threads", default_threads),
         ..DistillConfig::default()
     };
     let n_train = args.get_usize("train", 512);
@@ -319,12 +329,17 @@ fn cmd_distill(args: &Args) -> anyhow::Result<()> {
     let ds = spec.dataset(n_train, n_test, cfg.seed);
     println!(
         "DistillCycle: training '{}' ladder ({} paths) on {n_train}+{n_test} samples, \
-         {} epochs/stage, seed {}{}",
+         {} epochs/stage, seed {}{}, {}",
         spec.name,
         spec.paths().len(),
         cfg.epochs_per_stage,
         cfg.seed,
-        cfg.qat_bits.map(|b| format!(", int{b} QAT")).unwrap_or_default()
+        cfg.qat_bits.map(|b| format!(", int{b} QAT")).unwrap_or_default(),
+        if cfg.threads == 0 {
+            "serial reference kernels".to_string()
+        } else {
+            format!("{} thread(s)", cfg.threads)
+        }
     );
     let t0 = std::time::Instant::now();
     let profile = distill::train_profile(&spec, &ds, &cfg);
