@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use forgemorph::backend::BackendSpec;
 use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig};
 use forgemorph::design::{self, DesignConfig};
+use forgemorph::fault::FaultPlan;
 use forgemorph::dse;
 use forgemorph::graph::zoo;
 use forgemorph::morph;
@@ -588,6 +589,51 @@ fn main() {
             out.switches.len(),
             out.squeeze_reduction_pct().unwrap_or(0.0)
         );
+
+        // fault-path overhead: the identical replay with an armed but
+        // *empty* fault plan pays the per-frame injector bookkeeping
+        // (scrub pass, directive lookup, capacity feed) without any
+        // fault actually striking — the pure cost of the machinery
+        let net = zoo::mnist();
+        let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+        let paths = morph::depth_ladder(&net);
+        let t0 = Instant::now();
+        let mut coord = Coordinator::start(
+            ServeConfig { workers: 2, external_pacing: true, ..ServeConfig::default() },
+            BackendSpec::sim(net, design, ZYNQ_7100, paths),
+        )
+        .unwrap();
+        let idle_plan = FaultPlan::empty(11);
+        let out_idle = coord
+            .replay_trace(&events, &TraceConfig { frames, rate_hz, seed: 11 }, Some(&idle_plan))
+            .unwrap();
+        let wall_idle = t0.elapsed();
+        assert_eq!(out_idle.answered, out.answered, "idle injector changed the replay");
+        let disabled_ms = wall.as_secs_f64() * 1e3;
+        let idle_ms = wall_idle.as_secs_f64() * 1e3;
+        let overhead_pct = (idle_ms - disabled_ms) / disabled_ms * 100.0;
+        println!(
+            "fault-injection idle overhead ({frames} frames): disabled {disabled_ms:.2} ms, \
+             idle injector {idle_ms:.2} ms ({overhead_pct:+.1}%)"
+        );
+        // fold the row into the bench trajectory file the distill section
+        // wrote earlier this run (absolute _ms/_pct keys: informational
+        // under bench-check, gated only with --absolute)
+        let bench_json =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_distill.json");
+        if let Ok(text) = std::fs::read_to_string(&bench_json) {
+            if let Some(body) = text.trim_end().strip_suffix('}') {
+                let patched = format!(
+                    "{body}  ,\n  \"fault_overhead\": {{\"disabled_ms\": {disabled_ms:.3}, \
+                     \"idle_injector_ms\": {idle_ms:.3}, \
+                     \"overhead_pct\": {overhead_pct:.2}}}\n}}\n"
+                );
+                match std::fs::write(&bench_json, patched) {
+                    Ok(()) => println!("appended fault_overhead to {}", bench_json.display()),
+                    Err(e) => println!("(fault_overhead not appended: {e})"),
+                }
+            }
+        }
     }
 
     // --- surrogate classifier: packed batch pass vs scalar per-frame dots ---

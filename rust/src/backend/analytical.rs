@@ -135,6 +135,19 @@ impl InferenceBackend for AnalyticalBackend {
         }
         self.classifier.batch_logits(path, batch, input)
     }
+
+    fn probe(&mut self) -> Result<(), BackendError> {
+        // self-check mirroring SimBackend::probe: one zero frame through
+        // the surrogate on the lightest deployed path
+        let path = self
+            .registry
+            .paths()
+            .first()
+            .map(|p| p.name.clone())
+            .ok_or_else(|| BackendError::Execute("no deployed paths".into()))?;
+        let frame = vec![0.0f32; self.frame_len];
+        self.classifier.batch_logits(&path, 1, &frame).map(|_| ())
+    }
 }
 
 #[cfg(test)]

@@ -120,6 +120,14 @@ pub trait InferenceBackend: Send {
         input: &[f32],
     ) -> Result<Vec<f32>, BackendError>;
 
+    /// Cheap liveness self-check a quarantined worker shard runs before
+    /// the health board releases it back to duty. The default is
+    /// optimistic; backends with real state override it with an actual
+    /// sanity probe.
+    fn probe(&mut self) -> Result<(), BackendError> {
+        Ok(())
+    }
+
     /// Argmax class ids for a flattened logits buffer.
     fn argmax(&self, logits: &[f32]) -> Vec<usize> {
         logits

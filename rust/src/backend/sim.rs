@@ -226,6 +226,20 @@ impl InferenceBackend for SimBackend {
         self.last_report = report;
         self.classifier.batch_logits(path, batch, input)
     }
+
+    fn probe(&mut self) -> Result<(), BackendError> {
+        // real self-check: one zero frame through the full surrogate on
+        // the lightest deployed path (cheap, but exercises the same
+        // classifier state execute() uses)
+        let path = self
+            .registry
+            .paths()
+            .first()
+            .map(|p| p.name.clone())
+            .ok_or_else(|| BackendError::Execute("no deployed paths".into()))?;
+        let frame = vec![0.0f32; self.frame_len];
+        self.classifier.batch_logits(&path, 1, &frame).map(|_| ())
+    }
 }
 
 #[cfg(test)]

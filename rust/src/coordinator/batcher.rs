@@ -15,14 +15,24 @@ use super::Request;
 /// pinned-path boundary, so across a morph transition the outgoing
 /// path's requests drain first — the drain half of the serving engine's
 /// drain→swap→resume reconfiguration timeline.
+///
+/// Stall-injected stragglers ([`Request::isolating`]) run in a batch of
+/// their own: the injected delay must never land on innocent batch
+/// neighbours, so an isolating request both ends the current run and,
+/// when it is the front, is popped alone.
 pub fn pop_pinned_run(q: &mut VecDeque<Request>, size: usize) -> Vec<Request> {
     let mut out: Vec<Request> = Vec::with_capacity(size.min(q.len()));
     while out.len() < size {
         match q.front() {
+            Some(next) if !out.is_empty() && next.isolating() => break,
             Some(next)
                 if out.is_empty() || next.pinned_path == out[0].pinned_path =>
             {
+                let isolating = next.isolating();
                 out.push(q.pop_front().expect("front just checked"));
+                if isolating {
+                    break;
+                }
             }
             _ => break,
         }
@@ -166,9 +176,38 @@ mod tests {
                 enqueued: Instant::now(),
                 reply,
                 pinned_path: pin.map(str::to_string),
+                fault: None,
+                attempt: 0,
+                deadline: None,
+                degraded: false,
             },
             rx,
         )
+    }
+
+    #[test]
+    fn stall_injected_requests_run_alone() {
+        use crate::fault::FaultDirective;
+        let mut q = VecDeque::new();
+        let mut keep = Vec::new();
+        for stalled in [false, true, false, false] {
+            let (mut r, rx) = req(Some("d3"));
+            if stalled {
+                r.fault = Some(FaultDirective { stall_ms: 2.0, fail_attempts: 0 });
+            }
+            q.push_back(r);
+            keep.push(rx);
+        }
+        // the run stops short of the straggler...
+        let run = pop_pinned_run(&mut q, 8);
+        assert_eq!(run.len(), 1);
+        assert!(!run[0].isolating());
+        // ...which then pops in a batch of one despite sharing the pin
+        let run = pop_pinned_run(&mut q, 8);
+        assert_eq!(run.len(), 1);
+        assert!(run[0].isolating());
+        // the innocent tail batches together again
+        assert_eq!(pop_pinned_run(&mut q, 8).len(), 2);
     }
 
     #[test]

@@ -95,6 +95,25 @@ pub struct ServingMetrics {
     pub power_mw_ms: f64,
     /// modeled FPGA busy time (ms) the energy integral covers
     pub modeled_ms: f64,
+    // --- fault telemetry (all pure sums: merge stays associative) ---
+    /// faults injected by the `--fault-trace` engine
+    pub faults_injected: u64,
+    /// request re-executions after a transient failure
+    pub retries: u64,
+    /// requests terminally failed on deadline expiry
+    pub timeouts: u64,
+    /// requests that exhausted retries (terminal `Failed`)
+    pub failed_requests: u64,
+    /// requests answered on a corrupted/misrouted path (`Degraded`)
+    pub degraded_requests: u64,
+    /// DPR swaps that failed mid-window and rolled back
+    pub swaps_rolled_back: u64,
+    /// SEUs detected and repaired by the CRC scrubber
+    pub scrub_repairs: u64,
+    /// Σ time-to-recovery (ms) over `recoveries` healing events
+    pub recovery_ms_sum: f64,
+    /// healing events (scrub repairs + recovered retries)
+    pub recoveries: u64,
 }
 
 impl ServingMetrics {
@@ -158,6 +177,25 @@ impl ServingMetrics {
         }
         self.power_mw_ms += other.power_mw_ms;
         self.modeled_ms += other.modeled_ms;
+        self.faults_injected += other.faults_injected;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.failed_requests += other.failed_requests;
+        self.degraded_requests += other.degraded_requests;
+        self.swaps_rolled_back += other.swaps_rolled_back;
+        self.scrub_repairs += other.scrub_repairs;
+        self.recovery_ms_sum += other.recovery_ms_sum;
+        self.recoveries += other.recoveries;
+    }
+
+    /// Mean time-to-recovery (ms) across healing events: how long an
+    /// injected fault stayed live before a scrub/retry repaired it.
+    pub fn mean_time_to_recovery_ms(&self) -> f64 {
+        if self.recoveries == 0 {
+            0.0
+        } else {
+            self.recovery_ms_sum / self.recoveries as f64
+        }
     }
 
     pub fn throughput_fps(&self, wall: Duration) -> f64 {
@@ -264,6 +302,35 @@ mod tests {
         assert!((a.mean_power_mw() - want).abs() < 1e-9, "{}", a.mean_power_mw());
         // empty metrics report zero power, not NaN
         assert_eq!(ServingMetrics::default().mean_power_mw(), 0.0);
+    }
+
+    #[test]
+    fn fault_telemetry_merges_as_sums() {
+        let mut a = ServingMetrics::default();
+        a.faults_injected = 3;
+        a.retries = 2;
+        a.scrub_repairs = 1;
+        a.recovery_ms_sum = 3.0;
+        a.recoveries = 1;
+        let mut b = ServingMetrics::default();
+        b.faults_injected = 1;
+        b.timeouts = 1;
+        b.failed_requests = 1;
+        b.degraded_requests = 4;
+        b.swaps_rolled_back = 1;
+        b.recovery_ms_sum = 1.0;
+        b.recoveries = 1;
+        a.merge(&b);
+        assert_eq!(a.faults_injected, 4);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.timeouts, 1);
+        assert_eq!(a.failed_requests, 1);
+        assert_eq!(a.degraded_requests, 4);
+        assert_eq!(a.swaps_rolled_back, 1);
+        assert_eq!(a.scrub_repairs, 1);
+        assert!((a.mean_time_to_recovery_ms() - 2.0).abs() < 1e-12);
+        // empty metrics report zero MTTR, not NaN
+        assert_eq!(ServingMetrics::default().mean_time_to_recovery_ms(), 0.0);
     }
 
     #[test]

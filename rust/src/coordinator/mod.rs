@@ -32,6 +32,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::backend::{BackendSpec, InferenceBackend as _};
+use crate::fault::{FaultDirective, FaultPlan, FaultRecord, HealthBoard, Injector, RetryPolicy};
 use crate::morph::governor::{Budget, Decision, Governor};
 use crate::morph::{schedule, PathRegistry};
 use crate::power::PathEnergy;
@@ -48,6 +49,49 @@ pub struct Request {
     /// governor, so decisions are deterministic for any worker count. A
     /// batch never mixes pins — the old path drains before a swap.
     pub pinned_path: Option<String>,
+    /// injected fault stamp: the executing shard honors it mechanically
+    /// (stall, or fail while `attempt < fail_attempts`)
+    pub fault: Option<FaultDirective>,
+    /// execution attempts already consumed (bumped on every requeue)
+    pub attempt: u32,
+    /// absolute per-request deadline: expired requests get a terminal
+    /// `Failed` response instead of executing
+    pub deadline: Option<Instant>,
+    /// submit-side verdict that this frame runs on a corrupted/misrouted
+    /// path (SEU window): the response reports `Degraded`
+    pub degraded: bool,
+}
+
+impl Request {
+    /// Must this request run in a batch of its own? Stall-injected
+    /// stragglers are isolated so the penalty never lands on innocent
+    /// batch neighbours.
+    pub fn isolating(&self) -> bool {
+        self.fault.map(|f| f.isolating()).unwrap_or(false)
+    }
+}
+
+/// Terminal disposition of a request. Every accepted request gets
+/// exactly one `Response`, and this field says which kind: the zero-loss
+/// contract the fault tests assert (`ok + degraded + failed == submitted`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseStatus {
+    /// healthy execution on the intended path
+    Ok,
+    /// answered, but on a corrupted/misrouted path (SEU window)
+    Degraded,
+    /// terminally failed: retries exhausted or deadline expired
+    Failed { reason: String },
+}
+
+impl ResponseStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ResponseStatus::Ok)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, ResponseStatus::Failed { .. })
+    }
 }
 
 /// The reply: logits + serving telemetry.
@@ -61,6 +105,10 @@ pub struct Response {
     pub shard: usize,
     pub queue: Duration,
     pub exec: Duration,
+    /// terminal disposition (`Failed` responses carry empty logits)
+    pub status: ResponseStatus,
+    /// execution attempts consumed (1 = first try succeeded)
+    pub attempts: u32,
 }
 
 /// Coordinator configuration.
@@ -80,6 +128,17 @@ pub struct ServeConfig {
     /// observe the governor, so the decision sequence is independent of
     /// worker count. Default `false` = classic batch-paced observation.
     pub external_pacing: bool,
+    /// per-request wall-clock deadline: a request still queued past it
+    /// gets a terminal `Failed` response instead of executing. `None`
+    /// (default) = no deadline.
+    pub request_deadline: Option<Duration>,
+    /// bounded-retry policy for transient execute failures; retry
+    /// instants in the canonical fault log are a pure function of
+    /// `(request id, attempt)` under this policy's seed
+    pub retry: RetryPolicy,
+    /// frames between CRC scrub passes over the gate state during fault
+    /// trace replays
+    pub scrub_period_frames: usize,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +149,9 @@ impl Default for ServeConfig {
             workers: 1,
             accuracy_floor: 0.0,
             external_pacing: false,
+            request_deadline: None,
+            retry: RetryPolicy::default(),
+            scrub_period_frames: 16,
         }
     }
 }
@@ -145,13 +207,23 @@ struct Shared {
     /// workers never observe the governor (submit-side pacing); the
     /// precondition `replay_power_trace` validates
     external_pacing: bool,
+    /// per-shard Healthy/Degraded/Quarantined states (live-mode routing
+    /// and quarantine only — never consulted on the deterministic
+    /// replay-log path)
+    health: HealthBoard,
+    /// bounded-retry policy for transient execute failures
+    retry: RetryPolicy,
+    /// per-request deadline applied at submit time
+    request_deadline: Option<Duration>,
+    /// frames between CRC scrub passes during fault trace replays
+    scrub_period_frames: usize,
     /// sleep/wake for idle workers
     wake: Mutex<()>,
     wake_cv: Condvar,
 }
 
 impl Shared {
-    fn new(shards: usize, external_pacing: bool) -> Shared {
+    fn new(shards: usize, cfg: &ServeConfig) -> Shared {
         Shared {
             queues: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
             open: AtomicBool::new(true),
@@ -160,7 +232,11 @@ impl Shared {
             governor: OnceLock::new(),
             energy_rows: OnceLock::new(),
             frame_len: OnceLock::new(),
-            external_pacing,
+            external_pacing: cfg.external_pacing,
+            health: HealthBoard::new(shards),
+            retry: cfg.retry,
+            request_deadline: cfg.request_deadline,
+            scrub_period_frames: cfg.scrub_period_frames.max(1),
             wake: Mutex::new(()),
             wake_cv: Condvar::new(),
         }
@@ -197,7 +273,7 @@ impl Coordinator {
     /// from `spec`. Fails if any shard's backend fails to initialize.
     pub fn start(cfg: ServeConfig, spec: BackendSpec) -> anyhow::Result<Coordinator> {
         let n = cfg.workers.max(1);
-        let shared = Arc::new(Shared::new(n, cfg.external_pacing));
+        let shared = Arc::new(Shared::new(n, &cfg));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::with_capacity(n);
         for shard_id in 0..n {
@@ -239,7 +315,7 @@ impl Coordinator {
     /// [`CoordinatorError::Closed`] once the coordinator has shut down
     /// (previously this silently dropped the request).
     pub fn submit(&self, data: Vec<f32>) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
-        self.submit_inner(data, None)
+        self.submit_inner(data, None, None, false)
     }
 
     /// Submit one frame pinned to a morph path chosen by the caller (the
@@ -250,13 +326,26 @@ impl Coordinator {
         data: Vec<f32>,
         path: String,
     ) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
-        self.submit_inner(data, Some(path))
+        self.submit_inner(data, Some(path), None, false)
+    }
+
+    /// Submit one frame carrying an injected fault stamp (live-mode
+    /// fault testing: the executing shard honors the directive exactly
+    /// as replay-injected ones).
+    pub fn submit_with_fault(
+        &self,
+        data: Vec<f32>,
+        fault: FaultDirective,
+    ) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
+        self.submit_inner(data, None, Some(fault), false)
     }
 
     fn submit_inner(
         &self,
         data: Vec<f32>,
         pinned_path: Option<String>,
+        fault: Option<FaultDirective>,
+        degraded: bool,
     ) -> Result<mpsc::Receiver<Response>, CoordinatorError> {
         if !self.shared.open.load(Ordering::Acquire) {
             return Err(CoordinatorError::Closed);
@@ -279,6 +368,10 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply,
             pinned_path,
+            fault,
+            attempt: 0,
+            deadline: self.shared.request_deadline.map(|d| Instant::now() + d),
+            degraded,
         });
         self.shared.notify_one();
         Ok(rx)
@@ -332,6 +425,23 @@ impl Coordinator {
         events: &[trace::BudgetEvent],
         tcfg: &TraceConfig,
     ) -> Result<TraceOutcome, CoordinatorError> {
+        self.replay_trace(events, tcfg, None)
+    }
+
+    /// [`replay_power_trace`](Coordinator::replay_power_trace) with an
+    /// optional deterministic fault plan (`serve --fault-trace`). The
+    /// injector runs entirely on the submit side: it scrubs/corrupts the
+    /// gate state, stamps per-request fault directives, arms swap
+    /// failures (rollback + cooldown on strike) and feeds virtual-fleet
+    /// capacity to the governor — so the canonical fault log, like the
+    /// decision log, is byte-identical for any worker count and rerun.
+    /// `faults: None` is bit-identical to the pre-fault replay.
+    pub fn replay_trace(
+        &mut self,
+        events: &[trace::BudgetEvent],
+        tcfg: &TraceConfig,
+        faults: Option<&FaultPlan>,
+    ) -> Result<TraceOutcome, CoordinatorError> {
         if !self.shared.open.load(Ordering::Acquire) {
             return Err(CoordinatorError::Closed);
         }
@@ -346,6 +456,20 @@ impl Coordinator {
         let full_frame_ms = energy_rows.iter().map(|e| e.frame_ms).fold(0.0, f64::max);
         let rate_hz = tcfg.rate_hz.max(1e-9);
 
+        let injection = faults.is_some();
+        let mut injector = faults.map(|plan| {
+            let gov = governor.lock().unwrap();
+            Injector::new(
+                plan,
+                gov.registry().paths().len(),
+                gov.current_index(),
+                rate_hz,
+                self.shared.scrub_period_frames,
+                self.shared.retry,
+            )
+        });
+        let mut rollbacks = 0u64;
+
         let mut rng = Rng::new(tcfg.seed);
         let mut receivers = Vec::with_capacity(tcfg.frames);
         let mut switches: Vec<SwitchRecord> = Vec::new();
@@ -356,24 +480,77 @@ impl Coordinator {
         for i in 0..tcfg.frames {
             let t = i as f64 / rate_hz;
             let budget = trace::budget_at(events, t);
-            let path = {
+            // the id submit_inner will assign this frame's request —
+            // the replay thread is the only submitter
+            let id = self.next_id.load(Ordering::Relaxed) + 1;
+            let directive = match injector.as_mut() {
+                Some(inj) => {
+                    inj.begin_frame(i);
+                    let d = inj.directive_for(i, id);
+                    // graceful degradation: the governor plans against
+                    // the healthy fraction of the (virtual) fleet
+                    governor.lock().unwrap().set_capacity(inj.capacity(i));
+                    d
+                }
+                None => None,
+            };
+            let (path, degraded) = {
                 let mut gov = governor.lock().unwrap();
                 let from_idx = gov.current_index();
                 match gov.observe(&budget) {
                     Decision::Switch { to, stall_frames } => {
-                        let timeline = schedule::swap_timeline(stall_frames, full_frame_ms);
-                        switches.push(SwitchRecord {
-                            frame: i,
-                            budget_mw: budget.power_mw,
-                            from: gov.registry().paths()[from_idx].name.clone(),
-                            to,
+                        let fail = injector
+                            .as_mut()
+                            .map(|inj| inj.swap_should_fail(i))
+                            .unwrap_or(false);
+                        let attempt = schedule::attempt_swap(
                             stall_frames,
-                            swap_ms: timeline.swap_ms,
-                        });
+                            full_frame_ms,
+                            fail,
+                            schedule::ROLLBACK_COOLDOWN_FRAMES,
+                        );
+                        if attempt.committed {
+                            switches.push(SwitchRecord {
+                                frame: i,
+                                budget_mw: budget.power_mw,
+                                from: gov.registry().paths()[from_idx].name.clone(),
+                                to,
+                                stall_frames,
+                                swap_ms: attempt.timeline.swap_ms,
+                            });
+                            if let Some(inj) = injector.as_mut() {
+                                // a committed DPR write refreshes the
+                                // scrubbed gate state
+                                inj.on_commit(gov.current_index());
+                            }
+                        } else {
+                            // the DPR window opened but never committed:
+                            // the outgoing path is still loaded — revert
+                            // free of stall, hold through a cooldown
+                            let from_name = gov.registry().paths()[from_idx].name.clone();
+                            gov.rollback(from_idx);
+                            gov.begin_cooldown(attempt.cooldown_frames);
+                            rollbacks += 1;
+                            if let Some(inj) = injector.as_mut() {
+                                inj.record_rollback(
+                                    i,
+                                    from_name,
+                                    to,
+                                    attempt.timeline.swap_ms,
+                                    attempt.cooldown_frames,
+                                );
+                            }
+                        }
                     }
                     Decision::Hold => {}
                 }
-                gov.current().to_string()
+                let chosen = gov.current_index();
+                // SEU window: corrupted gate state misroutes the frame
+                let (actual, degraded) = match injector.as_mut() {
+                    Some(inj) => inj.route(i, chosen),
+                    None => (chosen, false),
+                };
+                (gov.registry().paths()[actual].name.clone(), degraded)
             };
             if let Some(e) = energy_rows.iter().find(|e| e.name == path) {
                 let seg = trace::segment_at(events, t);
@@ -383,14 +560,21 @@ impl Coordinator {
             }
             *frames_by_path.entry(path.clone()).or_insert(0) += 1;
             let data: Vec<f32> = (0..frame_len).map(|_| rng.f64() as f32).collect();
-            receivers.push(self.submit_pinned(data, path)?);
+            receivers.push(self.submit_inner(data, Some(path), directive, degraded)?);
         }
 
-        // drain every response: reconfigurations must not lose requests
+        // drain every response: reconfigurations and injected faults
+        // must not lose requests — every submission resolves terminally
         let mut answered = 0usize;
+        let (mut ok, mut degraded, mut failed) = (0usize, 0usize, 0usize);
         for rx in receivers {
-            if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+            if let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
                 answered += 1;
+                match resp.status {
+                    ResponseStatus::Ok => ok += 1,
+                    ResponseStatus::Degraded => degraded += 1,
+                    ResponseStatus::Failed { .. } => failed += 1,
+                }
             }
         }
         let mut metrics = self.shutdown();
@@ -398,6 +582,18 @@ impl Coordinator {
         // never observed, so their counters carry none of them)
         metrics.morph_switches += switches.len() as u64;
         metrics.stall_frames += switches.iter().map(|s| s.stall_frames as u64).sum::<u64>();
+        metrics.swaps_rolled_back += rollbacks;
+        let fault_records = match injector {
+            Some(inj) => {
+                let stats = inj.stats();
+                metrics.faults_injected += stats.faults_injected;
+                metrics.scrub_repairs += stats.scrub_repairs;
+                metrics.recovery_ms_sum += stats.recovery_ms_sum;
+                metrics.recoveries += stats.recoveries;
+                inj.into_records()
+            }
+            None => Vec::new(),
+        };
 
         let segments = events
             .iter()
@@ -420,6 +616,12 @@ impl Coordinator {
             energy_mj,
             answered,
             metrics,
+            injection,
+            faults: fault_records,
+            submitted: tcfg.frames,
+            ok,
+            degraded,
+            failed,
         })
     }
 
@@ -511,6 +713,18 @@ pub struct TraceOutcome {
     /// responses actually received (must equal `TraceConfig::frames`)
     pub answered: usize,
     pub metrics: ServingMetrics,
+    /// was a fault plan active? (gates the fault lines in the summary so
+    /// fault-free replays render byte-identically to the pre-fault code)
+    pub injection: bool,
+    /// canonical submit-side fault records, in frame order
+    pub faults: Vec<FaultRecord>,
+    /// frames submitted (`TraceConfig::frames`)
+    pub submitted: usize,
+    /// terminal dispositions: `ok + degraded + failed == answered`, and
+    /// the zero-loss contract demands `answered == submitted`
+    pub ok: usize,
+    pub degraded: usize,
+    pub failed: usize,
 }
 
 impl TraceOutcome {
@@ -528,6 +742,17 @@ impl TraceOutcome {
                 "[frame {:05}] budget {budget}: switch {} -> {} (stall {}, swap {:.3} ms)",
                 r.frame, r.from, r.to, r.stall_frames, r.swap_ms
             );
+        }
+        s
+    }
+
+    /// Canonical fault-log text — like the decision log, a pure function
+    /// of (trace, fault plan, seeds): byte-identical across worker
+    /// counts and reruns (test-enforced), greppable in CI.
+    pub fn fault_log(&self) -> String {
+        let mut s = String::new();
+        for r in &self.faults {
+            let _ = writeln!(s, "{r}");
         }
         s
     }
@@ -562,6 +787,26 @@ impl TraceOutcome {
             self.metrics.stall_frames,
             self.answered
         );
+        if self.injection {
+            let m = &self.metrics;
+            let _ = writeln!(
+                s,
+                "faults injected {} | retries {} | timeouts {} | swaps rolled back {} | \
+                 scrub repairs {} | mttr {:.3} ms",
+                m.faults_injected,
+                m.retries,
+                m.timeouts,
+                m.swaps_rolled_back,
+                m.scrub_repairs,
+                m.mean_time_to_recovery_ms()
+            );
+            let lost = self.submitted.saturating_sub(self.answered);
+            let _ = writeln!(
+                s,
+                "terminal: {} ok / {} degraded / {} failed of {} submitted ({lost} lost)",
+                self.ok, self.degraded, self.failed, self.submitted
+            );
+        }
         s
     }
 
@@ -610,32 +855,84 @@ fn observe_governor(
 }
 
 /// Pop a ready batch: own queue first, then steal from neighbours.
+/// `force` (shutdown drain) flushes partial batches without waiting out
+/// the batch deadline — pinned runs still split at path boundaries, so
+/// a shutdown landing mid drain→swap still completes the pinned-run
+/// timeline instead of stranding the incoming path's requests.
 fn take_batch(
     shared: &Shared,
     own: usize,
     policy: &BatchPolicy,
-) -> Option<(usize, Vec<Request>)> {
+    force: bool,
+) -> Option<Vec<Request>> {
     let n = shared.queues.len();
     let now = Instant::now();
     for k in 0..n {
         let qi = (own + k) % n;
         let mut q = shared.queues[qi].lock().unwrap();
-        let oldest = q.front().map(|r| r.enqueued);
-        if let Some(size) = policy.decide(q.len(), oldest, now) {
+        let decided = if force {
+            if q.is_empty() {
+                None
+            } else {
+                Some(policy.max_size())
+            }
+        } else {
+            policy.decide(q.len(), q.front().map(|r| r.enqueued), now)
+        };
+        if let Some(size) = decided {
             // a batch never straddles a pinned-path boundary: the old
             // path drains before the swap (drain→swap→resume)
             let take = batcher::pop_pinned_run(&mut q, size.min(q.len()));
             drop(q);
             if !take.is_empty() {
                 shared.pending.fetch_sub(take.len(), Ordering::AcqRel);
-                // a run cut short at a pin boundary re-fits to the
-                // smallest covering menu size instead of padding all the
-                // way to the pre-split decision
-                return Some((policy.cover(take.len()), take));
+                return Some(take);
             }
         }
     }
     None
+}
+
+/// Terminal `Failed` response: empty logits, the reason in the status.
+/// Part of the zero-loss contract — a request that cannot execute is
+/// answered explicitly, never silently dropped.
+fn send_failed(r: &Request, shard: usize, reason: String, attempts: u32) {
+    let _ = r.reply.send(Response {
+        id: r.id,
+        logits: Vec::new(),
+        class: 0,
+        path: r.pinned_path.clone().unwrap_or_default(),
+        shard,
+        queue: r.enqueued.elapsed(),
+        exec: Duration::ZERO,
+        status: ResponseStatus::Failed { reason },
+        attempts,
+    });
+}
+
+/// Bounded-retry ladder: requeue the request (attempt bumped) on the
+/// next healthy shard, or answer terminally once retries are exhausted.
+/// Either way the submitter's receiver resolves.
+fn retry_or_fail(
+    shared: &Shared,
+    shard_id: usize,
+    metrics: &mut ServingMetrics,
+    mut r: Request,
+    reason: &str,
+) {
+    if r.attempt < shared.retry.max_retries {
+        r.attempt += 1;
+        metrics.retries += 1;
+        // resubmission prefers the next healthy shard so a sick shard
+        // does not immediately re-execute its own casualty
+        let target = shared.health.next_healthy(shard_id + 1);
+        shared.pending.fetch_add(1, Ordering::AcqRel);
+        shared.queues[target].lock().unwrap().push_back(r);
+        shared.notify_one();
+    } else {
+        metrics.failed_requests += 1;
+        send_failed(&r, shard_id, reason.to_string(), r.attempt + 1);
+    }
 }
 
 fn worker_loop(
@@ -686,7 +983,7 @@ fn worker_loop(
     loop {
         let open = shared.open.load(Ordering::Acquire);
 
-        let Some((size, take)) = take_batch(&shared, shard_id, &policy) else {
+        let Some(take) = take_batch(&shared, shard_id, &policy, !open) else {
             if !open && shared.pending.load(Ordering::Acquire) == 0 {
                 break;
             }
@@ -702,9 +999,32 @@ fn worker_loop(
                 let _ = observe_governor(governor, &shared, &mut metrics);
                 last_idle_observe = Instant::now();
             }
+            // quarantined shard? after the dwell, a cheap backend
+            // self-check releases it back to Degraded duty
+            if shared.health.probe_due(shard_id) && backend.probe().is_ok() {
+                shared.health.release(shard_id);
+            }
             shared.wait_brief(cfg.max_wait / 2);
             continue;
         };
+
+        // expired deadlines never execute: answer them terminally first
+        let now = Instant::now();
+        let (expired, take): (Vec<Request>, Vec<Request>) = take
+            .into_iter()
+            .partition(|r| r.deadline.map(|d| now >= d).unwrap_or(false));
+        for r in expired {
+            metrics.timeouts += 1;
+            metrics.failed_requests += 1;
+            send_failed(&r, shard_id, "deadline exceeded".into(), r.attempt);
+        }
+        if take.is_empty() {
+            continue;
+        }
+        // a run cut short at a pin boundary (or by expiry) re-fits to
+        // the smallest covering menu size instead of padding all the
+        // way to the pre-split decision
+        let size = policy.cover(take.len());
 
         // morph decision between batches (never mid-batch), paced by
         // batch execution so `patience` keeps its meaning regardless of
@@ -730,13 +1050,52 @@ fn worker_loop(
             input.extend_from_within(start..);
         }
 
+        // injected straggler stall: burn the delay before executing (the
+        // batcher isolated it in a batch of its own, so no innocent
+        // neighbour pays the penalty)
+        let stall_ms = take
+            .iter()
+            .filter_map(|r| r.fault.map(|f| f.stall_ms))
+            .fold(0.0f64, f64::max);
+        if stall_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(stall_ms / 1000.0));
+        }
+
+        let batch_len = take.len();
+        let oldest = take[0].enqueued;
         let t0 = Instant::now();
         match backend.execute(&path, size, &input) {
             Ok(logits) => {
                 let exec = t0.elapsed();
                 let classes = backend.argmax(&logits);
-                for (i, r) in take.iter().enumerate() {
+                let mut delivered = 0usize;
+                for (i, r) in take.into_iter().enumerate() {
+                    // transient-fault stamp: this request fails while its
+                    // attempt counter is below the injected threshold —
+                    // the retry ladder resubmits it to a healthy shard
+                    let inject_fail =
+                        r.fault.map(|f| r.attempt < f.fail_attempts).unwrap_or(false);
+                    if inject_fail {
+                        // (the submit-side injector owns the
+                        // faults_injected counter — the worker only
+                        // executes the consequence)
+                        shared.health.record_failure(shard_id);
+                        retry_or_fail(
+                            &shared,
+                            shard_id,
+                            &mut metrics,
+                            r,
+                            "injected transient backend error",
+                        );
+                        continue;
+                    }
                     let queue_d = t0.duration_since(r.enqueued);
+                    let status = if r.degraded {
+                        metrics.degraded_requests += 1;
+                        ResponseStatus::Degraded
+                    } else {
+                        ResponseStatus::Ok
+                    };
                     let _ = r.reply.send(Response {
                         id: r.id,
                         logits: logits[i * nc..(i + 1) * nc].to_vec(),
@@ -745,21 +1104,33 @@ fn worker_loop(
                         shard: shard_id,
                         queue: queue_d,
                         exec,
+                        status,
+                        attempts: r.attempt + 1,
                     });
+                    delivered += 1;
                 }
-                let queue_d = t0.duration_since(take[0].enqueued);
-                metrics.record_batch(&path, take.len(), queue_d, exec);
+                if delivered > 0 {
+                    shared.health.record_success(shard_id);
+                }
+                let queue_d = t0.duration_since(oldest);
+                metrics.record_batch(&path, batch_len, queue_d, exec);
                 // modeled FPGA energy for these frames on the active path:
                 // E = frames x P_path x T_frame (from the backend's
                 // activity-derived energy rows)
                 if let Some(e) = energy_rows.iter().find(|e| e.name == path) {
-                    metrics.record_energy(e, take.len());
+                    metrics.record_energy(e, batch_len);
                 }
             }
             Err(e) => {
-                // failure injection path: report and drop (callers see a
-                // closed channel); the shard keeps serving
-                eprintln!("[coordinator:{shard_id}] execute failed on {path}: {e}");
+                // a failed execute no longer drops requests on the floor
+                // (callers used to block on a dead channel forever):
+                // every request is retried on a healthy shard or
+                // answered terminally
+                shared.health.record_failure(shard_id);
+                let reason = format!("execute failed on {path}: {e}");
+                for r in take {
+                    retry_or_fail(&shared, shard_id, &mut metrics, r, &reason);
+                }
             }
         }
     }

@@ -184,16 +184,7 @@ pub fn parse_spec(
     default_cap_mw: f64,
 ) -> Result<Vec<BudgetEvent>, String> {
     let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
-    let mut kv = std::collections::BTreeMap::new();
-    for pair in rest.split(',').filter(|p| !p.is_empty()) {
-        let (k, v) = pair
-            .split_once('=')
-            .ok_or_else(|| format!("power-trace '{spec}': expected key=value, got '{pair}'"))?;
-        let num: f64 = v
-            .parse()
-            .map_err(|_| format!("power-trace '{spec}': non-numeric value '{v}' for '{k}'"))?;
-        kv.insert(k.to_string(), num);
-    }
+    let kv = parse_kv_pairs(&format!("power-trace '{spec}'"), rest)?;
     let known: &[&str] = match name {
         "step" => &["cap"],
         "ramp" => &["from", "to", "steps"],
@@ -233,6 +224,25 @@ pub fn parse_spec(
         ),
         _ => unreachable!("name validated above"),
     })
+}
+
+/// Parse a comma-separated `key=value[,key=value...]` list into a map —
+/// the shared kernel of the power-trace and fault-trace grammars.
+/// `what` labels errors (e.g. `power-trace 'step:x=1'`).
+pub(crate) fn parse_kv_pairs(
+    what: &str,
+    rest: &str,
+) -> Result<std::collections::BTreeMap<String, f64>, String> {
+    let mut kv = std::collections::BTreeMap::new();
+    for pair in rest.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("{what}: expected key=value, got '{pair}'"))?;
+        let num: f64 =
+            v.parse().map_err(|_| format!("{what}: non-numeric value '{v}' for '{k}'"))?;
+        kv.insert(k.to_string(), num);
+    }
+    Ok(kv)
 }
 
 /// Latency-SLA trace: a deadline tightens when the system enters a

@@ -1,0 +1,110 @@
+//! Deterministic bounded-retry backoff.
+//!
+//! Retry instants must be a pure function of `(request id, attempt)` so
+//! the canonical fault log — and therefore CI's byte-diff across
+//! `--workers 1` vs `--workers 4` — never depends on which worker
+//! performs the retry or when it gets scheduled in host time. Jitter
+//! comes from a per-(id, attempt) seeded [`Rng`] stream, not a shared
+//! mutable one.
+
+use crate::util::rng::Rng;
+
+/// Exponential backoff with seeded, per-request deterministic jitter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Max retries after the first attempt (attempts = max_retries + 1).
+    pub max_retries: u32,
+    /// First backoff delay, on the virtual clock, in milliseconds.
+    pub base_ms: f64,
+    /// Multiplier per further retry.
+    pub factor: f64,
+    /// Symmetric jitter fraction in `[0, 1)`: delay = nominal * (1 ± j).
+    pub jitter_pct: f64,
+    /// Seed folded into every per-request jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, base_ms: 0.5, factor: 2.0, jitter_pct: 0.25, seed: 42 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff delay before retry number `attempt` (0-based: the delay
+    /// between the first failure and the first retry is `attempt == 0`).
+    ///
+    /// Pure in `(self, request_id, attempt)` — same inputs, same delay,
+    /// on any worker, at any worker count.
+    pub fn backoff_ms(&self, request_id: u64, attempt: u32) -> f64 {
+        let nominal = self.base_ms * self.factor.powi(attempt as i32);
+        if self.jitter_pct == 0.0 {
+            return nominal;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        nominal * (1.0 + self.jitter_pct * (2.0 * rng.f64() - 1.0))
+    }
+
+    /// Cumulative retry instants (ms after the original failure) for the
+    /// first `retries` retries of `request_id`.
+    pub fn instants_ms(&self, request_id: u64, retries: u32) -> Vec<f64> {
+        let mut t = 0.0;
+        (0..retries)
+            .map(|a| {
+                t += self.backoff_ms(request_id, a);
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_pure_per_id_and_attempt() {
+        let p = RetryPolicy::default();
+        for id in [1u64, 7, 900] {
+            for attempt in 0..3 {
+                assert_eq!(p.backoff_ms(id, attempt), p.backoff_ms(id, attempt));
+            }
+        }
+        // distinct requests jitter independently
+        assert_ne!(p.backoff_ms(1, 0), p.backoff_ms(2, 0));
+    }
+
+    #[test]
+    fn instants_are_strictly_increasing_and_bounded() {
+        let p = RetryPolicy::default();
+        let ts = p.instants_ms(11, 3);
+        assert_eq!(ts.len(), 3);
+        let mut prev = 0.0;
+        for (a, &t) in ts.iter().enumerate() {
+            assert!(t > prev, "instant {a} not increasing: {ts:?}");
+            prev = t;
+        }
+        // each delay within nominal * (1 ± jitter)
+        let d0 = ts[0];
+        assert!(d0 >= p.base_ms * (1.0 - p.jitter_pct) && d0 <= p.base_ms * (1.0 + p.jitter_pct));
+    }
+
+    #[test]
+    fn zero_jitter_is_exactly_exponential() {
+        let p = RetryPolicy { jitter_pct: 0.0, ..RetryPolicy::default() };
+        assert_eq!(p.backoff_ms(5, 0), 0.5);
+        assert_eq!(p.backoff_ms(5, 1), 1.0);
+        assert_eq!(p.backoff_ms(5, 2), 2.0);
+    }
+
+    #[test]
+    fn seed_changes_jitter() {
+        let a = RetryPolicy::default();
+        let b = RetryPolicy { seed: 43, ..a };
+        assert_ne!(a.backoff_ms(3, 0), b.backoff_ms(3, 0));
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-shard health tracking for the live (host-clock) serving path.
+//!
+//! Workers report execute outcomes; the board classifies each shard as
+//! Healthy → Degraded → Quarantined on consecutive failures and routes
+//! retries/steals away from sick shards. Quarantine is left after a
+//! cool-off once a backend probe succeeds. The board deliberately plays
+//! no part in the virtual-clock replay path — replay determinism comes
+//! from the submit-side injector, and the board's host-time state must
+//! never leak into logs that CI byte-diffs.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Shard health ladder. Ordering is by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Healthy,
+    Degraded,
+    Quarantined,
+}
+
+impl std::fmt::Display for HealthState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HealthState::Healthy => write!(f, "healthy"),
+            HealthState::Degraded => write!(f, "degraded"),
+            HealthState::Quarantined => write!(f, "quarantined"),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ShardHealth {
+    state: HealthState,
+    fail_streak: u32,
+    ok_streak: u32,
+    quarantined_until: Option<Instant>,
+}
+
+impl ShardHealth {
+    fn new() -> Self {
+        ShardHealth {
+            state: HealthState::Healthy,
+            fail_streak: 0,
+            ok_streak: 0,
+            quarantined_until: None,
+        }
+    }
+}
+
+/// Consecutive failures that demote Healthy → Degraded.
+const DEGRADE_AFTER: u32 = 2;
+/// Consecutive failures that demote Degraded → Quarantined.
+const QUARANTINE_AFTER: u32 = 4;
+/// Consecutive successes that promote Degraded → Healthy.
+const RECOVER_AFTER: u32 = 3;
+/// Minimum quarantine dwell before a probe may release the shard.
+const QUARANTINE_DWELL: Duration = Duration::from_millis(50);
+
+/// Shared health board, one slot per shard.
+#[derive(Debug)]
+pub struct HealthBoard {
+    shards: Mutex<Vec<ShardHealth>>,
+}
+
+impl HealthBoard {
+    pub fn new(shards: usize) -> Self {
+        HealthBoard { shards: Mutex::new((0..shards).map(|_| ShardHealth::new()).collect()) }
+    }
+
+    pub fn state(&self, shard: usize) -> HealthState {
+        self.shards.lock().unwrap()[shard].state
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.shards
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.state != HealthState::Quarantined)
+            .count()
+    }
+
+    /// Record a failed execute on `shard`. Never quarantines the last
+    /// non-quarantined shard — someone must keep answering requests.
+    pub fn record_failure(&self, shard: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        let alive =
+            shards.iter().filter(|s| s.state != HealthState::Quarantined).count();
+        let s = &mut shards[shard];
+        s.ok_streak = 0;
+        s.fail_streak += 1;
+        if s.fail_streak >= QUARANTINE_AFTER && alive > 1 {
+            s.state = HealthState::Quarantined;
+            s.quarantined_until = Some(Instant::now() + QUARANTINE_DWELL);
+        } else if s.fail_streak >= DEGRADE_AFTER && s.state == HealthState::Healthy {
+            s.state = HealthState::Degraded;
+        }
+    }
+
+    /// Record a successful execute on `shard`.
+    pub fn record_success(&self, shard: usize) {
+        let s = &mut self.shards.lock().unwrap()[shard];
+        s.fail_streak = 0;
+        s.ok_streak += 1;
+        if s.state == HealthState::Degraded && s.ok_streak >= RECOVER_AFTER {
+            s.state = HealthState::Healthy;
+        }
+    }
+
+    /// Has `shard` dwelled long enough in quarantine to be probed?
+    pub fn probe_due(&self, shard: usize) -> bool {
+        let shards = self.shards.lock().unwrap();
+        let s = &shards[shard];
+        s.state == HealthState::Quarantined
+            && s.quarantined_until.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// A successful probe releases the shard back to Degraded (it must
+    /// earn Healthy through real traffic).
+    pub fn release(&self, shard: usize) {
+        let s = &mut self.shards.lock().unwrap()[shard];
+        if s.state == HealthState::Quarantined {
+            s.state = HealthState::Degraded;
+            s.fail_streak = 0;
+            s.ok_streak = 0;
+            s.quarantined_until = None;
+        }
+    }
+
+    /// Next non-quarantined shard at or after `start` (wrapping); falls
+    /// back to `start` itself if everything is quarantined (can't happen
+    /// via `record_failure`, but steals race with releases).
+    pub fn next_healthy(&self, start: usize) -> usize {
+        let shards = self.shards.lock().unwrap();
+        let n = shards.len();
+        (0..n)
+            .map(|k| (start + k) % n)
+            .find(|&i| shards[i].state != HealthState::Quarantined)
+            .unwrap_or(start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failures_walk_the_ladder() {
+        let b = HealthBoard::new(2);
+        assert_eq!(b.state(0), HealthState::Healthy);
+        b.record_failure(0);
+        assert_eq!(b.state(0), HealthState::Healthy);
+        b.record_failure(0);
+        assert_eq!(b.state(0), HealthState::Degraded);
+        b.record_failure(0);
+        b.record_failure(0);
+        assert_eq!(b.state(0), HealthState::Quarantined);
+        assert_eq!(b.healthy_count(), 1);
+        assert_eq!(b.next_healthy(0), 1);
+    }
+
+    #[test]
+    fn last_shard_standing_is_never_quarantined() {
+        let b = HealthBoard::new(1);
+        for _ in 0..20 {
+            b.record_failure(0);
+        }
+        assert_ne!(b.state(0), HealthState::Quarantined);
+        assert_eq!(b.healthy_count(), 1);
+    }
+
+    #[test]
+    fn successes_recover_degraded() {
+        let b = HealthBoard::new(2);
+        b.record_failure(0);
+        b.record_failure(0);
+        assert_eq!(b.state(0), HealthState::Degraded);
+        for _ in 0..RECOVER_AFTER {
+            b.record_success(0);
+        }
+        assert_eq!(b.state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn release_returns_to_degraded_not_healthy() {
+        let b = HealthBoard::new(2);
+        for _ in 0..QUARANTINE_AFTER {
+            b.record_failure(1);
+        }
+        assert_eq!(b.state(1), HealthState::Quarantined);
+        b.release(1);
+        assert_eq!(b.state(1), HealthState::Degraded);
+    }
+}

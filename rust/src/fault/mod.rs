@@ -1,0 +1,765 @@
+//! Deterministic fault injection + self-healing for the NeuroMorph runtime.
+//!
+//! Real DPR deployments fail in four characteristic ways the paper's
+//! live-reconfiguration story must survive: transient backend inference
+//! errors, worker stalls/stragglers, DPR swap failures mid-window, and
+//! SEU bit-flips in configuration memory. This module injects all four
+//! *deterministically* on the virtual clock of
+//! [`replay_trace`](crate::coordinator::Coordinator::replay_trace):
+//!
+//! * a `--fault-trace` grammar ([`FaultPlan::parse_spec`]) mirroring the
+//!   power-trace grammar in [`crate::coordinator::trace`];
+//! * an [`Injector`] that expands the plan into per-frame occurrences and
+//!   drives scrubbing, SEU routing corruption, swap-failure arming and
+//!   a virtual-fleet health/capacity model;
+//! * pure-function retry backoff ([`backoff::RetryPolicy`]) so retry
+//!   instants depend only on `(request id, attempt)`;
+//! * a host-time health board ([`health::HealthBoard`]) for the live
+//!   (non-replay) serving path.
+//!
+//! **Determinism discipline:** every record in the canonical fault log is
+//! produced *submit-side* from the plan and the governor's decisions —
+//! never from worker threads — so the log is byte-identical across
+//! `--workers 1` vs `--workers 4` and across reruns with the same seed.
+//! Worker-side effects travel as per-request [`FaultDirective`] stamps
+//! whose outcome depends only on `(request, attempt)`.
+
+pub mod backoff;
+pub mod health;
+pub mod scrub;
+
+pub use backoff::RetryPolicy;
+pub use health::{HealthBoard, HealthState};
+pub use scrub::ScrubbedState;
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::trace::parse_kv_pairs;
+use crate::util::suggest;
+
+/// The four injectable fault classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Backend inference error on a request (retriable).
+    Transient,
+    /// Worker straggler: the executing shard stalls for `stall_ms`.
+    Stall,
+    /// DPR swap failure mid-`SwapTimeline` (forces rollback + cooldown).
+    SwapFail,
+    /// Single-event upset: one bit flips in the loaded gate state.
+    Seu,
+}
+
+impl FaultKind {
+    pub const NAMES: &'static [&'static str] = &["transient", "stall", "swapfail", "seu"];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Stall => "stall",
+            FaultKind::SwapFail => "swapfail",
+            FaultKind::Seu => "seu",
+        }
+    }
+}
+
+/// One parsed fault clause, resolved onto the frame clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// First frame the fault strikes.
+    pub frame: usize,
+    /// Number of occurrences (`swapfail`: number of armed failures).
+    pub count: usize,
+    /// Frames between occurrences.
+    pub every: usize,
+    /// `transient`: consecutive attempts that fail before success.
+    pub fails: u32,
+    /// `stall`: injected straggler latency in milliseconds.
+    pub stall_ms: f64,
+    /// `seu`: bit position to flip (None = derived from the plan seed).
+    pub bit: Option<usize>,
+}
+
+/// A parsed `--fault-trace` spec: what to inject, when, and the seed
+/// that fixes every derived quantity (backoff jitter, default SEU bits).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// An empty plan: the injector runs but never fires (the
+    /// "enabled-but-idle" overhead case benchmarked in bench_hotpath).
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { events: Vec::new(), seed }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The canonical fault-storm spec: all four kinds with defaults.
+    pub fn storm_spec() -> &'static str {
+        "seu;stall;swapfail;transient"
+    }
+
+    /// Parse a `serve --fault-trace` spec.
+    ///
+    /// Grammar: `;`-separated clauses, each
+    /// `<kind>[:key=value[,key=value...]]` with the kinds
+    /// `transient | stall | swapfail | seu`. Strike times are given as
+    /// `frame=N` or `at=SECONDS` (converted via `rate_hz`); a bare kind
+    /// name gets deterministic defaults placed relative to `frames` so
+    /// every built-in storm exercises the corresponding healing path.
+    /// Examples: `seu`, `seu:frame=80,bit=3`, `stall:at=0.03,ms=2,count=4`,
+    /// `transient:frame=60,count=4,every=2,fails=1`, `swapfail:after=0`.
+    pub fn parse_spec(
+        spec: &str,
+        frames: usize,
+        rate_hz: f64,
+        seed: u64,
+    ) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, rest) = clause.split_once(':').unwrap_or((clause, ""));
+            let kind = match name {
+                "transient" => FaultKind::Transient,
+                "stall" => FaultKind::Stall,
+                "swapfail" => FaultKind::SwapFail,
+                "seu" => FaultKind::Seu,
+                other => {
+                    let hint = suggest(other, FaultKind::NAMES)
+                        .map(|s| format!(" (did you mean '{s}'?)"))
+                        .unwrap_or_default();
+                    return Err(format!(
+                        "fault-trace: unknown fault kind '{other}'{hint} \
+                         (valid: transient|stall|swapfail|seu)"
+                    ));
+                }
+            };
+            let kv = parse_kv_pairs(&format!("fault-trace '{clause}'"), rest)?;
+            let known: &[&str] = match kind {
+                FaultKind::Transient => &["at", "frame", "count", "every", "fails"],
+                FaultKind::Stall => &["at", "frame", "count", "every", "ms"],
+                FaultKind::SwapFail => &["at", "frame", "after", "count"],
+                FaultKind::Seu => &["at", "frame", "count", "every", "bit"],
+            };
+            if let Some(bad) = kv.keys().find(|k| !known.contains(&k.as_str())) {
+                return Err(format!(
+                    "fault-trace '{name}': unknown key '{bad}' (valid: {})",
+                    known.join(", ")
+                ));
+            }
+            let get = |k: &str, d: f64| kv.get(k).copied().unwrap_or(d);
+            // strike frame: at= (seconds) wins, then frame=/after=, then
+            // a per-kind default spread across the run
+            let default_frame = match kind {
+                FaultKind::Transient => frames / 4,
+                FaultKind::Stall => frames / 2,
+                FaultKind::SwapFail => 0,
+                FaultKind::Seu => frames / 3,
+            };
+            let frame = if let Some(at) = kv.get("at") {
+                (at * rate_hz).round().max(0.0) as usize
+            } else if kind == FaultKind::SwapFail {
+                get("after", get("frame", default_frame as f64)).max(0.0) as usize
+            } else {
+                get("frame", default_frame as f64).max(0.0) as usize
+            };
+            let default_count = match kind {
+                FaultKind::Transient | FaultKind::Stall => 4.0,
+                FaultKind::SwapFail | FaultKind::Seu => 1.0,
+            };
+            events.push(FaultEvent {
+                kind,
+                frame,
+                count: get("count", default_count).max(1.0) as usize,
+                every: get("every", 1.0).max(1.0) as usize,
+                fails: get("fails", 1.0).max(0.0) as u32,
+                stall_ms: get("ms", 2.0).max(0.0),
+                bit: kv.get("bit").map(|b| b.max(0.0) as usize),
+            });
+        }
+        Ok(FaultPlan { events, seed })
+    }
+}
+
+/// Worker-side fault stamp carried on a request. The executing shard
+/// honors it mechanically; outcomes depend only on `(request, attempt)`,
+/// never on which worker runs it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultDirective {
+    /// Straggler latency the executing shard must simulate (ms).
+    pub stall_ms: f64,
+    /// Attempts `0..fail_attempts` of this request fail with a transient
+    /// backend error; attempt `fail_attempts` (if reached) succeeds.
+    pub fail_attempts: u32,
+}
+
+impl FaultDirective {
+    /// Stalled requests must not share a batch with innocent neighbors —
+    /// the batcher isolates them so the straggler penalty lands only on
+    /// the faulted request.
+    pub fn isolating(&self) -> bool {
+        self.stall_ms > 0.0
+    }
+}
+
+/// One entry of the canonical (submit-side, deterministic) fault log.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultRecord {
+    Seu { frame: usize, bit: usize, loaded: usize },
+    ScrubRepair { frame: usize, mttr_ms: f64 },
+    Transient { frame: usize, id: u64, fails: u32, retries_at_ms: Vec<f64>, recovered: bool },
+    Stall { frame: usize, id: u64, ms: f64, vshard: usize },
+    SwapRollback { frame: usize, from: String, to: String, swap_ms: f64, cooldown_frames: usize },
+}
+
+impl std::fmt::Display for FaultRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultRecord::Seu { frame, bit, loaded } => write!(
+                f,
+                "[frame {frame:05}] fault seu: bit {bit} flipped in gate state \
+                 (loaded path {loaded} -> corrupt)"
+            ),
+            FaultRecord::ScrubRepair { frame, mttr_ms } => write!(
+                f,
+                "[frame {frame:05}] scrub: crc mismatch repaired, mttr {mttr_ms:.3} ms"
+            ),
+            FaultRecord::Transient { frame, id, fails, retries_at_ms, recovered } => {
+                write!(f, "[frame {frame:05}] fault transient: request {id} fails {fails}x")?;
+                if retries_at_ms.is_empty() {
+                    write!(f, ", no retries")?;
+                } else {
+                    let at: Vec<String> =
+                        retries_at_ms.iter().map(|t| format!("+{t:.2}")).collect();
+                    write!(f, ", retries at {} ms", at.join("/"))?;
+                }
+                write!(f, " -> {}", if *recovered { "recovered" } else { "failed" })
+            }
+            FaultRecord::Stall { frame, id, ms, vshard } => write!(
+                f,
+                "[frame {frame:05}] fault stall: request {id} delayed {ms:.2} ms \
+                 (virtual shard {vshard} degraded)"
+            ),
+            FaultRecord::SwapRollback { frame, from, to, swap_ms, cooldown_frames } => write!(
+                f,
+                "[frame {frame:05}] fault swapfail: {from} -> {to} failed mid-window \
+                 ({swap_ms:.3} ms wasted), rolled back to {from}, \
+                 cooldown {cooldown_frames} frames"
+            ),
+        }
+    }
+}
+
+/// Render the canonical fault log (one line per record, frame-prefixed
+/// like the governor decision log so CI can byte-diff both together).
+pub fn render_fault_log(records: &[FaultRecord]) -> String {
+    records.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// Virtual shards in the capacity model. Fixed (NOT `--workers`): the
+/// governor's graceful-degradation decisions must be identical at any
+/// real worker count, so capacity is modeled over a constant virtual
+/// fleet that faults degrade and time heals.
+pub const VIRTUAL_SHARDS: usize = 4;
+/// Frames a faulted virtual shard stays degraded before healing.
+const HEAL_FRAMES: usize = 24;
+
+/// Fault telemetry the injector accumulates submit-side.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InjectorStats {
+    pub faults_injected: u64,
+    pub scrub_repairs: u64,
+    pub misrouted_frames: u64,
+    pub recovery_ms_sum: f64,
+    pub recoveries: u64,
+}
+
+/// The deterministic fault engine driven by the replay loop, one call
+/// set per frame: [`begin_frame`](Injector::begin_frame) →
+/// [`directive_for`](Injector::directive_for) →
+/// [`capacity`](Injector::capacity) → (on a Switch decision)
+/// [`swap_should_fail`](Injector::swap_should_fail) /
+/// [`on_commit`](Injector::on_commit) → [`route`](Injector::route).
+#[derive(Debug)]
+pub struct Injector {
+    /// frame -> consecutive failing attempts for that frame's request
+    transient: BTreeMap<usize, u32>,
+    /// frame -> straggler milliseconds
+    stall: BTreeMap<usize, f64>,
+    /// frame -> bit to flip
+    seu: BTreeMap<usize, usize>,
+    /// (arm frame, failures remaining) — strikes the next swap attempts
+    swapfail: Vec<(usize, usize)>,
+    scrub_period: usize,
+    state: ScrubbedState,
+    n_paths: usize,
+    rate_hz: f64,
+    retry: RetryPolicy,
+    /// per virtual shard: degraded until this frame
+    vhealth: [usize; VIRTUAL_SHARDS],
+    corrupt_since: Option<usize>,
+    records: Vec<FaultRecord>,
+    stats: InjectorStats,
+}
+
+impl Injector {
+    pub fn new(
+        plan: &FaultPlan,
+        n_paths: usize,
+        initial_index: usize,
+        rate_hz: f64,
+        scrub_period: usize,
+        retry: RetryPolicy,
+    ) -> Injector {
+        let mut transient = BTreeMap::new();
+        let mut stall = BTreeMap::new();
+        let mut seu = BTreeMap::new();
+        let mut swapfail = Vec::new();
+        let state = ScrubbedState::new(scrub::encode_gate_state(initial_index));
+        let n_bits = state.bytes().len() * 8;
+        for ev in &plan.events {
+            match ev.kind {
+                FaultKind::Transient => {
+                    for k in 0..ev.count {
+                        transient.insert(ev.frame + k * ev.every, ev.fails);
+                    }
+                }
+                FaultKind::Stall => {
+                    for k in 0..ev.count {
+                        stall.insert(ev.frame + k * ev.every, ev.stall_ms);
+                    }
+                }
+                FaultKind::Seu => {
+                    for k in 0..ev.count {
+                        // default bit: seeded, spread across the image,
+                        // biased toward the index word so most SEUs are
+                        // routing-visible until scrubbed
+                        let bit = ev.bit.unwrap_or_else(|| {
+                            (plan.seed as usize).wrapping_mul(31).wrapping_add(13 * k) % n_bits
+                        });
+                        seu.insert(ev.frame + k * ev.every, bit % n_bits);
+                    }
+                }
+                FaultKind::SwapFail => swapfail.push((ev.frame, ev.count)),
+            }
+        }
+        Injector {
+            transient,
+            stall,
+            seu,
+            swapfail,
+            scrub_period: scrub_period.max(1),
+            state,
+            n_paths: n_paths.max(1),
+            rate_hz,
+            retry,
+            vhealth: [0; VIRTUAL_SHARDS],
+            corrupt_since: None,
+            records: Vec::new(),
+            stats: InjectorStats::default(),
+        }
+    }
+
+    /// Frame prologue: run the periodic scrubber, then inject any SEU
+    /// scheduled for this frame (scrub-then-strike, so a fresh flip is
+    /// live until the *next* scrub pass — that window is the MTTR).
+    pub fn begin_frame(&mut self, frame: usize) {
+        if frame > 0 && frame % self.scrub_period == 0 && self.state.scrub() {
+            let since = self.corrupt_since.take().unwrap_or(frame);
+            let mttr_ms = (frame - since) as f64 / self.rate_hz * 1e3;
+            self.records.push(FaultRecord::ScrubRepair { frame, mttr_ms });
+            self.stats.scrub_repairs += 1;
+            self.stats.recovery_ms_sum += mttr_ms;
+            self.stats.recoveries += 1;
+        }
+        if let Some(&bit) = self.seu.get(&frame) {
+            let loaded = scrub::decode_index(self.state.bytes());
+            self.state.flip_bit(bit);
+            self.records.push(FaultRecord::Seu { frame, bit, loaded });
+            self.stats.faults_injected += 1;
+            if !self.state.is_clean() && self.corrupt_since.is_none() {
+                self.corrupt_since = Some(frame);
+            }
+        }
+    }
+
+    /// Fault stamp for the request submitted at `frame` (with id `id`),
+    /// recording the canonical transient/stall log lines and degrading
+    /// the struck virtual shard.
+    pub fn directive_for(&mut self, frame: usize, id: u64) -> Option<FaultDirective> {
+        let fails = self.transient.get(&frame).copied();
+        let stall_ms = self.stall.get(&frame).copied();
+        if fails.is_none() && stall_ms.is_none() {
+            return None;
+        }
+        let vshard = frame % VIRTUAL_SHARDS;
+        if let Some(fails) = fails {
+            let retries = fails.min(self.retry.max_retries);
+            let retries_at_ms = self.retry.instants_ms(id, retries);
+            let recovered = fails <= self.retry.max_retries;
+            if recovered && fails > 0 {
+                self.stats.recovery_ms_sum += retries_at_ms.last().copied().unwrap_or(0.0);
+                self.stats.recoveries += 1;
+            }
+            self.records.push(FaultRecord::Transient {
+                frame,
+                id,
+                fails,
+                retries_at_ms,
+                recovered,
+            });
+            self.stats.faults_injected += 1;
+            self.vhealth[vshard] = self.vhealth[vshard].max(frame + HEAL_FRAMES);
+        }
+        if let Some(ms) = stall_ms {
+            self.records.push(FaultRecord::Stall { frame, id, ms, vshard });
+            self.stats.faults_injected += 1;
+            self.vhealth[vshard] = self.vhealth[vshard].max(frame + HEAL_FRAMES);
+        }
+        Some(FaultDirective {
+            stall_ms: stall_ms.unwrap_or(0.0),
+            fail_attempts: fails.unwrap_or(0),
+        })
+    }
+
+    /// Healthy fraction of the virtual fleet at `frame` in `(0, 1]` —
+    /// the governor divides effective path latency by this, so a sick
+    /// fleet degrades down the ladder to hold a latency budget.
+    pub fn capacity(&self, frame: usize) -> f64 {
+        let healthy = self.vhealth.iter().filter(|&&until| until <= frame).count();
+        healthy.max(1) as f64 / VIRTUAL_SHARDS as f64
+    }
+
+    /// Should the swap attempted at `frame` fail? Consumes one armed
+    /// failure if so.
+    pub fn swap_should_fail(&mut self, frame: usize) -> bool {
+        for arm in &mut self.swapfail {
+            if frame >= arm.0 && arm.1 > 0 {
+                arm.1 -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Record a rollback after a failed swap (the caller already paid
+    /// `swap_ms` of the DPR window and reverted the governor).
+    pub fn record_rollback(
+        &mut self,
+        frame: usize,
+        from: String,
+        to: String,
+        swap_ms: f64,
+        cooldown_frames: usize,
+    ) {
+        self.records.push(FaultRecord::SwapRollback {
+            frame,
+            from,
+            to,
+            swap_ms,
+            cooldown_frames,
+        });
+        self.stats.faults_injected += 1;
+    }
+
+    /// A committed swap rewrites the gate state (repairing any live
+    /// corruption the way a real DPR write refreshes config frames).
+    pub fn on_commit(&mut self, new_index: usize) {
+        self.state.rewrite(scrub::encode_gate_state(new_index));
+        self.corrupt_since = None;
+    }
+
+    /// Resolve the frame's actual execution path. Clean state routes to
+    /// the governor's choice; corrupted state routes through the (bad)
+    /// decoded index — a valid-but-wrong index misroutes to that path,
+    /// an out-of-range one clamps to the lightest path. Either way the
+    /// frame is flagged `degraded` until a scrub or swap repairs it.
+    pub fn route(&mut self, _frame: usize, chosen: usize) -> (usize, bool) {
+        if self.state.is_clean() {
+            return (chosen, false);
+        }
+        let decoded = scrub::decode_index(self.state.bytes());
+        if decoded == chosen {
+            // flip landed in the pad bytes: latent, not routing-visible
+            return (chosen, false);
+        }
+        self.stats.misrouted_frames += 1;
+        if decoded < self.n_paths {
+            (decoded, true)
+        } else {
+            (0, true)
+        }
+    }
+
+    pub fn records(&self) -> &[FaultRecord] {
+        &self.records
+    }
+
+    pub fn into_records(self) -> Vec<FaultRecord> {
+        self.records
+    }
+
+    pub fn stats(&self) -> InjectorStats {
+        self.stats
+    }
+
+    pub fn retry(&self) -> RetryPolicy {
+        self.retry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(spec: &str) -> FaultPlan {
+        FaultPlan::parse_spec(spec, 240, 4000.0, 7).unwrap()
+    }
+
+    #[test]
+    fn storm_spec_parses_with_defaults() {
+        let p = plan(FaultPlan::storm_spec());
+        assert_eq!(p.events.len(), 4);
+        let kinds: Vec<_> = p.events.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&FaultKind::Seu));
+        assert!(kinds.contains(&FaultKind::Stall));
+        assert!(kinds.contains(&FaultKind::SwapFail));
+        assert!(kinds.contains(&FaultKind::Transient));
+        // defaults are placed inside the run
+        assert!(p.events.iter().all(|e| e.frame < 240));
+    }
+
+    #[test]
+    fn explicit_keys_override_defaults() {
+        let p = plan("transient:frame=60,count=4,every=2,fails=3");
+        assert_eq!(
+            p.events[0],
+            FaultEvent {
+                kind: FaultKind::Transient,
+                frame: 60,
+                count: 4,
+                every: 2,
+                fails: 3,
+                stall_ms: 2.0,
+                bit: None,
+            }
+        );
+        // at= converts seconds to frames at rate_hz
+        let p = plan("stall:at=0.03,ms=1.5");
+        assert_eq!(p.events[0].frame, 120);
+        assert_eq!(p.events[0].stall_ms, 1.5);
+        let p = plan("seu:frame=80,bit=3");
+        assert_eq!(p.events[0].bit, Some(3));
+        let p = plan("swapfail:after=100,count=2");
+        assert_eq!((p.events[0].frame, p.events[0].count), (100, 2));
+    }
+
+    #[test]
+    fn unknown_kind_gets_did_you_mean() {
+        let e = FaultPlan::parse_spec("sue", 240, 4000.0, 7).unwrap_err();
+        assert!(e.contains("'sue'") && e.contains("did you mean 'seu'?"), "{e}");
+        assert!(e.contains("transient|stall|swapfail|seu"), "{e}");
+        let e = FaultPlan::parse_spec("stale:ms=2", 240, 4000.0, 7).unwrap_err();
+        assert!(e.contains("did you mean 'stall'?"), "{e}");
+    }
+
+    #[test]
+    fn bad_keys_and_values_are_named() {
+        let e = FaultPlan::parse_spec("seu:bite=3", 240, 4000.0, 7).unwrap_err();
+        assert!(e.contains("unknown key 'bite'") && e.contains("bit"), "{e}");
+        let e = FaultPlan::parse_spec("stall:ms=slow", 240, 4000.0, 7).unwrap_err();
+        assert!(e.contains("non-numeric value 'slow' for 'ms'"), "{e}");
+        let e = FaultPlan::parse_spec("stall:ms", 240, 4000.0, 7).unwrap_err();
+        assert!(e.contains("expected key=value"), "{e}");
+    }
+
+    #[test]
+    fn empty_spec_clauses_are_skipped() {
+        let p = plan("seu;;stall;");
+        assert_eq!(p.events.len(), 2);
+        assert!(FaultPlan::empty(1).is_empty());
+        assert!(!p.is_empty());
+    }
+
+    fn injector(spec: &str) -> Injector {
+        Injector::new(&plan(spec), 4, 3, 4000.0, 16, RetryPolicy::default())
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_plan() {
+        let drive = |mut inj: Injector| -> (String, InjectorStats) {
+            for f in 0..240usize {
+                inj.begin_frame(f);
+                inj.directive_for(f, f as u64 + 1);
+                let chosen = 3;
+                inj.route(f, chosen);
+            }
+            (render_fault_log(inj.records()), inj.stats())
+        };
+        let spec = FaultPlan::storm_spec();
+        let (log_a, stats_a) = drive(injector(spec));
+        let (log_b, stats_b) = drive(injector(spec));
+        assert_eq!(log_a, log_b);
+        assert_eq!(stats_a, stats_b);
+        assert!(stats_a.faults_injected > 0);
+    }
+
+    #[test]
+    fn seu_misroutes_until_scrub_repairs() {
+        // flip bit 1 of the index word at frame 20: loaded path 3 -> 1
+        let mut inj = Injector::new(
+            &plan("seu:frame=20,bit=1"),
+            4,
+            3,
+            4000.0,
+            16,
+            RetryPolicy::default(),
+        );
+        let mut degraded_frames = 0;
+        let mut repaired_at = None;
+        for f in 0..64usize {
+            inj.begin_frame(f);
+            let (actual, degraded) = inj.route(f, 3);
+            if degraded {
+                degraded_frames += 1;
+                assert_eq!(actual, 1, "bit 1 of index 3 -> index 1");
+            }
+            if repaired_at.is_none() && inj.stats().scrub_repairs > 0 {
+                repaired_at = Some(f);
+            }
+        }
+        // corrupt from frame 20 until the frame-32 scrub pass
+        assert_eq!(degraded_frames, 12);
+        assert_eq!(repaired_at, Some(32));
+        let s = inj.stats();
+        assert_eq!(s.scrub_repairs, 1);
+        assert_eq!(s.misrouted_frames, 12);
+        assert!(s.recovery_ms_sum > 0.0);
+        let log = render_fault_log(inj.records());
+        assert!(log.contains("fault seu: bit 1"), "{log}");
+        assert!(log.contains("scrub: crc mismatch repaired, mttr 3.000 ms"), "{log}");
+    }
+
+    #[test]
+    fn out_of_range_seu_clamps_to_lightest_path() {
+        // bit 30 sets a high bit of the index word: decoded >> n_paths
+        let mut inj = Injector::new(
+            &plan("seu:frame=0,bit=30"),
+            4,
+            3,
+            4000.0,
+            16,
+            RetryPolicy::default(),
+        );
+        inj.begin_frame(0);
+        let (actual, degraded) = inj.route(0, 3);
+        assert!(degraded);
+        assert_eq!(actual, 0, "out-of-range index clamps to the lightest path");
+    }
+
+    #[test]
+    fn committed_swap_repairs_corruption() {
+        let mut inj = Injector::new(
+            &plan("seu:frame=0,bit=1"),
+            4,
+            3,
+            4000.0,
+            16,
+            RetryPolicy::default(),
+        );
+        inj.begin_frame(0);
+        assert!(inj.route(0, 3).1);
+        inj.on_commit(0);
+        assert!(!inj.route(1, 0).1, "DPR rewrite refreshes gate state");
+        assert_eq!(inj.stats().scrub_repairs, 0, "repair-by-rewrite is not a scrub");
+    }
+
+    #[test]
+    fn transient_directive_matches_spec_and_counts_recovery() {
+        let mut inj = injector("transient:frame=10,count=2,every=5,fails=1");
+        for f in 0..20usize {
+            inj.begin_frame(f);
+            let d = inj.directive_for(f, f as u64 + 1);
+            match f {
+                10 | 15 => {
+                    assert_eq!(d, Some(FaultDirective { stall_ms: 0.0, fail_attempts: 1 }))
+                }
+                _ => assert_eq!(d, None),
+            }
+        }
+        let s = inj.stats();
+        assert_eq!(s.faults_injected, 2);
+        assert_eq!(s.recoveries, 2, "fails=1 <= max_retries recovers");
+        let log = render_fault_log(inj.records());
+        assert!(log.contains("request 11 fails 1x, retries at +"), "{log}");
+        assert!(log.contains("-> recovered"), "{log}");
+    }
+
+    #[test]
+    fn exhausted_retries_log_failed() {
+        let mut inj = injector("transient:frame=5,count=1,fails=9");
+        inj.begin_frame(5);
+        inj.directive_for(5, 6);
+        let log = render_fault_log(inj.records());
+        assert!(log.contains("fails 9x"), "{log}");
+        assert!(log.ends_with("-> failed"), "{log}");
+        assert_eq!(inj.stats().recoveries, 0);
+    }
+
+    #[test]
+    fn faults_degrade_virtual_capacity_then_heal() {
+        let mut inj = injector("stall:frame=40,count=4,every=1,ms=2");
+        assert_eq!(inj.capacity(0), 1.0);
+        for f in 0..240usize {
+            inj.begin_frame(f);
+            inj.directive_for(f, f as u64 + 1);
+        }
+        // frames 40..44 degrade all four virtual shards; capacity floors
+        // at 1/V (never zero) and heals after the window
+        assert_eq!(inj.capacity(44), 1.0 / VIRTUAL_SHARDS as f64);
+        assert!(inj.capacity(50) < 1.0);
+        assert_eq!(inj.capacity(40 + 3 + 24), 1.0, "healed");
+    }
+
+    #[test]
+    fn swapfail_arms_and_decrements() {
+        let mut inj = injector("swapfail:after=100,count=2");
+        assert!(!inj.swap_should_fail(50), "not armed yet");
+        assert!(inj.swap_should_fail(100));
+        assert!(inj.swap_should_fail(120));
+        assert!(!inj.swap_should_fail(130), "both failures consumed");
+        inj.record_rollback(100, "d3_w100".into(), "d1_w100".into(), 0.5, 8);
+        let log = render_fault_log(inj.records());
+        assert!(
+            log.contains("d3_w100 -> d1_w100 failed mid-window (0.500 ms wasted)"),
+            "{log}"
+        );
+        assert!(log.contains("rolled back to d3_w100, cooldown 8 frames"), "{log}");
+    }
+
+    #[test]
+    fn empty_plan_injector_is_inert() {
+        let mut inj = Injector::new(
+            &FaultPlan::empty(7),
+            4,
+            3,
+            4000.0,
+            16,
+            RetryPolicy::default(),
+        );
+        for f in 0..100usize {
+            inj.begin_frame(f);
+            assert_eq!(inj.directive_for(f, f as u64 + 1), None);
+            assert_eq!(inj.route(f, 3), (3, false));
+            assert!(!inj.swap_should_fail(f));
+            assert_eq!(inj.capacity(f), 1.0);
+        }
+        assert_eq!(inj.stats(), InjectorStats::default());
+        assert!(inj.records().is_empty());
+    }
+}

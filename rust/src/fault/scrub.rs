@@ -1,0 +1,137 @@
+//! CRC scrubbing over the loaded path manifest / gate state.
+//!
+//! FPGA configuration memory takes SEU bit-flips; the classic mitigation
+//! is a periodic scrubber that walks the configuration frames, compares
+//! a CRC against a golden copy, and rewrites corrupted frames. We model
+//! the NeuroMorph-relevant slice of that state — which morph path is
+//! loaded (the gate/manifest word) — as a small byte image protected by
+//! CRC-32 and a golden shadow. [`ScrubbedState::flip_bit`] is the SEU
+//! injection point; [`ScrubbedState::scrub`] is the repair pass.
+
+/// Bitwise CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320).
+///
+/// Table-free on purpose: the state image is a handful of bytes and the
+/// scrubber runs once per scrub period, so clarity beats table setup.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Encode the active morph-path index as the protected gate-state image.
+///
+/// Layout: index as little-endian `u32`, then a fixed pad of config-frame
+/// filler so single-bit SEUs usually land outside the index word too
+/// (silent-until-scrubbed corruption, like real configuration memory).
+pub fn encode_gate_state(index: usize) -> Vec<u8> {
+    let mut bytes = (index as u32).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[0xA5, 0x5A, 0xC3, 0x3C]);
+    bytes
+}
+
+/// Decode the path index back out of a (possibly corrupted) image.
+pub fn decode_index(bytes: &[u8]) -> usize {
+    let mut w = [0u8; 4];
+    w.copy_from_slice(&bytes[..4]);
+    u32::from_le_bytes(w) as usize
+}
+
+/// A byte image with a golden copy + CRC, i.e. scrubbable state.
+#[derive(Debug, Clone)]
+pub struct ScrubbedState {
+    bytes: Vec<u8>,
+    golden: Vec<u8>,
+    crc: u32,
+}
+
+impl ScrubbedState {
+    pub fn new(bytes: Vec<u8>) -> Self {
+        let crc = crc32(&bytes);
+        ScrubbedState { golden: bytes.clone(), bytes, crc }
+    }
+
+    /// Authorized rewrite (e.g. a committed swap): refreshes the golden
+    /// copy and CRC, clearing any outstanding corruption.
+    pub fn rewrite(&mut self, bytes: Vec<u8>) {
+        self.crc = crc32(&bytes);
+        self.golden = bytes.clone();
+        self.bytes = bytes;
+    }
+
+    /// Inject an SEU: flip one bit (`bit` wraps modulo the image size).
+    pub fn flip_bit(&mut self, bit: usize) {
+        let n = self.bytes.len() * 8;
+        let b = bit % n;
+        self.bytes[b / 8] ^= 1 << (b % 8);
+    }
+
+    /// Does the live image still match its CRC?
+    pub fn is_clean(&self) -> bool {
+        crc32(&self.bytes) == self.crc
+    }
+
+    /// One scrub pass: verify CRC, repair from golden on mismatch.
+    /// Returns `true` if a repair was performed.
+    pub fn scrub(&mut self) -> bool {
+        if self.is_clean() {
+            return false;
+        }
+        self.bytes.copy_from_slice(&self.golden);
+        true
+    }
+
+    /// The live (possibly corrupted) image — what the runtime reads.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn flip_then_scrub_repairs() {
+        let mut s = ScrubbedState::new(encode_gate_state(3));
+        assert!(s.is_clean());
+        assert!(!s.scrub(), "clean state must not report a repair");
+        s.flip_bit(1);
+        assert!(!s.is_clean());
+        assert_ne!(decode_index(s.bytes()), 3);
+        assert!(s.scrub());
+        assert!(s.is_clean());
+        assert_eq!(decode_index(s.bytes()), 3);
+    }
+
+    #[test]
+    fn rewrite_clears_corruption_and_updates_golden() {
+        let mut s = ScrubbedState::new(encode_gate_state(2));
+        s.flip_bit(0);
+        s.rewrite(encode_gate_state(5));
+        assert!(s.is_clean());
+        assert_eq!(decode_index(s.bytes()), 5);
+        s.flip_bit(9);
+        assert!(s.scrub());
+        assert_eq!(decode_index(s.bytes()), 5, "golden must track the rewrite");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in 0..16 {
+            assert_eq!(decode_index(&encode_gate_state(i)), i);
+        }
+    }
+}

@@ -46,31 +46,10 @@ const KNOWN_OPS: &[&str] = &[
     "softmax",
 ];
 
-/// Levenshtein distance, for did-you-mean suggestions on unknown ops.
-fn edit_distance(a: &str, b: &str) -> usize {
-    let a: Vec<char> = a.chars().collect();
-    let b: Vec<char> = b.chars().collect();
-    let mut prev: Vec<usize> = (0..=b.len()).collect();
-    let mut cur = vec![0usize; b.len() + 1];
-    for (i, &ca) in a.iter().enumerate() {
-        cur[0] = i + 1;
-        for (j, &cb) in b.iter().enumerate() {
-            let sub = prev[j] + usize::from(ca != cb);
-            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
-        }
-        std::mem::swap(&mut prev, &mut cur);
-    }
-    prev[b.len()]
-}
-
-/// Closest known op within edit distance 2, if any.
+/// Closest known op within edit distance 2, if any (shared Levenshtein
+/// kernel lives in [`crate::util::suggest`]).
 fn suggest_op(unknown: &str) -> Option<&'static str> {
-    KNOWN_OPS
-        .iter()
-        .map(|&op| (edit_distance(unknown, op), op))
-        .filter(|&(d, _)| d <= 2)
-        .min_by_key(|&(d, _)| d)
-        .map(|(_, op)| op)
+    crate::util::suggest(unknown, KNOWN_OPS)
 }
 
 #[derive(Debug)]

@@ -18,6 +18,8 @@
 //!   * [`distill`] — DistillCycle training engine (Alg. 2): joint
 //!     full-model + subnetwork training with hierarchical KD, emitting
 //!     the per-path [`distill::AccuracyProfile`]
+//!   * [`fault`] — deterministic fault injection (`--fault-trace`) +
+//!     self-healing: CRC scrubbing, retry backoff, shard health states
 //!   * [`rtl`] — Verilog emission for selected design points
 //!   * [`sim`] — cycle-level streaming simulator (the hardware stand-in)
 //!   * [`morph`] — NeuroMorph runtime reconfiguration + governor
@@ -36,6 +38,7 @@ pub mod coordinator;
 pub mod design;
 pub mod distill;
 pub mod dse;
+pub mod fault;
 pub mod graph;
 pub mod morph;
 pub mod pe;

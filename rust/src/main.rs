@@ -17,7 +17,9 @@
 //! forgemorph serve [--model mnist --requests N --rate HZ --artifacts DIR
 //!                   --workers N --backend pjrt|sim|analytical
 //!                   --accuracy-floor F --patience K
-//!                   --power-trace step|ramp|spike|diurnal[:k=v,...]]
+//!                   --power-trace step|ramp|spike|diurnal[:k=v,...]
+//!                   --fault-trace "seu;stall;swapfail;transient"[:k=v,...]
+//!                   --fault-seed N]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
 //! ```
 
@@ -27,6 +29,7 @@ use std::time::Duration;
 use anyhow::{bail, Context};
 use forgemorph::backend::BackendSpec;
 use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig};
+use forgemorph::fault::FaultPlan;
 use forgemorph::morph;
 use forgemorph::design::{self, DesignConfig};
 use forgemorph::dse;
@@ -62,7 +65,8 @@ const HELP: &str = "\
 forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
-                fig10, fig11, fig12, backends, graphs, distill, power, all);
+                fig10, fig11, fig12, backends, graphs, distill, power,
+                faults, all);
                 `report bench-check --baseline BENCH_x.json` gates perf
                 regressions against the committed bench trajectory
   dse|explore   NeuroForge design space exploration (--threads N fans the
@@ -88,7 +92,11 @@ commands:
                 hard minimum path accuracy; --power-trace SPEC replays a
                 deterministic budget trace — step|ramp|spike|diurnal with
                 optional k=v params — and prints the decision log, which
-                is byte-identical for any --workers value)
+                is byte-identical for any --workers value; --fault-trace
+                SPEC injects deterministic faults — ;-separated
+                transient|stall|swapfail|seu clauses with optional k=v
+                params — and prints the self-healing fault log, also
+                byte-identical for any --workers value)
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
@@ -470,11 +478,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_usize("workers", 1);
     let backend = args.get_or("backend", "pjrt").to_string();
     let trace_spec = args.get("power-trace").map(str::to_string);
+    let fault_spec = args.get("fault-trace").map(str::to_string);
     let net = net_for(args)?;
     // trace mode defaults to the Table III 164-PE-class mapping: large
     // enough that gated blocks dominate the draw — where the paper's
     // ~32% runtime power saving lives
-    let p_default = if trace_spec.is_some() { 16 } else { 4 };
+    let p_default = if trace_spec.is_some() || fault_spec.is_some() { 16 } else { 4 };
     let design = DesignConfig::uniform(&net, args.get_usize("p", p_default), rep_for(args));
 
     let spec = match backend.as_str() {
@@ -503,10 +512,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         patience: args.get_usize("patience", 2),
         workers,
         accuracy_floor,
-        external_pacing: trace_spec.is_some(),
+        external_pacing: trace_spec.is_some() || fault_spec.is_some(),
+        ..Default::default()
     };
-    if let Some(tspec) = trace_spec {
-        return cmd_serve_trace(args, cfg, spec, &tspec, &model, &backend, requests, rate_hz);
+    if trace_spec.is_some() || fault_spec.is_some() {
+        return cmd_serve_trace(
+            args,
+            cfg,
+            spec,
+            trace_spec.as_deref(),
+            fault_spec.as_deref(),
+            &model,
+            &backend,
+            requests,
+            rate_hz,
+        );
     }
     let mut coord = Coordinator::start(cfg, spec)?;
     println!(
@@ -562,15 +582,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `serve --power-trace <spec>`: replay a deterministic budget trace
-/// through the serving stack on a virtual clock and print the decision
-/// log + per-segment modeled power (the paper's down-shift experiment).
+/// `serve --power-trace <spec>` / `serve --fault-trace <spec>`: replay a
+/// deterministic budget trace (and optionally a fault plan) through the
+/// serving stack on a virtual clock and print the decision log, the
+/// fault log and per-segment modeled power (the paper's down-shift
+/// experiment, plus the fault-storm self-healing experiment).
 #[allow(clippy::too_many_arguments)]
 fn cmd_serve_trace(
     args: &Args,
     cfg: ServeConfig,
     spec: BackendSpec,
-    tspec: &str,
+    tspec: Option<&str>,
+    fspec: Option<&str>,
     model: &str,
     backend: &str,
     requests: usize,
@@ -582,25 +605,61 @@ fn cmd_serve_trace(
     anyhow::ensure!(!rows.is_empty(), "backend reported no path energy rows");
     let default_cap = trace::default_squeeze_cap(&rows);
     let duration_s = requests as f64 / rate_hz;
-    let events =
-        trace::parse_spec(tspec, duration_s, default_cap).map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!(
-        "power trace '{tspec}' on '{model}' ({backend} backend, {workers} worker shard(s)): \
-         {} budget events, {requests} frames @ {rate_hz:.0} Hz virtual, {} deployed paths",
-        events.len(),
-        rows.len()
-    );
-    let outcome = coord.replay_power_trace(
+    // no power trace (fault-only replay) = unconstrained budget throughout
+    let events = match tspec {
+        Some(t) => {
+            trace::parse_spec(t, duration_s, default_cap).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+        None => Vec::new(),
+    };
+    let seed = args.get_u64("seed", 42);
+    let plan = match fspec {
+        Some(f) => Some(
+            FaultPlan::parse_spec(f, requests, rate_hz, args.get_u64("fault-seed", seed))
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        ),
+        None => None,
+    };
+    if let Some(t) = tspec {
+        println!(
+            "power trace '{t}' on '{model}' ({backend} backend, {workers} worker shard(s)): \
+             {} budget events, {requests} frames @ {rate_hz:.0} Hz virtual, {} deployed paths",
+            events.len(),
+            rows.len()
+        );
+    } else {
+        println!(
+            "unconstrained budget on '{model}' ({backend} backend, {workers} worker shard(s)): \
+             {requests} frames @ {rate_hz:.0} Hz virtual, {} deployed paths",
+            rows.len()
+        );
+    }
+    if let (Some(f), Some(p)) = (fspec, plan.as_ref()) {
+        println!(
+            "fault trace '{f}': {} fault clause(s), seed {}",
+            p.events.len(),
+            p.seed
+        );
+    }
+    let outcome = coord.replay_trace(
         &events,
-        &TraceConfig { frames: requests, rate_hz, seed: args.get_u64("seed", 42) },
+        &TraceConfig { frames: requests, rate_hz, seed },
+        plan.as_ref(),
     )?;
     print!("{}", outcome.decision_log());
+    print!("{}", outcome.fault_log());
     print!("{}", outcome.render_summary());
     anyhow::ensure!(
         outcome.answered == requests,
         "dropped {} in-flight request(s) across reconfigurations",
         requests - outcome.answered
     );
+    if plan.is_some() {
+        anyhow::ensure!(
+            outcome.ok + outcome.degraded + outcome.failed == outcome.answered,
+            "terminal statuses do not cover every answered request"
+        );
+    }
     Ok(())
 }
 

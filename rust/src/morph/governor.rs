@@ -81,8 +81,17 @@ pub struct Governor {
     reactivation_frames: usize,
     /// hard floor: paths below this accuracy are never selected
     accuracy_floor: f64,
+    /// healthy fraction of the serving fleet in `(0, 1]`: effective
+    /// latency is `lat / capacity`, so a degraded fleet pushes the
+    /// governor down the ladder to hold a latency budget
+    capacity: f64,
+    /// frames remaining before another swap may be attempted (set after
+    /// a failed-swap rollback; `observe` holds while it drains)
+    cooldown: usize,
     /// switches performed (telemetry)
     pub switch_count: usize,
+    /// failed-swap rollbacks performed (telemetry)
+    pub rollback_count: usize,
 }
 
 impl Governor {
@@ -97,7 +106,10 @@ impl Governor {
             patience: patience.max(1),
             reactivation_frames: 1,
             accuracy_floor: 0.0,
+            capacity: 1.0,
+            cooldown: 0,
             switch_count: 0,
+            rollback_count: 0,
         }
     }
 
@@ -128,6 +140,38 @@ impl Governor {
         &self.registry
     }
 
+    /// Report the healthy fraction of the serving fleet (clamped to a
+    /// small positive floor — a fleet is never "all dead" for planning
+    /// purposes; someone keeps answering). 1.0 restores nominal fits.
+    pub fn set_capacity(&mut self, capacity: f64) {
+        self.capacity = capacity.clamp(1e-6, 1.0);
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    /// Hold the current path for `frames` observations before another
+    /// swap may fire (the re-attempt backoff after a failed swap).
+    pub fn begin_cooldown(&mut self, frames: usize) {
+        self.cooldown = frames;
+        self.pending = None;
+    }
+
+    pub fn in_cooldown(&self) -> bool {
+        self.cooldown > 0
+    }
+
+    /// Revert to `to_index` after a failed swap: the outgoing path is
+    /// still loaded (the DPR window never committed), so the revert is
+    /// free — no reactivation stall, no hysteresis.
+    pub fn rollback(&mut self, to_index: usize) {
+        assert!(to_index < self.registry.paths().len(), "rollback to unknown path");
+        self.current = to_index;
+        self.pending = None;
+        self.rollback_count += 1;
+    }
+
     /// The most accurate floor-meeting path whose measured power &
     /// latency fit `budget`. The floor is hard, the budget soft: with no
     /// floor-meeting path inside the budget the cheapest floor-meeting
@@ -140,8 +184,10 @@ impl Governor {
         let fits = |i: &usize| -> bool {
             match self.costs.for_path(&paths[*i].name) {
                 Some((pw, lat)) => {
+                    // effective latency degrades with fleet capacity:
+                    // fewer healthy shards, longer queues per survivor
                     budget.power_mw.map(|b| pw <= b).unwrap_or(true)
-                        && budget.latency_ms.map(|b| lat <= b).unwrap_or(true)
+                        && budget.latency_ms.map(|b| lat / self.capacity <= b).unwrap_or(true)
                 }
                 None => false,
             }
@@ -173,6 +219,13 @@ impl Governor {
     /// Feed one budget observation; returns the (possibly Hold) decision.
     /// Allocation-free except when a switch actually fires.
     pub fn observe(&mut self, budget: &Budget) -> Decision {
+        if self.cooldown > 0 {
+            // post-rollback hold: the fabric needs quiet frames before
+            // another DPR attempt; hysteresis restarts afterwards
+            self.cooldown -= 1;
+            self.pending = None;
+            return Decision::Hold;
+        }
         let target = self.best_for(budget);
         if target == self.current {
             self.pending = None;
@@ -403,6 +456,79 @@ mod tests {
         // full path is already current (most accurate): hold, never panic
         assert_eq!(gov.observe(&Budget { power_mw: Some(1.0), latency_ms: None }), Decision::Hold);
         assert_eq!(gov.current(), "d3_w100");
+    }
+
+    #[test]
+    fn reduced_capacity_degrades_down_the_ladder() {
+        // at full capacity a 0.7 ms budget picks d2_w100 (0.6 ms); at
+        // half capacity its effective latency doubles to 1.2 ms, so the
+        // governor degrades to d3_w50 (0.25/0.5 = 0.5 ms effective)
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let b = Budget { power_mw: None, latency_ms: Some(0.7) };
+        gov.set_capacity(0.5);
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d3_w50"),
+            d => panic!("{d:?}"),
+        }
+        // healing restores the nominal choice
+        gov.set_capacity(1.0);
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d2_w100"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_never_degrades_below_the_floor() {
+        // floor 0.96 leaves {d2_w100, d3_w100}; even a nearly dead fleet
+        // must not pick a below-floor path — budget overrun instead
+        let mut gov = Governor::new(registry(), costs(), 1).with_accuracy_floor(0.96);
+        gov.set_capacity(0.25);
+        let b = Budget { power_mw: None, latency_ms: Some(0.7) };
+        match gov.observe(&b) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d2_w100"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn full_capacity_is_bitwise_legacy() {
+        // `lat / 1.0` must be exactly `lat`: the default-capacity
+        // governor replays pre-fault decision logs byte-identically
+        let mut a = Governor::new(registry(), costs(), 2);
+        let mut b = Governor::new(registry(), costs(), 2);
+        b.set_capacity(1.0);
+        let budgets = [
+            Budget { power_mw: Some(500.0), latency_ms: Some(0.6) },
+            Budget { power_mw: None, latency_ms: Some(0.25) },
+            Budget::unconstrained(),
+        ];
+        for budget in budgets.iter().cycle().take(30) {
+            assert_eq!(a.observe(budget), b.observe(budget));
+        }
+    }
+
+    #[test]
+    fn rollback_reverts_without_stall_and_cooldown_holds() {
+        let mut gov = Governor::new(registry(), costs(), 1);
+        let from = gov.current_index();
+        let tight = Budget { power_mw: Some(500.0), latency_ms: None };
+        assert!(matches!(gov.observe(&tight), Decision::Switch { .. }));
+        // the swap failed mid-window: revert and cool down
+        gov.rollback(from);
+        assert_eq!(gov.current(), "d3_w100");
+        assert_eq!(gov.rollback_count, 1);
+        gov.begin_cooldown(3);
+        for i in 0..3 {
+            assert!(gov.in_cooldown(), "cooldown frame {i}");
+            assert_eq!(gov.observe(&tight), Decision::Hold, "cooldown frame {i}");
+        }
+        assert!(!gov.in_cooldown());
+        // after the cooldown the re-attempt fires through normal hysteresis
+        match gov.observe(&tight) {
+            Decision::Switch { to, .. } => assert_eq!(to, "d1_w100"),
+            d => panic!("{d:?}"),
+        }
     }
 
     #[test]

@@ -113,6 +113,42 @@ pub fn swap_timeline(stall_frames: usize, full_frame_ms: f64) -> SwapTimeline {
     }
 }
 
+/// Outcome of one DPR swap attempt: the timeline is always paid (the
+/// window opened), but a failed attempt never commits — the outgoing
+/// path is still loaded, so the runtime rolls back to it and cools down
+/// before re-attempting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapAttempt {
+    pub timeline: SwapTimeline,
+    /// did the incoming path actually load?
+    pub committed: bool,
+    /// frames the governor must hold before the next attempt (0 when
+    /// committed)
+    pub cooldown_frames: usize,
+}
+
+/// Frames of post-rollback quiet time after a failed swap. One full DPR
+/// window's worth of frames on this fabric class: long enough that a
+/// persistently failing region doesn't thrash drain→fail→drain.
+pub const ROLLBACK_COOLDOWN_FRAMES: usize = 8;
+
+/// Model one swap attempt. A failing attempt (injected via
+/// `--fault-trace swapfail`) still pays the full modeled window — the
+/// fabric was mid-reconfiguration when the CRC check rejected the
+/// partial bitstream — then reports rollback with a cooldown.
+pub fn attempt_swap(
+    stall_frames: usize,
+    full_frame_ms: f64,
+    fail: bool,
+    cooldown_frames: usize,
+) -> SwapAttempt {
+    SwapAttempt {
+        timeline: swap_timeline(stall_frames, full_frame_ms),
+        committed: !fail,
+        cooldown_frames: if fail { cooldown_frames } else { 0 },
+    }
+}
+
 /// Accuracy-constrained operating point: the cheapest kept path meeting
 /// `min_accuracy` (what the paper's future-work selector would return).
 pub fn cheapest_meeting<'a>(
@@ -199,6 +235,22 @@ mod tests {
         assert!((up.swap_ms - 1.2).abs() < 1e-12);
         // degenerate frame period never yields negative windows
         assert_eq!(swap_timeline(3, -1.0).swap_ms, 0.0);
+    }
+
+    #[test]
+    fn failed_swap_pays_the_window_but_never_commits() {
+        let ok = attempt_swap(1, 1.2, false, ROLLBACK_COOLDOWN_FRAMES);
+        assert!(ok.committed);
+        assert_eq!(ok.cooldown_frames, 0);
+        assert_eq!(ok.timeline, swap_timeline(1, 1.2));
+        let bad = attempt_swap(1, 1.2, true, ROLLBACK_COOLDOWN_FRAMES);
+        assert!(!bad.committed);
+        assert_eq!(bad.cooldown_frames, ROLLBACK_COOLDOWN_FRAMES);
+        assert_eq!(bad.timeline, ok.timeline, "the window was opened either way");
+        // a failed down-shift (0-frame window) still cools down
+        let down = attempt_swap(0, 1.2, true, 4);
+        assert_eq!(down.timeline.swap_ms, 0.0);
+        assert_eq!(down.cooldown_frames, 4);
     }
 
     #[test]

@@ -9,6 +9,34 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 
+/// Levenshtein distance — the shared kernel of every did-you-mean
+/// suggestion (graph descriptor ops, fault-trace kinds).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate within edit distance 2 of `unknown`, if any.
+pub fn suggest<'a>(unknown: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|&c| (edit_distance(unknown, c), c))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
 /// Format a f64 with engineering-friendly precision (tables/reports).
 pub fn fmt_sig(x: f64, sig: usize) -> String {
     if x == 0.0 || !x.is_finite() {
@@ -22,6 +50,15 @@ pub fn fmt_sig(x: f64, sig: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("stall", "stall"), 0);
+        assert_eq!(suggest("sue", &["transient", "stall", "swapfail", "seu"]), Some("seu"));
+        assert_eq!(suggest("completely-off", &["seu", "stall"]), None);
+    }
 
     #[test]
     fn fmt_sig_basics() {

@@ -12,8 +12,9 @@
 use std::time::Duration;
 
 use forgemorph::backend::BackendSpec;
-use forgemorph::coordinator::{Coordinator, ServeConfig};
+use forgemorph::coordinator::{Coordinator, ResponseStatus, ServeConfig};
 use forgemorph::design::DesignConfig;
+use forgemorph::fault::FaultDirective;
 use forgemorph::graph::zoo;
 use forgemorph::morph;
 use forgemorph::morph::governor::Budget;
@@ -164,6 +165,102 @@ fn shutdown_drains_inflight_requests() {
         }
     }
     assert_eq!(answered, 30);
+}
+
+#[test]
+fn exhausted_retries_yield_terminal_failed_not_a_hang() {
+    // regression: an execute failure used to drop the request on the
+    // floor, leaving the submitter blocked on the reply channel forever.
+    // A fault that outlives the retry budget must resolve as Failed.
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        patience: 2,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+    let frame = request_stream(1, 784).pop().unwrap();
+    let rx = coord
+        .submit_with_fault(frame.clone(), FaultDirective { stall_ms: 0.0, fail_attempts: 99 })
+        .expect("submit");
+    let resp = rx.recv_timeout(Duration::from_secs(10)).expect("terminal response");
+    assert!(resp.status.is_failed(), "status: {:?}", resp.status);
+    // default RetryPolicy allows 2 retries -> 3 attempts total
+    assert_eq!(resp.attempts, 3);
+    assert!(resp.logits.is_empty(), "failed responses carry no logits");
+
+    // a transient that heals within the budget recovers to Ok
+    let rx = coord
+        .submit_with_fault(frame, FaultDirective { stall_ms: 0.0, fail_attempts: 1 })
+        .expect("submit");
+    let resp = rx.recv_timeout(Duration::from_secs(10)).expect("terminal response");
+    assert!(resp.status.is_ok(), "status: {:?}", resp.status);
+    assert_eq!(resp.attempts, 2, "one failed attempt + one successful retry");
+    assert_eq!(resp.logits.len(), 10);
+
+    let metrics = coord.shutdown();
+    assert!(metrics.retries >= 3, "retries uncounted: {}", metrics.retries);
+    assert_eq!(metrics.failed_requests, 1);
+}
+
+#[test]
+fn expired_deadline_fails_terminally() {
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        patience: 2,
+        workers: 1,
+        request_deadline: Some(Duration::ZERO),
+        ..ServeConfig::default()
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+    let rxs: Vec<_> = request_stream(8, 784)
+        .into_iter()
+        .map(|f| coord.submit(f).expect("submit"))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("terminal response");
+        match resp.status {
+            ResponseStatus::Failed { ref reason } => {
+                assert!(reason.contains("deadline"), "unexpected reason: {reason}")
+            }
+            ref other => panic!("expected deadline failure, got {other:?}"),
+        }
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.timeouts, 8);
+    assert_eq!(metrics.failed_requests, 8);
+}
+
+#[test]
+fn shutdown_during_swap_completes_pinned_runs() {
+    // pinned requests straddling a path boundary emulate shutdown landing
+    // mid drain→swap: both runs must complete on their pinned paths
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(5),
+        patience: 2,
+        workers: 2,
+        external_pacing: true,
+        ..ServeConfig::default()
+    };
+    let mut coord = Coordinator::start(cfg, spec_for("sim")).expect("start");
+    let stream = request_stream(24, 784);
+    let rxs: Vec<_> = stream
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let path = if i < 12 { "d3_w100" } else { "d1_w100" };
+            coord.submit_pinned(f.clone(), path.to_string()).expect("submit")
+        })
+        .collect();
+    // shut down immediately: the outgoing-path run is still draining
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 24, "pinned requests dropped at shutdown");
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(1)).expect("response");
+        let want = if i < 12 { "d3_w100" } else { "d1_w100" };
+        assert_eq!(resp.path, want, "request {i} answered off its pinned path");
+        assert!(resp.status.is_ok());
+    }
 }
 
 #[test]

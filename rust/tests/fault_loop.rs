@@ -1,0 +1,190 @@
+//! Integration: deterministic fault injection + self-healing.
+//!
+//! Pins the PR's core guarantees:
+//! * **zero loss** — under every built-in fault trace (and the full
+//!   storm) each submitted frame resolves terminally:
+//!   `ok + degraded + failed == answered == submitted`;
+//! * **log determinism** — the fault log AND the decision log are
+//!   byte-identical on 1 worker and 4 workers, and across reruns with
+//!   the same seeds (the injector lives entirely on the submit side);
+//! * **self-healing** — a failed DPR swap rolls back and the squeeze
+//!   still lands later; an SEU is scrub-repaired with a finite MTTR;
+//! * **no observer effect** — replaying with an *empty* fault plan is
+//!   bit-identical to replaying with no plan at all.
+
+use forgemorph::backend::BackendSpec;
+use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig, TraceOutcome};
+use forgemorph::design::DesignConfig;
+use forgemorph::fault::FaultPlan;
+use forgemorph::graph::zoo;
+use forgemorph::morph;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+
+const FRAMES: usize = 240;
+const RATE_HZ: f64 = 4000.0;
+const SEED: u64 = 7;
+
+fn start(workers: usize) -> Coordinator {
+    let net = zoo::mnist();
+    // same Table III-class mapping as the power-loop tests
+    let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+    let paths = morph::depth_ladder(&net);
+    let spec = BackendSpec::sim(net, design, ZYNQ_7100, paths);
+    let cfg = ServeConfig { workers, external_pacing: true, ..ServeConfig::default() };
+    Coordinator::start(cfg, spec).expect("start")
+}
+
+/// Step-trace replay under a fault spec (`None` = no injection at all).
+fn replay(workers: usize, spec: Option<&str>) -> TraceOutcome {
+    let mut coord = start(workers);
+    let cap = trace::default_squeeze_cap(&coord.path_energy_rows());
+    let events = trace::step(FRAMES as f64 / RATE_HZ, cap);
+    let plan = spec.map(|s| {
+        FaultPlan::parse_spec(s, FRAMES, RATE_HZ, SEED).expect("fault spec")
+    });
+    coord
+        .replay_trace(
+            &events,
+            &TraceConfig { frames: FRAMES, rate_hz: RATE_HZ, seed: SEED },
+            plan.as_ref(),
+        )
+        .expect("replay")
+}
+
+fn assert_zero_loss(out: &TraceOutcome, what: &str) {
+    assert_eq!(out.answered, out.submitted, "{what}: lost responses");
+    assert_eq!(out.submitted, FRAMES, "{what}: wrong submission count");
+    assert_eq!(
+        out.ok + out.degraded + out.failed,
+        out.answered,
+        "{what}: terminal accounting does not cover every answer"
+    );
+}
+
+#[test]
+fn every_builtin_fault_kind_loses_nothing() {
+    for spec in ["transient", "stall", "swapfail", "seu", FaultPlan::storm_spec()] {
+        let out = replay(4, Some(spec));
+        assert_zero_loss(&out, spec);
+        assert!(
+            out.metrics.faults_injected > 0,
+            "{spec}: plan armed but nothing injected"
+        );
+    }
+}
+
+#[test]
+fn fault_and_decision_logs_identical_across_workers_and_reruns() {
+    let reference = replay(1, Some(FaultPlan::storm_spec()));
+    assert!(!reference.fault_log().is_empty(), "storm produced no fault log");
+    assert!(!reference.decision_log().is_empty(), "storm produced no decisions");
+    for (workers, what) in [(4usize, "workers=4"), (1, "rerun workers=1")] {
+        let got = replay(workers, Some(FaultPlan::storm_spec()));
+        assert_eq!(reference.fault_log(), got.fault_log(), "fault log diverged: {what}");
+        assert_eq!(
+            reference.decision_log(),
+            got.decision_log(),
+            "decision log diverged: {what}"
+        );
+        assert_eq!(
+            reference.frames_by_path, got.frames_by_path,
+            "frame accounting diverged: {what}"
+        );
+        let (a, b) = (&reference.metrics, &got.metrics);
+        assert_eq!(a.faults_injected, b.faults_injected, "{what}");
+        assert_eq!(a.swaps_rolled_back, b.swaps_rolled_back, "{what}");
+        assert_eq!(a.scrub_repairs, b.scrub_repairs, "{what}");
+        assert_eq!(a.recoveries, b.recoveries, "{what}");
+        assert_eq!(
+            (reference.ok, reference.degraded, reference.failed),
+            (got.ok, got.degraded, got.failed),
+            "terminal dispositions diverged: {what}"
+        );
+    }
+}
+
+#[test]
+fn failed_swap_rolls_back_then_the_squeeze_still_lands() {
+    let out = replay(1, Some("swapfail"));
+    assert_zero_loss(&out, "swapfail");
+    assert!(out.metrics.swaps_rolled_back >= 1, "armed swap failure never struck");
+    // the rollback is in the fault log...
+    assert!(
+        out.fault_log().contains("fault swapfail:") && out.fault_log().contains("rolled back"),
+        "no rollback record:\n{}",
+        out.fault_log()
+    );
+    // ...and after the cooldown the governor still commits the down-shift
+    assert!(
+        out.switches.iter().any(|s| s.from == "d3_w100" && s.to != "d3_w100"),
+        "squeeze never committed after rollback: {:?}",
+        out.switches
+    );
+    // the retried commit fires strictly after the rolled-back attempt
+    let rollback_frame = out
+        .fault_log()
+        .lines()
+        .find(|l| l.contains("fault swapfail:"))
+        .and_then(|l| l[7..12].parse::<usize>().ok())
+        .expect("rollback frame");
+    assert!(
+        out.switches.iter().any(|s| s.frame > rollback_frame),
+        "no committed switch after the frame-{rollback_frame} rollback"
+    );
+}
+
+#[test]
+fn seu_is_scrubbed_with_finite_mttr() {
+    let out = replay(1, Some("seu"));
+    assert_zero_loss(&out, "seu");
+    assert!(out.metrics.scrub_repairs >= 1, "scrubber never repaired the flip");
+    assert!(
+        out.metrics.mean_time_to_recovery_ms() > 0.0,
+        "repair recorded but MTTR is zero"
+    );
+    // the misrouting window marks its frames Degraded, never lost
+    assert!(out.degraded > 0, "SEU window produced no degraded responses");
+    assert!(out.fault_log().contains("seu: bit"), "{}", out.fault_log());
+    assert!(out.fault_log().contains("scrub: crc mismatch repaired"), "{}", out.fault_log());
+}
+
+#[test]
+fn transient_faults_retry_to_success() {
+    let out = replay(4, Some("transient"));
+    assert_zero_loss(&out, "transient");
+    // default transient clauses fail one attempt -> every strike retries
+    // through to a successful (non-failed) terminal response
+    assert!(out.metrics.retries >= 1, "no retries recorded");
+    assert_eq!(out.failed, 0, "single-attempt transients must heal via retry");
+    assert!(out.fault_log().contains("fault transient:"), "{}", out.fault_log());
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_no_plan() {
+    let mut with_empty = {
+        let mut coord = start(1);
+        let cap = trace::default_squeeze_cap(&coord.path_energy_rows());
+        let events = trace::step(FRAMES as f64 / RATE_HZ, cap);
+        let plan = FaultPlan::empty(SEED);
+        coord
+            .replay_trace(
+                &events,
+                &TraceConfig { frames: FRAMES, rate_hz: RATE_HZ, seed: SEED },
+                Some(&plan),
+            )
+            .expect("replay")
+    };
+    let without = replay(1, None);
+    assert_eq!(with_empty.decision_log(), without.decision_log());
+    assert_eq!(with_empty.frames_by_path, without.frames_by_path);
+    assert_eq!(with_empty.energy_mj, without.energy_mj, "energy integral diverged");
+    assert!(with_empty.fault_log().is_empty());
+    assert_eq!(with_empty.metrics.faults_injected, 0);
+    // an armed-but-empty plan still renders the fault summary lines; the
+    // no-plan outcome must not (bit-identical legacy output) — flattening
+    // the flag makes the remaining summaries comparable
+    assert!(with_empty.injection);
+    assert!(!without.injection);
+    with_empty.injection = false;
+    assert_eq!(with_empty.render_summary(), without.render_summary());
+}

@@ -294,6 +294,131 @@ fn prop_energy_telemetry_merge_associative() {
 }
 
 #[test]
+fn prop_backoff_schedule_deterministic() {
+    // retry instants must be a pure function of (policy, request id,
+    // attempt): evaluation order, chunking and repetition are all
+    // unobservable — the invariant the canonical fault log's
+    // worker-count byte-identity rests on. Bounded and (for jitter < 1)
+    // strictly increasing, so a retry never lands before its
+    // predecessor.
+    use forgemorph::fault::RetryPolicy;
+    check(
+        "backoff-deterministic",
+        200,
+        33,
+        |rng: &mut Rng| {
+            let policy = RetryPolicy {
+                max_retries: (rng.below(4) + 1) as u32,
+                base_ms: 0.1 + rng.f64() * 2.0,
+                factor: 1.2 + rng.f64() * 2.0,
+                jitter_pct: rng.f64() * 0.9,
+                seed: rng.next_u64(),
+            };
+            let id = rng.next_u64();
+            (policy, id)
+        },
+        |&(policy, id)| {
+            let retries = policy.max_retries;
+            let forward = policy.instants_ms(id, retries);
+            // re-derive each instant out of order and standalone: both
+            // must reproduce the forward schedule exactly
+            for a in (0..retries).rev() {
+                let again = policy.instants_ms(id, retries);
+                ensure(
+                    again[a as usize].to_bits() == forward[a as usize].to_bits(),
+                    format!("instant {a} not reproducible"),
+                )?;
+                let single = policy.backoff_ms(id, a);
+                ensure(
+                    single.to_bits() == policy.backoff_ms(id, a).to_bits(),
+                    format!("backoff_ms({id}, {a}) impure"),
+                )?;
+            }
+            let mut prev = 0.0;
+            for (a, &t) in forward.iter().enumerate() {
+                ensure(t > prev, format!("instant {a} not increasing: {forward:?}"))?;
+                let nominal = policy.base_ms * policy.factor.powi(a as i32);
+                let lo = nominal * (1.0 - policy.jitter_pct) - 1e-12;
+                let hi = nominal * (1.0 + policy.jitter_pct) + 1e-12;
+                ensure(
+                    t - prev >= lo && t - prev <= hi,
+                    format!("delay {a} outside jitter band: {}", t - prev),
+                )?;
+                prev = t;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_counter_merge_associative() {
+    // the fault-telemetry counters merge like a monoid, exactly like the
+    // energy fields: aggregation order across shards can never change
+    // the `report faults` numbers (integer counters are exact; MTTR
+    // numerator/denominator merge independently).
+    use forgemorph::coordinator::ServingMetrics;
+    check(
+        "fault-merge-assoc",
+        200,
+        34,
+        |rng: &mut Rng| {
+            let mk = |rng: &mut Rng| {
+                let mut m = ServingMetrics::default();
+                m.faults_injected = rng.below(20) as u64;
+                m.retries = rng.below(20) as u64;
+                m.timeouts = rng.below(10) as u64;
+                m.failed_requests = rng.below(10) as u64;
+                m.degraded_requests = rng.below(30) as u64;
+                m.swaps_rolled_back = rng.below(4) as u64;
+                m.scrub_repairs = rng.below(4) as u64;
+                m.recoveries = rng.below(6) as u64;
+                m.recovery_ms_sum = rng.f64() * 40.0;
+                m
+            };
+            (mk(rng), mk(rng), mk(rng))
+        },
+        |(a, b, c)| {
+            let left = {
+                let mut x = a.clone();
+                x.merge(b);
+                x.merge(c);
+                x
+            };
+            let right = {
+                let mut bc = b.clone();
+                bc.merge(c);
+                let mut x = a.clone();
+                x.merge(&bc);
+                x
+            };
+            let ints = |m: &ServingMetrics| {
+                [
+                    m.faults_injected,
+                    m.retries,
+                    m.timeouts,
+                    m.failed_requests,
+                    m.degraded_requests,
+                    m.swaps_rolled_back,
+                    m.scrub_repairs,
+                    m.recoveries,
+                ]
+            };
+            ensure(ints(&left) == ints(&right), "integer fault counters not associative")?;
+            let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs()));
+            ensure(
+                close(left.recovery_ms_sum, right.recovery_ms_sum),
+                "recovery sum not associative",
+            )?;
+            ensure(
+                close(left.mean_time_to_recovery_ms(), right.mean_time_to_recovery_ms()),
+                "MTTR not associative",
+            )
+        },
+    );
+}
+
+#[test]
 fn prop_quant_roundtrip_bounded() {
     check(
         "quant-bound",
