@@ -608,6 +608,8 @@ fn lanes_of(src: LaneSrc, genes: &[usize], pool: &[LaneSrc]) -> usize {
 #[derive(Debug, Clone, Copy)]
 enum StagePre {
     Conv {
+        /// chromosome slot owning this stage's parallelism gene
+        slot: usize,
         filters: usize,
         cin: usize,
         pass: usize,
@@ -617,6 +619,7 @@ enum StagePre {
         res8: Resources,
     },
     DwConv {
+        slot: usize,
         cin: usize,
         pass: usize,
         fill: usize,
@@ -654,6 +657,45 @@ pub struct FastEval {
     pub period_cycles: usize,
 }
 
+/// Per-stage (segment) evaluation result — the unit of the DSE's
+/// stage-level cache. A `StageFit` is a pure function of the packed
+/// [`Evaluator::stage_key`] (the stage's local gene window plus its
+/// boundary lane context), so identical keys across chromosomes share
+/// one computation; [`Evaluator::compose`] reassembles whole-candidate
+/// fitness with the same order-independent integer math as
+/// [`Evaluator::objectives`], keeping fronts bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageFit {
+    /// cycles this stage occupies per frame (pass cycles x serial)
+    pub occupancy_cycles: usize,
+    /// serial factor > 1: the stage buffers its fmap and adds its full
+    /// occupancy to first-frame latency (Eq. 12's serialized term)
+    pub serialized: bool,
+    /// pipeline fill contribution
+    pub fill_cycles: usize,
+    pub resources: Resources,
+    /// conv-like C_PE contribution to `total_pes` (0 for other stages)
+    pub pe_count: usize,
+    /// words/frame streamed across the stage's output boundary
+    pub bandwidth_words: usize,
+}
+
+/// Per-chromosome-slot facts for gene-dependent lower bounds
+/// ([`crate::dse::roofline::GeneBounds`]): everything a sound latency /
+/// DSP bound needs about the conv stage owning that gene.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotFact {
+    /// depthwise stage: its serial factor (and so its latency term) is
+    /// exactly determined by the gene, independent of boundary lanes
+    pub dw: bool,
+    pub filters: usize,
+    pub cin: usize,
+    /// pass cycles (frame scan incl. blanking)
+    pub pass: usize,
+    pub dsp_per_pe16: usize,
+    pub dsp_per_pe8: usize,
+}
+
 /// Reusable evaluator: hoists pass scheduling, shape inference, bound
 /// checks and per-PE resource lookups out of the 10^4-10^5-call DSE loop.
 /// `objectives()` performs zero heap allocation.
@@ -662,6 +704,9 @@ pub struct Evaluator {
     stages: Vec<(StagePre, LaneSrc)>,
     /// flat pool backing `LaneSrc::Max` ranges
     lane_pool: Vec<LaneSrc>,
+    /// per stage: output boundary words per frame (w*h*c) — the
+    /// gene-independent bandwidth figure reported in [`StageFit`]
+    out_words: Vec<usize>,
     bounds: Vec<usize>,
     source: usize,
     clock_mhz: f64,
@@ -677,6 +722,7 @@ impl Evaluator {
     pub fn from_plan(plan: &StagePlan, device: &Device) -> Result<Evaluator, DesignError> {
         let blank = Blanking::default();
         let mut stages: Vec<(StagePre, LaneSrc)> = Vec::with_capacity(plan.stages.len());
+        let mut out_words: Vec<usize> = Vec::with_capacity(plan.stages.len());
         let mut lane_pool: Vec<LaneSrc> = Vec::new();
         // lane provenance flowing OUT of each scheduled stage
         let mut out_src: Vec<LaneSrc> = Vec::with_capacity(plan.stages.len());
@@ -703,8 +749,10 @@ impl Evaluator {
                     let pe = mk(FpRep::Int16);
                     let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles();
-                    self_src = LaneSrc::Conv { slot: stage.conv_slot.expect("conv slot") };
+                    let slot = stage.conv_slot.expect("conv slot");
+                    self_src = LaneSrc::Conv { slot };
                     StagePre::Conv {
+                        slot,
                         filters: *filters,
                         cin: inp.c,
                         pass,
@@ -727,11 +775,10 @@ impl Evaluator {
                     let pe = mk(FpRep::Int16);
                     let fill = (*k - 1) * (inp.w + blank.back_porch + blank.front_porch)
                         + pe.overhead_cycles();
-                    self_src = LaneSrc::Dw {
-                        slot: stage.conv_slot.expect("conv slot"),
-                        cin: inp.c,
-                    };
+                    let slot = stage.conv_slot.expect("conv slot");
+                    self_src = LaneSrc::Dw { slot, cin: inp.c };
                     StagePre::DwConv {
+                        slot,
                         cin: inp.c,
                         pass,
                         fill,
@@ -841,12 +888,14 @@ impl Evaluator {
                 },
             };
             stages.push((pre, in_src));
+            out_words.push(stage.output.w * stage.output.h * stage.output.c);
             out_src.push(self_src);
         }
         let (in_h, in_w, _) = plan.input_dims;
         Ok(Evaluator {
             stages,
             lane_pool,
+            out_words,
             bounds: plan.conv_bounds(),
             source: (in_w + blank.back_porch + blank.front_porch) * in_h,
             clock_mhz: device.clock_mhz,
@@ -891,7 +940,7 @@ impl Evaluator {
         for &(pre, in_src) in &self.stages {
             let in_lanes = lanes_of(in_src, parallelism, &self.lane_pool);
             match pre {
-                StagePre::Conv { filters, cin, pass, fill, res16, res8 } => {
+                StagePre::Conv { filters, cin, pass, fill, res16, res8, .. } => {
                     let p = parallelism[conv_idx];
                     conv_idx += 1;
                     let lanes_in = in_lanes.min(cin).max(1);
@@ -907,7 +956,7 @@ impl Evaluator {
                     }
                     period = period.max(occ);
                 }
-                StagePre::DwConv { cin, pass, fill, res16, res8 } => {
+                StagePre::DwConv { cin, pass, fill, res16, res8, .. } => {
                     let p = parallelism[conv_idx];
                     conv_idx += 1;
                     let lanes = p.min(cin).max(1);
@@ -1041,6 +1090,252 @@ impl Evaluator {
 
     pub fn fits(&self, eval: &FastEval) -> bool {
         eval.resources.fits(&self.budget)
+    }
+
+    // -- per-stage (segment) kernel ------------------------------------
+
+    /// Number of StagePlan stages (segments) this evaluator models.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Normalized `(own gene, boundary lanes)` inputs that fully
+    /// determine stage `idx`'s fit for a chromosome — its local gene
+    /// window plus boundary context. Normalization (`min(cin).max(1)`
+    /// clamps, constant-lane collapse) happens here so distinct
+    /// chromosomes that resolve to the same effective inputs share one
+    /// cache entry.
+    fn stage_inputs(&self, idx: usize, parallelism: &[usize]) -> (usize, usize) {
+        let (pre, in_src) = self.stages[idx];
+        let in_lanes = || lanes_of(in_src, parallelism, &self.lane_pool);
+        match pre {
+            StagePre::Conv { slot, cin, .. } => {
+                (parallelism[slot], in_lanes().min(cin).max(1))
+            }
+            // depthwise: the fit depends on the own gene alone
+            StagePre::DwConv { slot, .. } => (parallelism[slot], 0),
+            StagePre::Pool { cin, .. }
+            | StagePre::Spp { cin, .. }
+            | StagePre::Fc { cin, .. } => (0, in_lanes().min(cin).max(1)),
+            StagePre::Fixed { lanes_from_prev, .. } => {
+                (0, if lanes_from_prev { in_lanes() } else { 1 })
+            }
+            StagePre::Concat { src_max, .. } => {
+                (0, lanes_of(src_max, parallelism, &self.lane_pool))
+            }
+            StagePre::Upsample { .. } => (0, in_lanes()),
+        }
+    }
+
+    /// Packed stage-cache key: `(stage, own gene, boundary lanes)` in
+    /// one u64 (`rep` is fixed per search, so it stays out of the key).
+    pub fn stage_key(&self, idx: usize, parallelism: &[usize]) -> u64 {
+        let (p, lanes) = self.stage_inputs(idx, parallelism);
+        debug_assert!(idx < (1 << 24) && p < (1 << 20) && lanes < (1 << 20));
+        ((idx as u64) << 40) | ((p as u64) << 20) | lanes as u64
+    }
+
+    /// The per-stage kernel: fit of stage `idx` from its normalized
+    /// inputs (see [`Evaluator::stage_inputs`]). A pure function of
+    /// `(idx, p, lanes, rep)`; arm-for-arm identical math to
+    /// [`Evaluator::objectives`].
+    pub fn stage_fit(&self, idx: usize, p: usize, lanes: usize, rep: FpRep) -> StageFit {
+        let simd = if rep == FpRep::Int8 { 2 } else { 1 };
+        let bandwidth_words = self.out_words[idx];
+        let (pre, _) = self.stages[idx];
+        match pre {
+            StagePre::Conv { filters, cin, pass, fill, res16, res8, .. } => {
+                let pe_count = p * lanes;
+                let serial = filters.div_ceil(p * simd) * cin.div_ceil(lanes);
+                let res = if rep == FpRep::Int8 { res8 } else { res16 };
+                StageFit {
+                    occupancy_cycles: pass * serial,
+                    serialized: serial > 1,
+                    fill_cycles: fill,
+                    resources: res.scale(pe_count),
+                    pe_count,
+                    bandwidth_words,
+                }
+            }
+            StagePre::DwConv { cin, pass, fill, res16, res8, .. } => {
+                let l = p.min(cin).max(1);
+                let serial = cin.div_ceil(l * simd);
+                let res = if rep == FpRep::Int8 { res8 } else { res16 };
+                StageFit {
+                    occupancy_cycles: pass * serial,
+                    serialized: serial > 1,
+                    fill_cycles: fill,
+                    resources: res.scale(l),
+                    pe_count: l,
+                    bandwidth_words,
+                }
+            }
+            StagePre::Pool { cin, pass, fill, res } => {
+                let serial = cin.div_ceil(lanes);
+                StageFit {
+                    occupancy_cycles: pass * serial,
+                    serialized: serial > 1,
+                    fill_cycles: fill,
+                    resources: res.scale(lanes),
+                    pe_count: 0,
+                    bandwidth_words,
+                }
+            }
+            StagePre::Fc { out, cin, fm_w, fm_h, fill } => {
+                let pe = FcPe { fc_out: out, n_pe: lanes, channels: cin, fm_w, fm_h };
+                StageFit {
+                    occupancy_cycles: pe.latency_cycles(Blanking::default()),
+                    serialized: pe.parallelism() > 1,
+                    fill_cycles: fill,
+                    resources: pe.resources(),
+                    pe_count: 0,
+                    bandwidth_words,
+                }
+            }
+            StagePre::Fixed { occupancy, fill, res_per_lane, extra, .. } => StageFit {
+                occupancy_cycles: occupancy,
+                serialized: false,
+                fill_cycles: fill,
+                resources: res_per_lane.scale(lanes).add(&extra),
+                pe_count: 0,
+                bandwidth_words,
+            },
+            StagePre::Concat { n_in, bram8, bram16, .. } => StageFit {
+                occupancy_cycles: 0,
+                serialized: false,
+                fill_cycles: 2,
+                resources: Resources {
+                    dsp: 0,
+                    lut: CONCAT_MUX_LUT * n_in * lanes,
+                    ff: CONCAT_MUX_FF * n_in * lanes,
+                    bram: if rep == FpRep::Int8 { bram8 } else { bram16 },
+                },
+                pe_count: 0,
+                bandwidth_words,
+            },
+            StagePre::Upsample { occupancy, fill, row_words } => StageFit {
+                occupancy_cycles: occupancy,
+                serialized: false,
+                fill_cycles: fill,
+                resources: Resources {
+                    dsp: 0,
+                    lut: UPSAMPLE_LUT * lanes,
+                    ff: UPSAMPLE_FF * lanes,
+                    bram: fifo_bram(row_words, rep),
+                },
+                pe_count: 0,
+                bandwidth_words,
+            },
+            StagePre::Spp { pass, fill, pool_res, skew_words, .. } => StageFit {
+                occupancy_cycles: pass * 4,
+                // the four SPP taps always stream out sequentially
+                serialized: true,
+                fill_cycles: fill,
+                resources: pool_res.scale(3 * lanes).add(&Resources {
+                    dsp: 0,
+                    lut: CONCAT_MUX_LUT * 4 * lanes,
+                    ff: CONCAT_MUX_FF * 4 * lanes,
+                    bram: fifo_bram(skew_words, rep),
+                }),
+                pe_count: 0,
+                bandwidth_words,
+            },
+        }
+    }
+
+    /// [`Evaluator::stage_fit`] from a packed [`Evaluator::stage_key`]
+    /// (what the DSE workers compute cache fills from).
+    pub fn stage_fit_packed(&self, key: u64, rep: FpRep) -> StageFit {
+        let idx = (key >> 40) as usize;
+        let p = ((key >> 20) & 0xF_FFFF) as usize;
+        let lanes = (key & 0xF_FFFF) as usize;
+        self.stage_fit(idx, p, lanes, rep)
+    }
+
+    /// Assemble whole-candidate fitness from per-stage fits (in stage
+    /// order). Pipeline-max for the frame period, sums for resources /
+    /// fill / serialized latency — all order-independent integer math,
+    /// so the result is bitwise-equal to [`Evaluator::objectives`] on
+    /// the same chromosome (test-enforced).
+    pub fn compose<I: IntoIterator<Item = StageFit>>(&self, fits: I) -> FastEval {
+        let mut total = Resources::default();
+        let mut total_pes = 0usize;
+        let mut fill_sum = 0usize;
+        let mut serialized = 0usize;
+        let mut period = self.source;
+        for f in fits {
+            total = total.add(&f.resources);
+            total_pes += f.pe_count;
+            fill_sum += f.fill_cycles;
+            if f.serialized {
+                serialized += f.occupancy_cycles;
+            }
+            period = period.max(f.occupancy_cycles);
+        }
+        FastEval {
+            resources: total,
+            total_pes,
+            latency_cycles: self.source + fill_sum + serialized,
+            period_cycles: period.max(1),
+        }
+    }
+
+    // -- roofline lower-bound facts ------------------------------------
+
+    /// Gene-independent latency floor: source scan + every stage's fill
+    /// + the always-serialized SPP occupancies. Every chromosome's
+    /// `latency_cycles` is >= this.
+    pub fn latency_floor_cycles(&self) -> usize {
+        let mut fill_sum = 0usize;
+        let mut fixed_serialized = 0usize;
+        for &(pre, _) in &self.stages {
+            match pre {
+                StagePre::Conv { fill, .. }
+                | StagePre::DwConv { fill, .. }
+                | StagePre::Pool { fill, .. }
+                | StagePre::Fc { fill, .. }
+                | StagePre::Fixed { fill, .. }
+                | StagePre::Upsample { fill, .. } => fill_sum += fill,
+                StagePre::Concat { .. } => fill_sum += 2,
+                StagePre::Spp { pass, fill, .. } => {
+                    fill_sum += fill;
+                    fixed_serialized += pass * 4;
+                }
+            }
+        }
+        self.source + fill_sum + fixed_serialized
+    }
+
+    /// Per-chromosome-slot conv facts, in gene order (the inputs of
+    /// [`crate::dse::roofline::GeneBounds`]).
+    pub fn slot_facts(&self) -> Vec<SlotFact> {
+        let mut out = vec![SlotFact::default(); self.bounds.len()];
+        for &(pre, _) in &self.stages {
+            match pre {
+                StagePre::Conv { slot, filters, cin, pass, res16, res8, .. } => {
+                    out[slot] = SlotFact {
+                        dw: false,
+                        filters,
+                        cin,
+                        pass,
+                        dsp_per_pe16: res16.dsp,
+                        dsp_per_pe8: res8.dsp,
+                    };
+                }
+                StagePre::DwConv { slot, cin, pass, res16, res8, .. } => {
+                    out[slot] = SlotFact {
+                        dw: true,
+                        filters: cin,
+                        cin,
+                        pass,
+                        dsp_per_pe16: res16.dsp,
+                        dsp_per_pe8: res8.dsp,
+                    };
+                }
+                _ => {}
+            }
+        }
+        out
     }
 }
 
@@ -1327,5 +1622,39 @@ mod tests {
         assert!(ev.objectives(&[1, 1], FpRep::Int8).is_err());
         assert!(ev.objectives(&[0, 1, 1], FpRep::Int8).is_err());
         assert!(ev.objectives(&[99, 1, 1], FpRep::Int8).is_err());
+    }
+
+    #[test]
+    fn stage_composition_matches_objectives() {
+        // the segment kernel + compose pass must be bitwise-identical to
+        // the monolithic walk: sums and maxes over the same integers in
+        // the same stage order, so FastEval equality is exact
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(33);
+        for net in [
+            zoo::mnist(),
+            zoo::svhn(),
+            zoo::cifar10(),
+            zoo::mobilenet_v2(),
+            zoo::unet_tiny(),
+            zoo::yolov5l(),
+        ] {
+            let ev = Evaluator::new(&net, &ZYNQ_7100).unwrap();
+            let bounds = net.conv_filter_bounds();
+            let iters = if bounds.len() > 60 { 4 } else { 25 };
+            for _ in 0..iters {
+                let parallelism: Vec<usize> =
+                    bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect();
+                let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };
+                let mono = ev.objectives(&parallelism, rep).unwrap();
+                let composed = ev.compose(
+                    (0..ev.n_stages())
+                        .map(|s| ev.stage_fit_packed(ev.stage_key(s, &parallelism), rep)),
+                );
+                assert_eq!(composed, mono, "{} {:?} {:?}", net.name, parallelism, rep);
+                // and the floor really floors
+                assert!(ev.latency_floor_cycles() <= mono.latency_cycles);
+            }
+        }
     }
 }

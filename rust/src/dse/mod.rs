@@ -31,6 +31,23 @@
 //!   the path-independent base fitness and candidates differing only in
 //!   execution path share one analytical evaluation. Hit telemetry
 //!   lands in [`DseResult`].
+//! * **Segment reuse.** Chromosome-cache *misses* don't re-run the whole
+//!   analytical model: each StagePlan stage's fit is keyed on its packed
+//!   `(stage, own gene, boundary lanes)` window
+//!   ([`design::Evaluator::stage_key`]) in a stage-level primary cache,
+//!   and whole-candidate fitness is composed from the cached
+//!   [`design::StageFit`]s by [`design::Evaluator::compose`] — the same
+//!   order-independent integer math, so fronts stay bit-identical
+//!   (test-enforced). Mutation neighbors, which share almost every gene
+//!   with a parent, re-compute only the stages their changed genes
+//!   actually touch.
+//! * **Search shortcuts (opt-in).** `--prune` skips offspring whose
+//!   sound roofline lower bound ([`roofline::GeneBounds`]) already
+//!   violates the constraints or is Pareto-dominated by the current
+//!   feasible front; `--surrogate` pre-orders offspring evaluation with
+//!   a deterministic per-generation linear model on gene features
+//!   (dispatch order only — results return to their batch slots, so
+//!   fronts and telemetry stay bit-identical).
 //! * **Allocation discipline.** Gene buffers recycle through a scratch
 //!   pool ([`crossover_into`] fills caller buffers; discarded candidates
 //!   donate their vectors back), environmental selection is index-based
@@ -174,6 +191,28 @@ pub struct DseConfig {
     /// chromosome memo cache on/off (off reproduces the pre-cache
     /// baseline for benchmarking; results are identical either way)
     pub memo: bool,
+    /// stage-level (segment) memo on/off — the primary level of the
+    /// two-level cache, active only when `memo` is also on. On,
+    /// chromosome-cache misses are composed from cached per-stage fits
+    /// ([`design::Evaluator::stage_fit`]) instead of re-running the
+    /// monolithic kernel — identical math, identical fronts and
+    /// chromosome-level telemetry (test-enforced). Off reproduces the
+    /// chromosome-memo-only engine for benchmarking.
+    pub stage_memo: bool,
+    /// roofline dominated-region pre-filter (`explore --prune`):
+    /// offspring whose sound lower bound ([`roofline::GeneBounds`])
+    /// already violates the latency/DSP constraints or is dominated by
+    /// the current feasible front skip evaluation, counted in
+    /// [`DseResult::roofline_pruned`]. Opt-in: a skipped candidate never
+    /// enters the population, so the search *trajectory* (not the
+    /// soundness of any single prune) differs from the unpruned run.
+    pub prune: bool,
+    /// deterministic surrogate ranker (`explore --surrogate`): a
+    /// per-generation linear model on gene features pre-orders offspring
+    /// evaluation most-promising-first, front-loading the eval budget.
+    /// Dispatch order only — results return to their batch slots, so
+    /// fronts and telemetry are bit-identical on/off (test-enforced).
+    pub surrogate: bool,
     /// DistillCycle execution-path ladder (accuracy + MAC metadata,
     /// typically `AccuracyProfile::morph_paths()`). `Some` switches the
     /// search to three objectives: the chromosome gains one trailing
@@ -204,6 +243,9 @@ impl Default for DseConfig {
             seed: 0,
             threads: 1,
             memo: true,
+            stage_memo: true,
+            prune: false,
+            surrogate: false,
             accuracy_paths: None,
             energy_objective: false,
         }
@@ -225,17 +267,43 @@ pub struct DseResult {
     pub unique_evaluations: usize,
     /// chromosome-cache hits (cross-generation + within-batch)
     pub cache_hits: usize,
+    /// stage-cache hits: stage lookups (chromosome misses × stages)
+    /// served from the segment-level primary cache
+    pub stage_hits: usize,
+    /// stage-cache misses: per-stage kernel runs actually executed
+    pub stage_misses: usize,
+    /// offspring skipped by the roofline pre-filter (`--prune`) before
+    /// ever reaching evaluation
+    pub roofline_pruned: usize,
+    /// offspring whose evaluation-dispatch position the surrogate
+    /// ranker moved (`--surrogate`); 0 with the flag off
+    pub surrogate_reorders: usize,
     /// wall-clock time of the whole search, milliseconds
     pub wall_ms: f64,
 }
 
 impl DseResult {
-    /// Fraction of fitness lookups served from the chromosome cache.
+    /// Fraction of fitness lookups served from the **chromosome-level**
+    /// (assembled) cache — whole-candidate duplicates. Stage-level reuse
+    /// inside the misses is [`DseResult::stage_hit_rate`].
     pub fn cache_hit_rate(&self) -> f64 {
         if self.evaluations == 0 {
             0.0
         } else {
             self.cache_hits as f64 / self.evaluations as f64
+        }
+    }
+
+    /// Fraction of stage-kernel lookups served from the stage-level
+    /// (segment) cache. Only chromosome-cache *misses* reach the stage
+    /// level, so this measures reuse across distinct-but-similar
+    /// chromosomes (mutation/crossover neighbors).
+    pub fn stage_hit_rate(&self) -> f64 {
+        let total = self.stage_hits + self.stage_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.stage_hits as f64 / total as f64
         }
     }
 }
@@ -305,24 +373,32 @@ struct BaseFit {
     power_mw: f64,
 }
 
+/// Finish a [`design::FastEval`] into the memoized base fitness —
+/// shared by the monolithic kernel and the segment-composed path, so
+/// both produce bit-identical `BaseFit`s from equal `FastEval`s.
 #[inline]
-fn base_eval(evaluator: &design::Evaluator, conv_genes: &[usize], rep: FpRep) -> BaseFit {
-    let fast = evaluator
-        .objectives(conv_genes, rep)
-        .expect("chromosome respects bounds by construction");
+fn base_from_fast(evaluator: &design::Evaluator, fast: &design::FastEval) -> BaseFit {
     let power_mw = PowerModel::default().total_mw(
         &fast.resources,
         evaluator.clock_mhz(),
         Activity::default(),
     );
     BaseFit {
-        latency_ms: evaluator.latency_ms(&fast),
+        latency_ms: evaluator.latency_ms(fast),
         dsp: fast.resources.dsp,
         lut: fast.resources.lut,
         bram: fast.resources.bram,
         total_pes: fast.total_pes,
         power_mw,
     }
+}
+
+#[inline]
+fn base_eval(evaluator: &design::Evaluator, conv_genes: &[usize], rep: FpRep) -> BaseFit {
+    let fast = evaluator
+        .objectives(conv_genes, rep)
+        .expect("chromosome respects bounds by construction");
+    base_from_fast(evaluator, &fast)
 }
 
 /// Apply the (optional) trailing path-selection gene and the
@@ -386,10 +462,24 @@ fn eval_genes(
     finish_fit(base, genes, acc, constraints, evaluator.clock_mhz())
 }
 
-/// A worker's share of one generation: (batch slot, chromosome).
-type Job = Vec<(usize, Vec<usize>)>;
-/// Evaluated share: (batch slot, chromosome back, base fitness).
-type Done = Vec<(usize, Vec<usize>, BaseFit)>;
+/// A worker's share of one generation: chromosome-cache misses to run
+/// through the monolithic kernel, or stage-cache fills to compute from
+/// packed keys ([`design::Evaluator::stage_key`]). Both are pure
+/// key→value work — the memoization and ordering decisions stay on the
+/// main thread.
+enum Job {
+    /// (batch slot, chromosome) pairs
+    Chromosomes(Vec<(usize, Vec<usize>)>),
+    /// packed stage keys
+    StageKeys(Vec<u64>),
+}
+
+/// Evaluated share, mirroring the [`Job`] variant it answers.
+enum Done {
+    /// (batch slot, chromosome back, base fitness)
+    Chromosomes(Vec<(usize, Vec<usize>, BaseFit)>),
+    StageFits(Vec<(u64, design::StageFit)>),
+}
 
 /// Chromosome memo cache. Keyed on `(conv genes, rep)`: `rep` is fixed
 /// for a whole search, so the map keys on the boxed conv-gene slice
@@ -407,6 +497,20 @@ struct Memo {
     hits: usize,
 }
 
+/// Stage-level memo — the primary level of the two-level cache: packed
+/// [`design::Evaluator::stage_key`] → [`design::StageFit`]. A `None`
+/// value is the in-flight sentinel for keys first seen in the current
+/// batch (mirroring [`Memo`]'s), filled before composition. Probing and
+/// hit counting happen on the main thread in batch order, so the
+/// telemetry is thread-count-invariant (test-enforced); only the pure
+/// key→fit kernel fans out.
+#[derive(Default)]
+struct StageMemo {
+    map: FxHashMap<u64, Option<design::StageFit>>,
+    hits: usize,
+    misses: usize,
+}
+
 /// The per-search evaluation engine: shared immutable evaluator,
 /// persistent scoped workers, memo cache, telemetry.
 struct Engine<'a> {
@@ -416,6 +520,8 @@ struct Engine<'a> {
     /// 3-objective accuracy context (None ⇒ classic 2-objective search)
     acc: Option<&'a AccCtx>,
     memo: Option<Memo>,
+    /// segment-level primary cache (None ⇒ monolithic kernel per miss)
+    stage_memo: Option<StageMemo>,
     /// per-worker job channels (empty ⇒ serial)
     job_txs: Vec<mpsc::Sender<Job>>,
     done_rx: mpsc::Receiver<Done>,
@@ -442,9 +548,9 @@ impl Engine<'_> {
         self.evaluations += n;
         let strip = gene_strip(self.acc);
         let mut slots: Vec<Option<Candidate>> = (0..n).map(|_| None).collect();
-        let mut misses: Job = Vec::new();
+        let mut misses: Vec<(usize, Vec<usize>)> = Vec::new();
         // slots of in-batch duplicates, resolved from the memo afterwards
-        let mut dups: Job = Vec::new();
+        let mut dups: Vec<(usize, Vec<usize>)> = Vec::new();
 
         for (i, genes) in batch.into_iter().enumerate() {
             if let Some(memo) = &mut self.memo {
@@ -483,44 +589,10 @@ impl Engine<'_> {
         }
         self.unique_evaluations += misses.len();
 
-        // fan out only when the batch amortizes the channel round-trip
-        let workers = self.job_txs.len();
-        let done: Done = if workers == 0 || misses.len() < 2 * (workers + 1) {
-            misses
-                .into_iter()
-                .map(|(i, genes)| {
-                    let base =
-                        base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
-                    (i, genes, base)
-                })
-                .collect()
+        let done = if self.stage_memo.is_some() {
+            self.eval_misses_staged(misses, strip)
         } else {
-            let share = misses.len().div_ceil(workers + 1);
-            // main thread keeps the first share, workers take the rest
-            let mut rest = misses.split_off(share.min(misses.len()));
-            let mut sent = 0usize;
-            for tx in &self.job_txs {
-                if rest.is_empty() {
-                    break;
-                }
-                let tail = rest.split_off(share.min(rest.len()));
-                tx.send(rest).expect("dse worker alive");
-                rest = tail;
-                sent += 1;
-            }
-            debug_assert!(rest.is_empty());
-            let mut done: Done = misses
-                .into_iter()
-                .map(|(i, genes)| {
-                    let base =
-                        base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
-                    (i, genes, base)
-                })
-                .collect();
-            for _ in 0..sent {
-                done.extend(self.done_rx.recv().expect("dse worker result"));
-            }
-            done
+            self.eval_misses_monolithic(misses, strip)
         };
 
         for (i, genes, base) in done {
@@ -547,8 +619,153 @@ impl Engine<'_> {
         slots.into_iter().map(|s| s.expect("every slot filled")).collect()
     }
 
+    /// Pre-stage-cache path: every chromosome miss runs the monolithic
+    /// [`base_eval`] kernel, fanned out whole-chromosome when the batch
+    /// amortizes the channel round-trip.
+    fn eval_misses_monolithic(
+        &mut self,
+        mut misses: Vec<(usize, Vec<usize>)>,
+        strip: usize,
+    ) -> Vec<(usize, Vec<usize>, BaseFit)> {
+        let workers = self.job_txs.len();
+        if workers == 0 || misses.len() < 2 * (workers + 1) {
+            return misses
+                .into_iter()
+                .map(|(i, genes)| {
+                    let base =
+                        base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
+                    (i, genes, base)
+                })
+                .collect();
+        }
+        let share = misses.len().div_ceil(workers + 1);
+        // main thread keeps the first share, workers take the rest
+        let mut rest = misses.split_off(share.min(misses.len()));
+        let mut sent = 0usize;
+        for tx in &self.job_txs {
+            if rest.is_empty() {
+                break;
+            }
+            let tail = rest.split_off(share.min(rest.len()));
+            tx.send(Job::Chromosomes(rest)).expect("dse worker alive");
+            rest = tail;
+            sent += 1;
+        }
+        debug_assert!(rest.is_empty());
+        let mut done: Vec<(usize, Vec<usize>, BaseFit)> = misses
+            .into_iter()
+            .map(|(i, genes)| {
+                let base = base_eval(self.evaluator, &genes[..genes.len() - strip], self.rep);
+                (i, genes, base)
+            })
+            .collect();
+        for _ in 0..sent {
+            match self.done_rx.recv().expect("dse worker result") {
+                Done::Chromosomes(d) => done.extend(d),
+                Done::StageFits(_) => unreachable!("no stage jobs in flight"),
+            }
+        }
+        done
+    }
+
+    /// Stage-cache path, three phases. **A** (main thread): key every
+    /// stage of every miss and probe the stage memo in batch order, so
+    /// hit/miss telemetry is independent of the thread count. **B**:
+    /// compute the vacant `key → StageFit` bindings — pure values whose
+    /// arrival order is irrelevant, so they fan out freely. **C** (main
+    /// thread): compose each miss from its cached stage fits
+    /// ([`design::Evaluator::compose`]) — bit-identical to the
+    /// monolithic kernel by construction.
+    fn eval_misses_staged(
+        &mut self,
+        misses: Vec<(usize, Vec<usize>)>,
+        strip: usize,
+    ) -> Vec<(usize, Vec<usize>, BaseFit)> {
+        use std::collections::hash_map::Entry;
+        let evaluator = self.evaluator;
+        let rep = self.rep;
+        let n_stages = evaluator.n_stages();
+        // phase A
+        let mut keys: Vec<u64> = Vec::with_capacity(misses.len() * n_stages);
+        let mut need: Vec<u64> = Vec::new();
+        {
+            let sm = self.stage_memo.as_mut().expect("staged path needs the stage memo");
+            for (_, genes) in &misses {
+                let conv = &genes[..genes.len() - strip];
+                for s in 0..n_stages {
+                    let key = evaluator.stage_key(s, conv);
+                    keys.push(key);
+                    match sm.map.entry(key) {
+                        Entry::Occupied(_) => sm.hits += 1,
+                        Entry::Vacant(e) => {
+                            e.insert(None);
+                            sm.misses += 1;
+                            need.push(key);
+                        }
+                    }
+                }
+            }
+        }
+        // phase B: stage fits are tiny, so fan out only on big fills
+        let workers = self.job_txs.len();
+        let fits: Vec<(u64, design::StageFit)> =
+            if workers == 0 || need.len() < 32 * (workers + 1) {
+                need.into_iter().map(|k| (k, evaluator.stage_fit_packed(k, rep))).collect()
+            } else {
+                let share = need.len().div_ceil(workers + 1);
+                let mut rest = need.split_off(share.min(need.len()));
+                let mut sent = 0usize;
+                for tx in &self.job_txs {
+                    if rest.is_empty() {
+                        break;
+                    }
+                    let tail = rest.split_off(share.min(rest.len()));
+                    tx.send(Job::StageKeys(rest)).expect("dse worker alive");
+                    rest = tail;
+                    sent += 1;
+                }
+                debug_assert!(rest.is_empty());
+                let mut fits: Vec<(u64, design::StageFit)> = need
+                    .into_iter()
+                    .map(|k| (k, evaluator.stage_fit_packed(k, rep)))
+                    .collect();
+                for _ in 0..sent {
+                    match self.done_rx.recv().expect("dse worker result") {
+                        Done::StageFits(d) => fits.extend(d),
+                        Done::Chromosomes(_) => unreachable!("no chromosome jobs in flight"),
+                    }
+                }
+                fits
+            };
+        // phase C
+        let sm = self.stage_memo.as_mut().expect("staged path needs the stage memo");
+        for (k, fit) in fits {
+            *sm.map.get_mut(&k).expect("pending stage entry present") = Some(fit);
+        }
+        let sm = self.stage_memo.as_ref().expect("staged path needs the stage memo");
+        misses
+            .into_iter()
+            .enumerate()
+            .map(|(mi, (i, genes))| {
+                let window = &keys[mi * n_stages..(mi + 1) * n_stages];
+                let fast = evaluator
+                    .compose(window.iter().map(|k| sm.map[k].expect("stage fit computed")));
+                let base = base_from_fast(evaluator, &fast);
+                (i, genes, base)
+            })
+            .collect()
+    }
+
     fn cache_hits(&self) -> usize {
         self.memo.as_ref().map_or(0, |m| m.hits)
+    }
+
+    fn stage_hits(&self) -> usize {
+        self.stage_memo.as_ref().map_or(0, |m| m.hits)
+    }
+
+    fn stage_misses(&self) -> usize {
+        self.stage_memo.as_ref().map_or(0, |m| m.misses)
     }
 }
 
@@ -582,17 +799,30 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
             scope.spawn(move || {
                 // persistent worker: one wake-up per generation, exits
                 // when the engine (and with it the job sender) drops.
-                // Workers run only the pure path-independent kernel; the
-                // path/constraint finishing stays on the main thread.
+                // Workers run only pure key→value kernels (chromosome or
+                // stage); memo probing and the path/constraint finishing
+                // stay on the main thread.
                 while let Ok(job) = rx.recv() {
-                    let done: Done = job
-                        .into_iter()
-                        .map(|(i, genes)| {
-                            let base =
-                                base_eval(evaluator, &genes[..genes.len() - strip], rep);
-                            (i, genes, base)
-                        })
-                        .collect();
+                    let done = match job {
+                        Job::Chromosomes(share) => Done::Chromosomes(
+                            share
+                                .into_iter()
+                                .map(|(i, genes)| {
+                                    let base = base_eval(
+                                        evaluator,
+                                        &genes[..genes.len() - strip],
+                                        rep,
+                                    );
+                                    (i, genes, base)
+                                })
+                                .collect(),
+                        ),
+                        Job::StageKeys(keys) => Done::StageFits(
+                            keys.into_iter()
+                                .map(|k| (k, evaluator.stage_fit_packed(k, rep)))
+                                .collect(),
+                        ),
+                    };
                     if done_tx.send(done).is_err() {
                         break;
                     }
@@ -608,6 +838,10 @@ pub fn run(net: &Network, device: &Device, cfg: &DseConfig) -> DseResult {
             constraints: cfg.constraints,
             acc: acc_ctx.as_ref(),
             memo: cfg.memo.then(|| Memo { map: FxHashMap::default(), hits: 0 }),
+            // the segment cache only makes sense under the chromosome
+            // memo (it serves that cache's misses); `--no-memo` disables
+            // both, reproducing the uncached baseline
+            stage_memo: (cfg.memo && cfg.stage_memo).then(StageMemo::default),
             job_txs,
             done_rx,
             evaluations: 0,
@@ -659,6 +893,12 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
     soa.rebuild(&pop);
     let mut ranking = nsga2::Ranking::build(&soa);
 
+    // roofline pre-filter state (`--prune`): sound gene-dependent lower
+    // bounds, built once — the floor and slot facts are gene-independent
+    let gene_lb = cfg.prune.then(|| roofline::GeneBounds::new(engine.evaluator, cfg.rep));
+    let mut roofline_pruned = 0usize;
+    let mut surrogate_reorders = 0usize;
+
     for _gen in 0..cfg.generations {
         // offspring genes via tournament + crossover + Alg.1 mutation —
         // main thread only, so the RNG stream is thread-count-invariant
@@ -686,7 +926,62 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
             }
         }
 
-        let offspring = engine.eval_batch(batch);
+        // roofline pre-filter: drop offspring whose sound lower bound is
+        // already constraint-violating or dominated by the current
+        // feasible front — they can never improve it. The gene buffers
+        // go back to the scratch pool.
+        if let Some(lb) = &gene_lb {
+            let front: Vec<(f64, f64, f64)> = ranking
+                .first_front()
+                .filter(|&i| pop[i].violation == 0.0)
+                .map(|i| {
+                    let o = &pop[i].objectives;
+                    (o.latency_ms, o.dsp as f64, o.accuracy)
+                })
+                .collect();
+            let strip = gene_strip(engine.acc);
+            batch.retain_mut(|genes| {
+                let prune = roofline_prunes(
+                    lb,
+                    genes,
+                    strip,
+                    engine.acc,
+                    &cfg.constraints,
+                    cfg.energy_objective,
+                    &front,
+                );
+                if prune {
+                    roofline_pruned += 1;
+                    let mut g = std::mem::take(genes);
+                    g.clear();
+                    spare.push(g);
+                }
+                !prune
+            });
+        }
+
+        // surrogate ranker: permute only the evaluation *dispatch* order
+        // (most promising first); results land back in their original
+        // slots, so everything downstream is bit-identical to the
+        // unranked run — what it buys is eval-budget front-loading.
+        let offspring = if cfg.surrogate && !batch.is_empty() {
+            let model = surrogate_fit(&pop);
+            let scores: Vec<f64> = batch.iter().map(|g| surrogate_score(&model, g)).collect();
+            let mut order: Vec<usize> = (0..batch.len()).collect();
+            order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+            surrogate_reorders += order.iter().enumerate().filter(|&(j, &o)| o != j).count();
+            let mut taken: Vec<Option<Vec<usize>>> = batch.into_iter().map(Some).collect();
+            let permuted: Vec<Vec<usize>> =
+                order.iter().map(|&o| taken[o].take().expect("order is a permutation")).collect();
+            let evald = engine.eval_batch(permuted);
+            let mut out: Vec<Option<Candidate>> = (0..evald.len()).map(|_| None).collect();
+            for (j, c) in evald.into_iter().enumerate() {
+                out[order[j]] = Some(c);
+            }
+            out.into_iter().map(|c| c.expect("every slot restored")).collect()
+        } else {
+            engine.eval_batch(batch)
+        };
         evaluated
             .extend(offspring.iter().map(|c| (c.objectives.latency_ms, c.objectives.dsp)));
 
@@ -741,8 +1036,90 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
         evaluations: engine.evaluations,
         unique_evaluations: engine.unique_evaluations,
         cache_hits: engine.cache_hits(),
+        stage_hits: engine.stage_hits(),
+        stage_misses: engine.stage_misses(),
+        roofline_pruned,
+        surrogate_reorders,
         wall_ms: 0.0, // stamped by `run`
     }
+}
+
+/// `--prune` decision for one offspring: true iff the roofline lower
+/// bound alone already proves the candidate violates a hard latency/DSP
+/// constraint, or that a current feasible front member Pareto-dominates
+/// it. Sound by [`roofline::GeneBounds`]'s bound direction: the true
+/// latency/DSP only sit *above* the bound, so a point dominating the
+/// bound dominates the truth (accuracy is exact — it depends only on
+/// the path gene). With the energy axis on there is no sound energy
+/// lower bound, so only the constraint rule applies.
+fn roofline_prunes(
+    lb: &roofline::GeneBounds,
+    genes: &[usize],
+    strip: usize,
+    acc: Option<&AccCtx>,
+    constraints: &Constraints,
+    energy_objective: bool,
+    front: &[(f64, f64, f64)],
+) -> bool {
+    let conv = &genes[..genes.len() - strip];
+    let mut lat_lb = lb.latency_ms_lb(conv);
+    let mut acc_cand = 1.0;
+    if let Some(ctx) = acc {
+        let pi = genes[genes.len() - 1] - 1; // path gene is 1-based
+        lat_lb *= ctx.ratios[pi];
+        acc_cand = ctx.accs[pi];
+    }
+    let dsp_lb = lb.dsp_lb(conv);
+    if let Some(t) = constraints.latency_ms {
+        if lat_lb > t {
+            return true;
+        }
+    }
+    if let Some(d) = constraints.dsp {
+        if dsp_lb > d {
+            return true;
+        }
+    }
+    if energy_objective {
+        return false;
+    }
+    let dsp_lb = dsp_lb as f64;
+    front.iter().any(|&(l, d, a)| {
+        l <= lat_lb
+            && d <= dsp_lb
+            && a >= acc_cand
+            && (l < lat_lb || d < dsp_lb || a > acc_cand)
+    })
+}
+
+/// Fit the surrogate: per-gene univariate least-squares slopes against
+/// `latency + big·violation` over the current population — deterministic
+/// (no RNG, fixed iteration order) and O(pop × genes).
+fn surrogate_fit(pop: &[Candidate]) -> Vec<(f64, f64)> {
+    let n = pop.len() as f64;
+    let dim = pop[0].config.parallelism.len();
+    let ys: Vec<f64> =
+        pop.iter().map(|c| c.objectives.latency_ms + 1e6 * c.violation).collect();
+    let y_mean = ys.iter().sum::<f64>() / n;
+    let mut model = Vec::with_capacity(dim);
+    for i in 0..dim {
+        let x_mean = pop.iter().map(|c| c.config.parallelism[i] as f64).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut var = 0.0;
+        for (c, y) in pop.iter().zip(&ys) {
+            let dx = c.config.parallelism[i] as f64 - x_mean;
+            cov += dx * (y - y_mean);
+            var += dx * dx;
+        }
+        model.push((x_mean, if var > 0.0 { cov / var } else { 0.0 }));
+    }
+    model
+}
+
+/// Predicted relative objective of a chromosome under the fitted model
+/// (lower = more promising; only the ordering matters).
+fn surrogate_score(model: &[(f64, f64)], genes: &[usize]) -> f64 {
+    model.iter().zip(genes).map(|(&(m, w), &g)| w * (g as f64 - m)).sum()
 }
 
 /// Keep exactly `keep`, in `keep` order (so positions stay aligned with
@@ -910,6 +1287,10 @@ mod tests {
             assert_eq!(serial.evaluations, parallel.evaluations);
             assert_eq!(serial.unique_evaluations, parallel.unique_evaluations);
             assert_eq!(serial.cache_hits, parallel.cache_hits);
+            // stage telemetry is probed on the main thread in batch
+            // order, so it must be thread-count-invariant too
+            assert_eq!(serial.stage_hits, parallel.stage_hits);
+            assert_eq!(serial.stage_misses, parallel.stage_misses);
         }
     }
 
@@ -928,6 +1309,134 @@ mod tests {
         assert_eq!(off.cache_hits, 0);
         assert_eq!(off.unique_evaluations, off.evaluations);
         assert!(on.cache_hit_rate() > 0.0 && on.cache_hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn stage_cache_is_transparent_and_hits() {
+        // the segment-level primary cache must not change anything the
+        // chromosome-memo engine produced — only serve its misses faster
+        let net = zoo::mobilenet_v2();
+        let mk = |stage_memo: bool| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            stage_memo,
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let on = run(&net, &ZYNQ_7100, &mk(true));
+        let off = run(&net, &ZYNQ_7100, &mk(false));
+        assert_eq!(fingerprint(&on), fingerprint(&off));
+        assert_eq!(on.evaluated, off.evaluated);
+        assert_eq!(on.best_latency_per_gen, off.best_latency_per_gen);
+        assert_eq!(on.evaluations, off.evaluations);
+        assert_eq!(on.unique_evaluations, off.unique_evaluations);
+        assert_eq!(on.cache_hits, off.cache_hits);
+        // mutation neighbors share most stage keys with their parents
+        assert!(on.stage_hits > 0, "stage cache never fired");
+        let n_stages = design::Evaluator::new(&net, &ZYNQ_7100).unwrap().n_stages();
+        assert_eq!(on.stage_hits + on.stage_misses, on.unique_evaluations * n_stages);
+        assert!(on.stage_hit_rate() > 0.2, "rate {}", on.stage_hit_rate());
+        assert_eq!(off.stage_hits, 0);
+        assert_eq!(off.stage_misses, 0);
+        assert_eq!(off.stage_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn in_batch_duplicates_evaluate_once() {
+        // regression for the `insert(key, None)` pending sentinel: a
+        // batch made entirely of duplicates of one unseen chromosome
+        // must run the kernel exactly once — with and without the stage
+        // cache underneath the chromosome memo
+        let net = zoo::mnist();
+        let evaluator = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+        for stage_memo in [false, true] {
+            let (_job_tx, done_rx) = mpsc::channel::<Done>();
+            let mut engine = Engine {
+                evaluator: &evaluator,
+                rep: FpRep::Int16,
+                constraints: Constraints::none(),
+                acc: None,
+                memo: Some(Memo { map: FxHashMap::default(), hits: 0 }),
+                stage_memo: stage_memo.then(StageMemo::default),
+                job_txs: Vec::new(),
+                done_rx,
+                evaluations: 0,
+                unique_evaluations: 0,
+            };
+            let genes = vec![1usize; evaluator.bounds().len()];
+            let batch: Vec<Vec<usize>> = (0..8).map(|_| genes.clone()).collect();
+            let out = engine.eval_batch(batch);
+            assert_eq!(out.len(), 8);
+            assert_eq!(engine.unique_evaluations, 1, "stage_memo={stage_memo}");
+            assert_eq!(engine.cache_hits(), 7, "stage_memo={stage_memo}");
+            assert!(out.iter().all(|c| c.objectives == out[0].objectives));
+            if stage_memo {
+                // one composition: every stage key missed exactly once
+                assert_eq!(engine.stage_misses(), evaluator.n_stages());
+                assert_eq!(engine.stage_hits(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_reorders_but_never_changes_results() {
+        let net = zoo::mnist();
+        let mk = |surrogate: bool| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            surrogate,
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let base = run(&net, &ZYNQ_7100, &mk(false));
+        let sur = run(&net, &ZYNQ_7100, &mk(true));
+        assert_eq!(fingerprint(&base), fingerprint(&sur));
+        assert_eq!(base.evaluated, sur.evaluated);
+        assert_eq!(base.best_latency_per_gen, sur.best_latency_per_gen);
+        assert_eq!(base.evaluations, sur.evaluations);
+        assert_eq!(base.unique_evaluations, sur.unique_evaluations);
+        assert_eq!(base.cache_hits, sur.cache_hits);
+        assert_eq!(base.stage_hits, sur.stage_hits);
+        assert_eq!(base.stage_misses, sur.stage_misses);
+        assert_eq!(base.surrogate_reorders, 0);
+        assert!(sur.surrogate_reorders > 0, "ranker never moved a candidate");
+    }
+
+    #[test]
+    fn prune_skips_hopeless_offspring_and_keeps_front_feasible() {
+        // a latency cap below the gene-independent floor makes every
+        // offspring provably infeasible: the pre-filter must skip all of
+        // them (gen 0 seeds are always evaluated) and count the skips
+        let net = zoo::mnist();
+        let cfg = DseConfig {
+            population: 24,
+            generations: 8,
+            seed: 5,
+            prune: true,
+            constraints: Constraints { latency_ms: Some(1e-9), ..Constraints::none() },
+            ..DseConfig::default()
+        };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert!(res.roofline_pruned > 0);
+        assert_eq!(res.evaluations + res.roofline_pruned, 24 * 9);
+        assert!(res.pareto.is_empty(), "nothing can meet a 1ps latency cap");
+
+        // and with achievable constraints, pruning never admits an
+        // infeasible point into the front
+        let cfg = DseConfig {
+            population: 24,
+            generations: 8,
+            seed: 5,
+            prune: true,
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let res = run(&net, &ZYNQ_7100, &cfg);
+        assert_eq!(res.evaluations + res.roofline_pruned, 24 * 9);
+        assert!(!res.pareto.is_empty());
+        assert!(res.pareto.iter().all(|c| c.violation == 0.0));
     }
 
     #[test]

@@ -249,6 +249,12 @@ impl Ranking {
         Ranking { rank, crowding: crowd }
     }
 
+    /// Indices of the current non-dominated (rank-0) members — the
+    /// live Pareto front the roofline pre-filter prunes against.
+    pub fn first_front(&self) -> impl Iterator<Item = usize> + '_ {
+        self.rank.iter().enumerate().filter_map(|(i, &r)| (r == 0).then_some(i))
+    }
+
     /// Crowded-comparison operator: lower rank wins; equal ranks break
     /// on larger crowding distance; `None` on a full tie.
     #[inline]
@@ -655,6 +661,19 @@ mod tests {
         assert!(r.rank[2] > 0);
         assert!(r.rank[3] > r.rank[2], "infeasible must rank below dominated-feasible");
         assert!(r.crowding[0].is_infinite() && r.crowding[1].is_infinite());
+    }
+
+    #[test]
+    fn first_front_yields_rank_zero_members() {
+        let pop = vec![
+            cand(1.0, 100, 0.0), // front 0
+            cand(2.0, 50, 0.0),  // front 0
+            cand(2.0, 100, 0.0), // dominated
+            cand(0.1, 999, 3.0), // infeasible
+        ];
+        let r = Ranking::build(&ObjSoa::from_candidates(&pop));
+        let front: Vec<usize> = r.first_front().collect();
+        assert_eq!(front, vec![0, 1]);
     }
 
     #[test]

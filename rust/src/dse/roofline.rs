@@ -115,6 +115,88 @@ pub fn roofline_allocate(net: &Network, device: &Device, rep: FpRep) -> DesignCo
     }
 }
 
+/// Gene-dependent roofline lower bounds on a chromosome's objectives —
+/// the MOGA's dominated-region pre-filter (`--prune`).
+///
+/// For each conv gene slot the bound keeps the facts that survive
+/// dropping every boundary-coupled term ([`design::SlotFact`]):
+///
+/// * **latency**: a regular conv's serial factor is
+///   `ceil(filters/(p*simd)) * ceil(cin/lanes_in)`; discarding the
+///   (unknown, >= 1) boundary factor leaves the sound per-slot bound
+///   `s_lb = ceil(filters/(p*simd))`, contributing `pass * s_lb` cycles
+///   when `s_lb > 1` (when `s_lb == 1` the true serial factor may still
+///   exceed 1, so the slot soundly contributes 0). A depthwise conv's
+///   serial factor depends only on its own gene, so its term is exact.
+///   Adding the gene-independent floor (source scan + fills + SPP
+///   passes, [`design::Evaluator::latency_floor_cycles`]) gives
+///   `latency_cycles_lb <= latency_cycles` for every chromosome.
+/// * **DSP**: a conv's PE count is `p * lanes_in` with `lanes_in >= 1`,
+///   so `dsp_per_pe * p` is a sound per-slot bound (exact for
+///   depthwise). Non-conv stages contribute no DSPs.
+///
+/// Both bounds are monotone through the f64 conversions downstream
+/// (cycles -> ms divides by a positive constant; the accuracy-ladder
+/// ratio multiplies by a positive constant), so comparing the bound
+/// against [`super::Constraints`] or a front point never misclassifies.
+#[derive(Debug, Clone)]
+pub struct GeneBounds {
+    facts: Vec<design::SlotFact>,
+    floor_cycles: usize,
+    clock_mhz: f64,
+    simd: usize,
+    int8: bool,
+}
+
+impl GeneBounds {
+    pub fn new(ev: &design::Evaluator, rep: FpRep) -> Self {
+        GeneBounds {
+            facts: ev.slot_facts(),
+            floor_cycles: ev.latency_floor_cycles(),
+            clock_mhz: ev.clock_mhz(),
+            simd: if rep == FpRep::Int8 { 2 } else { 1 },
+            int8: rep == FpRep::Int8,
+        }
+    }
+
+    /// Lower bound on first-frame latency cycles for `conv_genes` (the
+    /// chromosome without its path gene).
+    pub fn latency_cycles_lb(&self, conv_genes: &[usize]) -> usize {
+        let mut serialized = 0usize;
+        for (f, &p) in self.facts.iter().zip(conv_genes) {
+            if f.dw {
+                let lanes = p.min(f.cin).max(1);
+                let serial = f.cin.div_ceil(lanes * self.simd);
+                if serial > 1 {
+                    serialized += f.pass * serial;
+                }
+            } else {
+                let s_lb = f.filters.div_ceil(p * self.simd);
+                if s_lb > 1 {
+                    serialized += f.pass * s_lb;
+                }
+            }
+        }
+        self.floor_cycles + serialized
+    }
+
+    /// Lower bound on first-frame latency in milliseconds.
+    pub fn latency_ms_lb(&self, conv_genes: &[usize]) -> f64 {
+        self.latency_cycles_lb(conv_genes) as f64 / (self.clock_mhz * 1e3)
+    }
+
+    /// Lower bound on the DSP count.
+    pub fn dsp_lb(&self, conv_genes: &[usize]) -> usize {
+        let mut dsp = 0usize;
+        for (f, &p) in self.facts.iter().zip(conv_genes) {
+            let per_pe = if self.int8 { f.dsp_per_pe8 } else { f.dsp_per_pe16 };
+            let pes = if f.dw { p.min(f.cin).max(1) } else { p };
+            dsp += per_pe * pes;
+        }
+        dsp
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +255,44 @@ mod tests {
         let cfg = DesignConfig::full(&net, FpRep::Int16);
         let eval = design::evaluate(&net, &cfg, &ZYNQ_7100).unwrap();
         assert!(eval.fps() <= r.fps_bound() * 1.05, "{} > {}", eval.fps(), r.fps_bound());
+    }
+
+    #[test]
+    fn gene_bounds_never_exceed_true_objectives() {
+        // soundness of the pre-filter: the lower bound must never sit
+        // above the value the full evaluator computes, else pruning
+        // could discard an acceptable candidate
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for net in
+            [zoo::mnist(), zoo::mobilenet_v2(), zoo::unet_tiny(), zoo::yolov5l()]
+        {
+            let ev = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+            let bounds = net.conv_filter_bounds();
+            let iters = if bounds.len() > 60 { 4 } else { 20 };
+            for rep in [FpRep::Int16, FpRep::Int8] {
+                let gb = GeneBounds::new(&ev, rep);
+                for _ in 0..iters {
+                    let genes: Vec<usize> = bounds
+                        .iter()
+                        .map(|&ub| rng.range(1, ub as i64) as usize)
+                        .collect();
+                    let fast = ev.objectives(&genes, rep).unwrap();
+                    assert!(
+                        gb.latency_cycles_lb(&genes) <= fast.latency_cycles,
+                        "{} {:?}: latency lb above truth",
+                        net.name,
+                        rep
+                    );
+                    assert!(
+                        gb.dsp_lb(&genes) <= fast.resources.dsp,
+                        "{} {:?}: dsp lb above truth",
+                        net.name,
+                        rep
+                    );
+                }
+            }
+        }
     }
 
     #[test]

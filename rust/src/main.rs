@@ -6,7 +6,8 @@
 //!                   --tolerance-pct 20 --absolute]   perf-regression gate
 //! forgemorph dse|explore --model cifar10 [--pop N --gens N --seed N --dsp N
 //!                   --latency MS --power-budget MW --energy-front
-//!                   --threads N --no-memo --profile FILE]
+//!                   --threads N --no-memo --no-stage-memo --prune
+//!                   --surrogate --profile FILE]
 //! forgemorph distill --model mnist [--train N --test N --epochs N --batch N
 //!                   --seed N --qbits B --threads N --out FILE]   train the
 //!                   morph-path ladder (DistillCycle) and emit an
@@ -71,7 +72,14 @@ commands:
                 regressions against the committed bench trajectory
   dse|explore   NeuroForge design space exploration (--threads N fans the
                 fitness evaluation out; results are bit-identical for any
-                thread count. --no-memo disables the chromosome cache.
+                thread count. --no-memo disables both cache levels;
+                --no-stage-memo keeps the chromosome memo but disables
+                the segment-level primary cache — fronts are identical
+                either way. --surrogate pre-orders offspring evaluation
+                with a deterministic linear ranker (dispatch order only;
+                bit-identical fronts). --prune skips offspring whose
+                roofline lower bound is constraint-violating or
+                front-dominated (changes the search trajectory).
                 --profile FILE adds a DistillCycle AccuracyProfile and
                 switches to 3-objective latency/DSP/accuracy fronts.
                 --power-budget MW caps modeled power; --energy-front adds
@@ -205,6 +213,9 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         rep: rep_for(args),
         threads: args.get_usize("threads", default_threads),
         memo: !args.flag("no-memo"),
+        stage_memo: !args.flag("no-stage-memo"),
+        prune: args.flag("prune"),
+        surrogate: args.flag("surrogate"),
         accuracy_paths: profile.as_ref().map(|p| p.morph_paths()),
         energy_objective: args.flag("energy-front"),
         constraints: dse::Constraints {
@@ -217,14 +228,27 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         ..dse::DseConfig::default()
     };
     let res = dse::run(&net, &ZYNQ_7100, &cfg);
+    // telemetry stays on this one line: smoke scripts diff the front
+    // table below it across flag combinations (`tail -n +2`)
     println!(
         "explored {} candidates in {:.2}s ({} threads, {} unique evals, \
-         cache hit rate {:.1}%) — Pareto front ({} points{}):",
+         cache hit rate {:.1}%, stage hit rate {:.1}%{}{}) — Pareto front ({} points{}):",
         res.evaluations,
         res.wall_ms / 1e3,
         cfg.threads,
         res.unique_evaluations,
         res.cache_hit_rate() * 100.0,
+        res.stage_hit_rate() * 100.0,
+        if cfg.prune {
+            format!(", {} roofline-pruned", res.roofline_pruned)
+        } else {
+            String::new()
+        },
+        if cfg.surrogate {
+            format!(", {} surrogate-reordered", res.surrogate_reorders)
+        } else {
+            String::new()
+        },
         res.pareto.len(),
         if profile.is_some() { ", 3 objectives" } else { "" }
     );

@@ -155,9 +155,11 @@ pub fn fig2(pop: usize, gens: usize, seed: u64) -> String {
     );
     let _ = writeln!(
         s,
-        "search telemetry: {} unique evaluations, cache hit rate {:.0}%, {:.1} ms wall",
+        "search telemetry: {} unique evaluations, cache hit rate {:.0}% \
+         (chromosome), stage hit rate {:.0}% (segment), {:.1} ms wall",
         res.unique_evaluations,
         res.cache_hit_rate() * 100.0,
+        res.stage_hit_rate() * 100.0,
         res.wall_ms
     );
     let _ = writeln!(s, "{:<28} {:>8} {:>12} {:>10}", "parallelism p(i)", "DSP", "latency ms", "PEs");
@@ -934,6 +936,7 @@ mod tests {
         let f = fig2(16, 3, 1);
         assert!(f.contains("search telemetry:"), "{f}");
         assert!(f.contains("cache hit rate"), "{f}");
+        assert!(f.contains("stage hit rate"), "{f}");
         assert!(f.contains("unique evaluations"), "{f}");
     }
 

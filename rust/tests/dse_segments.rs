@@ -1,0 +1,174 @@
+//! Segment-level DSE invariants (in-tree property harness style):
+//!
+//! * the per-stage kernel + composition pass reproduce the monolithic
+//!   evaluator **bitwise** — same integers in, same integers out — so
+//!   every downstream f64 (latency ms, power) and therefore every
+//!   Pareto front is unchanged by the stage cache;
+//! * the roofline pre-filter's lower bounds are sound (never above the
+//!   full evaluator's values), so a prune decision never discards a
+//!   candidate the search would have accepted as feasible /
+//!   non-dominated at that point;
+//! * every engine shortcut — threads, chromosome memo, stage memo,
+//!   surrogate ranking — yields a bit-identical front.
+
+use forgemorph::design;
+use forgemorph::dse::{self, roofline::GeneBounds, Constraints, DseConfig, DseResult};
+use forgemorph::graph::zoo;
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::util::rng::Rng;
+
+fn random_genes(bounds: &[usize], rng: &mut Rng) -> Vec<usize> {
+    bounds.iter().map(|&ub| rng.range(1, ub as i64) as usize).collect()
+}
+
+/// Bitwise identity key of a Pareto front.
+fn fingerprint(res: &DseResult) -> Vec<(Vec<usize>, u64, usize)> {
+    res.pareto
+        .iter()
+        .map(|c| {
+            (c.config.parallelism.clone(), c.objectives.latency_ms.to_bits(), c.objectives.dsp)
+        })
+        .collect()
+}
+
+#[test]
+fn composed_fitness_bitwise_equals_monolithic() {
+    // (a) segment composition vs the retained monolithic reference,
+    // random genes/reps, branchy plans (yolov5l, unet_tiny) included.
+    // FastEval equality is integer-exact, which forces bit-equality of
+    // every f64 derived from it downstream.
+    let mut rng = Rng::new(71);
+    for net in [
+        zoo::mnist(),
+        zoo::svhn(),
+        zoo::cifar10(),
+        zoo::mobilenet_v2(),
+        zoo::unet_tiny(),
+        zoo::yolov5l(),
+    ] {
+        let ev = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+        let bounds = net.conv_filter_bounds();
+        let iters = if bounds.len() > 60 { 5 } else { 20 };
+        for _ in 0..iters {
+            let genes = random_genes(&bounds, &mut rng);
+            let rep = if rng.chance(0.5) { FpRep::Int8 } else { FpRep::Int16 };
+            let mono = ev.objectives(&genes, rep).unwrap();
+            let composed = ev.compose(
+                (0..ev.n_stages()).map(|s| ev.stage_fit_packed(ev.stage_key(s, &genes), rep)),
+            );
+            assert_eq!(composed, mono, "{} {:?} {:?}", net.name, genes, rep);
+        }
+    }
+}
+
+#[test]
+fn roofline_bounds_are_sound() {
+    // (b) the pre-filter's lower bounds never sit above the truth, so
+    // "lb violates a cap" implies "the candidate violates the cap"
+    let mut rng = Rng::new(72);
+    for net in [zoo::mnist(), zoo::mobilenet_v2(), zoo::unet_tiny(), zoo::yolov5l()] {
+        let ev = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+        let bounds = net.conv_filter_bounds();
+        let iters = if bounds.len() > 60 { 5 } else { 20 };
+        for rep in [FpRep::Int16, FpRep::Int8] {
+            let gb = GeneBounds::new(&ev, rep);
+            for _ in 0..iters {
+                let genes = random_genes(&bounds, &mut rng);
+                let fast = ev.objectives(&genes, rep).unwrap();
+                assert!(
+                    gb.latency_cycles_lb(&genes) <= fast.latency_cycles,
+                    "{} {:?}: latency bound above truth",
+                    net.name,
+                    rep
+                );
+                assert!(
+                    gb.latency_ms_lb(&genes) <= ev.latency_ms(&fast) + 1e-12,
+                    "{} {:?}: ms bound above truth",
+                    net.name,
+                    rep
+                );
+                assert!(
+                    gb.dsp_lb(&genes) <= fast.resources.dsp,
+                    "{} {:?}: dsp bound above truth",
+                    net.name,
+                    rep
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dominance_on_bounds_implies_dominance_on_truth() {
+    // (b) continued — the prune predicate's dominance rule: a front
+    // point that strictly dominates the (lat_lb, dsp_lb) bound point
+    // must dominate the fully evaluated candidate too (accuracy is
+    // exact, so a 2-objective check suffices)
+    let mut rng = Rng::new(73);
+    let net = zoo::unet_tiny();
+    let ev = design::Evaluator::new(&net, &ZYNQ_7100).unwrap();
+    let bounds = net.conv_filter_bounds();
+    let gb = GeneBounds::new(&ev, FpRep::Int16);
+    let mut dominated_bounds = 0usize;
+    for _ in 0..60 {
+        let genes = random_genes(&bounds, &mut rng);
+        let fast = ev.objectives(&genes, FpRep::Int16).unwrap();
+        let (lat_lb, dsp_lb) = (gb.latency_ms_lb(&genes), gb.dsp_lb(&genes));
+        let (lat, dsp) = (ev.latency_ms(&fast), fast.resources.dsp);
+        // synthetic front point in the neighbourhood of the bound
+        let f_lat = lat_lb * (0.5 + rng.f64());
+        let f_dsp = ((dsp_lb as f64) * (0.5 + rng.f64())) as usize;
+        let dominates_lb = f_lat <= lat_lb
+            && f_dsp <= dsp_lb
+            && (f_lat < lat_lb || f_dsp < dsp_lb);
+        if dominates_lb {
+            dominated_bounds += 1;
+            assert!(
+                f_lat <= lat && f_dsp <= dsp && (f_lat < lat || f_dsp < dsp),
+                "front ({f_lat},{f_dsp}) dominated the bound but not the truth ({lat},{dsp})"
+            );
+        }
+    }
+    assert!(dominated_bounds > 0, "property never exercised the dominance branch");
+}
+
+#[test]
+fn fronts_bit_identical_across_engine_shortcuts() {
+    // (c) the full flag matrix against the chromosome-memo-only serial
+    // baseline (the pre-segment-cache engine): threads x stage memo x
+    // surrogate, plus the fully uncached engine
+    for net in [zoo::mnist(), zoo::unet_tiny()] {
+        let mk = |threads: usize, memo: bool, stage_memo: bool, surrogate: bool| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            threads,
+            memo,
+            stage_memo,
+            surrogate,
+            constraints: Constraints::device(&ZYNQ_7100),
+            ..DseConfig::default()
+        };
+        let base = dse::run(&net, &ZYNQ_7100, &mk(1, true, false, false));
+        let fp = fingerprint(&base);
+        assert!(!fp.is_empty(), "{}: empty baseline front", net.name);
+        for threads in [1usize, 4] {
+            for stage_memo in [false, true] {
+                for surrogate in [false, true] {
+                    let r = dse::run(&net, &ZYNQ_7100, &mk(threads, true, stage_memo, surrogate));
+                    let tag = format!(
+                        "{} threads={threads} stage_memo={stage_memo} surrogate={surrogate}",
+                        net.name
+                    );
+                    assert_eq!(fp, fingerprint(&r), "{tag}");
+                    assert_eq!(base.evaluated, r.evaluated, "{tag}");
+                    assert_eq!(base.best_latency_per_gen, r.best_latency_per_gen, "{tag}");
+                    assert_eq!(base.evaluations, r.evaluations, "{tag}");
+                    assert_eq!(base.unique_evaluations, r.unique_evaluations, "{tag}");
+                }
+            }
+        }
+        let nomemo = dse::run(&net, &ZYNQ_7100, &mk(1, false, true, false));
+        assert_eq!(fp, fingerprint(&nomemo), "{}: uncached engine diverged", net.name);
+    }
+}

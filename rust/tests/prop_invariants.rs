@@ -59,6 +59,30 @@ fn prop_dsp_bram_estimates_exact() {
 }
 
 #[test]
+fn prop_segment_composition_and_roofline_sound() {
+    // The DSE's segment kernel must reproduce the monolithic evaluator
+    // bitwise (the stage cache's correctness argument), and the roofline
+    // pre-filter's lower bounds must never exceed the truth.
+    check("segment-compose", 60, 15, random_design, |(net, cfg)| {
+        let ev = design::Evaluator::new(net, &ZYNQ_7100).map_err(|e| e.to_string())?;
+        let mono = ev.objectives(&cfg.parallelism, cfg.rep).map_err(|e| e.to_string())?;
+        let composed = ev.compose((0..ev.n_stages()).map(|s| {
+            ev.stage_fit_packed(ev.stage_key(s, &cfg.parallelism), cfg.rep)
+        }));
+        ensure(composed == mono, "segment composition diverged from monolithic evaluator")?;
+        let gb = dse::roofline::GeneBounds::new(&ev, cfg.rep);
+        ensure(
+            gb.latency_cycles_lb(&cfg.parallelism) <= mono.latency_cycles,
+            "roofline latency bound above truth",
+        )?;
+        ensure(
+            gb.dsp_lb(&cfg.parallelism) <= mono.resources.dsp,
+            "roofline dsp bound above truth",
+        )
+    });
+}
+
+#[test]
 fn prop_gating_never_increases_cost() {
     check("gating-monotone", 40, 13, random_design, |(net, cfg)| {
         let full = sim::simulate(net, cfg, &ZYNQ_7100, &GateMask::all_active());
