@@ -704,6 +704,59 @@ fn main() {
                 }
             }
         }
+
+        // tracing overhead: the identical replay with an attached
+        // TraceSink vs none — the pure cost of stamping ~3 entries per
+        // frame onto the lane-0 ring. Best-of-3 each way; within_2pct
+        // is the gated row (it measures the recorder, not the host)
+        let run_replay = |sink: Option<std::sync::Arc<forgemorph::obs::TraceSink>>| {
+            let net = zoo::mnist();
+            let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+            let paths = morph::depth_ladder(&net);
+            let mut coord = Coordinator::start(
+                ServeConfig {
+                    workers: 2,
+                    external_pacing: true,
+                    trace: sink,
+                    ..ServeConfig::default()
+                },
+                BackendSpec::sim(net, design, ZYNQ_7100, paths),
+            )
+            .unwrap();
+            let t0 = Instant::now();
+            let traced = coord
+                .replay_power_trace(&events, &TraceConfig { frames, rate_hz, seed: 11 })
+                .unwrap();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(traced.answered, out.answered, "tracing changed the replay");
+            ms
+        };
+        let best = |with_sink: bool| {
+            (0..3)
+                .map(|_| run_replay(with_sink.then(forgemorph::obs::TraceSink::shared)))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let off_ms = best(false);
+        let on_ms = best(true);
+        let trace_pct = (on_ms - off_ms) / off_ms * 100.0;
+        let within = trace_pct <= 2.0;
+        println!(
+            "tracing overhead ({frames} frames): sink off {off_ms:.2} ms, sink on \
+             {on_ms:.2} ms ({trace_pct:+.1}%, within_2pct: {within})"
+        );
+        if let Ok(text) = std::fs::read_to_string(&bench_json) {
+            if let Some(body) = text.trim_end().strip_suffix('}') {
+                let patched = format!(
+                    "{body}  ,\n  \"trace_overhead\": {{\"off_ms\": {off_ms:.3}, \
+                     \"on_ms\": {on_ms:.3}, \"overhead_pct\": {trace_pct:.2}, \
+                     \"within_2pct\": {within}}}\n}}\n"
+                );
+                match std::fs::write(&bench_json, patched) {
+                    Ok(()) => println!("appended trace_overhead to {}", bench_json.display()),
+                    Err(e) => println!("(trace_overhead not appended: {e})"),
+                }
+            }
+        }
     }
 
     // --- surrogate classifier: packed batch pass vs scalar per-frame dots ---

@@ -208,6 +208,20 @@ impl BackendSpec {
         }
     }
 
+    /// One-line backend description for trace metadata
+    /// (`otherData.backend` in the Chrome export).
+    pub fn describe(&self) -> String {
+        match self {
+            BackendSpec::Pjrt { model, .. } => format!("pjrt({model})"),
+            BackendSpec::Sim { paths, fidelity, .. } => {
+                format!("sim({} paths, fidelity {fidelity})", paths.len())
+            }
+            BackendSpec::Analytical { paths, .. } => {
+                format!("analytical({} paths)", paths.len())
+            }
+        }
+    }
+
     /// Build one backend instance (called once per worker shard).
     pub fn build(&self) -> Result<Box<dyn InferenceBackend>, BackendError> {
         match self {
@@ -477,6 +491,10 @@ mod tests {
             assert_eq!(b.batch_sizes(), vec![1, 8]);
             assert_eq!(b.morph_paths().len(), 3);
         }
+        let sim = BackendSpec::sim(net.clone(), design.clone(), ZYNQ_7100, paths());
+        assert_eq!(sim.describe(), "sim(3 paths, fidelity 1)");
+        let ana = BackendSpec::analytical(net, design, ZYNQ_7100, paths());
+        assert_eq!(ana.describe(), "analytical(3 paths)");
     }
 
     #[test]

@@ -74,6 +74,35 @@ impl Histogram {
         }
         self.max_us
     }
+
+    /// Exact bucket-interpolated quantile (microseconds): the bucket
+    /// holding the target rank is interpolated linearly between its
+    /// `[2^i, 2^(i+1))` bounds by the rank's position among that
+    /// bucket's samples, and the result is capped at the observed
+    /// maximum — so a single-sample bucket reports the sample's bucket
+    /// ceiling-or-max instead of jumping a full power of two like
+    /// [`quantile_us`]. Deterministic and merge-exact (the buckets
+    /// are).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= target {
+                let lo = (1u64 << i) as f64;
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (target - seen) as f64 / n as f64;
+                return (lo + (hi - lo) * frac).min(self.max_us as f64);
+            }
+            seen += n;
+        }
+        self.max_us as f64
+    }
 }
 
 /// Aggregated serving-run metrics.
@@ -253,7 +282,46 @@ mod tests {
         assert!((a.mean_us() - combined.mean_us()).abs() < 1e-9);
         for q in [0.5, 0.9, 0.99, 1.0] {
             assert_eq!(a.quantile_us(q), combined.quantile_us(q), "q={q}");
+            // interpolated quantiles are merge-exact too (same buckets)
+            assert!((a.quantile(q) - combined.quantile(q)).abs() < 1e-12, "q={q}");
         }
+    }
+
+    #[test]
+    fn interpolated_quantile_pins_known_streams() {
+        // 4 identical 1000 us samples land in bucket 9 = [512, 1024):
+        // rank interpolation walks the bucket linearly, capped at max
+        let mut h = Histogram::default();
+        for _ in 0..4 {
+            h.record(Duration::from_micros(1000));
+        }
+        assert_eq!(h.quantile(0.25), 640.0); // 512 + 512 * 1/4
+        assert_eq!(h.quantile(0.5), 768.0); // 512 + 512 * 2/4
+        assert_eq!(h.quantile(1.0), 1000.0); // 1024 capped at max_us
+
+        // one sample per bucket: the rank's bucket ceiling, max-capped
+        let mut m = Histogram::default();
+        for us in [10u64, 20, 40, 80] {
+            m.record(Duration::from_micros(us));
+        }
+        assert_eq!(m.quantile(0.5), 32.0);
+        assert_eq!(m.quantile(0.75), 64.0);
+        assert_eq!(m.quantile(1.0), 80.0);
+
+        // tail quantiles on a 100-sample stream with one outlier
+        let mut t = Histogram::default();
+        for _ in 0..99 {
+            t.record(Duration::from_micros(100));
+        }
+        t.record(Duration::from_micros(10_000));
+        assert_eq!(t.quantile(0.99), 128.0); // rank 99 fills bucket [64,128)
+        assert_eq!(t.quantile(0.999), 10_000.0); // rank 100 is the capped outlier
+
+        // interpolation never exceeds the bucket-ceiling approximation
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert!(t.quantile(q) <= t.quantile_us(q) as f64, "q={q}");
+        }
+        assert_eq!(Histogram::default().quantile(0.99), 0.0);
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::backend::{BackendSpec, InferenceBackend as _};
 use crate::fault::{FaultDirective, FaultPlan, FaultRecord, HealthBoard, Injector, RetryPolicy};
 use crate::morph::governor::{Budget, Decision, Governor};
 use crate::morph::{schedule, PathRegistry};
+use crate::obs::{self, Clock, Name, TraceEntry};
 use crate::power::PathEnergy;
 use crate::util::rng::Rng;
 
@@ -139,6 +140,11 @@ pub struct ServeConfig {
     /// frames between CRC scrub passes over the gate state during fault
     /// trace replays
     pub scrub_period_frames: usize,
+    /// structured span recorder (DESIGN.md §14). `None` (default) =
+    /// tracing off; the serving loops then pay exactly one branch per
+    /// would-be record, and every log/summary byte matches the untraced
+    /// run (test-enforced).
+    pub trace: Option<Arc<obs::TraceSink>>,
 }
 
 impl Default for ServeConfig {
@@ -152,6 +158,7 @@ impl Default for ServeConfig {
             request_deadline: None,
             retry: RetryPolicy::default(),
             scrub_period_frames: 16,
+            trace: None,
         }
     }
 }
@@ -217,6 +224,9 @@ struct Shared {
     request_deadline: Option<Duration>,
     /// frames between CRC scrub passes during fault trace replays
     scrub_period_frames: usize,
+    /// span recorder: submit side stamps virtual-clock entries on lane
+    /// 0, worker shard `s` stamps wall-clock entries on lane `1 + s`
+    trace: Option<Arc<obs::TraceSink>>,
     /// sleep/wake for idle workers
     wake: Mutex<()>,
     wake_cv: Condvar,
@@ -237,6 +247,7 @@ impl Shared {
             retry: cfg.retry,
             request_deadline: cfg.request_deadline,
             scrub_period_frames: cfg.scrub_period_frames.max(1),
+            trace: cfg.trace.clone(),
             wake: Mutex::new(()),
             wake_cv: Condvar::new(),
         }
@@ -373,6 +384,12 @@ impl Coordinator {
             deadline: self.shared.request_deadline.map(|d| Instant::now() + d),
             degraded,
         });
+        if let Some(sink) = &self.shared.trace {
+            // wall-clock twin of the replay's virtual enqueue — lives on
+            // the quarantined side of the §14 clock rule
+            let e = TraceEntry::instant(Clock::Wall, Name::Enqueue, sink.wall_now_us(), id);
+            sink.record(0, e);
+        }
         self.shared.notify_one();
         Ok(rx)
     }
@@ -455,6 +472,15 @@ impl Coordinator {
         // reconfiguration stalls are measured in full-path frame periods
         let full_frame_ms = energy_rows.iter().map(|e| e.frame_ms).fold(0.0, f64::max);
         let rate_hz = tcfg.rate_hz.max(1e-9);
+        // pre-intern the ladder so trace path indices are fixed by
+        // registry order, never by which thread saw a name first —
+        // part of the deterministic-export contract
+        if let Some(sink) = &self.shared.trace {
+            let gov = governor.lock().unwrap();
+            for p in gov.registry().paths() {
+                sink.intern(&p.name);
+            }
+        }
 
         let injection = faults.is_some();
         let mut injector = faults.map(|plan| {
@@ -559,6 +585,29 @@ impl Coordinator {
                 energy_mj += e.energy_mj_per_frame();
             }
             *frames_by_path.entry(path.clone()).or_insert(0) += 1;
+            if let Some(sink) = &self.shared.trace {
+                // virtual-clock request lifecycle: enqueue instant at
+                // the frame's trace time, execute span over the path's
+                // modeled frame period — submit-side only, so the
+                // entries are worker-invariant like the decision log
+                let ts = obs::virtual_us(i, rate_hz);
+                let p = sink.intern(&path);
+                sink.record(
+                    0,
+                    TraceEntry::instant(Clock::Virtual, Name::Enqueue, ts, id)
+                        .with_path(p)
+                        .with_args(0, u64::from(degraded)),
+                );
+                let dur = energy_rows
+                    .iter()
+                    .find(|e| e.name == path)
+                    .map(|e| (e.frame_ms * 1_000.0).round() as u64)
+                    .unwrap_or(0);
+                sink.record(
+                    0,
+                    TraceEntry::span(Clock::Virtual, Name::Execute, ts, dur, id).with_path(p),
+                );
+            }
             let data: Vec<f32> = (0..frame_len).map(|_| rng.f64() as f32).collect();
             receivers.push(self.submit_inner(data, Some(path), directive, degraded)?);
         }
@@ -594,6 +643,47 @@ impl Coordinator {
             }
             None => Vec::new(),
         };
+
+        // stamp the submit-side governor/fault history onto the virtual
+        // clock: one switch instant + DPR swap-window span per commit,
+        // and every fault-log record via `fault::record_trace` (SEUs,
+        // scrub-repair MTTR spans, transient retry ladders, stalls,
+        // rollback windows). All derived from worker-invariant state.
+        if let Some(sink) = &self.shared.trace {
+            for sw in &switches {
+                let ts = obs::virtual_us(sw.frame, rate_hz);
+                let to = sink.intern(&sw.to);
+                let from = sink.intern(&sw.from);
+                let bmw = sw
+                    .budget_mw
+                    .filter(|b| b.is_finite())
+                    .map(|b| b.max(0.0).round() as u64)
+                    .unwrap_or(0);
+                sink.record(
+                    0,
+                    TraceEntry::instant(Clock::Virtual, Name::Switch, ts, sw.frame as u64)
+                        .with_path(to)
+                        .with_args(u64::from(from), bmw),
+                );
+                let window = schedule::SwapTimeline {
+                    stall_frames: sw.stall_frames,
+                    swap_ms: sw.swap_ms,
+                };
+                sink.record(
+                    0,
+                    TraceEntry::span(
+                        Clock::Virtual,
+                        Name::SwapWindow,
+                        ts,
+                        window.window_us(),
+                        sw.frame as u64,
+                    )
+                    .with_path(to)
+                    .with_args(sw.stall_frames as u64, 0),
+                );
+            }
+            crate::fault::record_trace(&fault_records, rate_hz, sink);
+        }
 
         let segments = events
             .iter()
@@ -923,6 +1013,13 @@ fn retry_or_fail(
     if r.attempt < shared.retry.max_retries {
         r.attempt += 1;
         metrics.retries += 1;
+        if let Some(sink) = &shared.trace {
+            // wall-clock rung of the retry ladder (the deterministic
+            // twin comes from the injector's transient records)
+            let e = TraceEntry::instant(Clock::Wall, Name::Retry, sink.wall_now_us(), r.id)
+                .with_args(u64::from(r.attempt), 0);
+            sink.record(1 + shard_id, e);
+        }
         // resubmission prefers the next healthy shard so a sick shard
         // does not immediately re-execute its own casualty
         let target = shared.health.next_healthy(shard_id + 1);
@@ -974,6 +1071,8 @@ fn worker_loop(
         std::thread::sleep(Duration::from_micros(200));
     };
     let energy_rows = shared.energy_rows.get().cloned().unwrap_or_default();
+    // wall-clock (quarantined) span recording on this shard's own lane
+    let sink = shared.trace.clone();
     let policy = BatchPolicy::new(backend.batch_sizes(), cfg.max_wait);
     let frame = backend.frame_len();
     let nc = backend.num_classes();
@@ -1063,10 +1162,28 @@ fn worker_loop(
 
         let batch_len = take.len();
         let oldest = take[0].enqueued;
+        let first_id = take[0].id;
         let t0 = Instant::now();
         match backend.execute(&path, size, &input) {
             Ok(logits) => {
                 let exec = t0.elapsed();
+                if let Some(sink) = &sink {
+                    let exec_us = exec.as_micros() as u64;
+                    let start = sink.wall_now_us().saturating_sub(exec_us);
+                    let p = sink.intern(&path);
+                    sink.record(
+                        1 + shard_id,
+                        TraceEntry::instant(Clock::Wall, Name::Batch, start, first_id)
+                            .with_path(p)
+                            .with_args(batch_len as u64, shard_id as u64),
+                    );
+                    sink.record(
+                        1 + shard_id,
+                        TraceEntry::span(Clock::Wall, Name::Execute, start, exec_us, first_id)
+                            .with_path(p)
+                            .with_args(batch_len as u64, shard_id as u64),
+                    );
+                }
                 let classes = backend.argmax(&logits);
                 let mut delivered = 0usize;
                 for (i, r) in take.into_iter().enumerate() {
@@ -1111,6 +1228,14 @@ fn worker_loop(
                 }
                 if delivered > 0 {
                     shared.health.record_success(shard_id);
+                }
+                if let Some(sink) = &sink {
+                    let now = sink.wall_now_us();
+                    sink.record(
+                        1 + shard_id,
+                        TraceEntry::instant(Clock::Wall, Name::Respond, now, first_id)
+                            .with_args(delivered as u64, shard_id as u64),
+                    );
                 }
                 let queue_d = t0.duration_since(oldest);
                 metrics.record_batch(&path, batch_len, queue_d, exec);

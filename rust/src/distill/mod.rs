@@ -307,6 +307,12 @@ pub struct DistillConfig {
     /// blocked kernels reproduce the reference reduction order and the
     /// fan-out only covers paths that share no trainable state.
     pub threads: usize,
+    /// optional span/event sink (`distill --trace-out`): `Some` records
+    /// one virtual-clock KD span per [`LossRecord`] after training (the
+    /// history is built on the main thread in a fixed order, so traces
+    /// are byte-identical across `threads`); `None` records nothing and
+    /// training output is identical either way.
+    pub trace: Option<std::sync::Arc<crate::obs::TraceSink>>,
 }
 
 impl Default for DistillConfig {
@@ -327,6 +333,7 @@ impl Default for DistillConfig {
             seed: 0,
             qat_bits: None,
             threads: 1,
+            trace: None,
         }
     }
 }
@@ -1152,6 +1159,28 @@ pub fn distillcycle_train(spec: &DistillSpec, ds: &Dataset, cfg: &DistillConfig)
         let mut ctx = KernelCtx::for_cfg(cfg);
         (p.name(), accuracy_with(&mut ctx, &params, spec, p, ds, cfg.qat_bits))
     });
+
+    // KD-cycle trace: one virtual-clock span per loss record, stamped on
+    // the training's logical timeline (1 ms per record). The history is
+    // pushed on the main thread in a fixed order, so the trace is
+    // byte-identical across `cfg.threads` and reruns.
+    if let Some(sink) = &cfg.trace {
+        use crate::obs::{Clock, Name, TraceEntry};
+        for (i, r) in history.iter().enumerate() {
+            let name = match r.phase {
+                Phase::Teacher => Name::KdTeacher,
+                Phase::Student => Name::KdStudent,
+                Phase::Polish => Name::KdPolish,
+                Phase::Calibrate => Name::KdCalibrate,
+            };
+            let ts = i as u64 * 1_000;
+            let loss_u = (r.loss.max(0.0) * 1e6).round() as u64;
+            let span = TraceEntry::span(Clock::Virtual, name, ts, 1_000, r.stage as u64)
+                .with_path(sink.intern(&r.path))
+                .with_args(r.epoch as u64, loss_u);
+            sink.record(0, span);
+        }
+    }
     TrainResult { params, accuracies, history }
 }
 
@@ -1441,6 +1470,28 @@ mod tests {
         // the sample_paths macs in morph::tests were computed from the
         // python reference; full-depth macs must match that scale
         assert_eq!(spec.count_macs(full), 28 * 28 * 9 * 8 + 14 * 14 * 9 * 8 * 16 + 7 * 7 * 9 * 16 * 32 + 3 * 3 * 32 * 10);
+    }
+
+    #[test]
+    fn kd_trace_mirrors_history_and_is_reproducible() {
+        use crate::obs::{Clock, Kind, TraceSink};
+        let spec = one_block_spec();
+        let ds = spec.dataset(64, 32, 3);
+        let mk = || DistillConfig { trace: Some(TraceSink::shared()), ..quick_cfg() };
+        let (c1, c2) = (mk(), mk());
+        let res = distillcycle_train(&spec, &ds, &c1);
+        distillcycle_train(&spec, &ds, &c2);
+        let (t1, t2) = (c1.trace.unwrap().drain(), c2.trace.unwrap().drain());
+        assert_eq!(t1.entries, t2.entries, "KD trace must be reproducible");
+        assert_eq!(t1.dropped, 0);
+        assert_eq!(t1.entries.len(), res.history.len());
+        for (e, r) in t1.entries.iter().zip(&res.history) {
+            assert_eq!(e.kind, Kind::Span);
+            assert_eq!(e.clock, Clock::Virtual);
+            assert_eq!(e.id, r.stage as u64);
+            assert_eq!(e.a0, r.epoch as u64);
+            assert_eq!(t1.path_name(e.path), Some(r.path.as_str()), "{}", r.path);
+        }
     }
 
     #[test]

@@ -228,6 +228,13 @@ pub struct DseConfig {
     /// contribute nothing to dominance or crowding — existing 2- and
     /// 3-objective searches stay bit-identical (test-enforced).
     pub energy_objective: bool,
+    /// optional span/event sink (`explore --trace-out`): `Some` records
+    /// one virtual-clock generation span plus cumulative engine counters
+    /// per GA generation on lane 0. Every recorded value is computed on
+    /// the main thread and already thread-count-invariant, so traces are
+    /// byte-identical across `threads`; `None` records nothing and the
+    /// search result is identical either way.
+    pub trace: Option<std::sync::Arc<crate::obs::TraceSink>>,
 }
 
 impl Default for DseConfig {
@@ -248,6 +255,7 @@ impl Default for DseConfig {
             surrogate: false,
             accuracy_paths: None,
             energy_objective: false,
+            trace: None,
         }
     }
 }
@@ -898,8 +906,11 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
     let gene_lb = cfg.prune.then(|| roofline::GeneBounds::new(engine.evaluator, cfg.rep));
     let mut roofline_pruned = 0usize;
     let mut surrogate_reorders = 0usize;
+    // evaluations already spent before this generation: the per-gen
+    // span's a0 is the delta, so trace readers see the eval budget flow
+    let mut evals_before = engine.evaluations;
 
-    for _gen in 0..cfg.generations {
+    for gen in 0..cfg.generations {
         // offspring genes via tournament + crossover + Alg.1 mutation —
         // main thread only, so the RNG stream is thread-count-invariant
         let mut batch: Vec<Vec<usize>> = Vec::with_capacity(cfg.population);
@@ -1000,6 +1011,34 @@ fn ga_loop(engine: &mut Engine<'_>, bounds: &[usize], cfg: &DseConfig) -> DseRes
             .map(|c| c.objectives.latency_ms)
             .fold(f64::INFINITY, f64::min);
         best_latency_per_gen.push(best);
+
+        // per-generation telemetry: one virtual-clock span (1 ms per
+        // generation on the search's logical timeline) plus cumulative
+        // engine counters. All values are main-thread state that is
+        // already invariant across `cfg.threads`.
+        if let Some(sink) = &cfg.trace {
+            use crate::obs::{Clock, Name, TraceEntry};
+            let ts = gen as u64 * 1_000;
+            let evals = (engine.evaluations - evals_before) as u64;
+            evals_before = engine.evaluations;
+            let best_us = if best.is_finite() {
+                (best * 1_000.0).round() as u64
+            } else {
+                0
+            };
+            let span = TraceEntry::span(Clock::Virtual, Name::DseGeneration, ts, 1_000, gen as u64)
+                .with_args(evals, best_us);
+            sink.record(0, span);
+            let counters = [
+                (Name::CacheHits, engine.cache_hits() as u64),
+                (Name::StageHits, engine.stage_hits() as u64),
+                (Name::RooflinePruned, roofline_pruned as u64),
+                (Name::SurrogateReorders, surrogate_reorders as u64),
+            ];
+            for (name, value) in counters {
+                sink.record(0, TraceEntry::counter(Clock::Virtual, name, ts, value));
+            }
+        }
     }
 
     // final front: feasible, non-dominated, deduped by chromosome
@@ -1292,6 +1331,36 @@ mod tests {
             assert_eq!(serial.stage_hits, parallel.stage_hits);
             assert_eq!(serial.stage_misses, parallel.stage_misses);
         }
+    }
+
+    #[test]
+    fn generation_trace_is_thread_count_invariant() {
+        use crate::obs::{Kind, Name, TraceSink};
+        let net = zoo::mnist();
+        let mk = |threads: usize| DseConfig {
+            population: 24,
+            generations: 6,
+            seed: 9,
+            threads,
+            constraints: Constraints::device(&ZYNQ_7100),
+            trace: Some(TraceSink::shared()),
+            ..DseConfig::default()
+        };
+        let (c1, c4) = (mk(1), mk(4));
+        run(&net, &ZYNQ_7100, &c1);
+        run(&net, &ZYNQ_7100, &c4);
+        let (t1, t4) = (c1.trace.unwrap().drain(), c4.trace.unwrap().drain());
+        assert_eq!(t1.entries, t4.entries, "trace must not depend on thread count");
+        assert_eq!(t1.dropped, 0);
+        // one generation span + four cumulative counters per generation
+        let spans: Vec<_> = t1.entries.iter().filter(|e| e.kind == Kind::Span).collect();
+        assert_eq!(spans.len(), 6);
+        assert!(spans.iter().all(|e| e.name == Name::DseGeneration));
+        assert!(spans.iter().enumerate().all(|(g, e)| e.ts_us == g as u64 * 1_000));
+        assert_eq!(t1.entries.iter().filter(|e| e.kind == Kind::Counter).count(), 24);
+        // the last span's a1 carries the generation's best feasible
+        // latency in whole microseconds — nonzero on mnist
+        assert!(spans.last().unwrap().a1 > 0);
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub use scrub::ScrubbedState;
 use std::collections::BTreeMap;
 
 use crate::coordinator::trace::parse_kv_pairs;
+use crate::obs;
 use crate::util::suggest;
 
 /// The four injectable fault classes.
@@ -259,6 +260,82 @@ impl std::fmt::Display for FaultRecord {
 /// like the governor decision log so CI can byte-diff both together).
 pub fn render_fault_log(records: &[FaultRecord]) -> String {
     records.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// Convert the canonical fault log into virtual-clock trace entries
+/// (lane 0 of `sink`). Pure function of the records + `rate_hz`, so the
+/// recorded spans inherit the log's worker-invariance: SEU strikes and
+/// transients as instants, scrubs/stalls/rollbacks as spans over their
+/// modeled windows, and one retry instant per backoff step.
+pub fn record_trace(records: &[FaultRecord], rate_hz: f64, sink: &obs::TraceSink) {
+    use obs::{virtual_us, Clock, Name, TraceEntry};
+    for r in records {
+        match r {
+            FaultRecord::Seu { frame, bit, loaded } => {
+                let ts = virtual_us(*frame, rate_hz);
+                sink.record(
+                    0,
+                    TraceEntry::instant(Clock::Virtual, Name::FaultSeu, ts, *frame as u64)
+                        .with_args(*bit as u64, *loaded as u64),
+                );
+            }
+            FaultRecord::ScrubRepair { frame, mttr_ms } => sink.record(
+                0,
+                TraceEntry::span(
+                    Clock::Virtual,
+                    Name::ScrubRepair,
+                    virtual_us(*frame, rate_hz),
+                    (mttr_ms.max(0.0) * 1_000.0).round() as u64,
+                    *frame as u64,
+                ),
+            ),
+            FaultRecord::Transient { frame, id, fails, retries_at_ms, recovered } => {
+                let ts = virtual_us(*frame, rate_hz);
+                sink.record(
+                    0,
+                    TraceEntry::instant(Clock::Virtual, Name::FaultTransient, ts, *id)
+                        .with_args(u64::from(*fails), u64::from(*recovered)),
+                );
+                for (k, at_ms) in retries_at_ms.iter().enumerate() {
+                    let at = ts + (at_ms.max(0.0) * 1_000.0).round() as u64;
+                    sink.record(
+                        0,
+                        TraceEntry::instant(Clock::Virtual, Name::Retry, at, *id)
+                            .with_args(k as u64 + 1, 0),
+                    );
+                }
+            }
+            FaultRecord::Stall { frame, id, ms, vshard } => sink.record(
+                0,
+                TraceEntry::span(
+                    Clock::Virtual,
+                    Name::FaultStall,
+                    virtual_us(*frame, rate_hz),
+                    (ms.max(0.0) * 1_000.0).round() as u64,
+                    *id,
+                )
+                .with_args(*vshard as u64, 0),
+            ),
+            FaultRecord::SwapRollback { frame, from, to, swap_ms, cooldown_frames } => {
+                let timeline = crate::morph::schedule::SwapTimeline {
+                    stall_frames: 0,
+                    swap_ms: *swap_ms,
+                };
+                sink.record(
+                    0,
+                    TraceEntry::span(
+                        Clock::Virtual,
+                        Name::Rollback,
+                        virtual_us(*frame, rate_hz),
+                        timeline.window_us(),
+                        *frame as u64,
+                    )
+                    .with_path(sink.intern(to))
+                    .with_args(u64::from(sink.intern(from)), *cooldown_frames as u64),
+                );
+            }
+        }
+    }
 }
 
 /// Virtual shards in the capacity model. Fixed (NOT `--workers`): the
@@ -761,5 +838,48 @@ mod tests {
         }
         assert_eq!(inj.stats(), InjectorStats::default());
         assert!(inj.records().is_empty());
+    }
+
+    #[test]
+    fn fault_records_convert_to_virtual_trace_entries() {
+        use crate::obs::{Clock, Kind, Name, TraceSink};
+        let sink = TraceSink::new(64);
+        let records = vec![
+            FaultRecord::Seu { frame: 4, bit: 2, loaded: 1 },
+            FaultRecord::ScrubRepair { frame: 16, mttr_ms: 1.5 },
+            FaultRecord::Transient {
+                frame: 8,
+                id: 9,
+                fails: 2,
+                retries_at_ms: vec![2.0, 6.0],
+                recovered: true,
+            },
+            FaultRecord::Stall { frame: 10, id: 11, ms: 3.0, vshard: 1 },
+            FaultRecord::SwapRollback {
+                frame: 12,
+                from: "a".into(),
+                to: "b".into(),
+                swap_ms: 0.5,
+                cooldown_frames: 8,
+            },
+        ];
+        record_trace(&records, 4000.0, &sink);
+        let trace = sink.drain();
+        // 1 seu + 1 scrub + 1 transient + 2 retries + 1 stall + 1 rollback
+        assert_eq!(trace.entries.len(), 7);
+        assert!(trace.entries.iter().all(|e| e.clock == Clock::Virtual));
+        let retry: Vec<_> = trace.entries.iter().filter(|e| e.name == Name::Retry).collect();
+        assert_eq!(retry.len(), 2);
+        // frame 8 at 4 kHz = 2000 us; backoff instants +2 ms and +6 ms
+        assert_eq!(retry[0].ts_us, 4_000);
+        assert_eq!(retry[1].ts_us, 8_000);
+        let rb = trace.entries.iter().find(|e| e.name == Name::Rollback).unwrap();
+        assert_eq!(rb.kind, Kind::Span);
+        assert_eq!(rb.dur_us, 500);
+        assert_eq!(trace.path_name(rb.path), Some("b"));
+        assert_eq!(trace.path_name(rb.a0 as u16), Some("a"));
+        let stall = trace.entries.iter().find(|e| e.name == Name::FaultStall).unwrap();
+        assert_eq!(stall.dur_us, 3_000);
+        assert_eq!(stall.a0, 1);
     }
 }

@@ -23,6 +23,9 @@
 //!   * [`rtl`] — Verilog emission for selected design points
 //!   * [`sim`] — cycle-level streaming simulator (the hardware stand-in)
 //!   * [`morph`] — NeuroMorph runtime reconfiguration + governor
+//!   * [`obs`] — structured span/event recorder: virtual-clock
+//!     deterministic traces, Chrome trace-event / folded-stack /
+//!     snapshot exporters (`--trace-out`, `report trace`)
 //!   * [`runtime`] — PJRT executor loading the AOT artifacts
 //!   * [`backend`] — the unified `InferenceBackend` trait: PJRT, cycle
 //!     simulator and analytical model behind one execution contract
@@ -41,6 +44,7 @@ pub mod dse;
 pub mod fault;
 pub mod graph;
 pub mod morph;
+pub mod obs;
 pub mod pe;
 pub mod power;
 pub mod quant;

@@ -1,15 +1,18 @@
 //! ForgeMorph CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! forgemorph report <table1|...|fig12|power|all>   regenerate paper tables/figures
+//! forgemorph report <table1|...|fig12|power|trace|all>   regenerate paper tables/figures
+//! forgemorph report trace [--in FILE]   render an exported trace timeline
 //! forgemorph report bench-check --baseline FILE [--current FILE
 //!                   --tolerance-pct 20 --absolute]   perf-regression gate
 //! forgemorph dse|explore --model cifar10 [--pop N --gens N --seed N --dsp N
 //!                   --latency MS --power-budget MW --energy-front
 //!                   --threads N --no-memo --no-stage-memo --prune
-//!                   --surrogate --profile FILE]
+//!                   --surrogate --profile FILE
+//!                   --trace-out FILE --trace-deterministic]
 //! forgemorph distill --model mnist [--train N --test N --epochs N --batch N
-//!                   --seed N --qbits B --threads N --out FILE]   train the
+//!                   --seed N --qbits B --threads N --out FILE
+//!                   --trace-out FILE --trace-deterministic]   train the
 //!                   morph-path ladder (DistillCycle) and emit an
 //!                   AccuracyProfile
 //! forgemorph rtl --model mnist --p 4 [--out DIR]   emit Verilog for a design point
@@ -20,7 +23,7 @@
 //!                   --accuracy-floor F --patience K
 //!                   --power-trace step|ramp|spike|diurnal[:k=v,...]
 //!                   --fault-trace "seu;stall;swapfail;transient"[:k=v,...]
-//!                   --fault-seed N]
+//!                   --fault-seed N --trace-out FILE --trace-deterministic]
 //! forgemorph verify [--artifacts DIR --model mnist]   probe-check AOT artifacts
 //! ```
 
@@ -67,7 +70,11 @@ forgemorph — adaptive CNN deployment compiler (paper reproduction)
 commands:
   report <id>   regenerate a paper table/figure (table1..table6, fig2, fig8,
                 fig10, fig11, fig12, backends, graphs, distill, power,
-                faults, all);
+                faults, trace, all);
+                `report trace` replays the canonical fault storm traced
+                and renders its timeline — per-path occupancy,
+                switch/swap annotations, retry ladders; `report trace
+                --in FILE` renders a trace exported with --trace-out;
                 `report bench-check --baseline BENCH_x.json` gates perf
                 regressions against the committed bench trajectory
   dse|explore   NeuroForge design space exploration (--threads N fans the
@@ -83,13 +90,17 @@ commands:
                 --profile FILE adds a DistillCycle AccuracyProfile and
                 switches to 3-objective latency/DSP/accuracy fronts.
                 --power-budget MW caps modeled power; --energy-front adds
-                energy-per-frame as a minimized objective)
+                energy-per-frame as a minimized objective.
+                --trace-out FILE records per-generation DSE telemetry —
+                .json Chrome trace events, .folded flamegraph stacks,
+                .txt snapshot)
   distill       DistillCycle-train a small zoo model's morph-path ladder
                 (hierarchical KD) and emit its AccuracyProfile JSON
                 (--threads N fans the independent ladder phases out —
                 same semantics as explore's flag, byte-identical profile
                 for any value; --threads 0 runs the serial scalar
-                reference kernels)
+                reference kernels; --trace-out FILE records one KD-cycle
+                span per stage/phase/epoch loss record)
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
   graph         graph dump --model M: topology + scheduled StagePlan
@@ -104,7 +115,11 @@ commands:
                 SPEC injects deterministic faults — ;-separated
                 transient|stall|swapfail|seu clauses with optional k=v
                 params — and prints the self-healing fault log, also
-                byte-identical for any --workers value)
+                byte-identical for any --workers value; --trace-out FILE
+                records request/governor/fault lifecycle spans —
+                with --trace-deterministic the export keeps only
+                virtual-clock spans and is byte-identical across
+                --workers values and reruns)
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
@@ -120,17 +135,68 @@ fn rep_for(args: &Args) -> FpRep {
     }
 }
 
+/// `--trace-out FILE`: a shared span/event sink for the run, or `None`
+/// (tracing fully disabled — every subsystem takes the no-sink branch).
+fn trace_sink_for(args: &Args) -> Option<std::sync::Arc<forgemorph::obs::TraceSink>> {
+    args.get("trace-out").map(|_| forgemorph::obs::TraceSink::shared())
+}
+
+/// Drain the sink and export by file extension: `.folded` writes
+/// flamegraph stacks, `.txt` the plain-text snapshot, anything else
+/// Chrome trace-event JSON (Perfetto-loadable). `--trace-deterministic`
+/// keeps only virtual-clock entries so the file is byte-identical
+/// across worker counts and reruns.
+fn write_trace(
+    sink: &forgemorph::obs::TraceSink,
+    path: &str,
+    deterministic: bool,
+) -> anyhow::Result<()> {
+    use forgemorph::obs::export;
+    let trace = sink.drain();
+    let text = if path.ends_with(".folded") {
+        export::folded(&trace, deterministic)
+    } else if path.ends_with(".txt") {
+        export::text_snapshot(&trace)
+    } else {
+        export::chrome_trace(&trace, deterministic)
+    };
+    std::fs::write(path, &text).with_context(|| format!("writing trace {path}"))?;
+    println!(
+        "wrote trace: {} events, {} dropped -> {path}",
+        trace.entries.len(),
+        trace.dropped
+    );
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     if id == "bench-check" {
         return cmd_bench_check(args);
+    }
+    // `report trace --in FILE` renders an exported Chrome trace instead
+    // of replaying the canonical storm (`report trace` with no --in)
+    if id == "trace" {
+        if let Some(path) = args.get("in") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading trace {path}"))?;
+            let rendered =
+                report::render_trace_json(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            println!("{rendered}");
+            return Ok(());
+        }
     }
     match report::by_name(id) {
         Some(text) => {
             println!("{text}");
             Ok(())
         }
-        None => bail!("unknown report id '{id}'"),
+        None => {
+            let hint = forgemorph::util::suggest(id, report::KNOWN_IDS)
+                .map(|s| format!(" (did you mean '{s}'?)"))
+                .unwrap_or_default();
+            bail!("unknown report id '{id}'{hint} (valid: {})", report::KNOWN_IDS.join("|"))
+        }
     }
 }
 
@@ -206,6 +272,11 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
+    let sink = trace_sink_for(args);
+    if let Some(s) = &sink {
+        s.set_meta("cmd", "explore");
+        s.set_meta("model", &net.name);
+    }
     let cfg = dse::DseConfig {
         population: args.get_usize("pop", 96),
         generations: args.get_usize("gens", 40),
@@ -218,6 +289,7 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         surrogate: args.flag("surrogate"),
         accuracy_paths: profile.as_ref().map(|p| p.morph_paths()),
         energy_objective: args.flag("energy-front"),
+        trace: sink.clone(),
         constraints: dse::Constraints {
             latency_ms: args.get("latency").and_then(|s| s.parse().ok()),
             dsp: args.get("dsp").and_then(|s| s.parse().ok()),
@@ -311,6 +383,9 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if let (Some(s), Some(out)) = (&sink, args.get("trace-out")) {
+        write_trace(s, out, args.flag("trace-deterministic"))?;
+    }
     Ok(())
 }
 
@@ -333,12 +408,18 @@ fn cmd_distill(args: &Args) -> anyhow::Result<()> {
     // (the serial scalar-reference path), so no .max(1) clamp here.
     let default_threads =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let sink = trace_sink_for(args);
+    if let Some(s) = &sink {
+        s.set_meta("cmd", "distill");
+        s.set_meta("model", &net.name);
+    }
     let cfg = DistillConfig {
         epochs_per_stage: args.get_usize("epochs", 2),
         batch: args.get_usize("batch", 32),
         seed: args.get_u64("seed", 0),
         qat_bits,
         threads: args.get_usize("threads", default_threads),
+        trace: sink.clone(),
         ..DistillConfig::default()
     };
     let n_train = args.get_usize("train", 512);
@@ -392,6 +473,9 @@ fn cmd_distill(args: &Args) -> anyhow::Result<()> {
         println!("wrote AccuracyProfile to {out}");
     } else {
         println!("{}", profile.to_json());
+    }
+    if let (Some(s), Some(out)) = (&sink, args.get("trace-out")) {
+        write_trace(s, out, args.flag("trace-deterministic"))?;
     }
     Ok(())
 }
@@ -531,12 +615,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if !(0.0..=1.0).contains(&accuracy_floor) {
         bail!("--accuracy-floor {accuracy_floor}: must be within 0.0..=1.0 (a fraction, not a percent)");
     }
+    let sink = trace_sink_for(args);
+    if let Some(s) = &sink {
+        s.set_meta("cmd", "serve");
+        s.set_meta("model", &model);
+        s.set_meta("backend", &spec.describe());
+    }
     let cfg = ServeConfig {
         max_wait: Duration::from_millis(2),
         patience: args.get_usize("patience", 2),
         workers,
         accuracy_floor,
         external_pacing: trace_spec.is_some() || fault_spec.is_some(),
+        trace: sink.clone(),
         ..Default::default()
     };
     if trace_spec.is_some() || fault_spec.is_some() {
@@ -594,14 +685,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         metrics.throughput_fps(wall)
     );
     println!(
-        "e2e latency: mean {:.2} ms, p99 {:.2} ms | morph switches: {} | modeled energy {:.3} J",
+        "e2e latency: mean {:.2} ms, p50 {:.2} / p95 {:.2} / p99 {:.2} ms | \
+         morph switches: {} | modeled energy {:.3} J",
         metrics.e2e_latency.mean_us() / 1000.0,
-        metrics.e2e_latency.quantile_us(0.99) as f64 / 1000.0,
+        metrics.e2e_latency.quantile(0.5) / 1000.0,
+        metrics.e2e_latency.quantile(0.95) / 1000.0,
+        metrics.e2e_latency.quantile(0.99) / 1000.0,
         metrics.morph_switches,
         metrics.energy_j
     );
     for (path, n) in by_path {
         println!("  path {path}: {n} frames");
+    }
+    if let (Some(s), Some(out)) = (&sink, args.get("trace-out")) {
+        write_trace(s, out, args.flag("trace-deterministic"))?;
     }
     Ok(())
 }
@@ -624,6 +721,7 @@ fn cmd_serve_trace(
     rate_hz: f64,
 ) -> anyhow::Result<()> {
     let workers = cfg.workers;
+    let sink = cfg.trace.clone();
     let mut coord = Coordinator::start(cfg, spec)?;
     let rows = coord.path_energy_rows();
     anyhow::ensure!(!rows.is_empty(), "backend reported no path energy rows");
@@ -683,6 +781,9 @@ fn cmd_serve_trace(
             outcome.ok + outcome.degraded + outcome.failed == outcome.answered,
             "terminal statuses do not cover every answered request"
         );
+    }
+    if let (Some(s), Some(out)) = (&sink, args.get("trace-out")) {
+        write_trace(s, out, args.flag("trace-deterministic"))?;
     }
     Ok(())
 }

@@ -104,6 +104,15 @@ pub struct SwapTimeline {
     pub swap_ms: f64,
 }
 
+impl SwapTimeline {
+    /// The modeled DPR window in whole microseconds — the span length
+    /// trace recording (`obs`) stamps for a switch's swap window or a
+    /// rollback's wasted window.
+    pub fn window_us(&self) -> u64 {
+        (self.swap_ms.max(0.0) * 1_000.0).round() as u64
+    }
+}
+
 /// Timeline of a switch that stalls `stall_frames` full frames of
 /// `full_frame_ms` each (the paper's full-frame reactivation delay).
 pub fn swap_timeline(stall_frames: usize, full_frame_ms: f64) -> SwapTimeline {
@@ -235,6 +244,10 @@ mod tests {
         assert!((up.swap_ms - 1.2).abs() < 1e-12);
         // degenerate frame period never yields negative windows
         assert_eq!(swap_timeline(3, -1.0).swap_ms, 0.0);
+        // trace-span length: milliseconds to whole microseconds
+        assert_eq!(up.window_us(), 1_200);
+        assert_eq!(down.window_us(), 0);
+        assert_eq!(swap_timeline(3, -1.0).window_us(), 0);
     }
 
     #[test]

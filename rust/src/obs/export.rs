@@ -1,0 +1,273 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable), folded
+//! stacks (flamegraph text), and a plain-text snapshot.
+//!
+//! Every exporter takes a drained [`Trace`] plus a `deterministic`
+//! flag. Deterministic output applies the §14 quarantine rule: only
+//! [`Clock::Virtual`] entries survive, the recording lane is zeroed,
+//! and the result is re-sorted by the entry total order — so the bytes
+//! are identical for any worker count and any rerun of the same
+//! replay. Non-deterministic output keeps everything, wall entries
+//! included.
+
+use std::collections::BTreeMap;
+
+use super::{Clock, Kind, Name, Trace, TraceEntry};
+use crate::util::json::Json;
+
+/// Exporter identifier stamped into `otherData.format`.
+pub const FORMAT: &str = "forgemorph-trace-v1";
+
+/// Entries an export shows: all of them, or the quarantined
+/// deterministic subset (virtual clock only, lanes zeroed, re-sorted).
+pub fn visible(trace: &Trace, deterministic: bool) -> Vec<TraceEntry> {
+    let mut entries: Vec<TraceEntry> = if deterministic {
+        trace
+            .entries
+            .iter()
+            .filter(|e| e.clock == Clock::Virtual)
+            .map(|e| TraceEntry { lane: 0, ..*e })
+            .collect()
+    } else {
+        trace.entries.clone()
+    };
+    entries.sort_unstable();
+    entries
+}
+
+fn resolve(trace: &Trace, idx: u16) -> String {
+    trace.path_name(idx).map(str::to_string).unwrap_or_else(|| format!("path#{idx}"))
+}
+
+/// Per-name argument rendering: semantic keys where the taxonomy fixes
+/// a meaning, generic `v0`/`v1` otherwise (zeroes omitted).
+fn args_for(trace: &Trace, e: &TraceEntry) -> BTreeMap<String, Json> {
+    let mut args = BTreeMap::new();
+    args.insert("id".to_string(), Json::Num(e.id as f64));
+    args.insert(
+        "clock".to_string(),
+        Json::Str(match e.clock {
+            Clock::Virtual => "virtual".to_string(),
+            Clock::Wall => "wall".to_string(),
+        }),
+    );
+    if e.path > 0 {
+        args.insert("path".to_string(), Json::Str(resolve(trace, e.path)));
+    }
+    if e.kind == Kind::Counter {
+        args.insert("value".to_string(), Json::Num(e.a0 as f64));
+        return args;
+    }
+    let mut put = |k: &str, v: u64| {
+        args.insert(k.to_string(), Json::Num(v as f64));
+    };
+    match e.name {
+        Name::Switch => {
+            args.insert("from".to_string(), Json::Str(resolve(trace, e.a0 as u16)));
+            put("budget_mw", e.a1);
+        }
+        Name::Rollback => {
+            args.insert("from".to_string(), Json::Str(resolve(trace, e.a0 as u16)));
+            put("cooldown_frames", e.a1);
+        }
+        Name::SwapWindow => put("stall_frames", e.a0),
+        Name::Retry => put("attempt", e.a0),
+        Name::FaultTransient => {
+            put("fails", e.a0);
+            args.insert("recovered".to_string(), Json::Bool(e.a1 != 0));
+        }
+        Name::FaultStall => put("vshard", e.a0),
+        Name::FaultSeu => {
+            put("bit", e.a0);
+            put("loaded", e.a1);
+        }
+        Name::Enqueue => {
+            if e.a1 != 0 {
+                args.insert("degraded".to_string(), Json::Bool(true));
+            }
+        }
+        Name::DseGeneration => {
+            put("evals", e.a0);
+            put("best_lat_us", e.a1);
+        }
+        Name::KdTeacher | Name::KdStudent | Name::KdPolish | Name::KdCalibrate => {
+            put("epoch", e.a0);
+            put("loss_u", e.a1);
+        }
+        _ => {
+            if e.a0 != 0 {
+                put("v0", e.a0);
+            }
+            if e.a1 != 0 {
+                put("v1", e.a1);
+            }
+        }
+    }
+    if e.clock == Clock::Wall {
+        put("lane", u64::from(e.lane));
+    }
+    args
+}
+
+/// Chrome trace-event JSON (the object form, with `traceEvents` +
+/// `otherData`) — drag into Perfetto / `chrome://tracing`. All
+/// timestamps are microseconds, the unit the format expects.
+pub fn chrome_trace(trace: &Trace, deterministic: bool) -> String {
+    let events = visible(trace, deterministic);
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut o = BTreeMap::new();
+            let cat = e.name.cat();
+            o.insert(
+                "ph".to_string(),
+                Json::Str(
+                    match e.kind {
+                        Kind::Span => "X",
+                        Kind::Instant => "i",
+                        Kind::Counter => "C",
+                    }
+                    .to_string(),
+                ),
+            );
+            o.insert("ts".to_string(), Json::Num(e.ts_us as f64));
+            if e.kind == Kind::Span {
+                o.insert("dur".to_string(), Json::Num(e.dur_us as f64));
+            }
+            if e.kind == Kind::Instant {
+                o.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+            o.insert("pid".to_string(), Json::Num(0.0));
+            o.insert("tid".to_string(), Json::Num(cat.tid() as f64));
+            o.insert("cat".to_string(), Json::Str(cat.as_str().to_string()));
+            o.insert("name".to_string(), Json::Str(e.name.as_str().to_string()));
+            o.insert("args".to_string(), Json::Obj(args_for(trace, e)));
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut other = BTreeMap::new();
+    other.insert("format".to_string(), Json::Str(FORMAT.to_string()));
+    other.insert("deterministic".to_string(), Json::Bool(deterministic));
+    other.insert("dropped".to_string(), Json::Num(trace.dropped as f64));
+    for (k, v) in &trace.meta {
+        other.insert(k.clone(), Json::Str(v.clone()));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(evs));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    root.insert("otherData".to_string(), Json::Obj(other));
+    format!("{}\n", Json::Obj(root))
+}
+
+/// Folded-stack flamegraph text: one `cat;name[;path] total_us` line
+/// per span aggregate, sorted — pipe into any flamegraph renderer.
+pub fn folded(trace: &Trace, deterministic: bool) -> String {
+    let mut agg: BTreeMap<String, u64> = BTreeMap::new();
+    for e in visible(trace, deterministic) {
+        if e.kind != Kind::Span {
+            continue;
+        }
+        let mut key = format!("{};{}", e.name.cat().as_str(), e.name.as_str());
+        if e.path > 0 {
+            key.push(';');
+            key.push_str(&resolve(trace, e.path));
+        }
+        *agg.entry(key).or_insert(0) += e.dur_us;
+    }
+    let mut out = String::new();
+    for (key, total) in agg {
+        out.push_str(&format!("{key} {total}\n"));
+    }
+    out
+}
+
+/// Plain-text metrics snapshot: per-(category, name) event counts and
+/// total span time, plus the drop counter and run metadata.
+pub fn text_snapshot(trace: &Trace) -> String {
+    let mut counts: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+    for e in &trace.entries {
+        let slot = counts
+            .entry((e.name.cat().as_str().to_string(), e.name.as_str().to_string()))
+            .or_insert((0, 0));
+        slot.0 += 1;
+        if e.kind == Kind::Span {
+            slot.1 += e.dur_us;
+        }
+    }
+    let mut out = format!(
+        "trace snapshot: {} entries, {} dropped\n",
+        trace.entries.len(),
+        trace.dropped
+    );
+    for (k, v) in &trace.meta {
+        out.push_str(&format!("  {k}: {v}\n"));
+    }
+    out.push_str(&format!("{:<28} {:>8} {:>14}\n", "category;name", "events", "span_us"));
+    for ((cat, name), (n, dur)) in counts {
+        let stack = format!("{cat};{name}");
+        out.push_str(&format!("{stack:<28} {n:>8} {dur:>14}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let sink = super::super::TraceSink::new(64);
+        let p = sink.intern("d3_w100");
+        sink.set_meta("model", "mnist");
+        sink.record(0, TraceEntry::span(Clock::Virtual, Name::Execute, 250, 90, 1).with_path(p));
+        sink.record(
+            0,
+            TraceEntry::instant(Clock::Virtual, Name::Switch, 500, 2)
+                .with_path(p)
+                .with_args(u64::from(p), 450),
+        );
+        sink.record(1, TraceEntry::span(Clock::Wall, Name::Execute, 123, 45, 1).with_path(p));
+        sink.record(0, TraceEntry::counter(Clock::Virtual, Name::StageHits, 1000, 17));
+        sink.drain()
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_quarantines_wall_entries() {
+        let trace = sample_trace();
+        let full = chrome_trace(&trace, false);
+        let det = chrome_trace(&trace, true);
+        for text in [&full, &det] {
+            let parsed = Json::parse(text).expect("exporter emits valid JSON");
+            let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+            assert!(!events.is_empty());
+            let other = parsed.get("otherData").unwrap();
+            assert_eq!(other.get("format").and_then(Json::as_str), Some(FORMAT));
+            assert_eq!(other.get("dropped").and_then(Json::as_f64), Some(0.0));
+            assert_eq!(other.get("model").and_then(Json::as_str), Some("mnist"));
+        }
+        assert!(full.contains("\"wall\""));
+        assert!(!det.contains("\"wall\""), "deterministic export must quarantine wall entries");
+        assert!(det.contains("\"switch\""));
+        assert!(det.contains("\"d3_w100\""));
+        assert!(det.contains("\"value\":17"));
+    }
+
+    #[test]
+    fn folded_aggregates_span_time_by_stack() {
+        let trace = sample_trace();
+        let det = folded(&trace, true);
+        assert_eq!(det, "request;execute;d3_w100 90\n");
+        let full = folded(&trace, false);
+        assert_eq!(full, "request;execute;d3_w100 135\n");
+    }
+
+    #[test]
+    fn text_snapshot_surfaces_drop_counter() {
+        let sink = super::super::TraceSink::new(1);
+        sink.record(0, TraceEntry::instant(Clock::Wall, Name::Enqueue, 1, 1));
+        sink.record(0, TraceEntry::instant(Clock::Wall, Name::Enqueue, 2, 2));
+        let text = text_snapshot(&sink.drain());
+        assert!(text.starts_with("trace snapshot: 1 entries, 1 dropped"));
+        assert!(text.contains("request;enqueue"));
+    }
+}

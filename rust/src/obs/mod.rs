@@ -1,0 +1,412 @@
+//! Structured span/event recorder — the observability substrate every
+//! subsystem writes into (DESIGN.md §14).
+//!
+//! One [`TraceSink`] per run, handed around as `Option<Arc<TraceSink>>`
+//! (`None` = tracing off, zero cost beyond one branch). Recording goes
+//! through per-lane bounded [`ring::Ring`]s — submit-side/virtual
+//! entries on lane 0, worker shards on their own lanes — merged at
+//! [`TraceSink::drain`] with an associative sorted union, so the
+//! drained trace is independent of lane grouping and drop counts are
+//! never silently truncated.
+//!
+//! **Clock quarantine rule:** entries are stamped [`Clock::Virtual`]
+//! wherever a virtual clock exists (trace replay frames, DSE
+//! generations, distill epochs) and [`Clock::Wall`] otherwise (live
+//! worker timings). Deterministic exports keep only `Virtual` entries
+//! and zero the lane field, so `--trace-deterministic` output is
+//! byte-identical across worker counts and reruns — the same contract
+//! the power/fault replay logs already enforce.
+
+pub mod export;
+pub mod ring;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ring::{Ring, RingDump};
+
+/// Which clock stamped an entry. `Wall` entries are quarantined: they
+/// never appear in a deterministic export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Clock {
+    Virtual,
+    Wall,
+}
+
+/// Chrome trace-event phase the entry exports as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Kind {
+    /// complete event (`"ph":"X"`, has a duration)
+    Span,
+    /// instant event (`"ph":"i"`)
+    Instant,
+    /// counter sample (`"ph":"C"`, value in `a0`)
+    Counter,
+}
+
+/// Span category — one Chrome track (`tid`) per category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Cat {
+    Request,
+    Governor,
+    Swap,
+    Fault,
+    Scrub,
+    Retry,
+    Dse,
+    Distill,
+}
+
+impl Cat {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Cat::Request => "request",
+            Cat::Governor => "governor",
+            Cat::Swap => "swap",
+            Cat::Fault => "fault",
+            Cat::Scrub => "scrub",
+            Cat::Retry => "retry",
+            Cat::Dse => "dse",
+            Cat::Distill => "distill",
+        }
+    }
+
+    /// Stable per-category Chrome track id.
+    pub fn tid(self) -> u64 {
+        match self {
+            Cat::Request => 1,
+            Cat::Governor => 2,
+            Cat::Swap => 3,
+            Cat::Fault => 4,
+            Cat::Scrub => 5,
+            Cat::Retry => 6,
+            Cat::Dse => 7,
+            Cat::Distill => 8,
+        }
+    }
+}
+
+/// Span taxonomy (DESIGN.md §14). The name fixes the category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Name {
+    /// request entered a shard queue
+    Enqueue,
+    /// a worker pulled a batch (arg: batch length)
+    Batch,
+    /// frame execution — virtual (modeled path frame time) on the
+    /// replay path, wall (measured backend time) on workers
+    Execute,
+    /// terminal responses delivered for a batch
+    Respond,
+    /// bounded-retry resubmission (arg: attempt)
+    Retry,
+    /// committed governor switch (args: from path, budget)
+    Switch,
+    /// failed swap rolled back (span over the wasted DPR window)
+    Rollback,
+    /// modeled DPR window of a committed switch
+    SwapWindow,
+    /// SEU strike on the gate state
+    FaultSeu,
+    /// CRC scrub pass repaired the gate state (span = MTTR)
+    ScrubRepair,
+    /// injected transient execute failure
+    FaultTransient,
+    /// injected straggler stall (span = stall)
+    FaultStall,
+    /// one DSE generation (args: evals, best feasible latency)
+    DseGeneration,
+    /// cumulative chromosome-memo hits (counter)
+    CacheHits,
+    /// cumulative stage-cache hits (counter)
+    StageHits,
+    /// cumulative roofline-pruned offspring (counter)
+    RooflinePruned,
+    /// cumulative surrogate dispatch reorders (counter)
+    SurrogateReorders,
+    /// KD teacher epoch (args: epoch, mean loss ×1e6)
+    KdTeacher,
+    /// KD student epoch
+    KdStudent,
+    /// final full-path polish epoch
+    KdPolish,
+    /// head-only calibration pass
+    KdCalibrate,
+}
+
+impl Name {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Name::Enqueue => "enqueue",
+            Name::Batch => "batch",
+            Name::Execute => "execute",
+            Name::Respond => "respond",
+            Name::Retry => "retry",
+            Name::Switch => "switch",
+            Name::Rollback => "rollback",
+            Name::SwapWindow => "swap_window",
+            Name::FaultSeu => "seu",
+            Name::ScrubRepair => "scrub_repair",
+            Name::FaultTransient => "transient",
+            Name::FaultStall => "stall",
+            Name::DseGeneration => "generation",
+            Name::CacheHits => "cache_hits",
+            Name::StageHits => "stage_hits",
+            Name::RooflinePruned => "roofline_pruned",
+            Name::SurrogateReorders => "surrogate_reorders",
+            Name::KdTeacher => "kd_teacher",
+            Name::KdStudent => "kd_student",
+            Name::KdPolish => "kd_polish",
+            Name::KdCalibrate => "kd_calibrate",
+        }
+    }
+
+    pub fn cat(self) -> Cat {
+        match self {
+            Name::Enqueue | Name::Batch | Name::Execute | Name::Respond => Cat::Request,
+            Name::Retry => Cat::Retry,
+            Name::Switch | Name::Rollback => Cat::Governor,
+            Name::SwapWindow => Cat::Swap,
+            Name::FaultSeu | Name::FaultTransient | Name::FaultStall => Cat::Fault,
+            Name::ScrubRepair => Cat::Scrub,
+            Name::DseGeneration
+            | Name::CacheHits
+            | Name::StageHits
+            | Name::RooflinePruned
+            | Name::SurrogateReorders => Cat::Dse,
+            Name::KdTeacher | Name::KdStudent | Name::KdPolish | Name::KdCalibrate => {
+                Cat::Distill
+            }
+        }
+    }
+}
+
+/// One recorded event. `Copy` with fixed-width fields only — pushing
+/// one onto a pre-allocated ring is the whole hot-path cost. The
+/// derived total order (declaration order: timestamp first, recording
+/// lane last) is what drain-merge and deterministic export sort by;
+/// because it covers every field, compare-equal entries are identical
+/// and the order is total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceEntry {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub clock: Clock,
+    pub kind: Kind,
+    pub name: Name,
+    /// request id / frame / generation / stage — whatever the span keys
+    pub id: u64,
+    /// 1-based [`TraceSink::intern`] index of the morph path, 0 = none
+    pub path: u16,
+    pub a0: u64,
+    pub a1: u64,
+    /// recording lane — wall-side diagnostic only, zeroed (quarantined)
+    /// in deterministic exports
+    pub lane: u16,
+}
+
+impl TraceEntry {
+    pub fn span(clock: Clock, name: Name, ts_us: u64, dur_us: u64, id: u64) -> TraceEntry {
+        TraceEntry {
+            ts_us,
+            dur_us,
+            clock,
+            kind: Kind::Span,
+            name,
+            id,
+            path: 0,
+            a0: 0,
+            a1: 0,
+            lane: 0,
+        }
+    }
+
+    pub fn instant(clock: Clock, name: Name, ts_us: u64, id: u64) -> TraceEntry {
+        TraceEntry { kind: Kind::Instant, ..TraceEntry::span(clock, name, ts_us, 0, id) }
+    }
+
+    pub fn counter(clock: Clock, name: Name, ts_us: u64, value: u64) -> TraceEntry {
+        TraceEntry {
+            kind: Kind::Counter,
+            a0: value,
+            ..TraceEntry::span(clock, name, ts_us, 0, 0)
+        }
+    }
+
+    pub fn with_path(mut self, path: u16) -> TraceEntry {
+        self.path = path;
+        self
+    }
+
+    pub fn with_args(mut self, a0: u64, a1: u64) -> TraceEntry {
+        self.a0 = a0;
+        self.a1 = a1;
+        self
+    }
+}
+
+/// Trace time of replay frame `i` at `rate_hz` — the virtual clock the
+/// power/fault replay already runs on.
+pub fn virtual_us(frame: usize, rate_hz: f64) -> u64 {
+    ((frame as f64 / rate_hz.max(1e-9)) * 1e6).round() as u64
+}
+
+/// Recording lanes: lane 0 is the submit/virtual side, worker shard
+/// `s` records on lane `1 + s % (LANES - 1)`.
+pub const LANES: usize = 9;
+
+/// Per-lane ring capacity of [`TraceSink::shared`].
+pub const DEFAULT_LANE_CAPACITY: usize = 8192;
+
+/// The run-wide recorder. Cheap to share (`Arc`), safe from any thread;
+/// each lane is an independently locked bounded ring so shards never
+/// contend with the submit side.
+#[derive(Debug)]
+pub struct TraceSink {
+    lanes: [Mutex<Ring>; LANES],
+    paths: Mutex<Vec<String>>,
+    meta: Mutex<Vec<(String, String)>>,
+    epoch: Instant,
+}
+
+impl TraceSink {
+    pub fn new(capacity_per_lane: usize) -> TraceSink {
+        TraceSink {
+            lanes: std::array::from_fn(|_| Mutex::new(Ring::new(capacity_per_lane))),
+            paths: Mutex::new(Vec::new()),
+            meta: Mutex::new(Vec::new()),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// The usual handle: default capacity, behind an `Arc`.
+    pub fn shared() -> Arc<TraceSink> {
+        Arc::new(TraceSink::new(DEFAULT_LANE_CAPACITY))
+    }
+
+    /// Intern a morph-path name, returning its 1-based entry index
+    /// (0 = table full, entry stays unattributed). Idempotent; only the
+    /// first sighting of a name allocates, so pre-interning the ladder
+    /// (the replay path does) keeps indices deterministic and the hot
+    /// path allocation-free.
+    pub fn intern(&self, path: &str) -> u16 {
+        let mut table = self.paths.lock().unwrap();
+        if let Some(i) = table.iter().position(|p| p == path) {
+            return (i + 1) as u16;
+        }
+        if table.len() >= usize::from(u16::MAX - 1) {
+            return 0;
+        }
+        table.push(path.to_string());
+        table.len() as u16
+    }
+
+    /// Deterministic run metadata carried into every export.
+    pub fn set_meta(&self, key: &str, value: &str) {
+        self.meta.lock().unwrap().push((key.to_string(), value.to_string()));
+    }
+
+    /// Record one entry on `lane` (wrapped into the lane array). The
+    /// entry is `Copy` and the ring pre-allocated: no allocation, one
+    /// uncontended lock.
+    pub fn record(&self, lane: usize, mut e: TraceEntry) {
+        let lane = if lane == 0 { 0 } else { 1 + (lane - 1) % (LANES - 1) };
+        e.lane = lane as u16;
+        self.lanes[lane].lock().unwrap().push(e);
+    }
+
+    /// Microseconds since the sink was created — the quarantined wall
+    /// clock for live-path entries.
+    pub fn wall_now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Entries recorded so far (diagnostic).
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain every lane and fold the dumps with the associative
+    /// [`ring::merge`] — the resulting entry sequence is the sorted
+    /// multiset union of all lanes, independent of lane grouping.
+    pub fn drain(&self) -> Trace {
+        let mut merged = RingDump::default();
+        for lane in &self.lanes {
+            merged = ring::merge(merged, lane.lock().unwrap().take());
+        }
+        Trace {
+            entries: merged.entries,
+            dropped: merged.dropped,
+            paths: self.paths.lock().unwrap().clone(),
+            meta: self.meta.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// A drained run: sorted entries, total shed count, interned path
+/// table, run metadata.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+    pub dropped: u64,
+    pub paths: Vec<String>,
+    pub meta: Vec<(String, String)>,
+}
+
+impl Trace {
+    /// Resolve a 1-based interned path index.
+    pub fn path_name(&self, idx: u16) -> Option<&str> {
+        idx.checked_sub(1).and_then(|i| self.paths.get(usize::from(i))).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent_and_one_based() {
+        let sink = TraceSink::new(16);
+        assert_eq!(sink.intern("d3_w100"), 1);
+        assert_eq!(sink.intern("d2_w75"), 2);
+        assert_eq!(sink.intern("d3_w100"), 1);
+        let trace = sink.drain();
+        assert_eq!(trace.path_name(1), Some("d3_w100"));
+        assert_eq!(trace.path_name(2), Some("d2_w75"));
+        assert_eq!(trace.path_name(0), None);
+        assert_eq!(trace.path_name(3), None);
+    }
+
+    #[test]
+    fn drain_merges_lanes_sorted_with_drop_total() {
+        let sink = TraceSink::new(2);
+        for lane in [0usize, 1, 2] {
+            for i in 0..3u64 {
+                sink.record(
+                    lane,
+                    TraceEntry::span(Clock::Wall, Name::Execute, 100 * i + lane as u64, 5, i),
+                );
+            }
+        }
+        // capacity 2 per lane: each lane shed exactly one entry
+        let trace = sink.drain();
+        assert_eq!(trace.entries.len(), 6);
+        assert_eq!(trace.dropped, 3);
+        assert!(trace.entries.windows(2).all(|w| w[0] <= w[1]));
+        // lanes stamped: lane 0 kept, worker lanes offset into 1..LANES
+        assert!(trace.entries.iter().any(|e| e.lane == 0));
+        assert!(trace.entries.iter().any(|e| e.lane == 1));
+        assert!(trace.entries.iter().any(|e| e.lane == 2));
+    }
+
+    #[test]
+    fn virtual_clock_matches_replay_frame_times() {
+        assert_eq!(virtual_us(0, 4000.0), 0);
+        assert_eq!(virtual_us(1, 4000.0), 250);
+        assert_eq!(virtual_us(240, 4000.0), 60_000);
+    }
+}

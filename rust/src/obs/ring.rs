@@ -1,0 +1,180 @@
+//! Bounded per-lane trace storage.
+//!
+//! Each recording lane owns one fixed-capacity [`Ring`]. The hot path
+//! (`push`) never allocates: the buffer is pre-allocated at `cap` and a
+//! full ring *counts* what it sheds instead of growing or silently
+//! overwriting — retention is oldest-first, so the kept prefix of a
+//! truncated lane is exactly the head of the recording order. At drain
+//! time lanes dump into [`RingDump`]s and fold together with [`merge`],
+//! a sorted multiset union that is associative and commutative
+//! (property-tested), so the merge order of lanes can never change the
+//! drained trace.
+
+use super::TraceEntry;
+
+/// Fixed-capacity entry buffer with an overflow counter.
+#[derive(Debug)]
+pub struct Ring {
+    buf: Vec<TraceEntry>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        let cap = cap.max(1);
+        Ring { buf: Vec::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Record one entry. Never allocates: a full ring sheds the entry
+    /// and counts it in `dropped` — never a silent truncation, the
+    /// exporters surface the counter.
+    pub fn push(&mut self, e: TraceEntry) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Empty the ring into a sorted dump. Recording order within a lane
+    /// is not globally time-sorted (fault spans are stamped
+    /// retroactively from the injector's records), so the dump sorts by
+    /// the entry's total order before merging.
+    pub fn take(&mut self) -> RingDump {
+        let mut entries = std::mem::take(&mut self.buf);
+        self.buf.reserve_exact(self.cap);
+        entries.sort_unstable();
+        let dropped = self.dropped;
+        self.dropped = 0;
+        RingDump { entries, dropped }
+    }
+}
+
+/// A drained lane: entries sorted by the total order, plus what the
+/// lane shed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RingDump {
+    pub entries: Vec<TraceEntry>,
+    pub dropped: u64,
+}
+
+/// Sorted multiset union of two dumps, drop counters summed.
+/// Associative and commutative: [`TraceEntry`]'s derived total order
+/// covers every field, so compare-equal entries are identical and any
+/// merge tree over any lane grouping yields the same sequence.
+pub fn merge(a: RingDump, b: RingDump) -> RingDump {
+    let (ae, be) = (a.entries, b.entries);
+    let mut out = Vec::with_capacity(ae.len() + be.len());
+    let (mut i, mut j) = (0, 0);
+    while i < ae.len() && j < be.len() {
+        if ae[i] <= be[j] {
+            out.push(ae[i]);
+            i += 1;
+        } else {
+            out.push(be[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&ae[i..]);
+    out.extend_from_slice(&be[j..]);
+    RingDump { entries: out, dropped: a.dropped + b.dropped }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Clock, Kind, Name};
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn arb_entry(r: &mut Rng) -> TraceEntry {
+        const NAMES: [Name; 6] = [
+            Name::Enqueue,
+            Name::Execute,
+            Name::Switch,
+            Name::Retry,
+            Name::ScrubRepair,
+            Name::SwapWindow,
+        ];
+        TraceEntry {
+            ts_us: r.range(0, 999) as u64,
+            dur_us: r.range(0, 99) as u64,
+            clock: if r.range(0, 1) == 0 { Clock::Virtual } else { Clock::Wall },
+            kind: Kind::Span,
+            name: NAMES[r.below(NAMES.len())],
+            id: r.range(0, 31) as u64,
+            path: r.range(0, 3) as u16,
+            a0: r.range(0, 7) as u64,
+            a1: 0,
+            lane: r.range(0, 8) as u16,
+        }
+    }
+
+    fn arb_dump(r: &mut Rng) -> RingDump {
+        let n = r.range(0, 24);
+        let mut entries: Vec<TraceEntry> = (0..n).map(|_| arb_entry(r)).collect();
+        entries.sort_unstable();
+        RingDump { entries, dropped: r.range(0, 5) as u64 }
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_overflow() {
+        let mut ring = Ring::new(4);
+        let mut rng = Rng::new(7);
+        let fed: Vec<TraceEntry> = (0..10).map(|_| arb_entry(&mut rng)).collect();
+        for &e in &fed {
+            ring.push(e);
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let dump = ring.take();
+        // oldest-first retention: the kept entries are the first 4 fed
+        let mut expect = fed[..4].to_vec();
+        expect.sort_unstable();
+        assert_eq!(dump.entries, expect);
+        assert_eq!(dump.dropped, 6);
+        // take resets: the ring records again without allocating drops
+        assert_eq!(ring.dropped(), 0);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        check(
+            "ring-merge-associative",
+            200,
+            11,
+            |r| (arb_dump(r), arb_dump(r), arb_dump(r)),
+            |(a, b, c)| {
+                let left = merge(merge(a.clone(), b.clone()), c.clone());
+                let right = merge(a.clone(), merge(b.clone(), c.clone()));
+                ensure(left == right, "merge grouping changed the trace")?;
+                let ab = merge(a.clone(), b.clone());
+                let ba = merge(b.clone(), a.clone());
+                ensure(ab == ba, "merge order changed the trace")?;
+                ensure(
+                    left.dropped == a.dropped + b.dropped + c.dropped,
+                    "drop counters must sum",
+                )?;
+                ensure(
+                    left.entries.len() == a.entries.len() + b.entries.len() + c.entries.len(),
+                    "merge must be a multiset union",
+                )?;
+                ensure(left.entries.windows(2).all(|w| w[0] <= w[1]), "merge output sorted")
+            },
+        );
+    }
+}

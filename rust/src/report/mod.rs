@@ -625,6 +625,20 @@ pub fn backends() -> String {
             "{name:<10} {sim_p:>12.1} {ana_p:>12.1} {sim_l:>14.4} {ana_l:>14.4}"
         );
     }
+    // the serving engine's bucket-interpolated quantiles over the same
+    // per-frame latencies (one sample per path per backend)
+    let mut h = crate::coordinator::Histogram::default();
+    for r in sim_costs.rows.iter().chain(&ana_costs.rows) {
+        h.record(std::time::Duration::from_secs_f64(r.2 / 1000.0));
+    }
+    let _ = writeln!(
+        s,
+        "per-frame latency quantiles, both tables (bucket-interpolated): \
+         p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms",
+        h.quantile(0.5) / 1000.0,
+        h.quantile(0.95) / 1000.0,
+        h.quantile(0.99) / 1000.0
+    );
     let _ = writeln!(
         s,
         "both backends share the surrogate classifier: logits are bit-identical\n\
@@ -733,6 +747,15 @@ pub fn power() -> String {
     let _ = writeln!(s, "\nstep trace, cap {cap:.0} mW, {frames} frames @ {rate_hz:.0} Hz virtual:");
     s.push_str(&outcome.decision_log());
     s.push_str(&outcome.render_summary());
+    let e2e = &outcome.metrics.e2e_latency;
+    let _ = writeln!(
+        s,
+        "e2e latency quantiles (bucket-interpolated): \
+         p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+        e2e.quantile(0.5) / 1000.0,
+        e2e.quantile(0.95) / 1000.0,
+        e2e.quantile(0.99) / 1000.0
+    );
     s
 }
 
@@ -848,6 +871,244 @@ pub fn distill() -> String {
     s
 }
 
+/// Deterministic trace timeline: the canonical fault-storm replay (the
+/// `faults` report scenario) run with the span recorder attached,
+/// exported as deterministic Chrome trace JSON and rendered through the
+/// same [`render_trace_json`] path `report trace --in FILE` uses — one
+/// code path for live and file-loaded traces.
+pub fn trace_timeline() -> String {
+    use crate::backend::BackendSpec;
+    use crate::coordinator::{trace, Coordinator, ServeConfig, TraceConfig};
+    use crate::fault::FaultPlan;
+    use crate::obs::{export as obs_export, TraceSink};
+
+    let net = zoo::mnist();
+    let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+    let paths = crate::morph::depth_ladder(&net);
+    let spec = BackendSpec::sim(net, design, ZYNQ_7100, paths);
+    let sink = TraceSink::shared();
+    sink.set_meta("cmd", "report trace");
+    sink.set_meta("model", "mnist");
+    sink.set_meta("backend", &spec.describe());
+    let cfg = ServeConfig {
+        workers: 1,
+        external_pacing: true,
+        trace: Some(sink.clone()),
+        ..ServeConfig::default()
+    };
+
+    let mut s = header("Trace timeline: storm replay through the span recorder");
+    let mut coord = match Coordinator::start(cfg, spec) {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = writeln!(s, "(serving stack unavailable: {e})");
+            return s;
+        }
+    };
+    let rows = coord.path_energy_rows();
+    let cap = trace::default_squeeze_cap(&rows);
+    let (frames, rate_hz) = (240usize, 4000.0);
+    let events = trace::step(frames as f64 / rate_hz, cap);
+    let fspec = FaultPlan::storm_spec();
+    let plan = match FaultPlan::parse_spec(fspec, frames, rate_hz, 7) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = writeln!(s, "(fault spec failed to parse: {e})");
+            return s;
+        }
+    };
+    if let Err(e) =
+        coord.replay_trace(&events, &TraceConfig { frames, rate_hz, seed: 7 }, Some(&plan))
+    {
+        let _ = writeln!(s, "(trace replay failed: {e})");
+        return s;
+    }
+    // join the workers before draining so every lane is quiescent
+    drop(coord);
+    let json = obs_export::chrome_trace(&sink.drain(), true);
+    let _ = writeln!(
+        s,
+        "storm '{fspec}' over a step trace (cap {cap:.0} mW), \
+         {frames} frames @ {rate_hz:.0} Hz virtual, deterministic export:"
+    );
+    match render_trace_json(&json) {
+        Ok(r) => s.push_str(&r),
+        Err(e) => {
+            let _ = writeln!(s, "(render failed: {e})");
+        }
+    }
+    s
+}
+
+/// Render an exported Chrome trace (`--trace-out` JSON) as a text
+/// timeline: per-path occupancy, governor switch/swap annotations,
+/// retry ladders, fault/scrub marks and DSE/distill telemetry. The
+/// renderer is total over any `forgemorph-trace-v1` file — sections for
+/// absent span families are simply omitted.
+pub fn render_trace_json(text: &str) -> Result<String, String> {
+    use crate::util::json::Json;
+    let root = Json::parse(text).map_err(|e| format!("not JSON: {e}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "not a trace: missing traceEvents".to_string())?;
+    let other = root.get("otherData");
+    let format = other.and_then(|o| o.get("format")).and_then(Json::as_str).unwrap_or("?");
+    if !format.starts_with("forgemorph-trace") {
+        return Err(format!("unrecognized trace format '{format}'"));
+    }
+    let dropped = other.and_then(|o| o.get("dropped")).and_then(Json::as_u64).unwrap_or(0);
+    let deterministic = other
+        .and_then(|o| o.get("deterministic"))
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+
+    // one pass over the events, aggregating every section the renderer
+    // shows; sections with no matching spans are omitted below
+    let (mut spans, mut instants, mut counters) = (0usize, 0usize, 0usize);
+    let mut occupancy: std::collections::BTreeMap<String, u64> = Default::default();
+    let mut switches: Vec<String> = Vec::new();
+    let (mut swap_count, mut swap_us, mut rollbacks) = (0usize, 0u64, 0usize);
+    let mut retry_events = 0usize;
+    let mut retry_depth: std::collections::BTreeMap<u64, u64> = Default::default();
+    let (mut seu, mut transients, mut stalls) = (0usize, 0usize, 0usize);
+    let (mut scrubs, mut scrub_us) = (0usize, 0u64);
+    let (mut generations, mut last_best_us) = (0usize, 0u64);
+    let mut kd = 0usize;
+    for ev in events {
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+        let ts = ev.get("ts").and_then(Json::as_u64).unwrap_or(0);
+        let dur = ev.get("dur").and_then(Json::as_u64).unwrap_or(0);
+        let args = ev.get("args");
+        let arg_str = |k: &str| {
+            args.and_then(|a| a.get(k)).and_then(Json::as_str).map(str::to_string)
+        };
+        let arg_u64 = |k: &str| args.and_then(|a| a.get(k)).and_then(Json::as_u64);
+        match ph {
+            "X" => spans += 1,
+            "i" => instants += 1,
+            "C" => counters += 1,
+            _ => {}
+        }
+        match name {
+            "execute" if ph == "X" => {
+                let path = arg_str("path").unwrap_or_else(|| "?".into());
+                *occupancy.entry(path).or_insert(0) += dur;
+            }
+            "switch" => {
+                let to = arg_str("path").unwrap_or_else(|| "?".into());
+                let from = arg_str("from").unwrap_or_else(|| "?".into());
+                let budget = arg_u64("budget_mw").unwrap_or(0);
+                let b = if budget > 0 {
+                    format!("{budget} mW cap")
+                } else {
+                    "uncapped".to_string()
+                };
+                switches.push(format!("  [t {ts:>8} us] switch {from} -> {to} ({b})"));
+            }
+            "rollback" => rollbacks += 1,
+            "swap_window" => {
+                swap_count += 1;
+                swap_us += dur;
+            }
+            "retry" => {
+                retry_events += 1;
+                let id = arg_u64("id").unwrap_or(0);
+                let attempt = arg_u64("attempt").unwrap_or(0);
+                let d = retry_depth.entry(id).or_insert(0);
+                *d = (*d).max(attempt);
+            }
+            "seu" => seu += 1,
+            "scrub_repair" => {
+                scrubs += 1;
+                scrub_us += dur;
+            }
+            "transient" => transients += 1,
+            "stall" if ph == "X" => stalls += 1,
+            "generation" => {
+                generations += 1;
+                last_best_us = arg_u64("best_lat_us").unwrap_or(last_best_us);
+            }
+            n if n.starts_with("kd_") => kd += 1,
+            _ => {}
+        }
+    }
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "trace: {format} ({})",
+        if deterministic {
+            "deterministic: virtual clock only"
+        } else {
+            "full: wall lanes included"
+        }
+    );
+    if let Some(Json::Obj(meta)) = other {
+        for (k, v) in meta {
+            if matches!(k.as_str(), "format" | "deterministic" | "dropped") {
+                continue;
+            }
+            if let Json::Str(v) = v {
+                let _ = writeln!(s, "  {k}: {v}");
+            }
+        }
+    }
+    let _ = writeln!(
+        s,
+        "events: {} — {spans} spans, {instants} instants, {counters} counters; \
+         dropped spans: {dropped}",
+        events.len()
+    );
+    if !occupancy.is_empty() {
+        let _ = writeln!(s, "per-path occupancy (execute spans):");
+        let max = occupancy.values().copied().max().unwrap_or(1).max(1);
+        for (path, us) in &occupancy {
+            let bar = "#".repeat((us * 30 / max) as usize);
+            let _ = writeln!(s, "  {path:<10} {us:>10} us  {bar}");
+        }
+    }
+    if !switches.is_empty() || swap_count > 0 || rollbacks > 0 {
+        let _ = writeln!(
+            s,
+            "governor: {} switch(es), {swap_count} swap window(s) totaling {swap_us} us, \
+             {rollbacks} rollback(s)",
+            switches.len()
+        );
+        for line in &switches {
+            s.push_str(line);
+            s.push('\n');
+        }
+    }
+    if retry_events > 0 {
+        let deepest = retry_depth.values().copied().max().unwrap_or(0);
+        let _ = writeln!(
+            s,
+            "retry ladder: {retry_events} retry(ies) across {} request(s), \
+             deepest attempt {deepest}",
+            retry_depth.len()
+        );
+    }
+    if seu + scrubs + transients + stalls > 0 {
+        let _ = writeln!(
+            s,
+            "faults: {seu} seu, {scrubs} scrub repair(s) ({scrub_us} us modeled MTTR), \
+             {transients} transient(s), {stalls} stall(s)"
+        );
+    }
+    if generations > 0 {
+        let _ = writeln!(
+            s,
+            "dse: {generations} generation(s), final best latency {last_best_us} us"
+        );
+    }
+    if kd > 0 {
+        let _ = writeln!(s, "distill: {kd} kd span(s)");
+    }
+    Ok(s)
+}
+
 /// Everything, in paper order.
 pub fn all() -> String {
     let mut s = String::new();
@@ -867,8 +1128,34 @@ pub fn all() -> String {
     s.push_str(&distill());
     s.push_str(&power());
     s.push_str(&faults());
+    s.push_str(&trace_timeline());
     s
 }
+
+/// Every id `by_name` accepts, plus the CLI-handled specials
+/// (`bench-check`) — the suggestion source for `report`'s did-you-mean
+/// error path.
+pub const KNOWN_IDS: &[&str] = &[
+    "table1",
+    "table2",
+    "table3",
+    "table4",
+    "table5",
+    "table6",
+    "fig2",
+    "fig8",
+    "fig10",
+    "fig11",
+    "fig12",
+    "backends",
+    "graphs",
+    "distill",
+    "power",
+    "faults",
+    "trace",
+    "all",
+    "bench-check",
+];
 
 /// Registry consumed by the CLI and by `bench_tables`.
 pub fn by_name(id: &str) -> Option<String> {
@@ -889,6 +1176,7 @@ pub fn by_name(id: &str) -> Option<String> {
         "distill" => distill(),
         "power" => power(),
         "faults" => faults(),
+        "trace" => trace_timeline(),
         "all" => all(),
         _ => return None,
     })
@@ -1014,11 +1302,53 @@ mod tests {
         for id in [
             "table1", "table2", "table3", "table4", "table5", "table6",
             "fig8", "fig10", "fig11", "fig12", "backends", "graphs", "distill",
-            "power", "faults",
+            "power", "faults", "trace",
         ] {
             assert!(by_name(id).is_some(), "{id}");
         }
         assert!(by_name("nope").is_none());
+        // every by_name id is listed in the suggestion source
+        for id in ["fig2", "backends", "trace", "all", "bench-check"] {
+            assert!(KNOWN_IDS.contains(&id), "{id} missing from KNOWN_IDS");
+        }
+    }
+
+    #[test]
+    fn trace_report_renders_storm_timeline() {
+        let t = trace_timeline();
+        // zero drops: the default lane capacity dwarfs the storm's spans
+        assert!(t.contains("dropped spans: 0"), "{t}");
+        assert!(t.contains("per-path occupancy"), "{t}");
+        // every annotated span family the storm produces is rendered
+        assert!(t.contains("switch d3_w100 -> ") || t.contains("switch d3_w100 ->"), "{t}");
+        assert!(t.contains("swap window"), "{t}");
+        assert!(t.contains("retry ladder:"), "{t}");
+        assert!(t.contains("scrub repair"), "{t}");
+        assert!(t.contains("rollback"), "{t}");
+    }
+
+    #[test]
+    fn render_trace_json_rejects_non_traces() {
+        assert!(render_trace_json("not json").is_err());
+        assert!(render_trace_json("{\"traceEvents\": []}").is_err(), "missing format tag");
+        assert!(render_trace_json("{\"answer\": 42}").is_err());
+    }
+
+    #[test]
+    fn backends_and_power_report_interpolated_quantiles() {
+        let b = backends();
+        let line = b
+            .lines()
+            .find(|l| l.starts_with("per-frame latency quantiles"))
+            .unwrap_or_else(|| panic!("no quantile line in:\n{b}"));
+        for q in ["p50", "p95", "p99"] {
+            assert!(line.contains(q), "{q} missing: {line}");
+        }
+        let p = power();
+        assert!(
+            p.lines().any(|l| l.starts_with("e2e latency quantiles")),
+            "power report lost its quantile line:\n{p}"
+        );
     }
 
     #[test]

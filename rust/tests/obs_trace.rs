@@ -1,0 +1,174 @@
+//! Integration: deterministic tracing & telemetry layer (`obs`).
+//!
+//! Pins the PR's core guarantees:
+//! * **deterministic export** — the Chrome trace exported with the
+//!   deterministic flag is byte-identical on 1 and 4 workers and across
+//!   reruns, for the full fault storm over a step power trace, and it
+//!   contains every required span family with zero dropped spans;
+//! * **no observer effect** — attaching a sink changes no output byte:
+//!   decision log, fault log and summary match the untraced run
+//!   bit-for-bit;
+//! * **span well-formedness** — virtual execute spans all carry an
+//!   interned path and cover every frame, drained entries arrive
+//!   sorted, and retry instants never precede their transient parent.
+
+use std::sync::Arc;
+
+use forgemorph::backend::BackendSpec;
+use forgemorph::coordinator::{trace, Coordinator, ServeConfig, TraceConfig, TraceOutcome};
+use forgemorph::design::DesignConfig;
+use forgemorph::fault::FaultPlan;
+use forgemorph::graph::zoo;
+use forgemorph::morph;
+use forgemorph::obs::{export, Clock, Kind, Name, TraceSink};
+use forgemorph::pe::{FpRep, ZYNQ_7100};
+use forgemorph::util::json::Json;
+
+const FRAMES: usize = 240;
+const RATE_HZ: f64 = 4000.0;
+const SEED: u64 = 7;
+
+fn start(workers: usize, sink: Option<Arc<TraceSink>>) -> Coordinator {
+    let net = zoo::mnist();
+    // same Table III-class mapping as the power/fault-loop tests
+    let design = DesignConfig::uniform(&net, 16, FpRep::Int16);
+    let paths = morph::depth_ladder(&net);
+    let spec = BackendSpec::sim(net, design, ZYNQ_7100, paths);
+    let cfg = ServeConfig {
+        workers,
+        external_pacing: true,
+        trace: sink,
+        ..ServeConfig::default()
+    };
+    Coordinator::start(cfg, spec).expect("start")
+}
+
+/// Step-trace replay, optionally under the canonical fault storm.
+fn replay(workers: usize, sink: Option<Arc<TraceSink>>, storm: bool) -> TraceOutcome {
+    let mut coord = start(workers, sink);
+    let cap = trace::default_squeeze_cap(&coord.path_energy_rows());
+    let events = trace::step(FRAMES as f64 / RATE_HZ, cap);
+    let plan = storm.then(|| {
+        FaultPlan::parse_spec(FaultPlan::storm_spec(), FRAMES, RATE_HZ, SEED)
+            .expect("fault spec")
+    });
+    coord
+        .replay_trace(
+            &events,
+            &TraceConfig { frames: FRAMES, rate_hz: RATE_HZ, seed: SEED },
+            plan.as_ref(),
+        )
+        .expect("replay")
+}
+
+/// The deterministic Chrome export of one storm+power replay.
+fn storm_chrome(workers: usize) -> String {
+    let sink = TraceSink::shared();
+    replay(workers, Some(sink.clone()), true);
+    export::chrome_trace(&sink.drain(), true)
+}
+
+#[test]
+fn deterministic_export_is_byte_identical_across_workers_and_reruns() {
+    let w1 = storm_chrome(1);
+    let w4 = storm_chrome(4);
+    let again = storm_chrome(4);
+    assert_eq!(w1, w4, "worker count leaked into the deterministic trace");
+    assert_eq!(w4, again, "rerun changed the deterministic trace");
+    // required span families, greppable exactly the way CI greps them
+    for marker in ["\"switch\"", "\"swap_window\"", "\"retry\"", "\"scrub_repair\""] {
+        assert!(w1.contains(marker), "{marker} missing from storm trace");
+    }
+    let parsed = Json::parse(&w1).expect("exporter emits valid JSON");
+    let other = parsed.get("otherData").expect("otherData present");
+    assert_eq!(other.get("dropped").and_then(Json::as_u64), Some(0));
+    assert_eq!(other.get("deterministic").and_then(Json::as_bool), Some(true));
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("events");
+    assert!(events.len() > 2 * FRAMES, "storm trace suspiciously small");
+    // the deterministic view quarantines every wall-clock entry
+    assert!(!w1.contains("\"wall\""));
+}
+
+#[test]
+fn attaching_a_sink_changes_no_output_byte() {
+    let bare = replay(4, None, true);
+    let sink = TraceSink::shared();
+    let traced = replay(4, Some(sink.clone()), true);
+    assert!(!sink.is_empty(), "sink attached but nothing recorded");
+    // the bit-for-bit acceptance contract: tracing off the hot path
+    // never perturbs what the untraced engine prints
+    assert_eq!(bare.decision_log(), traced.decision_log());
+    assert_eq!(bare.fault_log(), traced.fault_log());
+    assert_eq!(bare.render_summary(), traced.render_summary());
+}
+
+#[test]
+fn virtual_spans_are_well_formed() {
+    for storm in [false, true] {
+        let sink = TraceSink::shared();
+        replay(2, Some(sink.clone()), storm);
+        let dump = sink.drain();
+        assert_eq!(dump.dropped, 0, "storm={storm}: ring overflowed");
+        // drained entries arrive sorted (the ring merge is a sorted union)
+        assert!(
+            dump.entries.windows(2).all(|w| w[0] <= w[1]),
+            "storm={storm}: drained entries out of order"
+        );
+        let virt: Vec<_> = dump.entries.iter().filter(|e| e.clock == Clock::Virtual).collect();
+        let enqueues = virt.iter().filter(|e| e.name == Name::Enqueue).count();
+        let executes: Vec<_> = virt
+            .iter()
+            .filter(|e| e.name == Name::Execute && e.kind == Kind::Span)
+            .collect();
+        assert_eq!(enqueues, FRAMES, "storm={storm}: one virtual enqueue per frame");
+        assert_eq!(executes.len(), FRAMES, "storm={storm}: one execute span per frame");
+        assert!(
+            executes.iter().all(|e| e.path != 0),
+            "storm={storm}: execute span without an interned path"
+        );
+        assert!(
+            executes.iter().all(|e| dump.path_name(e.path).is_some()),
+            "storm={storm}: execute span path not resolvable"
+        );
+        // retry instants ride at or after their transient parent, with
+        // 1-based attempt numbers
+        let mut parents: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+        for e in virt.iter().filter(|e| e.name == Name::FaultTransient) {
+            let slot = parents.entry(e.id).or_insert(e.ts_us);
+            *slot = (*slot).min(e.ts_us);
+        }
+        let retries: Vec<_> = virt.iter().filter(|e| e.name == Name::Retry).collect();
+        if storm {
+            assert!(!retries.is_empty(), "storm produced no retry instants");
+        } else {
+            assert!(retries.is_empty(), "fault-free replay produced retries");
+        }
+        for r in &retries {
+            let base = parents.get(&r.id).expect("retry without a transient parent");
+            assert!(r.ts_us >= *base, "retry precedes its transient: {r:?}");
+            assert!(r.a0 >= 1, "attempt numbers are 1-based: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn folded_and_snapshot_exports_cover_the_storm() {
+    let sink = TraceSink::shared();
+    replay(1, Some(sink.clone()), true);
+    let dump = sink.drain();
+    let folded = export::folded(&dump, true);
+    assert!(folded.contains("request;execute;"), "{folded}");
+    // folded lines are "stack total_us" pairs, aggregated and sorted
+    let mut keys = Vec::new();
+    for line in folded.lines() {
+        let (key, us) = line.rsplit_once(' ').expect("stack + total");
+        us.parse::<u64>().expect("total is integral microseconds");
+        keys.push(key.to_string());
+    }
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "folded stacks must come out sorted");
+    let snap = export::text_snapshot(&dump);
+    assert!(snap.contains("dropped"), "{snap}");
+    assert!(snap.contains("fault;"), "{snap}");
+}
