@@ -1,0 +1,501 @@
+"""Offline ONNX corpus writer: the zoo models as real exported graphs.
+
+Writes ONNX ``ModelProto`` **wire format directly** — hand-rolled varint
+/ length-delimited emission, zero dependencies (no ``onnx``, no
+``torch``) — so the corpus builds in the offline CI container. The
+emission rules mirror ``rust/src/onnx/export.rs`` exactly: one final
+tensor per layer named ``t{id}``, fused relu split into ``Conv``/``Gemm``
++ ``Relu`` node pairs, conv padding spelled as ``auto_pad`` (never a
+``pads`` array), SPPF as the stride-1 same-padded MaxPool cascade, and
+**shape-only** weight initializers (dims + dtype, no payload — the
+analytical flow never reads weight values, and yolov5l's real weights
+would be ~180 MB).
+
+CI round-trips every file through ``forgemorph graph dump --onnx`` and
+diffs the JSON against ``graph dump --model`` — the imported StagePlan
+must be bit-identical to the hand-built zoo twin (docs/ONNX.md).
+
+Usage::
+
+    python -m compile.export_onnx --out corpus/
+
+writes ``corpus/{mnist,svhn,...}.onnx``, one per zoo model.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+# ---------------------------------------------------------------------------
+# protobuf wire emission
+# ---------------------------------------------------------------------------
+
+DT_FLOAT = 1
+AT_FLOAT, AT_INT, AT_STRING, AT_INTS = 1, 2, 3, 7
+
+
+def _uv(x: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = x & 0x7F
+        x >>= 7
+        if x == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def _tag(field: int, wire: int) -> bytes:
+    return _uv((field << 3) | wire)
+
+
+def _vint(field: int, v: int) -> bytes:
+    return _tag(field, 0) + _uv(v)
+
+
+def _ld(field: int, payload: bytes) -> bytes:
+    return _tag(field, 2) + _uv(len(payload)) + payload
+
+
+def _s(field: int, s: str) -> bytes:
+    return _ld(field, s.encode())
+
+
+def _f32le(vals: list[float]) -> bytes:
+    import struct
+
+    return b"".join(struct.pack("<f", v) for v in vals)
+
+
+def attr_int(name: str, v: int) -> bytes:
+    return _ld(5, _s(1, name) + _vint(3, v) + _vint(20, AT_INT))
+
+
+def attr_ints(name: str, vals: list[int]) -> bytes:
+    body = _s(1, name) + b"".join(_vint(8, v) for v in vals)
+    return _ld(5, body + _vint(20, AT_INTS))
+
+
+def attr_str(name: str, s: str) -> bytes:
+    return _ld(5, _s(1, name) + _s(4, s) + _vint(20, AT_STRING))
+
+
+def node(name: str, op: str, inputs: list[str], outputs: list[str], attrs: list[bytes]) -> bytes:
+    body = b"".join(_s(1, i) for i in inputs)
+    body += b"".join(_s(2, o) for o in outputs)
+    body += _s(3, name) + _s(4, op) + b"".join(attrs)
+    return _ld(1, body)
+
+
+def tensor_shape_only(name: str, dims: list[int]) -> bytes:
+    body = b"".join(_vint(1, d) for d in dims)
+    body += _vint(2, DT_FLOAT) + _s(8, name)
+    return _ld(5, body)
+
+
+def tensor_f32(name: str, dims: list[int], vals: list[float]) -> bytes:
+    body = b"".join(_vint(1, d) for d in dims)
+    body += _vint(2, DT_FLOAT) + _s(8, name) + _ld(9, _f32le(vals))
+    return _ld(5, body)
+
+
+def value_info(field: int, name: str, dims: list[int]) -> bytes:
+    shape = b"".join(_ld(1, _vint(1, d)) for d in dims)
+    tensor_type = _vint(1, DT_FLOAT) + _ld(2, shape)
+    ty = _ld(1, tensor_type)
+    return _ld(field, _s(1, name) + _ld(2, ty))
+
+
+# ---------------------------------------------------------------------------
+# NetworkBuilder mirror (ids, names, tails — rust/src/graph/builder.rs)
+# ---------------------------------------------------------------------------
+
+
+def _out_hw(h: int, w: int, k: int, stride: int, padding: str) -> tuple[int, int]:
+    if padding == "same":
+        return -(-h // stride), -(-w // stride)
+    return (h - k) // stride + 1, (w - k) // stride + 1
+
+
+class Net:
+    """Mirror of the Rust ``NetworkBuilder``: identical layer ids, names
+    (``{op}{id}``), chain-tail semantics and connection push order, plus
+    the output-shape tracking the exporter needs for weight dims."""
+
+    def __init__(self, name: str, h: int, w: int, c: int):
+        self.name = name
+        self.layers: list[dict] = [{"name": "input", "op": "input"}]
+        self.shapes: list[tuple[int, int, int]] = [(h, w, c)]
+        self.connections: list[tuple[int, int]] = []
+        self.tail = 0
+
+    def _push(self, prefix: str, layer: dict, out_shape: tuple[int, int, int]) -> "Net":
+        lid = len(self.layers)
+        layer["name"] = f"{prefix}{lid}"
+        self.layers.append(layer)
+        self.shapes.append(out_shape)
+        self.connections.append((self.tail, lid))
+        self.tail = lid
+        return self
+
+    def _in(self) -> tuple[int, int, int]:
+        return self.shapes[self.tail]
+
+    def conv(self, filters, k, stride=1, padding="same", relu=True):
+        h, w, c = self._in()
+        oh, ow = _out_hw(h, w, k, stride, padding)
+        layer = dict(op="conv", filters=filters, k=k, stride=stride,
+                     padding=padding, relu=relu, cin=c)
+        return self._push("conv", layer, (oh, ow, filters))
+
+    def dwconv(self, k, stride=1, padding="same", relu=True):
+        h, w, c = self._in()
+        oh, ow = _out_hw(h, w, k, stride, padding)
+        layer = dict(op="dwconv", k=k, stride=stride, padding=padding,
+                     relu=relu, cin=c)
+        return self._push("dwconv", layer, (oh, ow, c))
+
+    def maxpool(self, k, stride):
+        h, w, c = self._in()
+        return self._push("maxpool", dict(op="maxpool", k=k, stride=stride),
+                          ((h - k) // stride + 1, (w - k) // stride + 1, c))
+
+    def avgpool(self, k, stride):
+        h, w, c = self._in()
+        return self._push("avgpool", dict(op="avgpool", k=k, stride=stride),
+                          ((h - k) // stride + 1, (w - k) // stride + 1, c))
+
+    def global_avg_pool(self):
+        _, _, c = self._in()
+        return self._push("gap", dict(op="gap"), (1, 1, c))
+
+    def fc(self, out, relu=False):
+        h, w, c = self._in()
+        return self._push("fc", dict(op="fc", out=out, relu=relu,
+                                     in_features=h * w * c), (1, 1, out))
+
+    def softmax(self):
+        return self._push("softmax", dict(op="softmax"), self._in())
+
+    def relu(self):
+        return self._push("relu", dict(op="relu"), self._in())
+
+    def upsample(self, factor):
+        h, w, c = self._in()
+        return self._push("up", dict(op="upsample", factor=factor),
+                          (h * factor, w * factor, c))
+
+    def sppf(self, k):
+        h, w, c = self._in()
+        return self._push("sppf", dict(op="sppf", k=k), (h, w, 4 * c))
+
+    def mark(self) -> int:
+        return self.tail
+
+    fork = mark
+
+    def branch_from(self, lid: int) -> "Net":
+        self.tail = lid
+        return self
+
+    def residual_add(self, fork: int) -> "Net":
+        lid = len(self.layers)
+        self._push("resadd", dict(op="resadd", skip=fork), self._in())
+        self.connections.append((fork, lid))
+        return self
+
+    def concat(self, sources: list[int]) -> "Net":
+        lid = len(self.layers)
+        h, w, _ = self.shapes[sources[0]]
+        c = sum(self.shapes[s][2] for s in sources)
+        self.layers.append({"name": f"concat{lid}", "op": "concat",
+                            "from": list(sources)})
+        self.shapes.append((h, w, c))
+        for s in sources:
+            self.connections.append((s, lid))
+        self.tail = lid
+        return self
+
+
+# ---------------------------------------------------------------------------
+# ONNX emission (mirrors rust/src/onnx/export.rs emit_layer)
+# ---------------------------------------------------------------------------
+
+
+def _auto_pad(padding: str) -> str:
+    return "SAME_UPPER" if padding == "same" else "VALID"
+
+
+def _preds(net: Net) -> list[list[int]]:
+    preds: list[list[int]] = [[] for _ in net.layers]
+    for s, d in net.connections:
+        if s < d:
+            preds[d].append(s)
+    return preds
+
+
+def emit(net: Net) -> bytes:
+    preds = _preds(net)
+    outdeg = [0] * len(net.layers)
+    for s, d in net.connections:
+        if s < d:
+            outdeg[s] += 1
+
+    g = bytearray()
+    for lid in range(1, len(net.layers)):
+        layer = net.layers[lid]
+        pin = preds[lid][0] if preds[lid] else lid - 1
+        x, out = f"t{pin}", f"t{lid}"
+        op = layer["op"]
+        name = layer["name"]
+        if op in ("conv", "dwconv"):
+            k, stride, cin = layer["k"], layer["stride"], layer["cin"]
+            wn, bn = f"w{lid}", f"b{lid}"
+            if op == "conv":
+                wdims, group = [layer["filters"], cin, k, k], None
+            else:
+                wdims, group = [cin, 1, k, k], cin
+            g += tensor_shape_only(wn, wdims)
+            g += tensor_shape_only(bn, wdims[:1])
+            conv_out = f"{out}c" if layer["relu"] else out
+            attrs = [attr_str("auto_pad", _auto_pad(layer["padding"]))]
+            if group is not None:
+                attrs.append(attr_int("group", group))
+            attrs += [attr_ints("kernel_shape", [k, k]),
+                      attr_ints("strides", [stride, stride])]
+            g += node(name, "Conv", [x, wn, bn], [conv_out], attrs)
+            if layer["relu"]:
+                g += node(f"{name}_relu", "Relu", [conv_out], [out], [])
+        elif op == "maxpool":
+            g += node(name, "MaxPool", [x], [out],
+                      [attr_ints("kernel_shape", [layer["k"]] * 2),
+                       attr_ints("strides", [layer["stride"]] * 2)])
+        elif op == "avgpool":
+            g += node(name, "AveragePool", [x], [out],
+                      [attr_ints("kernel_shape", [layer["k"]] * 2),
+                       attr_ints("strides", [layer["stride"]] * 2)])
+        elif op == "gap":
+            g += node(name, "GlobalAveragePool", [x], [out], [])
+        elif op == "fc":
+            flat = f"{out}f"
+            g += node(f"{name}_flatten", "Flatten", [x], [flat],
+                      [attr_int("axis", 1)])
+            wn, bn = f"w{lid}", f"b{lid}"
+            g += tensor_shape_only(wn, [layer["out"], layer["in_features"]])
+            g += tensor_shape_only(bn, [layer["out"]])
+            gemm_out = f"{out}g" if layer["relu"] else out
+            g += node(name, "Gemm", [flat, wn, bn], [gemm_out],
+                      [attr_int("transB", 1)])
+            if layer["relu"]:
+                g += node(f"{name}_relu", "Relu", [gemm_out], [out], [])
+        elif op == "resadd":
+            g += node(name, "Add", [x, f"t{layer['skip']}"], [out], [])
+        elif op == "concat":
+            g += node(name, "Concat", [f"t{p}" for p in preds[lid]], [out],
+                      [attr_int("axis", 1)])
+        elif op == "upsample":
+            sc = f"sc{lid}"
+            f = float(layer["factor"])
+            g += tensor_f32(sc, [4], [1.0, 1.0, f, f])
+            g += node(name, "Resize", [x, "", sc], [out],
+                      [attr_str("mode", "nearest")])
+        elif op == "sppf":
+            k = layer["k"]
+            pad = (k - 1) // 2
+            pool_attrs = [attr_ints("kernel_shape", [k, k]),
+                          attr_ints("pads", [pad] * 4),
+                          attr_ints("strides", [1, 1])]
+            taps = [f"{out}p{i}" for i in (1, 2, 3)]
+            src = x
+            for i, t in enumerate(taps):
+                g += node(f"{name}_pool{i + 1}", "MaxPool", [src], [t],
+                          pool_attrs)
+                src = t
+            g += node(name, "Concat", [x, *taps], [out], [attr_int("axis", 1)])
+        elif op == "relu":
+            g += node(name, "Relu", [x], [out], [])
+        elif op == "softmax":
+            g += node(name, "Softmax", [x], [out], [attr_int("axis", 1)])
+        else:  # pragma: no cover - builder only produces the ops above
+            raise ValueError(f"unhandled op {op!r}")
+
+    g += _s(2, net.name)
+    h, w, c = net.shapes[0]
+    g += value_info(11, "t0", [1, c, h, w])
+    for lid, layer in enumerate(net.layers):
+        if outdeg[lid] == 0:
+            oh, ow, oc = net.shapes[lid]
+            g += value_info(12, f"t{lid}", [1, oc, oh, ow])
+
+    m = _vint(1, 8)  # ir_version
+    m += _s(2, "forgemorph")
+    m += _s(3, "0.2.0")  # mirrors rust crate version
+    m += _ld(7, bytes(g))
+    m += _ld(8, _vint(2, 13))  # opset_import { version: 13 }
+    return bytes(m)
+
+
+# ---------------------------------------------------------------------------
+# zoo mirrors (rust/src/graph/zoo.rs, layer for layer)
+# ---------------------------------------------------------------------------
+
+
+def mnist() -> Net:
+    b = Net("mnist-8-16-32", 28, 28, 1)
+    for f in (8, 16, 32):
+        b = b.conv(f, 3, 1).maxpool(2, 2)
+    return b.fc(10).softmax()
+
+
+def svhn() -> Net:
+    b = Net("svhn-8-16-32-64", 32, 32, 3)
+    for f in (8, 16, 32, 64):
+        b = b.conv(f, 3, 1).maxpool(2, 2)
+    return b.fc(10).softmax()
+
+
+def cifar10() -> Net:
+    b = Net("cifar10-8-16-32-64-64", 32, 32, 3)
+    for i, f in enumerate((8, 16, 32, 64, 64)):
+        b = b.conv(f, 3, 1)
+        if i < 4:
+            b = b.maxpool(2, 2)
+    return b.fc(10).softmax()
+
+
+def resnet50() -> Net:
+    b = Net("resnet50", 224, 224, 3).conv(64, 7, 2).maxpool(2, 2)
+    for planes, blocks, stride in ((64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)):
+        for blk in range(blocks):
+            s = stride if blk == 0 else 1
+            fork = b.fork()
+            b = (b.conv(planes, 1, s)
+                  .conv(planes, 3, 1)
+                  .conv(planes * 4, 1, 1, relu=False))
+            if blk != 0:
+                b = b.residual_add(fork)
+    return b.global_avg_pool().fc(1000).softmax()
+
+
+def mobilenet_v2() -> Net:
+    b = Net("mobilenetv2", 224, 224, 3).conv(32, 3, 2)
+    settings = ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+                (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1))
+    cin = 32
+    for t, c, n, s in settings:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            if t != 1:
+                b = b.conv(cin * t, 1, 1)
+            b = b.dwconv(3, stride).conv(c, 1, 1, relu=False)
+            cin = c
+    return b.conv(1280, 1, 1).global_avg_pool().fc(1000).softmax()
+
+
+def squeezenet() -> Net:
+    b = Net("squeezenet", 224, 224, 3).conv(64, 3, 2).maxpool(2, 2)
+    fires = ((16, 128), (16, 128), (32, 256), (32, 256),
+             (48, 384), (48, 384), (64, 512), (64, 512))
+    for i, (s, e) in enumerate(fires):
+        b = b.conv(s, 1, 1).conv(e, 2, 1)
+        if i in (2, 4):
+            b = b.maxpool(2, 2)
+    return b.conv(1000, 1, 1).global_avg_pool().softmax()
+
+
+def _c3(b: Net, c2: int, n: int, shortcut: bool) -> Net:
+    c_ = c2 // 2
+    inp = b.mark()
+    b = b.conv(c_, 1, 1)  # cv1
+    for _ in range(n):
+        f = b.mark()
+        b = b.conv(c_, 1, 1).conv(c_, 3, 1)
+        if shortcut:
+            b = b.residual_add(f)
+    main = b.mark()
+    b = b.branch_from(inp).conv(c_, 1, 1)  # cv2
+    side = b.mark()
+    return b.concat([main, side]).conv(c2, 1, 1)  # cv3
+
+
+def yolov5l() -> Net:
+    b = Net("yolov5l", 640, 640, 3).conv(64, 6, 2).conv(128, 3, 2)
+    b = _c3(b, 128, 3, True)
+    b = b.conv(256, 3, 2)
+    b = _c3(b, 256, 6, True)
+    p3 = b.mark()
+    b = b.conv(512, 3, 2)
+    b = _c3(b, 512, 9, True)
+    p4 = b.mark()
+    b = b.conv(1024, 3, 2)
+    b = _c3(b, 1024, 3, True)
+    b = b.conv(512, 1, 1).sppf(5).conv(1024, 1, 1)
+    b = b.conv(512, 1, 1)
+    n10 = b.mark()
+    b = b.upsample(2)
+    up = b.mark()
+    b = _c3(b.concat([up, p4]), 512, 3, False)
+    b = b.conv(256, 1, 1)
+    n14 = b.mark()
+    b = b.upsample(2)
+    up2 = b.mark()
+    b = _c3(b.concat([up2, p3]), 256, 3, False)
+    d_p3 = b.mark()
+    b = b.conv(256, 3, 2)
+    dn = b.mark()
+    b = _c3(b.concat([dn, n14]), 512, 3, False)
+    d_p4 = b.mark()
+    b = b.conv(512, 3, 2)
+    dn2 = b.mark()
+    b = _c3(b.concat([dn2, n10]), 1024, 3, False)
+    d_p5 = b.mark()
+    for head in (d_p3, d_p4, d_p5):
+        b = b.branch_from(head).conv(255, 1, 1, relu=False)
+    return b
+
+
+def unet_tiny() -> Net:
+    b = Net("unet-tiny", 96, 96, 3).conv(16, 3, 1).conv(16, 3, 1)
+    e1 = b.mark()
+    b = b.maxpool(2, 2).conv(32, 3, 1).conv(32, 3, 1)
+    e2 = b.mark()
+    b = b.maxpool(2, 2).conv(64, 3, 1).conv(64, 3, 1).upsample(2)
+    up2 = b.mark()
+    b = b.concat([up2, e2]).conv(32, 3, 1).conv(32, 3, 1).upsample(2)
+    up1 = b.mark()
+    b = b.concat([up1, e1]).conv(16, 3, 1).conv(16, 3, 1)
+    return b.conv(4, 1, 1, relu=False)
+
+
+#: zoo lookup key -> builder (keys match ``zoo::NAMES`` / ``--model``)
+MODELS = {
+    "mnist": mnist,
+    "svhn": svhn,
+    "cifar10": cifar10,
+    "resnet50": resnet50,
+    "mobilenetv2": mobilenet_v2,
+    "squeezenet": squeezenet,
+    "yolov5l": yolov5l,
+    "unet_tiny": unet_tiny,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="corpus", help="output directory")
+    ap.add_argument("--model", choices=sorted(MODELS), action="append",
+                    help="export only this model (repeatable; default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = args.model or list(MODELS)
+    for key in names:
+        data = emit(MODELS[key]())
+        path = os.path.join(args.out, f"{key}.onnx")
+        with open(path, "wb") as fh:
+            fh.write(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""ONNX corpus writer: wire-format validity, determinism, zoo coverage.
+
+The authoritative round-trip check lives on the Rust side (CI imports
+every corpus file via ``graph dump --onnx`` and diffs the StagePlan JSON
+against the hand-built zoo twin); these tests pin the Python half in
+isolation with a minimal in-test wire walker — no ``onnx`` dependency.
+"""
+
+from compile import export_onnx as ex
+
+
+# -- minimal protobuf wire walker (test-local, decode side of ex._uv) -------
+
+
+def read_varint(buf: bytes, pos: int) -> tuple[int, int]:
+    shift = val = 0
+    while True:
+        b = buf[pos]
+        val |= (b & 0x7F) << shift
+        pos += 1
+        if not b & 0x80:
+            return val, pos
+        shift += 7
+
+
+def fields(buf: bytes):
+    """Yield (field_number, wire_type, payload) triples."""
+    pos = 0
+    while pos < len(buf):
+        key, pos = read_varint(buf, pos)
+        field, wire = key >> 3, key & 7
+        if wire == 0:
+            val, pos = read_varint(buf, pos)
+            yield field, wire, val
+        elif wire == 2:
+            ln, pos = read_varint(buf, pos)
+            yield field, wire, buf[pos:pos + ln]
+            pos += ln
+        else:  # the exporter only emits wire types 0 and 2
+            raise AssertionError(f"unexpected wire type {wire}")
+
+
+def graph_of(model_bytes: bytes) -> bytes:
+    for field, _, payload in fields(model_bytes):
+        if field == 7:
+            return payload
+    raise AssertionError("no GraphProto in model")
+
+
+def nodes_of(graph: bytes) -> list[dict]:
+    out = []
+    for field, _, payload in fields(graph):
+        if field != 1:
+            continue
+        n = {"inputs": [], "outputs": [], "op": "", "name": ""}
+        for f2, _, p2 in fields(payload):
+            if f2 == 1:
+                n["inputs"].append(p2.decode())
+            elif f2 == 2:
+                n["outputs"].append(p2.decode())
+            elif f2 == 3:
+                n["name"] = p2.decode()
+            elif f2 == 4:
+                n["op"] = p2.decode()
+        out.append(n)
+    return out
+
+
+# -- tests ------------------------------------------------------------------
+
+
+def test_every_zoo_model_emits_wire_parseable_bytes():
+    for key, build in ex.MODELS.items():
+        data = ex.emit(build())
+        top = {f for f, _, _ in fields(data)}
+        # ir_version, producer, version, graph, opset
+        assert top == {1, 2, 3, 7, 8}, key
+        assert nodes_of(graph_of(data)), f"{key}: no nodes"
+
+
+def test_emission_is_deterministic():
+    for build in (ex.mnist, ex.yolov5l):
+        assert ex.emit(build()) == ex.emit(build())
+
+
+def test_mnist_node_inventory():
+    nodes = nodes_of(graph_of(ex.emit(ex.mnist())))
+    # 3x (Conv+Relu), 3x MaxPool, Flatten+Gemm, Softmax = 12 nodes
+    ops = [n["op"] for n in nodes]
+    assert len(ops) == 12
+    assert ops.count("Conv") == 3 and ops.count("Relu") == 3
+    assert ops.count("MaxPool") == 3
+    assert ops[-3:] == ["Flatten", "Gemm", "Softmax"]
+    # fused relu is split: Conv writes t{id}c, Relu folds it back to t{id}
+    assert nodes[0]["outputs"] == ["t1c"]
+    assert nodes[1]["op"] == "Relu" and nodes[1]["outputs"] == ["t1"]
+
+
+def test_conv_emits_auto_pad_never_pads():
+    graph = graph_of(ex.emit(ex.resnet50()))
+    for n_field, _, payload in fields(graph):
+        if n_field != 1:
+            continue
+        attrs = {}
+        op = ""
+        for f2, _, p2 in fields(payload):
+            if f2 == 4:
+                op = p2.decode()
+            elif f2 == 5:
+                name = next(p for f3, _, p in fields(p2) if f3 == 1)
+                attrs[name.decode()] = True
+        if op == "Conv":
+            assert "auto_pad" in attrs and "pads" not in attrs
+
+
+def test_sppf_is_pool_cascade_reconcatenated_with_input():
+    nodes = nodes_of(graph_of(ex.emit(ex.yolov5l())))
+    sppf = [n for n in nodes if n["op"] == "Concat" and len(n["inputs"]) == 4]
+    assert sppf, "yolov5l must contain the 4-tap SPPF concat"
+    x, p1, p2, p3 = sppf[0]["inputs"]
+    pools = {n["outputs"][0]: n for n in nodes if n["op"] == "MaxPool"}
+    assert pools[p1]["inputs"] == [x]
+    assert pools[p2]["inputs"] == [p1]
+    assert pools[p3]["inputs"] == [p2]
+
+
+def test_weight_initializers_are_shape_only():
+    graph = graph_of(ex.emit(ex.yolov5l()))
+    for field, _, payload in fields(graph):
+        if field != 5:
+            continue
+        tf = {f2 for f2, _, _ in fields(payload)}
+        name = next(p for f2, _, p in fields(payload) if f2 == 8).decode()
+        if name.startswith(("w", "b")):
+            assert 9 not in tf and 4 not in tf, f"{name} carries weight data"
+        else:  # Resize scales carry real floats
+            assert name.startswith("sc") and 9 in tf
+
+
+def test_model_names_match_zoo():
+    expected = {
+        "mnist": "mnist-8-16-32",
+        "resnet50": "resnet50",
+        "yolov5l": "yolov5l",
+        "unet_tiny": "unet-tiny",
+    }
+    for key, want in expected.items():
+        graph = graph_of(ex.emit(ex.MODELS[key]()))
+        name = next(p for f, _, p in fields(graph) if f == 2).decode()
+        assert name == want

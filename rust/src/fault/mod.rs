@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::trace::parse_kv_pairs;
 use crate::obs;
-use crate::util::suggest;
+use crate::util::did_you_mean;
 
 /// The four injectable fault classes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -131,9 +131,7 @@ impl FaultPlan {
                 "swapfail" => FaultKind::SwapFail,
                 "seu" => FaultKind::Seu,
                 other => {
-                    let hint = suggest(other, FaultKind::NAMES)
-                        .map(|s| format!(" (did you mean '{s}'?)"))
-                        .unwrap_or_default();
+                    let hint = did_you_mean(other, FaultKind::NAMES);
                     return Err(format!(
                         "fault-trace: unknown fault kind '{other}'{hint} \
                          (valid: transient|stall|swapfail|seu)"

@@ -46,12 +46,6 @@ const KNOWN_OPS: &[&str] = &[
     "softmax",
 ];
 
-/// Closest known op within edit distance 2, if any (shared Levenshtein
-/// kernel lives in [`crate::util::suggest`]).
-fn suggest_op(unknown: &str) -> Option<&'static str> {
-    crate::util::suggest(unknown, KNOWN_OPS)
-}
-
 #[derive(Debug)]
 pub enum ParseError {
     Json(crate::util::json::JsonError),
@@ -207,9 +201,7 @@ pub fn parse(text: &str) -> Result<Network, ParseError> {
             "relu" => LayerKind::Relu,
             "softmax" => LayerKind::Softmax,
             other => {
-                let hint = suggest_op(other)
-                    .map(|s| format!(" (did you mean '{s}'?)"))
-                    .unwrap_or_default();
+                let hint = crate::util::did_you_mean(other, KNOWN_OPS);
                 return Err(schema(format!(
                     "{ctx}: unknown type '{other}'{hint} — known ops: {}",
                     KNOWN_OPS.join(", ")

@@ -255,9 +255,10 @@ pub struct UnknownModel {
 
 impl std::fmt::Display for UnknownModel {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let hint = crate::util::did_you_mean(&self.name, NAMES);
         write!(
             f,
-            "unknown model '{}' — valid models: {}",
+            "unknown model '{}'{hint} — valid models: {}",
             self.name,
             NAMES.join(", ")
         )
@@ -416,5 +417,16 @@ mod tests {
         for n in NAMES {
             assert!(by_name(n).is_ok(), "{n}");
         }
+    }
+
+    #[test]
+    fn unknown_model_suggests_closest() {
+        // same "did you mean" phrasing as the parser/fault/onnx paths
+        let msg = by_name("resnet5").unwrap_err().to_string();
+        assert!(msg.contains("(did you mean 'resnet50'?)"), "{msg}");
+        // far-off names get the plain listing, no suggestion clause
+        let far = by_name("transformer").unwrap_err().to_string();
+        assert!(!far.contains("did you mean"), "{far}");
+        assert!(far.contains("valid models"), "{far}");
     }
 }

@@ -26,6 +26,8 @@
 //!   * [`obs`] — structured span/event recorder: virtual-clock
 //!     deterministic traces, Chrome trace-event / folded-stack /
 //!     snapshot exporters (`--trace-out`, `report trace`)
+//!   * [`onnx`] — offline ONNX front-end: hand-rolled protobuf wire
+//!     decoder + lowering onto the graph IR (`--onnx`, docs/ONNX.md)
 //!   * [`runtime`] — PJRT executor loading the AOT artifacts
 //!   * [`backend`] — the unified `InferenceBackend` trait: PJRT, cycle
 //!     simulator and analytical model behind one execution contract
@@ -45,6 +47,7 @@ pub mod fault;
 pub mod graph;
 pub mod morph;
 pub mod obs;
+pub mod onnx;
 pub mod pe;
 pub mod power;
 pub mod quant;

@@ -104,7 +104,11 @@ commands:
   rtl           emit Verilog for a design point
   sim           cycle-simulate a design point (optionally morphed)
   graph         graph dump --model M: topology + scheduled StagePlan
-                (stages, dataflow edges, FIFO words, gate blocks) as JSON
+                (stages, dataflow edges, FIFO words, gate blocks) as JSON;
+                graph dump --onnx FILE imports an exported ONNX model
+                instead of a zoo entry (docs/ONNX.md has the op-coverage
+                contract) — --onnx works on every subcommand that takes
+                --model (explore, serve, distill, rtl, sim)
   serve         run the NeuroMorph serving demo (--workers N shards;
                 --backend pjrt needs AOT artifacts, sim/analytical run
                 self-contained; --accuracy-floor F pins the governor's
@@ -123,6 +127,18 @@ commands:
   verify        check AOT artifacts against golden probe logits";
 
 fn net_for(args: &Args) -> anyhow::Result<forgemorph::graph::Network> {
+    // `--onnx FILE` loads an exported model; `--model NAME` a zoo entry.
+    // Every subcommand resolves its network here, so imported models
+    // flow through explore/serve/distill/rtl/sim/graph identically.
+    if let Some(path) = args.get("onnx") {
+        if args.get("model").is_some() {
+            bail!("--onnx and --model are mutually exclusive (the ONNX file names its own graph)");
+        }
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading onnx model {path}"))?;
+        return forgemorph::onnx::import_bytes(&bytes)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"));
+    }
     let name = args.get_or("model", "mnist");
     // the zoo error already lists every valid model name
     Ok(zoo::by_name(name)?)
@@ -192,9 +208,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         None => {
-            let hint = forgemorph::util::suggest(id, report::KNOWN_IDS)
-                .map(|s| format!(" (did you mean '{s}'?)"))
-                .unwrap_or_default();
+            let hint = forgemorph::util::did_you_mean(id, report::KNOWN_IDS);
             bail!("unknown report id '{id}'{hint} (valid: {})", report::KNOWN_IDS.join("|"))
         }
     }
@@ -536,7 +550,7 @@ fn cmd_graph(args: &Args) -> anyhow::Result<()> {
     match args.positional.get(1).map(String::as_str) {
         Some("dump") => {}
         other => bail!(
-            "graph: unknown subcommand {:?} (expected: graph dump --model M)",
+            "graph: unknown subcommand {:?} (expected: graph dump --model M, or graph dump --onnx FILE)",
             other.unwrap_or("<none>")
         ),
     }
@@ -579,7 +593,13 @@ fn cmd_graph(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let model = args.get_or("model", "mnist").to_string();
+    let net = net_for(args)?;
+    // with --onnx the graph names itself; otherwise the zoo entry name
+    let model = if args.get("onnx").is_some() {
+        net.name.clone()
+    } else {
+        args.get_or("model", "mnist").to_string()
+    };
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let requests = args.get_usize("requests", 256);
     let rate_hz = args.get_f64("rate", 2000.0);
@@ -587,7 +607,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let backend = args.get_or("backend", "pjrt").to_string();
     let trace_spec = args.get("power-trace").map(str::to_string);
     let fault_spec = args.get("fault-trace").map(str::to_string);
-    let net = net_for(args)?;
     // trace mode defaults to the Table III 164-PE-class mapping: large
     // enough that gated blocks dominate the draw — where the paper's
     // ~32% runtime power saving lives

@@ -1,0 +1,372 @@
+//! [`Network`] -> ONNX wire bytes — the reverse direction of the
+//! importer, and the reason the round-trip tests are hermetic: every
+//! zoo model is exported here, re-imported through `proto` + `lower`,
+//! and pinned bit-identical to its hand-built twin without any file
+//! fixture. The Python corpus writer (`python/compile/export_onnx.py`)
+//! mirrors this emission byte for byte; CI diffs the two paths.
+//!
+//! Emission conventions (the lowering contract in reverse):
+//!
+//! * one final tensor per layer, named `t{id}`; helper nodes use
+//!   suffixed intermediates (`t{id}c` conv-pre-relu, `t{id}f` flatten,
+//!   `t{id}g` gemm-pre-relu, `t{id}p1..3` pyramid taps)
+//! * fused relu is split into `Conv`/`Gemm` + `Relu` node pairs, the
+//!   way real exporters spell it; the importer folds it back
+//! * conv padding is emitted as `auto_pad` (`SAME_UPPER` / `VALID`),
+//!   never a `pads` array — at `k == 1` the two modes pad identically
+//!   and only `auto_pad` keeps the round trip exact
+//! * [`LayerKind::SpatialPyramidPool`] becomes the SPPF idiom: three
+//!   cascaded stride-1 same-padded `MaxPool`s re-concatenated with
+//!   their input
+//! * weight initializers are **shape-only** (dims + dtype, no payload):
+//!   the analytical mapping flow never reads weight values, and this
+//!   keeps the corpus small. Only `Resize` scales carry real floats.
+
+use crate::graph::shapes::{self, Shapes};
+use crate::graph::{LayerKind, Network, Padding, ShapeError};
+
+const WIRE_VARINT: u32 = 0;
+const WIRE_32: u32 = 5;
+const WIRE_LEN: u32 = 2;
+
+// AttributeProto.type enum values (written for real-consumer validity;
+// our own decoder infers the type from the populated field)
+const AT_FLOAT: u64 = 1;
+const AT_INT: u64 = 2;
+const AT_STRING: u64 = 3;
+const AT_INTS: u64 = 7;
+
+fn uv(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn tag(out: &mut Vec<u8>, field: u32, wire: u32) {
+    uv(out, u64::from((field << 3) | wire));
+}
+
+fn w_vint(out: &mut Vec<u8>, field: u32, v: u64) {
+    tag(out, field, WIRE_VARINT);
+    uv(out, v);
+}
+
+fn w_bytes(out: &mut Vec<u8>, field: u32, b: &[u8]) {
+    tag(out, field, WIRE_LEN);
+    uv(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn w_str(out: &mut Vec<u8>, field: u32, s: &str) {
+    w_bytes(out, field, s.as_bytes());
+}
+
+fn w_f32(out: &mut Vec<u8>, field: u32, v: f32) {
+    tag(out, field, WIRE_32);
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+// -- AttributeProto builders ------------------------------------------------
+
+fn attr_int(name: &str, v: u64) -> Vec<u8> {
+    let mut a = Vec::new();
+    w_str(&mut a, 1, name);
+    w_vint(&mut a, 3, v);
+    w_vint(&mut a, 20, AT_INT);
+    a
+}
+
+fn attr_ints(name: &str, vals: &[usize]) -> Vec<u8> {
+    let mut a = Vec::new();
+    w_str(&mut a, 1, name);
+    for &v in vals {
+        w_vint(&mut a, 8, v as u64);
+    }
+    w_vint(&mut a, 20, AT_INTS);
+    a
+}
+
+fn attr_str(name: &str, s: &str) -> Vec<u8> {
+    let mut a = Vec::new();
+    w_str(&mut a, 1, name);
+    w_str(&mut a, 4, s);
+    w_vint(&mut a, 20, AT_STRING);
+    a
+}
+
+#[allow(dead_code)] // kept for attribute-matrix completeness
+fn attr_float(name: &str, v: f32) -> Vec<u8> {
+    let mut a = Vec::new();
+    w_str(&mut a, 1, name);
+    w_f32(&mut a, 2, v);
+    w_vint(&mut a, 20, AT_FLOAT);
+    a
+}
+
+// -- message builders -------------------------------------------------------
+
+/// Append a NodeProto to the graph buffer.
+fn node(g: &mut Vec<u8>, name: &str, op: &str, inputs: &[&str], outputs: &[&str], attrs: &[Vec<u8>]) {
+    let mut n = Vec::new();
+    for i in inputs {
+        w_str(&mut n, 1, i);
+    }
+    for o in outputs {
+        w_str(&mut n, 2, o);
+    }
+    w_str(&mut n, 3, name);
+    w_str(&mut n, 4, op);
+    for a in attrs {
+        w_bytes(&mut n, 5, a);
+    }
+    w_bytes(g, 1, &n);
+}
+
+/// Append a shape-only float TensorProto initializer (dims + dtype, no
+/// payload — the importer contract never reads weight values).
+fn tensor_shape_only(g: &mut Vec<u8>, name: &str, dims: &[usize]) {
+    let mut t = Vec::new();
+    for &d in dims {
+        w_vint(&mut t, 1, d as u64);
+    }
+    w_vint(&mut t, 2, super::proto::DT_FLOAT as u64);
+    w_str(&mut t, 8, name);
+    w_bytes(g, 5, &t);
+}
+
+/// Append a small float TensorProto with a real payload (raw_data, LE).
+fn tensor_f32(g: &mut Vec<u8>, name: &str, dims: &[usize], vals: &[f32]) {
+    let mut t = Vec::new();
+    for &d in dims {
+        w_vint(&mut t, 1, d as u64);
+    }
+    w_vint(&mut t, 2, super::proto::DT_FLOAT as u64);
+    w_str(&mut t, 8, name);
+    let mut raw = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    w_bytes(&mut t, 9, &raw);
+    w_bytes(g, 5, &t);
+}
+
+/// Append a ValueInfoProto (name + NCHW float tensor type) under `field`
+/// (11 = graph input, 12 = graph output).
+fn value_info(g: &mut Vec<u8>, field: u32, name: &str, dims: &[usize]) {
+    let mut shape = Vec::new();
+    for &d in dims {
+        let mut dim = Vec::new();
+        w_vint(&mut dim, 1, d as u64);
+        w_bytes(&mut shape, 1, &dim);
+    }
+    let mut tt = Vec::new();
+    w_vint(&mut tt, 1, super::proto::DT_FLOAT as u64);
+    w_bytes(&mut tt, 2, &shape);
+    let mut ty = Vec::new();
+    w_bytes(&mut ty, 1, &tt);
+    let mut vi = Vec::new();
+    w_str(&mut vi, 1, name);
+    w_bytes(&mut vi, 2, &ty);
+    w_bytes(g, field, &vi);
+}
+
+fn auto_pad(p: Padding) -> &'static str {
+    match p {
+        Padding::Same => "SAME_UPPER",
+        Padding::Valid => "VALID",
+    }
+}
+
+/// Encode a network as ONNX ModelProto wire bytes (opset 13, ir 8).
+/// Fails only if shape inference fails — i.e. the network itself is
+/// spatially infeasible.
+pub fn encode(net: &Network) -> Result<Vec<u8>, ShapeError> {
+    let sh = shapes::infer(net)?;
+    let preds = shapes::predecessors(net);
+    let n = net.layers.len();
+
+    let mut outdeg = vec![0usize; n];
+    for &(s, d) in &net.connections {
+        if s < d && d < n {
+            outdeg[s] += 1;
+        }
+    }
+
+    let mut g = Vec::new();
+    for layer in net.layers.iter().skip(1) {
+        let id = layer.id;
+        let pin = preds[id].first().copied().unwrap_or(id - 1);
+        let x = format!("t{pin}");
+        let out = format!("t{id}");
+        emit_layer(&mut g, &sh, layer, &x, &out, &preds[id]);
+    }
+    w_str(&mut g, 2, &net.name);
+
+    let (h, w, c) = net.input_dims();
+    value_info(&mut g, 11, "t0", &[1, c, h, w]);
+    for layer in &net.layers {
+        if outdeg[layer.id] == 0 {
+            let o = sh.output(layer.id);
+            value_info(&mut g, 12, &format!("t{}", layer.id), &[1, o.c, o.h, o.w]);
+        }
+    }
+
+    let mut opset = Vec::new();
+    w_vint(&mut opset, 2, 13);
+
+    let mut m = Vec::new();
+    w_vint(&mut m, 1, 8); // ir_version
+    w_str(&mut m, 2, "forgemorph");
+    w_str(&mut m, 3, env!("CARGO_PKG_VERSION"));
+    w_bytes(&mut m, 7, &g);
+    w_bytes(&mut m, 8, &opset);
+    Ok(m)
+}
+
+fn emit_layer(
+    g: &mut Vec<u8>,
+    sh: &Shapes,
+    layer: &crate::graph::Layer,
+    x: &str,
+    out: &str,
+    preds: &[usize],
+) {
+    let id = layer.id;
+    let name = layer.name.as_str();
+    match &layer.kind {
+        LayerKind::Input { .. } => unreachable!("layer 0 handled by caller"),
+        LayerKind::Conv { filters, k, stride, padding, relu } => {
+            let cin = sh.input_channels(id);
+            let (wn, bn) = (format!("w{id}"), format!("b{id}"));
+            tensor_shape_only(g, &wn, &[*filters, cin, *k, *k]);
+            tensor_shape_only(g, &bn, &[*filters]);
+            let conv_out = if *relu { format!("{out}c") } else { out.to_string() };
+            node(
+                g,
+                name,
+                "Conv",
+                &[x, &wn, &bn],
+                &[&conv_out],
+                &[
+                    attr_str("auto_pad", auto_pad(*padding)),
+                    attr_ints("kernel_shape", &[*k, *k]),
+                    attr_ints("strides", &[*stride, *stride]),
+                ],
+            );
+            if *relu {
+                node(g, &format!("{name}_relu"), "Relu", &[&conv_out], &[out], &[]);
+            }
+        }
+        LayerKind::DwConv { k, stride, padding, relu } => {
+            let cin = sh.input_channels(id);
+            let (wn, bn) = (format!("w{id}"), format!("b{id}"));
+            tensor_shape_only(g, &wn, &[cin, 1, *k, *k]);
+            tensor_shape_only(g, &bn, &[cin]);
+            let conv_out = if *relu { format!("{out}c") } else { out.to_string() };
+            node(
+                g,
+                name,
+                "Conv",
+                &[x, &wn, &bn],
+                &[&conv_out],
+                &[
+                    attr_str("auto_pad", auto_pad(*padding)),
+                    attr_int("group", cin as u64),
+                    attr_ints("kernel_shape", &[*k, *k]),
+                    attr_ints("strides", &[*stride, *stride]),
+                ],
+            );
+            if *relu {
+                node(g, &format!("{name}_relu"), "Relu", &[&conv_out], &[out], &[]);
+            }
+        }
+        LayerKind::MaxPool { k, stride } => {
+            node(
+                g,
+                name,
+                "MaxPool",
+                &[x],
+                &[out],
+                &[attr_ints("kernel_shape", &[*k, *k]), attr_ints("strides", &[*stride, *stride])],
+            );
+        }
+        LayerKind::AvgPool { k, stride } => {
+            node(
+                g,
+                name,
+                "AveragePool",
+                &[x],
+                &[out],
+                &[attr_ints("kernel_shape", &[*k, *k]), attr_ints("strides", &[*stride, *stride])],
+            );
+        }
+        LayerKind::GlobalAvgPool => {
+            node(g, name, "GlobalAveragePool", &[x], &[out], &[]);
+        }
+        LayerKind::Fc { out: features, relu } => {
+            let flat = format!("{out}f");
+            node(g, &format!("{name}_flatten"), "Flatten", &[x], &[&flat], &[attr_int("axis", 1)]);
+            let fin = sh.input_features(id);
+            let (wn, bn) = (format!("w{id}"), format!("b{id}"));
+            tensor_shape_only(g, &wn, &[*features, fin]);
+            tensor_shape_only(g, &bn, &[*features]);
+            let gemm_out = if *relu { format!("{out}g") } else { out.to_string() };
+            node(g, name, "Gemm", &[&flat, &wn, &bn], &[&gemm_out], &[attr_int("transB", 1)]);
+            if *relu {
+                node(g, &format!("{name}_relu"), "Relu", &[&gemm_out], &[out], &[]);
+            }
+        }
+        LayerKind::ResidualAdd { from } => {
+            let skip = format!("t{from}");
+            node(g, name, "Add", &[x, &skip], &[out], &[]);
+        }
+        LayerKind::Concat { from: _ } => {
+            // preds == the explicit `from` list, in order
+            let srcs: Vec<String> = preds.iter().map(|p| format!("t{p}")).collect();
+            let refs: Vec<&str> = srcs.iter().map(String::as_str).collect();
+            node(g, name, "Concat", &refs, &[out], &[attr_int("axis", 1)]);
+        }
+        LayerKind::Upsample { factor } => {
+            let sc = format!("sc{id}");
+            let f = *factor as f32;
+            tensor_f32(g, &sc, &[4], &[1.0, 1.0, f, f]);
+            node(g, name, "Resize", &[x, "", &sc], &[out], &[attr_str("mode", "nearest")]);
+        }
+        LayerKind::SpatialPyramidPool { k } => {
+            let pad = (*k - 1) / 2;
+            let pool_attrs = || {
+                vec![
+                    attr_ints("kernel_shape", &[*k, *k]),
+                    attr_ints("pads", &[pad, pad, pad, pad]),
+                    attr_ints("strides", &[1, 1]),
+                ]
+            };
+            let taps = [format!("{out}p1"), format!("{out}p2"), format!("{out}p3")];
+            let mut src = x.to_string();
+            for (i, t) in taps.iter().enumerate() {
+                node(g, &format!("{name}_pool{}", i + 1), "MaxPool", &[&src], &[t], &pool_attrs());
+                src = t.clone();
+            }
+            node(
+                g,
+                name,
+                "Concat",
+                &[x, &taps[0], &taps[1], &taps[2]],
+                &[out],
+                &[attr_int("axis", 1)],
+            );
+        }
+        LayerKind::Relu => {
+            node(g, name, "Relu", &[x], &[out], &[]);
+        }
+        LayerKind::Softmax => {
+            node(g, name, "Softmax", &[x], &[out], &[attr_int("axis", 1)]);
+        }
+    }
+}

@@ -1,0 +1,800 @@
+//! Lowering pass: decoded ONNX `GraphProto` -> [`Network`].
+//!
+//! The lowered network is built with **exactly** the
+//! [`crate::graph::NetworkBuilder`] conventions — layer names are
+//! `{op}{id}` (`conv3`, `maxpool4`, `resadd12`, ...), the connection
+//! table is pushed in the same order (primary/stream edge first, then
+//! skip/branch edges), and branches re-anchor the chain tail the way
+//! `branch_from` does. That convention is load-bearing: an imported zoo
+//! model must produce a `StagePlan` **bit-identical** to its hand-built
+//! twin (`tests/onnx_import.rs` pins this), so imported models flow
+//! through canonicalize -> fuse -> schedule -> design/sim/rtl/dse/morph
+//! with no special-casing anywhere downstream.
+//!
+//! Lowering contract highlights (the full matrix lives in docs/ONNX.md):
+//!
+//! * `Conv` (+`group`) -> [`LayerKind::Conv`] / [`LayerKind::DwConv`];
+//!   `Relu` folds into its producer when it is the sole consumer
+//!   (mirroring how exporters split `conv+relu` into two nodes).
+//! * `Flatten` is an alias (our FC consumes flattened features natively).
+//! * A stride-1 same-padded `MaxPool` cascade re-concatenated with its
+//!   own input (`Concat(x, p(x), p²(x), p³(x))`) is recognized as the
+//!   SPPF idiom and fused back into [`LayerKind::SpatialPyramidPool`] —
+//!   this is how YOLO-family exports spell the pyramid.
+//! * Unsupported ops fail with a did-you-mean suggestion
+//!   ([`crate::util::suggest`]) that names the node and its inputs.
+//!
+//! Only tensor *shapes* are consulted (weight dims, Resize scales): the
+//! analytical mapping flow (DESIGN.md §2) never reads weight values, so
+//! shape-only initializers — like the offline corpus writes — import
+//! identically to full `torch.onnx.export` payloads.
+
+use std::collections::HashMap;
+
+use super::proto::{AttrValue, Graph, Model, Node, Tensor};
+use crate::graph::{Layer, LayerKind, Network, Padding};
+use crate::util::did_you_mean;
+
+/// Every ONNX op the lowering pass accepts (suggestion source).
+pub const SUPPORTED_OPS: &[&str] = &[
+    "Add",
+    "AveragePool",
+    "Concat",
+    "Conv",
+    "Flatten",
+    "Gemm",
+    "GlobalAveragePool",
+    "MaxPool",
+    "Relu",
+    "Resize",
+    "Softmax",
+    "Upsample",
+];
+
+/// A stride-1 same-padded MaxPool output waiting to be fused into an
+/// SPPF stage. Taps never materialize as layers: they are only legal as
+/// the `Concat(x, p(x), p²(x), p³(x))` pattern.
+struct Tap {
+    /// tensor name of the pyramid input `x`
+    src: String,
+    k: usize,
+    /// 1 for `p(x)`, 2 for `p²(x)`, 3 for `p³(x)`
+    depth: usize,
+}
+
+struct Lowering<'m> {
+    inits: HashMap<&'m str, &'m Tensor>,
+    /// tensor name -> consuming nodes + graph outputs referencing it
+    consumers: HashMap<&'m str, usize>,
+    /// tensor name -> producing layer id (aliases collapse here)
+    producer: HashMap<String, usize>,
+    taps: HashMap<String, Tap>,
+    layers: Vec<Layer>,
+    connections: Vec<(usize, usize)>,
+    /// per-layer output channel count (attribute validation)
+    ch: Vec<usize>,
+    /// chain tail — the layer the next pushed layer consumes
+    tail: usize,
+}
+
+/// Lower a decoded model to a validated [`Network`]. Errors are plain
+/// strings; [`super::ImportError`] wraps them with import context.
+pub fn lower(model: &Model) -> Result<Network, String> {
+    let graph = model
+        .graph
+        .as_ref()
+        .ok_or_else(|| "model carries no graph".to_string())?;
+
+    let inits: HashMap<&str, &Tensor> = graph
+        .initializers
+        .iter()
+        .map(|t| (t.name.as_str(), t))
+        .collect();
+
+    // the single data input (initializers may legally be re-listed in
+    // graph.inputs; those are not data inputs)
+    let data_inputs: Vec<_> = graph
+        .inputs
+        .iter()
+        .filter(|i| !inits.contains_key(i.name.as_str()))
+        .collect();
+    let input = match data_inputs.as_slice() {
+        [one] => *one,
+        [] => return Err("graph declares no data input".into()),
+        many => {
+            return Err(format!(
+                "graph declares {} data inputs ({}) — single-input CNNs only",
+                many.len(),
+                many.iter().map(|i| i.name.as_str()).collect::<Vec<_>>().join(", ")
+            ))
+        }
+    };
+    let (h, w, c) = input_dims(input)?;
+
+    let mut consumers: HashMap<&str, usize> = HashMap::new();
+    for node in &graph.nodes {
+        for i in &node.inputs {
+            *consumers.entry(i.as_str()).or_insert(0) += 1;
+        }
+    }
+    for o in &graph.outputs {
+        *consumers.entry(o.name.as_str()).or_insert(0) += 1;
+    }
+
+    let mut lo = Lowering {
+        inits,
+        consumers,
+        producer: HashMap::new(),
+        taps: HashMap::new(),
+        layers: vec![Layer {
+            id: 0,
+            name: "input".into(),
+            kind: LayerKind::Input { h, w, c },
+        }],
+        connections: Vec::new(),
+        ch: vec![c],
+        tail: 0,
+    };
+    lo.producer.insert(input.name.clone(), 0);
+
+    for (idx, node) in graph.nodes.iter().enumerate() {
+        lo.lower_node(idx, node)?;
+    }
+
+    for out in &graph.outputs {
+        if !lo.producer.contains_key(&out.name) {
+            let extra = if lo.taps.contains_key(&out.name) {
+                " (it is a same-padded pooling tap — only an SPPF concat may consume it)"
+            } else {
+                ""
+            };
+            return Err(format!("graph output '{}' is never produced{extra}", out.name));
+        }
+    }
+
+    let name = if graph.name.is_empty() { "onnx-model".to_string() } else { graph.name.clone() };
+    let net = Network { name, layers: lo.layers, connections: lo.connections };
+    net.validate()
+        .map_err(|e| format!("imported graph failed validation: {e}"))?;
+    Ok(net)
+}
+
+/// NCHW input dims with a unit (or symbolic, treated as 1) batch axis.
+fn input_dims(input: &super::proto::ValueInfo) -> Result<(usize, usize, usize), String> {
+    use super::proto::Dim;
+    let d = &input.dims;
+    if d.len() != 4 {
+        return Err(format!(
+            "input tensor '{}' has rank {} — expected NCHW rank 4",
+            input.name,
+            d.len()
+        ));
+    }
+    match &d[0] {
+        Dim::Value(1) | Dim::Param(_) => {}
+        Dim::Value(n) => {
+            return Err(format!(
+                "input tensor '{}': batch dimension is {n} — the streaming compiler \
+                 maps batch-1 frames",
+                input.name
+            ))
+        }
+    }
+    let mut chw = [0usize; 3];
+    for (slot, dim) in chw.iter_mut().zip(&d[1..]) {
+        *slot = match dim {
+            Dim::Value(v) if *v > 0 => *v as usize,
+            Dim::Value(v) => {
+                return Err(format!(
+                    "input tensor '{}': zero-sized dimension {v} — H, W, C must be \
+                     concrete and positive",
+                    input.name
+                ))
+            }
+            Dim::Param(p) => {
+                return Err(format!(
+                    "input tensor '{}': symbolic dimension '{p}' — H, W, C must be \
+                     concrete (only the batch axis may be dynamic)",
+                    input.name
+                ))
+            }
+        };
+    }
+    Ok((chw[1], chw[2], chw[0]))
+}
+
+// ---------------------------------------------------------------------------
+// attribute helpers
+// ---------------------------------------------------------------------------
+
+fn attr_i(node: &Node, name: &str, default: i64) -> Result<i64, String> {
+    match node.attr(name) {
+        None => Ok(default),
+        Some(AttrValue::Int(i)) => Ok(*i),
+        Some(_) => Err(format!("attribute '{name}' must be an int")),
+    }
+}
+
+fn attr_f(node: &Node, name: &str, default: f32) -> Result<f32, String> {
+    match node.attr(name) {
+        None => Ok(default),
+        Some(AttrValue::Float(f)) => Ok(*f),
+        Some(AttrValue::Int(i)) => Ok(*i as f32),
+        Some(_) => Err(format!("attribute '{name}' must be a float")),
+    }
+}
+
+fn attr_s<'n>(node: &'n Node, name: &str, default: &'n str) -> Result<&'n str, String> {
+    match node.attr(name) {
+        None => Ok(default),
+        Some(AttrValue::Str(s)) => Ok(s),
+        Some(_) => Err(format!("attribute '{name}' must be a string")),
+    }
+}
+
+fn attr_ints<'n>(node: &'n Node, name: &str) -> Result<Option<&'n [i64]>, String> {
+    match node.attr(name) {
+        None => Ok(None),
+        Some(AttrValue::Ints(v)) => Ok(Some(v)),
+        Some(_) => Err(format!("attribute '{name}' must be an int list")),
+    }
+}
+
+/// `[a, a]` int-list attribute -> `a` (square spatial params only).
+fn square_pair(node: &Node, name: &str, default: usize) -> Result<usize, String> {
+    match attr_ints(node, name)? {
+        None => Ok(default),
+        Some([a, b]) if a == b && *a > 0 => Ok(*a as usize),
+        Some(v) => Err(format!(
+            "attribute '{name}' is {v:?} — only square (equal H/W) values are supported"
+        )),
+    }
+}
+
+/// Classify explicit `pads` `[t, l, b, r]` + `auto_pad` into the IR's
+/// two padding modes. `k == 1` is reported as `Same` (shape-identical
+/// either way; the zoo convention for 1x1 convs).
+fn classify_padding(node: &Node, k: usize) -> Result<Padding, String> {
+    let auto = attr_s(node, "auto_pad", "NOTSET")?;
+    match auto {
+        "SAME_UPPER" | "SAME_LOWER" => return Ok(Padding::Same),
+        "VALID" => return Ok(Padding::Valid),
+        "NOTSET" | "" => {}
+        other => return Err(format!("auto_pad '{other}' is not a known mode")),
+    }
+    let pads = attr_ints(node, "pads")?.unwrap_or(&[0, 0, 0, 0]);
+    if pads.len() != 4 {
+        return Err(format!("pads {pads:?} must have 4 entries [t, l, b, r]"));
+    }
+    let (t, l, b, r) = (pads[0], pads[1], pads[2], pads[3]);
+    if t != l || b != r {
+        return Err(format!("pads {pads:?}: H/W padding must agree"));
+    }
+    let (lo, hi) = (t, b);
+    if lo == 0 && hi == 0 {
+        // k == 1: Same and Valid pad identically; report Same, the zoo
+        // convention for 1x1 convs
+        return Ok(if k == 1 { Padding::Same } else { Padding::Valid });
+    }
+    let (want_lo, want_hi) = (((k - 1) / 2) as i64, (k / 2) as i64);
+    if (lo, hi) == (want_lo, want_hi) {
+        return Ok(Padding::Same);
+    }
+    Err(format!(
+        "pads {pads:?} unsupported for k={k} — zero padding (VALID) or \
+         SAME-style ({want_lo}/{want_hi}) only"
+    ))
+}
+
+impl<'m> Lowering<'m> {
+    /// Error context naming the node like the ONNX file does.
+    fn ctx(&self, idx: usize, node: &Node) -> String {
+        if node.name.is_empty() {
+            format!("node #{idx} ({})", node.op_type)
+        } else {
+            format!("node '{}' (#{idx}, {})", node.name, node.op_type)
+        }
+    }
+
+    /// Resolve a consumed tensor to its producing layer id.
+    fn resolve(&self, name: &str, ctx: &str) -> Result<usize, String> {
+        if let Some(&p) = self.producer.get(name) {
+            return Ok(p);
+        }
+        if self.taps.contains_key(name) {
+            return Err(format!(
+                "{ctx}: input '{name}' is a same-padded pooling tap — only the SPPF \
+                 concat pattern Concat(x, pool(x), pool²(x), pool³(x)) may consume it"
+            ));
+        }
+        if self.inits.contains_key(name) {
+            return Err(format!(
+                "{ctx}: input '{name}' is an initializer where a feature map is expected"
+            ));
+        }
+        Err(format!(
+            "{ctx}: input tensor '{name}' is not produced by any earlier node — \
+             the graph is not topologically sorted, or the tensor is missing"
+        ))
+    }
+
+    /// The single data output of a node.
+    fn out_name<'n>(&self, node: &'n Node, ctx: &str) -> Result<&'n str, String> {
+        match node.outputs.first() {
+            Some(o) if !o.is_empty() => Ok(o),
+            _ => Err(format!("{ctx}: node has no output tensor")),
+        }
+    }
+
+    /// Append a layer consuming the current chain tail — the exact
+    /// `NetworkBuilder::push` convention (name `{prefix}{id}`, edge
+    /// `(tail, id)`, tail re-anchored).
+    fn push(&mut self, prefix: &str, kind: LayerKind, out_ch: usize) -> usize {
+        let id = self.layers.len();
+        self.layers.push(Layer { id, name: format!("{prefix}{id}"), kind });
+        self.connections.push((self.tail, id));
+        self.ch.push(out_ch);
+        self.tail = id;
+        id
+    }
+
+    /// `branch_from`: re-anchor the chain tail on an earlier layer.
+    fn seek(&mut self, id: usize) {
+        self.tail = id;
+    }
+
+    fn lower_node(&mut self, idx: usize, node: &Node) -> Result<(), String> {
+        let ctx = self.ctx(idx, node);
+        match node.op_type.as_str() {
+            "Conv" => self.lower_conv(node, &ctx),
+            "Relu" => self.lower_relu(node, &ctx),
+            "MaxPool" => self.lower_pool(node, &ctx, true),
+            "AveragePool" => self.lower_pool(node, &ctx, false),
+            "GlobalAveragePool" => {
+                let x = self.data_input(node, &ctx)?;
+                let p = self.resolve(&x, &ctx)?;
+                self.seek(p);
+                let c = self.ch[p];
+                let id = self.push("gap", LayerKind::GlobalAvgPool, c);
+                self.map_output(node, &ctx, id)
+            }
+            "Flatten" => {
+                let axis = attr_i(node, "axis", 1).map_err(|e| format!("{ctx}: {e}"))?;
+                if axis != 1 {
+                    return Err(format!(
+                        "{ctx}: Flatten axis {axis} unsupported (channel-major axis 1 only)"
+                    ));
+                }
+                let x = self.data_input(node, &ctx)?;
+                let p = self.resolve(&x, &ctx)?;
+                // pure alias: FC consumes flattened features natively
+                let out = self.out_name(node, &ctx)?.to_string();
+                self.producer.insert(out, p);
+                Ok(())
+            }
+            "Gemm" => self.lower_gemm(node, &ctx),
+            "Add" => self.lower_add(node, &ctx),
+            "Concat" => self.lower_concat(node, &ctx),
+            "Resize" | "Upsample" => self.lower_resize(node, &ctx),
+            "Softmax" => {
+                let x = self.data_input(node, &ctx)?;
+                let p = self.resolve(&x, &ctx)?;
+                self.seek(p);
+                let c = self.ch[p];
+                let id = self.push("softmax", LayerKind::Softmax, c);
+                self.map_output(node, &ctx, id)
+            }
+            "" => Err(format!("{ctx}: node has empty op_type")),
+            other => {
+                let hint = did_you_mean(other, SUPPORTED_OPS);
+                Err(format!(
+                    "{ctx}: unsupported op '{other}'{hint} — node inputs: [{}]; \
+                     supported ops: {}",
+                    node.inputs.join(", "),
+                    SUPPORTED_OPS.join(", ")
+                ))
+            }
+        }
+    }
+
+    /// First input, which must exist and be non-empty.
+    fn data_input(&self, node: &Node, ctx: &str) -> Result<String, String> {
+        match node.inputs.first() {
+            Some(i) if !i.is_empty() => Ok(i.clone()),
+            _ => Err(format!("{ctx}: node has no data input")),
+        }
+    }
+
+    fn map_output(&mut self, node: &Node, ctx: &str, id: usize) -> Result<(), String> {
+        let out = self.out_name(node, ctx)?.to_string();
+        self.producer.insert(out, id);
+        Ok(())
+    }
+
+    fn lower_conv(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        if !(2..=3).contains(&node.inputs.len()) {
+            return Err(format!(
+                "{ctx}: Conv takes X, W[, B] — got {} inputs",
+                node.inputs.len()
+            ));
+        }
+        let x = self.resolve(&node.inputs[0], ctx)?;
+        let wname = &node.inputs[1];
+        let w = self.inits.get(wname.as_str()).ok_or_else(|| {
+            format!("{ctx}: weight '{wname}' is not a graph initializer — \
+                     external or dynamic weights are unsupported")
+        })?;
+        let dims = &w.dims;
+        if dims.len() != 4 || dims.iter().any(|&d| d <= 0) {
+            return Err(format!(
+                "{ctx}: weight '{wname}' has dims {dims:?} — expected positive \
+                 [M, C/group, kH, kW]"
+            ));
+        }
+        let (m, cpg, kh, kw) =
+            (dims[0] as usize, dims[1] as usize, dims[2] as usize, dims[3] as usize);
+        if kh != kw {
+            return Err(format!("{ctx}: non-square kernel {kh}x{kw} unsupported"));
+        }
+        let k = kh;
+        if let Some(ks) = attr_ints(node, "kernel_shape").map_err(|e| format!("{ctx}: {e}"))? {
+            if ks != [k as i64, k as i64] {
+                return Err(format!(
+                    "{ctx}: kernel_shape {ks:?} disagrees with weight dims {dims:?}"
+                ));
+            }
+        }
+        if let Some(d) = attr_ints(node, "dilations").map_err(|e| format!("{ctx}: {e}"))? {
+            if d.iter().any(|&v| v != 1) {
+                return Err(format!("{ctx}: dilations {d:?} unsupported (must be 1)"));
+            }
+        }
+        let stride = square_pair(node, "strides", 1).map_err(|e| format!("{ctx}: {e}"))?;
+        let group = attr_i(node, "group", 1).map_err(|e| format!("{ctx}: {e}"))?;
+        let padding = classify_padding(node, k).map_err(|e| format!("{ctx}: {e}"))?;
+        let cin = self.ch[x];
+        if node.inputs.len() == 3 && !node.inputs[2].is_empty() {
+            if let Some(b) = self.inits.get(node.inputs[2].as_str()) {
+                if b.dims != [m as i64] {
+                    return Err(format!(
+                        "{ctx}: bias '{}' has dims {:?} — expected [{m}]",
+                        node.inputs[2], b.dims
+                    ));
+                }
+            }
+        }
+        let kind = if group == 1 {
+            if cpg != cin {
+                return Err(format!(
+                    "{ctx}: weight '{wname}' expects {cpg} input channels, but \
+                     producer '{}' provides {cin}",
+                    self.layers[x].name
+                ));
+            }
+            LayerKind::Conv { filters: m, k, stride, padding, relu: false }
+        } else if group as usize == cin && cpg == 1 && m == cin {
+            LayerKind::DwConv { k, stride, padding, relu: false }
+        } else {
+            return Err(format!(
+                "{ctx}: grouped convolution (group={group}, weight {dims:?}, \
+                 {cin} input channels) is only supported when depthwise \
+                 (group == channels, multiplier 1)"
+            ));
+        };
+        let prefix = if group == 1 { "conv" } else { "dwconv" };
+        self.seek(x);
+        let out_ch = m;
+        let id = self.push(prefix, kind, out_ch);
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_relu(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        let x = self.data_input(node, ctx)?;
+        let p = self.resolve(&x, ctx)?;
+        // fold into the producing conv/FC when this relu is its *sole*
+        // consumer and nothing branched in between (mirrors the pass
+        // pipeline's fusion rule, but keeps builder-convention ids)
+        let foldable = p == self.tail
+            && p > 0
+            && self.consumers.get(x.as_str()).copied().unwrap_or(0) == 1
+            && matches!(
+                self.layers[p].kind,
+                LayerKind::Conv { relu: false, .. }
+                    | LayerKind::DwConv { relu: false, .. }
+                    | LayerKind::Fc { relu: false, .. }
+            );
+        if foldable {
+            match &mut self.layers[p].kind {
+                LayerKind::Conv { relu, .. }
+                | LayerKind::DwConv { relu, .. }
+                | LayerKind::Fc { relu, .. } => *relu = true,
+                _ => unreachable!("foldable checked conv-like"),
+            }
+            return self.map_output(node, ctx, p);
+        }
+        self.seek(p);
+        let c = self.ch[p];
+        let id = self.push("relu", LayerKind::Relu, c);
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_pool(&mut self, node: &Node, ctx: &str, is_max: bool) -> Result<(), String> {
+        if node.outputs.len() > 1 && !node.outputs[1].is_empty() {
+            return Err(format!("{ctx}: MaxPool Indices output unsupported"));
+        }
+        let k = match attr_ints(node, "kernel_shape").map_err(|e| format!("{ctx}: {e}"))? {
+            Some([a, b]) if a == b && *a > 0 => *a as usize,
+            Some(v) => {
+                return Err(format!(
+                    "{ctx}: kernel_shape {v:?} — only square windows are supported"
+                ))
+            }
+            None => return Err(format!("{ctx}: pooling requires kernel_shape")),
+        };
+        let stride = square_pair(node, "strides", 1).map_err(|e| format!("{ctx}: {e}"))?;
+        if attr_i(node, "ceil_mode", 0).map_err(|e| format!("{ctx}: {e}"))? != 0 {
+            return Err(format!("{ctx}: ceil_mode pooling unsupported"));
+        }
+        let x = self.data_input(node, ctx)?;
+
+        // SPPF tap: stride-1 same-padded MaxPool (odd k, pads (k-1)/2)
+        let pads = attr_ints(node, "pads").map_err(|e| format!("{ctx}: {e}"))?;
+        let auto = attr_s(node, "auto_pad", "NOTSET").map_err(|e| format!("{ctx}: {e}"))?;
+        let same_padded = matches!(auto, "SAME_UPPER" | "SAME_LOWER")
+            || pads.is_some_and(|p| {
+                p.len() == 4 && k % 2 == 1 && p.iter().all(|&v| v == ((k - 1) / 2) as i64)
+            });
+        if same_padded {
+            if !(is_max && stride == 1) {
+                return Err(format!(
+                    "{ctx}: padded pooling is only supported as the SPPF idiom \
+                     (stride-1 same-padded MaxPool cascade)"
+                ));
+            }
+            let out = self.out_name(node, ctx)?.to_string();
+            let tap = if let Some(t) = self.taps.get(&x) {
+                if t.k != k {
+                    return Err(format!(
+                        "{ctx}: pyramid window {k} disagrees with the cascade's {}",
+                        t.k
+                    ));
+                }
+                if t.depth >= 3 {
+                    return Err(format!(
+                        "{ctx}: pyramid cascade deeper than 3 pools unsupported"
+                    ));
+                }
+                Tap { src: t.src.clone(), k, depth: t.depth + 1 }
+            } else {
+                // validates the source exists before deferring
+                self.resolve(&x, ctx)?;
+                Tap { src: x.clone(), k, depth: 1 }
+            };
+            self.taps.insert(out, tap);
+            return Ok(());
+        }
+
+        if let Some(p) = pads {
+            if p.iter().any(|&v| v != 0) {
+                return Err(format!(
+                    "{ctx}: pads {p:?} unsupported for pooling (zero pads or the \
+                     SPPF idiom only)"
+                ));
+            }
+        }
+        let p = self.resolve(&x, ctx)?;
+        self.seek(p);
+        let c = self.ch[p];
+        let (prefix, kind) = if is_max {
+            ("maxpool", LayerKind::MaxPool { k, stride })
+        } else {
+            ("avgpool", LayerKind::AvgPool { k, stride })
+        };
+        let id = self.push(prefix, kind, c);
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_gemm(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        if !(2..=3).contains(&node.inputs.len()) {
+            return Err(format!(
+                "{ctx}: Gemm takes A, B[, C] — got {} inputs",
+                node.inputs.len()
+            ));
+        }
+        let a = self.resolve(&node.inputs[0], ctx)?;
+        let wname = &node.inputs[1];
+        let w = self.inits.get(wname.as_str()).ok_or_else(|| {
+            format!("{ctx}: weight '{wname}' is not a graph initializer")
+        })?;
+        if w.dims.len() != 2 || w.dims.iter().any(|&d| d <= 0) {
+            return Err(format!(
+                "{ctx}: weight '{wname}' has dims {:?} — expected rank-2 [out, in] \
+                 or [in, out]",
+                w.dims
+            ));
+        }
+        for (name, want) in [("alpha", 1.0f32), ("beta", 1.0)] {
+            let v = attr_f(node, name, want).map_err(|e| format!("{ctx}: {e}"))?;
+            if (v - want).abs() > 1e-6 {
+                return Err(format!("{ctx}: {name}={v} unsupported (must be 1.0)"));
+            }
+        }
+        if attr_i(node, "transA", 0).map_err(|e| format!("{ctx}: {e}"))? != 0 {
+            return Err(format!("{ctx}: transA=1 unsupported"));
+        }
+        let trans_b = attr_i(node, "transB", 0).map_err(|e| format!("{ctx}: {e}"))?;
+        let out = match trans_b {
+            1 => w.dims[0] as usize,
+            0 => w.dims[1] as usize,
+            other => return Err(format!("{ctx}: transB={other} is not 0/1")),
+        };
+        if node.inputs.len() == 3 && !node.inputs[2].is_empty() {
+            if let Some(b) = self.inits.get(node.inputs[2].as_str()) {
+                if b.dims != [out as i64] {
+                    return Err(format!(
+                        "{ctx}: bias '{}' has dims {:?} — expected [{out}]",
+                        node.inputs[2], b.dims
+                    ));
+                }
+            }
+        }
+        self.seek(a);
+        let id = self.push("fc", LayerKind::Fc { out, relu: false }, out);
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_add(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        if node.inputs.len() != 2 {
+            return Err(format!("{ctx}: Add takes 2 inputs, got {}", node.inputs.len()));
+        }
+        for i in &node.inputs {
+            if self.inits.contains_key(i.as_str()) {
+                return Err(format!(
+                    "{ctx}: Add with constant operand '{i}' unsupported — fold the \
+                     constant into the producing layer before export"
+                ));
+            }
+        }
+        let a = self.resolve(&node.inputs[0], ctx)?;
+        let b = self.resolve(&node.inputs[1], ctx)?;
+        if a == b {
+            return Err(format!("{ctx}: Add of a tensor with itself is not a skip merge"));
+        }
+        // main path = the chain tail when possible (the builder's
+        // residual_add merges tail with the earlier fork); otherwise the
+        // later producer is the main path
+        let (main, skip) = if a == self.tail {
+            (a, b)
+        } else if b == self.tail {
+            (b, a)
+        } else {
+            (a.max(b), a.min(b))
+        };
+        self.seek(main);
+        let c = self.ch[main];
+        let id = self.push("resadd", LayerKind::ResidualAdd { from: skip }, c);
+        self.connections.push((skip, id));
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_concat(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        let axis = attr_i(node, "axis", 1).map_err(|e| format!("{ctx}: {e}"))?;
+        if axis != 1 {
+            return Err(format!(
+                "{ctx}: Concat axis {axis} unsupported (channel axis 1 only)"
+            ));
+        }
+        if node.inputs.len() < 2 {
+            return Err(format!(
+                "{ctx}: Concat needs at least 2 inputs, has {}",
+                node.inputs.len()
+            ));
+        }
+
+        // SPPF fusion: Concat(x, p(x), p²(x), p³(x)) over pyramid taps
+        let any_tap = node.inputs.iter().any(|i| self.taps.contains_key(i.as_str()));
+        if any_tap {
+            let fused = node.inputs.len() == 4
+                && !self.taps.contains_key(node.inputs[0].as_str())
+                && (1..4).all(|i| {
+                    self.taps.get(node.inputs[i].as_str()).is_some_and(|t| {
+                        t.depth == i && t.src == node.inputs[0]
+                    })
+                });
+            if !fused {
+                return Err(format!(
+                    "{ctx}: same-padded pooling taps may only be consumed by the SPPF \
+                     pattern Concat(x, pool(x), pool²(x), pool³(x)) — inputs: [{}]",
+                    node.inputs.join(", ")
+                ));
+            }
+            let k = self.taps[node.inputs[1].as_str()].k;
+            let p = self.resolve(&node.inputs[0], ctx)?;
+            self.seek(p);
+            let c = 4 * self.ch[p];
+            let id = self.push("sppf", LayerKind::SpatialPyramidPool { k }, c);
+            return self.map_output(node, ctx, id);
+        }
+
+        let mut from = Vec::with_capacity(node.inputs.len());
+        let mut c = 0usize;
+        for i in &node.inputs {
+            let p = self.resolve(i, ctx)?;
+            c += self.ch[p];
+            from.push(p);
+        }
+        // exact NetworkBuilder::concat convention: connected to exactly
+        // the `from` list, in order; no implicit chain edge
+        let id = self.layers.len();
+        for &f in &from {
+            self.connections.push((f, id));
+        }
+        self.layers.push(Layer {
+            id,
+            name: format!("concat{id}"),
+            kind: LayerKind::Concat { from },
+        });
+        self.ch.push(c);
+        self.tail = id;
+        self.map_output(node, ctx, id)
+    }
+
+    fn lower_resize(&mut self, node: &Node, ctx: &str) -> Result<(), String> {
+        let mode = attr_s(node, "mode", "nearest").map_err(|e| format!("{ctx}: {e}"))?;
+        if mode != "nearest" {
+            return Err(format!(
+                "{ctx}: Resize mode '{mode}' unsupported (nearest-neighbour only)"
+            ));
+        }
+        let x = self.data_input(node, ctx)?;
+        let p = self.resolve(&x, ctx)?;
+
+        // scales: a float attribute (legacy Upsample), or an initializer
+        // input carrying exactly 4 floats (roi carries 8, sizes is int64)
+        let scales: Vec<f32> = if let Some(AttrValue::Floats(fs)) = node.attr("scales") {
+            fs.clone()
+        } else {
+            let mut found = None;
+            for i in node.inputs.iter().skip(1) {
+                if i.is_empty() {
+                    continue;
+                }
+                if let Some(t) = self.inits.get(i.as_str()) {
+                    if t.floats.len() == 4 {
+                        found = Some(t.floats.clone());
+                        break;
+                    }
+                    if !t.ints.is_empty() {
+                        return Err(format!(
+                            "{ctx}: sizes-based Resize unsupported — export with a \
+                             'scales' input instead"
+                        ));
+                    }
+                }
+            }
+            found.ok_or_else(|| {
+                format!(
+                    "{ctx}: Resize requires a 4-element float 'scales' initializer \
+                     — inputs: [{}]",
+                    node.inputs.join(", ")
+                )
+            })?
+        };
+        if scales.len() != 4 || scales[0] != 1.0 || scales[1] != 1.0 {
+            return Err(format!(
+                "{ctx}: scales {scales:?} must be [1, 1, f, f] (spatial-only resize)"
+            ));
+        }
+        let (fh, fw) = (scales[2], scales[3]);
+        if fh != fw || fh < 1.0 || fh.fract() != 0.0 {
+            return Err(format!(
+                "{ctx}: scales {scales:?} — only integer upsampling factors >= 1 \
+                 with equal H/W are supported"
+            ));
+        }
+        self.seek(p);
+        let c = self.ch[p];
+        let id = self.push("up", LayerKind::Upsample { factor: fh as usize }, c);
+        self.map_output(node, ctx, id)
+    }
+}

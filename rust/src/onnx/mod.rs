@@ -1,0 +1,83 @@
+//! ONNX front-end: ingest real exported model graphs (DESIGN.md §15,
+//! docs/ONNX.md).
+//!
+//! Two strictly separated layers, each independently testable:
+//!
+//! * [`proto`] — a hand-rolled protobuf **wire-format** decoder in the
+//!   repo's vendored-shim style (no external crates): varint /
+//!   length-delimited field walking over ModelProto -> GraphProto ->
+//!   NodeProto / TensorProto. Total on arbitrary bytes — malformed
+//!   input yields an offset-carrying [`DecodeError`], never a panic.
+//! * [`lower`] — the op-lowering pass onto the [`crate::graph`]
+//!   fork/merge IR, reproducing `NetworkBuilder` conventions exactly so
+//!   an imported zoo model's `StagePlan` is **bit-identical** to its
+//!   hand-built twin. Everything downstream (design/sim/rtl/dse/morph)
+//!   consumes imported models with zero special-casing.
+//!
+//! [`export`] is the reverse direction (Network -> wire bytes), used by
+//! the hermetic round-trip tests; `python/compile/export_onnx.py`
+//! mirrors it for the on-disk corpus that CI diffs against `graph dump`.
+
+pub mod export;
+pub mod lower;
+pub mod proto;
+
+pub use export::encode;
+pub use lower::{lower, SUPPORTED_OPS};
+pub use proto::{decode_model, DecodeError, Model};
+
+use crate::graph::Network;
+
+/// Import failure: either the bytes are not a well-formed ONNX model
+/// (offset-carrying decode error) or the graph uses constructs outside
+/// the documented coverage contract (lowering error).
+#[derive(Debug)]
+pub enum ImportError {
+    Decode(DecodeError),
+    Lower(String),
+}
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImportError::Decode(e) => write!(f, "{e}"),
+            ImportError::Lower(m) => write!(f, "onnx import: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+impl From<DecodeError> for ImportError {
+    fn from(e: DecodeError) -> Self {
+        ImportError::Decode(e)
+    }
+}
+
+/// Decode + lower ONNX bytes into a validated [`Network`].
+pub fn import_bytes(bytes: &[u8]) -> Result<Network, ImportError> {
+    let model = decode_model(bytes)?;
+    lower::lower(&model).map_err(ImportError::Lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn mnist_round_trips_bit_identical() {
+        let twin = zoo::mnist();
+        let bytes = encode(&twin).expect("zoo model encodes");
+        let imported = import_bytes(&bytes).expect("exported model imports");
+        assert_eq!(imported.name, twin.name);
+        assert_eq!(imported.layers, twin.layers);
+        assert_eq!(imported.connections, twin.connections);
+    }
+
+    #[test]
+    fn garbage_bytes_error_cleanly() {
+        let err = import_bytes(&[0x08]).unwrap_err();
+        assert!(matches!(err, ImportError::Decode(_)), "got: {err}");
+    }
+}

@@ -1,0 +1,875 @@
+//! Hand-rolled ONNX protobuf wire-format decoder.
+//!
+//! The offline vendor set carries no `prost`/`protobuf` crate, so —
+//! matching the repo's vendored-shim style (`util::json`, the `anyhow`
+//! shim) — this module walks the protobuf wire format by hand: varints,
+//! length-delimited fields, fixed32/fixed64, field-number dispatch. It
+//! decodes exactly the slice of the ONNX schema the lowering pass
+//! ([`super::lower`]) consumes:
+//!
+//! ```text
+//! ModelProto ── graph ──> GraphProto ── node ────────> NodeProto ── attribute ──> AttributeProto
+//!                                   ├─ initializer ──> TensorProto                  │ (t / g nest)
+//!                                   ├─ input/output ─> ValueInfoProto ─> TypeProto ─> TensorShapeProto
+//! ```
+//!
+//! Unknown fields are *skipped* by wire type (forward compatibility:
+//! real exporters attach doc strings, metadata props, training info),
+//! but malformed wire data is a hard, offset-carrying [`DecodeError`]:
+//! truncated varints, lengths past end-of-buffer, deprecated group wire
+//! types, wrong wire types for known fields. Decoding is **total** — any
+//! byte string returns `Ok` or `Err`, never panics (property-tested in
+//! `tests/onnx_import.rs`). `AttributeProto.g` re-enters GraphProto, so
+//! a recursion cap ([`MAX_GRAPH_DEPTH`]) turns crafted depth bombs into
+//! errors instead of stack overflows.
+
+/// Wire-level decode error with the byte offset where decoding failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError {
+    /// byte offset into the model buffer
+    pub at: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "onnx decode error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Nested-graph recursion cap: `AttributeProto.g` (control-flow
+/// subgraphs) re-enters `GraphProto`, so a crafted file could nest
+/// graphs arbitrarily deep. Real models nest a handful of levels (If /
+/// Loop bodies); past this depth we error instead of recursing.
+pub const MAX_GRAPH_DEPTH: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Decoded messages (the subset the importer needs)
+// ---------------------------------------------------------------------------
+
+/// Top-level `ModelProto`.
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub ir_version: i64,
+    pub producer_name: String,
+    pub producer_version: String,
+    /// `(domain, version)` pairs from `opset_import`.
+    pub opsets: Vec<(String, i64)>,
+    pub graph: Option<Graph>,
+}
+
+impl Model {
+    /// Version of the default-domain opset (`""` or `"ai.onnx"`), if
+    /// declared.
+    pub fn default_opset(&self) -> Option<i64> {
+        self.opsets
+            .iter()
+            .find(|(d, _)| d.is_empty() || d == "ai.onnx")
+            .map(|&(_, v)| v)
+    }
+}
+
+/// `GraphProto`.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub initializers: Vec<Tensor>,
+    pub inputs: Vec<ValueInfo>,
+    pub outputs: Vec<ValueInfo>,
+}
+
+/// `NodeProto`.
+#[derive(Debug, Clone, Default)]
+pub struct Node {
+    pub name: String,
+    pub op_type: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attrs: Vec<Attr>,
+}
+
+impl Node {
+    /// Attribute lookup by name.
+    pub fn attr(&self, name: &str) -> Option<&AttrValue> {
+        self.attrs.iter().find(|a| a.name == name).map(|a| &a.value)
+    }
+}
+
+/// One `AttributeProto`.
+#[derive(Debug, Clone)]
+pub struct Attr {
+    pub name: String,
+    pub value: AttrValue,
+}
+
+/// The attribute payload variants the importer distinguishes.
+#[derive(Debug, Clone)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f32),
+    Str(String),
+    Ints(Vec<i64>),
+    Floats(Vec<f32>),
+    Strs(Vec<String>),
+    Tensor(Tensor),
+    /// Control-flow subgraph (`If`/`Loop` bodies) — decoded so the file
+    /// walks cleanly, rejected by the lowering pass.
+    Graph(Graph),
+}
+
+/// `TensorProto` — dims always, values only where the importer needs
+/// them (Resize scales); bulk weight payloads (`raw_data`) are length-
+/// checked and skipped without being copied.
+#[derive(Debug, Clone, Default)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<i64>,
+    /// ONNX `TensorProto.DataType` (1 = FLOAT, 7 = INT64, ...).
+    pub data_type: i64,
+    /// float payload from `float_data` or a FLOAT `raw_data` small
+    /// enough to matter (Resize scales); empty for shape-only tensors.
+    pub floats: Vec<f32>,
+    /// int payload from `int64_data`/`int32_data` or an INT64 `raw_data`
+    /// (Resize `sizes`, Reshape shapes).
+    pub ints: Vec<i64>,
+}
+
+/// `ValueInfoProto`: a named tensor with (possibly symbolic) dims.
+#[derive(Debug, Clone, Default)]
+pub struct ValueInfo {
+    pub name: String,
+    pub dims: Vec<Dim>,
+}
+
+/// One dimension of a `TensorShapeProto`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dim {
+    /// concrete `dim_value`
+    Value(i64),
+    /// symbolic `dim_param` (e.g. a dynamic batch axis named "N")
+    Param(String),
+}
+
+// ---------------------------------------------------------------------------
+// Wire reader
+// ---------------------------------------------------------------------------
+
+/// Protobuf wire types.
+const WIRE_VARINT: u64 = 0;
+const WIRE_FIXED64: u64 = 1;
+const WIRE_LEN: u64 = 2;
+const WIRE_SGROUP: u64 = 3;
+const WIRE_EGROUP: u64 = 4;
+const WIRE_FIXED32: u64 = 5;
+
+/// Cursor over the model buffer. `base` is the cursor's offset into the
+/// *whole* file, so errors inside nested length-delimited messages still
+/// report absolute byte offsets.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+    base: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Reader { b, pos: 0, base: 0 }
+    }
+
+    /// Absolute offset into the original file.
+    fn at(&self) -> usize {
+        self.base + self.pos
+    }
+
+    fn err(&self, msg: impl Into<String>) -> DecodeError {
+        DecodeError { at: self.at(), msg: msg.into() }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.b.len()
+    }
+
+    /// LEB128 varint, at most 10 bytes. Errors on truncation and on an
+    /// 11th continuation byte (overlong encoding).
+    fn varint(&mut self) -> Result<u64, DecodeError> {
+        let start = self.at();
+        let mut v: u64 = 0;
+        for i in 0..10 {
+            let byte = *self
+                .b
+                .get(self.pos)
+                .ok_or(DecodeError { at: start, msg: "truncated varint".into() })?;
+            self.pos += 1;
+            v |= u64::from(byte & 0x7F) << (7 * i);
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(DecodeError { at: start, msg: "varint longer than 10 bytes".into() })
+    }
+
+    /// Field key: `(field_number, wire_type)`.
+    fn key(&mut self) -> Result<(u64, u64), DecodeError> {
+        let at = self.at();
+        let k = self.varint()?;
+        let field = k >> 3;
+        if field == 0 {
+            return Err(DecodeError { at, msg: "field number 0 is reserved".into() });
+        }
+        Ok((field, k & 0x7))
+    }
+
+    /// Length-delimited payload as a sub-slice.
+    fn bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let at = self.at();
+        let len = self.varint()? as usize;
+        let end = self.pos.checked_add(len).filter(|&e| e <= self.b.len()).ok_or(
+            DecodeError {
+                at,
+                msg: format!("length {len} runs past end of buffer"),
+            },
+        )?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// A nested reader over a length-delimited payload, offset-anchored.
+    fn nested(&mut self) -> Result<Reader<'a>, DecodeError> {
+        let abs = self.base;
+        let start_of_payload = {
+            let before = self.pos;
+            let s = self.bytes()?;
+            // position of the payload start = cursor before - but bytes()
+            // consumed the length varint first; recompute from slice ptr
+            let consumed_len_bytes = self.pos - before - s.len();
+            before + consumed_len_bytes
+        };
+        // re-slice (bytes() already advanced self.pos to the end)
+        let payload = &self.b[start_of_payload..self.pos];
+        Ok(Reader { b: payload, pos: 0, base: abs + start_of_payload })
+    }
+
+    fn string(&mut self) -> Result<String, DecodeError> {
+        let at = self.at();
+        let s = self.bytes()?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| DecodeError { at, msg: "invalid utf-8 in string field".into() })
+    }
+
+    fn fixed32(&mut self) -> Result<u32, DecodeError> {
+        let at = self.at();
+        let s = self
+            .b
+            .get(self.pos..self.pos + 4)
+            .ok_or(DecodeError { at, msg: "truncated fixed32".into() })?;
+        self.pos += 4;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn fixed64(&mut self) -> Result<u64, DecodeError> {
+        let at = self.at();
+        let s = self
+            .b
+            .get(self.pos..self.pos + 8)
+            .ok_or(DecodeError { at, msg: "truncated fixed64".into() })?;
+        self.pos += 8;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    /// Skip one field payload of the given wire type (unknown fields).
+    fn skip(&mut self, wire: u64) -> Result<(), DecodeError> {
+        match wire {
+            WIRE_VARINT => {
+                self.varint()?;
+            }
+            WIRE_FIXED64 => {
+                self.fixed64()?;
+            }
+            WIRE_LEN => {
+                self.bytes()?;
+            }
+            WIRE_FIXED32 => {
+                self.fixed32()?;
+            }
+            WIRE_SGROUP | WIRE_EGROUP => {
+                return Err(self.err("deprecated group wire type"));
+            }
+            other => return Err(self.err(format!("invalid wire type {other}"))),
+        }
+        Ok(())
+    }
+
+    /// A known field expected at wire type `want`; anything else is a
+    /// hard error naming the mismatch (never silently mis-read).
+    fn expect(&self, field: u64, wire: u64, want: u64, msg: &str) -> Result<(), DecodeError> {
+        if wire == want {
+            Ok(())
+        } else {
+            Err(self.err(format!(
+                "field {field} ({msg}): expected wire type {want}, got {wire}"
+            )))
+        }
+    }
+
+    /// Repeated scalar varint field that may arrive packed (wire type 2)
+    /// or unpacked (wire type 0); appends into `out`.
+    fn repeated_varint(
+        &mut self,
+        wire: u64,
+        out: &mut Vec<i64>,
+    ) -> Result<(), DecodeError> {
+        match wire {
+            WIRE_VARINT => out.push(self.varint()? as i64),
+            WIRE_LEN => {
+                let mut sub = self.nested()?;
+                while !sub.done() {
+                    out.push(sub.varint()? as i64);
+                }
+            }
+            other => return Err(self.err(format!("repeated int: bad wire type {other}"))),
+        }
+        Ok(())
+    }
+
+    /// Repeated float field, packed or unpacked.
+    fn repeated_float(&mut self, wire: u64, out: &mut Vec<f32>) -> Result<(), DecodeError> {
+        match wire {
+            WIRE_FIXED32 => out.push(f32::from_bits(self.fixed32()?)),
+            WIRE_LEN => {
+                let at = self.at();
+                let s = self.bytes()?;
+                if s.len() % 4 != 0 {
+                    return Err(DecodeError {
+                        at,
+                        msg: format!("packed float payload of {} bytes (not /4)", s.len()),
+                    });
+                }
+                for c in s.chunks_exact(4) {
+                    out.push(f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+                }
+            }
+            other => return Err(self.err(format!("repeated float: bad wire type {other}"))),
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message decoders
+// ---------------------------------------------------------------------------
+
+/// Decode a complete `ModelProto` from raw bytes. Total: returns
+/// `Ok(Model)` or an offset-carrying [`DecodeError`]; never panics.
+pub fn decode_model(bytes: &[u8]) -> Result<Model, DecodeError> {
+    let mut r = Reader::new(bytes);
+    let mut m = Model::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_VARINT, "ir_version")?;
+                m.ir_version = r.varint()? as i64;
+            }
+            2 => {
+                r.expect(field, wire, WIRE_LEN, "producer_name")?;
+                m.producer_name = r.string()?;
+            }
+            3 => {
+                r.expect(field, wire, WIRE_LEN, "producer_version")?;
+                m.producer_version = r.string()?;
+            }
+            7 => {
+                r.expect(field, wire, WIRE_LEN, "graph")?;
+                let mut sub = r.nested()?;
+                m.graph = Some(decode_graph(&mut sub, 0)?);
+            }
+            8 => {
+                r.expect(field, wire, WIRE_LEN, "opset_import")?;
+                let mut sub = r.nested()?;
+                m.opsets.push(decode_opset(&mut sub)?);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(m)
+}
+
+/// `OperatorSetIdProto`: domain (1), version (2).
+fn decode_opset(r: &mut Reader) -> Result<(String, i64), DecodeError> {
+    let (mut domain, mut version) = (String::new(), 0i64);
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_LEN, "opset domain")?;
+                domain = r.string()?;
+            }
+            2 => {
+                r.expect(field, wire, WIRE_VARINT, "opset version")?;
+                version = r.varint()? as i64;
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok((domain, version))
+}
+
+fn decode_graph(r: &mut Reader, depth: usize) -> Result<Graph, DecodeError> {
+    if depth >= MAX_GRAPH_DEPTH {
+        return Err(r.err(format!(
+            "graph nesting exceeds depth {MAX_GRAPH_DEPTH} (malicious or corrupt file)"
+        )));
+    }
+    let mut g = Graph::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_LEN, "node")?;
+                let mut sub = r.nested()?;
+                g.nodes.push(decode_node(&mut sub, depth)?);
+            }
+            2 => {
+                r.expect(field, wire, WIRE_LEN, "graph name")?;
+                g.name = r.string()?;
+            }
+            5 => {
+                r.expect(field, wire, WIRE_LEN, "initializer")?;
+                let mut sub = r.nested()?;
+                g.initializers.push(decode_tensor(&mut sub)?);
+            }
+            11 => {
+                r.expect(field, wire, WIRE_LEN, "input")?;
+                let mut sub = r.nested()?;
+                g.inputs.push(decode_value_info(&mut sub)?);
+            }
+            12 => {
+                r.expect(field, wire, WIRE_LEN, "output")?;
+                let mut sub = r.nested()?;
+                g.outputs.push(decode_value_info(&mut sub)?);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(g)
+}
+
+fn decode_node(r: &mut Reader, depth: usize) -> Result<Node, DecodeError> {
+    let mut n = Node::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_LEN, "node input")?;
+                n.inputs.push(r.string()?);
+            }
+            2 => {
+                r.expect(field, wire, WIRE_LEN, "node output")?;
+                n.outputs.push(r.string()?);
+            }
+            3 => {
+                r.expect(field, wire, WIRE_LEN, "node name")?;
+                n.name = r.string()?;
+            }
+            4 => {
+                r.expect(field, wire, WIRE_LEN, "op_type")?;
+                n.op_type = r.string()?;
+            }
+            5 => {
+                r.expect(field, wire, WIRE_LEN, "attribute")?;
+                let mut sub = r.nested()?;
+                n.attrs.push(decode_attr(&mut sub, depth)?);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(n)
+}
+
+fn decode_attr(r: &mut Reader, depth: usize) -> Result<Attr, DecodeError> {
+    let mut name = String::new();
+    let mut value: Option<AttrValue> = None;
+    let mut ints: Vec<i64> = Vec::new();
+    let mut floats: Vec<f32> = Vec::new();
+    let mut strs: Vec<String> = Vec::new();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_LEN, "attr name")?;
+                name = r.string()?;
+            }
+            2 => {
+                r.expect(field, wire, WIRE_FIXED32, "attr f")?;
+                value = Some(AttrValue::Float(f32::from_bits(r.fixed32()?)));
+            }
+            3 => {
+                r.expect(field, wire, WIRE_VARINT, "attr i")?;
+                value = Some(AttrValue::Int(r.varint()? as i64));
+            }
+            4 => {
+                r.expect(field, wire, WIRE_LEN, "attr s")?;
+                value = Some(AttrValue::Str(r.string()?));
+            }
+            5 => {
+                r.expect(field, wire, WIRE_LEN, "attr t")?;
+                let mut sub = r.nested()?;
+                value = Some(AttrValue::Tensor(decode_tensor(&mut sub)?));
+            }
+            6 => {
+                r.expect(field, wire, WIRE_LEN, "attr g")?;
+                let mut sub = r.nested()?;
+                value = Some(AttrValue::Graph(decode_graph(&mut sub, depth + 1)?));
+            }
+            7 => r.repeated_float(wire, &mut floats)?,
+            8 => r.repeated_varint(wire, &mut ints)?,
+            9 => {
+                r.expect(field, wire, WIRE_LEN, "attr strings")?;
+                strs.push(r.string()?);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    let value = if let Some(v) = value {
+        v
+    } else if !ints.is_empty() {
+        AttrValue::Ints(ints)
+    } else if !floats.is_empty() {
+        AttrValue::Floats(floats)
+    } else if !strs.is_empty() {
+        AttrValue::Strs(strs)
+    } else {
+        // an empty repeated list is a legitimate attribute value
+        AttrValue::Ints(Vec::new())
+    };
+    Ok(Attr { name, value })
+}
+
+/// ONNX `TensorProto.DataType.FLOAT`.
+pub const DT_FLOAT: i64 = 1;
+/// ONNX `TensorProto.DataType.INT64`.
+pub const DT_INT64: i64 = 7;
+
+fn decode_tensor(r: &mut Reader) -> Result<Tensor, DecodeError> {
+    let mut t = Tensor::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => r.repeated_varint(wire, &mut t.dims)?,
+            2 => {
+                r.expect(field, wire, WIRE_VARINT, "data_type")?;
+                t.data_type = r.varint()? as i64;
+            }
+            4 => r.repeated_float(wire, &mut t.floats)?,
+            5 | 7 => r.repeated_varint(wire, &mut t.ints)?,
+            8 => {
+                r.expect(field, wire, WIRE_LEN, "tensor name")?;
+                t.name = r.string()?;
+            }
+            9 => {
+                r.expect(field, wire, WIRE_LEN, "raw_data")?;
+                let at = r.at();
+                let raw = r.bytes()?;
+                // bulk weight payloads are skipped; small payloads the
+                // importer can need (Resize scales, Reshape shapes) are
+                // decoded by declared element type
+                const SMALL: usize = 256;
+                if raw.len() <= SMALL {
+                    match t.data_type {
+                        DT_FLOAT if raw.len() % 4 == 0 => {
+                            for c in raw.chunks_exact(4) {
+                                t.floats.push(f32::from_bits(u32::from_le_bytes([
+                                    c[0], c[1], c[2], c[3],
+                                ])));
+                            }
+                        }
+                        DT_INT64 if raw.len() % 8 == 0 => {
+                            for c in raw.chunks_exact(8) {
+                                t.ints.push(i64::from_le_bytes([
+                                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                                ]));
+                            }
+                        }
+                        DT_FLOAT | DT_INT64 => {
+                            return Err(DecodeError {
+                                at,
+                                msg: format!(
+                                    "raw_data of {} bytes does not divide its element size",
+                                    raw.len()
+                                ),
+                            });
+                        }
+                        _ => {} // other dtypes: shape-only is all we need
+                    }
+                }
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(t)
+}
+
+fn decode_value_info(r: &mut Reader) -> Result<ValueInfo, DecodeError> {
+    let mut v = ValueInfo::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_LEN, "value name")?;
+                v.name = r.string()?;
+            }
+            2 => {
+                r.expect(field, wire, WIRE_LEN, "type")?;
+                let mut sub = r.nested()?;
+                decode_type(&mut sub, &mut v.dims)?;
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(v)
+}
+
+/// `TypeProto` -> `tensor_type` (1) -> `TypeProto.Tensor`:
+/// elem_type (1), shape (2) -> `TensorShapeProto` -> dim (1).
+fn decode_type(r: &mut Reader, dims: &mut Vec<Dim>) -> Result<(), DecodeError> {
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        if field == 1 && wire == WIRE_LEN {
+            let mut tt = r.nested()?;
+            while !tt.done() {
+                let (f2, w2) = tt.key()?;
+                if f2 == 2 && w2 == WIRE_LEN {
+                    let mut shape = tt.nested()?;
+                    while !shape.done() {
+                        let (f3, w3) = shape.key()?;
+                        if f3 == 1 && w3 == WIRE_LEN {
+                            let mut d = shape.nested()?;
+                            dims.push(decode_dim(&mut d)?);
+                        } else {
+                            shape.skip(w3)?;
+                        }
+                    }
+                } else {
+                    tt.skip(w2)?;
+                }
+            }
+        } else {
+            r.skip(wire)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_dim(r: &mut Reader) -> Result<Dim, DecodeError> {
+    let mut dim = Dim::Value(0); // absent dim_value decodes as 0 (proto3 default)
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => {
+                r.expect(field, wire, WIRE_VARINT, "dim_value")?;
+                dim = Dim::Value(r.varint()? as i64);
+            }
+            2 => {
+                r.expect(field, wire, WIRE_LEN, "dim_param")?;
+                dim = Dim::Param(r.string()?);
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// varint encoder for hand-built wire fixtures
+    fn v(mut n: u64) -> Vec<u8> {
+        let mut out = Vec::new();
+        loop {
+            let b = (n & 0x7F) as u8;
+            n >>= 7;
+            if n == 0 {
+                out.push(b);
+                return out;
+            }
+            out.push(b | 0x80);
+        }
+    }
+
+    fn key(field: u64, wire: u64) -> Vec<u8> {
+        v((field << 3) | wire)
+    }
+
+    fn ld(field: u64, payload: &[u8]) -> Vec<u8> {
+        let mut out = key(field, WIRE_LEN);
+        out.extend(v(payload.len() as u64));
+        out.extend_from_slice(payload);
+        out
+    }
+
+    fn vint(field: u64, value: u64) -> Vec<u8> {
+        let mut out = key(field, WIRE_VARINT);
+        out.extend(v(value));
+        out
+    }
+
+    #[test]
+    fn decodes_minimal_model() {
+        // ModelProto{ ir_version: 8, graph: Graph{ name: "g",
+        //   node: [Node{ op_type: "Relu", input: ["x"], output: ["y"] }] } }
+        let node = [ld(1, b"x"), ld(2, b"y"), ld(4, b"Relu")].concat();
+        let graph = [ld(2, b"g"), ld(1, &node)].concat();
+        let model = [vint(1, 8), ld(7, &graph)].concat();
+        let m = decode_model(&model).unwrap();
+        assert_eq!(m.ir_version, 8);
+        let g = m.graph.unwrap();
+        assert_eq!(g.name, "g");
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].op_type, "Relu");
+        assert_eq!(g.nodes[0].inputs, vec!["x"]);
+    }
+
+    #[test]
+    fn decodes_attrs_packed_and_unpacked() {
+        // kernel_shape ints packed [3,3]; stride ints unpacked 2,2
+        let packed = [ld(1, b"kernel_shape"), ld(8, &[v(3), v(3)].concat())].concat();
+        let unpacked =
+            [ld(1, b"strides"), vint(8, 2), vint(8, 2)].concat();
+        let node = [ld(4, b"MaxPool"), ld(5, &packed), ld(5, &unpacked)].concat();
+        let graph = ld(1, &node);
+        let model = ld(7, &graph);
+        let m = decode_model(&model).unwrap();
+        let n = &m.graph.unwrap().nodes[0];
+        match n.attr("kernel_shape") {
+            Some(AttrValue::Ints(ks)) => assert_eq!(ks, &vec![3, 3]),
+            other => panic!("bad kernel_shape: {other:?}"),
+        }
+        match n.attr("strides") {
+            Some(AttrValue::Ints(st)) => assert_eq!(st, &vec![2, 2]),
+            other => panic!("bad strides: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_varint_carries_offset() {
+        // field 1 varint whose continuation bit never clears
+        let bytes = [0x08, 0xFF];
+        let e = decode_model(&bytes).unwrap_err();
+        assert_eq!(e.at, 1, "{e}");
+        assert!(e.msg.contains("truncated varint"), "{e}");
+    }
+
+    #[test]
+    fn length_past_end_carries_offset() {
+        // graph field claims 100 payload bytes, none present
+        let mut bytes = key(7, WIRE_LEN);
+        bytes.extend(v(100));
+        let e = decode_model(&bytes).unwrap_err();
+        assert!(e.msg.contains("runs past end"), "{e}");
+        assert_eq!(e.at, 1, "{e}");
+    }
+
+    #[test]
+    fn wrong_wire_type_is_an_error() {
+        // ModelProto.graph (field 7) as a varint instead of length-delim
+        let bytes = vint(7, 1);
+        let e = decode_model(&bytes).unwrap_err();
+        assert!(e.msg.contains("wire type"), "{e}");
+    }
+
+    #[test]
+    fn group_wire_type_rejected() {
+        let bytes = key(9, WIRE_SGROUP);
+        let e = decode_model(&bytes).unwrap_err();
+        assert!(e.msg.contains("group"), "{e}");
+    }
+
+    #[test]
+    fn depth_bomb_errors_without_overflow() {
+        // attr g nesting: graph{node{attr{g: graph{node{attr{g: ...}}}}}}
+        let mut graph: Vec<u8> = ld(2, b"leaf");
+        for _ in 0..64 {
+            let attr = [ld(1, b"body"), ld(6, &graph)].concat();
+            let node = [ld(4, b"If"), ld(5, &attr)].concat();
+            graph = ld(1, &node);
+        }
+        let model = ld(7, &graph);
+        let e = decode_model(&model).unwrap_err();
+        assert!(e.msg.contains("nesting exceeds depth"), "{e}");
+    }
+
+    #[test]
+    fn unknown_fields_are_skipped() {
+        // doc_string (field 6 of ModelProto) + an unknown high field
+        let graph = ld(2, b"g");
+        let model =
+            [ld(6, b"some docs"), vint(99, 7), ld(7, &graph)].concat();
+        let m = decode_model(&model).unwrap();
+        assert_eq!(m.graph.unwrap().name, "g");
+    }
+
+    #[test]
+    fn tensor_dims_and_small_raw_data() {
+        // initializer: dims [1,1,2,2], FLOAT raw_data = scales [1,1,2,2]
+        let floats: Vec<u8> = [1.0f32, 1.0, 2.0, 2.0]
+            .iter()
+            .flat_map(|f| f.to_le_bits_vec())
+            .collect();
+        let tensor = [
+            ld(8, b"scales"),
+            vint(2, DT_FLOAT as u64),
+            ld(1, &[v(1), v(1), v(2), v(2)].concat()),
+            ld(9, &floats),
+        ]
+        .concat();
+        let graph = ld(5, &tensor);
+        let model = ld(7, &graph);
+        let m = decode_model(&model).unwrap();
+        let t = &m.graph.unwrap().initializers[0];
+        assert_eq!(t.dims, vec![1, 1, 2, 2]);
+        assert_eq!(t.floats, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    trait F32Bits {
+        fn to_le_bits_vec(&self) -> Vec<u8>;
+    }
+    impl F32Bits for f32 {
+        fn to_le_bits_vec(&self) -> Vec<u8> {
+            self.to_le_bytes().to_vec()
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_valid_empty_model() {
+        let m = decode_model(&[]).unwrap();
+        assert!(m.graph.is_none());
+    }
+
+    #[test]
+    fn value_info_dims_decode() {
+        // input "x" with dims [1, "N", 28]
+        let dim1 = vint(1, 1);
+        let dim2 = ld(2, b"N");
+        let dim3 = vint(1, 28);
+        let shape = [ld(1, &dim1), ld(1, &dim2), ld(1, &dim3)].concat();
+        let tensor_type = ld(2, &shape);
+        let typ = ld(1, &tensor_type);
+        let vi = [ld(1, b"x"), ld(2, &typ)].concat();
+        let graph = ld(11, &vi);
+        let model = ld(7, &graph);
+        let m = decode_model(&model).unwrap();
+        let inp = &m.graph.unwrap().inputs[0];
+        assert_eq!(inp.name, "x");
+        assert_eq!(
+            inp.dims,
+            vec![Dim::Value(1), Dim::Param("N".into()), Dim::Value(28)]
+        );
+    }
+}

@@ -37,6 +37,18 @@ pub fn suggest<'a>(unknown: &str, candidates: &[&'a str]) -> Option<&'a str> {
         .map(|(_, c)| c)
 }
 
+/// The canonical "did you mean" suffix built on [`suggest`]: returns
+/// ` (did you mean 'X'?)` when a candidate is within edit distance 2,
+/// or an empty string otherwise. Every user-facing unknown-identifier
+/// error (graph parser, zoo lookup, fault kinds, report ids, ONNX ops)
+/// appends this so the phrasing stays uniform and greppable.
+pub fn did_you_mean(unknown: &str, candidates: &[&str]) -> String {
+    match suggest(unknown, candidates) {
+        Some(s) => format!(" (did you mean '{s}'?)"),
+        None => String::new(),
+    }
+}
+
 /// Format a f64 with engineering-friendly precision (tables/reports).
 pub fn fmt_sig(x: f64, sig: usize) -> String {
     if x == 0.0 || !x.is_finite() {

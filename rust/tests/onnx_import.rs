@@ -1,0 +1,300 @@
+//! ONNX front-end integration tests (ISSUE 10 acceptance).
+//!
+//! Three layers of guarantees:
+//!
+//! 1. **Golden round-trip** — every zoo model exported to ONNX wire
+//!    bytes and re-imported produces a `Network` *and* a scheduled
+//!    `StagePlan` bit-identical to its hand-built twin (assert_eq on
+//!    the serialized plan JSON). This is the contract that lets
+//!    imported models flow through design/sim/rtl/dse/morph unchanged.
+//! 2. **Malformed-protobuf corpus** — truncated varints, wrong wire
+//!    types, deprecated groups, recursive depth bombs, zero-dim
+//!    tensors: every one yields an offset-carrying error, never a
+//!    panic.
+//! 3. **Totality properties** — decode survives arbitrary random bytes
+//!    and random single-byte corruptions of a valid export.
+
+use forgemorph::graph::{passes, zoo};
+use forgemorph::onnx::{self, ImportError};
+use forgemorph::util::prop;
+use forgemorph::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// wire-building helpers (hand-rolled, mirroring the decoder's test kit)
+// ---------------------------------------------------------------------------
+
+fn v(mut x: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            return out;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn key(field: u32, wire: u32) -> Vec<u8> {
+    v(u64::from((field << 3) | wire))
+}
+
+fn ld(field: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = key(field, 2);
+    out.extend(v(payload.len() as u64));
+    out.extend_from_slice(payload);
+    out
+}
+
+fn vint(field: u32, x: u64) -> Vec<u8> {
+    let mut out = key(field, 0);
+    out.extend(v(x));
+    out
+}
+
+/// ValueInfoProto: name + NCHW float tensor type.
+fn value_info(name: &str, dims: &[u64]) -> Vec<u8> {
+    let mut shape = Vec::new();
+    for &d in dims {
+        shape.extend(ld(1, &vint(1, d)));
+    }
+    let mut tensor_type = vint(1, 1); // elem_type FLOAT
+    tensor_type.extend(ld(2, &shape));
+    let ty = ld(1, &tensor_type);
+    let mut vi = ld(1, name.as_bytes());
+    vi.extend(ld(2, &ty));
+    vi
+}
+
+/// Shape-only TensorProto initializer.
+fn tensor(name: &str, dims: &[u64]) -> Vec<u8> {
+    let mut t = Vec::new();
+    for &d in dims {
+        t.extend(vint(1, d));
+    }
+    t.extend(vint(2, 1)); // data_type FLOAT
+    t.extend(ld(8, name.as_bytes()));
+    t
+}
+
+/// NodeProto with no attributes.
+fn node(op: &str, name: &str, inputs: &[&str], outputs: &[&str]) -> Vec<u8> {
+    let mut n = Vec::new();
+    for i in inputs {
+        n.extend(ld(1, i.as_bytes()));
+    }
+    for o in outputs {
+        n.extend(ld(2, o.as_bytes()));
+    }
+    n.extend(ld(3, name.as_bytes()));
+    n.extend(ld(4, op.as_bytes()));
+    n
+}
+
+/// ModelProto wrapping a GraphProto payload.
+fn model(graph: &[u8]) -> Vec<u8> {
+    let mut m = vint(1, 8); // ir_version
+    m.extend(ld(7, graph));
+    m
+}
+
+fn decode_err(bytes: &[u8]) -> onnx::DecodeError {
+    match onnx::import_bytes(bytes).unwrap_err() {
+        ImportError::Decode(e) => e,
+        ImportError::Lower(m) => panic!("expected decode error, got lowering error: {m}"),
+    }
+}
+
+fn lower_err(bytes: &[u8]) -> String {
+    match onnx::import_bytes(bytes).unwrap_err() {
+        ImportError::Lower(m) => m,
+        ImportError::Decode(e) => panic!("expected lowering error, got decode error: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. golden round-trip: exported zoo model == hand-built twin
+// ---------------------------------------------------------------------------
+
+/// Export -> import -> assert the Network AND the scheduled StagePlan
+/// are bit-identical to the hand-built twin.
+fn assert_round_trip(name: &str) {
+    let twin = zoo::by_name(name).expect("zoo model");
+    let bytes = onnx::encode(&twin).expect("zoo model encodes");
+    let imported = onnx::import_bytes(&bytes)
+        .unwrap_or_else(|e| panic!("importing exported '{name}': {e}"));
+
+    assert_eq!(imported.name, twin.name, "{name}: model name");
+    assert_eq!(imported.layers, twin.layers, "{name}: layer list");
+    assert_eq!(imported.connections, twin.connections, "{name}: connection table");
+
+    let plan_twin = passes::schedule(&twin).expect("twin schedules");
+    let plan_imported = passes::schedule(&imported).expect("imported model schedules");
+    assert_eq!(
+        plan_imported.to_json().to_string(),
+        plan_twin.to_json().to_string(),
+        "{name}: StagePlan JSON must be bit-identical"
+    );
+}
+
+#[test]
+fn resnet50_round_trips_bit_identical() {
+    assert_round_trip("resnet50");
+}
+
+#[test]
+fn unet_tiny_round_trips_bit_identical() {
+    assert_round_trip("unet_tiny");
+}
+
+#[test]
+fn yolov5l_round_trips_bit_identical() {
+    assert_round_trip("yolov5l");
+}
+
+#[test]
+fn every_zoo_model_round_trips_bit_identical() {
+    for name in zoo::NAMES {
+        assert_round_trip(name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. malformed-protobuf corpus: offset-carrying errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_varint_reports_offset() {
+    // field 1 (ir_version) tag, then a lone continuation byte
+    let e = decode_err(&[0x08, 0xFF]);
+    assert_eq!(e.at, 1, "{e}");
+    assert!(e.msg.contains("truncated varint"), "{e}");
+    assert!(e.to_string().contains("at byte 1"), "{e}");
+}
+
+#[test]
+fn length_past_end_reports_offset() {
+    // graph field claims 100 payload bytes, buffer has 0
+    let mut bytes = key(7, 2);
+    bytes.extend(v(100));
+    let e = decode_err(&bytes);
+    assert_eq!(e.at, 1, "{e}");
+    assert!(e.msg.contains("runs past end"), "{e}");
+}
+
+#[test]
+fn wrong_wire_type_reports_field() {
+    // graph (field 7) must be length-delimited, sent as varint
+    let e = decode_err(&vint(7, 5));
+    assert!(e.msg.contains("wire type"), "{e}");
+    assert!(e.msg.contains("field 7"), "{e}");
+}
+
+#[test]
+fn deprecated_group_wire_type_rejected() {
+    // unknown field 9 with start-group wire type 3
+    let e = decode_err(&key(9, 3));
+    assert!(e.msg.contains("group"), "{e}");
+}
+
+#[test]
+fn recursive_depth_bomb_errors_instead_of_overflowing() {
+    // If-style nodes whose attribute `g` re-enters GraphProto, nested
+    // far past MAX_GRAPH_DEPTH
+    let mut g = Vec::new();
+    for _ in 0..(onnx::proto::MAX_GRAPH_DEPTH + 8) {
+        let mut attr = ld(1, b"body");
+        attr.extend(ld(6, &g)); // AttributeProto.g
+        let mut n = ld(4, b"If");
+        n.extend(ld(5, &attr));
+        g = ld(1, &n);
+    }
+    let e = decode_err(&model(&g));
+    assert!(e.msg.contains("nesting exceeds depth"), "{e}");
+}
+
+#[test]
+fn zero_dim_input_rejected() {
+    let mut g = ld(11, &value_info("t0", &[1, 0, 8, 8]));
+    g.extend(ld(1, &node("Relu", "act", &["t0"], &["t1"])));
+    g.extend(ld(12, &value_info("t1", &[1, 0, 8, 8])));
+    let m = lower_err(&model(&g));
+    assert!(m.contains("zero-sized dimension"), "{m}");
+}
+
+#[test]
+fn zero_dim_weight_tensor_rejected() {
+    let mut g = ld(11, &value_info("t0", &[1, 3, 8, 8]));
+    g.extend(ld(5, &tensor("w0", &[8, 3, 0, 0])));
+    g.extend(ld(1, &node("Conv", "stem", &["t0", "w0"], &["t1"])));
+    g.extend(ld(12, &value_info("t1", &[1, 8, 8, 8])));
+    let m = lower_err(&model(&g));
+    assert!(m.contains("positive"), "{m}");
+    assert!(m.contains("w0"), "{m}");
+}
+
+#[test]
+fn unsupported_op_gets_did_you_mean_with_node_and_inputs() {
+    let mut g = ld(11, &value_info("t0", &[1, 3, 8, 8]));
+    g.extend(ld(5, &tensor("w0", &[8, 3, 3, 3])));
+    g.extend(ld(1, &node("Convv", "stem", &["t0", "w0"], &["t1"])));
+    g.extend(ld(12, &value_info("t1", &[1, 8, 8, 8])));
+    let m = lower_err(&model(&g));
+    assert!(m.contains("unsupported op 'Convv'"), "{m}");
+    assert!(m.contains("(did you mean 'Conv'?)"), "{m}");
+    // the error names the node and its inputs
+    assert!(m.contains("'stem'"), "{m}");
+    assert!(m.contains("t0, w0"), "{m}");
+}
+
+#[test]
+fn empty_file_is_a_lowering_error_not_a_panic() {
+    // zero bytes decode to an empty ModelProto (all fields default);
+    // lowering then reports the missing graph
+    let m = lower_err(&[]);
+    assert!(m.contains("no graph"), "{m}");
+}
+
+// ---------------------------------------------------------------------------
+// 3. totality properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_decode_is_total_on_random_bytes() {
+    prop::check(
+        "onnx-decode-total",
+        400,
+        0xC0FFEE,
+        |rng: &mut Rng| {
+            let len = rng.below(256);
+            (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            // must return Ok or Err — any panic fails the harness
+            let _ = onnx::import_bytes(bytes);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_import_survives_single_byte_corruption() {
+    let clean = onnx::encode(&zoo::mnist()).expect("encodes");
+    prop::check(
+        "onnx-corrupt-byte",
+        300,
+        7,
+        |rng: &mut Rng| (rng.below(clean.len()), (rng.next_u64() & 0xff) as u8),
+        |&(pos, val)| {
+            let mut bytes = clean.clone();
+            bytes[pos] = val;
+            // decoding/lowering may fail (that's the point) but must
+            // never panic; a surviving import must still validate
+            if let Ok(net) = onnx::import_bytes(&bytes) {
+                net.validate().map_err(|e| format!("corrupt import passed but invalid: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
